@@ -1,0 +1,91 @@
+//! Debug session (Amber, Ch. 2): pause a running workflow, investigate
+//! worker state, modify an operator's logic at runtime, set local and
+//! global conditional breakpoints — the paper's headline interactivity
+//! features, driven programmatically.
+//!
+//! ```text
+//! cargo run --release --example debug_session
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
+use texera_amber::operators::{CountByKeySink, KeywordSearch, SinkHandle};
+use texera_amber::tuple::Tuple;
+use texera_amber::workloads::tweets::{self, TweetSource};
+use texera_amber::workloads::TupleSource;
+
+fn main() {
+    let total = 2_000_000;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("tweet_scan", 2, move |idx, parts| {
+        Box::new(TweetSource::new(total, parts, idx, 7)) as Box<dyn TupleSource>
+    }));
+    // The Ch. 1 "blunt" scenario: overly broad keyword.
+    let keyword = w.add(OpSpec::unary(
+        "keyword_search",
+        3,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(KeywordSearch::new(tweets::F_TEXT, &["blunt"])),
+    ));
+    let handle = SinkHandle::new(tweets::NUM_STATES);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CountByKeySink::new(h.clone(), tweets::F_LOCATION))
+    }));
+    w.connect(scan, keyword, 0);
+    w.connect(keyword, sink, 0);
+
+    let exec = Execution::start_scheduled(w, Config::default());
+
+    // Conditional breakpoint BEFORE execution (§2.5): pause once the
+    // keyword operator has produced 5,000 tuples.
+    let bp = exec.set_count_breakpoint(keyword, 5_000);
+    println!("registered global COUNT breakpoint #{bp} (5,000 tuples)");
+    exec.start_sources(vec![scan]);
+
+    let hit = exec.await_breakpoint();
+    println!(
+        "breakpoint #{} hit after {:.1?} — workflow paused",
+        hit.id, hit.elapsed
+    );
+
+    // Investigate operator state while paused (§2.4.4).
+    println!("\nworker stats at the breakpoint:");
+    for (id, st) in exec.stats() {
+        println!(
+            "  {id}: processed={:>8} produced={:>7} queued={:>6}",
+            st.processed, st.produced, st.queued
+        );
+    }
+
+    // Modify the operator at runtime (§2.1): narrow the keywords so
+    // Emily Blunt tweets stop matching.
+    println!("\nnarrowing keywords: blunt → 'blunt talk'");
+    exec.modify_operator(keyword, "keywords", "blunt talk");
+
+    // Set a local breakpoint on suspicious tuples (§2.5.2): negative
+    // follower counts would indicate parser bugs.
+    exec.set_local_breakpoint(
+        keyword,
+        Some(Arc::new(|t: &Tuple| {
+            t.get(tweets::F_FOLLOWERS).as_int().map(|f| f < 0).unwrap_or(false)
+        })),
+    );
+
+    // Resume and measure pause latency once more mid-stream.
+    exec.resume();
+    std::thread::sleep(Duration::from_millis(50));
+    let latency = exec.pause();
+    println!("\nmid-run pause latency: {latency:.2?} (paper: sub-second)");
+    exec.resume();
+
+    let summary = exec.join();
+    println!(
+        "\ncompleted in {:.2?}; keyword operator produced {} tuples total",
+        summary.elapsed,
+        summary.produced(keyword)
+    );
+}

@@ -1,0 +1,74 @@
+//! Quickstart: build a small workflow, run it, read the results.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Counts tweets per month from a synthetic 200k-tweet corpus:
+//! scan → keyword filter → group-by(count) → sink.
+
+use texera_amber::config::Config;
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
+use texera_amber::operators::{
+    AggKind, CollectSink, GroupByFinal, GroupByPartial, KeywordSearch, SinkHandle,
+};
+use texera_amber::workloads::tweets::{self, TweetSource};
+use texera_amber::workloads::TupleSource;
+
+fn main() {
+    let total = 200_000;
+
+    // 1. Describe the workflow DAG.
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("tweet_scan", 2, move |idx, parts| {
+        Box::new(TweetSource::new(total, parts, idx, 42)) as Box<dyn TupleSource>
+    }));
+    let keyword = w.add(OpSpec::unary(
+        "keyword_search",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(KeywordSearch::new(tweets::F_TEXT, &["covid"])),
+    ));
+    let partial = w.add(OpSpec::unary(
+        "count_partial",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(GroupByPartial::new(tweets::F_MONTH, 0, AggKind::Count)),
+    ));
+    let fin = w.add(
+        OpSpec::unary("count_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Count))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, keyword, 0);
+    w.connect(keyword, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+
+    // 2. Run it.
+    let exec = Execution::start(w, Config::default());
+    let summary = exec.join();
+
+    // 3. Read the results.
+    println!("tweets mentioning 'covid' per month:");
+    let mut rows = handle.tuples();
+    rows.sort_by_key(|t| t.get(0).as_int().unwrap());
+    for row in rows {
+        println!(
+            "  month {:>2}: {:>6}",
+            row.get(0).as_int().unwrap(),
+            row.get(1).as_float().unwrap() as u64
+        );
+    }
+    println!(
+        "\n{total} tweets scanned in {:.2?} ({} matched the keyword)",
+        summary.elapsed,
+        summary.produced(keyword),
+    );
+}

@@ -1,0 +1,107 @@
+//! Skew mitigation (Reshape, Ch. 3): the W1 tweet⋈slang workflow with
+//! a bottleneck join (as in §3.3.1), with and without Reshape.
+//! Prints the observed CA:AZ result ratio over time (Fig. 3.16's
+//! monitor) and the final load-balance between the California worker
+//! and its helper (Fig. 3.20's metric).
+//!
+//! ```text
+//! cargo run --release --example skew_mitigation [--tweets N] [--workers K]
+//! ```
+
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::Execution;
+use texera_amber::flows::{tweet_join_costed, worker_of_key};
+use texera_amber::reshape::{Approach, ReshapePlugin};
+use texera_amber::util::cli::Args;
+use texera_amber::workloads::tweets;
+
+fn main() {
+    let args = Args::from_env();
+    let total: usize = args.get("tweets", 120_000);
+    let workers: usize = args.get("workers", 8);
+    // Make the join the bottleneck (~8µs per probe tuple).
+    let probe_cost: u64 = args.get("cost-ns", 8_000);
+    let cfg = Config {
+        batch_size: 64,
+        data_queue_cap: 16,
+        ..Config::default()
+    };
+    let ca_worker = worker_of_key(tweets::CA as i64, workers);
+    println!("W1: {total} tweets ⋈ slang on location, {workers} join workers, {probe_cost}ns/probe");
+    println!("California is worker {ca_worker}'s key; actual CA:AZ = {}\n", tweets::CA_AZ_RATIO);
+
+    for mitigate in [false, true] {
+        let f = tweet_join_costed(total, workers, 0xC0FFEE, probe_cost);
+        let label = if mitigate { "reshape " } else { "baseline" };
+        let (exec, report) = if mitigate {
+            let plugin = ReshapePlugin::new(f.focus, Approach::SplitByRecords, true);
+            let rep = plugin.report();
+            (
+                Execution::start_with_plugin(f.workflow, cfg.clone(), Box::new(plugin)),
+                Some(rep),
+            )
+        } else {
+            (Execution::start(f.workflow, cfg.clone()), None)
+        };
+        // Sample the observed CA:AZ ratio during the run.
+        print!("{label} | CA:AZ over time:");
+        let mut samples = 0;
+        while samples < 8 {
+            std::thread::sleep(Duration::from_millis(150));
+            let r = f.sink.ratio(tweets::CA, tweets::AZ);
+            if r.is_finite() {
+                print!(" {r:.2}");
+                samples += 1;
+            }
+            if f.sink.total() as usize >= total {
+                break;
+            }
+        }
+        let summary = exec.join();
+        let get = |idx: usize| {
+            summary
+                .worker_stats
+                .iter()
+                .find(|(id, _)| id.op == f.focus && id.idx == idx)
+                .map(|(_, s)| s.processed as f64)
+                .unwrap_or(0.0)
+        };
+        // Helper = the worker Reshape chose, or the least-loaded one.
+        let helper = report
+            .as_ref()
+            .and_then(|r| {
+                let rep = r.lock().unwrap();
+                rep.mitigations
+                    .iter()
+                    .find(|(_, s, _)| *s == ca_worker)
+                    .map(|(_, _, h)| h[0])
+            })
+            .unwrap_or_else(|| {
+                (0..workers)
+                    .filter(|&i| i != ca_worker)
+                    .min_by(|&a, &b| get(a).partial_cmp(&get(b)).unwrap())
+                    .unwrap()
+            });
+        let (a, b) = (get(ca_worker), get(helper));
+        println!(
+            "\n{label} | elapsed {:<8.2?} final CA:AZ {:.2}  CA-worker/helper load-balance {:.2}",
+            summary.elapsed,
+            f.sink.ratio(tweets::CA, tweets::AZ),
+            a.min(b) / a.max(b)
+        );
+        if let Some(r) = report {
+            let rep = r.lock().unwrap();
+            println!(
+                "{label} | mitigations: {:?}, phase-2 iterations: {}",
+                rep.mitigations
+                    .iter()
+                    .map(|(t, s, h)| format!("t={t:.2}s w{s}→{h:?}"))
+                    .collect::<Vec<_>>(),
+                rep.iterations
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,71 @@
+"""AOT export: lower the L2 model (with its L1 Pallas kernel) to HLO
+*text* artifacts the rust runtime loads via PJRT.
+
+HLO **text** — not ``.serialize()`` — is the interchange format: jax
+≥ 0.5 emits HloModuleProtos with 64-bit instruction ids, which the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    GATHER_VARIANTS,
+    VARIANTS,
+    example_tokens,
+    model_fn,
+    model_fn_gather,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weight matrices must be fully
+    # serialized — the default elides them as `constant({...})`, which
+    # the rust-side text parser cannot reconstruct.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(name: str, out_dir: str) -> str:
+    if name in VARIANTS:
+        classes, seed = VARIANTS[name]
+        fn = model_fn(classes, seed)
+    else:
+        classes, seed = GATHER_VARIANTS[name]
+        fn = model_fn_gather(classes, seed)
+    lowered = jax.jit(fn).lower(example_tokens())
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="export a single variant by name"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.only] if args.only else list(VARIANTS) + list(GATHER_VARIANTS)
+    for name in names:
+        path = export(name, args.out_dir)
+        size = os.path.getsize(path)
+        print(f"wrote {path} ({size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""L1 — the Pallas kernel: fused embedding-sum + 2-layer MLP classifier.
+
+This is the compute hot-spot of the workflows' ML operators (the
+`SentimentAnalysis` / topic-`ML` operators of the paper's W3 and Ch. 4
+workflows). The fusion is the point: the reference implementation is a
+chain of gather → reduce → matmul → relu → matmul, each a separate HBM
+round-trip on real hardware; the kernel keeps the pooled activation and
+both weight matrices resident in VMEM and runs the whole pipeline per
+batch-block.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid over the batch dimension; each program handles a (BLOCK_B, T)
+    tile of token ids;
+  * the embedding table is processed via one-hot matmul (MXU-friendly;
+    gather is a poor fit for the systolic array);
+  * weights (V·D + D·H + H·C floats ≈ 2.2 MB at default sizes) stay in
+    VMEM across grid steps (constant index_map);
+  * matmul shapes are multiples of 8/128 where it matters.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which XLA compiles to
+fast native code (this is an AOT path, not an eval-loop).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Model dimensions — must match rust/src/operators/ml_infer.rs.
+BATCH = 32
+TOKENS = 16
+VOCAB = 4096
+EMBED = 128
+HIDDEN = 256
+
+# Batch tile per pallas program.
+BLOCK_B = 8
+
+
+def classifier_kernel(tok_ref, emb_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """One grid step: classify a (BLOCK_B, TOKENS) tile of token ids.
+
+    tok_ref: int32[BLOCK_B, TOKENS]   token ids (0 = padding)
+    emb_ref: f32[VOCAB, EMBED]        embedding table (VMEM-resident)
+    w1_ref:  f32[EMBED, HIDDEN]
+    b1_ref:  f32[1, HIDDEN]
+    w2_ref:  f32[HIDDEN, C]
+    b2_ref:  f32[1, C]
+    out_ref: f32[BLOCK_B, C]          logits
+    """
+    tok = tok_ref[...]                                  # (B, T) int32
+    # One-hot over the vocab, masking padding (id 0 contributes zero).
+    # MXU path: (B*T, V) @ (V, D) instead of a gather.
+    mask = (tok > 0).astype(jnp.float32)                # (B, T)
+    onehot = jax.nn.one_hot(tok, VOCAB, dtype=jnp.float32)  # (B, T, V)
+    onehot = onehot * mask[..., None]
+    flat = onehot.reshape(-1, VOCAB)                    # (B*T, V)
+    emb = flat @ emb_ref[...]                           # (B*T, D)
+    emb = emb.reshape(tok.shape[0], tok.shape[1], EMBED)
+    # Mean-pool over real tokens.
+    denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    pooled = emb.sum(axis=1) / denom                    # (B, D)
+    # 2-layer MLP, fused in-register.
+    h = jnp.maximum(pooled @ w1_ref[...] + b1_ref[...], 0.0)
+    out_ref[...] = h @ w2_ref[...] + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("classes",))
+def classifier_fwd(tokens, emb, w1, b1, w2, b2, *, classes):
+    """Full-batch forward pass via the Pallas kernel (L2 calls this)."""
+    n_blocks = tokens.shape[0] // BLOCK_B
+    return pl.pallas_call(
+        classifier_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, TOKENS), lambda i: (i, 0)),
+            # Weights: constant index_map — stay resident across steps.
+            pl.BlockSpec((VOCAB, EMBED), lambda i: (0, 0)),
+            pl.BlockSpec((EMBED, HIDDEN), lambda i: (0, 0)),
+            pl.BlockSpec((1, HIDDEN), lambda i: (0, 0)),
+            pl.BlockSpec((HIDDEN, classes), lambda i: (0, 0)),
+            pl.BlockSpec((1, classes), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, classes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tokens.shape[0], classes), jnp.float32),
+        interpret=True,
+    )(tokens, emb, w1, b1, w2, b2)

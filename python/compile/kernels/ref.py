@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the classifier kernel.
+
+This is the unfused reference chain (gather → mask → mean-pool → MLP).
+pytest asserts `classifier_fwd(...) ≈ ref_fwd(...)` over random inputs
+and hypothesis-driven shape/value sweeps — the core L1 correctness
+signal.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_fwd(tokens, emb, w1, b1, w2, b2):
+    """Unfused reference: same math as kernels.classifier, via gather."""
+    tok = tokens.astype(jnp.int32)
+    mask = (tok > 0).astype(jnp.float32)                   # (B, T)
+    gathered = emb[tok]                                    # (B, T, D) gather
+    gathered = gathered * mask[..., None]
+    denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    pooled = gathered.sum(axis=1) / denom                  # (B, D)
+    h = jnp.maximum(pooled @ w1 + b1, 0.0)
+    return h @ w2 + b2

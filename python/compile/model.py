@@ -1,0 +1,90 @@
+"""L2 — the JAX model: deterministic classifier weights + forward pass.
+
+Two model variants are exported:
+  * ``classifier`` — 8-class topic classifier (the Ch. 4 `ML` operators
+    deciding e.g. "is this tweet about climate change");
+  * ``sentiment``  — 2-class sentiment head (the W3 SentimentAnalysis
+    stand-in, §2.7.5).
+
+Weights are generated from a fixed seed — the reproduction needs a
+*deterministic, realistic* compute graph, not trained accuracy. The
+forward pass calls the L1 Pallas kernel so that a single lowering
+captures the entire pipeline in one HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.classifier import (
+    BATCH,
+    EMBED,
+    HIDDEN,
+    TOKENS,
+    VOCAB,
+    classifier_fwd,
+)
+
+CLASSES_TOPIC = 8
+CLASSES_SENTIMENT = 2
+
+
+def make_weights(classes: int, seed: int):
+    """Deterministic Xavier-ish weights for a model variant."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4, k5 = jax.random.split(k, 5)
+    emb = jax.random.normal(k1, (VOCAB, EMBED), jnp.float32) * (EMBED**-0.5)
+    w1 = jax.random.normal(k2, (EMBED, HIDDEN), jnp.float32) * (EMBED**-0.5)
+    b1 = jax.random.normal(k3, (1, HIDDEN), jnp.float32) * 0.01
+    w2 = jax.random.normal(k4, (HIDDEN, classes), jnp.float32) * (HIDDEN**-0.5)
+    b2 = jax.random.normal(k5, (1, classes), jnp.float32) * 0.01
+    return emb, w1, b1, w2, b2
+
+
+def model_fn(classes: int, seed: int):
+    """Return fn(tokens) -> (logits,) with weights baked in as constants.
+
+    Baking weights keeps the rust side to a single runtime input
+    (tokens) and lets XLA constant-fold/pre-layout the weights at AOT
+    compile time.
+    """
+    weights = make_weights(classes, seed)
+
+    def fn(tokens):
+        logits = classifier_fwd(tokens, *weights, classes=classes)
+        return (logits,)
+
+    return fn
+
+
+def model_fn_gather(classes: int, seed: int):
+    """CPU-tuned forward pass: same weights and math as ``model_fn``,
+    but embedding lookup via gather instead of the kernel's one-hot
+    matmul. The one-hot form targets the TPU MXU; on the CPU PJRT
+    backend a gather avoids the (B·T)×V dense product (§Perf L2
+    iteration — ~20× serving speedup with identical outputs)."""
+    from .kernels.ref import ref_fwd
+
+    weights = make_weights(classes, seed)
+
+    def fn(tokens):
+        return (ref_fwd(tokens, *weights),)
+
+    return fn
+
+
+#: name → (classes, weight seed); aot.py exports each as <name>.hlo.txt
+VARIANTS = {
+    "classifier": (CLASSES_TOPIC, 11),
+    "sentiment": (CLASSES_SENTIMENT, 23),
+}
+
+#: CPU-tuned exports (same weights as their base variant).
+GATHER_VARIANTS = {
+    "classifier_cpu": (CLASSES_TOPIC, 11),
+    "sentiment_cpu": (CLASSES_SENTIMENT, 23),
+}
+
+
+def example_tokens():
+    """The example input shape the AOT lowering is specialized to."""
+    return jax.ShapeDtypeStruct((BATCH, TOKENS), jnp.int32)

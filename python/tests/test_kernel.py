@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+Fixed-shape checks plus hypothesis sweeps over token values, padding
+patterns, and weight scales. The kernel's batch dimension is gridded in
+BLOCK_B tiles, so batch sizes are multiples of BLOCK_B.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.classifier import (
+    BATCH,
+    BLOCK_B,
+    TOKENS,
+    VOCAB,
+    classifier_fwd,
+)
+from compile.kernels.ref import ref_fwd
+from compile.model import CLASSES_TOPIC, make_weights
+
+ATOL = 1e-4
+RTOL = 1e-4
+
+
+def rand_tokens(rng, batch, pad_prob=0.3):
+    tok = rng.integers(1, VOCAB, size=(batch, TOKENS), dtype=np.int32)
+    mask = rng.random((batch, TOKENS)) < pad_prob
+    tok[mask] = 0
+    # Keep at least one real token per row so pooling is nontrivial.
+    tok[:, 0] = np.maximum(tok[:, 0], 1)
+    return jnp.asarray(tok)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return make_weights(CLASSES_TOPIC, seed=11)
+
+
+def test_kernel_matches_ref_fixed(weights):
+    rng = np.random.default_rng(0)
+    tok = rand_tokens(rng, BATCH)
+    got = classifier_fwd(tok, *weights, classes=CLASSES_TOPIC)
+    want = ref_fwd(tok, *weights)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_kernel_all_padding_rows_allowed(weights):
+    # Rows of pure padding (id 0 everywhere except forced [:,0]=1 off):
+    tok = jnp.zeros((BATCH, TOKENS), jnp.int32)
+    got = classifier_fwd(tok, *weights, classes=CLASSES_TOPIC)
+    want = ref_fwd(tok, *weights)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_kernel_single_token(weights):
+    tok = np.zeros((BATCH, TOKENS), np.int32)
+    tok[:, 0] = np.arange(1, BATCH + 1)
+    got = classifier_fwd(jnp.asarray(tok), *weights, classes=CLASSES_TOPIC)
+    want = ref_fwd(jnp.asarray(tok), *weights)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_kernel_deterministic(weights):
+    rng = np.random.default_rng(1)
+    tok = rand_tokens(rng, BATCH)
+    a = classifier_fwd(tok, *weights, classes=CLASSES_TOPIC)
+    b = classifier_fwd(tok, *weights, classes=CLASSES_TOPIC)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_row_independence(weights):
+    # Blocked execution must not leak across rows: permuting the batch
+    # permutes the logits identically.
+    rng = np.random.default_rng(2)
+    tok = np.asarray(rand_tokens(rng, BATCH))
+    perm = rng.permutation(BATCH)
+    out = np.asarray(classifier_fwd(jnp.asarray(tok), *weights, classes=CLASSES_TOPIC))
+    out_p = np.asarray(
+        classifier_fwd(jnp.asarray(tok[perm]), *weights, classes=CLASSES_TOPIC)
+    )
+    np.testing.assert_allclose(out[perm], out_p, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 4),
+    pad_prob=st.floats(0.0, 0.95),
+)
+def test_kernel_matches_ref_hypothesis(weights, seed, blocks, pad_prob):
+    rng = np.random.default_rng(seed)
+    tok = rand_tokens(rng, blocks * BLOCK_B, pad_prob)
+    got = classifier_fwd(tok, *weights, classes=CLASSES_TOPIC)
+    want = ref_fwd(tok, *weights)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 10.0))
+def test_kernel_weight_scale_sweep(seed, scale):
+    # Numerical agreement holds across weight magnitudes.
+    emb, w1, b1, w2, b2 = make_weights(CLASSES_TOPIC, seed=7)
+    emb, w1, w2 = emb * scale, w1 * scale, w2 * scale
+    rng = np.random.default_rng(seed)
+    tok = rand_tokens(rng, BLOCK_B)
+    got = classifier_fwd(tok, emb, w1, b1, w2, b2, classes=CLASSES_TOPIC)
+    want = ref_fwd(tok, emb, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, atol=1e-3 * max(scale, 1.0), rtol=1e-3)
+
+
+def test_extreme_token_ids(weights):
+    # Boundary vocab ids must not read out of bounds.
+    tok = np.zeros((BLOCK_B, TOKENS), np.int32)
+    tok[:, 0] = VOCAB - 1
+    tok[:, 1] = 1
+    got = classifier_fwd(jnp.asarray(tok), *weights, classes=CLASSES_TOPIC)
+    want = ref_fwd(jnp.asarray(tok), *weights)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_relu_actually_clips(weights):
+    # Sanity on the nonlinearity: with hugely negative b1 the hidden
+    # layer is all-zero → logits equal b2 exactly.
+    emb, w1, _, w2, b2 = weights
+    b1_neg = jnp.full((1, w1.shape[1]), -1e9, jnp.float32)
+    rng = np.random.default_rng(3)
+    tok = rand_tokens(rng, BLOCK_B)
+    got = classifier_fwd(tok, emb, w1, b1_neg, w2, b2, classes=CLASSES_TOPIC)
+    np.testing.assert_allclose(got, np.broadcast_to(b2, got.shape), atol=ATOL)

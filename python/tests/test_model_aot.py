@@ -1,0 +1,78 @@
+"""L2/AOT tests: model shapes, variant separation, HLO-text export."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import export, to_hlo_text
+from compile.model import (
+    CLASSES_SENTIMENT,
+    CLASSES_TOPIC,
+    VARIANTS,
+    example_tokens,
+    make_weights,
+    model_fn,
+)
+from compile.kernels.classifier import BATCH, TOKENS
+
+
+def tok_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(1, 100, size=(BATCH, TOKENS), dtype=np.int32)
+    return jnp.asarray(t)
+
+
+def test_model_output_shapes():
+    for name, (classes, seed) in VARIANTS.items():
+        fn = model_fn(classes, seed)
+        (logits,) = fn(tok_batch())
+        assert logits.shape == (BATCH, classes), name
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_variants_differ():
+    (a,) = model_fn(*VARIANTS["classifier"])(tok_batch())
+    (b,) = model_fn(*VARIANTS["sentiment"])(tok_batch())
+    assert a.shape[1] == CLASSES_TOPIC
+    assert b.shape[1] == CLASSES_SENTIMENT
+
+
+def test_weights_deterministic_per_seed():
+    w1 = make_weights(CLASSES_TOPIC, 11)
+    w2 = make_weights(CLASSES_TOPIC, 11)
+    for a, b in zip(w1, w2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    w3 = make_weights(CLASSES_TOPIC, 12)
+    assert not np.array_equal(np.asarray(w1[0]), np.asarray(w3[0]))
+
+
+def test_hlo_text_lowering_roundtrip():
+    fn = model_fn(*VARIANTS["sentiment"])
+    lowered = jax.jit(fn).lower(example_tokens())
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # Tokens enter as a single ENTRY parameter (weights are baked
+    # constants); subcomputations have their own parameter lists, so
+    # restrict the check to the entry computation.
+    entry = text[text.index("ENTRY"):]
+    assert "parameter(0)" in entry
+    assert "parameter(1)" not in entry
+    # Large weight constants must be fully printed, not elided.
+    assert "constant({...})" not in text
+
+
+def test_export_writes_artifacts(tmp_path):
+    path = export("sentiment", str(tmp_path))
+    assert os.path.exists(path)
+    with open(path) as f:
+        head = f.read(200)
+    assert "HloModule" in head
+
+
+def test_example_tokens_matches_rust_constants():
+    spec = example_tokens()
+    assert spec.shape == (BATCH, TOKENS)
+    assert spec.dtype == jnp.int32

@@ -1,0 +1,636 @@
+//! Chapter 3 (Reshape) experiment harness — regenerates the figures and
+//! tables of §3.7 at single-machine scale.
+//!
+//! ```text
+//! cargo bench --bench bench_ch3              # all experiments
+//! cargo bench --bench bench_ch3 -- fig3_20   # one experiment
+//! ```
+//!
+//! The join operators carry an artificial per-probe cost so they are
+//! the bottleneck (the §3.3.1 premise); queue capacities are sized so
+//! backlogs form on skewed workers. Reproduction targets are the
+//! *relative* behaviours: who balances load, who can split a heavy
+//! hitter, how fast the observed result ratio converges.
+
+use std::time::{Duration, Instant};
+
+use texera_amber::config::{Config, WorkloadMetric};
+use texera_amber::engine::controller::CoordPlugin;
+use texera_amber::engine::{ExecSummary, Execution};
+use texera_amber::flows::{
+    dsb_q18_costed, synthetic_join_costed, tweet_join_costed, worker_of_key,
+};
+use texera_amber::metrics::Summary;
+use texera_amber::operators::SinkHandle;
+use texera_amber::reshape::baselines::{FlowJoinPlugin, FluxPlugin};
+use texera_amber::reshape::{Approach, ReshapePlugin};
+use texera_amber::workloads::tweets;
+
+const PROBE_COST: u64 = 12_000; // ns per probe tuple → join is bottleneck
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let filter = args
+        .iter()
+        .skip(1)
+        .find(|a| a.starts_with("fig") || a.starts_with("tab"))
+        .cloned();
+    let run = |name: &str| filter.as_deref().map(|f| name.starts_with(f)).unwrap_or(true);
+
+    println!("=== bench_ch3: Reshape (§3.7) ===\n");
+    if run("fig3_16") {
+        fig3_16_17_result_ratio();
+    }
+    if run("fig3_18") {
+        fig3_18_19_first_phase();
+    }
+    if run("fig3_20") {
+        fig3_20_heavy_hitters();
+    }
+    if run("fig3_21") {
+        fig3_21_control_latency();
+    }
+    if run("fig3_22") {
+        fig3_22_dynamic_tau();
+    }
+    if run("fig3_23") {
+        fig3_23_skew_levels();
+    }
+    if run("fig3_24") {
+        fig3_24_distribution_change();
+    }
+    if run("fig3_25") {
+        fig3_25_metric_overhead();
+    }
+    if run("tab3_2") {
+        tab3_2_sort();
+    }
+    if run("fig3_26") {
+        fig3_26_multi_helpers();
+    }
+    if run("fig3_27") {
+        fig3_27_alt_metric();
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Strategy {
+    None,
+    Flux,
+    FlowJoin { delay_ms: u64 },
+    Reshape,
+    ReshapeNoPhase1,
+}
+
+impl Strategy {
+    fn name(&self) -> String {
+        match self {
+            Strategy::None => "unmitigated".into(),
+            Strategy::Flux => "flux".into(),
+            Strategy::FlowJoin { delay_ms } => format!("flow-join({delay_ms}ms)"),
+            Strategy::Reshape => "reshape".into(),
+            Strategy::ReshapeNoPhase1 => "reshape-no-p1".into(),
+        }
+    }
+
+    /// Build the plugin and a handle to its chosen (skewed, helper)
+    /// pairs, so harnesses measure skewed-vs-helper load balance the
+    /// way the paper does (§3.7.4).
+    fn plugin(
+        &self,
+        join: usize,
+    ) -> (Option<Box<dyn CoordPlugin>>, PairsHandle) {
+        match self {
+            Strategy::None => (None, PairsHandle::None),
+            Strategy::Flux => {
+                let p = FluxPlugin::new(join);
+                let h = PairsHandle::Raw(p.pairs());
+                (Some(Box::new(p)), h)
+            }
+            Strategy::FlowJoin { delay_ms } => {
+                let p = FlowJoinPlugin::new(join, *delay_ms);
+                let h = PairsHandle::Raw(p.pairs());
+                (Some(Box::new(p)), h)
+            }
+            Strategy::Reshape => {
+                let p = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+                let h = PairsHandle::Report(p.report());
+                (Some(Box::new(p)), h)
+            }
+            Strategy::ReshapeNoPhase1 => {
+                let p = ReshapePlugin::new(join, Approach::SplitByRecords, true)
+                    .without_phase1();
+                let h = PairsHandle::Report(p.report());
+                (Some(Box::new(p)), h)
+            }
+        }
+    }
+}
+
+/// Access to the (skewed, helper) pairs a strategy chose.
+enum PairsHandle {
+    None,
+    Raw(std::sync::Arc<std::sync::Mutex<Vec<(usize, usize)>>>),
+    Report(std::sync::Arc<std::sync::Mutex<texera_amber::reshape::ReshapeReport>>),
+}
+
+impl PairsHandle {
+    fn pairs(&self) -> Vec<(usize, usize)> {
+        match self {
+            PairsHandle::None => Vec::new(),
+            PairsHandle::Raw(p) => p.lock().unwrap().clone(),
+            PairsHandle::Report(r) => r
+                .lock()
+                .unwrap()
+                .mitigations
+                .iter()
+                .map(|(_, s, h)| (*s, h[0]))
+                .collect(),
+        }
+    }
+
+    fn iterations(&self) -> u32 {
+        match self {
+            PairsHandle::Report(r) => r.lock().unwrap().iterations,
+            _ => 0,
+        }
+    }
+}
+
+/// Queue-heavy config: skewed workers build real backlogs (the paper's
+/// "input at an equal or higher rate than they can process").
+fn skew_cfg() -> Config {
+    // Small bounded queues: the skewed worker's queue saturates and
+    // backpressure keeps "future input" at the sources, giving the
+    // mitigation something to redirect. (The paper's testbed has
+    // effectively unbounded queues over a 400 s run; with bounded
+    // queues the unmitigated ratio distortion is milder but the
+    // mitigation dynamics are preserved — see EXPERIMENTS.md.)
+    Config {
+        batch_size: 64,
+        data_queue_cap: 16,
+        reshape_eta: 100.0,
+        reshape_tau: 100.0,
+        reshape_initial_delay_ms: 50,
+        ..Config::default()
+    }
+}
+
+/// Sample `sink.ratio(CA, AZ)` while the execution runs; returns the
+/// (seconds, ratio) timeline.
+fn sample_ratio(
+    exec: &Execution,
+    sink: &SinkHandle,
+    total: usize,
+    sample_ms: u64,
+) -> Vec<(f64, f64)> {
+    let t0 = Instant::now();
+    let mut timeline = Vec::new();
+    loop {
+        std::thread::sleep(Duration::from_millis(sample_ms));
+        let r = sink.ratio(tweets::CA, tweets::AZ);
+        if r.is_finite() {
+            timeline.push((t0.elapsed().as_secs_f64(), r));
+        }
+        if sink.total() as usize >= total || t0.elapsed() > Duration::from_secs(60) {
+            break;
+        }
+    }
+    let _ = exec;
+    timeline
+}
+
+/// Load-balance ratio (§3.7.4) between the CA worker and its *helper*
+/// — the worker the strategy chose; the least-loaded other worker when
+/// no pair was chosen (the strategy effectively left CA alone).
+fn ca_lbr(summary: &ExecSummary, join: usize, workers: usize, pairs: &PairsHandle) -> f64 {
+    let ca_worker = worker_of_key(tweets::CA as i64, workers);
+    let get = |idx: usize| {
+        summary
+            .worker_stats
+            .iter()
+            .find(|(id, _)| id.op == join && id.idx == idx)
+            .map(|(_, s)| s.processed as f64)
+            .unwrap_or(0.0)
+    };
+    let helper = pairs
+        .pairs()
+        .iter()
+        .find(|(s, _)| *s == ca_worker)
+        .map(|(_, h)| *h)
+        .unwrap_or_else(|| {
+            (0..workers)
+                .filter(|&i| i != ca_worker)
+                .min_by(|&a, &b| get(a).partial_cmp(&get(b)).unwrap())
+                .unwrap_or(0)
+        });
+    let (a, b) = (get(ca_worker), get(helper));
+    if a.max(b) > 0.0 {
+        a.min(b) / a.max(b)
+    } else {
+        f64::NAN
+    }
+}
+
+/// Figs. 3.16/3.17: |observed − actual| CA:AZ ratio over time per
+/// strategy. Reshape should converge earliest and stay converged.
+fn fig3_16_17_result_ratio() {
+    println!("--- Figs 3.16/3.17: result ratio CA:AZ over time ---");
+    let total = 120_000;
+    let actual = tweets::CA_AZ_RATIO;
+    println!("actual ratio: {actual:.2}; entries are |observed − actual|");
+    for strategy in [
+        Strategy::None,
+        Strategy::Flux,
+        Strategy::FlowJoin { delay_ms: 100 },
+        Strategy::Reshape,
+    ] {
+        let f = tweet_join_costed(total, 8, 0xC0FFEE, PROBE_COST);
+        let (plugin, _pairs) = strategy.plugin(f.focus);
+        let exec = match plugin {
+            Some(p) => Execution::start_with_plugin(f.workflow, skew_cfg(), p),
+            None => Execution::start(f.workflow, skew_cfg()),
+        };
+        let timeline = sample_ratio(&exec, &f.sink, total, 100);
+        exec.join();
+        let step = (timeline.len() / 6).max(1);
+        let pts: Vec<String> = timeline
+            .iter()
+            .step_by(step)
+            .take(6)
+            .map(|(t, r)| format!("{t:.1}s:{:.2}", (r - actual).abs()))
+            .collect();
+        println!("{:>18} | {}", strategy.name(), pts.join("  "));
+    }
+    println!("(paper: Reshape reaches and holds the actual ratio earliest)\n");
+}
+
+/// Figs. 3.18/3.19: the first (catch-up) phase lets the representative
+/// ratio appear earlier.
+fn fig3_18_19_first_phase() {
+    println!("--- Figs 3.18/3.19: benefit of the first phase ---");
+    let total = 120_000;
+    let actual = tweets::CA_AZ_RATIO;
+    for strategy in [Strategy::Reshape, Strategy::ReshapeNoPhase1, Strategy::None] {
+        let f = tweet_join_costed(total, 8, 0xC0FFEE, PROBE_COST);
+        let (plugin, _pairs) = strategy.plugin(f.focus);
+        let exec = match plugin {
+            Some(p) => Execution::start_with_plugin(f.workflow, skew_cfg(), p),
+            None => Execution::start(f.workflow, skew_cfg()),
+        };
+        let timeline = sample_ratio(&exec, &f.sink, total, 80);
+        let summary = exec.join();
+        let mut tl = texera_amber::metrics::Timeline::new();
+        for (t, r) in &timeline {
+            tl.record_at(*t, *r);
+        }
+        let conv = tl.time_to_converge(actual, actual * 0.12);
+        println!(
+            "{:>18} | time to ±12% of actual: {} (run {:.2}s)",
+            strategy.name(),
+            conv.map(|t| format!("{t:.2}s")).unwrap_or("never".into()),
+            summary.elapsed.as_secs_f64()
+        );
+    }
+    println!("(paper: with phase 1 ≈ 120s vs without ≈ 288s, both beat unmitigated)\n");
+}
+
+/// Fig. 3.20: heavy-hitter handling per strategy and worker count.
+fn fig3_20_heavy_hitters() {
+    println!("--- Fig 3.20: heavy-hitter key (California) ---");
+    println!("{:>8} {:>18} {:>8} {:>10}", "workers", "strategy", "LBR", "time (s)");
+    let total = 100_000;
+    for workers in [8usize, 12] {
+        for strategy in [
+            Strategy::Flux,
+            Strategy::FlowJoin { delay_ms: 50 },
+            Strategy::FlowJoin { delay_ms: 150 },
+            Strategy::FlowJoin { delay_ms: 400 },
+            Strategy::Reshape,
+        ] {
+            let f = tweet_join_costed(total, workers, 0xC0FFEE, PROBE_COST);
+            let join = f.focus;
+            let (plugin, pairs) = strategy.plugin(join);
+            let exec = match plugin {
+                Some(p) => Execution::start_with_plugin(f.workflow, skew_cfg(), p),
+                None => Execution::start(f.workflow, skew_cfg()),
+            };
+            let summary = exec.join();
+            println!(
+                "{workers:>8} {:>18} {:>8.2} {:>10.2}",
+                strategy.name(),
+                ca_lbr(&summary, join, workers, &pairs),
+                summary.elapsed.as_secs_f64()
+            );
+        }
+    }
+    println!("(paper: Reshape ≈0.92; Flow-Join 0.6–0.85 falling with delay; Flux ≈0.06)\n");
+}
+
+/// Fig. 3.21: artificial control-message delivery delay degrades load
+/// balance.
+fn fig3_21_control_latency() {
+    println!("--- Fig 3.21: control-message latency ---");
+    println!("{:>12} {:>8} {:>10}", "delay (ms)", "LBR", "time (s)");
+    let total = 100_000;
+    for delay in [0u64, 50, 150, 400] {
+        let cfg = Config { ctrl_delay_ms: delay, ..skew_cfg() };
+        let f = tweet_join_costed(total, 8, 0xC0FFEE, PROBE_COST);
+        let join = f.focus;
+        let plugin = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+        let pairs = PairsHandle::Report(plugin.report());
+        let exec = Execution::start_with_plugin(f.workflow, cfg, Box::new(plugin));
+        let summary = exec.join();
+        println!(
+            "{delay:>12} {:>8.2} {:>10.2}",
+            ca_lbr(&summary, join, 8, &pairs),
+            summary.elapsed.as_secs_f64()
+        );
+    }
+    println!("(paper: LBR 0.94 at no delay → 0.45 at 15 s delay)\n");
+}
+
+/// Fig. 3.22: fixed vs dynamically adjusted τ — load balance per
+/// mitigation iteration.
+fn fig3_22_dynamic_tau() {
+    println!("--- Fig 3.22: dynamic τ adjustment ---");
+    println!(
+        "{:>8} {:>8} {:>6} {:>8} {:>14}",
+        "tau", "dynamic", "iters", "LBR", "LBR/iteration"
+    );
+    let total = 100_000;
+    for tau in [10.0f64, 100.0, 500.0, 1500.0] {
+        for dynamic in [false, true] {
+            let f = tweet_join_costed(total, 8, 0xC0FFEE, PROBE_COST);
+            let join = f.focus;
+            let cfg = Config {
+                reshape_tau: tau,
+                reshape_dynamic_tau: dynamic,
+                ..skew_cfg()
+            };
+            let plugin = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+            let pairs = PairsHandle::Report(plugin.report());
+            let exec = Execution::start_with_plugin(f.workflow, cfg, Box::new(plugin));
+            let summary = exec.join();
+            let iters = pairs.iterations().max(1);
+            let lbr = ca_lbr(&summary, join, 8, &pairs);
+            println!(
+                "{tau:>8.0} {dynamic:>8} {iters:>6} {lbr:>8.2} {:>14.3}",
+                lbr / iters as f64
+            );
+        }
+    }
+    println!("(paper: dynamic τ cuts iteration counts at low τ and rescues high τ)\n");
+}
+
+/// Fig. 3.23: high (item) vs moderate (date) skew.
+fn fig3_23_skew_levels() {
+    println!("--- Fig 3.23: skew levels (W2 on DSB-like data) ---");
+    println!(
+        "{:>8} {:>8} {:>14} {:>14} {:>10}",
+        "rows", "workers", "item-join LBR", "date-join LBR", "time (s)"
+    );
+    for (rows, workers) in [(40_000usize, 4usize), (80_000, 8)] {
+        let (f, j_item, j_date) = dsb_q18_costed(rows, workers, 7, PROBE_COST / 2);
+        let p_item = ReshapePlugin::new(j_item, Approach::SplitByRecords, true);
+        let rep_item = p_item.report();
+        let exec = Execution::start_with_plugin(f.workflow, skew_cfg(), Box::new(p_item));
+        let summary = exec.join();
+        let loads_of = |op: usize| -> Vec<f64> {
+            (0..workers)
+                .map(|i| {
+                    summary
+                        .worker_stats
+                        .iter()
+                        .find(|(id, _)| id.op == op && id.idx == i)
+                        .map(|(_, s)| s.processed as f64)
+                        .unwrap_or(0.0)
+                })
+                .collect()
+        };
+        // item join: mitigated pair's LBR; date join (unprotected in
+        // this run): spread min/max as its balance measure.
+        let item_lbr = {
+            let loads = loads_of(j_item);
+            let rg = rep_item.lock().unwrap();
+            match rg.mitigations.first() {
+                Some((_, s, h)) => {
+                    let (a, b) = (loads[*s], loads[h[0]]);
+                    a.min(b) / a.max(b)
+                }
+                None => {
+                    let max = loads.iter().cloned().fold(0.0f64, f64::max);
+                    let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+                    min / max
+                }
+            }
+        };
+        let date_lbr = {
+            let loads = loads_of(j_date);
+            let max = loads.iter().cloned().fold(0.0f64, f64::max);
+            let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+            min / max
+        };
+        println!(
+            "{rows:>8} {workers:>8} {item_lbr:>14.2} {date_lbr:>14.2} {:>10.2}",
+            summary.elapsed.as_secs_f64()
+        );
+    }
+    println!("(paper: high skew detected early → LBR > 0.77; moderate skew lower)\n");
+}
+
+/// Fig. 3.24: mid-run input-distribution change.
+fn fig3_24_distribution_change() {
+    println!("--- Fig 3.24: input-distribution change (W4) ---");
+    let rows = 60_000;
+    let workers = 6;
+    let hot = worker_of_key(texera_amber::workloads::synthetic::HOT_KEY, workers);
+    for strategy in [
+        Strategy::Flux,
+        Strategy::FlowJoin { delay_ms: 80 },
+        Strategy::Reshape,
+    ] {
+        let f = synthetic_join_costed(rows, workers, 11, PROBE_COST / 2);
+        let join = f.focus;
+        let cfg = Config { reshape_tau: 500.0, ..skew_cfg() };
+        let (plugin, _pairs) = strategy.plugin(join);
+        let exec = match plugin {
+            Some(p) => Execution::start_with_plugin(f.workflow, cfg, p),
+            None => Execution::start(f.workflow, cfg),
+        };
+        let t0 = Instant::now();
+        let mut pts = Vec::new();
+        loop {
+            std::thread::sleep(Duration::from_millis(200));
+            let stats = exec.stats();
+            let get = |idx: usize| {
+                stats
+                    .iter()
+                    .find(|(id, _)| id.op == join && id.idx == idx)
+                    .map(|(_, s)| s.processed as f64)
+                    .unwrap_or(0.0)
+            };
+            let skewed_load = get(hot);
+            let max_other = (0..workers)
+                .filter(|&i| i != hot)
+                .map(get)
+                .fold(0.0f64, f64::max);
+            if skewed_load > 0.0 {
+                pts.push((t0.elapsed().as_secs_f64(), max_other / skewed_load));
+            }
+            if t0.elapsed() > Duration::from_secs(30) || pts.len() >= 10 {
+                break;
+            }
+        }
+        exec.join();
+        let s: Vec<String> = pts
+            .iter()
+            .map(|(t, r)| format!("{t:.1}s:{r:.2}"))
+            .collect();
+        println!("{:>18} | helper/skewed load: {}", strategy.name(), s.join(" "));
+    }
+    println!("(paper: Reshape re-adjusts to ≈1 after the shift; Flow-Join overshoots; Flux ≈0)\n");
+}
+
+/// Fig. 3.25: metric-collection overhead.
+fn fig3_25_metric_overhead() {
+    println!("--- Fig 3.25: metric-collection overhead (W2) ---");
+    println!("{:>8} {:>12} {:>12} {:>9}", "rows", "off (s)", "on (s)", "overhead");
+    for rows in [40_000usize, 80_000] {
+        let (f, _, _) = dsb_q18_costed(rows, 4, 7, PROBE_COST / 4);
+        let t0 = Instant::now();
+        Execution::start(f.workflow, skew_cfg()).join();
+        let off = t0.elapsed().as_secs_f64();
+        let (f, j_item, _) = dsb_q18_costed(rows, 4, 7, PROBE_COST / 4);
+        // Metrics on but detection unreachable → pure collection cost.
+        let cfg = Config { reshape_eta: f64::INFINITY, ..skew_cfg() };
+        let plugin = ReshapePlugin::new(j_item, Approach::SplitByRecords, true);
+        let t0 = Instant::now();
+        Execution::start_with_plugin(f.workflow, cfg, Box::new(plugin)).join();
+        let on = t0.elapsed().as_secs_f64();
+        println!(
+            "{rows:>8} {off:>12.2} {on:>12.2} {:>8.1}%",
+            (on / off - 1.0) * 100.0
+        );
+    }
+    println!("(paper: 1–2% across configurations)\n");
+}
+
+/// Table 3.2: Reshape on sort.
+fn tab3_2_sort() {
+    println!("--- Table 3.2: Reshape on sort (W3) ---");
+    println!(
+        "{:>8} {:>8} {:>8} {:>8} {:>10}",
+        "workers", "minLBR", "medLBR", "maxLBR", "time (s)"
+    );
+    for workers in [4usize, 8] {
+        let f = texera_amber::flows::orders_sort_costed(2.0, workers, 4_000);
+        let sort = f.focus;
+        let cfg = Config {
+            batch_size: 64,
+            data_queue_cap: 64,
+            reshape_eta: 50.0,
+            reshape_tau: 50.0,
+            ..Config::default()
+        };
+        let plugin = ReshapePlugin::new(sort, Approach::SplitByRecords, false);
+        let report = plugin.report();
+        let t0 = Instant::now();
+        let exec = Execution::start_with_plugin(f.workflow, cfg, Box::new(plugin));
+        let summary = exec.join();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let rep = report.lock().unwrap();
+        let mut s = Summary::new();
+        for (_, skewed, helpers) in rep.mitigations.iter() {
+            let get = |idx: usize| {
+                summary
+                    .worker_stats
+                    .iter()
+                    .find(|(id, _)| id.op == sort && id.idx == idx)
+                    .map(|(_, st)| st.processed as f64)
+                    .unwrap_or(0.0)
+            };
+            let (a, b) = (get(*skewed), get(helpers[0]));
+            if a.max(b) > 0.0 {
+                s.record(a.min(b) / a.max(b));
+            }
+        }
+        if s.is_empty() {
+            println!(
+                "{workers:>8} {:>8} {:>8} {:>8} {elapsed:>10.2} (no mitigation fired)",
+                "-", "-", "-"
+            );
+        } else {
+            println!(
+                "{workers:>8} {:>8.2} {:>8.2} {:>8.2} {elapsed:>10.2}",
+                s.min(),
+                s.percentile(50.0),
+                s.max()
+            );
+        }
+    }
+    println!("(paper: ratios 0.83–0.95 across 20–80 workers; ~20% faster end-to-end)\n");
+}
+
+/// Fig. 3.26: multiple helpers — the skewed worker's residual load
+/// falls as helpers are added (until migration costs dominate).
+fn fig3_26_multi_helpers() {
+    println!("--- Fig 3.26: multiple helper workers ---");
+    println!("{:>8} {:>16} {:>14}", "helpers", "CA worker load", "load reduction");
+    let total = 100_000;
+    let workers = 8;
+    let ca_worker = worker_of_key(tweets::CA as i64, workers);
+    let load_of = |summary: &ExecSummary, join: usize| {
+        summary
+            .worker_stats
+            .iter()
+            .find(|(id, _)| id.op == join && id.idx == ca_worker)
+            .map(|(_, s)| s.processed)
+            .unwrap_or(0)
+    };
+    // Unmitigated baseline.
+    let f = tweet_join_costed(total, workers, 0xC0FFEE, PROBE_COST);
+    let join = f.focus;
+    let summary = Execution::start(f.workflow, skew_cfg()).join();
+    let base_load = load_of(&summary, join);
+    println!("{:>8} {base_load:>16} {:>14}", 0, "-");
+    for helpers in [1usize, 2, 4] {
+        let f = tweet_join_costed(total, workers, 0xC0FFEE, PROBE_COST);
+        let join = f.focus;
+        let cfg = Config { reshape_max_helpers: helpers, ..skew_cfg() };
+        let plugin = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+        let exec = Execution::start_with_plugin(f.workflow, cfg, Box::new(plugin));
+        let summary = exec.join();
+        let load = load_of(&summary, join);
+        println!(
+            "{helpers:>8} {load:>16} {:>14}",
+            base_load.saturating_sub(load)
+        );
+    }
+    println!("(paper: LR rises 13M → ~19.7M then falls as migration time grows)\n");
+}
+
+/// Fig. 3.27: metric-independence (the Flink port used busy-time).
+fn fig3_27_alt_metric() {
+    println!("--- Fig 3.27: busy-time metric (Flink-style config) ---");
+    let total = 100_000;
+    let workers = 8;
+    let f = tweet_join_costed(total, workers, 0xC0FFEE, PROBE_COST);
+    let join = f.focus;
+    let cfg = Config {
+        reshape_metric: WorkloadMetric::BusyTime,
+        reshape_busy_threshold: 0.5,
+        ..skew_cfg()
+    };
+    let plugin = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+    let pairs = PairsHandle::Report(plugin.report());
+    let exec = Execution::start_with_plugin(f.workflow, cfg, Box::new(plugin));
+    let summary = exec.join();
+    println!(
+        "busy-time metric: {} mitigation(s); CA-pair LBR {:.2}; run {:.2}s",
+        pairs.pairs().len(),
+        ca_lbr(&summary, join, workers, &pairs),
+        summary.elapsed.as_secs_f64()
+    );
+    println!("(paper: Flink port reaches LBR ≈ 0.9)\n");
+}

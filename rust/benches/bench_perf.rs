@@ -1,0 +1,185 @@
+//! Performance microbenchmarks (§Perf of EXPERIMENTS.md): the engine's
+//! hot-path numbers — tuple throughput vs batch size, routing cost,
+//! control-path latency, PJRT classifier throughput.
+//!
+//! ```text
+//! cargo bench --bench bench_perf
+//! ```
+
+use std::time::Instant;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
+use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::operators::{CollectSink, SinkHandle};
+use texera_amber::engine::partitioner::{PartitionScheme as PS, Partitioner};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::{TupleSource, VecSource};
+
+fn main() {
+    println!("=== bench_perf: hot-path microbenchmarks ===\n");
+    throughput_vs_batch_size();
+    routing_cost();
+    pause_latency();
+    pjrt_classifier_throughput();
+}
+
+fn pipeline(total: usize, workers: usize, batch: usize) -> f64 {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", workers, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let filter = w.add(OpSpec::unary("filter", workers, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(0, Cmp::Ge, Value::Int(0)))
+    }));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, sink, 0);
+    let cfg = Config { batch_size: batch, ..Config::default() };
+    let t0 = Instant::now();
+    Execution::start(w, cfg).join();
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Engine throughput vs batch size (scan→filter→sink, 2 workers).
+fn throughput_vs_batch_size() {
+    println!("--- engine throughput vs batch size ---");
+    println!("{:>8} {:>16}", "batch", "ktuples/s");
+    let total = 1_000_000;
+    for batch in [16usize, 64, 200, 400, 1600, 6400] {
+        // Warm + measure best of 2 (1-core noise).
+        let a = pipeline(total, 2, batch);
+        let b = pipeline(total, 2, batch);
+        println!("{batch:>8} {:>16.0}", a.max(b) / 1e3);
+    }
+    println!();
+}
+
+/// Partitioner routing nanoseconds per tuple.
+fn routing_cost() {
+    println!("--- partitioner routing cost ---");
+    let t = Tuple::new(vec![Value::Int(123456)]);
+    for (name, scheme) in [
+        ("hash", PS::Hash { key: 0 }),
+        ("round-robin", PS::RoundRobin),
+        (
+            "range",
+            PS::Range {
+                key: 0,
+                bounds: (1..16).map(|i| Value::Int(i * 1000)).collect(),
+            },
+        ),
+    ] {
+        let mut p = Partitioner::new(scheme, 16, 0);
+        let n = 3_000_000u64;
+        let t0 = Instant::now();
+        let mut acc = 0usize;
+        for _ in 0..n {
+            acc = acc.wrapping_add(p.route(&t));
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / n as f64;
+        println!("{name:>12}: {ns:>6.1} ns/tuple (acc {acc})");
+    }
+    println!();
+}
+
+/// Pause round-trip latency on an active pipeline.
+fn pause_latency() {
+    println!("--- pause/resume latency (active 8-worker pipeline) ---");
+    let total = 4_000_000;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let filter = w.add(OpSpec::unary("filter", 8, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(0, Cmp::Ge, Value::Int(0)))
+    }));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, sink, 0);
+    let exec = Execution::start(w, Config::default());
+    let mut s = texera_amber::metrics::Summary::new();
+    for _ in 0..20 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        s.record(exec.pause().as_secs_f64() * 1e6);
+        exec.resume();
+    }
+    exec.join();
+    println!(
+        "p50 {:.0} µs | p99 {:.0} µs | max {:.0} µs\n",
+        s.percentile(50.0),
+        s.percentile(99.0),
+        s.max()
+    );
+}
+
+/// PJRT classifier throughput (L1/L2 artifact through the runtime).
+fn pjrt_classifier_throughput() {
+    println!("--- PJRT classifier throughput ---");
+    if !texera_amber::runtime::pjrt::artifact_exists("artifacts", "classifier") {
+        println!("skipped: run `make artifacts` first\n");
+        return;
+    }
+    use texera_amber::operators::ml_infer::{BATCH, TOKENS};
+    use texera_amber::runtime::{InferenceServer, Tensor};
+    let server = InferenceServer::start("artifacts");
+    let h = server.handle();
+    let tokens = vec![7i32; BATCH * TOKENS];
+    // Warm-up compiles the executable.
+    h.run("classifier", vec![Tensor::I32(tokens.clone(), vec![BATCH as i64, TOKENS as i64])])
+        .expect("inference");
+    let n = 200;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        h.run("classifier", vec![Tensor::I32(tokens.clone(), vec![BATCH as i64, TOKENS as i64])])
+            .expect("inference");
+    }
+    let per_batch = t0.elapsed().as_secs_f64() / n as f64;
+    println!(
+        "kernel (one-hot, TPU-shaped): {:.2} ms/batch → {:.0} tuples/s",
+        per_batch * 1e3,
+        BATCH as f64 / per_batch
+    );
+    // The CPU-tuned gather export (§Perf L2 iteration); identical math.
+    if texera_amber::runtime::pjrt::artifact_exists("artifacts", "classifier_cpu") {
+        h.run(
+            "classifier_cpu",
+            vec![Tensor::I32(tokens.clone(), vec![BATCH as i64, TOKENS as i64])],
+        )
+        .expect("inference");
+        let t0 = Instant::now();
+        for _ in 0..n {
+            h.run(
+                "classifier_cpu",
+                vec![Tensor::I32(tokens.clone(), vec![BATCH as i64, TOKENS as i64])],
+            )
+            .expect("inference");
+        }
+        let pb = t0.elapsed().as_secs_f64() / n as f64;
+        println!(
+            "classifier_cpu (gather):      {:.2} ms/batch → {:.0} tuples/s ({:.1}x)",
+            pb * 1e3,
+            BATCH as f64 / pb,
+            per_batch / pb
+        );
+    }
+    println!();
+}

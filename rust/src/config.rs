@@ -1,0 +1,152 @@
+//! Engine and experiment configuration.
+//!
+//! One flat struct with the paper's tunables, grouped by chapter:
+//! batching (§2.3.3), control-message expedition (§2.4.2), breakpoint
+//! waiting threshold τ (§2.5.3), Reshape's η/τ skew thresholds and
+//! estimator range (§3.2, §3.4), and Maestro's cost-model constants
+//! (§4.5.3). Defaults follow the paper's experimental settings.
+
+/// Which workload metric Reshape reads (Fig. 3.27 shows the framework is
+/// metric-agnostic: the Amber port used queue size, the Flink port used
+/// `busyTimeMsPerSecond`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadMetric {
+    /// Unprocessed input-queue size (Amber implementation, §3.2.1).
+    QueueSize,
+    /// Fraction of time busy in the last window (Flink implementation,
+    /// §3.7.12).
+    BusyTime,
+}
+
+/// Global engine + experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    // ---- engine (Ch. 2) ----
+    /// Tuples per data message ("The batch size used in data messages was
+    /// 400 unless otherwise stated", §2.7.1).
+    pub batch_size: usize,
+    /// Bounded capacity (in messages) of each worker's data queue;
+    /// senders block when full (congestion control, §2.3.3).
+    pub data_queue_cap: usize,
+    /// How many tuples the DP loop processes between checks of the
+    /// control flag (1 = the paper's per-iteration check, §2.4.3).
+    pub ctrl_check_interval: usize,
+    /// Principal's waiting threshold τ for global breakpoints, in ms
+    /// (§2.5.3, Fig. 2.13).
+    pub breakpoint_tau_ms: u64,
+    /// Artificial control-message delivery delay in ms (0 = none);
+    /// used by the Fig. 3.21 experiment.
+    pub ctrl_delay_ms: u64,
+    /// Enable the fault-tolerance control-replay log (§2.6.2).
+    pub ft_log: bool,
+
+    // ---- Reshape (Ch. 3) ----
+    /// Absolute-load threshold η of skew test inequality (3.1).
+    pub reshape_eta: f64,
+    /// Load-gap threshold τ of skew test inequality (3.2). ("we set both
+    /// τ and η to 100", §3.7.1.)
+    pub reshape_tau: f64,
+    /// Dynamically adjust τ per Algorithm 1 (§3.4.3.2).
+    pub reshape_dynamic_tau: bool,
+    /// Acceptable standard-error range [ε_l, ε_u] for the estimator
+    /// (§3.4.3.2; the evaluation used 98..110 tuples).
+    pub reshape_eps_range: (f64, f64),
+    /// Increment applied when raising τ ("increased by a fixed value of
+    /// 50", §3.7.6).
+    pub reshape_tau_step: f64,
+    /// Max τ adjustments per execution (3 in §3.7.6).
+    pub reshape_max_tau_adjust: u32,
+    /// Metric-collection period in ms.
+    pub reshape_metric_period_ms: u64,
+    /// Initial delay before Reshape starts gathering metrics, ms
+    /// ("an initial delay of 2 seconds", §3.7.1).
+    pub reshape_initial_delay_ms: u64,
+    /// Helpers allotted per skewed worker (1 unless the Fig. 3.26
+    /// multi-helper experiment says otherwise).
+    pub reshape_max_helpers: usize,
+    /// Which workload metric to read.
+    pub reshape_metric: WorkloadMetric,
+    /// BusyTime threshold fraction classifying a worker as skewed when
+    /// `reshape_metric == BusyTime` (0.8 in §3.7.12).
+    pub reshape_busy_threshold: f64,
+    /// Sample window (number of metric observations) for the mean-model
+    /// estimator.
+    pub reshape_sample_window: usize,
+
+    // ---- Maestro (Ch. 4) ----
+    /// Cost-model constant: per-tuple processing cost (relative units).
+    pub maestro_tuple_cost: f64,
+    /// Cost-model constant: per-byte materialization write+read cost.
+    pub maestro_mat_byte_cost: f64,
+
+    // ---- misc ----
+    /// RNG seed for workload generation.
+    pub seed: u64,
+    /// Directory holding AOT artifacts (`*.hlo.txt`).
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            batch_size: 400,
+            data_queue_cap: 64,
+            ctrl_check_interval: 1,
+            breakpoint_tau_ms: 5,
+            ctrl_delay_ms: 0,
+            ft_log: false,
+            reshape_eta: 100.0,
+            reshape_tau: 100.0,
+            reshape_dynamic_tau: false,
+            reshape_eps_range: (98.0, 110.0),
+            reshape_tau_step: 50.0,
+            reshape_max_tau_adjust: 3,
+            reshape_metric_period_ms: 20,
+            reshape_initial_delay_ms: 0,
+            reshape_max_helpers: 1,
+            reshape_metric: WorkloadMetric::QueueSize,
+            reshape_busy_threshold: 0.8,
+            reshape_sample_window: 64,
+            maestro_tuple_cost: 1.0,
+            maestro_mat_byte_cost: 0.01,
+            seed: 0xA3BE12,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// Config used by most tests: tiny batches and fast metric polling so
+    /// integration tests finish in milliseconds.
+    pub fn for_tests() -> Config {
+        Config {
+            batch_size: 16,
+            data_queue_cap: 16,
+            reshape_metric_period_ms: 2,
+            breakpoint_tau_ms: 2,
+            ..Config::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.batch_size, 400);
+        assert_eq!(c.reshape_eta, 100.0);
+        assert_eq!(c.reshape_tau, 100.0);
+        assert_eq!(c.reshape_eps_range, (98.0, 110.0));
+        assert_eq!(c.reshape_tau_step, 50.0);
+        assert_eq!(c.ctrl_check_interval, 1);
+    }
+
+    #[test]
+    fn test_config_small() {
+        let c = Config::for_tests();
+        assert!(c.batch_size < 100);
+    }
+}

@@ -1,0 +1,330 @@
+//! Global conditional breakpoints (§2.5.3): the coordinator-side
+//! target-splitting protocol.
+//!
+//! A global predicate — "operator O has produced N tuples" (COUNT) or
+//! "the sum of field f over O's output exceeds S" (SUM) — cannot be
+//! checked by one worker. The principal splits the target equally among
+//! the workers; each worker pauses itself upon reaching its share and
+//! reports. The principal waits a threshold τ for the rest, then
+//! *inquires* them (they pause and report progress), computes the
+//! remaining target, and either declares a **hit**, reassigns the
+//! remainder evenly (resuming everyone at full parallelism), or — when
+//! the remainder is too small for parallelism to help — assigns it to a
+//! single worker (Fig. 2.5, times t₀–t₁₀; SUM overshoot-minimization of
+//! the "give the tail to one worker" rule).
+//!
+//! The struct is a pure state machine (no channels, no clock reads) so
+//! the protocol is unit-testable deterministically; the coordinator
+//! feeds it events and timeouts.
+
+/// What the coordinator must do next.
+#[derive(Debug, PartialEq)]
+pub enum BpAction {
+    /// Nothing; keep waiting.
+    None,
+    /// Start the τ timer (a worker reached its target; wait for others).
+    StartTimer,
+    /// Send `Inquire` to these worker indices.
+    Inquire(Vec<usize>),
+    /// Assign new targets: (worker idx, amount). Workers resume on
+    /// assignment.
+    Assign(Vec<(usize, f64)>),
+    /// The breakpoint condition is met: pause the whole workflow.
+    Hit,
+}
+
+/// Phase of the protocol ("normal processing" vs "synchronization
+/// state" in §2.5.3's terminology).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Workers are processing against assigned targets.
+    Normal,
+    /// Waiting out τ after the first `TargetReached`.
+    AwaitOthers,
+    /// Inquiries sent; waiting for all reports.
+    Synchronizing,
+}
+
+/// A COUNT or SUM global breakpoint on one operator's output.
+#[derive(Debug)]
+pub struct GlobalBreakpoint {
+    pub id: u64,
+    /// Total remaining amount (decremented as reports arrive).
+    remaining: f64,
+    /// SUM field, or None for COUNT.
+    pub sum_field: Option<usize>,
+    /// Below this remainder, assign everything to a single worker
+    /// (COUNT: 1.0; SUM: caller-chosen based on the value distribution).
+    single_worker_threshold: f64,
+    workers: usize,
+    phase: Phase,
+    /// Per-worker: has an outstanding (unreported) assignment.
+    outstanding: Vec<bool>,
+    /// Reports received in the current round: (produced amount).
+    reported: Vec<Option<f64>>,
+    /// Assignment currently held by each worker.
+    assigned: Vec<f64>,
+}
+
+impl GlobalBreakpoint {
+    /// COUNT breakpoint: hit when the operator has produced `total`
+    /// tuples.
+    pub fn count(id: u64, total: u64, workers: usize) -> GlobalBreakpoint {
+        GlobalBreakpoint {
+            id,
+            remaining: total as f64,
+            sum_field: None,
+            single_worker_threshold: 1.0,
+            workers,
+            phase: Phase::Normal,
+            outstanding: vec![false; workers],
+            reported: vec![None; workers],
+            assigned: vec![0.0; workers],
+        }
+    }
+
+    /// SUM breakpoint: hit when Σ field ≥ `total`. `tail` is the
+    /// threshold below which the whole remainder goes to one worker to
+    /// minimize overshoot (§2.5.3's SUM discussion).
+    pub fn sum(id: u64, total: f64, field: usize, workers: usize, tail: f64) -> GlobalBreakpoint {
+        GlobalBreakpoint {
+            id,
+            remaining: total,
+            sum_field: Some(field),
+            single_worker_threshold: tail,
+            workers,
+            phase: Phase::Normal,
+            outstanding: vec![false; workers],
+            reported: vec![None; workers],
+            assigned: vec![0.0; workers],
+        }
+    }
+
+    /// Initial split: equal shares to all workers (t₀ in Fig. 2.5).
+    pub fn initial_assignments(&mut self) -> Vec<(usize, f64)> {
+        self.split_evenly()
+    }
+
+    fn split_evenly(&mut self) -> Vec<(usize, f64)> {
+        self.phase = Phase::Normal;
+        self.reported = vec![None; self.workers];
+        let mut out = Vec::with_capacity(self.workers);
+        if self.remaining <= self.single_worker_threshold {
+            // Tail: one worker gets the rest; the others stay paused
+            // (overshoot minimization / no parallelism gain).
+            let w = 0;
+            self.outstanding = vec![false; self.workers];
+            self.outstanding[w] = true;
+            self.assigned = vec![0.0; self.workers];
+            self.assigned[w] = self.remaining;
+            out.push((w, self.remaining));
+            return out;
+        }
+        let share = if self.sum_field.is_none() {
+            // COUNT: integral shares; distribute the remainder of the
+            // division one extra tuple each.
+            (self.remaining / self.workers as f64).floor()
+        } else {
+            self.remaining / self.workers as f64
+        };
+        let mut leftover = if self.sum_field.is_none() {
+            self.remaining - share * self.workers as f64
+        } else {
+            0.0
+        };
+        for w in 0..self.workers {
+            let mut amt = share;
+            if leftover >= 1.0 {
+                amt += 1.0;
+                leftover -= 1.0;
+            }
+            if amt <= 0.0 {
+                self.outstanding[w] = false;
+                self.assigned[w] = 0.0;
+                continue;
+            }
+            self.outstanding[w] = true;
+            self.assigned[w] = amt;
+            out.push((w, amt));
+        }
+        out
+    }
+
+    /// A worker reached its target and paused itself.
+    pub fn on_target_reached(&mut self, w: usize, produced: f64) -> BpAction {
+        self.reported[w] = Some(produced);
+        self.outstanding[w] = false;
+        self.remaining -= produced;
+        if self.all_reported() {
+            return self.conclude_round();
+        }
+        match self.phase {
+            Phase::Normal => {
+                // If everything still outstanding is a tail the others
+                // are already working on, just keep waiting (the t₉
+                // "don't inquire for one remaining tuple" rule).
+                let outstanding_total: f64 = self
+                    .assigned
+                    .iter()
+                    .zip(&self.outstanding)
+                    .filter(|(_, o)| **o)
+                    .map(|(a, _)| *a)
+                    .sum();
+                if outstanding_total <= self.single_worker_threshold {
+                    self.phase = Phase::AwaitOthers;
+                    return BpAction::None;
+                }
+                self.phase = Phase::AwaitOthers;
+                BpAction::StartTimer
+            }
+            _ => BpAction::None,
+        }
+    }
+
+    /// The τ timer fired: inquire workers that have not reported.
+    pub fn on_timeout(&mut self) -> BpAction {
+        if self.phase != Phase::AwaitOthers {
+            return BpAction::None;
+        }
+        let missing: Vec<usize> = (0..self.workers)
+            .filter(|&w| self.reported[w].is_none() && self.outstanding[w])
+            .collect();
+        if missing.is_empty() {
+            return self.conclude_round();
+        }
+        self.phase = Phase::Synchronizing;
+        BpAction::Inquire(missing)
+    }
+
+    /// An inquiry reply (worker paused itself and reported progress).
+    pub fn on_inquiry_report(&mut self, w: usize, produced: f64) -> BpAction {
+        self.reported[w] = Some(produced);
+        self.outstanding[w] = false;
+        self.remaining -= produced;
+        if self.all_reported() {
+            self.conclude_round()
+        } else {
+            BpAction::None
+        }
+    }
+
+    fn all_reported(&self) -> bool {
+        (0..self.workers).all(|w| self.reported[w].is_some() || !self.outstanding[w])
+    }
+
+    fn conclude_round(&mut self) -> BpAction {
+        if self.remaining <= 0.0 {
+            return BpAction::Hit;
+        }
+        BpAction::Assign(self.split_evenly())
+    }
+
+    pub fn remaining(&self) -> f64 {
+        self.remaining
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Replay the Fig. 2.5 trace: target 15, three workers.
+    #[test]
+    fn figure_2_5_count_trace() {
+        let mut bp = GlobalBreakpoint::count(1, 15, 3);
+        let init = bp.initial_assignments();
+        assert_eq!(init, vec![(0, 5.0), (1, 5.0), (2, 5.0)]);
+
+        // t1: worker b (=1) reaches 5.
+        assert_eq!(bp.on_target_reached(1, 5.0), BpAction::StartTimer);
+        // t2: τ fires; inquire a and c.
+        assert_eq!(bp.on_timeout(), BpAction::Inquire(vec![0, 2]));
+        // t3: a reports 3, c reports 1. Remaining 15-5-3-1 = 6.
+        assert_eq!(bp.on_inquiry_report(0, 3.0), BpAction::None);
+        let act = bp.on_inquiry_report(2, 1.0);
+        // t4: reassign 2 each.
+        assert_eq!(act, BpAction::Assign(vec![(0, 2.0), (1, 2.0), (2, 2.0)]));
+        assert_eq!(bp.remaining(), 6.0);
+
+        // t5: worker c reaches 2.
+        assert_eq!(bp.on_target_reached(2, 2.0), BpAction::StartTimer);
+        // t6: τ fires; inquire a and b.
+        assert_eq!(bp.on_timeout(), BpAction::Inquire(vec![0, 1]));
+        // t7: a → 1, b → 1. Remaining 2.
+        assert_eq!(bp.on_inquiry_report(0, 1.0), BpAction::None);
+        let act = bp.on_inquiry_report(1, 1.0);
+        // t8: assign 1 to a and b each (remaining 2 > threshold 1).
+        assert_eq!(act, BpAction::Assign(vec![(0, 1.0), (1, 1.0)]));
+
+        // t9: a reaches 1. Outstanding (b's 1.0) ≤ threshold → NO
+        // inquiry (the paper's "reassigning this target to another
+        // worker will not increase parallelism").
+        assert_eq!(bp.on_target_reached(0, 1.0), BpAction::None);
+        // t10: b reaches 1 → hit.
+        assert_eq!(bp.on_target_reached(1, 1.0), BpAction::Hit);
+    }
+
+    #[test]
+    fn all_reach_within_tau_hits_immediately() {
+        let mut bp = GlobalBreakpoint::count(1, 9, 3);
+        bp.initial_assignments();
+        assert_eq!(bp.on_target_reached(0, 3.0), BpAction::StartTimer);
+        assert_eq!(bp.on_target_reached(1, 3.0), BpAction::None);
+        assert_eq!(bp.on_target_reached(2, 3.0), BpAction::Hit);
+    }
+
+    #[test]
+    fn count_shares_are_integral_and_total() {
+        let mut bp = GlobalBreakpoint::count(1, 14, 4);
+        let init = bp.initial_assignments();
+        let total: f64 = init.iter().map(|(_, a)| a).sum();
+        assert_eq!(total, 14.0);
+        for (_, a) in &init {
+            assert_eq!(a.fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn sum_tail_goes_to_single_worker() {
+        let mut bp = GlobalBreakpoint::sum(2, 90.0, 5, 3, 10.0);
+        bp.initial_assignments(); // 30 each
+        bp.on_target_reached(0, 31.0); // overshoot counts
+        bp.on_timeout();
+        bp.on_inquiry_report(1, 30.0);
+        let act = bp.on_inquiry_report(2, 20.0);
+        // Remaining 90-81 = 9 ≤ tail 10 → single worker.
+        match act {
+            BpAction::Assign(v) => {
+                assert_eq!(v.len(), 1);
+                assert!((v[0].1 - 9.0).abs() < 1e-9);
+            }
+            other => panic!("expected single assignment, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sum_overshoot_hits() {
+        let mut bp = GlobalBreakpoint::sum(2, 30.0, 0, 2, 5.0);
+        bp.initial_assignments();
+        assert_eq!(bp.on_target_reached(0, 16.0), BpAction::StartTimer);
+        assert_eq!(bp.on_target_reached(1, 15.0), BpAction::Hit);
+        assert!(bp.remaining() <= 0.0);
+    }
+
+    #[test]
+    fn inquiry_with_zero_progress_reassigns() {
+        let mut bp = GlobalBreakpoint::count(1, 12, 2);
+        bp.initial_assignments();
+        bp.on_target_reached(0, 6.0);
+        assert_eq!(bp.on_timeout(), BpAction::Inquire(vec![1]));
+        let act = bp.on_inquiry_report(1, 0.0);
+        assert_eq!(act, BpAction::Assign(vec![(0, 3.0), (1, 3.0)]));
+    }
+
+    #[test]
+    fn timeout_in_wrong_phase_is_noop() {
+        let mut bp = GlobalBreakpoint::count(1, 10, 2);
+        bp.initial_assignments();
+        assert_eq!(bp.on_timeout(), BpAction::None);
+    }
+}

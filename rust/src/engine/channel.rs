@@ -1,0 +1,310 @@
+//! Actor mailboxes: bounded FIFO data channels and the expedited
+//! control inbox.
+//!
+//! The paper's §2.4.2 problem — a FIFO actor mailbox buries control
+//! messages behind queued data — is solved there by delegating data
+//! processing to a DP thread that checks a shared `Paused` flag per
+//! tuple. We implement the same structure natively: the data plane is a
+//! bounded `std::sync::mpsc::sync_channel` (congestion control, §2.3.3)
+//! and the control plane is a dedicated [`ControlInbox`] with an atomic
+//! `pending` flag the DP loop reads between tuples (a single relaxed
+//! atomic load on the hot path).
+//!
+//! The inbox supports an artificial delivery delay (per-message due
+//! time) used by the Fig. 3.21 control-latency experiment.
+
+use crate::engine::message::{ControlMessage, DataEvent};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Control inbox shared between the coordinator (producer) and one
+/// worker (consumer).
+pub struct ControlInbox {
+    queue: Mutex<VecDeque<(Instant, ControlMessage)>>,
+    pending: AtomicBool,
+    cv: Condvar,
+}
+
+impl Default for ControlInbox {
+    fn default() -> Self {
+        ControlInbox::new()
+    }
+}
+
+impl ControlInbox {
+    pub fn new() -> ControlInbox {
+        ControlInbox {
+            queue: Mutex::new(VecDeque::new()),
+            pending: AtomicBool::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a control message, optionally due only after `delay`
+    /// (simulated delivery latency; 0 = immediate).
+    pub fn send(&self, msg: ControlMessage, delay: Duration) {
+        let due = Instant::now() + delay;
+        let mut q = self.queue.lock().unwrap();
+        q.push_back((due, msg));
+        // The flag is best-effort: the consumer re-checks due times.
+        self.pending.store(true, Ordering::Release);
+        self.cv.notify_one();
+    }
+
+    /// Cheap hot-path check: is a message *possibly* ready?
+    #[inline]
+    pub fn maybe_pending(&self) -> bool {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Dequeue the next *due* message, if any.
+    pub fn try_recv(&self) -> Option<ControlMessage> {
+        if !self.maybe_pending() {
+            return None;
+        }
+        let mut q = self.queue.lock().unwrap();
+        let now = Instant::now();
+        if let Some((due, _)) = q.front() {
+            if *due <= now {
+                let (_, msg) = q.pop_front().unwrap();
+                if q.is_empty() {
+                    self.pending.store(false, Ordering::Release);
+                }
+                return Some(msg);
+            }
+        }
+        None
+    }
+
+    /// Block until a message is due or `timeout` elapses.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<ControlMessage> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if let Some((due, _)) = q.front() {
+                if *due <= now {
+                    let (_, msg) = q.pop_front().unwrap();
+                    if q.is_empty() {
+                        self.pending.store(false, Ordering::Release);
+                    }
+                    return Some(msg);
+                }
+                // Wait until the front message becomes due (or deadline).
+                let wait = (*due).min(deadline).saturating_duration_since(now);
+                if wait.is_zero() && *due > deadline {
+                    return None;
+                }
+                let (qq, _) = self.cv.wait_timeout(q, wait.max(Duration::from_micros(50))).unwrap();
+                q = qq;
+            } else {
+                if now >= deadline {
+                    return None;
+                }
+                let (qq, _) = self
+                    .cv
+                    .wait_timeout(q, deadline - now)
+                    .unwrap();
+                q = qq;
+            }
+        }
+    }
+}
+
+/// Shared per-worker workload gauges, readable by the coordinator
+/// without a control round-trip (the paper's "controller periodically
+/// collects workload metrics", §3.2.1, at 1–2% overhead, Fig. 3.25).
+#[derive(Default)]
+pub struct WorkerGauges {
+    /// Unprocessed input tuples (senders add, the DP loop subtracts) —
+    /// Reshape's default workload metric φ_w.
+    pub queued: AtomicI64,
+    /// Total tuples processed.
+    pub processed: AtomicI64,
+    /// Total tuples produced (output).
+    pub produced: AtomicI64,
+    /// Total tuples received, by *final* routed destination accounting:
+    /// incremented by senders when routing a tuple here (σ_w, the
+    /// "total input received", §3.4.1).
+    pub received: AtomicI64,
+    /// Tuples this worker would have received under the *base*
+    /// partitioning, ignoring mitigation overlays — the estimator's
+    /// input for predicting a worker's natural future share (§3.3.2).
+    pub base_received: AtomicI64,
+    /// Nanoseconds spent busy (processing tuples) — the Flink-style
+    /// `busyTimeMsPerSecond` metric base (§3.7.12).
+    pub busy_ns: AtomicI64,
+    /// Nanoseconds alive (set once the worker starts).
+    pub alive_since_ns: AtomicI64,
+    /// When set, the worker maintains `key_counts` (per-key workload
+    /// distribution — what SBK-style mitigation needs, §3.3.1: "SBK
+    /// requires the workers to store the distribution of workload per
+    /// key").
+    pub track_keys: AtomicBool,
+    /// Input tuples seen per partitioning-key hash.
+    pub key_counts: Mutex<std::collections::HashMap<u64, u64>>,
+}
+
+impl WorkerGauges {
+    /// Busy fraction in [0,1] since start.
+    pub fn busy_fraction(&self, now: Instant, start: Instant) -> f64 {
+        let alive = now.duration_since(start).as_nanos() as f64;
+        if alive <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_ns.load(Ordering::Relaxed) as f64 / alive).clamp(0.0, 1.0)
+    }
+}
+
+/// The sending half of a worker's data plane: a sync sender plus the
+/// receiver's gauges so the sender can maintain the queue-size metric.
+#[derive(Clone)]
+pub struct DataSender {
+    pub tx: SyncSender<DataEvent>,
+    pub gauges: Arc<WorkerGauges>,
+}
+
+impl DataSender {
+    /// Send a data event, blocking if the receiver's queue is full
+    /// (congestion control / backpressure).
+    pub fn send(&self, ev: DataEvent) -> Result<(), ()> {
+        if let DataEvent::Batch(b) = &ev {
+            self.gauges
+                .queued
+                .fetch_add(b.batch.len() as i64, Ordering::Relaxed);
+        }
+        // Blocking send (FIFO, bounded — the paper's congestion
+        // control); error only if the receiver hung up (crash).
+        self.tx.send(ev).map_err(|_| ())
+    }
+}
+
+/// The receiving half: data receiver + control inbox + gauges.
+pub struct Mailbox {
+    pub data: Receiver<DataEvent>,
+    pub control: Arc<ControlInbox>,
+    pub gauges: Arc<WorkerGauges>,
+}
+
+/// Create the mailbox for one worker; returns the sender template.
+pub fn mailbox(cap: usize) -> (DataSender, Mailbox) {
+    let (tx, rx) = std::sync::mpsc::sync_channel(cap);
+    let gauges = Arc::new(WorkerGauges::default());
+    let control = Arc::new(ControlInbox::new());
+    (
+        DataSender { tx, gauges: gauges.clone() },
+        Mailbox { data: rx, control, gauges },
+    )
+}
+
+/// Non-blocking send helper used in tests.
+pub fn try_send(s: &DataSender, ev: DataEvent) -> Result<(), TrySendError<DataEvent>> {
+    if let DataEvent::Batch(b) = &ev {
+        s.gauges
+            .queued
+            .fetch_add(b.batch.len() as i64, Ordering::Relaxed);
+    }
+    s.tx.try_send(ev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::message::{DataMessage, WorkerId};
+    use crate::tuple::{Tuple, Value};
+
+    fn batch(n: usize) -> DataEvent {
+        DataEvent::Batch(DataMessage {
+            from: WorkerId::new(0, 0),
+            port: 0,
+            seq: 0,
+            batch: (0..n).map(|i| Tuple::new(vec![Value::Int(i as i64)])).collect(),
+        })
+    }
+
+    #[test]
+    fn control_inbox_immediate() {
+        let inbox = ControlInbox::new();
+        assert!(!inbox.maybe_pending());
+        inbox.send(ControlMessage::Pause, Duration::ZERO);
+        assert!(inbox.maybe_pending());
+        assert!(matches!(inbox.try_recv(), Some(ControlMessage::Pause)));
+        assert!(inbox.try_recv().is_none());
+    }
+
+    #[test]
+    fn control_inbox_respects_delay() {
+        let inbox = ControlInbox::new();
+        inbox.send(ControlMessage::Pause, Duration::from_millis(50));
+        // Not yet due.
+        assert!(inbox.try_recv().is_none());
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(matches!(inbox.try_recv(), Some(ControlMessage::Pause)));
+    }
+
+    #[test]
+    fn control_inbox_fifo() {
+        let inbox = ControlInbox::new();
+        inbox.send(ControlMessage::Pause, Duration::ZERO);
+        inbox.send(ControlMessage::Resume, Duration::ZERO);
+        assert!(matches!(inbox.try_recv(), Some(ControlMessage::Pause)));
+        assert!(matches!(inbox.try_recv(), Some(ControlMessage::Resume)));
+    }
+
+    #[test]
+    fn recv_timeout_wakes_on_send() {
+        let inbox = Arc::new(ControlInbox::new());
+        let i2 = inbox.clone();
+        let h = std::thread::spawn(move || i2.recv_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        inbox.send(ControlMessage::Resume, Duration::ZERO);
+        let got = h.join().unwrap();
+        assert!(matches!(got, Some(ControlMessage::Resume)));
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let inbox = ControlInbox::new();
+        let t0 = Instant::now();
+        assert!(inbox.recv_timeout(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn gauges_track_queue_size() {
+        let (tx, mb) = mailbox(8);
+        tx.send(batch(5)).unwrap();
+        assert_eq!(mb.gauges.queued.load(Ordering::Relaxed), 5);
+        // Receiver drains and decrements per tuple (done by worker loop;
+        // simulate here).
+        if let Ok(DataEvent::Batch(b)) = mb.data.try_recv() {
+            mb.gauges
+                .queued
+                .fetch_sub(b.batch.len() as i64, Ordering::Relaxed);
+        }
+        assert_eq!(mb.gauges.queued.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn data_channel_fifo_per_sender() {
+        let (tx, mb) = mailbox(16);
+        for seq in 0..5u64 {
+            tx.send(DataEvent::Batch(DataMessage {
+                from: WorkerId::new(0, 0),
+                port: 0,
+                seq,
+                batch: vec![],
+            }))
+            .unwrap();
+        }
+        for seq in 0..5u64 {
+            match mb.data.recv().unwrap() {
+                DataEvent::Batch(b) => assert_eq!(b.seq, seq),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+}

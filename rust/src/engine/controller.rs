@@ -1,0 +1,1078 @@
+//! The coordinator: the paper's controller + principal actors, colocated
+//! as one unit (fault-tolerance assumption A1, §2.6.2).
+//!
+//! [`Execution::start`] translates the operator DAG into the actor DAG
+//! (§2.3.2): one thread per worker, bounded FIFO data channels along
+//! every edge, a control inbox per worker, and an event channel back to
+//! the coordinator thread. The driver interacts through blocking
+//! methods (`pause`, `resume`, `stats`, breakpoints, checkpoint, crash,
+//! `join`) that post [`Command`]s to the coordinator loop.
+//!
+//! Pluggable policies ([`CoordPlugin`]) run inside the coordinator loop
+//! with periodic ticks and event callbacks — Reshape (Ch. 3) is such a
+//! plugin; Maestro (Ch. 4) drives executions from outside through the
+//! region-activation commands (`start_sources`, `await_ops`).
+
+use crate::config::Config;
+use crate::engine::breakpoint::{BpAction, GlobalBreakpoint};
+use crate::engine::channel::{mailbox, ControlInbox, DataSender, WorkerGauges};
+use crate::engine::dag::Workflow;
+use crate::engine::fault::{Checkpoint, LogRecord, ReplayLog};
+use crate::engine::message::{
+    BreakpointTarget, ControlMessage, LocalPredicate, WorkerEvent, WorkerId, WorkerStats,
+};
+use crate::engine::operator::OpPatch;
+use crate::engine::partitioner::Partitioner;
+use crate::engine::worker::{run_worker, OutputEdge, WorkerContext};
+use crate::tuple::Tuple;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Commands from the driver thread to the coordinator.
+pub enum Command {
+    Pause { reply: Sender<Duration> },
+    Resume { reply: Sender<()> },
+    Stats { reply: Sender<Vec<(WorkerId, WorkerStats)>> },
+    SetLocalBp { op: usize, pred: Option<LocalPredicate>, reply: Sender<()> },
+    SetCountBp { op: usize, total: u64, reply: Sender<u64> },
+    SetSumBp { op: usize, total: f64, field: usize, tail: f64, reply: Sender<u64> },
+    AwaitBpHit { reply: Sender<BpHit> },
+    Modify { op: usize, patch: OpPatch, reply: Sender<()> },
+    TakeCheckpoint { reply: Sender<Checkpoint> },
+    TakeReplayLog { reply: Sender<Vec<LogRecord>> },
+    CrashWorkers { workers: Vec<WorkerId> },
+    StartSources { ops: Vec<usize>, reply: Sender<()> },
+    AwaitOps { ops: Vec<usize>, reply: Sender<()> },
+    AwaitPort { op: usize, port: usize, reply: Sender<()> },
+    AwaitDone { reply: Sender<ExecSummary> },
+    SendControl { to: WorkerId, msg: ControlMessage },
+    TrackKeys { op: usize, on: bool },
+    Shutdown,
+}
+
+/// A breakpoint hit notification.
+#[derive(Clone, Debug)]
+pub struct BpHit {
+    pub id: u64,
+    /// The culprit tuple for local breakpoints.
+    pub tuple: Option<Tuple>,
+    /// Time from breakpoint registration to hit.
+    pub elapsed: Duration,
+    /// For global breakpoints: amount produced beyond the target
+    /// (§2.5.3's SUM overshoot; exactly 0 for COUNT).
+    pub overshoot: f64,
+}
+
+/// Final execution summary.
+#[derive(Clone, Debug, Default)]
+pub struct ExecSummary {
+    pub elapsed: Duration,
+    /// (op, worker) → final stats.
+    pub worker_stats: Vec<(WorkerId, WorkerStats)>,
+    /// First-output instant per operator, relative to start (seconds).
+    pub first_output: HashMap<usize, f64>,
+    /// Total tuples produced by each operator.
+    pub produced_by_op: HashMap<usize, u64>,
+}
+
+impl ExecSummary {
+    /// Total input received by a worker, per the σ_w routed-input gauge.
+    pub fn produced(&self, op: usize) -> u64 {
+        self.produced_by_op.get(&op).copied().unwrap_or(0)
+    }
+}
+
+/// Interface the coordinator exposes to plugins (Reshape).
+pub struct PluginCtx<'a> {
+    pub workflow: &'a Workflow,
+    pub gauges: &'a HashMap<WorkerId, Arc<WorkerGauges>>,
+    pub controls: &'a HashMap<WorkerId, Arc<ControlInbox>>,
+    pub config: &'a Config,
+    pub started: Instant,
+    /// Workers that have completed (skew tests skip them).
+    pub completed: &'a HashSet<WorkerId>,
+}
+
+impl<'a> PluginCtx<'a> {
+    /// Send a control message (with the configured artificial delay).
+    pub fn send_control(&self, to: WorkerId, msg: ControlMessage) {
+        if let Some(inbox) = self.controls.get(&to) {
+            inbox.send(msg, Duration::from_millis(self.config.ctrl_delay_ms));
+        }
+    }
+
+    /// Broadcast a control message to all workers of `op`.
+    pub fn broadcast(&self, op: usize, msg: ControlMessage) {
+        for idx in 0..self.workflow.ops[op].workers {
+            self.send_control(WorkerId::new(op, idx), msg.clone());
+        }
+    }
+
+    /// Upstream operators feeding `op` (any port).
+    pub fn upstream_ops(&self, op: usize) -> Vec<usize> {
+        self.workflow
+            .in_edges(op)
+            .iter()
+            .map(|e| e.from)
+            .collect()
+    }
+
+    pub fn gauges_of(&self, id: WorkerId) -> Option<&Arc<WorkerGauges>> {
+        self.gauges.get(&id)
+    }
+
+    pub fn workers_of(&self, op: usize) -> usize {
+        self.workflow.ops[op].workers
+    }
+}
+
+/// A coordinator plugin: ticked periodically, sees worker events.
+pub trait CoordPlugin: Send {
+    fn name(&self) -> &str;
+    /// Called every `period()`.
+    fn tick(&mut self, ctx: &PluginCtx);
+    /// Called on every worker event.
+    fn on_event(&mut self, ev: &WorkerEvent, ctx: &PluginCtx);
+    fn period(&self) -> Duration;
+}
+
+enum CoordMsg {
+    Cmd(Command),
+    Event(WorkerEvent),
+}
+
+/// A running workflow execution.
+pub struct Execution {
+    cmd_tx: Sender<CoordMsg>,
+    coord: Option<JoinHandle<()>>,
+    started: Instant,
+}
+
+struct WorkerHandle {
+    control: Arc<ControlInbox>,
+    gauges: Arc<WorkerGauges>,
+    thread: Option<JoinHandle<()>>,
+}
+
+struct Coordinator {
+    workflow: Workflow,
+    config: Config,
+    handles: HashMap<WorkerId, WorkerHandle>,
+    rx: Receiver<CoordMsg>,
+    started: Instant,
+
+    // Pause bookkeeping.
+    pause_outstanding: HashSet<WorkerId>,
+    pause_reply: Option<(Sender<Duration>, Instant)>,
+
+    // Completion.
+    completed: HashSet<WorkerId>,
+    total_workers: usize,
+    final_stats: Vec<(WorkerId, WorkerStats)>,
+    done_waiters: Vec<Sender<ExecSummary>>,
+    done_at: Option<Instant>,
+
+    // Per-op completion / port completion (Maestro).
+    ops_completed: HashMap<usize, usize>,
+    ops_waiters: Vec<(Vec<usize>, Sender<()>)>,
+    port_completed: HashMap<(usize, usize), usize>,
+    port_waiters: Vec<(usize, usize, Sender<()>)>,
+
+    // Breakpoints.
+    next_bp_id: u64,
+    breakpoints: HashMap<u64, BpState>,
+    bp_waiters: Vec<Sender<BpHit>>,
+    bp_hits: Vec<BpHit>,
+
+    // First-output per op.
+    first_output: HashMap<usize, f64>,
+
+    // Fault tolerance.
+    replay_log: ReplayLog,
+    snapshot_outstanding: HashSet<WorkerId>,
+    snapshot_acc: Checkpoint,
+    checkpoint_reply: Option<Sender<Checkpoint>>,
+
+    // Plugin (Reshape).
+    plugin: Option<Box<dyn CoordPlugin>>,
+    next_tick: Instant,
+
+    shutdown: bool,
+}
+
+struct BpState {
+    op: usize,
+    machine: GlobalBreakpoint,
+    /// τ deadline if the timer is armed.
+    deadline: Option<Instant>,
+    registered: Instant,
+}
+
+impl Execution {
+    /// Deploy and start a workflow (sources auto-start).
+    pub fn start(workflow: Workflow, config: Config) -> Execution {
+        Self::start_inner(workflow, config, None, true, None)
+    }
+
+    /// Deploy with a coordinator plugin (Reshape).
+    pub fn start_with_plugin(
+        workflow: Workflow,
+        config: Config,
+        plugin: Box<dyn CoordPlugin>,
+    ) -> Execution {
+        Self::start_inner(workflow, config, Some(plugin), true, None)
+    }
+
+    /// Deploy with dormant sources (Maestro region scheduling: sources
+    /// wait for `start_sources`).
+    pub fn start_scheduled(workflow: Workflow, config: Config) -> Execution {
+        Self::start_inner(workflow, config, None, false, None)
+    }
+
+    /// Dormant sources + a coordinator plugin (Maestro × Reshape: the
+    /// full Texera stack).
+    pub fn start_scheduled_with_plugin(
+        workflow: Workflow,
+        config: Config,
+        plugin: Box<dyn CoordPlugin>,
+    ) -> Execution {
+        Self::start_inner(workflow, config, Some(plugin), false, None)
+    }
+
+    /// Recover from a checkpoint: restores every worker's snapshot and
+    /// replays the control log (§2.6.2).
+    pub fn recover(
+        workflow: Workflow,
+        config: Config,
+        checkpoint: Checkpoint,
+        log: Vec<LogRecord>,
+    ) -> Execution {
+        Self::start_inner(workflow, config, None, true, Some((checkpoint, log)))
+    }
+
+    fn start_inner(
+        workflow: Workflow,
+        config: Config,
+        plugin: Option<Box<dyn CoordPlugin>>,
+        sources_autostart: bool,
+        recovery: Option<(Checkpoint, Vec<LogRecord>)>,
+    ) -> Execution {
+        workflow.validate().expect("invalid workflow");
+        let (cmd_tx, rx) = channel::<CoordMsg>();
+        let (ev_tx, ev_rx) = channel::<WorkerEvent>();
+        // Forward worker events into the coordinator's merged channel.
+        {
+            let cmd_tx = cmd_tx.clone();
+            std::thread::spawn(move || {
+                while let Ok(ev) = ev_rx.recv() {
+                    if cmd_tx.send(CoordMsg::Event(ev)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+
+        let (mut checkpoint, log) = recovery
+            .map(|(c, l)| (Some(c), l))
+            .unwrap_or((None, Vec::new()));
+
+        // --- Deploy the actor DAG (§2.3.2). ---
+        // 1. Mailboxes for every worker.
+        let mut senders: HashMap<WorkerId, DataSender> = HashMap::new();
+        let mut mailboxes: HashMap<WorkerId, crate::engine::channel::Mailbox> = HashMap::new();
+        for (op_idx, op) in workflow.ops.iter().enumerate() {
+            for w in 0..op.workers {
+                let id = WorkerId::new(op_idx, w);
+                let (tx, mb) = mailbox(config.data_queue_cap);
+                senders.insert(id, tx);
+                mailboxes.insert(id, mb);
+            }
+        }
+        // 2. Per-port upstream sender counts.
+        let mut upstream: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (op_idx, op) in workflow.ops.iter().enumerate() {
+            let mut counts = vec![0usize; op.input_partitioning.len()];
+            for e in workflow.in_edges(op_idx) {
+                counts[e.to_port] += workflow.ops[e.from].workers;
+            }
+            upstream.insert(op_idx, counts);
+        }
+        // 3. Spawn workers.
+        let mut handles = HashMap::new();
+        for (op_idx, op) in workflow.ops.iter().enumerate() {
+            let peer_senders: Vec<DataSender> = (0..op.workers)
+                .map(|w| senders[&WorkerId::new(op_idx, w)].clone())
+                .collect();
+            let port_key_fields: Vec<Option<usize>> = op
+                .input_partitioning
+                .iter()
+                .map(|s| match s {
+                    crate::engine::partitioner::PartitionScheme::Hash { key } => Some(*key),
+                    crate::engine::partitioner::PartitionScheme::Range { key, .. } => {
+                        Some(*key)
+                    }
+                    _ => None,
+                })
+                .collect();
+            for w in 0..op.workers {
+                let id = WorkerId::new(op_idx, w);
+                let mb = mailboxes.remove(&id).unwrap();
+                let control = mb.control.clone();
+                let gauges = mb.gauges.clone();
+                // Output edges.
+                let mut outputs = Vec::new();
+                for e in workflow.out_edges(op_idx) {
+                    let dst = &workflow.ops[e.to];
+                    let scheme = dst.input_partitioning[e.to_port].clone();
+                    let dst_senders: Vec<DataSender> = (0..dst.workers)
+                        .map(|d| senders[&WorkerId::new(e.to, d)].clone())
+                        .collect();
+                    outputs.push(OutputEdge::new(
+                        e.to,
+                        e.to_port,
+                        Partitioner::new(scheme, dst.workers, w),
+                        dst_senders,
+                    ));
+                }
+                let snapshot = checkpoint
+                    .as_mut()
+                    .and_then(|c| c.workers.remove(&id));
+                let ctx = WorkerContext {
+                    id,
+                    mailbox: mb,
+                    event_tx: ev_tx.clone(),
+                    outputs,
+                    upstream_counts: upstream[&op_idx].clone(),
+                    peers: peer_senders.clone(),
+                    port_key_fields: port_key_fields.clone(),
+                    source: if op.is_source {
+                        Some((op.source_builder.as_ref().expect("source op without source"))(
+                            w, op.workers,
+                        ))
+                    } else {
+                        None
+                    },
+                    source_autostart: sources_autostart,
+                    batch_size: config.batch_size,
+                    ctrl_check_interval: config.ctrl_check_interval,
+                    ft_log: config.ft_log,
+                    snapshot,
+                    scatter_merge: op.scatter_merge,
+                };
+                let builder = op.builder.clone();
+                let workers = op.workers;
+                let thread = std::thread::Builder::new()
+                    .name(format!("{}", id))
+                    .spawn(move || run_worker(ctx, builder(w, workers)))
+                    .expect("spawn worker");
+                handles.insert(
+                    id,
+                    WorkerHandle { control, gauges, thread: Some(thread) },
+                );
+            }
+        }
+        drop(senders);
+        drop(ev_tx);
+
+        // Replay the control log (recovery).
+        if !log.is_empty() {
+            let mut per_worker: HashMap<WorkerId, Vec<LogRecord>> = HashMap::new();
+            for r in log {
+                per_worker.entry(r.worker).or_default().push(r);
+            }
+            for (id, recs) in per_worker {
+                if let Some(h) = handles.get(&id) {
+                    h.control
+                        .send(ControlMessage::ReplayLog(recs), Duration::ZERO);
+                }
+            }
+        }
+
+        let total_workers = workflow.total_workers();
+        let started = Instant::now();
+        let period = plugin
+            .as_ref()
+            .map(|p| p.period())
+            .unwrap_or(Duration::from_secs(3600));
+        let coord = Coordinator {
+            workflow,
+            config,
+            handles,
+            rx,
+            started,
+            pause_outstanding: HashSet::new(),
+            pause_reply: None,
+            completed: HashSet::new(),
+            total_workers,
+            final_stats: Vec::new(),
+            done_waiters: Vec::new(),
+            done_at: None,
+            ops_completed: HashMap::new(),
+            ops_waiters: Vec::new(),
+            port_completed: HashMap::new(),
+            port_waiters: Vec::new(),
+            next_bp_id: 1,
+            breakpoints: HashMap::new(),
+            bp_waiters: Vec::new(),
+            bp_hits: Vec::new(),
+            first_output: HashMap::new(),
+            replay_log: ReplayLog::default(),
+            snapshot_outstanding: HashSet::new(),
+            snapshot_acc: Checkpoint::default(),
+            checkpoint_reply: None,
+            plugin,
+            next_tick: started + period,
+            shutdown: false,
+        };
+        let coord_handle = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || coord.run())
+            .expect("spawn coordinator");
+        Execution { cmd_tx, coord: Some(coord_handle), started }
+    }
+
+    fn cmd(&self, c: Command) {
+        let _ = self.cmd_tx.send(CoordMsg::Cmd(c));
+    }
+
+    /// Pause the workflow; returns the pause latency (time until every
+    /// live worker acked).
+    pub fn pause(&self) -> Duration {
+        let (tx, rx) = channel();
+        self.cmd(Command::Pause { reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Resume all workers.
+    pub fn resume(&self) {
+        let (tx, rx) = channel();
+        self.cmd(Command::Resume { reply: tx });
+        rx.recv().expect("coordinator gone");
+    }
+
+    /// Current stats of every worker.
+    pub fn stats(&self) -> Vec<(WorkerId, WorkerStats)> {
+        let (tx, rx) = channel();
+        self.cmd(Command::Stats { reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Install a local conditional breakpoint on an operator's output.
+    pub fn set_local_breakpoint(&self, op: usize, pred: Option<LocalPredicate>) {
+        let (tx, rx) = channel();
+        self.cmd(Command::SetLocalBp { op, pred, reply: tx });
+        rx.recv().expect("coordinator gone");
+    }
+
+    /// Install a global COUNT breakpoint; returns its id.
+    pub fn set_count_breakpoint(&self, op: usize, total: u64) -> u64 {
+        let (tx, rx) = channel();
+        self.cmd(Command::SetCountBp { op, total, reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Install a global SUM breakpoint; returns its id.
+    pub fn set_sum_breakpoint(&self, op: usize, total: f64, field: usize, tail: f64) -> u64 {
+        let (tx, rx) = channel();
+        self.cmd(Command::SetSumBp { op, total, field, tail, reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Block until a breakpoint hits (workflow is paused on return).
+    pub fn await_breakpoint(&self) -> BpHit {
+        let (tx, rx) = channel();
+        self.cmd(Command::AwaitBpHit { reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Patch an operator's runtime parameters on all its workers.
+    pub fn modify_operator(&self, op: usize, param: &str, value: &str) {
+        let (tx, rx) = channel();
+        self.cmd(Command::Modify {
+            op,
+            patch: OpPatch { param: param.into(), value: value.into() },
+            reply: tx,
+        });
+        rx.recv().expect("coordinator gone");
+    }
+
+    /// Quiesced checkpoint: pause-all → snapshot → resume.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let (tx, rx) = channel();
+        self.cmd(Command::TakeCheckpoint { reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Extract the control-replay log accumulated since the last
+    /// checkpoint.
+    pub fn take_replay_log(&self) -> Vec<LogRecord> {
+        let (tx, rx) = channel();
+        self.cmd(Command::TakeReplayLog { reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Simulate a crash of specific workers (they die without acking).
+    pub fn crash_workers(&self, workers: Vec<WorkerId>) {
+        self.cmd(Command::CrashWorkers { workers });
+    }
+
+    /// Maestro: start dormant sources of the given operators.
+    pub fn start_sources(&self, ops: Vec<usize>) {
+        let (tx, rx) = channel();
+        self.cmd(Command::StartSources { ops, reply: tx });
+        rx.recv().expect("coordinator gone");
+    }
+
+    /// Maestro: block until the given operators complete.
+    pub fn await_ops(&self, ops: Vec<usize>) {
+        let (tx, rx) = channel();
+        self.cmd(Command::AwaitOps { ops, reply: tx });
+        rx.recv().expect("coordinator gone");
+    }
+
+    /// Maestro: block until `op`'s input `port` saw EOF on all workers.
+    pub fn await_port(&self, op: usize, port: usize) {
+        let (tx, rx) = channel();
+        self.cmd(Command::AwaitPort { op, port, reply: tx });
+        rx.recv().expect("coordinator gone");
+    }
+
+    /// Enable/disable per-key workload tracking on an operator.
+    pub fn track_keys(&self, op: usize, on: bool) {
+        self.cmd(Command::TrackKeys { op, on });
+    }
+
+    /// Send a raw control message (tests, baselines).
+    pub fn send_control(&self, to: WorkerId, msg: ControlMessage) {
+        self.cmd(Command::SendControl { to, msg });
+    }
+
+    /// Block until the whole workflow completes; returns the summary.
+    pub fn join(&self) -> ExecSummary {
+        let (tx, rx) = channel();
+        self.cmd(Command::AwaitDone { reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Elapsed time since deployment.
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+}
+
+impl Drop for Execution {
+    fn drop(&mut self) {
+        self.cmd(Command::Shutdown);
+        if let Some(h) = self.coord.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Coordinator {
+    fn send_control(&self, to: WorkerId, msg: ControlMessage) {
+        if let Some(h) = self.handles.get(&to) {
+            h.control
+                .send(msg, Duration::from_millis(self.config.ctrl_delay_ms));
+        }
+    }
+
+    fn broadcast_op(&self, op: usize, msg: ControlMessage) {
+        for w in 0..self.workflow.ops[op].workers {
+            self.send_control(WorkerId::new(op, w), msg.clone());
+        }
+    }
+
+    fn broadcast_all(&self, msg: ControlMessage) {
+        for id in self.handles.keys() {
+            self.send_control(*id, msg.clone());
+        }
+    }
+
+    fn plugin_ctx(&self) -> (
+        HashMap<WorkerId, Arc<WorkerGauges>>,
+        HashMap<WorkerId, Arc<ControlInbox>>,
+    ) {
+        let gauges = self
+            .handles
+            .iter()
+            .map(|(id, h)| (*id, h.gauges.clone()))
+            .collect();
+        let controls = self
+            .handles
+            .iter()
+            .map(|(id, h)| (*id, h.control.clone()))
+            .collect();
+        (gauges, controls)
+    }
+
+    fn run_plugin_tick(&mut self) {
+        let Some(mut plugin) = self.plugin.take() else { return };
+        let (gauges, controls) = self.plugin_ctx();
+        {
+            let ctx = PluginCtx {
+                workflow: &self.workflow,
+                gauges: &gauges,
+                controls: &controls,
+                config: &self.config,
+                started: self.started,
+                completed: &self.completed,
+            };
+            plugin.tick(&ctx);
+        }
+        self.plugin = Some(plugin);
+    }
+
+    fn run_plugin_event(&mut self, ev: &WorkerEvent) {
+        let Some(mut plugin) = self.plugin.take() else { return };
+        let (gauges, controls) = self.plugin_ctx();
+        {
+            let ctx = PluginCtx {
+                workflow: &self.workflow,
+                gauges: &gauges,
+                controls: &controls,
+                config: &self.config,
+                started: self.started,
+                completed: &self.completed,
+            };
+            plugin.on_event(ev, &ctx);
+        }
+        self.plugin = Some(plugin);
+    }
+
+    fn begin_pause(&mut self, reply: Option<Sender<Duration>>) {
+        self.pause_outstanding = self
+            .handles
+            .keys()
+            .copied()
+            .collect::<HashSet<_>>();
+        if let Some(r) = reply {
+            self.pause_reply = Some((r, Instant::now()));
+        }
+        self.broadcast_all(ControlMessage::Pause);
+        // Completed workers still ack Pause (they are parked, control-
+        // responsive); nothing special needed.
+        if self.pause_outstanding.is_empty() {
+            self.finish_pause();
+        }
+    }
+
+    fn finish_pause(&mut self) {
+        if let Some((reply, t0)) = self.pause_reply.take() {
+            let _ = reply.send(t0.elapsed());
+        }
+        // If a checkpoint is waiting for quiescence, request snapshots.
+        if self.checkpoint_reply.is_some() && self.snapshot_outstanding.is_empty() {
+            self.snapshot_outstanding = self.handles.keys().copied().collect();
+            self.snapshot_acc = Checkpoint::default();
+            self.broadcast_all(ControlMessage::TakeSnapshot);
+        }
+    }
+
+    fn summary(&self) -> ExecSummary {
+        let mut produced_by_op: HashMap<usize, u64> = HashMap::new();
+        for (id, st) in &self.final_stats {
+            *produced_by_op.entry(id.op).or_insert(0) += st.produced;
+        }
+        ExecSummary {
+            elapsed: self
+                .done_at
+                .map(|t| t - self.started)
+                .unwrap_or_else(|| self.started.elapsed()),
+            worker_stats: self.final_stats.clone(),
+            first_output: self.first_output.clone(),
+            produced_by_op,
+        }
+    }
+
+    fn maybe_done(&mut self) {
+        if self.completed.len() == self.total_workers && self.done_at.is_none() {
+            self.done_at = Some(Instant::now());
+            let summary = self.summary();
+            for w in self.done_waiters.drain(..) {
+                let _ = w.send(summary.clone());
+            }
+        }
+    }
+
+    fn on_bp_action(&mut self, id: u64, action: BpAction) {
+        let (op, sum_field, registered) = match self.breakpoints.get(&id) {
+            Some(st) => (st.op, st.machine.sum_field, st.registered),
+            None => return,
+        };
+        match action {
+            BpAction::None => {}
+            BpAction::StartTimer => {
+                let dl =
+                    Instant::now() + Duration::from_millis(self.config.breakpoint_tau_ms);
+                if let Some(st) = self.breakpoints.get_mut(&id) {
+                    st.deadline = Some(dl);
+                }
+            }
+            BpAction::Inquire(workers) => {
+                if let Some(st) = self.breakpoints.get_mut(&id) {
+                    st.deadline = None;
+                }
+                for w in workers {
+                    self.send_control(WorkerId::new(op, w), ControlMessage::Inquire { id });
+                }
+            }
+            BpAction::Assign(assignments) => {
+                if let Some(st) = self.breakpoints.get_mut(&id) {
+                    st.deadline = None;
+                }
+                for (w, amount) in assignments {
+                    self.send_control(
+                        WorkerId::new(op, w),
+                        ControlMessage::AssignTarget(BreakpointTarget {
+                            id,
+                            amount,
+                            sum_field,
+                        }),
+                    );
+                }
+            }
+            BpAction::Hit => {
+                let elapsed = registered.elapsed();
+                let overshoot = self
+                    .breakpoints
+                    .get(&id)
+                    .map(|st| (-st.machine.remaining()).max(0.0))
+                    .unwrap_or(0.0);
+                let hit = BpHit { id, tuple: None, elapsed, overshoot };
+                self.breakpoints.remove(&id);
+                self.record_hit(hit);
+            }
+        }
+    }
+
+    fn record_hit(&mut self, hit: BpHit) {
+        // Pause the whole workflow (the principal "sends a message to
+        // the controller to pause the entire workflow").
+        self.begin_pause(None);
+        for w in self.bp_waiters.drain(..) {
+            let _ = w.send(hit.clone());
+        }
+        self.bp_hits.push(hit);
+    }
+
+    fn handle_event(&mut self, ev: WorkerEvent) {
+        self.run_plugin_event(&ev);
+        match ev {
+            WorkerEvent::PausedAck { worker, .. } => {
+                self.pause_outstanding.remove(&worker);
+                if self.pause_outstanding.is_empty() {
+                    self.finish_pause();
+                }
+            }
+            WorkerEvent::ResumedAck { .. } => {}
+            WorkerEvent::Stats { .. } => {
+                // Collected synchronously through gauges instead.
+            }
+            WorkerEvent::LocalBreakpointHit { tuple, .. } => {
+                let hit = BpHit {
+                    id: 0,
+                    tuple: Some(tuple),
+                    elapsed: Duration::ZERO,
+                    overshoot: 0.0,
+                };
+                self.record_hit(hit);
+            }
+            WorkerEvent::TargetReached { worker, id, produced } => {
+                if let Some(st) = self.breakpoints.get_mut(&id) {
+                    let act = st.machine.on_target_reached(worker.idx, produced);
+                    self.on_bp_action(id, act);
+                }
+            }
+            WorkerEvent::InquiryReport { worker, id, produced } => {
+                if let Some(st) = self.breakpoints.get_mut(&id) {
+                    let act = st.machine.on_inquiry_report(worker.idx, produced);
+                    self.on_bp_action(id, act);
+                }
+            }
+            WorkerEvent::Snapshot { worker, snap } => {
+                if self.snapshot_outstanding.remove(&worker) {
+                    self.snapshot_acc.workers.insert(worker, snap);
+                    if self.snapshot_outstanding.is_empty() {
+                        // Checkpoint complete: clear the replay log (its
+                        // effects are in state) and resume.
+                        self.replay_log.clear();
+                        let cp = std::mem::take(&mut self.snapshot_acc);
+                        if let Some(r) = self.checkpoint_reply.take() {
+                            let _ = r.send(cp);
+                        }
+                        self.broadcast_all(ControlMessage::Resume);
+                    }
+                }
+            }
+            WorkerEvent::StateApplied { .. } => {}
+            WorkerEvent::PortCompleted { worker, port } => {
+                let c = self.port_completed.entry((worker.op, port)).or_insert(0);
+                *c += 1;
+                let full = *c >= self.workflow.ops[worker.op].workers;
+                if full {
+                    let mut i = 0;
+                    while i < self.port_waiters.len() {
+                        if self.port_waiters[i].0 == worker.op
+                            && self.port_waiters[i].1 == port
+                        {
+                            let (_, _, r) = self.port_waiters.swap_remove(i);
+                            let _ = r.send(());
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            WorkerEvent::MarkerAligned { .. } => {}
+            WorkerEvent::Completed { worker, stats } => {
+                if self.completed.insert(worker) {
+                    self.final_stats.push((worker, stats));
+                    let c = self.ops_completed.entry(worker.op).or_insert(0);
+                    *c += 1;
+                    // Also counts as a pause ack if one is outstanding.
+                    self.pause_outstanding.remove(&worker);
+                    if self.pause_reply.is_some() && self.pause_outstanding.is_empty() {
+                        self.finish_pause();
+                    }
+                    self.notify_ops_waiters();
+                    self.maybe_done();
+                }
+            }
+            WorkerEvent::Log(rec) => {
+                self.replay_log.append(rec);
+            }
+            WorkerEvent::FirstOutput { worker, at } => {
+                self.first_output
+                    .entry(worker.op)
+                    .or_insert_with(|| at.duration_since(self.started).as_secs_f64());
+            }
+        }
+    }
+
+    fn notify_ops_waiters(&mut self) {
+        let mut i = 0;
+        while i < self.ops_waiters.len() {
+            let all_done = self.ops_waiters[i].0.iter().all(|op| {
+                self.ops_completed.get(op).copied().unwrap_or(0)
+                    >= self.workflow.ops[*op].workers
+            });
+            if all_done {
+                let (_, r) = self.ops_waiters.swap_remove(i);
+                let _ = r.send(());
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn handle_cmd(&mut self, cmd: Command) {
+        match cmd {
+            Command::Pause { reply } => self.begin_pause(Some(reply)),
+            Command::Resume { reply } => {
+                self.broadcast_all(ControlMessage::Resume);
+                let _ = reply.send(());
+            }
+            Command::Stats { reply } => {
+                // Read gauges directly (cheap, no round trip).
+                let mut out = Vec::new();
+                for (id, h) in &self.handles {
+                    out.push((
+                        *id,
+                        WorkerStats {
+                            processed: h.gauges.processed.load(Ordering::Relaxed) as u64,
+                            produced: h.gauges.produced.load(Ordering::Relaxed) as u64,
+                            queued: h.gauges.queued.load(Ordering::Relaxed),
+                            state_tuples: 0,
+                        },
+                    ));
+                }
+                out.sort_by_key(|(id, _)| *id);
+                let _ = reply.send(out);
+            }
+            Command::SetLocalBp { op, pred, reply } => {
+                self.broadcast_op(op, ControlMessage::SetLocalBreakpoint(pred));
+                let _ = reply.send(());
+            }
+            Command::SetCountBp { op, total, reply } => {
+                let id = self.next_bp_id;
+                self.next_bp_id += 1;
+                let workers = self.workflow.ops[op].workers;
+                let mut machine = GlobalBreakpoint::count(id, total, workers);
+                let init = machine.initial_assignments();
+                self.breakpoints.insert(
+                    id,
+                    BpState { op, machine, deadline: None, registered: Instant::now() },
+                );
+                for (w, amount) in init {
+                    self.send_control(
+                        WorkerId::new(op, w),
+                        ControlMessage::AssignTarget(BreakpointTarget {
+                            id,
+                            amount,
+                            sum_field: None,
+                        }),
+                    );
+                }
+                let _ = reply.send(id);
+            }
+            Command::SetSumBp { op, total, field, tail, reply } => {
+                let id = self.next_bp_id;
+                self.next_bp_id += 1;
+                let workers = self.workflow.ops[op].workers;
+                let mut machine = GlobalBreakpoint::sum(id, total, field, workers, tail);
+                let init = machine.initial_assignments();
+                self.breakpoints.insert(
+                    id,
+                    BpState { op, machine, deadline: None, registered: Instant::now() },
+                );
+                for (w, amount) in init {
+                    self.send_control(
+                        WorkerId::new(op, w),
+                        ControlMessage::AssignTarget(BreakpointTarget {
+                            id,
+                            amount,
+                            sum_field: Some(field),
+                        }),
+                    );
+                }
+                let _ = reply.send(id);
+            }
+            Command::AwaitBpHit { reply } => {
+                if let Some(hit) = self.bp_hits.pop() {
+                    let _ = reply.send(hit);
+                } else {
+                    self.bp_waiters.push(reply);
+                }
+            }
+            Command::Modify { op, patch, reply } => {
+                self.broadcast_op(op, ControlMessage::ModifyOperator(patch));
+                let _ = reply.send(());
+            }
+            Command::TakeCheckpoint { reply } => {
+                self.checkpoint_reply = Some(reply);
+                self.begin_pause(None);
+            }
+            Command::TakeReplayLog { reply } => {
+                let mut all = Vec::new();
+                for id in self.handles.keys() {
+                    all.extend(self.replay_log.for_worker(*id));
+                }
+                let _ = reply.send(all);
+            }
+            Command::CrashWorkers { workers } => {
+                for w in workers {
+                    self.send_control(w, ControlMessage::Die);
+                    // Dead workers will never ack or complete; remove
+                    // them from accounting so teardown doesn't hang.
+                    if let Some(mut h) = self.handles.remove(&w) {
+                        if let Some(t) = h.thread.take() {
+                            let _ = t.join();
+                        }
+                    }
+                    self.total_workers -= 1;
+                    self.completed.remove(&w);
+                }
+            }
+            Command::StartSources { ops, reply } => {
+                for op in ops {
+                    self.broadcast_op(op, ControlMessage::StartSource);
+                }
+                let _ = reply.send(());
+            }
+            Command::AwaitOps { ops, reply } => {
+                self.ops_waiters.push((ops, reply));
+                self.notify_ops_waiters();
+            }
+            Command::AwaitPort { op, port, reply } => {
+                let done = self.port_completed.get(&(op, port)).copied().unwrap_or(0)
+                    >= self.workflow.ops[op].workers;
+                if done {
+                    let _ = reply.send(());
+                } else {
+                    self.port_waiters.push((op, port, reply));
+                }
+            }
+            Command::AwaitDone { reply } => {
+                if self.done_at.is_some() {
+                    let _ = reply.send(self.summary());
+                } else {
+                    self.done_waiters.push(reply);
+                }
+            }
+            Command::SendControl { to, msg } => self.send_control(to, msg),
+            Command::TrackKeys { op, on } => {
+                for w in 0..self.workflow.ops[op].workers {
+                    if let Some(h) = self.handles.get(&WorkerId::new(op, w)) {
+                        h.gauges.track_keys.store(on, Ordering::Relaxed);
+                    }
+                }
+            }
+            Command::Shutdown => {
+                self.shutdown = true;
+            }
+        }
+    }
+
+    fn next_deadline(&self) -> Instant {
+        let mut d = self.next_tick;
+        for bp in self.breakpoints.values() {
+            if let Some(dl) = bp.deadline {
+                d = d.min(dl);
+            }
+        }
+        d
+    }
+
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        if self.plugin.is_some() && now >= self.next_tick {
+            self.run_plugin_tick();
+            let period = self.plugin.as_ref().map(|p| p.period()).unwrap();
+            self.next_tick = now + period;
+        }
+        let due: Vec<u64> = self
+            .breakpoints
+            .iter()
+            .filter(|(_, b)| b.deadline.map(|d| now >= d).unwrap_or(false))
+            .map(|(id, _)| *id)
+            .collect();
+        for id in due {
+            if let Some(st) = self.breakpoints.get_mut(&id) {
+                st.deadline = None;
+                let act = st.machine.on_timeout();
+                self.on_bp_action(id, act);
+            }
+        }
+    }
+
+    fn run(mut self) {
+        loop {
+            if self.shutdown {
+                // Tear down: all workers die; join threads.
+                self.broadcast_all(ControlMessage::Die);
+                for (_, mut h) in self.handles.drain() {
+                    if let Some(t) = h.thread.take() {
+                        let _ = t.join();
+                    }
+                }
+                return;
+            }
+            let deadline = self.next_deadline();
+            let timeout = deadline
+                .saturating_duration_since(Instant::now())
+                .min(Duration::from_millis(50));
+            match self.rx.recv_timeout(timeout) {
+                Ok(CoordMsg::Cmd(c)) => self.handle_cmd(c),
+                Ok(CoordMsg::Event(e)) => self.handle_event(e),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+            self.fire_timers();
+        }
+    }
+}

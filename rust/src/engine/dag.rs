@@ -1,0 +1,352 @@
+//! The logical workflow DAG handed to the engine (and to Maestro).
+//!
+//! A [`Workflow`] is a DAG of [`OpSpec`]s connected by [`Edge`]s. Each
+//! operator declares a *builder* closure producing one [`Operator`]
+//! instance per worker (the paper's principal creating its worker
+//! actors, §2.3.2), a worker count, and per-input-port partitioning
+//! schemes. Edges carry the destination port; whether a port is
+//! blocking is a property of the destination operator.
+
+use crate::engine::operator::{Emitter, Operator};
+use crate::engine::partitioner::PartitionScheme;
+use crate::tuple::Tuple;
+use crate::workloads::TupleSource;
+use std::sync::Arc;
+
+/// Builder producing the operator instance for worker `idx` of `n`.
+pub type OpBuilder = Arc<dyn Fn(usize, usize) -> Box<dyn Operator> + Send + Sync>;
+
+/// Builder producing the tuple-source partition for scan worker `idx`
+/// of `n`.
+pub type SourceBuilder = Arc<dyn Fn(usize, usize) -> Box<dyn TupleSource> + Send + Sync>;
+
+/// Pass-through operator used by plain scans (a scan may instead attach
+/// a parser by supplying its own operator builder).
+pub struct PassThrough;
+
+impl Operator for PassThrough {
+    fn name(&self) -> &str {
+        "passthrough"
+    }
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        out.emit(t);
+    }
+}
+
+/// One physical operator in the workflow.
+#[derive(Clone)]
+pub struct OpSpec {
+    pub name: String,
+    pub workers: usize,
+    pub builder: OpBuilder,
+    /// For source (scan) operators: the tuple source each worker drives.
+    pub source_builder: Option<SourceBuilder>,
+    /// Partitioning scheme for each input port (indexed by port).
+    pub input_partitioning: Vec<PartitionScheme>,
+    /// Ports that are blocking (duplicated from the operator so Maestro
+    /// can plan without instantiating workers).
+    pub blocking_ports: Vec<usize>,
+    /// True for source operators (no input; workers drive generation).
+    pub is_source: bool,
+    /// Enable the EOF peer barrier for scattered-state merging
+    /// (§3.5.4): at EOF every worker ships its foreign runs to their
+    /// owners and waits for all siblings before finishing. Set for
+    /// mutable-state operators mitigated with SBR (e.g. sort).
+    pub scatter_merge: bool,
+}
+
+impl OpSpec {
+    /// A source (scan) operator: each worker drives one source
+    /// partition through a pass-through operator.
+    pub fn source(
+        name: &str,
+        workers: usize,
+        sources: impl Fn(usize, usize) -> Box<dyn TupleSource> + Send + Sync + 'static,
+    ) -> OpSpec {
+        OpSpec {
+            name: name.to_string(),
+            workers,
+            builder: Arc::new(|_, _| Box::new(PassThrough)),
+            source_builder: Some(Arc::new(sources)),
+            input_partitioning: Vec::new(),
+            blocking_ports: Vec::new(),
+            is_source: true,
+            scatter_merge: false,
+        }
+    }
+
+    /// A source with a custom per-tuple operator (e.g. a parser).
+    pub fn source_with_op(
+        name: &str,
+        workers: usize,
+        sources: impl Fn(usize, usize) -> Box<dyn TupleSource> + Send + Sync + 'static,
+        builder: impl Fn(usize, usize) -> Box<dyn Operator> + Send + Sync + 'static,
+    ) -> OpSpec {
+        OpSpec {
+            name: name.to_string(),
+            workers,
+            builder: Arc::new(builder),
+            source_builder: Some(Arc::new(sources)),
+            input_partitioning: Vec::new(),
+            blocking_ports: Vec::new(),
+            is_source: true,
+            scatter_merge: false,
+        }
+    }
+
+    /// A single-input operator.
+    pub fn unary(
+        name: &str,
+        workers: usize,
+        scheme: PartitionScheme,
+        builder: impl Fn(usize, usize) -> Box<dyn Operator> + Send + Sync + 'static,
+    ) -> OpSpec {
+        OpSpec {
+            name: name.to_string(),
+            workers,
+            builder: Arc::new(builder),
+            source_builder: None,
+            input_partitioning: vec![scheme],
+            blocking_ports: Vec::new(),
+            is_source: false,
+            scatter_merge: false,
+        }
+    }
+
+    /// A two-input operator (e.g. hash join: port 0 = build, blocking;
+    /// port 1 = probe).
+    pub fn binary(
+        name: &str,
+        workers: usize,
+        schemes: [PartitionScheme; 2],
+        blocking_ports: Vec<usize>,
+        builder: impl Fn(usize, usize) -> Box<dyn Operator> + Send + Sync + 'static,
+    ) -> OpSpec {
+        let [s0, s1] = schemes;
+        OpSpec {
+            name: name.to_string(),
+            workers,
+            builder: Arc::new(builder),
+            source_builder: None,
+            input_partitioning: vec![s0, s1],
+            blocking_ports,
+            is_source: false,
+            scatter_merge: false,
+        }
+    }
+
+    /// Mark ports blocking (builder-style).
+    pub fn with_blocking(mut self, ports: Vec<usize>) -> OpSpec {
+        self.blocking_ports = ports;
+        self
+    }
+
+    /// Enable the scattered-state EOF peer barrier (builder-style).
+    pub fn with_scatter_merge(mut self) -> OpSpec {
+        self.scatter_merge = true;
+        self
+    }
+}
+
+/// A directed edge: output of `from` feeds input port `to_port` of `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    pub to_port: usize,
+}
+
+/// The workflow DAG.
+#[derive(Clone, Default)]
+pub struct Workflow {
+    pub ops: Vec<OpSpec>,
+    pub edges: Vec<Edge>,
+}
+
+impl Workflow {
+    pub fn new() -> Workflow {
+        Workflow::default()
+    }
+
+    /// Add an operator; returns its index.
+    pub fn add(&mut self, spec: OpSpec) -> usize {
+        self.ops.push(spec);
+        self.ops.len() - 1
+    }
+
+    /// Connect `from`'s output to `to`'s input port `to_port`.
+    pub fn connect(&mut self, from: usize, to: usize, to_port: usize) {
+        assert!(from < self.ops.len() && to < self.ops.len());
+        assert!(
+            to_port < self.ops[to].input_partitioning.len(),
+            "operator {} has no input port {to_port}",
+            self.ops[to].name
+        );
+        self.edges.push(Edge { from, to, to_port });
+    }
+
+    /// Outgoing edges of an operator.
+    pub fn out_edges(&self, op: usize) -> Vec<Edge> {
+        self.edges.iter().copied().filter(|e| e.from == op).collect()
+    }
+
+    /// Incoming edges of an operator.
+    pub fn in_edges(&self, op: usize) -> Vec<Edge> {
+        self.edges.iter().copied().filter(|e| e.to == op).collect()
+    }
+
+    /// Operators with no outgoing edges (sinks / result operators,
+    /// Def. 4.1).
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.ops.len())
+            .filter(|&i| self.out_edges(i).is_empty())
+            .collect()
+    }
+
+    /// Operators with no incoming edges.
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.ops.len())
+            .filter(|&i| self.in_edges(i).is_empty())
+            .collect()
+    }
+
+    /// Whether an edge lands on a blocking input port of its
+    /// destination (Def. 4.2).
+    pub fn is_blocking_edge(&self, e: &Edge) -> bool {
+        self.ops[e.to].blocking_ports.contains(&e.to_port)
+    }
+
+    /// Topological order of operator indices; panics on cycles
+    /// (workflows are DAGs by construction).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.to] += 1;
+        }
+        let mut queue: Vec<usize> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for e in self.out_edges(i) {
+                indeg[e.to] -= 1;
+                if indeg[e.to] == 0 {
+                    queue.push(e.to);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "workflow graph has a cycle");
+        order
+    }
+
+    /// Total worker count.
+    pub fn total_workers(&self) -> usize {
+        self.ops.iter().map(|o| o.workers).sum()
+    }
+
+    /// Validate the DAG: every non-source has all input ports
+    /// connected, sources have none.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, op) in self.ops.iter().enumerate() {
+            let in_edges = self.in_edges(i);
+            if op.is_source {
+                if !in_edges.is_empty() {
+                    return Err(format!("source {} has inputs", op.name));
+                }
+            } else {
+                for port in 0..op.input_partitioning.len() {
+                    if !in_edges.iter().any(|e| e.to_port == port) {
+                        return Err(format!(
+                            "operator {} input port {port} unconnected",
+                            op.name
+                        ));
+                    }
+                }
+            }
+        }
+        // Acyclicity.
+        let _ = self.topo_order();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::operator::{Emitter, Operator};
+    use crate::tuple::Tuple;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    fn noop_spec(name: &str, source: bool) -> OpSpec {
+        if source {
+            OpSpec::source(name, 2, |_, _| {
+                Box::new(crate::workloads::VecSource::new(Vec::new()))
+            })
+        } else {
+            OpSpec::unary(name, 2, PartitionScheme::RoundRobin, |_, _| Box::new(Noop))
+        }
+    }
+
+    #[test]
+    fn linear_workflow_valid() {
+        let mut w = Workflow::new();
+        let a = w.add(noop_spec("scan", true));
+        let b = w.add(noop_spec("filter", false));
+        w.connect(a, b, 0);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.sources(), vec![a]);
+        assert_eq!(w.sinks(), vec![b]);
+    }
+
+    #[test]
+    fn unconnected_port_invalid() {
+        let mut w = Workflow::new();
+        let _a = w.add(noop_spec("scan", true));
+        let _b = w.add(noop_spec("filter", false));
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let mut w = Workflow::new();
+        let a = w.add(noop_spec("scan", true));
+        let b = w.add(noop_spec("f1", false));
+        let c = w.add(noop_spec("f2", false));
+        w.connect(a, b, 0);
+        w.connect(b, c, 0);
+        let order = w.topo_order();
+        let pos = |x: usize| order.iter().position(|&y| y == x).unwrap();
+        assert!(pos(a) < pos(b) && pos(b) < pos(c));
+    }
+
+    #[test]
+    #[should_panic(expected = "no input port")]
+    fn connect_checks_port_exists() {
+        let mut w = Workflow::new();
+        let a = w.add(noop_spec("scan", true));
+        let b = w.add(noop_spec("filter", false));
+        w.connect(a, b, 3);
+    }
+
+    #[test]
+    fn blocking_edge_detection() {
+        let mut w = Workflow::new();
+        let a = w.add(noop_spec("scan", true));
+        let mut spec = noop_spec("groupby", false);
+        spec.blocking_ports = vec![0];
+        let b = w.add(spec);
+        w.connect(a, b, 0);
+        let e = w.edges[0];
+        assert!(w.is_blocking_edge(&e));
+    }
+}

@@ -1,0 +1,196 @@
+//! Message types exchanged between actors.
+//!
+//! Three directions, mirroring Fig. 2.3 of the paper:
+//! * worker → worker: [`DataEvent`] (batched tuples, EOF markers,
+//!   partitioning-epoch markers, migrated state);
+//! * coordinator → worker: [`ControlMessage`] (pause/resume, breakpoint
+//!   targets, partitioner updates, operator patches, …);
+//! * worker → coordinator: [`WorkerEvent`] (acks, breakpoint reports,
+//!   stats, fault-tolerance log records, completion).
+
+use crate::engine::operator::{OpPatch, OpState};
+use crate::engine::partitioner::MitigationRoute;
+use crate::tuple::Tuple;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Identifies a worker: (operator index in the DAG, worker index within
+/// the operator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct WorkerId {
+    pub op: usize,
+    pub idx: usize,
+}
+
+impl WorkerId {
+    pub fn new(op: usize, idx: usize) -> WorkerId {
+        WorkerId { op, idx }
+    }
+}
+
+impl std::fmt::Display for WorkerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "w{}.{}", self.op, self.idx)
+    }
+}
+
+/// A batch of tuples on an edge. `seq` is the per-(sender, receiver)
+/// sequence number used for FIFO/exactly-once accounting and the
+/// fault-tolerance control-replay log (§2.6.2).
+#[derive(Clone, Debug)]
+pub struct DataMessage {
+    pub from: WorkerId,
+    pub port: usize,
+    pub seq: u64,
+    pub batch: Vec<Tuple>,
+}
+
+/// Everything that travels on the data plane.
+#[derive(Clone, Debug)]
+pub enum DataEvent {
+    /// A batch of tuples.
+    Batch(DataMessage),
+    /// Sender finished its stream for `port` (each receiver counts EOFs
+    /// against the number of upstream senders on that port).
+    End { from: WorkerId, port: usize },
+    /// Partitioning-epoch marker (§3.5.3): the sender switched to
+    /// partitioning epoch `epoch`; receivers use it to synchronize
+    /// mutable-state migration.
+    Marker { from: WorkerId, port: usize, epoch: u64 },
+    /// Operator state migrated from a skewed worker to a helper
+    /// (Reshape state transfer, §3.2.2 step (c)).
+    State { from: WorkerId, state: OpState, transfer_id: u64 },
+    /// Peer-barrier marker for the scattered-state merge (§3.5.4): a
+    /// sibling worker has shipped all its foreign runs (Fig. 3.11(e)).
+    PeerEof { from: WorkerId },
+}
+
+/// A local conditional-breakpoint predicate over output tuples
+/// (evaluated independently by each worker, §2.5.2). `Arc` so a single
+/// predicate can be broadcast to all workers of an operator.
+pub type LocalPredicate = Arc<dyn Fn(&Tuple) -> bool + Send + Sync>;
+
+/// Global-breakpoint target assigned to one worker (§2.5.3): pause and
+/// report after producing `amount` more (COUNT: tuples; SUM: field sum).
+#[derive(Clone, Debug)]
+pub struct BreakpointTarget {
+    /// Breakpoint id (several can be active).
+    pub id: u64,
+    /// COUNT target in tuples, or SUM target in field units.
+    pub amount: f64,
+    /// For SUM: index of the summed field; None = COUNT.
+    pub sum_field: Option<usize>,
+}
+
+/// Control-plane messages (coordinator → worker). Kept `Clone` so the
+/// coordinator can broadcast one message to all workers of an operator.
+#[derive(Clone)]
+pub enum ControlMessage {
+    /// Stop data processing; ack with `PausedAck` (§2.4.3).
+    Pause,
+    /// Continue data processing (§2.4.4).
+    Resume,
+    /// Report current statistics without pausing.
+    QueryStats,
+    /// Install/replace a local conditional breakpoint on output tuples.
+    SetLocalBreakpoint(Option<LocalPredicate>),
+    /// Assign a global-breakpoint target (§2.5.3). Worker resets its
+    /// produced-counter for this breakpoint and resumes if paused by it.
+    AssignTarget(BreakpointTarget),
+    /// "How far along are you?" for breakpoint `id`: pause self and
+    /// report produced amount since the last `AssignTarget` (time t2/t6
+    /// in Fig. 2.5).
+    Inquire { id: u64 },
+    /// Patch the operator's runtime-modifiable parameters (§2.4.4:
+    /// "modify an operator, such as the constant in a selection
+    /// predicate").
+    ModifyOperator(OpPatch),
+    /// Install a mitigation route (Reshape partitioner change) on this
+    /// worker's *output* partitioner for operator `target_op`.
+    UpdateRoute { target_op: usize, route: MitigationRoute },
+    /// Extract the operator state for `keys`/all and send it to `to`
+    /// with `transfer_id` (Reshape state migration).
+    SendState { to: WorkerId, keys: Option<Vec<u64>>, transfer_id: u64, replicate: bool },
+    /// Take a state snapshot for checkpointing; reply `Snapshot`.
+    /// Must be sent while paused (quiesced checkpoint).
+    TakeSnapshot,
+    /// Fault-injection: die immediately without acking (simulated crash,
+    /// §2.7.8).
+    Die,
+    /// Begin source emission (Maestro region activation): scan workers
+    /// are deployed dormant and start producing when told (§4.3).
+    StartSource,
+    /// Fault-tolerance replay (§2.6.2): re-apply these logged control
+    /// messages at their recorded data positions during recomputation.
+    ReplayLog(Vec<crate::engine::fault::LogRecord>),
+}
+
+impl std::fmt::Debug for ControlMessage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            ControlMessage::Pause => "Pause",
+            ControlMessage::Resume => "Resume",
+            ControlMessage::QueryStats => "QueryStats",
+            ControlMessage::SetLocalBreakpoint(_) => "SetLocalBreakpoint",
+            ControlMessage::AssignTarget(_) => "AssignTarget",
+            ControlMessage::Inquire { .. } => "Inquire",
+            ControlMessage::ModifyOperator(_) => "ModifyOperator",
+            ControlMessage::UpdateRoute { .. } => "UpdateRoute",
+            ControlMessage::SendState { .. } => "SendState",
+            ControlMessage::TakeSnapshot => "TakeSnapshot",
+            ControlMessage::Die => "Die",
+            ControlMessage::StartSource => "StartSource",
+            ControlMessage::ReplayLog(_) => "ReplayLog",
+        };
+        write!(f, "{name}")
+    }
+}
+
+/// Per-worker statistics snapshot (what "investigating operators"
+/// returns, §2.2.1).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub processed: u64,
+    pub produced: u64,
+    pub queued: i64,
+    pub state_tuples: u64,
+}
+
+/// Worker → coordinator events.
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// Ack of a `Pause` (or self-pause on breakpoint); carries the
+    /// position info the FT log needs (§2.6.2 step iii).
+    PausedAck { worker: WorkerId, stats: WorkerStats },
+    /// Ack of `Resume`.
+    ResumedAck { worker: WorkerId },
+    /// Reply to `QueryStats`.
+    Stats { worker: WorkerId, stats: WorkerStats },
+    /// A local breakpoint predicate matched `tuple` (worker paused
+    /// itself first, §2.5.2).
+    LocalBreakpointHit { worker: WorkerId, tuple: Tuple },
+    /// Worker reached its assigned global-breakpoint target and paused
+    /// itself (t1/t5/t9 in Fig. 2.5).
+    TargetReached { worker: WorkerId, id: u64, produced: f64 },
+    /// Reply to `Inquire`: produced amount since last assignment
+    /// (worker paused itself, t3/t7 in Fig. 2.5).
+    InquiryReport { worker: WorkerId, id: u64, produced: f64 },
+    /// Reply to `TakeSnapshot`.
+    Snapshot { worker: WorkerId, snap: crate::engine::fault::WorkerSnapshot },
+    /// State-transfer `transfer_id` fully applied at the helper
+    /// (Fig. 3.2(d) ack).
+    StateApplied { worker: WorkerId, transfer_id: u64 },
+    /// A blocking input port finished (all upstream EOFs seen) — Maestro
+    /// uses this for region-completion tracking.
+    PortCompleted { worker: WorkerId, port: usize },
+    /// All upstream senders emitted the epoch marker — safe point for
+    /// mutable-state migration (§3.5.3).
+    MarkerAligned { worker: WorkerId, epoch: u64 },
+    /// Worker finished all input and emitted EOF downstream.
+    Completed { worker: WorkerId, stats: WorkerStats },
+    /// FT log record for a control message handled mid-stream (§2.6.2).
+    Log(crate::engine::fault::LogRecord),
+    /// The worker produced its first output tuple (first-response-time
+    /// instrumentation for Maestro experiments, §4.5.3).
+    FirstOutput { worker: WorkerId, at: Instant },
+}

@@ -1,0 +1,33 @@
+//! The Amber engine (Ch. 2): a parallel, pipelined dataflow engine with
+//! a fast control-message path.
+//!
+//! An input workflow is a DAG of physical operators ([`dag::Workflow`]).
+//! Each operator is translated to `n` **worker** actors (OS threads with
+//! mailboxes); a **coordinator** (the paper's controller + principal
+//! actors, colocated per fault-tolerance assumption A1) deploys the
+//! actor DAG, routes control messages, evaluates global breakpoints, and
+//! drives Reshape and Maestro.
+//!
+//! Message model (§2.3.3 / §2.4.2): data flows in batched
+//! [`message::DataEvent`]s over bounded FIFO channels (congestion
+//! control); control flows through a separate always-responsive
+//! [`channel::ControlInbox`] whose `pending` flag the worker's
+//! data-processing loop checks **between tuples** — the paper's
+//! per-iteration `Paused`-variable check that yields sub-second pause
+//! latency regardless of batch size.
+
+pub mod message;
+pub mod channel;
+pub mod partitioner;
+pub mod operator;
+pub mod dag;
+pub mod worker;
+pub mod breakpoint;
+pub mod controller;
+pub mod fault;
+
+pub use controller::{Execution, ExecSummary};
+pub use dag::{Edge, OpSpec, Workflow};
+pub use message::{ControlMessage, DataEvent, WorkerEvent, WorkerId};
+pub use operator::{Emitter, OpState, Operator};
+pub use partitioner::{MitigationRoute, PartitionScheme, ShareMode};

@@ -1,0 +1,202 @@
+//! The physical-operator interface and its runtime context.
+//!
+//! Operators follow the paper's *iteration model* (§2.4.3): the worker
+//! loop feeds tuples one at a time into [`Operator::process`], which
+//! emits zero or more output tuples through the [`Emitter`]. Because
+//! control is checked *between* iterations, any operator written against
+//! this trait automatically supports sub-second pause, conditional
+//! breakpoints and runtime modification.
+//!
+//! State management: operators expose their keyed state ([`OpState`],
+//! §3.5.1) for (a) quiesced checkpointing (§2.6.2) and (b) Reshape's
+//! state migration — extraction of a key subset for SBK, or full
+//! replication for SBR on immutable-state phases.
+
+use crate::tuple::Tuple;
+use std::collections::HashMap;
+
+/// Serializable operator state: the "keyed state" of §3.5.1, a mapping
+/// `scope → val`. Scopes are stable key hashes; values are tuple lists
+/// (hash tables, sorted runs) or aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct OpState {
+    /// Keyed tuple lists (e.g. build-side rows per join key, sorted run
+    /// per range).
+    pub keyed_tuples: HashMap<u64, Vec<Tuple>>,
+    /// Keyed scalar aggregates (e.g. running group-by sums/counts).
+    pub keyed_aggs: HashMap<u64, Vec<f64>>,
+    /// Opaque counters (operator-specific).
+    pub counters: HashMap<String, i64>,
+}
+
+impl OpState {
+    pub fn is_empty(&self) -> bool {
+        self.keyed_tuples.is_empty() && self.keyed_aggs.is_empty() && self.counters.is_empty()
+    }
+
+    /// Approximate size in tuples (for state-migration-time modeling).
+    pub fn size_tuples(&self) -> usize {
+        self.keyed_tuples.values().map(Vec::len).sum::<usize>() + self.keyed_aggs.len()
+    }
+
+    /// Merge another state into this one (helper receiving migrated
+    /// state; scattered-state merge for sort is operator-specific and
+    /// overrides this).
+    pub fn merge(&mut self, other: OpState) {
+        for (k, mut v) in other.keyed_tuples {
+            self.keyed_tuples.entry(k).or_default().append(&mut v);
+        }
+        for (k, v) in other.keyed_aggs {
+            let e = self.keyed_aggs.entry(k).or_insert_with(|| vec![0.0; v.len()]);
+            for (a, b) in e.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        for (k, v) in other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+    }
+}
+
+/// A runtime patch to an operator's parameters (§2.4.4: "change the
+/// logic of an operator, e.g., by modifying the keywords in
+/// KeywordSearch" / "the constant in a selection predicate").
+#[derive(Clone, Debug)]
+pub struct OpPatch {
+    /// Parameter name understood by the operator.
+    pub param: String,
+    /// New value, operator-parsed.
+    pub value: String,
+}
+
+/// Output collector handed to operators. The worker implements this and
+/// routes emitted tuples through its per-edge partitioners, evaluates
+/// local breakpoints, and maintains produced-counters for global
+/// breakpoints.
+pub trait Emitter {
+    /// Emit one output tuple.
+    fn emit(&mut self, t: Tuple);
+}
+
+/// A simple vector-backed emitter for unit tests.
+#[derive(Default)]
+pub struct VecEmitter(pub Vec<Tuple>);
+
+impl Emitter for VecEmitter {
+    fn emit(&mut self, t: Tuple) {
+        self.0.push(t);
+    }
+}
+
+/// A physical operator instance, owned by one worker.
+pub trait Operator: Send {
+    /// A short name for logs/stats.
+    fn name(&self) -> &str;
+
+    /// Process one input tuple from `port`.
+    fn process(&mut self, t: Tuple, port: usize, out: &mut dyn Emitter);
+
+    /// All upstream senders on `port` reached EOF. Blocking operators
+    /// (sort, group-by second layer, hash-join build) act here.
+    fn finish_port(&mut self, _port: usize, _out: &mut dyn Emitter) {}
+
+    /// All input ports reached EOF; flush any remaining output.
+    fn finish(&mut self, _out: &mut dyn Emitter) {}
+
+    /// Number of input ports.
+    fn num_ports(&self) -> usize {
+        1
+    }
+
+    /// Which ports are *blocking* (§4.2: no output until the port's
+    /// entire input is processed). Maestro reads this off the operator.
+    fn blocking_ports(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Snapshot the full operator state (checkpointing).
+    fn snapshot(&self) -> OpState {
+        OpState::default()
+    }
+
+    /// Cheap state-size estimate in tuples (stats without cloning).
+    fn state_size(&self) -> usize {
+        0
+    }
+
+    /// Restore from a snapshot (recovery).
+    fn restore(&mut self, _s: OpState) {}
+
+    /// Extract state for the given key hashes (SBK migration) or all
+    /// keys (`None`; SBR replication). If `replicate` the state is
+    /// copied, not removed — immutable-state operators replicate
+    /// (Fig. 3.10 branch (a)); mutable-state operators move.
+    fn extract_state(&mut self, _keys: Option<&[u64]>, _replicate: bool) -> OpState {
+        OpState::default()
+    }
+
+    /// Merge migrated state received from a skewed worker.
+    fn merge_state(&mut self, _s: OpState) {}
+
+    /// Whether this operator's *current phase* has mutable state
+    /// (Table 3.1). The engine consults this to decide the migration
+    /// protocol.
+    fn state_mutable(&self) -> bool {
+        false
+    }
+
+    /// Scattered-state parts held for *other* workers (§3.5.4): pairs
+    /// of (owner worker index, state). Called at EOF when the operator
+    /// runs under SBR mitigation; the engine ships each part to its
+    /// owner before `finish` (the Fig. 3.11(e) END-marker merge).
+    fn scattered_parts(&mut self) -> Vec<(u64, OpState)> {
+        Vec::new()
+    }
+
+    /// Apply a runtime parameter patch; `Err` if unknown.
+    fn modify(&mut self, patch: &OpPatch) -> Result<(), String> {
+        Err(format!("{}: unknown parameter {}", self.name(), patch.param))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuple::Value;
+
+    #[test]
+    fn opstate_merge_appends_tuples() {
+        let mut a = OpState::default();
+        a.keyed_tuples
+            .insert(1, vec![Tuple::new(vec![Value::Int(1)])]);
+        let mut b = OpState::default();
+        b.keyed_tuples
+            .insert(1, vec![Tuple::new(vec![Value::Int(2)])]);
+        b.keyed_tuples
+            .insert(2, vec![Tuple::new(vec![Value::Int(3)])]);
+        a.merge(b);
+        assert_eq!(a.keyed_tuples[&1].len(), 2);
+        assert_eq!(a.keyed_tuples[&2].len(), 1);
+        assert_eq!(a.size_tuples(), 3);
+    }
+
+    #[test]
+    fn opstate_merge_sums_aggs() {
+        let mut a = OpState::default();
+        a.keyed_aggs.insert(7, vec![10.0, 2.0]);
+        let mut b = OpState::default();
+        b.keyed_aggs.insert(7, vec![5.0, 1.0]);
+        a.merge(b);
+        assert_eq!(a.keyed_aggs[&7], vec![15.0, 3.0]);
+    }
+
+    #[test]
+    fn opstate_merge_counters() {
+        let mut a = OpState::default();
+        a.counters.insert("n".into(), 3);
+        let mut b = OpState::default();
+        b.counters.insert("n".into(), 4);
+        a.merge(b);
+        assert_eq!(a.counters["n"], 7);
+    }
+}

@@ -1,0 +1,1263 @@
+//! The worker actor (§2.4): processes one data partition, forwards
+//! results in batches, and reacts to control messages **between
+//! tuples**.
+//!
+//! The paper splits each Orleans actor into a main thread (mailbox) and
+//! a data-processing thread sharing a `Paused` flag checked after every
+//! iteration (Fig. 2.4). Our worker is one OS thread with two mailboxes
+//! — a bounded data channel and an always-responsive
+//! [`ControlInbox`](crate::engine::channel::ControlInbox) — and the DP
+//! loop polls the inbox's atomic `pending` flag per tuple, which is the
+//! same structure with one fewer thread.
+//!
+//! Responsibilities:
+//! * pausing with resumption-index state save (§2.4.3) and responding
+//!   to messages after pausing (§2.4.4);
+//! * local conditional breakpoints (§2.5.2) and global-breakpoint
+//!   target counting (§2.5.3);
+//! * output batching + partitioning with Reshape's mitigation overlay;
+//! * state migration send/receive (§3.2.2, §3.5);
+//! * control-replay logging and replay for fault tolerance (§2.6.2);
+//! * first-output timestamps (Maestro first-response-time metric).
+
+use crate::engine::channel::{DataSender, Mailbox};
+use crate::engine::fault::{LogRecord, ReplayPos, WorkerSnapshot};
+use crate::engine::message::{
+    BreakpointTarget, ControlMessage, DataEvent, DataMessage, LocalPredicate, WorkerEvent,
+    WorkerId, WorkerStats,
+};
+use crate::engine::operator::{Emitter, Operator};
+use crate::engine::partitioner::Partitioner;
+use crate::tuple::Tuple;
+use crate::workloads::TupleSource;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// One outgoing edge of a worker: partitioner + per-destination senders
+/// and output buffers.
+pub struct OutputEdge {
+    /// DAG index of the destination operator (route updates address it).
+    pub target_op: usize,
+    /// Destination input port.
+    pub port: usize,
+    pub partitioner: Partitioner,
+    pub senders: Vec<DataSender>,
+    buffers: Vec<Vec<Tuple>>,
+    seqs: Vec<u64>,
+}
+
+impl OutputEdge {
+    pub fn new(
+        target_op: usize,
+        port: usize,
+        partitioner: Partitioner,
+        senders: Vec<DataSender>,
+    ) -> OutputEdge {
+        let n = senders.len();
+        OutputEdge {
+            target_op,
+            port,
+            partitioner,
+            senders,
+            buffers: (0..n).map(|_| Vec::new()).collect(),
+            seqs: vec![0; n],
+        }
+    }
+}
+
+/// Everything a worker thread needs; built by the controller at deploy
+/// time.
+pub struct WorkerContext {
+    pub id: WorkerId,
+    pub mailbox: Mailbox,
+    pub event_tx: Sender<WorkerEvent>,
+    pub outputs: Vec<OutputEdge>,
+    /// Per input port: number of upstream senders (EOF accounting).
+    pub upstream_counts: Vec<usize>,
+    /// Data senders to sibling workers of the same operator (state
+    /// migration); index = worker idx.
+    pub peers: Vec<DataSender>,
+    /// Partitioning-key field per input port (None for keyless
+    /// schemes) — used for the optional per-key workload distribution.
+    pub port_key_fields: Vec<Option<usize>>,
+    /// For source operators: the tuple source this worker drives.
+    pub source: Option<Box<dyn TupleSource>>,
+    /// Source workers wait for `StartSource` before emitting when
+    /// false (Maestro region activation).
+    pub source_autostart: bool,
+    /// Tuples per output batch.
+    pub batch_size: usize,
+    /// Check the control flag every N tuples (1 = paper's per-iteration
+    /// check).
+    pub ctrl_check_interval: usize,
+    /// Log control messages for fault tolerance.
+    pub ft_log: bool,
+    /// Restore from this snapshot (recovery).
+    pub snapshot: Option<WorkerSnapshot>,
+    /// Scattered-state EOF peer barrier (§3.5.4): at all-ports-EOF ship
+    /// foreign runs to their owners, then wait for every sibling's
+    /// `PeerEof` before finishing.
+    pub scatter_merge: bool,
+}
+
+/// Why the worker is paused (it can be paused for several reasons at
+/// once; it resumes only when all causes are cleared).
+#[derive(Debug, Default)]
+struct PauseState {
+    by_user: bool,
+    by_local_bp: bool,
+    /// Paused by reaching a global-breakpoint target / inquiry.
+    by_target: bool,
+}
+
+impl PauseState {
+    fn any(&self) -> bool {
+        self.by_user || self.by_local_bp || self.by_target
+    }
+}
+
+/// Global-breakpoint counting state (one active target at a time per
+/// worker; the coordinator serializes assignments per breakpoint id).
+#[derive(Debug, Default)]
+struct TargetState {
+    id: u64,
+    /// Remaining COUNT/SUM amount; `None` = no active target.
+    target: Option<f64>,
+    sum_field: Option<usize>,
+    /// Amount produced since the last assignment.
+    produced_since: f64,
+}
+
+struct OutBox {
+    id: WorkerId,
+    edges: Vec<OutputEdge>,
+    batch_size: usize,
+    produced: u64,
+    local_bp: Option<LocalPredicate>,
+    bp_hit: Option<Tuple>,
+    target: TargetState,
+    target_reached: bool,
+    first_output_sent: bool,
+    event_tx: Sender<WorkerEvent>,
+    dead: bool,
+}
+
+impl OutBox {
+    /// Flush buffer `d` of edge `e`.
+    fn flush_one(&mut self, e: usize, d: usize) {
+        let edge = &mut self.edges[e];
+        if edge.buffers[d].is_empty() {
+            return;
+        }
+        // Swap in a preallocated buffer (perf: mem::take resets the
+        // capacity to zero, forcing a realloc ladder every batch).
+        let batch = std::mem::replace(
+            &mut edge.buffers[d],
+            Vec::with_capacity(self.batch_size),
+        );
+        let msg = DataMessage {
+            from: self.id,
+            port: edge.port,
+            seq: edge.seqs[d],
+            batch,
+        };
+        edge.seqs[d] += 1;
+        if edge.senders[d].send(DataEvent::Batch(msg)).is_err() {
+            // Receiver crashed; the whole execution is being torn down.
+            self.dead = true;
+        }
+    }
+
+    /// Flush every non-empty buffer (pause points, EOF).
+    fn flush_all(&mut self) {
+        for e in 0..self.edges.len() {
+            for d in 0..self.edges[e].senders.len() {
+                self.flush_one(e, d);
+            }
+        }
+    }
+
+    /// Send EOF on all edges.
+    fn send_eof(&mut self) {
+        self.flush_all();
+        for edge in &self.edges {
+            for s in &edge.senders {
+                let _ = s.send(DataEvent::End { from: self.id, port: edge.port });
+            }
+        }
+    }
+
+    /// Send a partitioning-epoch marker on edge(s) targeting `op`.
+    fn send_marker(&mut self, target_op: usize, epoch: u64) {
+        for e in 0..self.edges.len() {
+            if self.edges[e].target_op != target_op {
+                continue;
+            }
+            // Flush buffered data first so the marker orders correctly.
+            for d in 0..self.edges[e].senders.len() {
+                self.flush_one(e, d);
+            }
+            let edge = &self.edges[e];
+            for s in &edge.senders {
+                let _ = s.send(DataEvent::Marker {
+                    from: self.id,
+                    port: edge.port,
+                    epoch,
+                });
+            }
+        }
+    }
+}
+
+impl Emitter for OutBox {
+    fn emit(&mut self, mut t: Tuple) {
+        self.produced += 1;
+        if !self.first_output_sent {
+            self.first_output_sent = true;
+            let _ = self.event_tx.send(WorkerEvent::FirstOutput {
+                worker: self.id,
+                at: Instant::now(),
+            });
+        }
+        // Local conditional breakpoint (§2.5.2): record the culprit
+        // tuple; the worker loop pauses after the current iteration.
+        if let Some(p) = &self.local_bp {
+            if self.bp_hit.is_none() && p(&t) {
+                self.bp_hit = Some(t.clone());
+            }
+        }
+        // Global-breakpoint target accounting (§2.5.3).
+        if let Some(remaining) = self.target.target {
+            let amount = match self.target.sum_field {
+                None => 1.0,
+                Some(f) => t.get(f).as_float().unwrap_or(0.0),
+            };
+            self.target.produced_since += amount;
+            if self.target.produced_since >= remaining {
+                self.target_reached = true;
+            }
+        }
+        // Route and buffer. Single-edge unicast (the common case)
+        // moves the tuple; fan-out clones.
+        let n_edges = self.edges.len();
+        for e in 0..n_edges {
+            let last_edge = e + 1 == n_edges;
+            let (base, dest) = self.edges[e].partitioner.route_with_base(&t);
+            if dest == usize::MAX {
+                // Broadcast.
+                for d in 0..self.edges[e].senders.len() {
+                    self.edges[e].buffers[d].push(t.clone());
+                    if self.edges[e].buffers[d].len() >= self.batch_size {
+                        self.flush_one(e, d);
+                    }
+                }
+            } else {
+                // Track routed-input accounting on the receiver gauges:
+                // σ_w ("total input received", §3.4.1) on the final
+                // destination, and the natural share on the base one.
+                self.edges[e].senders[dest]
+                    .gauges
+                    .received
+                    .fetch_add(1, Ordering::Relaxed);
+                self.edges[e].senders[base]
+                    .gauges
+                    .base_received
+                    .fetch_add(1, Ordering::Relaxed);
+                if last_edge {
+                    let moved = std::mem::replace(&mut t, Tuple { values: Box::new([]) });
+                    self.edges[e].buffers[dest].push(moved);
+                } else {
+                    self.edges[e].buffers[dest].push(t.clone());
+                }
+                if self.edges[e].buffers[dest].len() >= self.batch_size {
+                    self.flush_one(e, dest);
+                }
+            }
+        }
+    }
+}
+
+/// The worker thread entry point.
+pub fn run_worker(ctx: WorkerContext, op: Box<dyn Operator>) {
+    Worker::new(ctx, op).run();
+}
+
+struct Worker {
+    id: WorkerId,
+    mailbox: Mailbox,
+    event_tx: Sender<WorkerEvent>,
+    out: OutBox,
+    op: Box<dyn Operator>,
+    peers: Vec<DataSender>,
+    port_key_fields: Vec<Option<usize>>,
+    source: Option<Box<dyn TupleSource>>,
+    source_started: bool,
+    batch_size: usize,
+    ctrl_check_interval: usize,
+    ft_log: bool,
+
+    pause: PauseState,
+    /// Unprocessed data events stashed while paused.
+    stash: VecDeque<DataEvent>,
+    /// The partially processed batch + resumption index (§2.4.3).
+    current: Option<(DataMessage, usize)>,
+    /// EOFs seen per port.
+    eofs_seen: Vec<usize>,
+    upstream_counts: Vec<usize>,
+    ports_done: Vec<bool>,
+    finished: bool,
+    /// Peer-barrier state: true while waiting for sibling PeerEofs.
+    awaiting_peers: bool,
+    /// PeerEofs received so far (siblings can finish before we do).
+    peer_eofs_seen: usize,
+    scatter_merge: bool,
+    processed: u64,
+    /// Data messages dequeued so far (replay position base).
+    msg_count: u64,
+    /// Pending replay records sorted by position (recovery).
+    replay: VecDeque<LogRecord>,
+    /// Live control messages held back until replay completes (§2.6.2:
+    /// "the coordinator holds new control messages for each recreated
+    /// worker until the worker has replayed all its control-replay log
+    /// records" — enforced worker-side here).
+    held_ctrl: VecDeque<ControlMessage>,
+    /// Replay-position alignment after recovery (see
+    /// [`WorkerSnapshot::resume_offset`]).
+    resume_msg_count: u64,
+    resume_offset: usize,
+    /// Markers seen per epoch (mutable-state migration sync, §3.5.3).
+    marker_counts: std::collections::HashMap<u64, usize>,
+    busy_ns: u64,
+    dead: bool,
+}
+
+impl Worker {
+    fn new(ctx: WorkerContext, op: Box<dyn Operator>) -> Worker {
+        let ports = ctx.upstream_counts.len();
+        let mut w = Worker {
+            id: ctx.id,
+            out: OutBox {
+                id: ctx.id,
+                edges: ctx.outputs,
+                batch_size: ctx.batch_size,
+                produced: 0,
+                local_bp: None,
+                bp_hit: None,
+                target: TargetState::default(),
+                target_reached: false,
+                first_output_sent: false,
+                event_tx: ctx.event_tx.clone(),
+                dead: false,
+            },
+            mailbox: ctx.mailbox,
+            event_tx: ctx.event_tx,
+            op,
+            peers: ctx.peers,
+            port_key_fields: ctx.port_key_fields,
+            source: ctx.source,
+            source_started: ctx.source_autostart,
+            batch_size: ctx.batch_size,
+            ctrl_check_interval: ctx.ctrl_check_interval.max(1),
+            ft_log: ctx.ft_log,
+            pause: PauseState::default(),
+            stash: VecDeque::new(),
+            current: None,
+            eofs_seen: vec![0; ports],
+            upstream_counts: ctx.upstream_counts,
+            ports_done: vec![false; ports],
+            finished: false,
+            awaiting_peers: false,
+            peer_eofs_seen: 0,
+            scatter_merge: ctx.scatter_merge,
+            processed: 0,
+            msg_count: 0,
+            replay: VecDeque::new(),
+            held_ctrl: VecDeque::new(),
+            resume_msg_count: u64::MAX,
+            resume_offset: 0,
+            marker_counts: std::collections::HashMap::new(),
+            busy_ns: 0,
+            dead: false,
+        };
+        if let Some(snap) = ctx.snapshot {
+            w.restore(snap);
+        }
+        w
+    }
+
+    fn restore(&mut self, snap: WorkerSnapshot) {
+        self.op.restore(snap.op_state);
+        for ev in snap.pending {
+            self.stash.push_back(ev);
+        }
+        if let (Some(src), Some(pos)) = (self.source.as_mut(), snap.source_pos) {
+            src.seek(pos);
+        }
+        self.eofs_seen = if snap.eofs_seen.is_empty() {
+            vec![0; self.upstream_counts.len()]
+        } else {
+            snap.eofs_seen
+        };
+        self.msg_count = snap.msg_count;
+        // The resumed batch (if any) will be message `msg_count + 1`.
+        self.resume_msg_count = snap.msg_count + 1;
+        self.resume_offset = snap.resume_offset;
+        self.processed = snap.processed;
+        self.out.produced = snap.produced;
+        self.mailbox
+            .gauges
+            .processed
+            .store(snap.processed as i64, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> WorkerStats {
+        WorkerStats {
+            processed: self.processed,
+            produced: self.out.produced,
+            queued: self.mailbox.gauges.queued.load(Ordering::Relaxed),
+            state_tuples: self.op.state_size() as u64,
+        }
+    }
+
+    fn replay_pos(&self) -> ReplayPos {
+        // Source workers: position = tuples generated (deterministic
+        // across recovery since sources replay identically).
+        if let Some(src) = self.source.as_ref() {
+            return ReplayPos { msg_count: 0, tuple_idx: src.position() };
+        }
+        let mut idx = self.current.as_ref().map(|(_, i)| *i).unwrap_or(0);
+        // Post-recovery alignment: within the resumed batch, recovered
+        // index i corresponds to original index i + resume_offset.
+        if self.msg_count == self.resume_msg_count {
+            idx += self.resume_offset;
+        }
+        ReplayPos { msg_count: self.msg_count, tuple_idx: idx }
+    }
+
+    /// Apply one control message. Returns false if the worker must die.
+    fn handle_control(&mut self, msg: ControlMessage, from_replay: bool) -> bool {
+        // FT logging (§2.6.2): record message + position. Replayed
+        // messages are not re-logged.
+        if self.ft_log && !from_replay && self.should_log(&msg) {
+            let _ = self.event_tx.send(WorkerEvent::Log(LogRecord {
+                worker: self.id,
+                ctrl: msg.clone(),
+                pos: self.replay_pos(),
+            }));
+        }
+        match msg {
+            ControlMessage::Pause => {
+                self.pause.by_user = true;
+                // Flush buffered output before acking: a quiesced
+                // checkpoint must find every produced tuple either in a
+                // receiver's channel/stash or in its state — partial
+                // output batches held here would be lost on recovery.
+                self.out.flush_all();
+                let _ = self.event_tx.send(WorkerEvent::PausedAck {
+                    worker: self.id,
+                    stats: self.stats(),
+                });
+            }
+            ControlMessage::Resume => {
+                self.pause = PauseState::default();
+                let _ = self
+                    .event_tx
+                    .send(WorkerEvent::ResumedAck { worker: self.id });
+            }
+            ControlMessage::QueryStats => {
+                let _ = self.event_tx.send(WorkerEvent::Stats {
+                    worker: self.id,
+                    stats: self.stats(),
+                });
+            }
+            ControlMessage::SetLocalBreakpoint(p) => {
+                self.out.local_bp = p;
+                self.out.bp_hit = None;
+                self.pause.by_local_bp = false;
+            }
+            ControlMessage::AssignTarget(BreakpointTarget { id, amount, sum_field }) => {
+                self.out.target = TargetState {
+                    id,
+                    target: Some(amount),
+                    sum_field,
+                    produced_since: 0.0,
+                };
+                self.out.target_reached = false;
+                // A new assignment resumes a target-paused worker
+                // (t4/t8 in Fig. 2.5).
+                self.pause.by_target = false;
+            }
+            ControlMessage::Inquire { id } => {
+                // Pause self and report progress (t2→t3 in Fig. 2.5).
+                self.pause.by_target = true;
+                let produced = self.out.target.produced_since;
+                self.out.target.target = None;
+                let _ = self.event_tx.send(WorkerEvent::InquiryReport {
+                    worker: self.id,
+                    id,
+                    produced,
+                });
+            }
+            ControlMessage::ModifyOperator(patch) => {
+                // Best effort; errors surface in stats/logs not panics.
+                let _ = self.op.modify(&patch);
+            }
+            ControlMessage::UpdateRoute { target_op, route } => {
+                let epoch = route.epoch;
+                for e in &mut self.out.edges {
+                    if e.target_op == target_op {
+                        e.partitioner.set_route(route.clone());
+                    }
+                }
+                self.out.send_marker(target_op, epoch);
+            }
+            ControlMessage::SendState { to, keys, transfer_id, replicate } => {
+                let state = self.op.extract_state(keys.as_deref(), replicate);
+                if let Some(peer) = self.peers.get(to.idx) {
+                    let _ = peer.send(DataEvent::State {
+                        from: self.id,
+                        state,
+                        transfer_id,
+                    });
+                }
+            }
+            ControlMessage::TakeSnapshot => {
+                let snap = self.make_snapshot();
+                let _ = self
+                    .event_tx
+                    .send(WorkerEvent::Snapshot { worker: self.id, snap });
+            }
+            ControlMessage::Die => {
+                return false;
+            }
+            ControlMessage::StartSource => {
+                self.source_started = true;
+            }
+            ControlMessage::ReplayLog(records) => {
+                for r in records {
+                    self.replay.push_back(r);
+                }
+            }
+        }
+        true
+    }
+
+    /// Which control messages are logged for replay (state-changing
+    /// ones; pure queries are not).
+    fn should_log(&self, msg: &ControlMessage) -> bool {
+        !matches!(
+            msg,
+            ControlMessage::QueryStats
+                | ControlMessage::TakeSnapshot
+                | ControlMessage::ReplayLog(_)
+                | ControlMessage::Die
+        )
+    }
+
+    fn make_snapshot(&mut self) -> WorkerSnapshot {
+        // Drain the channel into the stash so the snapshot captures all
+        // in-flight input (senders are paused → the channel quiesces).
+        while let Ok(ev) = self.mailbox.data.try_recv() {
+            self.stash.push_back(ev);
+        }
+        let mut pending: Vec<DataEvent> = Vec::new();
+        // Remainder of the partially processed batch first
+        // (resumption-index semantics). The recovered run re-dequeues
+        // it, so count it as not-yet-dequeued and record the tuple
+        // offset for exact replay-position alignment (Fig. 2.6).
+        let mut msg_count = self.msg_count;
+        let mut resume_offset = 0usize;
+        if let Some((msg, idx)) = &self.current {
+            let mut m = msg.clone();
+            m.batch = m.batch[*idx..].to_vec();
+            resume_offset = *idx;
+            msg_count = msg_count.saturating_sub(1);
+            pending.push(DataEvent::Batch(m));
+        }
+        pending.extend(self.stash.iter().cloned());
+        WorkerSnapshot {
+            op_state: self.op.snapshot(),
+            pending,
+            source_pos: self.source.as_ref().map(|s| s.position()),
+            eofs_seen: self.eofs_seen.clone(),
+            msg_count,
+            resume_offset,
+            processed: self.processed,
+            produced: self.out.produced,
+        }
+    }
+
+    /// Drain due control messages; returns false if the worker must die.
+    /// While replay records are pending, live control (except `Die` and
+    /// further `ReplayLog`s) is held back and delivered after replay.
+    fn drain_control(&mut self) -> bool {
+        while let Some(msg) = self.mailbox.control.try_recv() {
+            if !self.replay.is_empty()
+                && !matches!(msg, ControlMessage::Die | ControlMessage::ReplayLog(_))
+            {
+                self.held_ctrl.push_back(msg);
+                continue;
+            }
+            if !self.handle_control(msg, false) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Check replay records due at the current position and apply them;
+    /// once replay completes, release held live control.
+    fn apply_due_replays(&mut self) {
+        while let Some(front) = self.replay.front() {
+            if front.pos <= self.replay_pos() {
+                let rec = self.replay.pop_front().unwrap();
+                self.handle_control(rec.ctrl, true);
+            } else {
+                break;
+            }
+        }
+        if self.replay.is_empty() {
+            while let Some(msg) = self.held_ctrl.pop_front() {
+                if !self.handle_control(msg, false) {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Stream ended: force-apply any replay records the recovered run
+    /// never reached (degenerate positions), then release held control.
+    fn finish_replays(&mut self) {
+        while let Some(rec) = self.replay.pop_front() {
+            self.handle_control(rec.ctrl, true);
+        }
+        while let Some(msg) = self.held_ctrl.pop_front() {
+            if !self.handle_control(msg, false) {
+                self.dead = true;
+                return;
+            }
+        }
+    }
+
+    /// After a breakpoint hit or target reached inside process(), pause
+    /// self and notify.
+    fn post_tuple_checks(&mut self) {
+        if let Some(t) = self.out.bp_hit.take() {
+            self.pause.by_local_bp = true;
+            self.out.flush_all();
+            let _ = self.event_tx.send(WorkerEvent::LocalBreakpointHit {
+                worker: self.id,
+                tuple: t,
+            });
+        }
+        if self.out.target_reached {
+            self.out.target_reached = false;
+            let id = self.out.target.id;
+            let produced = self.out.target.produced_since;
+            self.out.target.target = None;
+            self.pause.by_target = true;
+            self.out.flush_all();
+            let _ = self.event_tx.send(WorkerEvent::TargetReached {
+                worker: self.id,
+                id,
+                produced,
+            });
+        }
+    }
+
+    /// Process tuples of the current batch until it is exhausted or an
+    /// interruption (pause/bp) occurs.
+    fn process_current(&mut self) {
+        let Some((mut msg, mut idx)) = self.current.take() else {
+            return;
+        };
+        let port = msg.port;
+        let t0 = Instant::now();
+        let mut since_check = 0usize;
+        while idx < msg.batch.len() {
+            // The per-iteration control check (§2.4.3): a single atomic
+            // load unless something is pending.
+            since_check += 1;
+            if since_check >= self.ctrl_check_interval {
+                since_check = 0;
+                if self.mailbox.control.maybe_pending() {
+                    self.current = Some((msg.clone(), idx));
+                    if !self.drain_control() {
+                        self.dead = true;
+                        return;
+                    }
+                    let (m, i) = self.current.take().unwrap();
+                    if self.pause.any() || self.dead {
+                        // Save resumption index and exit to outer loop.
+                        self.current = Some((m, i));
+                        self.busy_ns += t0.elapsed().as_nanos() as u64;
+                        self.update_busy_gauge();
+                        return;
+                    }
+                }
+            }
+            // Take ownership instead of cloning (perf: a Tuple clone
+            // allocates a boxed slice per tuple); the slot before the
+            // resumption index is never re-read — pause snapshots copy
+            // only `batch[idx..]`.
+            let t = std::mem::replace(
+                &mut msg.batch[idx],
+                Tuple { values: Box::new([]) },
+            );
+            idx += 1;
+            // Optional per-key workload distribution (enabled only when
+            // SBK-style mitigation needs it).
+            if self.mailbox.gauges.track_keys.load(Ordering::Relaxed) {
+                if let Some(Some(f)) = self.port_key_fields.get(port) {
+                    let h = t.get(*f).stable_hash();
+                    *self
+                        .mailbox
+                        .gauges
+                        .key_counts
+                        .lock()
+                        .unwrap()
+                        .entry(h)
+                        .or_insert(0) += 1;
+                }
+            }
+            self.op.process(t, port, &mut self.out);
+            self.processed += 1;
+            // queued is the Reshape workload metric — per-tuple
+            // freshness matters; the other gauges update per batch.
+            self.mailbox.gauges.queued.fetch_sub(1, Ordering::Relaxed);
+            if self.out.dead {
+                self.dead = true;
+                return;
+            }
+            self.post_tuple_checks();
+            if self.pause.any() {
+                if idx < msg.batch.len() {
+                    self.current = Some((msg, idx));
+                }
+                self.busy_ns += t0.elapsed().as_nanos() as u64;
+                self.update_busy_gauge();
+                return;
+            }
+            // Replay records due mid-batch.
+            if !self.replay.is_empty() {
+                self.current = Some((msg.clone(), idx));
+                self.apply_due_replays();
+                self.current.take();
+                if self.pause.any() {
+                    self.current = Some((msg, idx));
+                    self.busy_ns += t0.elapsed().as_nanos() as u64;
+                    self.update_busy_gauge();
+                    return;
+                }
+            }
+        }
+        self.busy_ns += t0.elapsed().as_nanos() as u64;
+        self.update_busy_gauge();
+    }
+
+    fn update_busy_gauge(&self) {
+        self.mailbox
+            .gauges
+            .busy_ns
+            .store(self.busy_ns as i64, Ordering::Relaxed);
+        self.mailbox
+            .gauges
+            .processed
+            .store(self.processed as i64, Ordering::Relaxed);
+        self.mailbox
+            .gauges
+            .produced
+            .store(self.out.produced as i64, Ordering::Relaxed);
+    }
+
+    /// Handle one dequeued data event.
+    fn handle_data_event(&mut self, ev: DataEvent) {
+        match ev {
+            DataEvent::Batch(msg) => {
+                self.msg_count += 1;
+                self.current = Some((msg, 0));
+                self.apply_due_replays();
+            }
+            DataEvent::End { port, .. } => {
+                self.eofs_seen[port] += 1;
+                if self.eofs_seen[port] >= self.upstream_counts[port]
+                    && !self.ports_done[port]
+                {
+                    self.ports_done[port] = true;
+                    self.op.finish_port(port, &mut self.out);
+                    let _ = self.event_tx.send(WorkerEvent::PortCompleted {
+                        worker: self.id,
+                        port,
+                    });
+                    if self.ports_done.iter().all(|&d| d) {
+                        self.finish();
+                    }
+                }
+            }
+            DataEvent::Marker { epoch, port, .. } => {
+                let c = self.marker_counts.entry(epoch).or_insert(0);
+                *c += 1;
+                let expected: usize = self.upstream_counts[port];
+                if *c >= expected {
+                    // All upstream senders switched epochs; safe point
+                    // for mutable-state migration (§3.5.3).
+                    let _ = self.event_tx.send(WorkerEvent::MarkerAligned {
+                        worker: self.id,
+                        epoch,
+                    });
+                }
+            }
+            DataEvent::State { state, transfer_id, .. } => {
+                self.op.merge_state(state);
+                let _ = self.event_tx.send(WorkerEvent::StateApplied {
+                    worker: self.id,
+                    transfer_id,
+                });
+            }
+            DataEvent::PeerEof { .. } => {
+                // Siblings may finish before we enter the barrier;
+                // count every PeerEof regardless.
+                self.peer_eofs_seen += 1;
+                if self.awaiting_peers && self.peer_eofs_seen >= self.peers.len() - 1 {
+                    self.awaiting_peers = false;
+                    self.finish_now();
+                }
+            }
+        }
+    }
+
+    /// All ports done (or source exhausted): either finish directly or
+    /// enter the scattered-state peer barrier first (§3.5.4).
+    fn finish(&mut self) {
+        if self.finished || self.awaiting_peers {
+            return;
+        }
+        if self.scatter_merge && self.peers.len() > 1 {
+            // Ship foreign runs to their owners (Fig. 3.11(e,f)), then
+            // announce our EOF to all siblings.
+            for (owner, state) in self.op.scattered_parts() {
+                let owner = owner as usize;
+                if owner != self.id.idx {
+                    if let Some(p) = self.peers.get(owner) {
+                        let _ = p.send(DataEvent::State {
+                            from: self.id,
+                            state,
+                            transfer_id: u64::MAX, // barrier transfer
+                        });
+                    }
+                }
+            }
+            for (i, p) in self.peers.iter().enumerate() {
+                if i != self.id.idx {
+                    let _ = p.send(DataEvent::PeerEof { from: self.id });
+                }
+            }
+            if self.peer_eofs_seen >= self.peers.len() - 1 {
+                self.finish_now();
+            } else {
+                self.awaiting_peers = true;
+            }
+            return;
+        }
+        self.finish_now();
+    }
+
+    /// Flush + EOF + report.
+    fn finish_now(&mut self) {
+        if self.finished {
+            return;
+        }
+        // Degenerate replay records (positions past EOF) apply now.
+        if !self.replay.is_empty() || !self.held_ctrl.is_empty() {
+            self.finish_replays();
+        }
+        self.finished = true;
+        self.op.finish(&mut self.out);
+        self.out.send_eof();
+        let _ = self.event_tx.send(WorkerEvent::Completed {
+            worker: self.id,
+            stats: self.stats(),
+        });
+    }
+
+    /// Source-worker production step: emit up to one batch.
+    fn produce_from_source(&mut self) {
+        let t0 = Instant::now();
+        let mut since_check = 0usize;
+        for _ in 0..self.batch_size {
+            since_check += 1;
+            if since_check >= self.ctrl_check_interval
+                && self.mailbox.control.maybe_pending()
+            {
+                break;
+            }
+            // Replayed control messages due at this source position.
+            if !self.replay.is_empty() {
+                self.apply_due_replays();
+                if self.pause.any() || self.dead {
+                    break;
+                }
+            }
+            let Some(src) = self.source.as_mut() else { break };
+            match src.next_tuple() {
+                Some(t) => {
+                    self.op.process(t, 0, &mut self.out);
+                    self.processed += 1;
+                    self.mailbox
+                        .gauges
+                        .processed
+                        .fetch_add(1, Ordering::Relaxed);
+                    if self.out.dead {
+                        self.dead = true;
+                        return;
+                    }
+                    self.post_tuple_checks();
+                    if self.pause.any() {
+                        break;
+                    }
+                }
+                None => {
+                    self.busy_ns += t0.elapsed().as_nanos() as u64;
+                    self.update_busy_gauge();
+                    self.finish();
+                    return;
+                }
+            }
+        }
+        self.busy_ns += t0.elapsed().as_nanos() as u64;
+        self.update_busy_gauge();
+    }
+
+    fn run(mut self) {
+        self.mailbox
+            .gauges
+            .alive_since_ns
+            .store(0, Ordering::Relaxed);
+        loop {
+            if self.dead {
+                return;
+            }
+            if !self.drain_control() {
+                return; // Die
+            }
+            if self.pause.any() {
+                // Paused: stash incoming data, stay responsive to
+                // control (§2.4.4).
+                while let Ok(ev) = self.mailbox.data.try_recv() {
+                    self.stash.push_back(ev);
+                }
+                if let Some(msg) = self
+                    .mailbox
+                    .control
+                    .recv_timeout(Duration::from_millis(2))
+                {
+                    if !self.handle_control(msg, false) {
+                        return;
+                    }
+                }
+                continue;
+            }
+            // Resume a partially processed batch first.
+            if self.current.is_some() {
+                self.process_current();
+                continue;
+            }
+            // Then stashed events.
+            if let Some(ev) = self.stash.pop_front() {
+                self.handle_data_event(ev);
+                continue;
+            }
+            if self.finished {
+                // Remain responsive to control (stats queries) until the
+                // controller drops our control inbox; exit when all
+                // senders hung up AND controller signalled via Die, or
+                // simply exit now: completed workers park until Die.
+                match self
+                    .mailbox
+                    .control
+                    .recv_timeout(Duration::from_millis(20))
+                {
+                    Some(msg) => {
+                        if !self.handle_control(msg, false) {
+                            return;
+                        }
+                    }
+                    None => continue,
+                }
+                continue;
+            }
+            // Sources produce; non-sources receive.
+            if self.source.is_some() {
+                if self.source_started {
+                    self.produce_from_source();
+                } else {
+                    // Dormant source: wait for StartSource.
+                    if let Some(msg) = self
+                        .mailbox
+                        .control
+                        .recv_timeout(Duration::from_millis(2))
+                    {
+                        if !self.handle_control(msg, false) {
+                            return;
+                        }
+                    }
+                }
+                continue;
+            }
+            match self.mailbox.data.recv_timeout(Duration::from_millis(2)) {
+                Ok(ev) => self.handle_data_event(ev),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    // All senders gone; if EOFs were consumed we have
+                    // finished already — otherwise treat as teardown.
+                    if !self.finished {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::channel::mailbox;
+    use crate::engine::partitioner::PartitionScheme;
+    use crate::tuple::Value;
+    use std::sync::mpsc::channel;
+
+    /// Pass-through operator for worker tests.
+    struct Identity;
+    impl Operator for Identity {
+        fn name(&self) -> &str {
+            "identity"
+        }
+        fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    fn tuple(i: i64) -> Tuple {
+        Tuple::new(vec![Value::Int(i)])
+    }
+
+    /// Spin up a single worker with one downstream collector channel.
+    /// Returns (worker ctrl inbox, data sender to worker, events rx,
+    /// downstream rx, join handle).
+    fn single_worker(
+        batch_size: usize,
+    ) -> (
+        std::sync::Arc<crate::engine::channel::ControlInbox>,
+        DataSender,
+        std::sync::mpsc::Receiver<WorkerEvent>,
+        std::sync::mpsc::Receiver<DataEvent>,
+        std::thread::JoinHandle<()>,
+    ) {
+        let (in_tx, in_mb) = mailbox(64);
+        let (down_tx, down_rx) = mailbox(1024);
+        let (ev_tx, ev_rx) = channel();
+        let ctrl = in_mb.control.clone();
+        let edge = OutputEdge::new(
+            1,
+            0,
+            Partitioner::new(PartitionScheme::OneToOne, 1, 0),
+            vec![down_tx],
+        );
+        let ctx = WorkerContext {
+            id: WorkerId::new(0, 0),
+            mailbox: in_mb,
+            event_tx: ev_tx,
+            outputs: vec![edge],
+            upstream_counts: vec![1],
+            peers: vec![],
+            port_key_fields: vec![None],
+            source: None,
+            source_autostart: true,
+            batch_size,
+            ctrl_check_interval: 1,
+            ft_log: false,
+            snapshot: None,
+            scatter_merge: false,
+        };
+        let h = std::thread::spawn(move || run_worker(ctx, Box::new(Identity)));
+        (ctrl, in_tx, ev_rx, down_rx.data, h)
+    }
+
+    fn send_batch(tx: &DataSender, seq: u64, tuples: Vec<Tuple>) {
+        tx.send(DataEvent::Batch(DataMessage {
+            from: WorkerId::new(9, 0),
+            port: 0,
+            seq,
+            batch: tuples,
+        }))
+        .unwrap();
+    }
+
+    #[test]
+    fn worker_passes_data_through_and_completes() {
+        let (ctrl, tx, ev_rx, down_rx, h) = single_worker(4);
+        send_batch(&tx, 0, (0..10).map(tuple).collect());
+        tx.send(DataEvent::End { from: WorkerId::new(9, 0), port: 0 })
+            .unwrap();
+        // Collect forwarded tuples until EOF.
+        let mut got = Vec::new();
+        loop {
+            match down_rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                DataEvent::Batch(b) => got.extend(b.batch),
+                DataEvent::End { .. } => break,
+                _ => {}
+            }
+        }
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[3], tuple(3));
+        // Completed event observed (may trail the downstream EOF).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut completed = false;
+        while Instant::now() < deadline && !completed {
+            if let Ok(ev) = ev_rx.recv_timeout(Duration::from_millis(50)) {
+                completed = matches!(ev, WorkerEvent::Completed { .. });
+            }
+        }
+        assert!(completed);
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn pause_acks_and_stops_processing() {
+        let (ctrl, tx, ev_rx, down_rx, h) = single_worker(400);
+        // Big batch; pause mid-processing.
+        send_batch(&tx, 0, (0..10_000).map(tuple).collect());
+        ctrl.send(ControlMessage::Pause, Duration::ZERO);
+        // Expect a PausedAck quickly.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut acked = false;
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::PausedAck { .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                acked = true;
+                break;
+            }
+        }
+        assert!(acked, "no PausedAck");
+        // Drain whatever was produced pre-pause; then nothing more.
+        std::thread::sleep(Duration::from_millis(50));
+        while down_rx.try_recv().is_ok() {}
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(down_rx.try_recv().is_err(), "output continued after pause");
+        // Resume → completes.
+        ctrl.send(ControlMessage::Resume, Duration::ZERO);
+        tx.send(DataEvent::End { from: WorkerId::new(9, 0), port: 0 })
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut completed = false;
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::Completed { .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                completed = true;
+                break;
+            }
+        }
+        assert!(completed);
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn stats_query_works_while_paused() {
+        let (ctrl, tx, ev_rx, _down_rx, h) = single_worker(4);
+        send_batch(&tx, 0, (0..8).map(tuple).collect());
+        ctrl.send(ControlMessage::Pause, Duration::ZERO);
+        // Wait for ack.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::PausedAck { .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                break;
+            }
+        }
+        // Query stats while paused (§2.4.4).
+        ctrl.send(ControlMessage::QueryStats, Duration::ZERO);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut got_stats = false;
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::Stats { .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                got_stats = true;
+                break;
+            }
+        }
+        assert!(got_stats, "no stats reply while paused");
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn local_breakpoint_pauses_on_match() {
+        let (ctrl, tx, ev_rx, _down, h) = single_worker(400);
+        let pred: LocalPredicate =
+            std::sync::Arc::new(|t: &Tuple| t.get(0).as_int() == Some(5));
+        ctrl.send(
+            ControlMessage::SetLocalBreakpoint(Some(pred)),
+            Duration::ZERO,
+        );
+        send_batch(&tx, 0, (0..100).map(tuple).collect());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut hit = None;
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::LocalBreakpointHit { tuple: t, .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                hit = Some(t);
+                break;
+            }
+        }
+        assert_eq!(hit.unwrap().get(0).as_int(), Some(5));
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn count_target_pauses_at_amount() {
+        let (ctrl, tx, ev_rx, _down, h) = single_worker(400);
+        ctrl.send(
+            ControlMessage::AssignTarget(BreakpointTarget {
+                id: 1,
+                amount: 7.0,
+                sum_field: None,
+            }),
+            Duration::ZERO,
+        );
+        send_batch(&tx, 0, (0..100).map(tuple).collect());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut reached = None;
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::TargetReached { produced, .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                reached = Some(produced);
+                break;
+            }
+        }
+        assert_eq!(reached, Some(7.0));
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn die_terminates_without_ack() {
+        let (ctrl, _tx, ev_rx, _down, h) = single_worker(4);
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+        // No PausedAck/Completed events.
+        assert!(ev_rx.try_recv().is_err());
+    }
+}

@@ -1,0 +1,430 @@
+//! Reusable workflow definitions — the paper's experiment workflows,
+//! shared by the CLI, the examples, and the bench harnesses.
+//!
+//! | builder | paper workflow |
+//! |---|---|
+//! | [`tpch_q1`] | Ch. 2 W1 (TPC-H Q1-style: scan→filter→group-by→sort) |
+//! | [`tpch_q13`] | Ch. 2 W2 (Q13-style: customer ⋈ orders → counts) |
+//! | [`orders_sort`] | Ch. 3 W3 (range-partitioned sort on totalprice) |
+//! | [`tweet_join`] | Ch. 3 W1 (tweets ⋈ slang on location, CA-skewed) |
+//! | [`dsb_q18`] | Ch. 3 W2 (web_sales ⋈ item/date/customer, two skewed joins) |
+//! | [`synthetic_join`] | Ch. 3 W4 (distribution-shift join) |
+
+use crate::engine::partitioner::equal_width_bounds;
+use crate::engine::{OpSpec, PartitionScheme, Workflow};
+use crate::operators::basic::{Cmp, Filter};
+use crate::operators::{
+    AggKind, CollectSink, CountByKeySink, GroupByFinal, GroupByPartial, HashJoin,
+    SinkHandle, SortMerge, SortWorker,
+};
+use crate::tuple::{Tuple, Value};
+use crate::workloads::dsb::{self, WebSalesSource};
+use crate::workloads::synthetic::{self, ShiftingSource};
+use crate::workloads::tpch::{self, CustomerSource, LineitemSource, OrdersSource};
+use crate::workloads::tweets::{self, TweetSource};
+use crate::workloads::{TupleSource, VecSource};
+use std::sync::Arc;
+
+/// Handles returned with each workflow: the sink handle plus the index
+/// of the "interesting" operator (filter/join/sort — what experiments
+/// instrument).
+pub struct Flow {
+    pub workflow: Workflow,
+    pub sink: SinkHandle,
+    /// Operator the experiment focuses on (breakpoints, skew…).
+    pub focus: usize,
+    /// The sink operator index (Maestro result operator).
+    pub sink_op: usize,
+}
+
+/// Ch. 2 W1 ≈ TPC-H Q1: lineitem → filter(shipdate) → group-by → sort.
+pub fn tpch_q1(sf: f64, workers: usize) -> Flow {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan_lineitem", workers, move |idx, parts| {
+        Box::new(LineitemSource::new(sf, parts, idx, 0x71C8)) as Box<dyn TupleSource>
+    }));
+    let filter = w.add(OpSpec::unary("filter", workers, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(tpch::L_SHIPDATE, Cmp::Le, Value::Int(19980902)))
+    }));
+    let partial = w.add(OpSpec::unary(
+        "gb_partial",
+        workers,
+        PartitionScheme::RoundRobin,
+        |_, _| {
+            Box::new(GroupByPartial::new(
+                tpch::L_RETURNFLAG,
+                tpch::L_QUANTITY,
+                AggKind::Sum,
+            ))
+        },
+    ));
+    let fin = w.add(
+        OpSpec::unary("gb_final", workers, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let merge = w.add(
+        OpSpec::unary("sort", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(SortMerge::new(1))
+        })
+        .with_blocking(vec![0]),
+    );
+    let sink_handle = SinkHandle::new(0);
+    let h = sink_handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, merge, 0);
+    w.connect(merge, sink, 0);
+    Flow { workflow: w, sink: sink_handle, focus: filter, sink_op: sink }
+}
+
+/// Ch. 2 W2 ≈ TPC-H Q13: customer ⋈ orders → count per customer.
+pub fn tpch_q13(sf: f64, workers: usize) -> Flow {
+    let mut w = Workflow::new();
+    let cust = w.add(OpSpec::source("scan_customer", workers, move |idx, parts| {
+        Box::new(CustomerSource::new(sf, parts, idx, 0xC057)) as Box<dyn TupleSource>
+    }));
+    let orders = w.add(OpSpec::source("scan_orders", workers, move |idx, parts| {
+        Box::new(OrdersSource::new(sf, parts, idx, 0x08D3)) as Box<dyn TupleSource>
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        workers,
+        [
+            PartitionScheme::Hash { key: tpch::C_CUSTKEY },
+            PartitionScheme::Hash { key: tpch::O_CUSTKEY },
+        ],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(tpch::C_CUSTKEY, tpch::O_CUSTKEY)),
+    ));
+    let partial = w.add(OpSpec::unary(
+        "gb_partial",
+        workers,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(GroupByPartial::new(0, 0, AggKind::Count)),
+    ));
+    let fin = w.add(
+        OpSpec::unary("gb_final", workers, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Count))
+        })
+        .with_blocking(vec![0]),
+    );
+    let sink_handle = SinkHandle::new(0);
+    let h = sink_handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(cust, join, 0);
+    w.connect(orders, join, 1);
+    w.connect(join, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    Flow { workflow: w, sink: sink_handle, focus: join, sink_op: sink }
+}
+
+/// Ch. 3 W3: orders → filter(status) → range-partitioned sort → merge.
+pub fn orders_sort(sf: f64, workers: usize) -> Flow {
+    orders_sort_costed(sf, workers, 0)
+}
+
+/// [`orders_sort`] with an artificial per-tuple sort cost so the sort
+/// workers are the bottleneck.
+pub fn orders_sort_costed(sf: f64, workers: usize, cost_ns: u64) -> Flow {
+    let bounds = equal_width_bounds(1_000.0, 550_000.0, workers);
+    let b2 = bounds.clone();
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan_orders", 2, move |idx, parts| {
+        Box::new(OrdersSource::new(sf, parts, idx, 0x50F7)) as Box<dyn TupleSource>
+    }));
+    let filter = w.add(OpSpec::unary("filter", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(tpch::O_ORDERSTATUS, Cmp::Ne, Value::str("P")))
+    }));
+    let sort = w.add(
+        OpSpec::unary(
+            "sort",
+            workers,
+            PartitionScheme::Range { key: tpch::O_TOTALPRICE, bounds },
+            move |idx, _| {
+                Box::new(
+                    SortWorker::new(tpch::O_TOTALPRICE, idx as u64, b2.clone())
+                        .with_cost(cost_ns),
+                )
+            },
+        )
+        .with_blocking(vec![0])
+        .with_scatter_merge(),
+    );
+    let merge = w.add(
+        OpSpec::unary("merge", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(SortMerge::new(tpch::O_TOTALPRICE))
+        })
+        .with_blocking(vec![0]),
+    );
+    let sink_handle = SinkHandle::new(0);
+    let h = sink_handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, sort, 0);
+    w.connect(sort, merge, 0);
+    w.connect(merge, sink, 0);
+    Flow { workflow: w, sink: sink_handle, focus: sort, sink_op: sink }
+}
+
+/// Ch. 3 W1: tweets ⋈ slang on location (CA-skewed), per-location
+/// counts at the sink. The sink counts by the tweet location field
+/// (join output field 2 + F_LOCATION).
+pub fn tweet_join(total: usize, workers: usize, seed: u64) -> Flow {
+    tweet_join_costed(total, workers, seed, 0)
+}
+
+/// [`tweet_join`] with an artificial per-probe-tuple join cost — used
+/// by the skew experiments, which assume the join is the bottleneck
+/// (§3.3.1).
+pub fn tweet_join_costed(total: usize, workers: usize, seed: u64, probe_cost_ns: u64) -> Flow {
+    let mut w = Workflow::new();
+    let slang: Arc<Vec<Tuple>> = Arc::new(tweets::slang_table());
+    let s2 = slang.clone();
+    let build_scan = w.add(OpSpec::source("slang_scan", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = s2
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % parts == idx)
+            .map(|(_, t)| t.clone())
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let tweet_scan = w.add(OpSpec::source("tweet_scan", 2, move |idx, parts| {
+        Box::new(TweetSource::new(total, parts, idx, seed)) as Box<dyn TupleSource>
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        workers,
+        [
+            PartitionScheme::Hash { key: 0 },
+            PartitionScheme::Hash { key: tweets::F_LOCATION },
+        ],
+        vec![0],
+        move |_, _| {
+            Box::new(HashJoin::new(0, tweets::F_LOCATION).with_probe_cost(probe_cost_ns))
+        },
+    ));
+    let sink_handle = SinkHandle::new(tweets::NUM_STATES);
+    let h = sink_handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CountByKeySink::new(h.clone(), 2 + tweets::F_LOCATION))
+    }));
+    w.connect(build_scan, join, 0);
+    w.connect(tweet_scan, join, 1);
+    w.connect(join, sink, 0);
+    Flow { workflow: w, sink: sink_handle, focus: join, sink_op: sink }
+}
+
+/// Ch. 3 W2 ≈ TPC-DS Q18 on DSB data: web_sales joined with item
+/// (highly skewed), date (moderately skewed) and customer dims, then
+/// count per category. Returns (flow, item-join idx, date-join idx).
+pub fn dsb_q18(rows: usize, workers: usize, seed: u64) -> (Flow, usize, usize) {
+    dsb_q18_costed(rows, workers, seed, 0)
+}
+
+/// [`dsb_q18`] with an artificial per-probe-tuple cost on both joins.
+pub fn dsb_q18_costed(
+    rows: usize,
+    workers: usize,
+    seed: u64,
+    probe_cost_ns: u64,
+) -> (Flow, usize, usize) {
+    let mut w = Workflow::new();
+    let sales = w.add(OpSpec::source("scan_web_sales", 2, move |idx, parts| {
+        Box::new(WebSalesSource::new(rows, parts, idx, seed, Default::default()))
+            as Box<dyn TupleSource>
+    }));
+    let item_dim = w.add(OpSpec::source("scan_item", 1, |idx, parts| {
+        let rows: Vec<Tuple> = dsb::item_table()
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % parts == idx)
+            .map(|(_, t)| t)
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let date_dim = w.add(OpSpec::source("scan_date", 1, |idx, parts| {
+        let rows: Vec<Tuple> = dsb::date_table()
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % parts == idx)
+            .map(|(_, t)| t)
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    // item join: sales.item_id = item.item_id (HIGH skew on probe).
+    let j_item = w.add(OpSpec::binary(
+        "join_item",
+        workers,
+        [
+            PartitionScheme::Hash { key: 0 },
+            PartitionScheme::Hash { key: dsb::WS_ITEM },
+        ],
+        vec![0],
+        move |_, _| Box::new(HashJoin::new(0, dsb::WS_ITEM).with_probe_cost(probe_cost_ns)),
+    ));
+    // join output: item(2) ++ sales(5) → date_id at 2 + WS_DATE.
+    let date_key = 2 + dsb::WS_DATE;
+    let j_date = w.add(OpSpec::binary(
+        "join_date",
+        workers,
+        [
+            PartitionScheme::Hash { key: 0 },
+            PartitionScheme::Hash { key: date_key },
+        ],
+        vec![0],
+        move |_, _| Box::new(HashJoin::new(0, date_key).with_probe_cost(probe_cost_ns)),
+    ));
+    // Category counts. Field layout after join_date: date(2: date_id,
+    // year) ++ join_item output(7: item_id, category, sales…) → the
+    // item category sits at index 3.
+    let partial = w.add(OpSpec::unary(
+        "gb_partial",
+        workers,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(GroupByPartial::new(3, 0, AggKind::Count)),
+    ));
+    let fin = w.add(
+        OpSpec::unary("gb_final", workers, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Count))
+        })
+        .with_blocking(vec![0]),
+    );
+    let sink_handle = SinkHandle::new(0);
+    let h = sink_handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(item_dim, j_item, 0);
+    w.connect(sales, j_item, 1);
+    w.connect(date_dim, j_date, 0);
+    w.connect(j_item, j_date, 1);
+    w.connect(j_date, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    (
+        Flow { workflow: w, sink: sink_handle, focus: j_item, sink_op: sink },
+        j_item,
+        j_date,
+    )
+}
+
+/// Ch. 3 W4: synthetic distribution-shift stream joined with the small
+/// uniform dimension table.
+pub fn synthetic_join(rows: usize, workers: usize, seed: u64) -> Flow {
+    synthetic_join_costed(rows, workers, seed, 0)
+}
+
+/// [`synthetic_join`] with an artificial per-probe-tuple join cost.
+pub fn synthetic_join_costed(
+    rows: usize,
+    workers: usize,
+    seed: u64,
+    probe_cost_ns: u64,
+) -> Flow {
+    let mut w = Workflow::new();
+    let dim = w.add(OpSpec::source("scan_dim", 1, |idx, parts| {
+        let rows: Vec<Tuple> = synthetic::dim_table(100)
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % parts == idx)
+            .map(|(_, t)| t)
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let stream = w.add(OpSpec::source("scan_stream", 2, move |idx, parts| {
+        Box::new(ShiftingSource::new(rows, parts, idx, seed)) as Box<dyn TupleSource>
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        workers,
+        [
+            PartitionScheme::Hash { key: synthetic::F_KEY },
+            PartitionScheme::Hash { key: synthetic::F_KEY },
+        ],
+        vec![0],
+        move |_, _| {
+            Box::new(HashJoin::new(synthetic::F_KEY, synthetic::F_KEY).with_probe_cost(probe_cost_ns))
+        },
+    ));
+    let sink_handle = SinkHandle::new(synthetic::NUM_KEYS as usize);
+    let h = sink_handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CountByKeySink::new(h.clone(), 2 + synthetic::F_KEY))
+    }));
+    w.connect(dim, join, 0);
+    w.connect(stream, join, 1);
+    w.connect(join, sink, 0);
+    Flow { workflow: w, sink: sink_handle, focus: join, sink_op: sink }
+}
+
+/// The join worker owning a given integer key under hash partitioning.
+pub fn worker_of_key(key: i64, workers: usize) -> usize {
+    (Value::Int(key).stable_hash() % workers as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::engine::Execution;
+
+    #[test]
+    fn q1_runs_and_produces_groups() {
+        let f = tpch_q1(0.05, 2);
+        let exec = Execution::start(f.workflow, Config::for_tests());
+        exec.join();
+        // returnflag has 3 distinct values.
+        assert_eq!(f.sink.total(), 3);
+    }
+
+    #[test]
+    fn q13_runs() {
+        let f = tpch_q13(0.05, 2);
+        let exec = Execution::start(f.workflow, Config::for_tests());
+        exec.join();
+        assert!(f.sink.total() > 0);
+    }
+
+    #[test]
+    fn sort_flow_totally_ordered() {
+        let f = orders_sort(0.05, 3);
+        let exec = Execution::start(f.workflow, Config::for_tests());
+        exec.join();
+        let rows = f.sink.tuples();
+        assert!(rows.len() > 400, "got {}", rows.len());
+        let prices: Vec<f64> = rows
+            .iter()
+            .map(|t| t.get(tpch::O_TOTALPRICE).as_float().unwrap())
+            .collect();
+        assert!(prices.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn dsb_flow_counts_categories() {
+        let (f, _, _) = dsb_q18(5_000, 4, 3);
+        let exec = Execution::start(f.workflow, Config::for_tests());
+        exec.join();
+        assert_eq!(f.sink.total(), dsb::NUM_CATEGORIES as u64);
+    }
+
+    #[test]
+    fn synthetic_flow_joins_every_row() {
+        let f = synthetic_join(10_000, 4, 9);
+        let exec = Execution::start(f.workflow, Config::for_tests());
+        let s = exec.join();
+        // Every stream row matches 100 dim rows.
+        assert_eq!(s.produced(f.focus), 10_000 * 100);
+    }
+}

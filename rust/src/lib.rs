@@ -1,0 +1,38 @@
+//! # texera-amber
+//!
+//! Reproduction of *"Towards Interactive, Adaptive and Result-aware Big
+//! Data Analytics"* (A. Kumar, UC Irvine, 2022) as a three-layer
+//! rust + JAX + Pallas stack.
+//!
+//! The crate contains three systems layered on one pipelined dataflow
+//! engine:
+//!
+//! * [`engine`] — **Amber** (Ch. 2): an actor-style parallel dataflow
+//!   engine with a fast control-message path enabling sub-second
+//!   pause/resume, operator investigation/modification at runtime,
+//!   local & global conditional breakpoints, and fault tolerance via
+//!   checkpoints + a control-replay log.
+//! * [`reshape`] — **Reshape** (Ch. 3): adaptive, result-aware
+//!   partitioning-skew mitigation built on the engine's control messages.
+//! * [`maestro`] — **Maestro** (Ch. 4): result-aware region scheduling
+//!   with materialization-choice enumeration minimizing first response
+//!   time.
+//!
+//! Supporting substrates: [`operators`] (relational + ML operator
+//! library), [`workloads`] (synthetic TPC-H/DSB/tweet generators),
+//! [`batch`] (a stage-by-stage comparator engine standing in for Spark),
+//! [`runtime`] (PJRT loader for the AOT-compiled JAX/Pallas artifacts),
+//! and [`metrics`]/[`util`] utilities.
+
+pub mod util;
+pub mod tuple;
+pub mod config;
+pub mod workloads;
+pub mod engine;
+pub mod operators;
+pub mod reshape;
+pub mod maestro;
+pub mod batch;
+pub mod runtime;
+pub mod metrics;
+pub mod flows;

@@ -1,0 +1,250 @@
+//! Workflow corpus for the Table 4.1 analysis.
+//!
+//! The paper surveyed sample/production workflows from Alteryx,
+//! RapidMiner, Dataiku and Texera (Figs. 4.16–4.19), counting operators
+//! with multiple inputs, blocking links, and whether the naive region
+//! graph is cyclic (i.e. materialization is required). This module
+//! rebuilds representative workflow *shapes* from those systems so the
+//! analysis is reproducible; see `bench_ch4 corpus`.
+
+use crate::engine::dag::{OpSpec, Workflow};
+use crate::engine::operator::{Emitter, Operator};
+use crate::engine::partitioner::PartitionScheme;
+use crate::tuple::Tuple;
+use crate::workloads::VecSource;
+
+struct Noop;
+
+impl Operator for Noop {
+    fn name(&self) -> &str {
+        "noop"
+    }
+    fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+        out.emit(t);
+    }
+}
+
+fn src(w: &mut Workflow, name: &str) -> usize {
+    w.add(OpSpec::source(name, 1, |_, _| {
+        Box::new(VecSource::new(Vec::new()))
+    }))
+}
+
+fn unary(w: &mut Workflow, name: &str) -> usize {
+    w.add(OpSpec::unary(name, 1, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Noop)
+    }))
+}
+
+fn blocking_unary(w: &mut Workflow, name: &str) -> usize {
+    w.add(
+        OpSpec::unary(name, 1, PartitionScheme::RoundRobin, |_, _| Box::new(Noop))
+            .with_blocking(vec![0]),
+    )
+}
+
+fn join(w: &mut Workflow, name: &str) -> usize {
+    w.add(OpSpec::binary(
+        name,
+        1,
+        [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+        vec![0],
+        |_, _| Box::new(Noop),
+    ))
+}
+
+/// A corpus entry: a named workflow shape.
+pub struct CorpusEntry {
+    pub system: &'static str,
+    pub name: &'static str,
+    pub workflow: Workflow,
+}
+
+/// Analysis row (the Table 4.1 columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorpusAnalysis {
+    pub system: String,
+    pub name: String,
+    pub operators: usize,
+    pub multi_input_ops: usize,
+    pub blocking_links: usize,
+    pub regions: usize,
+    pub cyclic: bool,
+    pub materialization_choices: usize,
+}
+
+/// Build the corpus.
+pub fn corpus() -> Vec<CorpusEntry> {
+    let mut out = Vec::new();
+
+    // Alteryx-style (Fig. 4.16): input → prep chain → self-join on a
+    // replicated stream → summarize → output.
+    {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "input");
+        let clean = unary(&mut w, "data_cleansing");
+        let formula = unary(&mut w, "formula");
+        let j = join(&mut w, "join");
+        let sum = blocking_unary(&mut w, "summarize");
+        let sink = unary(&mut w, "browse");
+        w.connect(s, clean, 0);
+        w.connect(clean, formula, 0);
+        w.connect(clean, j, 0); // build from the same cleansed stream
+        w.connect(formula, j, 1); // probe
+        w.connect(j, sum, 0);
+        w.connect(sum, sink, 0);
+        out.push(CorpusEntry { system: "Alteryx", name: "self_join_summarize", workflow: w });
+    }
+
+    // RapidMiner-style (Fig. 4.17): two retrieves → preprocess →
+    // join → model (blocking) → apply → output.
+    {
+        let mut w = Workflow::new();
+        let s1 = src(&mut w, "retrieve_a");
+        let s2 = src(&mut w, "retrieve_b");
+        let p1 = unary(&mut w, "select_attrs");
+        let p2 = unary(&mut w, "filter_examples");
+        let j = join(&mut w, "join");
+        let model = blocking_unary(&mut w, "train_model");
+        let apply = unary(&mut w, "apply_model");
+        let sink = unary(&mut w, "store");
+        w.connect(s1, p1, 0);
+        w.connect(s2, p2, 0);
+        w.connect(p1, j, 0);
+        w.connect(p2, j, 1);
+        w.connect(j, model, 0);
+        w.connect(model, apply, 0);
+        w.connect(apply, sink, 0);
+        out.push(CorpusEntry { system: "RapidMiner", name: "join_train_apply", workflow: w });
+    }
+
+    // Dataiku-style (Fig. 4.18): dataset → split into two prepare
+    // recipes → stack (union) → group (blocking) → output; plus a
+    // self-join branch.
+    {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "dataset");
+        let p1 = unary(&mut w, "prepare_a");
+        let p2 = unary(&mut w, "prepare_b");
+        let stack = w.add(OpSpec::binary(
+            "stack",
+            1,
+            [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+            vec![],
+            |_, _| Box::new(Noop),
+        ));
+        let grp = blocking_unary(&mut w, "group");
+        let j = join(&mut w, "join_back");
+        let sink = unary(&mut w, "output");
+        w.connect(s, p1, 0);
+        w.connect(s, p2, 0);
+        w.connect(p1, stack, 0);
+        w.connect(p2, stack, 1);
+        w.connect(stack, grp, 0);
+        w.connect(grp, j, 0); // build: grouped aggregate
+        w.connect(s, j, 1); // probe: original rows → CYCLE via s's region
+        w.connect(j, sink, 0);
+        out.push(CorpusEntry { system: "Dataiku", name: "group_join_back", workflow: w });
+    }
+
+    // Texera-style (Fig. 4.19 / Fig. 4.2): tweets + zipcode history,
+    // three joins on zipcode with replicated build input, ML classify,
+    // two visualizations.
+    {
+        let mut w = Workflow::new();
+        let hist = src(&mut w, "scan_history");
+        let filt = unary(&mut w, "filter_zero_fires");
+        let tw_before = src(&mut w, "tweets_before");
+        let tw_during = src(&mut w, "tweets_during");
+        let kw = unary(&mut w, "keyword_fire");
+        let j1 = join(&mut w, "join_before");
+        let j2 = join(&mut w, "join_during");
+        let ml1 = unary(&mut w, "ml_before");
+        let ml2 = unary(&mut w, "ml_during");
+        let bar = unary(&mut w, "bar_chart");
+        let scatter = unary(&mut w, "scatterplot");
+        w.connect(hist, filt, 0);
+        w.connect(filt, j1, 0); // build 1
+        w.connect(filt, j2, 0); // build 2 (replicated build input)
+        w.connect(tw_before, j1, 1);
+        w.connect(tw_during, kw, 0);
+        w.connect(kw, j2, 1);
+        w.connect(tw_during, scatter, 0);
+        w.connect(j1, ml1, 0);
+        w.connect(j2, ml2, 0);
+        w.connect(ml1, bar, 0);
+        w.connect(ml2, bar, 0);
+        out.push(CorpusEntry { system: "Texera", name: "climate_wildfire", workflow: w });
+    }
+
+    out
+}
+
+/// Analyze every corpus workflow (the Table 4.1 rows).
+pub fn analyze() -> Vec<CorpusAnalysis> {
+    corpus()
+        .into_iter()
+        .map(|e| {
+            let w = &e.workflow;
+            let g = crate::maestro::region_graph::region_graph(w);
+            let cyclic = !g.is_acyclic();
+            let choices = crate::maestro::enumerate::enumerate_choices(w, 2);
+            CorpusAnalysis {
+                system: e.system.to_string(),
+                name: e.name.to_string(),
+                operators: w.ops.len(),
+                multi_input_ops: (0..w.ops.len())
+                    .filter(|&i| w.ops[i].input_partitioning.len() > 1)
+                    .count(),
+                blocking_links: w
+                    .edges
+                    .iter()
+                    .filter(|e| w.is_blocking_edge(e))
+                    .count(),
+                regions: g.regions.len(),
+                cyclic,
+                materialization_choices: if cyclic { choices.len() } else { 0 },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_has_all_four_systems() {
+        let systems: Vec<&str> = corpus().iter().map(|e| e.system).collect();
+        for s in ["Alteryx", "RapidMiner", "Dataiku", "Texera"] {
+            assert!(systems.contains(&s), "missing {s}");
+        }
+    }
+
+    #[test]
+    fn all_corpus_workflows_valid() {
+        for e in corpus() {
+            assert!(e.workflow.validate().is_ok(), "{} invalid", e.name);
+        }
+    }
+
+    #[test]
+    fn analysis_finds_cyclic_and_acyclic_cases() {
+        let rows = analyze();
+        assert!(rows.iter().any(|r| r.cyclic), "no cyclic example");
+        assert!(rows.iter().any(|r| !r.cyclic), "no acyclic example");
+        // Cyclic workflows must have at least one repair choice.
+        for r in rows.iter().filter(|r| r.cyclic) {
+            assert!(r.materialization_choices > 0, "{} unrepairable", r.name);
+        }
+    }
+
+    #[test]
+    fn blocking_links_counted() {
+        let rows = analyze();
+        for r in &rows {
+            assert!(r.blocking_links >= 1, "{}: no blocking links", r.name);
+            assert!(r.regions >= 2);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Cycle detection & feasibility (§4.4.2–4.4.3).
+//!
+//! A workflow is *schedulable* iff its region graph is acyclic. When it
+//! is not (Fig. 4.8), some pipelined link must be materialized to
+//! split a region; [`is_feasible`] and [`feasible_with`] are the
+//! predicates the enumeration (§4.5.1) searches with.
+
+use crate::engine::dag::Workflow;
+use crate::maestro::materialize::apply_choice;
+use crate::maestro::region_graph::{region_graph, region_graph_ext};
+
+/// Whether the workflow has a feasible region schedule as-is.
+pub fn is_feasible(w: &Workflow) -> bool {
+    region_graph(w).is_acyclic()
+}
+
+/// Whether materializing the given pipelined edges makes it feasible.
+/// The materialized writer→reader couples count as region dependencies
+/// (the reader can only consume a *finished* store).
+pub fn feasible_with(w: &Workflow, choice: &[usize]) -> bool {
+    // Materializing a blocking edge is pointless; reject early.
+    for &ei in choice {
+        if w.is_blocking_edge(&w.edges[ei]) {
+            return false;
+        }
+    }
+    let m = apply_choice(w, choice);
+    region_graph_ext(&m.workflow, &m.links).is_acyclic()
+}
+
+/// Pipelined edges that are candidates for materialization: those in a
+/// region that participates in a region-graph cycle.
+pub fn candidate_edges(w: &Workflow) -> Vec<usize> {
+    let g = region_graph(w);
+    if g.is_acyclic() {
+        return Vec::new();
+    }
+    // A region is "cyclic" if removing it (and incident deps) is needed
+    // for topological order — approximate: regions on some self-loop or
+    // in a strongly-connected dep component. With self-loops dominating
+    // in practice (Fig. 4.1), collect regions with u==v deps plus any
+    // region in a dep cycle found by DFS.
+    let mut cyclic_regions: Vec<usize> = g
+        .deps
+        .iter()
+        .filter(|(u, v, _)| u == v)
+        .map(|(u, _, _)| *u)
+        .collect();
+    // General cycles: DFS color marking over region deps.
+    let n = g.regions.len();
+    let mut color = vec![0u8; n]; // 0 white, 1 gray, 2 black
+    let mut stack_path: Vec<usize> = Vec::new();
+    fn dfs(
+        r: usize,
+        g: &crate::maestro::region_graph::RegionGraph,
+        color: &mut Vec<u8>,
+        path: &mut Vec<usize>,
+        cyclic: &mut Vec<usize>,
+    ) {
+        color[r] = 1;
+        path.push(r);
+        for (u, v, _) in &g.deps {
+            if *u == r && u != v {
+                if color[*v] == 1 {
+                    // Found a cycle: everything from v on the path.
+                    let start = path.iter().position(|x| x == v).unwrap();
+                    for &x in &path[start..] {
+                        if !cyclic.contains(&x) {
+                            cyclic.push(x);
+                        }
+                    }
+                } else if color[*v] == 0 {
+                    dfs(*v, g, color, path, cyclic);
+                }
+            }
+        }
+        path.pop();
+        color[r] = 2;
+    }
+    for r in 0..n {
+        if color[r] == 0 {
+            dfs(r, &g, &mut color, &mut stack_path, &mut cyclic_regions);
+        }
+    }
+    // Candidate edges: pipelined edges inside cyclic regions.
+    let mut out = Vec::new();
+    for rid in cyclic_regions {
+        out.extend(g.regions[rid].edges.iter().copied());
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dag::OpSpec;
+    use crate::engine::operator::{Emitter, Operator};
+    use crate::engine::partitioner::PartitionScheme;
+    use crate::tuple::Tuple;
+    use crate::workloads::VecSource;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    /// Fig. 4.1: replicated scan feeding both join inputs.
+    fn fig_4_1() -> Workflow {
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let f1 = w.add(OpSpec::unary("filter1", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        let f2 = w.add(OpSpec::unary("filter2", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        let j = w.add(OpSpec::binary(
+            "join",
+            1,
+            [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+            vec![0],
+            |_, _| Box::new(Noop),
+        ));
+        let k = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        w.connect(s, f1, 0);
+        w.connect(s, f2, 0);
+        w.connect(f2, j, 0); // build
+        w.connect(f1, j, 1); // probe
+        w.connect(j, k, 0);
+        w
+    }
+
+    #[test]
+    fn fig_4_1_is_infeasible() {
+        assert!(!is_feasible(&fig_4_1()));
+    }
+
+    #[test]
+    fn materializing_probe_path_makes_feasible() {
+        let w = fig_4_1();
+        // filter1 feeds the probe input (e3); materializing anywhere on
+        // the probe path (e0: scan→filter1, or e3: filter1→probe)
+        // defers the probe feed until the build region has completed.
+        assert!(feasible_with(&w, &[0]));
+        assert!(feasible_with(&w, &[3]));
+    }
+
+    #[test]
+    fn materializing_build_path_stays_cyclic() {
+        let w = fig_4_1();
+        // Materializing e1 (scan→filter2, the BUILD path) does not
+        // help: the join still sits in the scan/probe region, which
+        // both feeds the reader (writer link) and needs the build
+        // (blocking link) — a two-region cycle.
+        assert!(!feasible_with(&w, &[1]));
+    }
+
+    #[test]
+    fn materializing_blocking_edge_rejected() {
+        let w = fig_4_1();
+        // Edge 2 is filter2→join build (already blocking).
+        assert!(!feasible_with(&w, &[2]));
+    }
+
+    #[test]
+    fn candidates_cover_the_cyclic_region() {
+        let w = fig_4_1();
+        let cands = candidate_edges(&w);
+        // The cyclic region contains the pipelined edges 0, 1, 3, 4.
+        assert!(cands.contains(&0));
+        assert!(cands.contains(&1));
+        assert!(!cands.contains(&2), "blocking edge is not a candidate");
+    }
+
+    #[test]
+    fn acyclic_workflow_has_no_candidates() {
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let k = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        w.connect(s, k, 0);
+        assert!(is_feasible(&w));
+        assert!(candidate_edges(&w).is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Enumerating materialization choices (§4.5.1).
+//!
+//! A *choice* is a set of pipelined edges whose materialization makes
+//! the region graph acyclic. We enumerate all **minimal** feasible
+//! choices (no feasible proper subset) up to `max_edges` per choice —
+//! the Fig. 4.11 walk over the sub-DAG between the replication point
+//! and the join, generalized to arbitrary DAGs by searching candidate
+//! edges of cyclic regions.
+
+use crate::engine::dag::Workflow;
+use crate::maestro::cycles::{candidate_edges, feasible_with, is_feasible};
+
+/// All minimal feasible materialization choices (each a sorted list of
+/// edge indices). An already-feasible workflow yields one empty choice.
+pub fn enumerate_choices(w: &Workflow, max_edges: usize) -> Vec<Vec<usize>> {
+    if is_feasible(w) {
+        return vec![Vec::new()];
+    }
+    let cands = candidate_edges(w);
+    let mut found: Vec<Vec<usize>> = Vec::new();
+    // Breadth over subset size → minimality by construction (a superset
+    // of a found choice is pruned).
+    for size in 1..=max_edges.min(cands.len()) {
+        let mut subset = vec![0usize; size];
+        enumerate_subsets(&cands, size, 0, &mut subset, 0, &mut |s: &[usize]| {
+            if found.iter().any(|f| f.iter().all(|e| s.contains(e))) {
+                return; // superset of a minimal choice
+            }
+            if feasible_with(w, s) {
+                found.push(s.to_vec());
+            }
+        });
+    }
+    found
+}
+
+fn enumerate_subsets(
+    cands: &[usize],
+    size: usize,
+    start: usize,
+    subset: &mut Vec<usize>,
+    depth: usize,
+    f: &mut impl FnMut(&[usize]),
+) {
+    if depth == size {
+        f(subset);
+        return;
+    }
+    for i in start..cands.len() {
+        subset[depth] = cands[i];
+        enumerate_subsets(cands, size, i + 1, subset, depth + 1, f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dag::OpSpec;
+    use crate::engine::operator::{Emitter, Operator};
+    use crate::engine::partitioner::PartitionScheme;
+    use crate::tuple::Tuple;
+    use crate::workloads::VecSource;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    fn src(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::source(name, 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }))
+    }
+
+    fn unary(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::unary(name, 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }))
+    }
+
+    fn join(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::binary(
+            name,
+            1,
+            [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+            vec![0],
+            |_, _| Box::new(Noop),
+        ))
+    }
+
+    /// Fig. 4.1 again.
+    fn fig_4_1() -> Workflow {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let f1 = unary(&mut w, "filter1");
+        let f2 = unary(&mut w, "filter2");
+        let j = join(&mut w, "join");
+        let k = unary(&mut w, "sink");
+        w.connect(s, f1, 0); // e0 probe path
+        w.connect(s, f2, 0); // e1 build path
+        w.connect(f2, j, 0); // e2 build (blocking)
+        w.connect(f1, j, 1); // e3 probe
+        w.connect(j, k, 0); // e4
+        w
+    }
+
+    #[test]
+    fn feasible_workflow_needs_nothing() {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let k = unary(&mut w, "sink");
+        w.connect(s, k, 0);
+        assert_eq!(enumerate_choices(&w, 3), vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn fig_4_1_has_single_edge_choices() {
+        let w = fig_4_1();
+        let choices = enumerate_choices(&w, 2);
+        assert!(!choices.is_empty());
+        // Minimal choices are single pipelined edges on the *probe*
+        // path: {e0} (scan→filter1) or {e3} (filter1→probe) — the
+        // Fig. 4.11-style enumeration along the probe feed.
+        for c in &choices {
+            assert_eq!(c.len(), 1, "choices should be minimal: {choices:?}");
+        }
+        let flat: Vec<usize> = choices.iter().map(|c| c[0]).collect();
+        assert!(flat.contains(&0), "scan→filter1 choice missing: {flat:?}");
+        assert!(flat.contains(&3), "filter1→probe choice missing: {flat:?}");
+        assert!(
+            !flat.contains(&1),
+            "build-path materialization is not feasible: {flat:?}"
+        );
+    }
+
+    #[test]
+    fn all_choices_are_feasible() {
+        let w = fig_4_1();
+        for c in enumerate_choices(&w, 2) {
+            assert!(crate::maestro::cycles::feasible_with(&w, &c), "{c:?}");
+        }
+    }
+
+    /// Fig. 4.11-style: replicate feeding two joins' build+probe via
+    /// shared paths → multiple distinct choices with different
+    /// downstream consequences.
+    #[test]
+    fn two_join_workflow_multiple_choices() {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let f = unary(&mut w, "filter");
+        let j1 = join(&mut w, "j1");
+        let j2 = join(&mut w, "j2");
+        let k = unary(&mut w, "sink");
+        // s replicates to f (probe chain) and j1 build; j1 output is
+        // probe of j2; f feeds j2 build — a cyclic region.
+        w.connect(s, f, 0); // e0
+        w.connect(s, j1, 0); // e1 build j1 (blocking)
+        w.connect(f, j1, 1); // e2 probe j1
+        w.connect(f, j2, 0); // e3 build j2 (blocking)
+        w.connect(j1, j2, 1); // e4 probe j2
+        w.connect(j2, k, 0); // e5
+        let g = crate::maestro::region_graph::region_graph(&w);
+        assert!(!g.is_acyclic());
+        let choices = enumerate_choices(&w, 2);
+        assert!(!choices.is_empty());
+        for c in &choices {
+            assert!(crate::maestro::cycles::feasible_with(&w, c));
+        }
+    }
+}

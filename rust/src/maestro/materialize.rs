@@ -1,0 +1,227 @@
+//! Materialization of a pipelined link (§4.4.3): replace edge u→v with
+//! `u → MatWriter` and `MatReader → v`, making the link blocking at
+//! the writer boundary so the regions split.
+//!
+//! The writer appends tuples to a shared buffer (tracking bytes for
+//! Figs. 4.23/4.24); the reader is a dormant source activated when its
+//! region is scheduled — by then the writer's region has completed and
+//! the buffer is final.
+
+use crate::engine::dag::{OpSpec, Workflow};
+use crate::engine::operator::{Emitter, Operator};
+use crate::engine::partitioner::PartitionScheme;
+use crate::tuple::Tuple;
+use crate::workloads::TupleSource;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared store backing one materialized link.
+#[derive(Clone, Default)]
+pub struct MatStore {
+    data: Arc<Mutex<Vec<Tuple>>>,
+    bytes: Arc<AtomicU64>,
+}
+
+impl MatStore {
+    pub fn new() -> MatStore {
+        MatStore::default()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.data.lock().unwrap().len()
+    }
+}
+
+/// Sink-side operator of a materialized link.
+pub struct MatWriter {
+    store: MatStore,
+    buffer: Vec<Tuple>,
+}
+
+impl MatWriter {
+    pub fn new(store: MatStore) -> MatWriter {
+        MatWriter { store, buffer: Vec::new() }
+    }
+}
+
+impl Operator for MatWriter {
+    fn name(&self) -> &str {
+        "mat_writer"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        self.store
+            .bytes
+            .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
+        self.buffer.push(t);
+        if self.buffer.len() >= 1024 {
+            self.store.data.lock().unwrap().append(&mut self.buffer);
+        }
+    }
+
+    fn finish(&mut self, _out: &mut dyn Emitter) {
+        self.store.data.lock().unwrap().append(&mut self.buffer);
+    }
+
+    fn state_size(&self) -> usize {
+        self.buffer.len()
+    }
+}
+
+/// Source-side of a materialized link: partition `idx` of `parts`
+/// reads rows `i ≡ idx (mod parts)` from the store.
+pub struct MatSource {
+    store: MatStore,
+    parts: usize,
+    idx: usize,
+    pos: usize,
+}
+
+impl MatSource {
+    pub fn new(store: MatStore, parts: usize, idx: usize) -> MatSource {
+        MatSource { store, parts, idx, pos: 0 }
+    }
+}
+
+impl TupleSource for MatSource {
+    fn next_tuple(&mut self) -> Option<Tuple> {
+        let i = self.idx + self.pos * self.parts;
+        let guard = self.store.data.lock().unwrap();
+        let t = guard.get(i).cloned();
+        drop(guard);
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        let total = self.store.rows();
+        let (p, i) = (self.parts, self.idx);
+        Some(if i >= total { 0 } else { (total - i + p - 1) / p })
+    }
+
+    fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn seek(&mut self, pos: usize) {
+        self.pos = pos;
+    }
+}
+
+/// Result of applying a materialization choice.
+pub struct Materialized {
+    pub workflow: Workflow,
+    /// One store per materialized edge (same order as the choice).
+    pub stores: Vec<MatStore>,
+    /// Reader operator index per materialized edge.
+    pub readers: Vec<usize>,
+    /// Writer operator index per materialized edge.
+    pub writers: Vec<usize>,
+    /// (writer, reader) pairs: each is an ordering constraint — the
+    /// writer's region must complete before the reader's region starts
+    /// (the reader consumes the finished store). The region graph must
+    /// include these as dependency edges.
+    pub links: Vec<(usize, usize)>,
+}
+
+/// Rewrite `w`, materializing the given edge indices.
+pub fn apply_choice(w: &Workflow, choice: &[usize]) -> Materialized {
+    let mut out = Workflow { ops: w.ops.clone(), edges: Vec::new() };
+    let mut stores = Vec::new();
+    let mut readers = Vec::new();
+    let mut writers = Vec::new();
+    for (ei, e) in w.edges.iter().enumerate() {
+        if !choice.contains(&ei) {
+            out.edges.push(*e);
+            continue;
+        }
+        let store = MatStore::new();
+        let workers = w.ops[e.from].workers;
+        let s2 = store.clone();
+        let writer = out.add(OpSpec::unary(
+            &format!("mat_writer_{ei}"),
+            workers,
+            PartitionScheme::OneToOne,
+            move |_, _| Box::new(MatWriter::new(s2.clone())),
+        ));
+        let s3 = store.clone();
+        let reader = out.add(OpSpec::source(
+            &format!("mat_reader_{ei}"),
+            workers,
+            move |idx, parts| Box::new(MatSource::new(s3.clone(), parts, idx)),
+        ));
+        out.edges.push(crate::engine::dag::Edge { from: e.from, to: writer, to_port: 0 });
+        out.edges.push(crate::engine::dag::Edge { from: reader, to: e.to, to_port: e.to_port });
+        stores.push(store);
+        readers.push(reader);
+        writers.push(writer);
+    }
+    let links = writers.iter().copied().zip(readers.iter().copied()).collect();
+    Materialized { workflow: out, stores, readers, writers, links }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuple::Value;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let store = MatStore::new();
+        let mut w = MatWriter::new(store.clone());
+        let mut out = crate::engine::operator::VecEmitter::default();
+        for i in 0..10 {
+            w.process(Tuple::new(vec![Value::Int(i)]), 0, &mut out);
+        }
+        w.finish(&mut out);
+        assert_eq!(store.rows(), 10);
+        assert!(store.bytes() > 0);
+        let mut r = MatSource::new(store, 2, 1);
+        let got: Vec<i64> = std::iter::from_fn(|| r.next_tuple())
+            .map(|t| t.get(0).as_int().unwrap())
+            .collect();
+        assert_eq!(got, vec![1, 3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn apply_choice_splits_edge() {
+        use crate::engine::dag::OpSpec;
+        use crate::engine::partitioner::PartitionScheme;
+        use crate::workloads::VecSource;
+        struct Noop;
+        impl Operator for Noop {
+            fn name(&self) -> &str {
+                "noop"
+            }
+            fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+                out.emit(t);
+            }
+        }
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let f = w.add(OpSpec::unary("f", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        w.connect(s, f, 0);
+        let m = apply_choice(&w, &[0]);
+        assert_eq!(m.workflow.ops.len(), 4);
+        assert_eq!(m.workflow.edges.len(), 2);
+        assert!(m.workflow.validate().is_ok());
+        // New region boundary: writer has no out-edges within a
+        // pipelined path to f.
+        let regions = crate::maestro::region::regions_of(&m.workflow);
+        assert_eq!(regions.len(), 2);
+    }
+}

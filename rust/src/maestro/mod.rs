@@ -1,0 +1,27 @@
+//! **Maestro** (Ch. 4): result-aware region scheduling for pipelined
+//! execution.
+//!
+//! Pipeline: [`region`] splits the workflow DAG at blocking links into
+//! regions; [`region_graph`] derives inter-region dependencies;
+//! [`cycles`] detects infeasible (cyclic) region graphs and repairs
+//! them by inserting **materialization** on pipelined links;
+//! [`enumerate`] lists every minimal materialization choice (§4.5.1);
+//! [`cost`] scores each choice by **first response time** (§4.5.3);
+//! [`scheduler`] executes the chosen plan region-by-region on the
+//! engine (sources deployed dormant, activated in topological region
+//! order); [`corpus`] bundles the workflow shapes of Table 4.1.
+
+pub mod region;
+pub mod region_graph;
+pub mod cycles;
+pub mod enumerate;
+pub mod cost;
+pub mod materialize;
+pub mod scheduler;
+pub mod corpus;
+
+pub use cost::{CostParams, first_response_time};
+pub use enumerate::enumerate_choices;
+pub use region::{regions_of, Region};
+pub use region_graph::{region_graph, RegionGraph};
+pub use scheduler::{MaestroScheduler, ScheduleOutcome};

@@ -1,0 +1,191 @@
+//! Regions (§4.4.1): maximal sub-DAGs connected by *pipelined* links.
+//!
+//! Removing every blocking link from the workflow graph and taking
+//! connected components (undirected, over the remaining pipelined
+//! links) yields the regions: within a region data flows without
+//! barriers; blocking links order regions against each other. An
+//! operator whose inputs are all blocking (e.g. `GroupByFinal`) starts
+//! a new region together with its pipelined downstream.
+
+use crate::engine::dag::Workflow;
+
+/// A region: operator indices plus contained (pipelined) edge indices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub id: usize,
+    pub ops: Vec<usize>,
+    /// Indices into `workflow.edges` of pipelined links inside the
+    /// region.
+    pub edges: Vec<usize>,
+}
+
+impl Region {
+    pub fn contains(&self, op: usize) -> bool {
+        self.ops.contains(&op)
+    }
+}
+
+/// Split a workflow into regions.
+pub fn regions_of(w: &Workflow) -> Vec<Region> {
+    let n = w.ops.len();
+    // Union-find over operators via pipelined edges.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        if parent[x] != x {
+            let r = find(parent, parent[x]);
+            parent[x] = r;
+        }
+        parent[x]
+    }
+    for e in &w.edges {
+        if !w.is_blocking_edge(e) {
+            let (a, b) = (find(&mut parent, e.from), find(&mut parent, e.to));
+            if a != b {
+                parent[a] = b;
+            }
+        }
+    }
+    // Group ops by root, in deterministic order.
+    let mut root_to_region: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for op in 0..n {
+        let r = find(&mut parent, op);
+        root_to_region.entry(r).or_default().push(op);
+    }
+    let mut regions: Vec<Region> = root_to_region
+        .into_values()
+        .enumerate()
+        .map(|(id, ops)| Region { id, ops, edges: Vec::new() })
+        .collect();
+    // Assign pipelined edges to their region.
+    for (ei, e) in w.edges.iter().enumerate() {
+        if !w.is_blocking_edge(e) {
+            for r in regions.iter_mut() {
+                if r.contains(e.from) {
+                    r.edges.push(ei);
+                    break;
+                }
+            }
+        }
+    }
+    regions
+}
+
+/// Region id containing operator `op`.
+pub fn region_of(regions: &[Region], op: usize) -> usize {
+    regions
+        .iter()
+        .find(|r| r.contains(op))
+        .map(|r| r.id)
+        .expect("operator not in any region")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dag::{OpSpec, Workflow};
+    use crate::engine::operator::{Emitter, Operator};
+    use crate::engine::partitioner::PartitionScheme;
+    use crate::tuple::Tuple;
+    use crate::workloads::VecSource;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    fn src(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::source(name, 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }))
+    }
+
+    fn unary(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::unary(name, 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }))
+    }
+
+    fn unary_blocking(w: &mut Workflow, name: &str) -> usize {
+        w.add(
+            OpSpec::unary(name, 1, PartitionScheme::RoundRobin, |_, _| Box::new(Noop))
+                .with_blocking(vec![0]),
+        )
+    }
+
+    /// scan → filter → groupby(blocking) → sink: two regions split at
+    /// the blocking link (like Fig. 4.6).
+    #[test]
+    fn blocking_link_splits_regions() {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let f = unary(&mut w, "filter");
+        let g = unary_blocking(&mut w, "groupby");
+        let k = unary(&mut w, "sink");
+        w.connect(s, f, 0);
+        w.connect(f, g, 0);
+        w.connect(g, k, 0);
+        let regions = regions_of(&w);
+        assert_eq!(regions.len(), 2);
+        assert_eq!(region_of(&regions, s), region_of(&regions, f));
+        assert_eq!(region_of(&regions, g), region_of(&regions, k));
+        assert_ne!(region_of(&regions, f), region_of(&regions, g));
+    }
+
+    /// Join: build link blocking, probe pipelined → join sits in the
+    /// probe's region (Fig. 4.7).
+    #[test]
+    fn join_in_probe_region() {
+        let mut w = Workflow::new();
+        let b = src(&mut w, "build_scan");
+        let p = src(&mut w, "probe_scan");
+        let j = w.add(OpSpec::binary(
+            "join",
+            1,
+            [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+            vec![0],
+            |_, _| Box::new(Noop),
+        ));
+        let k = unary(&mut w, "sink");
+        w.connect(b, j, 0);
+        w.connect(p, j, 1);
+        w.connect(j, k, 0);
+        let regions = regions_of(&w);
+        assert_eq!(regions.len(), 2);
+        assert_eq!(region_of(&regions, p), region_of(&regions, j));
+        assert_eq!(region_of(&regions, j), region_of(&regions, k));
+        assert_ne!(region_of(&regions, b), region_of(&regions, j));
+    }
+
+    #[test]
+    fn fully_pipelined_single_region() {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let f = unary(&mut w, "filter");
+        let k = unary(&mut w, "sink");
+        w.connect(s, f, 0);
+        w.connect(f, k, 0);
+        let regions = regions_of(&w);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].ops.len(), 3);
+        assert_eq!(regions[0].edges.len(), 2);
+    }
+
+    #[test]
+    fn edges_assigned_to_owning_region() {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let g = unary_blocking(&mut w, "groupby");
+        let k = unary(&mut w, "sink");
+        w.connect(s, g, 0); // blocking: belongs to no region
+        w.connect(g, k, 0); // pipelined: belongs to g's region
+        let regions = regions_of(&w);
+        let total_edges: usize = regions.iter().map(|r| r.edges.len()).sum();
+        assert_eq!(total_edges, 1);
+    }
+}

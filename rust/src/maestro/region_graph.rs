@@ -1,0 +1,240 @@
+//! The region graph (§4.4.2): dependencies between regions.
+//!
+//! For every blocking link u→v, region(u) must execute to completion
+//! before region(v) may start (the destination needs the entire input
+//! on that link first). A cycle in this graph means **no feasible
+//! schedule exists** (Fig. 4.8) — e.g. when the same region produces
+//! both the build and the probe input of a join — and the workflow
+//! must be modified by materializing a pipelined link (§4.4.3).
+
+use crate::engine::dag::Workflow;
+use crate::maestro::region::{region_of, regions_of, Region};
+
+/// Regions plus dependency edges (from-region must finish first).
+#[derive(Clone, Debug)]
+pub struct RegionGraph {
+    pub regions: Vec<Region>,
+    /// (upstream region, downstream region, workflow edge idx) per
+    /// blocking link.
+    pub deps: Vec<(usize, usize, usize)>,
+}
+
+impl RegionGraph {
+    /// Self-dependencies and longer cycles make scheduling infeasible.
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Topological order of region ids, or None if cyclic.
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let n = self.regions.len();
+        let mut indeg = vec![0usize; n];
+        for (u, v, _) in &self.deps {
+            if u == v {
+                return None; // self-loop
+            }
+            indeg[*v] += 1;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        // Deterministic order: lowest id first.
+        queue.sort_unstable();
+        let mut order = Vec::with_capacity(n);
+        while let Some(&r) = queue.first() {
+            queue.remove(0);
+            order.push(r);
+            let mut newly = Vec::new();
+            for (u, v, _) in &self.deps {
+                if *u == r {
+                    indeg[*v] -= 1;
+                    if indeg[*v] == 0 {
+                        newly.push(*v);
+                    }
+                }
+            }
+            newly.sort_unstable();
+            for x in newly {
+                let pos = queue.binary_search(&x).unwrap_or_else(|p| p);
+                queue.insert(pos, x);
+            }
+        }
+        if order.len() == n {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// Regions that must *fully complete* before `target` can start
+    /// (transitive predecessors).
+    pub fn ancestors(&self, target: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut stack = vec![target];
+        while let Some(r) = stack.pop() {
+            for (u, v, _) in &self.deps {
+                if *v == r && !out.contains(u) {
+                    out.push(*u);
+                    stack.push(*u);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Build the region graph of a workflow.
+pub fn region_graph(w: &Workflow) -> RegionGraph {
+    region_graph_ext(w, &[])
+}
+
+/// Region graph with extra ordering constraints: `links` are
+/// (producer op, consumer op) pairs where the producer's region must
+/// fully complete before the consumer's region starts — materialized
+/// writer→reader couples (§4.4.3).
+pub fn region_graph_ext(w: &Workflow, links: &[(usize, usize)]) -> RegionGraph {
+    let regions = regions_of(w);
+    let mut deps = Vec::new();
+    for (ei, e) in w.edges.iter().enumerate() {
+        if w.is_blocking_edge(e) {
+            let ru = region_of(&regions, e.from);
+            let rv = region_of(&regions, e.to);
+            deps.push((ru, rv, ei));
+        }
+    }
+    for &(producer, consumer) in links {
+        let ru = region_of(&regions, producer);
+        let rv = region_of(&regions, consumer);
+        deps.push((ru, rv, usize::MAX));
+    }
+    RegionGraph { regions, deps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dag::{OpSpec, Workflow};
+    use crate::engine::operator::{Emitter, Operator};
+    use crate::engine::partitioner::PartitionScheme;
+    use crate::tuple::Tuple;
+    use crate::workloads::VecSource;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    fn src(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::source(name, 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }))
+    }
+
+    fn unary(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::unary(name, 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }))
+    }
+
+    fn join(w: &mut Workflow, name: &str) -> usize {
+        w.add(OpSpec::binary(
+            name,
+            1,
+            [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+            vec![0],
+            |_, _| Box::new(Noop),
+        ))
+    }
+
+    /// The Fig. 4.1 pathology: scan → {filter1, filter2}; filter1 →
+    /// probe, filter2 → build of the same join. Both filters share the
+    /// scan's region, so the join's region depends on itself → cyclic.
+    fn fig_4_1() -> Workflow {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let f1 = unary(&mut w, "filter1");
+        let f2 = unary(&mut w, "filter2");
+        let j = join(&mut w, "join");
+        let k = unary(&mut w, "sink");
+        w.connect(s, f1, 0);
+        w.connect(s, f2, 0);
+        w.connect(f2, j, 0); // build (blocking)
+        w.connect(f1, j, 1); // probe
+        w.connect(j, k, 0);
+        w
+    }
+
+    #[test]
+    fn independent_build_region_is_acyclic() {
+        let mut w = Workflow::new();
+        let b = src(&mut w, "build_scan");
+        let p = src(&mut w, "probe_scan");
+        let j = join(&mut w, "join");
+        let k = unary(&mut w, "sink");
+        w.connect(b, j, 0);
+        w.connect(p, j, 1);
+        w.connect(j, k, 0);
+        let g = region_graph(&w);
+        assert!(g.is_acyclic());
+        assert_eq!(g.deps.len(), 1);
+        let order = g.topo_order().unwrap();
+        // Build region first.
+        let rb = region_of(&g.regions, b);
+        let rj = region_of(&g.regions, j);
+        let pos = |x: usize| order.iter().position(|&y| y == x).unwrap();
+        assert!(pos(rb) < pos(rj));
+    }
+
+    #[test]
+    fn self_dependency_detected_as_cycle() {
+        let g = region_graph(&fig_4_1());
+        assert!(!g.is_acyclic(), "Fig. 4.1 must yield a cyclic region graph");
+        assert!(g.topo_order().is_none());
+    }
+
+    #[test]
+    fn ancestors_are_transitive() {
+        // chain: r0 →(blocking) r1 →(blocking) r2
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let g1 = w.add(
+            OpSpec::unary("gb1", 1, PartitionScheme::RoundRobin, |_, _| Box::new(Noop))
+                .with_blocking(vec![0]),
+        );
+        let g2 = w.add(
+            OpSpec::unary("gb2", 1, PartitionScheme::RoundRobin, |_, _| Box::new(Noop))
+                .with_blocking(vec![0]),
+        );
+        w.connect(s, g1, 0);
+        w.connect(g1, g2, 0);
+        let g = region_graph(&w);
+        let r2 = region_of(&g.regions, g2);
+        assert_eq!(g.ancestors(r2).len(), 2);
+    }
+
+    #[test]
+    fn diamond_without_blocking_single_region() {
+        let mut w = Workflow::new();
+        let s = src(&mut w, "scan");
+        let f1 = unary(&mut w, "f1");
+        let f2 = unary(&mut w, "f2");
+        let u = w.add(OpSpec::binary(
+            "union",
+            1,
+            [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+            vec![],
+            |_, _| Box::new(Noop),
+        ));
+        w.connect(s, f1, 0);
+        w.connect(s, f2, 0);
+        w.connect(f1, u, 0);
+        w.connect(f2, u, 1);
+        let g = region_graph(&w);
+        assert_eq!(g.regions.len(), 1);
+        assert!(g.is_acyclic());
+    }
+}

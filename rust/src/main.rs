@@ -1,0 +1,122 @@
+//! `amber` — the launcher CLI.
+//!
+//! ```text
+//! amber run <q1|q13|sort|tweets> [--workers N] [--sf X] [--reshape]
+//! amber corpus                    # Table 4.1 workflow analysis
+//! amber inspect <q1|q13|sort>     # region analysis of a workflow
+//! ```
+//!
+//! The experiment harnesses that regenerate the paper's tables and
+//! figures run under `cargo bench` (see rust/benches/); this binary is
+//! the interactive entry point.
+
+use texera_amber::config::Config;
+use texera_amber::engine::Execution;
+use texera_amber::flows;
+use texera_amber::maestro::corpus;
+use texera_amber::maestro::region_graph::region_graph;
+use texera_amber::reshape::{Approach, ReshapePlugin};
+use texera_amber::util::cli::Args;
+use texera_amber::workloads::tweets;
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("corpus") => cmd_corpus(),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            eprintln!("usage: amber <run|corpus|inspect> [...]");
+            eprintln!("  amber run q1 --sf 1.0 --workers 8           # TPC-H Q1-style");
+            eprintln!("  amber run q13 --sf 1.0 --workers 8          # Q13-style join");
+            eprintln!("  amber run sort --sf 1.0 --workers 4         # range sort");
+            eprintln!("  amber run tweets --tweets 300000 --reshape  # skewed join");
+            eprintln!("  amber corpus                                # Table 4.1");
+            eprintln!("  amber inspect q13                           # region analysis");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn flow_by_name(name: &str, sf: f64, workers: usize) -> Option<flows::Flow> {
+    match name {
+        "q1" => Some(flows::tpch_q1(sf, workers)),
+        "q13" => Some(flows::tpch_q13(sf, workers)),
+        "sort" => Some(flows::orders_sort(sf, workers)),
+        _ => None,
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let name = args.positional.get(1).map(String::as_str).unwrap_or("q1");
+    let workers: usize = args.get("workers", 4);
+    let sf: f64 = args.get("sf", 0.5);
+    if name == "tweets" {
+        let total: usize = args.get("tweets", 300_000);
+        let f = flows::tweet_join(total, workers.max(4), 0x77E3);
+        let cfg = Config { batch_size: 64, data_queue_cap: 16, ..Config::default() };
+        let exec = if args.has("reshape") {
+            let plugin = ReshapePlugin::new(f.focus, Approach::SplitByRecords, true);
+            Execution::start_with_plugin(f.workflow, cfg, Box::new(plugin))
+        } else {
+            Execution::start(f.workflow, cfg)
+        };
+        let s = exec.join();
+        println!(
+            "tweet join: {:.2?}, {} results, CA:AZ {:.2} (actual {})",
+            s.elapsed,
+            f.sink.total(),
+            f.sink.ratio(tweets::CA, tweets::AZ),
+            tweets::CA_AZ_RATIO
+        );
+        return;
+    }
+    let Some(f) = flow_by_name(name, sf, workers) else {
+        eprintln!("unknown workflow {name}");
+        std::process::exit(2);
+    };
+    let exec = Execution::start(f.workflow, Config::default());
+    let s = exec.join();
+    println!(
+        "{name}: {:.2?}, {} result rows, first-output[focus] {:?}s",
+        s.elapsed,
+        f.sink.total(),
+        s.first_output.get(&f.focus)
+    );
+}
+
+fn cmd_corpus() {
+    println!(
+        "{:<12} {:<22} {:>4} {:>6} {:>6} {:>8} {:>7} {:>8}",
+        "system", "workflow", "ops", "multi", "block", "regions", "cyclic", "choices"
+    );
+    for r in corpus::analyze() {
+        println!(
+            "{:<12} {:<22} {:>4} {:>6} {:>6} {:>8} {:>7} {:>8}",
+            r.system,
+            r.name,
+            r.operators,
+            r.multi_input_ops,
+            r.blocking_links,
+            r.regions,
+            r.cyclic,
+            r.materialization_choices
+        );
+    }
+}
+
+fn cmd_inspect(args: &Args) {
+    let name = args.positional.get(1).map(String::as_str).unwrap_or("q13");
+    let Some(f) = flow_by_name(name, 0.1, 2) else {
+        eprintln!("unknown workflow {name}");
+        std::process::exit(2);
+    };
+    let w = &f.workflow;
+    let g = region_graph(w);
+    println!("{name}: {} operators, {} regions", w.ops.len(), g.regions.len());
+    for r in &g.regions {
+        let names: Vec<&str> = r.ops.iter().map(|&o| w.ops[o].name.as_str()).collect();
+        println!("  region {}: {names:?}", r.id);
+    }
+    println!("acyclic: {}", g.is_acyclic());
+}

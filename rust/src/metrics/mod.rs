@@ -1,0 +1,188 @@
+//! Runtime metrics: counters, percentile summaries, and time-series
+//! recorders used by the experiment harnesses (candlestick charts like
+//! Figs. 2.10/2.11/3.23 need p1/p25/p50/p75/p99; the Reshape result
+//! plots need timestamped series).
+
+use std::time::Instant;
+
+/// Percentile summary over a set of f64 samples.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Summary {
+        Summary::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Percentile via nearest-rank on the sorted samples; `p` in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NAN, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NAN, f64::min)
+    }
+
+    /// The five candlestick points the paper plots: p1, p25, p50, p75, p99.
+    pub fn candlestick(&self) -> [f64; 5] {
+        [
+            self.percentile(1.0),
+            self.percentile(25.0),
+            self.percentile(50.0),
+            self.percentile(75.0),
+            self.percentile(99.0),
+        ]
+    }
+}
+
+/// A timestamped series of (seconds-since-start, value) observations.
+#[derive(Debug)]
+pub struct Timeline {
+    start: Instant,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline { start: Instant::now(), points: Vec::new() }
+    }
+
+    pub fn record(&mut self, value: f64) {
+        self.points
+            .push((self.start.elapsed().as_secs_f64(), value));
+    }
+
+    pub fn record_at(&mut self, t: f64, value: f64) {
+        self.points.push((t, value));
+    }
+
+    /// Earliest time at which the value enters (and stays within)
+    /// `±tol` of `target` — used for "time to reach the actual ratio"
+    /// readings (Figs. 3.16–3.19).
+    pub fn time_to_converge(&self, target: f64, tol: f64) -> Option<f64> {
+        let mut candidate: Option<f64> = None;
+        for &(t, v) in &self.points {
+            if (v - target).abs() <= tol {
+                candidate.get_or_insert(t);
+            } else {
+                candidate = None;
+            }
+        }
+        candidate
+    }
+}
+
+/// The paper's load-balancing ratio (§3.7.4): min(load_S, load_H) /
+/// max(load_S, load_H), averaged over periodic observations.
+#[derive(Clone, Debug, Default)]
+pub struct LoadBalanceRatio {
+    ratios: Vec<f64>,
+}
+
+impl LoadBalanceRatio {
+    pub fn observe(&mut self, a: f64, b: f64) {
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        if hi > 0.0 {
+            self.ratios.push(lo / hi);
+        }
+    }
+
+    /// Average load-balancing ratio over the execution.
+    pub fn average(&self) -> f64 {
+        if self.ratios.is_empty() {
+            return f64::NAN;
+        }
+        self.ratios.iter().sum::<f64>() / self.ratios.len() as f64
+    }
+
+    pub fn observations(&self) -> usize {
+        self.ratios.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = Summary::new();
+        for i in 0..100 {
+            s.record(i as f64);
+        }
+        let c = s.candlestick();
+        assert!(c.windows(2).all(|w| w[0] <= w[1]), "{c:?}");
+        assert_eq!(c[2], 50.0);
+    }
+
+    #[test]
+    fn empty_summary_nan() {
+        assert!(Summary::new().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn mean_simple() {
+        let mut s = Summary::new();
+        s.record(2.0);
+        s.record(4.0);
+        assert_eq!(s.mean(), 3.0);
+    }
+
+    #[test]
+    fn converge_requires_staying() {
+        let mut tl = Timeline::new();
+        tl.record_at(0.0, 10.0);
+        tl.record_at(1.0, 5.0); // touches target…
+        tl.record_at(2.0, 10.0); // …but leaves
+        tl.record_at(3.0, 5.2);
+        tl.record_at(4.0, 4.9);
+        assert_eq!(tl.time_to_converge(5.0, 0.5), Some(3.0));
+    }
+
+    #[test]
+    fn lbr_symmetric_and_bounded() {
+        let mut r = LoadBalanceRatio::default();
+        r.observe(50.0, 100.0);
+        r.observe(100.0, 50.0);
+        assert!((r.average() - 0.5).abs() < 1e-9);
+        r.observe(100.0, 100.0);
+        assert!(r.average() <= 1.0);
+    }
+}

@@ -1,0 +1,413 @@
+//! Stateless tuple-at-a-time operators (§2.4.3 category 1): selection,
+//! projection, keyword search, regex parsing, UDF map, union.
+//!
+//! These support runtime modification via [`Operator::modify`] — the
+//! paper's "change the threshold in a selection predicate, a regular
+//! expression in an entity extractor operator" (§2.1).
+
+use crate::engine::operator::{Emitter, OpPatch, Operator};
+use crate::tuple::{value_cmp, Tuple, Value};
+
+/// Comparison operator for [`Filter`] predicates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Lt,
+    Le,
+    Eq,
+    Ge,
+    Gt,
+    Ne,
+}
+
+impl Cmp {
+    fn eval(self, ord: std::cmp::Ordering) -> bool {
+        use std::cmp::Ordering::*;
+        matches!(
+            (self, ord),
+            (Cmp::Lt, Less)
+                | (Cmp::Le, Less)
+                | (Cmp::Le, Equal)
+                | (Cmp::Eq, Equal)
+                | (Cmp::Ge, Equal)
+                | (Cmp::Ge, Greater)
+                | (Cmp::Gt, Greater)
+                | (Cmp::Ne, Less)
+                | (Cmp::Ne, Greater)
+        )
+    }
+}
+
+/// Selection: keep tuples where `field <cmp> constant`. The constant is
+/// runtime-modifiable (`modify("constant", v)`), as is the comparison
+/// (`modify("cmp", "<"|"<="|"=="|">="|">"|"!=")`).
+pub struct Filter {
+    pub field: usize,
+    pub cmp: Cmp,
+    pub constant: Value,
+    /// Artificial per-tuple cost in nanoseconds (models expensive
+    /// predicates; 0 = none).
+    pub cost_ns: u64,
+}
+
+impl Filter {
+    pub fn new(field: usize, cmp: Cmp, constant: Value) -> Filter {
+        Filter { field, cmp, constant, cost_ns: 0 }
+    }
+}
+
+impl Operator for Filter {
+    fn name(&self) -> &str {
+        "filter"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        if self.cost_ns > 0 {
+            busy_spin(self.cost_ns);
+        }
+        if self.cmp.eval(value_cmp(t.get(self.field), &self.constant)) {
+            out.emit(t);
+        }
+    }
+
+    fn modify(&mut self, patch: &OpPatch) -> Result<(), String> {
+        match patch.param.as_str() {
+            "constant" => {
+                self.constant = parse_value(&patch.value);
+                Ok(())
+            }
+            "cmp" => {
+                self.cmp = match patch.value.as_str() {
+                    "<" => Cmp::Lt,
+                    "<=" => Cmp::Le,
+                    "==" => Cmp::Eq,
+                    ">=" => Cmp::Ge,
+                    ">" => Cmp::Gt,
+                    "!=" => Cmp::Ne,
+                    other => return Err(format!("bad cmp {other}")),
+                };
+                Ok(())
+            }
+            p => Err(format!("filter: unknown parameter {p}")),
+        }
+    }
+}
+
+fn parse_value(s: &str) -> Value {
+    if let Ok(i) = s.parse::<i64>() {
+        Value::Int(i)
+    } else if let Ok(f) = s.parse::<f64>() {
+        Value::Float(f)
+    } else {
+        Value::str(s)
+    }
+}
+
+fn busy_spin(ns: u64) {
+    let t0 = std::time::Instant::now();
+    while (t0.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+/// Keyword search over a string field: keep tuples whose field contains
+/// *any* of the keywords. Keywords are runtime-modifiable — the
+/// "blunt"-tweets example of Ch. 1 (`modify("keywords", "a,b,c")`).
+pub struct KeywordSearch {
+    pub field: usize,
+    pub keywords: Vec<String>,
+}
+
+impl KeywordSearch {
+    pub fn new(field: usize, keywords: &[&str]) -> KeywordSearch {
+        KeywordSearch {
+            field,
+            keywords: keywords.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl Operator for KeywordSearch {
+    fn name(&self) -> &str {
+        "keyword_search"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        if let Some(text) = t.get(self.field).as_str() {
+            if self.keywords.iter().any(|k| text.contains(k.as_str())) {
+                out.emit(t);
+            }
+        }
+    }
+
+    fn modify(&mut self, patch: &OpPatch) -> Result<(), String> {
+        match patch.param.as_str() {
+            "keywords" => {
+                self.keywords =
+                    patch.value.split(',').map(|s| s.trim().to_string()).collect();
+                Ok(())
+            }
+            p => Err(format!("keyword_search: unknown parameter {p}")),
+        }
+    }
+}
+
+/// Projection: keep the given field positions, in order.
+pub struct Project {
+    pub fields: Vec<usize>,
+}
+
+impl Project {
+    pub fn new(fields: &[usize]) -> Project {
+        Project { fields: fields.to_vec() }
+    }
+}
+
+impl Operator for Project {
+    fn name(&self) -> &str {
+        "project"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        out.emit(Tuple::new(
+            self.fields.iter().map(|&i| t.get(i).clone()).collect(),
+        ))
+    }
+}
+
+/// Regex-style parser: splits a raw text field on a delimiter into
+/// typed fields (the RegexParser of §2.5.1). Tuples that fail to parse
+/// are dropped or, with `strict`, reported through a panic — the
+/// Fig. 1.1 scenario where a breakpoint should catch them instead.
+pub struct RegexParser {
+    pub field: usize,
+    pub delimiter: char,
+    pub expected_fields: usize,
+    pub strict: bool,
+    /// Count of dropped (unparseable) tuples.
+    pub dropped: u64,
+}
+
+impl RegexParser {
+    pub fn new(field: usize, delimiter: char, expected_fields: usize) -> RegexParser {
+        RegexParser { field, delimiter, expected_fields, strict: false, dropped: 0 }
+    }
+}
+
+impl Operator for RegexParser {
+    fn name(&self) -> &str {
+        "regex_parser"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        let Some(raw) = t.get(self.field).as_str() else {
+            self.dropped += 1;
+            return;
+        };
+        let parts: Vec<&str> = raw.split(self.delimiter).collect();
+        if parts.len() != self.expected_fields {
+            if self.strict {
+                panic!("regex_parser: cannot parse {raw:?}");
+            }
+            self.dropped += 1;
+            return;
+        }
+        out.emit(Tuple::new(parts.iter().map(|p| parse_value(p)).collect()));
+    }
+
+    fn modify(&mut self, patch: &OpPatch) -> Result<(), String> {
+        match patch.param.as_str() {
+            // The Ch. 1 adaptivity scenario: switch the parser to a
+            // lenient mode at runtime instead of crashing the workflow.
+            "strict" => {
+                self.strict = patch.value == "true";
+                Ok(())
+            }
+            "delimiter" => {
+                self.delimiter =
+                    patch.value.chars().next().ok_or("empty delimiter")?;
+                Ok(())
+            }
+            p => Err(format!("regex_parser: unknown parameter {p}")),
+        }
+    }
+}
+
+/// A user-defined map with an artificial per-tuple cost — stands in for
+/// expensive UDFs when the real PJRT-backed ML operator is overkill
+/// (e.g. the Fig. 2.12 worker-count sweep). The cost is a *sleep*, not
+/// a spin: the paper's SentimentAnalysis (~4 s/tuple CognitiveRocket)
+/// is latency-bound, which is why adding workers helps — a property
+/// that survives our single-core testbed.
+pub struct MapUdf {
+    pub f: Box<dyn FnMut(&Tuple) -> Tuple + Send>,
+    pub cost_ns: u64,
+}
+
+impl MapUdf {
+    pub fn identity(cost_ns: u64) -> MapUdf {
+        MapUdf { f: Box::new(|t| t.clone()), cost_ns }
+    }
+}
+
+impl Operator for MapUdf {
+    fn name(&self) -> &str {
+        "map_udf"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        if self.cost_ns > 0 {
+            std::thread::sleep(std::time::Duration::from_nanos(self.cost_ns));
+        }
+        out.emit((self.f)(&t));
+    }
+}
+
+/// Union: forward tuples from all input ports unchanged.
+pub struct Union {
+    ports: usize,
+}
+
+impl Union {
+    pub fn new(ports: usize) -> Union {
+        Union { ports }
+    }
+}
+
+impl Operator for Union {
+    fn name(&self) -> &str {
+        "union"
+    }
+
+    fn num_ports(&self) -> usize {
+        self.ports
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        out.emit(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::operator::VecEmitter;
+
+    fn t(vals: Vec<Value>) -> Tuple {
+        Tuple::new(vals)
+    }
+
+    #[test]
+    fn filter_keeps_matching() {
+        let mut f = Filter::new(0, Cmp::Lt, Value::Int(5));
+        let mut out = VecEmitter::default();
+        for i in 0..10 {
+            f.process(t(vec![Value::Int(i)]), 0, &mut out);
+        }
+        assert_eq!(out.0.len(), 5);
+    }
+
+    #[test]
+    fn filter_modify_constant_at_runtime() {
+        let mut f = Filter::new(0, Cmp::Lt, Value::Int(5));
+        f.modify(&OpPatch { param: "constant".into(), value: "8".into() })
+            .unwrap();
+        let mut out = VecEmitter::default();
+        for i in 0..10 {
+            f.process(t(vec![Value::Int(i)]), 0, &mut out);
+        }
+        assert_eq!(out.0.len(), 8);
+    }
+
+    #[test]
+    fn filter_modify_cmp() {
+        let mut f = Filter::new(0, Cmp::Lt, Value::Int(5));
+        f.modify(&OpPatch { param: "cmp".into(), value: ">=".into() })
+            .unwrap();
+        let mut out = VecEmitter::default();
+        for i in 0..10 {
+            f.process(t(vec![Value::Int(i)]), 0, &mut out);
+        }
+        assert_eq!(out.0.len(), 5);
+    }
+
+    #[test]
+    fn filter_rejects_unknown_param() {
+        let mut f = Filter::new(0, Cmp::Lt, Value::Int(5));
+        assert!(f
+            .modify(&OpPatch { param: "nope".into(), value: "1".into() })
+            .is_err());
+    }
+
+    #[test]
+    fn keyword_search_any_match() {
+        let mut k = KeywordSearch::new(0, &["covid", "flu"]);
+        let mut out = VecEmitter::default();
+        k.process(t(vec![Value::str("covid cases rise")]), 0, &mut out);
+        k.process(t(vec![Value::str("sunny day")]), 0, &mut out);
+        k.process(t(vec![Value::str("flu season")]), 0, &mut out);
+        assert_eq!(out.0.len(), 2);
+    }
+
+    #[test]
+    fn keyword_modify_fixes_blunt_problem() {
+        // Ch. 1: "blunt" collects Emily Blunt tweets; narrow at runtime.
+        let mut k = KeywordSearch::new(0, &["blunt"]);
+        let mut out = VecEmitter::default();
+        k.process(t(vec![Value::str("emily blunt movie")]), 0, &mut out);
+        assert_eq!(out.0.len(), 1);
+        k.modify(&OpPatch {
+            param: "keywords".into(),
+            value: "blunt smoking,blunt wrap".into(),
+        })
+        .unwrap();
+        k.process(t(vec![Value::str("emily blunt movie")]), 0, &mut out);
+        assert_eq!(out.0.len(), 1); // no longer matches
+    }
+
+    #[test]
+    fn project_reorders() {
+        let mut p = Project::new(&[1, 0]);
+        let mut out = VecEmitter::default();
+        p.process(t(vec![Value::Int(1), Value::str("x")]), 0, &mut out);
+        assert_eq!(out.0[0].get(0).as_str(), Some("x"));
+        assert_eq!(out.0[0].get(1).as_int(), Some(1));
+    }
+
+    #[test]
+    fn parser_splits_and_types() {
+        let mut p = RegexParser::new(0, '\t', 3);
+        let mut out = VecEmitter::default();
+        p.process(t(vec![Value::str("7\thello\t2.5")]), 0, &mut out);
+        assert_eq!(out.0[0].get(0).as_int(), Some(7));
+        assert_eq!(out.0[0].get(1).as_str(), Some("hello"));
+        assert_eq!(out.0[0].get(2).as_float(), Some(2.5));
+    }
+
+    #[test]
+    fn parser_drops_bad_rows_when_lenient() {
+        let mut p = RegexParser::new(0, '\t', 3);
+        let mut out = VecEmitter::default();
+        p.process(t(vec![Value::str("only\ttwo")]), 0, &mut out);
+        assert_eq!(out.0.len(), 0);
+        assert_eq!(p.dropped, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn parser_strict_panics() {
+        let mut p = RegexParser::new(0, '\t', 3);
+        p.strict = true;
+        let mut out = VecEmitter::default();
+        p.process(t(vec![Value::str("bad")]), 0, &mut out);
+    }
+
+    #[test]
+    fn union_forwards_all_ports() {
+        let mut u = Union::new(2);
+        let mut out = VecEmitter::default();
+        u.process(t(vec![Value::Int(1)]), 0, &mut out);
+        u.process(t(vec![Value::Int(2)]), 1, &mut out);
+        assert_eq!(out.0.len(), 2);
+        assert_eq!(u.num_ports(), 2);
+    }
+}

@@ -1,0 +1,452 @@
+//! Two-layer group-by (§2.4.3 category 4): first-layer workers compute
+//! local partial aggregates; a hash-partitioned second layer finalizes
+//! per-group results. Both layers are mutable-state operators
+//! (Table 3.1), so SBK migration must be marker-synchronized and SBR
+//! produces scattered states merged at EOF (§3.5.4's blocking-operator
+//! conditions hold: group-by can combine scattered parts and blocks
+//! until EOF).
+
+use crate::engine::operator::{Emitter, OpState, Operator};
+use crate::tuple::{Tuple, Value};
+use std::collections::HashMap;
+
+/// Aggregate kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKind {
+    Count,
+    Sum,
+    Min,
+    Max,
+    /// Sum + count → final layer emits the mean.
+    Avg,
+}
+
+/// Per-group accumulator: [primary, secondary(count for avg)].
+fn init_acc(kind: AggKind) -> Vec<f64> {
+    match kind {
+        AggKind::Count => vec![0.0],
+        AggKind::Sum => vec![0.0],
+        AggKind::Min => vec![f64::INFINITY],
+        AggKind::Max => vec![f64::NEG_INFINITY],
+        AggKind::Avg => vec![0.0, 0.0],
+    }
+}
+
+fn accumulate(kind: AggKind, acc: &mut [f64], v: f64) {
+    match kind {
+        AggKind::Count => acc[0] += 1.0,
+        AggKind::Sum => acc[0] += v,
+        AggKind::Min => acc[0] = acc[0].min(v),
+        AggKind::Max => acc[0] = acc[0].max(v),
+        AggKind::Avg => {
+            acc[0] += v;
+            acc[1] += 1.0;
+        }
+    }
+}
+
+fn combine(kind: AggKind, acc: &mut [f64], other: &[f64]) {
+    match kind {
+        AggKind::Count | AggKind::Sum => acc[0] += other[0],
+        AggKind::Min => acc[0] = acc[0].min(other[0]),
+        AggKind::Max => acc[0] = acc[0].max(other[0]),
+        AggKind::Avg => {
+            acc[0] += other[0];
+            acc[1] += other[1];
+        }
+    }
+}
+
+fn finalize(kind: AggKind, acc: &[f64]) -> f64 {
+    match kind {
+        AggKind::Avg => {
+            if acc[1] > 0.0 {
+                acc[0] / acc[1]
+            } else {
+                0.0
+            }
+        }
+        _ => acc[0],
+    }
+}
+
+/// First layer: local partial aggregation; emits (group_key,
+/// partial...) at EOF. Keeps the *group value* alongside the hash so
+/// output tuples carry the real key.
+pub struct GroupByPartial {
+    pub key_field: usize,
+    /// Value field (ignored for COUNT).
+    pub value_field: usize,
+    pub kind: AggKind,
+    groups: HashMap<u64, (Value, Vec<f64>)>,
+}
+
+impl GroupByPartial {
+    pub fn new(key_field: usize, value_field: usize, kind: AggKind) -> GroupByPartial {
+        GroupByPartial { key_field, value_field, kind, groups: HashMap::new() }
+    }
+}
+
+impl Operator for GroupByPartial {
+    fn name(&self) -> &str {
+        "group_by_partial"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        let key = t.get(self.key_field);
+        let h = key.stable_hash();
+        let v = t.get(self.value_field).as_float().unwrap_or(0.0);
+        let entry = self
+            .groups
+            .entry(h)
+            .or_insert_with(|| (key.clone(), init_acc(self.kind)));
+        accumulate(self.kind, &mut entry.1, v);
+    }
+
+    fn finish(&mut self, out: &mut dyn Emitter) {
+        // Emit (key, partial0[, partial1]) for the final layer.
+        let mut keys: Vec<u64> = self.groups.keys().copied().collect();
+        keys.sort_unstable(); // deterministic output order (A3)
+        for h in keys {
+            let (key, acc) = &self.groups[&h];
+            let mut vals = vec![key.clone()];
+            vals.extend(acc.iter().map(|a| Value::Float(*a)));
+            out.emit(Tuple::new(vals));
+        }
+    }
+
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        for (h, (key, acc)) in &self.groups {
+            s.keyed_aggs.insert(*h, acc.clone());
+            s.keyed_tuples
+                .insert(*h, vec![Tuple::new(vec![key.clone()])]);
+        }
+        s
+    }
+
+    fn restore(&mut self, s: OpState) {
+        self.groups.clear();
+        for (h, acc) in s.keyed_aggs {
+            let key = s.keyed_tuples
+                .get(&h)
+                .and_then(|v| v.first())
+                .map(|t| t.get(0).clone())
+                .unwrap_or(Value::Null);
+            self.groups.insert(h, (key, acc));
+        }
+    }
+
+    fn state_size(&self) -> usize {
+        self.groups.len()
+    }
+
+    fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        let mut out = OpState::default();
+        let targets: Vec<u64> = match keys {
+            None => self.groups.keys().copied().collect(),
+            Some(ks) => ks.to_vec(),
+        };
+        for h in targets {
+            let item = if replicate {
+                self.groups.get(&h).cloned()
+            } else {
+                self.groups.remove(&h)
+            };
+            if let Some((key, acc)) = item {
+                out.keyed_aggs.insert(h, acc);
+                out.keyed_tuples.insert(h, vec![Tuple::new(vec![key])]);
+            }
+        }
+        out
+    }
+
+    fn merge_state(&mut self, s: OpState) {
+        for (h, acc) in s.keyed_aggs {
+            let key = s.keyed_tuples
+                .get(&h)
+                .and_then(|v| v.first())
+                .map(|t| t.get(0).clone())
+                .unwrap_or(Value::Null);
+            match self.groups.entry(h) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    combine(self.kind, &mut e.get_mut().1, &acc);
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert((key, acc));
+                }
+            }
+        }
+    }
+
+    fn state_mutable(&self) -> bool {
+        true
+    }
+}
+
+/// Second layer: combines partials (input: (key, partial...) hashed by
+/// key) and emits final (key, aggregate) at EOF.
+pub struct GroupByFinal {
+    pub kind: AggKind,
+    groups: HashMap<u64, (Value, Vec<f64>)>,
+    /// (worker idx, worker count) under hash partitioning — set when
+    /// the operator runs under SBR mitigation so foreign groups
+    /// (scattered state, §3.5.4) can be shipped to their owners at EOF.
+    ownership: Option<(usize, usize)>,
+}
+
+impl GroupByFinal {
+    pub fn new(kind: AggKind) -> GroupByFinal {
+        GroupByFinal { kind, groups: HashMap::new(), ownership: None }
+    }
+
+    /// Group-by worker `idx` of `n` under hash partitioning; enables
+    /// scattered-state resolution (pair with
+    /// [`OpSpec::with_scatter_merge`](crate::engine::dag::OpSpec::with_scatter_merge)).
+    pub fn new_partitioned(kind: AggKind, idx: usize, n: usize) -> GroupByFinal {
+        GroupByFinal { kind, groups: HashMap::new(), ownership: Some((idx, n)) }
+    }
+}
+
+impl Operator for GroupByFinal {
+    fn name(&self) -> &str {
+        "group_by_final"
+    }
+
+    fn blocking_ports(&self) -> Vec<usize> {
+        vec![0]
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        let key = t.get(0);
+        let h = key.stable_hash();
+        let partial: Vec<f64> = (1..t.arity())
+            .map(|i| t.get(i).as_float().unwrap_or(0.0))
+            .collect();
+        match self.groups.entry(h) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                combine(self.kind, &mut e.get_mut().1, &partial);
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert((key.clone(), partial));
+            }
+        }
+    }
+
+    fn finish(&mut self, out: &mut dyn Emitter) {
+        let mut keys: Vec<u64> = self.groups.keys().copied().collect();
+        keys.sort_unstable();
+        for h in keys {
+            let (key, acc) = &self.groups[&h];
+            out.emit(Tuple::new(vec![
+                key.clone(),
+                Value::Float(finalize(self.kind, acc)),
+            ]));
+        }
+    }
+
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        for (h, (key, acc)) in &self.groups {
+            s.keyed_aggs.insert(*h, acc.clone());
+            s.keyed_tuples
+                .insert(*h, vec![Tuple::new(vec![key.clone()])]);
+        }
+        s
+    }
+
+    fn restore(&mut self, s: OpState) {
+        self.groups.clear();
+        for (h, acc) in s.keyed_aggs {
+            let key = s.keyed_tuples
+                .get(&h)
+                .and_then(|v| v.first())
+                .map(|t| t.get(0).clone())
+                .unwrap_or(Value::Null);
+            self.groups.insert(h, (key, acc));
+        }
+    }
+
+    fn state_size(&self) -> usize {
+        self.groups.len()
+    }
+
+    fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        let mut out = OpState::default();
+        let targets: Vec<u64> = match keys {
+            None => self.groups.keys().copied().collect(),
+            Some(ks) => ks.to_vec(),
+        };
+        for h in targets {
+            let item = if replicate {
+                self.groups.get(&h).cloned()
+            } else {
+                self.groups.remove(&h)
+            };
+            if let Some((key, acc)) = item {
+                out.keyed_aggs.insert(h, acc);
+                out.keyed_tuples.insert(h, vec![Tuple::new(vec![key])]);
+            }
+        }
+        out
+    }
+
+    fn merge_state(&mut self, s: OpState) {
+        // Scattered-state merge (§3.5.4): partial aggregates for the
+        // same group combine associatively.
+        for (h, acc) in s.keyed_aggs {
+            let key = s.keyed_tuples
+                .get(&h)
+                .and_then(|v| v.first())
+                .map(|t| t.get(0).clone())
+                .unwrap_or(Value::Null);
+            match self.groups.entry(h) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    combine(self.kind, &mut e.get_mut().1, &acc);
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert((key, acc));
+                }
+            }
+        }
+    }
+
+    fn state_mutable(&self) -> bool {
+        true
+    }
+
+    fn scattered_parts(&mut self) -> Vec<(u64, OpState)> {
+        // Ship foreign groups (received through mitigation routes) back
+        // to their hash owners at EOF (§3.5.4): aggregates combine
+        // associatively, so the owner's merge_state yields exact totals.
+        let Some((idx, n)) = self.ownership else { return Vec::new() };
+        let foreign: Vec<u64> = self
+            .groups
+            .keys()
+            .copied()
+            .filter(|h| (*h % n as u64) as usize != idx)
+            .collect();
+        let mut by_owner: HashMap<u64, OpState> = HashMap::new();
+        for h in foreign {
+            let owner = h % n as u64;
+            let (key, acc) = self.groups.remove(&h).unwrap();
+            let st = by_owner.entry(owner).or_default();
+            st.keyed_aggs.insert(h, acc);
+            st.keyed_tuples.insert(h, vec![Tuple::new(vec![key])]);
+        }
+        by_owner.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::operator::VecEmitter;
+
+    fn t2(k: i64, v: f64) -> Tuple {
+        Tuple::new(vec![Value::Int(k), Value::Float(v)])
+    }
+
+    fn run_two_layer(kind: AggKind, input: Vec<Tuple>) -> HashMap<i64, f64> {
+        let mut partial = GroupByPartial::new(0, 1, kind);
+        let mut out1 = VecEmitter::default();
+        for t in input {
+            partial.process(t, 0, &mut out1);
+        }
+        partial.finish(&mut out1);
+        let mut fin = GroupByFinal::new(kind);
+        let mut out2 = VecEmitter::default();
+        for t in out1.0 {
+            fin.process(t, 0, &mut out2);
+        }
+        fin.finish(&mut out2);
+        out2.0
+            .iter()
+            .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn count_per_group() {
+        let r = run_two_layer(
+            AggKind::Count,
+            vec![t2(1, 0.0), t2(1, 0.0), t2(2, 0.0)],
+        );
+        assert_eq!(r[&1], 2.0);
+        assert_eq!(r[&2], 1.0);
+    }
+
+    #[test]
+    fn sum_and_avg() {
+        let r = run_two_layer(AggKind::Sum, vec![t2(1, 2.0), t2(1, 3.0)]);
+        assert_eq!(r[&1], 5.0);
+        let r = run_two_layer(AggKind::Avg, vec![t2(1, 2.0), t2(1, 4.0)]);
+        assert_eq!(r[&1], 3.0);
+    }
+
+    #[test]
+    fn min_max() {
+        let r = run_two_layer(AggKind::Min, vec![t2(1, 5.0), t2(1, 2.0)]);
+        assert_eq!(r[&1], 2.0);
+        let r = run_two_layer(AggKind::Max, vec![t2(1, 5.0), t2(1, 2.0)]);
+        assert_eq!(r[&1], 5.0);
+    }
+
+    #[test]
+    fn partials_combine_across_workers() {
+        // Two partial workers, one final worker.
+        let mut p1 = GroupByPartial::new(0, 1, AggKind::Sum);
+        let mut p2 = GroupByPartial::new(0, 1, AggKind::Sum);
+        let (mut o1, mut o2) = (VecEmitter::default(), VecEmitter::default());
+        p1.process(t2(1, 1.0), 0, &mut o1);
+        p2.process(t2(1, 2.0), 0, &mut o2);
+        p1.finish(&mut o1);
+        p2.finish(&mut o2);
+        let mut f = GroupByFinal::new(AggKind::Sum);
+        let mut of = VecEmitter::default();
+        for t in o1.0.into_iter().chain(o2.0) {
+            f.process(t, 0, &mut of);
+        }
+        f.finish(&mut of);
+        assert_eq!(of.0.len(), 1);
+        assert_eq!(of.0[0].get(1).as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn scattered_state_merges() {
+        // SBR split the same group across two final workers; merging
+        // their states must equal single-worker processing (§3.5.4).
+        let mut a = GroupByFinal::new(AggKind::Count);
+        let mut b = GroupByFinal::new(AggKind::Count);
+        let mut o = VecEmitter::default();
+        a.process(Tuple::new(vec![Value::Int(1), Value::Float(2.0)]), 0, &mut o);
+        b.process(Tuple::new(vec![Value::Int(1), Value::Float(3.0)]), 0, &mut o);
+        let scattered = b.extract_state(None, false);
+        a.merge_state(scattered);
+        let mut out = VecEmitter::default();
+        a.finish(&mut out);
+        assert_eq!(out.0.len(), 1);
+        assert_eq!(out.0[0].get(1).as_float(), Some(5.0));
+        assert_eq!(b.state_size(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut p = GroupByPartial::new(0, 1, AggKind::Sum);
+        let mut o = VecEmitter::default();
+        p.process(t2(1, 2.5), 0, &mut o);
+        let snap = p.snapshot();
+        let mut q = GroupByPartial::new(0, 1, AggKind::Sum);
+        q.restore(snap);
+        q.process(t2(1, 2.5), 0, &mut o);
+        let mut out = VecEmitter::default();
+        q.finish(&mut out);
+        assert_eq!(out.0[0].get(1).as_float(), Some(5.0));
+    }
+
+    #[test]
+    fn groupby_is_mutable_state() {
+        assert!(GroupByPartial::new(0, 1, AggKind::Sum).state_mutable());
+        assert!(GroupByFinal::new(AggKind::Sum).state_mutable());
+    }
+}

@@ -1,0 +1,327 @@
+//! Two-phase hash join (§2.4.3 category 3, §4.2).
+//!
+//! Port 0 is the **build** input (blocking: no output until its entire
+//! input is processed); port 1 is the **probe** input. Each worker
+//! performs both phases (Fig. 4.3).
+//!
+//! State mutability (Table 3.1): the build phase is *mutable* (every
+//! build tuple mutates the hash table); the probe phase is *immutable*
+//! (probe tuples read it). Reshape therefore **replicates** hash-table
+//! entries to helpers during probe-phase mitigation (Fig. 3.10 branch
+//! (a)) and uses marker-synchronized moves during build-phase SBK.
+//!
+//! Early-probe handling: in strict mode (Maestro's premise, Fig. 4.1) a
+//! probe tuple arriving before build EOF is an error; in buffering mode
+//! (default) such tuples are buffered and replayed at build EOF — the
+//! memory cost Maestro's materialization planning avoids.
+
+use crate::engine::operator::{Emitter, OpState, Operator};
+use crate::tuple::Tuple;
+use std::collections::HashMap;
+
+/// Build port index.
+pub const BUILD: usize = 0;
+/// Probe port index.
+pub const PROBE: usize = 1;
+
+pub struct HashJoin {
+    /// Key field in build tuples.
+    pub build_key: usize,
+    /// Key field in probe tuples.
+    pub probe_key: usize,
+    /// Hash table: key hash → build tuples.
+    table: HashMap<u64, Vec<Tuple>>,
+    build_done: bool,
+    /// Probe tuples that arrived before build EOF (buffering mode).
+    early_probe: Vec<Tuple>,
+    /// Error on early probe input instead of buffering.
+    pub strict: bool,
+    /// Set when a strict-mode violation occurred (surfaced in stats).
+    pub violated: bool,
+    /// Artificial per-probe-tuple cost in nanoseconds (0 = none). The
+    /// skew experiments assume "the join operator is the bottleneck"
+    /// (§3.3.1); this models the paper's expensive join workers.
+    pub probe_cost_ns: u64,
+    tuples_in_state: usize,
+}
+
+impl HashJoin {
+    pub fn new(build_key: usize, probe_key: usize) -> HashJoin {
+        HashJoin {
+            build_key,
+            probe_key,
+            table: HashMap::new(),
+            build_done: false,
+            early_probe: Vec::new(),
+            strict: false,
+            violated: false,
+            probe_cost_ns: 0,
+            tuples_in_state: 0,
+        }
+    }
+
+    pub fn strict(mut self) -> HashJoin {
+        self.strict = true;
+        self
+    }
+
+    /// Builder: artificial per-probe-tuple cost.
+    pub fn with_probe_cost(mut self, ns: u64) -> HashJoin {
+        self.probe_cost_ns = ns;
+        self
+    }
+
+    fn probe_one(&self, t: &Tuple, out: &mut dyn Emitter) {
+        let h = t.get(self.probe_key).stable_hash();
+        if let Some(matches) = self.table.get(&h) {
+            for b in matches {
+                out.emit(b.concat(t));
+            }
+        }
+    }
+}
+
+impl Operator for HashJoin {
+    fn name(&self) -> &str {
+        "hash_join"
+    }
+
+    fn num_ports(&self) -> usize {
+        2
+    }
+
+    fn blocking_ports(&self) -> Vec<usize> {
+        vec![BUILD]
+    }
+
+    fn process(&mut self, t: Tuple, port: usize, out: &mut dyn Emitter) {
+        match port {
+            BUILD => {
+                let h = t.get(self.build_key).stable_hash();
+                self.table.entry(h).or_default().push(t);
+                self.tuples_in_state += 1;
+            }
+            PROBE => {
+                if self.probe_cost_ns > 0 {
+                    let t0 = std::time::Instant::now();
+                    while (t0.elapsed().as_nanos() as u64) < self.probe_cost_ns {
+                        std::hint::spin_loop();
+                    }
+                }
+                if self.build_done {
+                    self.probe_one(&t, out);
+                } else if self.strict {
+                    // The Fig. 4.1 exception: probe before build EOF.
+                    self.violated = true;
+                } else {
+                    self.early_probe.push(t);
+                }
+            }
+            _ => unreachable!("hash join has 2 ports"),
+        }
+    }
+
+    fn finish_port(&mut self, port: usize, out: &mut dyn Emitter) {
+        if port == BUILD {
+            self.build_done = true;
+            // Replay buffered probe input.
+            let buffered = std::mem::take(&mut self.early_probe);
+            for t in &buffered {
+                self.probe_one(t, out);
+            }
+        }
+    }
+
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        s.keyed_tuples = self.table.clone();
+        s.counters.insert("build_done".into(), self.build_done as i64);
+        if !self.early_probe.is_empty() {
+            s.keyed_tuples
+                .entry(u64::MAX) // sentinel scope for the early-probe buffer
+                .or_default()
+                .extend(self.early_probe.iter().cloned());
+        }
+        s
+    }
+
+    fn restore(&mut self, mut s: OpState) {
+        self.early_probe = s.keyed_tuples.remove(&u64::MAX).unwrap_or_default();
+        self.build_done = s.counters.get("build_done").copied().unwrap_or(0) != 0;
+        self.tuples_in_state = s.keyed_tuples.values().map(Vec::len).sum();
+        self.table = s.keyed_tuples;
+    }
+
+    fn state_size(&self) -> usize {
+        self.tuples_in_state
+    }
+
+    fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        let mut out = OpState::default();
+        match keys {
+            None => {
+                // Whole-table: probe-phase SBR replication.
+                out.keyed_tuples = self.table.clone();
+                if !replicate {
+                    self.table.clear();
+                    self.tuples_in_state = 0;
+                }
+            }
+            Some(ks) => {
+                for k in ks {
+                    if replicate {
+                        if let Some(v) = self.table.get(k) {
+                            out.keyed_tuples.insert(*k, v.clone());
+                        }
+                    } else if let Some(v) = self.table.remove(k) {
+                        self.tuples_in_state -= v.len();
+                        out.keyed_tuples.insert(*k, v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn merge_state(&mut self, s: OpState) {
+        for (k, mut v) in s.keyed_tuples {
+            if k == u64::MAX {
+                continue;
+            }
+            self.tuples_in_state += v.len();
+            self.table.entry(k).or_default().append(&mut v);
+        }
+        // A helper receiving probe-phase state is by definition past
+        // build (the skewed worker only migrates state when its own
+        // build phase is complete).
+        self.build_done = true;
+    }
+
+    fn state_mutable(&self) -> bool {
+        // Mutability is per-phase (§3.5.1).
+        !self.build_done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::operator::VecEmitter;
+    use crate::tuple::Value;
+
+    fn kv(k: i64, v: &str) -> Tuple {
+        Tuple::new(vec![Value::Int(k), Value::str(v)])
+    }
+
+    #[test]
+    fn joins_matching_keys() {
+        let mut j = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        j.process(kv(1, "b1"), BUILD, &mut out);
+        j.process(kv(2, "b2"), BUILD, &mut out);
+        j.finish_port(BUILD, &mut out);
+        j.process(kv(1, "p1"), PROBE, &mut out);
+        j.process(kv(3, "p3"), PROBE, &mut out);
+        assert_eq!(out.0.len(), 1);
+        assert_eq!(out.0[0].arity(), 4);
+        assert_eq!(out.0[0].get(1).as_str(), Some("b1"));
+        assert_eq!(out.0[0].get(3).as_str(), Some("p1"));
+    }
+
+    #[test]
+    fn duplicate_build_keys_multiply() {
+        let mut j = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        j.process(kv(1, "a"), BUILD, &mut out);
+        j.process(kv(1, "b"), BUILD, &mut out);
+        j.finish_port(BUILD, &mut out);
+        j.process(kv(1, "p"), PROBE, &mut out);
+        assert_eq!(out.0.len(), 2);
+    }
+
+    #[test]
+    fn early_probe_buffered_and_replayed() {
+        let mut j = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        j.process(kv(1, "p-early"), PROBE, &mut out);
+        assert_eq!(out.0.len(), 0);
+        j.process(kv(1, "b"), BUILD, &mut out);
+        j.finish_port(BUILD, &mut out);
+        assert_eq!(out.0.len(), 1, "buffered probe replayed at build EOF");
+    }
+
+    #[test]
+    fn strict_mode_flags_violation() {
+        let mut j = HashJoin::new(0, 0).strict();
+        let mut out = VecEmitter::default();
+        j.process(kv(1, "p"), PROBE, &mut out);
+        assert!(j.violated);
+        assert_eq!(out.0.len(), 0);
+    }
+
+    #[test]
+    fn mutability_flips_at_build_eof() {
+        let mut j = HashJoin::new(0, 0);
+        assert!(j.state_mutable(), "build phase is mutable");
+        let mut out = VecEmitter::default();
+        j.finish_port(BUILD, &mut out);
+        assert!(!j.state_mutable(), "probe phase is immutable");
+    }
+
+    #[test]
+    fn extract_replicate_keeps_original() {
+        let mut j = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        j.process(kv(1, "b"), BUILD, &mut out);
+        j.finish_port(BUILD, &mut out);
+        let k = Value::Int(1).stable_hash();
+        let st = j.extract_state(Some(&[k]), true);
+        assert_eq!(st.keyed_tuples[&k].len(), 1);
+        // Original still probes fine.
+        j.process(kv(1, "p"), PROBE, &mut out);
+        assert_eq!(out.0.len(), 1);
+    }
+
+    #[test]
+    fn extract_move_removes() {
+        let mut j = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        j.process(kv(1, "b"), BUILD, &mut out);
+        j.finish_port(BUILD, &mut out);
+        let k = Value::Int(1).stable_hash();
+        let st = j.extract_state(Some(&[k]), false);
+        assert_eq!(st.keyed_tuples[&k].len(), 1);
+        j.process(kv(1, "p"), PROBE, &mut out);
+        assert_eq!(out.0.len(), 0, "moved key no longer matches");
+        assert_eq!(j.state_size(), 0);
+    }
+
+    #[test]
+    fn helper_merge_enables_probing() {
+        let mut skewed = HashJoin::new(0, 0);
+        let mut helper = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        skewed.process(kv(1, "b"), BUILD, &mut out);
+        skewed.finish_port(BUILD, &mut out);
+        let st = skewed.extract_state(None, true);
+        helper.merge_state(st);
+        helper.process(kv(1, "p"), PROBE, &mut out);
+        assert_eq!(out.0.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut j = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        j.process(kv(1, "b"), BUILD, &mut out);
+        j.process(kv(2, "p-early"), PROBE, &mut out);
+        let snap = j.snapshot();
+        let mut j2 = HashJoin::new(0, 0);
+        j2.restore(snap);
+        assert!(!j2.build_done);
+        assert_eq!(j2.early_probe.len(), 1);
+        j2.process(kv(2, "b2"), BUILD, &mut out);
+        j2.finish_port(BUILD, &mut out);
+        assert_eq!(out.0.len(), 1, "early probe matched post-restore build");
+    }
+}

@@ -1,0 +1,170 @@
+//! The ML operator: tweet-text classification through the AOT-compiled
+//! JAX/Pallas model (L2/L1 of the three-layer stack).
+//!
+//! This is the role the paper's `SentimentAnalysis` operator plays in
+//! workflow W3 (§2.7.5, an "expensive ML operator" based on the
+//! CognitiveRocket package) and the `ML` operators of Ch. 4's climate
+//! workflow. Tuples are micro-batched to the model's fixed batch shape;
+//! the last partial batch is zero-padded. Tokenization is a
+//! deterministic hash of whitespace-split words.
+//!
+//! The operator talks to the PJRT [`InferenceHandle`] (a dedicated
+//! server thread owning the compiled executable); Python never runs on
+//! this path.
+
+use crate::engine::operator::{Emitter, Operator};
+use crate::runtime::{InferenceHandle, Tensor};
+use crate::tuple::{Tuple, Value};
+
+/// Model input batch size (must match python/compile/model.py).
+pub const BATCH: usize = 32;
+/// Tokens per example.
+pub const TOKENS: usize = 16;
+/// Vocabulary size.
+pub const VOCAB: usize = 4096;
+/// Output classes of the topic classifier.
+pub const CLASSES: usize = 8;
+
+/// Hash-tokenize a text into exactly `TOKENS` ids (0 = padding).
+pub fn tokenize(text: &str) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(TOKENS);
+    for w in text.split_whitespace().take(TOKENS) {
+        let h = Value::str(w).stable_hash();
+        ids.push((1 + (h % (VOCAB as u64 - 1))) as i32);
+    }
+    ids.resize(TOKENS, 0);
+    ids
+}
+
+/// ML inference operator: appends the argmax class id to each tuple.
+pub struct MlInfer {
+    pub text_field: usize,
+    pub model: String,
+    handle: InferenceHandle,
+    buffer: Vec<Tuple>,
+    classes: usize,
+}
+
+impl MlInfer {
+    pub fn new(text_field: usize, model: &str, handle: InferenceHandle) -> MlInfer {
+        let classes = if model.starts_with("sentiment") { 2 } else { CLASSES };
+        MlInfer {
+            text_field,
+            model: model.to_string(),
+            handle,
+            buffer: Vec::with_capacity(BATCH),
+            classes,
+        }
+    }
+
+    fn flush(&mut self, out: &mut dyn Emitter) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let n = self.buffer.len();
+        let mut tokens = Vec::with_capacity(BATCH * TOKENS);
+        for t in &self.buffer {
+            let text = t.get(self.text_field).as_str().unwrap_or("");
+            tokens.extend(tokenize(text));
+        }
+        // Zero-pad to the fixed batch shape.
+        tokens.resize(BATCH * TOKENS, 0);
+        let logits = self
+            .handle
+            .run(
+                &self.model,
+                vec![Tensor::I32(tokens, vec![BATCH as i64, TOKENS as i64])],
+            )
+            .expect("ML inference failed (are artifacts built?)");
+        for (i, t) in self.buffer.drain(..).enumerate() {
+            let row = &logits[i * self.classes..(i + 1) * self.classes];
+            let class = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c as i64)
+                .unwrap_or(0);
+            let mut vals: Vec<Value> = t.values.to_vec();
+            vals.push(Value::Int(class));
+            out.emit(Tuple::new(vals));
+        }
+        let _ = n;
+    }
+}
+
+impl Operator for MlInfer {
+    fn name(&self) -> &str {
+        "ml_infer"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        self.buffer.push(t);
+        if self.buffer.len() >= BATCH {
+            self.flush(out);
+        }
+    }
+
+    fn finish(&mut self, out: &mut dyn Emitter) {
+        self.flush(out);
+    }
+
+    fn state_size(&self) -> usize {
+        self.buffer.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_is_deterministic_and_padded() {
+        let a = tokenize("covid cases rising");
+        let b = tokenize("covid cases rising");
+        assert_eq!(a, b);
+        assert_eq!(a.len(), TOKENS);
+        assert_eq!(a[3], 0, "padding after 3 words");
+        assert!(a[0] > 0, "real tokens are nonzero");
+    }
+
+    #[test]
+    fn tokenize_distinguishes_words() {
+        assert_ne!(tokenize("wildfire smoke"), tokenize("covid cases"));
+    }
+
+    #[test]
+    fn tokenize_truncates_long_text() {
+        let long = "w ".repeat(100);
+        assert_eq!(tokenize(&long).len(), TOKENS);
+    }
+
+    /// Full operator test through PJRT; skipped without artifacts.
+    #[test]
+    fn classify_appends_class() {
+        if !crate::runtime::pjrt::artifact_exists("artifacts", "classifier") {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let server = crate::runtime::InferenceServer::start("artifacts");
+        let mut op = MlInfer::new(0, "classifier", server.handle());
+        let mut out = crate::engine::operator::VecEmitter::default();
+        for i in 0..(BATCH + 3) {
+            op.process(
+                Tuple::new(vec![Value::str(&format!("tweet number {i} about covid"))]),
+                0,
+                &mut out,
+            );
+        }
+        op.finish(&mut out);
+        assert_eq!(out.0.len(), BATCH + 3);
+        for t in &out.0 {
+            let class = t.get(1).as_int().unwrap();
+            assert!((0..CLASSES as i64).contains(&class));
+        }
+        // Same text → same class (deterministic model).
+        let mut out2 = crate::engine::operator::VecEmitter::default();
+        op.process(Tuple::new(vec![Value::str("tweet number 0 about covid")]), 0, &mut out2);
+        op.finish(&mut out2);
+        assert_eq!(out2.0[0].get(1), out.0[0].get(1));
+    }
+}

@@ -1,0 +1,26 @@
+//! The physical-operator library: relational operators plus the ML
+//! inference operator, all written against the engine's iteration model
+//! (§2.4.3) so they pause/resume, checkpoint and migrate state.
+//!
+//! State-mutability classification (Table 3.1):
+//!
+//! | Operator | phase | state |
+//! |---|---|---|
+//! | [`hash_join::HashJoin`] | build | mutable |
+//! | [`hash_join::HashJoin`] | probe | immutable |
+//! | [`group_by::GroupByPartial`]/[`group_by::GroupByFinal`] | — | mutable |
+//! | [`sort::SortWorker`]/[`sort::SortMerge`] | — | mutable |
+//! | [`basic`] (filter, project, keyword, parser, UDF map) | — | stateless |
+
+pub mod basic;
+pub mod hash_join;
+pub mod group_by;
+pub mod sort;
+pub mod sink;
+pub mod ml_infer;
+
+pub use basic::{Filter, KeywordSearch, MapUdf, Project, RegexParser, Union};
+pub use group_by::{AggKind, GroupByFinal, GroupByPartial};
+pub use hash_join::HashJoin;
+pub use sink::{CollectSink, CountByKeySink, SinkHandle};
+pub use sort::{SortMerge, SortWorker};

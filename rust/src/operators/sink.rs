@@ -1,0 +1,180 @@
+//! Sink / result operators (Def. 4.1): collect results for the driver
+//! and maintain live visualization-style aggregates.
+//!
+//! [`CountByKeySink`] is the "bar chart" of the running example: the
+//! experiment harness polls its per-key counters to plot the observed
+//! CA:AZ ratio over time (Figs. 3.16–3.19) with negligible overhead
+//! (atomic adds).
+
+use crate::engine::operator::{Emitter, Operator};
+use crate::tuple::Tuple;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared handle the driver keeps to read sink contents during/after a
+/// run.
+#[derive(Clone, Default)]
+pub struct SinkHandle {
+    /// Raw captured tuples (only if capture enabled).
+    captured: Arc<Mutex<Vec<Tuple>>>,
+    /// Count per small-integer key (bar-chart counters).
+    counts: Arc<Vec<AtomicU64>>,
+    /// Total tuples seen.
+    total: Arc<AtomicU64>,
+    /// Total bytes seen (materialization-size accounting).
+    bytes: Arc<AtomicU64>,
+}
+
+impl SinkHandle {
+    /// Handle with `n_keys` bar-chart counters.
+    pub fn new(n_keys: usize) -> SinkHandle {
+        SinkHandle {
+            captured: Arc::new(Mutex::new(Vec::new())),
+            counts: Arc::new((0..n_keys).map(|_| AtomicU64::new(0)).collect()),
+            total: Arc::new(AtomicU64::new(0)),
+            bytes: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bar-chart reading for one key.
+    pub fn count_of(&self, key: usize) -> u64 {
+        self.counts
+            .get(key)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Observed ratio of two keys' counts (the Fig. 3.16 monitor);
+    /// NaN until both are nonzero.
+    pub fn ratio(&self, a: usize, b: usize) -> f64 {
+        let ca = self.count_of(a) as f64;
+        let cb = self.count_of(b) as f64;
+        if cb == 0.0 {
+            f64::NAN
+        } else {
+            ca / cb
+        }
+    }
+
+    /// Captured tuples (clone).
+    pub fn tuples(&self) -> Vec<Tuple> {
+        self.captured.lock().unwrap().clone()
+    }
+}
+
+/// Sink that captures every tuple (small result sets: sorted outputs,
+/// aggregates).
+pub struct CollectSink {
+    pub handle: SinkHandle,
+}
+
+impl CollectSink {
+    pub fn new(handle: SinkHandle) -> CollectSink {
+        CollectSink { handle }
+    }
+}
+
+impl Operator for CollectSink {
+    fn name(&self) -> &str {
+        "collect_sink"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        self.handle.total.fetch_add(1, Ordering::Relaxed);
+        self.handle
+            .bytes
+            .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
+        self.handle.captured.lock().unwrap().push(t);
+    }
+}
+
+/// Sink that only counts per key (big result streams: the bar-chart
+/// visualization). `key_field` must hold small non-negative ints.
+pub struct CountByKeySink {
+    pub handle: SinkHandle,
+    pub key_field: usize,
+}
+
+impl CountByKeySink {
+    pub fn new(handle: SinkHandle, key_field: usize) -> CountByKeySink {
+        CountByKeySink { handle, key_field }
+    }
+}
+
+impl Operator for CountByKeySink {
+    fn name(&self) -> &str {
+        "count_by_key_sink"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        self.handle.total.fetch_add(1, Ordering::Relaxed);
+        self.handle
+            .bytes
+            .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
+        if let Some(k) = t.get(self.key_field).as_int() {
+            if k >= 0 {
+                if let Some(c) = self.handle.counts.get(k as usize) {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::operator::VecEmitter;
+    use crate::tuple::Value;
+
+    #[test]
+    fn collect_sink_captures() {
+        let h = SinkHandle::new(0);
+        let mut s = CollectSink::new(h.clone());
+        let mut out = VecEmitter::default();
+        s.process(Tuple::new(vec![Value::Int(1)]), 0, &mut out);
+        assert_eq!(h.total(), 1);
+        assert_eq!(h.tuples().len(), 1);
+        assert!(h.bytes() > 0);
+    }
+
+    #[test]
+    fn count_sink_ratio() {
+        let h = SinkHandle::new(10);
+        let mut s = CountByKeySink::new(h.clone(), 0);
+        let mut out = VecEmitter::default();
+        for _ in 0..6 {
+            s.process(Tuple::new(vec![Value::Int(2)]), 0, &mut out);
+        }
+        for _ in 0..3 {
+            s.process(Tuple::new(vec![Value::Int(5)]), 0, &mut out);
+        }
+        assert_eq!(h.count_of(2), 6);
+        assert!((h.ratio(2, 5) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratio_nan_before_data() {
+        let h = SinkHandle::new(4);
+        assert!(h.ratio(0, 1).is_nan());
+    }
+
+    #[test]
+    fn out_of_range_key_ignored() {
+        let h = SinkHandle::new(2);
+        let mut s = CountByKeySink::new(h.clone(), 0);
+        let mut out = VecEmitter::default();
+        s.process(Tuple::new(vec![Value::Int(99)]), 0, &mut out);
+        s.process(Tuple::new(vec![Value::Int(-1)]), 0, &mut out);
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.count_of(0) + h.count_of(1), 0);
+    }
+}

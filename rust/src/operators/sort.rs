@@ -1,0 +1,301 @@
+//! Distributed sort (§2.4.3 category 2): a range-partitioned first
+//! layer sorts local runs; a single-worker second layer merges them.
+//!
+//! Sort is the paper's canonical *mutable-state* operator for Reshape
+//! (§3.5.4): SBR splits a range across the skewed worker and a helper,
+//! producing a **scattered state** — the helper accumulates a separate
+//! sorted run for the foreign range and ships it back to the range's
+//! owner when the input ends (the END-marker merge of Fig. 3.11). Both
+//! conditions for scattered-state resolution hold: runs merge by
+//! merging sorted lists, and sort blocks until EOF anyway.
+
+use crate::engine::operator::{Emitter, OpState, Operator};
+use crate::tuple::{value_cmp, Tuple};
+use std::collections::HashMap;
+
+/// First-layer sorter: accumulates tuples, sorts at EOF, emits the run.
+///
+/// `scope_of` assigns each tuple a *scope id* (its range index under
+/// the plan's range partitioning). Tuples whose scope is not
+/// `own_scope` are foreign (the scattered part created by SBR
+/// mitigation) and are kept in separate per-scope runs.
+pub struct SortWorker {
+    pub key_field: usize,
+    /// This worker's own range index.
+    pub own_scope: u64,
+    /// Range upper bounds (same as the partitioner's) for scope
+    /// computation; scope = first bound ≥ value.
+    pub bounds: Vec<crate::tuple::Value>,
+    /// Artificial per-tuple insertion cost in ns (models the paper's
+    /// heavier sort workers; 0 = none).
+    pub cost_ns: u64,
+    runs: HashMap<u64, Vec<Tuple>>,
+}
+
+impl SortWorker {
+    pub fn new(key_field: usize, own_scope: u64, bounds: Vec<crate::tuple::Value>) -> SortWorker {
+        SortWorker { key_field, own_scope, bounds, cost_ns: 0, runs: HashMap::new() }
+    }
+
+    /// Builder: artificial per-tuple cost.
+    pub fn with_cost(mut self, ns: u64) -> SortWorker {
+        self.cost_ns = ns;
+        self
+    }
+
+    fn scope_of(&self, t: &Tuple) -> u64 {
+        let v = t.get(self.key_field);
+        for (i, b) in self.bounds.iter().enumerate() {
+            if value_cmp(v, b) != std::cmp::Ordering::Greater {
+                return i as u64;
+            }
+        }
+        self.bounds.len() as u64
+    }
+
+    /// Tuples held for foreign scopes (scattered state size).
+    pub fn scattered_tuples(&self) -> usize {
+        self.runs
+            .iter()
+            .filter(|(s, _)| **s != self.own_scope)
+            .map(|(_, v)| v.len())
+            .sum()
+    }
+}
+
+impl Operator for SortWorker {
+    fn name(&self) -> &str {
+        "sort_worker"
+    }
+
+    fn blocking_ports(&self) -> Vec<usize> {
+        vec![0]
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        if self.cost_ns > 0 {
+            let t0 = std::time::Instant::now();
+            while (t0.elapsed().as_nanos() as u64) < self.cost_ns {
+                std::hint::spin_loop();
+            }
+        }
+        let scope = self.scope_of(&t);
+        self.runs.entry(scope).or_default().push(t);
+    }
+
+    fn finish(&mut self, out: &mut dyn Emitter) {
+        // At EOF, only the own-scope run should remain (the engine's
+        // Reshape layer migrates foreign runs back to their owners
+        // before EOF cascades); any still-foreign tuples are emitted
+        // too so no data is lost even without mitigation.
+        let mut scopes: Vec<u64> = self.runs.keys().copied().collect();
+        scopes.sort_unstable();
+        let mut all: Vec<Tuple> = Vec::new();
+        for s in scopes {
+            all.append(self.runs.get_mut(&s).unwrap());
+        }
+        all.sort_by(|a, b| value_cmp(a.get(self.key_field), b.get(self.key_field)));
+        for t in all {
+            out.emit(t);
+        }
+    }
+
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        s.keyed_tuples = self.runs.clone();
+        s
+    }
+
+    fn restore(&mut self, s: OpState) {
+        self.runs = s.keyed_tuples;
+    }
+
+    fn state_size(&self) -> usize {
+        self.runs.values().map(Vec::len).sum()
+    }
+
+    fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        // keys here are *scope ids* (range indexes), not value hashes.
+        let mut out = OpState::default();
+        let targets: Vec<u64> = match keys {
+            None => self.runs.keys().copied().collect(),
+            Some(ks) => ks.to_vec(),
+        };
+        for k in targets {
+            let item = if replicate {
+                self.runs.get(&k).cloned()
+            } else {
+                self.runs.remove(&k)
+            };
+            if let Some(v) = item {
+                out.keyed_tuples.insert(k, v);
+            }
+        }
+        out
+    }
+
+    fn merge_state(&mut self, s: OpState) {
+        for (k, mut v) in s.keyed_tuples {
+            self.runs.entry(k).or_default().append(&mut v);
+        }
+    }
+
+    fn state_mutable(&self) -> bool {
+        true
+    }
+
+    fn scattered_parts(&mut self) -> Vec<(u64, OpState)> {
+        // Foreign runs (scopes ≠ own) are shipped back to their owners
+        // at EOF (Fig. 3.11(e,f)); scope id == owner worker index
+        // under range partitioning.
+        let foreign: Vec<u64> = self
+            .runs
+            .keys()
+            .copied()
+            .filter(|s| *s != self.own_scope)
+            .collect();
+        foreign
+            .into_iter()
+            .map(|scope| {
+                let mut st = OpState::default();
+                st.keyed_tuples
+                    .insert(scope, self.runs.remove(&scope).unwrap());
+                (scope, st)
+            })
+            .collect()
+    }
+}
+
+/// Second-layer merger: single worker; collects sorted runs from all
+/// first-layer workers and merges them at EOF. Input arrives
+/// interleaved, so it re-sorts (equivalent to a k-way merge; runs are
+/// concatenated then sorted with a stable O(n log n) sort — adequate at
+/// our scale and deterministic).
+pub struct SortMerge {
+    pub key_field: usize,
+    buffer: Vec<Tuple>,
+}
+
+impl SortMerge {
+    pub fn new(key_field: usize) -> SortMerge {
+        SortMerge { key_field, buffer: Vec::new() }
+    }
+}
+
+impl Operator for SortMerge {
+    fn name(&self) -> &str {
+        "sort_merge"
+    }
+
+    fn blocking_ports(&self) -> Vec<usize> {
+        vec![0]
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        self.buffer.push(t);
+    }
+
+    fn finish(&mut self, out: &mut dyn Emitter) {
+        self.buffer
+            .sort_by(|a, b| value_cmp(a.get(self.key_field), b.get(self.key_field)));
+        for t in self.buffer.drain(..) {
+            out.emit(t);
+        }
+    }
+
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        s.keyed_tuples.insert(0, self.buffer.clone());
+        s
+    }
+
+    fn restore(&mut self, mut s: OpState) {
+        self.buffer = s.keyed_tuples.remove(&0).unwrap_or_default();
+    }
+
+    fn state_size(&self) -> usize {
+        self.buffer.len()
+    }
+
+    fn state_mutable(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::operator::VecEmitter;
+    use crate::tuple::Value;
+
+    fn t1(v: f64) -> Tuple {
+        Tuple::new(vec![Value::Float(v)])
+    }
+
+    fn bounds() -> Vec<Value> {
+        vec![Value::Float(10.0), Value::Float(20.0)]
+    }
+
+    #[test]
+    fn sorts_own_range() {
+        let mut s = SortWorker::new(0, 0, bounds());
+        let mut out = VecEmitter::default();
+        for v in [5.0, 1.0, 9.0] {
+            s.process(t1(v), 0, &mut out);
+        }
+        s.finish(&mut out);
+        let vals: Vec<f64> = out.0.iter().map(|t| t.get(0).as_float().unwrap()).collect();
+        assert_eq!(vals, vec![1.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn foreign_scope_tracked_separately() {
+        // Worker 2 (scope 2: >20) receives redirected scope-0 tuples.
+        let mut s = SortWorker::new(0, 2, bounds());
+        let mut out = VecEmitter::default();
+        s.process(t1(25.0), 0, &mut out); // own
+        s.process(t1(3.0), 0, &mut out); // foreign (scope 0)
+        assert_eq!(s.scattered_tuples(), 1);
+    }
+
+    #[test]
+    fn scattered_state_merge_restores_order() {
+        // Fig. 3.11: helper S3 ships its [0,10] run back to S1.
+        let mut s1 = SortWorker::new(0, 0, bounds());
+        let mut s3 = SortWorker::new(0, 2, bounds());
+        let mut out = VecEmitter::default();
+        s1.process(t1(7.0), 0, &mut out);
+        s3.process(t1(2.0), 0, &mut out); // redirected [0,10] tuple
+        s3.process(t1(25.0), 0, &mut out); // own range
+        let scattered = s3.extract_state(Some(&[0]), false);
+        s1.merge_state(scattered);
+        assert_eq!(s3.scattered_tuples(), 0);
+        let mut o1 = VecEmitter::default();
+        s1.finish(&mut o1);
+        let vals: Vec<f64> = o1.0.iter().map(|t| t.get(0).as_float().unwrap()).collect();
+        assert_eq!(vals, vec![2.0, 7.0]);
+    }
+
+    #[test]
+    fn merge_layer_total_order() {
+        let mut m = SortMerge::new(0);
+        let mut out = VecEmitter::default();
+        for v in [9.0, 1.0, 5.0, 3.0] {
+            m.process(t1(v), 0, &mut out);
+        }
+        m.finish(&mut out);
+        let vals: Vec<f64> = out.0.iter().map(|t| t.get(0).as_float().unwrap()).collect();
+        assert_eq!(vals, vec![1.0, 3.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn snapshot_restore_keeps_runs() {
+        let mut s = SortWorker::new(0, 0, bounds());
+        let mut out = VecEmitter::default();
+        s.process(t1(4.0), 0, &mut out);
+        let snap = s.snapshot();
+        let mut s2 = SortWorker::new(0, 0, bounds());
+        s2.restore(snap);
+        assert_eq!(s2.state_size(), 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Dynamic adjustment of the skew-detection threshold τ (§3.4.3.2,
+//! Algorithm 1) and the state-migration-time correction τ′ (§3.6.1).
+
+/// Outcome of one Algorithm-1 evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TauDecision {
+    /// Keep τ as is.
+    Keep,
+    /// Raise τ for the next iteration (error too high: need a bigger
+    /// sample before trusting the estimator).
+    Increase(f64),
+    /// Lower τ to the current workload gap and mitigate right away
+    /// (error already low; waiting longer risks running out of future
+    /// tuples).
+    Decrease(f64),
+}
+
+/// Algorithm 1: adjust τ given the current gap (φ_S − φ_H), the
+/// estimator's standard error ε, the acceptable range [ε_l, ε_u], and
+/// the increment step.
+pub fn adjust_tau(
+    tau: f64,
+    gap: f64,
+    eps: f64,
+    eps_range: (f64, f64),
+    step: f64,
+) -> TauDecision {
+    let (eps_l, eps_u) = eps_range;
+    if gap >= tau && eps > eps_u {
+        // Skew test passes but the prediction is too noisy: a larger τ
+        // gives the next iteration a bigger sample (line 5–6).
+        TauDecision::Increase(tau + step)
+    } else if gap < tau && eps < eps_l {
+        // Error is already low; start mitigation at the current gap
+        // instead of waiting for τ (line 7–8).
+        TauDecision::Decrease(gap.max(0.0))
+    } else {
+        TauDecision::Keep
+    }
+}
+
+/// τ′ correction when state migration takes significant time (§3.6.1):
+/// detect earlier so the migration *ends* when the gap reaches τₙ.
+///
+/// τ′ₙ = τₙ − (f̂_S − f̂_H) · t · M
+///
+/// * `fs`, `fh` — predicted workload fractions of skewed and helper;
+/// * `t` — operator throughput (tuples per unit time);
+/// * `m` — estimated state-migration time (same unit).
+pub fn tau_with_migration(tau: f64, fs: f64, fh: f64, t: f64, m: f64) -> f64 {
+    (tau - (fs - fh) * t * m).max(0.0)
+}
+
+/// Precondition for mitigation (§3.6.1): migrating is futile if it
+/// takes longer than the remaining execution.
+pub fn migration_worthwhile(est_migration_time: f64, est_time_left: f64) -> bool {
+    est_migration_time < est_time_left
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RANGE: (f64, f64) = (98.0, 110.0);
+
+    #[test]
+    fn increase_when_noisy_and_skewed() {
+        let d = adjust_tau(100.0, 150.0, 200.0, RANGE, 50.0);
+        assert_eq!(d, TauDecision::Increase(150.0));
+    }
+
+    #[test]
+    fn decrease_when_quiet_and_below_tau() {
+        let d = adjust_tau(1000.0, 700.0, 50.0, RANGE, 50.0);
+        assert_eq!(d, TauDecision::Decrease(700.0));
+    }
+
+    #[test]
+    fn keep_when_error_in_range() {
+        assert_eq!(adjust_tau(100.0, 150.0, 105.0, RANGE, 50.0), TauDecision::Keep);
+        assert_eq!(adjust_tau(100.0, 50.0, 105.0, RANGE, 50.0), TauDecision::Keep);
+    }
+
+    #[test]
+    fn keep_when_skewed_but_quiet() {
+        // Gap ≥ τ and ε small: mitigation proceeds with current τ.
+        assert_eq!(adjust_tau(100.0, 150.0, 10.0, RANGE, 50.0), TauDecision::Keep);
+    }
+
+    #[test]
+    fn migration_correction_lowers_tau() {
+        // fs=0.6, fh=0.1, t=100 tuples/s, M=2 s → correction = 100.
+        assert_eq!(tau_with_migration(300.0, 0.6, 0.1, 100.0, 2.0), 200.0);
+    }
+
+    #[test]
+    fn migration_correction_clamps_at_zero() {
+        assert_eq!(tau_with_migration(50.0, 0.9, 0.0, 1000.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn futile_migration_rejected() {
+        assert!(!migration_worthwhile(10.0, 5.0));
+        assert!(migration_worthwhile(1.0, 5.0));
+    }
+}

@@ -1,0 +1,305 @@
+//! Baseline skew handlers reimplemented for comparison (§3.7.1):
+//!
+//! * **Flux** [103] — adaptive SBK over pre-defined mini-partitions:
+//!   on skew, whole keys move from the skewed worker to its helper;
+//!   a single key can never be split, so a heavy-hitter-dominated
+//!   worker barely improves (the Fig. 3.20 ~0.06 ratio).
+//! * **Flow-Join** [100] — static SBR: sample the first `detect_ms`
+//!   of input, mark heavy hitters, then split exactly 50% of their
+//!   future tuples to the helper, once, with no further adaptation
+//!   (so it overshoots when the distribution shifts — Fig. 3.24).
+
+use crate::engine::controller::{CoordPlugin, PluginCtx};
+use crate::engine::message::{ControlMessage, WorkerEvent, WorkerId};
+use crate::engine::partitioner::{MitigationRoute, ShareMode};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Flux: move whole (non-heaviest) keys from skewed workers to helpers.
+pub struct FluxPlugin {
+    target_op: usize,
+    /// (skewed, helper) pairs already mitigated.
+    mitigated: Vec<(usize, usize)>,
+    /// Route installs deferred until the moved keys' state lands at the
+    /// helper: transfer id → (skewed, helper, keys).
+    pending: Vec<(u64, usize, usize, Vec<u64>)>,
+    /// Chosen (skewed, helper) pairs, observable by harnesses.
+    pairs: Arc<Mutex<Vec<(usize, usize)>>>,
+    epoch: u64,
+    initialized: bool,
+}
+
+impl FluxPlugin {
+    pub fn new(target_op: usize) -> FluxPlugin {
+        FluxPlugin {
+            target_op,
+            mitigated: Vec::new(),
+            pending: Vec::new(),
+            pairs: Arc::new(Mutex::new(Vec::new())),
+            epoch: 0,
+            initialized: false,
+        }
+    }
+
+    /// Shared handle to the chosen (skewed, helper) pairs.
+    pub fn pairs(&self) -> Arc<Mutex<Vec<(usize, usize)>>> {
+        self.pairs.clone()
+    }
+
+    fn loads(&self, ctx: &PluginCtx) -> Vec<f64> {
+        (0..ctx.workers_of(self.target_op))
+            .map(|i| {
+                let id = WorkerId::new(self.target_op, i);
+                if ctx.completed.contains(&id) {
+                    return 0.0;
+                }
+                ctx.gauges_of(id)
+                    .map(|g| g.queued.load(Ordering::Relaxed).max(0) as f64)
+                    .unwrap_or(0.0)
+            })
+            .collect()
+    }
+}
+
+impl CoordPlugin for FluxPlugin {
+    fn name(&self) -> &str {
+        "flux"
+    }
+
+    fn period(&self) -> Duration {
+        Duration::from_millis(20)
+    }
+
+    fn tick(&mut self, ctx: &PluginCtx) {
+        // Track the key distribution from the start; only *act* after
+        // the initial observation window (§3.7.1).
+        if !self.initialized {
+            self.initialized = true;
+            for i in 0..ctx.workers_of(self.target_op) {
+                if let Some(g) = ctx.gauges_of(WorkerId::new(self.target_op, i)) {
+                    g.track_keys.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+        if ctx.started.elapsed().as_millis()
+            < ctx.config.reshape_initial_delay_ms as u128
+        {
+            return;
+        }
+        let loads = self.loads(ctx);
+        let busy: Vec<usize> = self
+            .mitigated
+            .iter()
+            .flat_map(|(s, h)| [*s, *h])
+            .collect();
+        let found = crate::reshape::detector::detect(
+            &loads,
+            &busy,
+            ctx.config.reshape_eta,
+            ctx.config.reshape_tau,
+            1,
+        );
+        for (skewed, helpers) in found.pairs {
+            let helper = helpers[0];
+            // Move every key except the heaviest (Flux cannot split a
+            // key; relocating the heavy hitter would just move the
+            // hotspot).
+            let id = WorkerId::new(self.target_op, skewed);
+            let Some(g) = ctx.gauges_of(id) else { continue };
+            let counts = g.key_counts.lock().unwrap();
+            let mut items: Vec<(u64, u64)> =
+                counts.iter().map(|(k, v)| (*k, *v)).collect();
+            drop(counts);
+            if items.len() < 2 {
+                // Only the heavy hitter lives here: nothing movable.
+                self.mitigated.push((skewed, helper));
+                self.pairs.lock().unwrap().push((skewed, helper));
+                continue;
+            }
+            items.sort_by_key(|(_, c)| std::cmp::Reverse(*c));
+            let moved: Vec<u64> = items.iter().skip(1).map(|(k, _)| *k).collect();
+            // Migrate the moved keys' state first (Flux moves
+            // mini-partitions); the route flips on the helper's ack so
+            // no probe tuple reaches the helper before its build rows.
+            self.epoch += 1;
+            ctx.send_control(
+                id,
+                ControlMessage::SendState {
+                    to: WorkerId::new(self.target_op, helper),
+                    keys: Some(moved.clone()),
+                    transfer_id: self.epoch,
+                    replicate: true,
+                },
+            );
+            self.pending.push((self.epoch, skewed, helper, moved));
+            self.mitigated.push((skewed, helper));
+            self.pairs.lock().unwrap().push((skewed, helper));
+        }
+    }
+
+    fn on_event(&mut self, ev: &WorkerEvent, ctx: &PluginCtx) {
+        if let WorkerEvent::StateApplied { transfer_id, .. } = ev {
+            if let Some(pos) = self.pending.iter().position(|(t, ..)| t == transfer_id) {
+                let (_, skewed, helper, moved) = self.pending.swap_remove(pos);
+                self.epoch += 1;
+                for up in ctx.upstream_ops(self.target_op) {
+                    ctx.broadcast(
+                        up,
+                        ControlMessage::UpdateRoute {
+                            target_op: self.target_op,
+                            route: MitigationRoute {
+                                skewed,
+                                helper,
+                                mode: ShareMode::SplitKeys(moved.clone()),
+                                epoch: self.epoch,
+                            },
+                        },
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Flow-Join: one-shot heavy-hitter detection, then a static 50/50
+/// record split of those keys to the helper.
+pub struct FlowJoinPlugin {
+    target_op: usize,
+    /// Initial detection window (the paper sweeps 2/4/8 s; scaled here).
+    detect_ms: u64,
+    fired: bool,
+    initialized: bool,
+    epoch: u64,
+    /// Deferred route install: (transfer id, skewed, helper, hh keys).
+    pending: Option<(u64, usize, usize, Vec<u64>)>,
+    /// Chosen (skewed, helper) pairs, observable by harnesses.
+    pairs: Arc<Mutex<Vec<(usize, usize)>>>,
+}
+
+impl FlowJoinPlugin {
+    pub fn new(target_op: usize, detect_ms: u64) -> FlowJoinPlugin {
+        FlowJoinPlugin {
+            target_op,
+            detect_ms,
+            fired: false,
+            initialized: false,
+            epoch: 0,
+            pending: None,
+            pairs: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Shared handle to the chosen (skewed, helper) pairs.
+    pub fn pairs(&self) -> Arc<Mutex<Vec<(usize, usize)>>> {
+        self.pairs.clone()
+    }
+}
+
+impl CoordPlugin for FlowJoinPlugin {
+    fn name(&self) -> &str {
+        "flow_join"
+    }
+
+    fn period(&self) -> Duration {
+        Duration::from_millis(10)
+    }
+
+    fn tick(&mut self, ctx: &PluginCtx) {
+        if !self.initialized {
+            self.initialized = true;
+            for i in 0..ctx.workers_of(self.target_op) {
+                if let Some(g) = ctx.gauges_of(WorkerId::new(self.target_op, i)) {
+                    g.track_keys.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+        if self.fired || ctx.started.elapsed().as_millis() < self.detect_ms as u128 {
+            return;
+        }
+        self.fired = true;
+        // Identify the most loaded worker and its heavy-hitter keys
+        // from the sample observed so far.
+        let n = ctx.workers_of(self.target_op);
+        let loads: Vec<f64> = (0..n)
+            .map(|i| {
+                ctx.gauges_of(WorkerId::new(self.target_op, i))
+                    .map(|g| g.received.load(Ordering::Relaxed) as f64)
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let skewed = (0..n)
+            .max_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .unwrap();
+        let helper = (0..n)
+            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .unwrap();
+        if skewed == helper {
+            return;
+        }
+        let Some(g) = ctx.gauges_of(WorkerId::new(self.target_op, skewed)) else {
+            return;
+        };
+        let counts = g.key_counts.lock().unwrap();
+        let total: u64 = counts.values().sum();
+        // Heavy hitter: > 20% of the worker's sample.
+        let hh: Vec<u64> = counts
+            .iter()
+            .filter(|(_, c)| **c as f64 > total as f64 * 0.2)
+            .map(|(k, _)| *k)
+            .collect();
+        drop(counts);
+        if hh.is_empty() {
+            return;
+        }
+        // Replicate build state for the heavy hitters first; the 50/50
+        // record split flips on the helper's ack.
+        self.epoch += 1;
+        ctx.send_control(
+            WorkerId::new(self.target_op, skewed),
+            ControlMessage::SendState {
+                to: WorkerId::new(self.target_op, helper),
+                keys: Some(hh.clone()),
+                transfer_id: self.epoch,
+                replicate: true,
+            },
+        );
+        self.pending = Some((self.epoch, skewed, helper, hh));
+        self.pairs.lock().unwrap().push((skewed, helper));
+    }
+
+    fn on_event(&mut self, ev: &WorkerEvent, ctx: &PluginCtx) {
+        if let WorkerEvent::StateApplied { transfer_id, .. } = ev {
+            let matches = self
+                .pending
+                .as_ref()
+                .map(|(tid, ..)| tid == transfer_id)
+                .unwrap_or(false);
+            if matches {
+                let (_, skewed, helper, hh) = self.pending.take().unwrap();
+                self.epoch += 1;
+                for up in ctx.upstream_ops(self.target_op) {
+                    ctx.broadcast(
+                        up,
+                        ControlMessage::UpdateRoute {
+                            target_op: self.target_op,
+                            route: MitigationRoute {
+                                skewed,
+                                helper,
+                                // 50% of the heavy-hitter keys' tuples
+                                // only — other keys keep their original
+                                // worker (their state never moved).
+                                mode: ShareMode::SplitRecordsKeys {
+                                    keys: hh.clone(),
+                                    num: 500,
+                                    den: 1000,
+                                },
+                                epoch: self.epoch,
+                            },
+                        },
+                    );
+                }
+            }
+        }
+    }
+}

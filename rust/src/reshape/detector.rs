@@ -1,0 +1,127 @@
+//! Skew detection and helper selection (§3.2.1).
+//!
+//! The skew test between a loaded worker L and a candidate helper C:
+//!
+//! ```text
+//! φ_L ≥ η            (3.1)  — L is actually burdened
+//! φ_L − φ_C ≥ τ      (3.2)  — the gap is big enough to act on
+//! ```
+//!
+//! Helper selection: "the helper candidate with the lowest workload
+//! that has not been assigned to any other overloaded worker".
+
+/// Result of a full skew scan over an operator's workers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SkewTestResult {
+    /// (skewed worker idx, chosen helper idxs) pairs, heaviest first.
+    pub pairs: Vec<(usize, Vec<usize>)>,
+}
+
+/// Inequalities (3.1)+(3.2) for one (L, C) pair.
+pub fn skew_test(phi_l: f64, phi_c: f64, eta: f64, tau: f64) -> bool {
+    phi_l >= eta && phi_l - phi_c >= tau
+}
+
+/// Scan all workers; returns skewed→helpers assignments.
+///
+/// * `loads[i]` — current workload φ of worker i;
+/// * `excluded` — workers already acting as skewed or helper (an
+///   in-flight mitigation owns them);
+/// * `helpers_per_skewed` — helpers to allot per skewed worker (1 in
+///   the base design; §3.6.2 generalizes).
+pub fn detect(
+    loads: &[f64],
+    excluded: &[usize],
+    eta: f64,
+    tau: f64,
+    helpers_per_skewed: usize,
+) -> SkewTestResult {
+    let mut result = SkewTestResult::default();
+    let mut taken: Vec<usize> = excluded.to_vec();
+    // Consider the most loaded workers first.
+    let mut by_load: Vec<usize> = (0..loads.len()).collect();
+    by_load.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap());
+    for &l in &by_load {
+        if taken.contains(&l) {
+            continue;
+        }
+        // Candidate helpers: lowest workload first, unassigned.
+        let mut cands: Vec<usize> = (0..loads.len())
+            .filter(|&c| c != l && !taken.contains(&c))
+            .collect();
+        cands.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+        let mut helpers = Vec::new();
+        for &c in cands.iter().take(helpers_per_skewed) {
+            if skew_test(loads[l], loads[c], eta, tau) {
+                helpers.push(c);
+            }
+        }
+        if !helpers.is_empty() {
+            taken.push(l);
+            taken.extend(helpers.iter().copied());
+            result.pairs.push((l, helpers));
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inequalities_enforced() {
+        // Below η: not skewed no matter the gap.
+        assert!(!skew_test(50.0, 0.0, 100.0, 10.0));
+        // Above η but gap < τ.
+        assert!(!skew_test(150.0, 100.0, 100.0, 100.0));
+        // Both hold.
+        assert!(skew_test(250.0, 100.0, 100.0, 100.0));
+    }
+
+    #[test]
+    fn picks_lowest_loaded_helper() {
+        let loads = vec![500.0, 10.0, 40.0, 30.0];
+        let r = detect(&loads, &[], 100.0, 100.0, 1);
+        assert_eq!(r.pairs, vec![(0, vec![1])]);
+    }
+
+    #[test]
+    fn helper_not_shared_between_skewed_workers() {
+        let loads = vec![500.0, 480.0, 10.0, 20.0];
+        let r = detect(&loads, &[], 100.0, 100.0, 1);
+        assert_eq!(r.pairs.len(), 2);
+        assert_eq!(r.pairs[0], (0, vec![2]));
+        assert_eq!(r.pairs[1], (1, vec![3]));
+    }
+
+    #[test]
+    fn excluded_workers_skipped() {
+        let loads = vec![500.0, 10.0, 400.0, 20.0];
+        // Worker 0 and 1 already mitigated.
+        let r = detect(&loads, &[0, 1], 100.0, 100.0, 1);
+        assert_eq!(r.pairs, vec![(2, vec![3])]);
+    }
+
+    #[test]
+    fn no_detection_below_threshold() {
+        let loads = vec![100.0, 90.0, 95.0];
+        let r = detect(&loads, &[], 100.0, 100.0, 1);
+        assert!(r.pairs.is_empty());
+    }
+
+    #[test]
+    fn multi_helper_allocation() {
+        let loads = vec![900.0, 10.0, 20.0, 30.0];
+        let r = detect(&loads, &[], 100.0, 100.0, 2);
+        assert_eq!(r.pairs, vec![(0, vec![1, 2])]);
+    }
+
+    #[test]
+    fn helper_must_pass_gap_test() {
+        // Second candidate's gap is below τ → only one helper chosen.
+        let loads = vec![300.0, 10.0, 250.0];
+        let r = detect(&loads, &[], 100.0, 100.0, 2);
+        assert_eq!(r.pairs, vec![(0, vec![1])]);
+    }
+}

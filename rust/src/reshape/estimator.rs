@@ -1,0 +1,140 @@
+//! Workload estimation (§3.3.2, §3.4): the mean-model estimator ψ with
+//! its standard error ε.
+//!
+//! Reshape samples each worker's incoming workload (tuples received per
+//! metric period, from the *base* partitioning — i.e. what the worker
+//! would receive without mitigation) and predicts the near-future rate
+//! as the sample mean. The standard error of the mean-model prediction
+//! is ε = d·√(1 + 1/n) (§3.4.3.2), which Algorithm 1 compares against
+//! the acceptable range [ε_l, ε_u] to adapt τ.
+
+/// Sliding-window mean-model estimator for one worker's input rate.
+#[derive(Clone, Debug)]
+pub struct MeanEstimator {
+    window: usize,
+    samples: Vec<f64>,
+}
+
+impl MeanEstimator {
+    pub fn new(window: usize) -> MeanEstimator {
+        MeanEstimator { window: window.max(2), samples: Vec::new() }
+    }
+
+    /// Record one observation (tuples received in the last period).
+    pub fn observe(&mut self, v: f64) {
+        self.samples.push(v);
+        if self.samples.len() > self.window {
+            self.samples.remove(0);
+        }
+    }
+
+    /// Drop history (a new mitigation iteration starts a fresh sample,
+    /// §3.4.3.1: "uses the sample collected since t₂").
+    pub fn reset(&mut self) {
+        self.samples.clear();
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Predicted future rate (mean model, [111] in the paper).
+    pub fn predict(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation d.
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return f64::INFINITY;
+        }
+        let mean = self.predict();
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / (n as f64 - 1.0);
+        var.sqrt()
+    }
+
+    /// Standard error of the mean-model prediction:
+    /// ε = d·√(1 + 1/n) (§3.4.3.2).
+    pub fn standard_error(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return f64::INFINITY;
+        }
+        self.stddev() * (1.0 + 1.0 / n as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_prediction() {
+        let mut e = MeanEstimator::new(8);
+        for v in [10.0, 12.0, 14.0] {
+            e.observe(v);
+        }
+        assert_eq!(e.predict(), 12.0);
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut e = MeanEstimator::new(3);
+        for v in [100.0, 1.0, 1.0, 1.0] {
+            e.observe(v);
+        }
+        assert_eq!(e.predict(), 1.0);
+        assert_eq!(e.n(), 3);
+    }
+
+    #[test]
+    fn error_decreases_with_sample_size() {
+        // Same alternating signal; more samples → smaller ε.
+        let mut small = MeanEstimator::new(64);
+        let mut large = MeanEstimator::new(64);
+        for i in 0..4 {
+            small.observe(if i % 2 == 0 { 10.0 } else { 12.0 });
+        }
+        for i in 0..32 {
+            large.observe(if i % 2 == 0 { 10.0 } else { 12.0 });
+        }
+        assert!(large.standard_error() < small.standard_error());
+    }
+
+    #[test]
+    fn error_infinite_until_two_samples() {
+        let mut e = MeanEstimator::new(8);
+        assert!(e.standard_error().is_infinite());
+        e.observe(1.0);
+        assert!(e.standard_error().is_infinite());
+        e.observe(1.0);
+        assert!(e.standard_error().is_finite());
+    }
+
+    #[test]
+    fn constant_signal_zero_error() {
+        let mut e = MeanEstimator::new(8);
+        for _ in 0..5 {
+            e.observe(7.0);
+        }
+        assert_eq!(e.standard_error(), 0.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut e = MeanEstimator::new(8);
+        e.observe(5.0);
+        e.reset();
+        assert_eq!(e.n(), 0);
+        assert_eq!(e.predict(), 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! **Reshape** (Ch. 3): adaptive, result-aware partitioning-skew
+//! handling built on the engine's fast control messages.
+//!
+//! The controller periodically collects workload metrics from the
+//! protected operator's workers (§3.2.1), runs the skew test
+//! (φ_L ≥ η and φ_L − φ_C ≥ τ), picks helpers, migrates state, and
+//! changes the upstream partitioning logic in **two phases** (§3.3.2):
+//! phase 1 lets the helper catch up with the skewed worker's backlog;
+//! phase 2 rebalances future input using the [`estimator`]'s workload
+//! predictions, iterating when predictions drift (§3.4) and adjusting
+//! the detection threshold τ from the estimator's standard error
+//! (Algorithm 1).
+//!
+//! [`baselines`] reimplements the two comparison systems of §3.7 —
+//! Flux (SBK mini-partition moves, no key splitting) and Flow-Join
+//! (one-shot heavy-hitter detection, static 50/50 split).
+
+pub mod estimator;
+pub mod detector;
+pub mod adaptive;
+pub mod multi_helper;
+pub mod plugin;
+pub mod baselines;
+
+pub use detector::{skew_test, SkewTestResult};
+pub use estimator::MeanEstimator;
+pub use plugin::{Approach, ReshapePlugin, ReshapeReport};

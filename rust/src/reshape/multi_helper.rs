@@ -1,0 +1,113 @@
+//! Multiple helpers per skewed worker (§3.6.2): the χ = min(LRmax, F)
+//! trade-off between load reduction and state-migration cost.
+//!
+//! Adding helpers raises the ideal load reduction
+//! `LRmax = (f_S − avg) · T` but also raises the migration time M,
+//! shrinking `F = (L − M·t) · f̂_S` — the future tuples left to
+//! actually rebalance. The chosen helper set is the one *right before*
+//! χ starts decreasing (Fig. 3.13).
+
+/// Maximum load reduction with helper set `helpers` (workload
+/// fractions) for a skewed worker with fraction `fs`, over `total`
+/// future tuples (§3.6.2).
+pub fn lr_max(fs: f64, helpers: &[f64], total: f64) -> f64 {
+    let n = helpers.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let avg = (fs + helpers.iter().sum::<f64>()) / (n + 1.0);
+    (fs - avg) * total
+}
+
+/// Future tuples of S left after migration: F = (L − M·t)·f̂_S.
+pub fn future_after_migration(l: f64, m: f64, t: f64, fs: f64) -> f64 {
+    ((l - m * t) * fs).max(0.0)
+}
+
+/// Pick the helper count maximizing χ = min(LRmax, F).
+///
+/// * `fs` — skewed worker's workload fraction;
+/// * `candidates` — candidate helpers' workload fractions, best
+///   (lowest) first;
+/// * `l` — future tuples to be processed by the operator at detection;
+/// * `migration_time(k)` — estimated migration time with k helpers;
+/// * `t` — operator throughput.
+///
+/// Returns (helper count, χ at that count).
+pub fn choose_helper_count(
+    fs: f64,
+    candidates: &[f64],
+    l: f64,
+    migration_time: impl Fn(usize) -> f64,
+    t: f64,
+) -> (usize, f64) {
+    let mut best = (0usize, 0.0f64);
+    let mut prev_chi = 0.0f64;
+    for k in 1..=candidates.len() {
+        let lrm = lr_max(fs, &candidates[..k], l);
+        let f = future_after_migration(l, migration_time(k), t, fs);
+        let chi = lrm.min(f);
+        if chi > prev_chi {
+            best = (k, chi);
+            prev_chi = chi;
+        } else {
+            // χ started decreasing: stop (Fig. 3.13's rule).
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_max_grows_with_cheap_helpers() {
+        let one = lr_max(0.5, &[0.1], 1000.0);
+        let two = lr_max(0.5, &[0.1, 0.1], 1000.0);
+        assert!(two > one);
+    }
+
+    #[test]
+    fn lr_max_zero_without_helpers() {
+        assert_eq!(lr_max(0.5, &[], 1000.0), 0.0);
+    }
+
+    #[test]
+    fn future_shrinks_with_migration_time() {
+        let f1 = future_after_migration(1000.0, 1.0, 100.0, 0.5);
+        let f2 = future_after_migration(1000.0, 5.0, 100.0, 0.5);
+        assert!(f2 < f1);
+        assert_eq!(future_after_migration(10.0, 1.0, 100.0, 0.5), 0.0);
+    }
+
+    #[test]
+    fn chooses_knee_of_chi() {
+        // Cheap helpers but migration cost grows linearly; at some
+        // count the F term dominates and χ drops.
+        let candidates = vec![0.05; 8];
+        let (k, chi) = choose_helper_count(
+            0.6,
+            &candidates,
+            1000.0,
+            |k| 2.0 * k as f64, // 2 time units per helper
+            100.0,
+        );
+        assert!(k >= 1 && k < 8, "expected an interior knee, got {k}");
+        assert!(chi > 0.0);
+        // χ at k+1 must not beat χ at k (the stopping rule).
+        let lrm_next = lr_max(0.6, &candidates[..k + 1], 1000.0);
+        let f_next = future_after_migration(1000.0, 2.0 * (k + 1) as f64, 100.0, 0.6);
+        assert!(lrm_next.min(f_next) <= chi + 1e-9);
+    }
+
+    #[test]
+    fn single_helper_when_migration_free() {
+        // With zero migration cost, χ = LRmax which keeps growing; we
+        // take all candidates.
+        let candidates = vec![0.0, 0.0, 0.0];
+        let (k, _) = choose_helper_count(0.9, &candidates, 100.0, |_| 0.0, 10.0);
+        assert_eq!(k, 3);
+    }
+}

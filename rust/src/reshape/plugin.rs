@@ -1,0 +1,554 @@
+//! The Reshape coordinator plugin: the full mitigation protocol of
+//! Fig. 3.2 running inside the engine coordinator.
+//!
+//! Per tick (one metric-collection period):
+//! 1. read each worker's workload φ (queue size, or busy-time in the
+//!    Flink-style configuration) and feed the per-worker
+//!    [`MeanEstimator`]s with base-partitioning receipt rates;
+//! 2. advance active mitigations: state-transfer → **phase 1**
+//!    (catch-up) → **phase 2** (rebalance from predictions), iterating
+//!    on divergence (§3.4.3.1);
+//! 3. run the skew test over unmitigated workers, pick helpers, and
+//!    start new mitigations (state migration first, Fig. 3.2(b–d));
+//! 4. adjust τ per Algorithm 1 when enabled.
+//!
+//! The plugin records a [`ReshapeReport`] (shared, lock-guarded) the
+//! experiment harnesses read: per-pair received-tuples timelines, τ
+//! history, iteration counts.
+
+use crate::engine::controller::{CoordPlugin, PluginCtx};
+use crate::engine::message::{ControlMessage, WorkerEvent, WorkerId};
+use crate::engine::partitioner::{MitigationRoute, ShareMode};
+use crate::reshape::adaptive::{adjust_tau, TauDecision};
+use crate::reshape::detector;
+use crate::reshape::estimator::MeanEstimator;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Load-transfer approach (§3.3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Approach {
+    /// Split by records: a fraction of *every* key's tuples moves —
+    /// representative early results, no input-order preservation.
+    SplitByRecords,
+    /// Split by keys: whole keys move — preserves per-key order,
+    /// cannot split a heavy hitter.
+    SplitByKeys,
+}
+
+/// Denominator of SBR record-split windows (num/1000 of every 1000).
+const SBR_DEN: u32 = 1000;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Waiting for state-transfer acks from helpers (Fig. 3.2(c,d)).
+    AwaitState { outstanding: usize },
+    /// Phase 1: helpers catching up with the backlog (§3.3.2).
+    CatchUp,
+    /// Phase 2: steady-state rebalancing of future input.
+    Rebalance,
+}
+
+#[derive(Debug)]
+struct Mitigation {
+    skewed: usize,
+    helpers: Vec<usize>,
+    phase: Phase,
+    iterations: u32,
+}
+
+/// Shared observability record for the experiment harnesses.
+#[derive(Debug, Default)]
+pub struct ReshapeReport {
+    /// Mitigations started: (elapsed s, skewed, helpers).
+    pub mitigations: Vec<(f64, usize, Vec<usize>)>,
+    /// Phase-2 activations: (elapsed s, skewed).
+    pub phase2: Vec<(f64, usize)>,
+    /// Total mitigation iterations (phase-2 recomputations included).
+    pub iterations: u32,
+    /// τ value over time: (elapsed s, τ).
+    pub tau_history: Vec<(f64, f64)>,
+    /// Per tick: (elapsed s, worker idx, received σ_w, workload φ).
+    pub timeline: Vec<(f64, usize, i64, f64)>,
+    /// State-transfer acks observed: (elapsed s, transfer id).
+    pub transfers: Vec<(f64, u64)>,
+}
+
+/// The Reshape plugin. Protects one operator (`target_op`).
+pub struct ReshapePlugin {
+    target_op: usize,
+    approach: Approach,
+    /// Workers of ops feeding `target_op` get route updates.
+    mitigations: Vec<Mitigation>,
+    estimators: Vec<MeanEstimator>,
+    last_base: Vec<i64>,
+    tau: f64,
+    tau_adjustments: u32,
+    epoch: u64,
+    next_transfer: u64,
+    /// transfer id → mitigation index.
+    pending_transfers: Vec<(u64, usize)>,
+    /// SBK moves on mutable-state operators awaiting marker alignment
+    /// (§3.5.3): epoch → (skewed, helper, keys).
+    pending_sbk_moves: Vec<(u64, usize, usize, Vec<u64>)>,
+    /// The protected operator's state is immutable in its current
+    /// phase (probe-side join) → replicate on migration; otherwise
+    /// move/skip per §3.5.
+    immutable_state: bool,
+    /// Run the catch-up first phase (§3.3.2). Disabled only by the
+    /// Fig. 3.18/3.19 ablation.
+    phase1_enabled: bool,
+    report: Arc<Mutex<ReshapeReport>>,
+    ticks: u64,
+}
+
+impl ReshapePlugin {
+    /// Protect `target_op` with the given approach. `immutable_state`
+    /// = the mitigated phase's state is immutable (Table 3.1) and is
+    /// replicated to helpers before load transfer.
+    pub fn new(target_op: usize, approach: Approach, immutable_state: bool) -> ReshapePlugin {
+        ReshapePlugin {
+            target_op,
+            approach,
+            mitigations: Vec::new(),
+            estimators: Vec::new(),
+            last_base: Vec::new(),
+            tau: f64::NAN, // initialized from config on first tick
+            tau_adjustments: 0,
+            epoch: 0,
+            next_transfer: 1,
+            pending_transfers: Vec::new(),
+            pending_sbk_moves: Vec::new(),
+            immutable_state,
+            phase1_enabled: true,
+            report: Arc::new(Mutex::new(ReshapeReport::default())),
+            ticks: 0,
+        }
+    }
+
+    /// Ablation (Figs. 3.18/3.19): skip the catch-up phase and go
+    /// straight to estimator-driven rebalancing.
+    pub fn without_phase1(mut self) -> ReshapePlugin {
+        self.phase1_enabled = false;
+        self
+    }
+
+    /// Shared report handle for harnesses.
+    pub fn report(&self) -> Arc<Mutex<ReshapeReport>> {
+        self.report.clone()
+    }
+
+    fn workloads(&self, ctx: &PluginCtx) -> Vec<f64> {
+        let n = ctx.workers_of(self.target_op);
+        (0..n)
+            .map(|i| {
+                let id = WorkerId::new(self.target_op, i);
+                if ctx.completed.contains(&id) {
+                    return 0.0;
+                }
+                let Some(g) = ctx.gauges_of(id) else { return 0.0 };
+                match ctx.config.reshape_metric {
+                    crate::config::WorkloadMetric::QueueSize => {
+                        g.queued.load(Ordering::Relaxed).max(0) as f64
+                    }
+                    crate::config::WorkloadMetric::BusyTime => {
+                        g.busy_fraction(std::time::Instant::now(), ctx.started) * 100.0
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// (η, τ) in the units of the configured metric.
+    fn thresholds(&self, ctx: &PluginCtx) -> (f64, f64) {
+        match ctx.config.reshape_metric {
+            crate::config::WorkloadMetric::QueueSize => (ctx.config.reshape_eta, self.tau),
+            crate::config::WorkloadMetric::BusyTime => {
+                (ctx.config.reshape_busy_threshold * 100.0, 10.0)
+            }
+        }
+    }
+
+    /// Broadcast a route to every worker of every upstream operator.
+    fn push_route(&mut self, ctx: &PluginCtx, skewed: usize, helper: usize, mode: ShareMode) {
+        self.epoch += 1;
+        for up in ctx.upstream_ops(self.target_op) {
+            ctx.broadcast(
+                up,
+                ControlMessage::UpdateRoute {
+                    target_op: self.target_op,
+                    route: MitigationRoute {
+                        skewed,
+                        helper,
+                        mode: mode.clone(),
+                        epoch: self.epoch,
+                    },
+                },
+            );
+        }
+    }
+
+    /// Keys (stable hashes) to move for SBK, chosen from the skewed
+    /// worker's per-key distribution so their combined load ≈
+    /// `fraction` of its input. Heaviest key is splittable only under
+    /// SBR, so SBK keeps it (the Flux limitation is stricter — see
+    /// baselines).
+    fn pick_keys(&self, ctx: &PluginCtx, skewed: usize, fraction: f64) -> Vec<u64> {
+        let id = WorkerId::new(self.target_op, skewed);
+        let Some(g) = ctx.gauges_of(id) else { return Vec::new() };
+        let counts = g.key_counts.lock().unwrap();
+        let mut items: Vec<(u64, u64)> = counts.iter().map(|(k, v)| (*k, *v)).collect();
+        drop(counts);
+        items.sort_by_key(|(_, c)| std::cmp::Reverse(*c));
+        let total: u64 = items.iter().map(|(_, c)| c).sum();
+        if total == 0 || items.len() < 2 {
+            return Vec::new();
+        }
+        // Skip the heaviest key; greedily take next-heaviest keys until
+        // the requested fraction is covered.
+        let mut moved = Vec::new();
+        let mut acc = 0u64;
+        for (k, c) in items.into_iter().skip(1) {
+            if (acc as f64) / (total as f64) >= fraction {
+                break;
+            }
+            moved.push(k);
+            acc += c;
+        }
+        moved
+    }
+
+    /// Enter phase 2 for a mitigation: compute per-helper shares from
+    /// the estimators and install the rebalancing routes.
+    fn start_phase2(&mut self, ctx: &PluginCtx, mi: usize) {
+        let (skewed, helpers) = {
+            let m = &self.mitigations[mi];
+            (m.skewed, m.helpers.clone())
+        };
+        let est_s = self.estimators[skewed].predict();
+        let est_h: Vec<f64> = helpers.iter().map(|&h| self.estimators[h].predict()).collect();
+        let mean = (est_s + est_h.iter().sum::<f64>()) / (helpers.len() as f64 + 1.0);
+        match self.approach {
+            Approach::SplitByRecords => {
+                for (i, &h) in helpers.iter().enumerate() {
+                    let extra = (mean - est_h[i]).max(0.0);
+                    let frac = if est_s > 0.0 { (extra / est_s).min(0.95) } else { 0.0 };
+                    let num = ((frac * SBR_DEN as f64).round() as u32).min(SBR_DEN - 1);
+                    self.push_route(
+                        ctx,
+                        skewed,
+                        h,
+                        ShareMode::SplitRecords { num: num.max(1), den: SBR_DEN },
+                    );
+                }
+            }
+            Approach::SplitByKeys => {
+                for (i, &h) in helpers.iter().enumerate() {
+                    let extra = (mean - est_h[i]).max(0.0);
+                    let frac = if est_s > 0.0 { (extra / est_s).min(0.95) } else { 0.0 };
+                    let keys = self.pick_keys(ctx, skewed, frac);
+                    if !keys.is_empty() {
+                        self.push_route(ctx, skewed, h, ShareMode::SplitKeys(keys.clone()));
+                        if !self.immutable_state {
+                            // Mutable state (e.g. running group-by
+                            // aggregates): migrate the moved keys' state
+                            // once every upstream worker has emitted the
+                            // new epoch's marker — the §3.5.3 safe point.
+                            self.pending_sbk_moves.push((self.epoch, skewed, h, keys));
+                        }
+                    } else {
+                        // Nothing movable: drop back to base routing.
+                        self.push_route(
+                            ctx,
+                            skewed,
+                            h,
+                            ShareMode::SplitRecords { num: 1, den: SBR_DEN },
+                        );
+                    }
+                }
+            }
+        }
+        let m = &mut self.mitigations[mi];
+        m.phase = Phase::Rebalance;
+        m.iterations += 1;
+        // New iteration → fresh estimation sample (§3.4.3.1).
+        self.estimators[skewed].reset();
+        for h in helpers {
+            self.estimators[h].reset();
+        }
+        let mut rep = self.report.lock().unwrap();
+        rep.phase2.push((ctx.started.elapsed().as_secs_f64(), skewed));
+        rep.iterations += 1;
+    }
+
+    /// Start a brand-new mitigation for (skewed, helpers).
+    fn start_mitigation(&mut self, ctx: &PluginCtx, skewed: usize, helpers: Vec<usize>) {
+        let t = ctx.started.elapsed().as_secs_f64();
+        self.report
+            .lock()
+            .unwrap()
+            .mitigations
+            .push((t, skewed, helpers.clone()));
+        if self.immutable_state {
+            // Fig. 3.2(b–d): replicate the skewed worker's state to
+            // each helper, then change the partitioning on ack.
+            let mut outstanding = 0;
+            for &h in &helpers {
+                let tid = self.next_transfer;
+                self.next_transfer += 1;
+                self.pending_transfers.push((tid, self.mitigations.len()));
+                ctx.send_control(
+                    WorkerId::new(self.target_op, skewed),
+                    ControlMessage::SendState {
+                        to: WorkerId::new(self.target_op, h),
+                        keys: None,
+                        transfer_id: tid,
+                        replicate: true,
+                    },
+                );
+                outstanding += 1;
+            }
+            self.mitigations.push(Mitigation {
+                skewed,
+                helpers,
+                phase: Phase::AwaitState { outstanding },
+                iterations: 0,
+            });
+        } else {
+            // Mutable state: the scattered-state merge (SBR, §3.5.4)
+            // or marker-synchronized key moves (SBK, §3.5.3) happen on
+            // the data plane; start phase 1 immediately.
+            if self.phase1_enabled {
+                for &h in &helpers {
+                    self.push_route(ctx, skewed, h, ShareMode::CatchUpAll);
+                }
+            }
+            self.mitigations.push(Mitigation {
+                skewed,
+                helpers,
+                phase: Phase::CatchUp,
+                iterations: 0,
+            });
+            if !self.phase1_enabled {
+                let mi = self.mitigations.len() - 1;
+                self.start_phase2(ctx, mi);
+            }
+        }
+    }
+}
+
+impl CoordPlugin for ReshapePlugin {
+    fn name(&self) -> &str {
+        "reshape"
+    }
+
+    fn period(&self) -> Duration {
+        Duration::from_millis(20)
+    }
+
+    fn tick(&mut self, ctx: &PluginCtx) {
+        let elapsed = ctx.started.elapsed();
+        if elapsed.as_millis() < ctx.config.reshape_initial_delay_ms as u128 {
+            return;
+        }
+        if self.tau.is_nan() {
+            self.tau = ctx.config.reshape_tau;
+        }
+        let n = ctx.workers_of(self.target_op);
+        if self.estimators.is_empty() {
+            self.estimators =
+                vec![MeanEstimator::new(ctx.config.reshape_sample_window); n];
+            self.last_base = vec![0; n];
+            if self.approach == Approach::SplitByKeys {
+                // SBK needs the per-key distribution (§3.3.1).
+                for i in 0..n {
+                    if let Some(g) = ctx.gauges_of(WorkerId::new(self.target_op, i)) {
+                        g.track_keys.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        self.ticks += 1;
+        let loads = self.workloads(ctx);
+        // Feed estimators with base-receipt deltas.
+        for i in 0..n {
+            if let Some(g) = ctx.gauges_of(WorkerId::new(self.target_op, i)) {
+                let cur = g.base_received.load(Ordering::Relaxed);
+                let delta = (cur - self.last_base[i]) as f64;
+                self.last_base[i] = cur;
+                self.estimators[i].observe(delta);
+            }
+        }
+        // Record timeline.
+        {
+            let t = elapsed.as_secs_f64();
+            let mut rep = self.report.lock().unwrap();
+            for i in 0..n {
+                let recv = ctx
+                    .gauges_of(WorkerId::new(self.target_op, i))
+                    .map(|g| g.received.load(Ordering::Relaxed))
+                    .unwrap_or(0);
+                rep.timeline.push((t, i, recv, loads[i]));
+            }
+            rep.tau_history.push((t, self.tau));
+        }
+        let (eta, tau) = self.thresholds(ctx);
+
+        // Advance active mitigations.
+        for mi in 0..self.mitigations.len() {
+            match self.mitigations[mi].phase {
+                Phase::AwaitState { .. } => {}
+                Phase::CatchUp => {
+                    let skewed = self.mitigations[mi].skewed;
+                    let caught_up = self.mitigations[mi]
+                        .helpers
+                        .iter()
+                        .all(|&h| loads[h] >= loads[skewed] - (tau / 4.0).max(8.0));
+                    if caught_up {
+                        self.start_phase2(ctx, mi);
+                    }
+                }
+                Phase::Rebalance => {
+                    // Divergence → another iteration (§3.4.3.1).
+                    let skewed = self.mitigations[mi].skewed;
+                    let diverged = self.mitigations[mi]
+                        .helpers
+                        .iter()
+                        .any(|&h| loads[skewed] >= eta && loads[skewed] - loads[h] >= tau);
+                    if diverged {
+                        // Re-enter catch-up briefly, then re-estimate.
+                        let helpers = self.mitigations[mi].helpers.clone();
+                        for &h in &helpers {
+                            self.push_route(ctx, skewed, h, ShareMode::CatchUpAll);
+                        }
+                        self.mitigations[mi].phase = Phase::CatchUp;
+                    }
+                }
+            }
+        }
+
+        // Dynamic τ (Algorithm 1) on the widest unmitigated gap.
+        if ctx.config.reshape_dynamic_tau
+            && ctx.config.reshape_metric == crate::config::WorkloadMetric::QueueSize
+            && self.tau_adjustments < ctx.config.reshape_max_tau_adjust
+        {
+            let mitigated: Vec<usize> = self
+                .mitigations
+                .iter()
+                .flat_map(|m| std::iter::once(m.skewed).chain(m.helpers.iter().copied()))
+                .collect();
+            let free: Vec<usize> =
+                (0..n).filter(|i| !mitigated.contains(i)).collect();
+            if free.len() >= 2 {
+                let hi = *free
+                    .iter()
+                    .max_by(|&&a, &&b| loads[a].partial_cmp(&loads[b]).unwrap())
+                    .unwrap();
+                let lo = *free
+                    .iter()
+                    .min_by(|&&a, &&b| loads[a].partial_cmp(&loads[b]).unwrap())
+                    .unwrap();
+                let gap = loads[hi] - loads[lo];
+                let eps = self.estimators[hi].standard_error();
+                match adjust_tau(
+                    self.tau,
+                    gap,
+                    eps,
+                    ctx.config.reshape_eps_range,
+                    ctx.config.reshape_tau_step,
+                ) {
+                    TauDecision::Increase(t) => {
+                        self.tau = t;
+                        self.tau_adjustments += 1;
+                    }
+                    TauDecision::Decrease(t) => {
+                        self.tau = t.max(1.0);
+                        self.tau_adjustments += 1;
+                    }
+                    TauDecision::Keep => {}
+                }
+            }
+        }
+
+        // Detect new skew.
+        let busy: Vec<usize> = self
+            .mitigations
+            .iter()
+            .flat_map(|m| std::iter::once(m.skewed).chain(m.helpers.iter().copied()))
+            .collect();
+        let (eta, tau) = self.thresholds(ctx);
+        let found = detector::detect(
+            &loads,
+            &busy,
+            eta,
+            tau,
+            ctx.config.reshape_max_helpers,
+        );
+        for (skewed, helpers) in found.pairs {
+            self.start_mitigation(ctx, skewed, helpers);
+        }
+    }
+
+    fn on_event(&mut self, ev: &WorkerEvent, ctx: &PluginCtx) {
+        if let WorkerEvent::MarkerAligned { worker, epoch } = ev {
+            // The skewed worker has seen the epoch marker from every
+            // upstream sender: no more pre-epoch tuples can arrive, so
+            // the moved keys' mutable state can migrate safely (§3.5.3).
+            if worker.op == self.target_op {
+                let due: Vec<usize> = self
+                    .pending_sbk_moves
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (e, s, _, _))| *e <= *epoch && *s == worker.idx)
+                    .map(|(i, _)| i)
+                    .collect();
+                for i in due.into_iter().rev() {
+                    let (_, skewed, helper, keys) = self.pending_sbk_moves.swap_remove(i);
+                    let tid = self.next_transfer;
+                    self.next_transfer += 1;
+                    ctx.send_control(
+                        WorkerId::new(self.target_op, skewed),
+                        ControlMessage::SendState {
+                            to: WorkerId::new(self.target_op, helper),
+                            keys: Some(keys),
+                            transfer_id: tid,
+                            replicate: false, // mutable state MOVES
+                        },
+                    );
+                }
+            }
+        }
+        if let WorkerEvent::StateApplied { transfer_id, .. } = ev {
+            let t = ctx.started.elapsed().as_secs_f64();
+            self.report.lock().unwrap().transfers.push((t, *transfer_id));
+            if let Some(pos) = self
+                .pending_transfers
+                .iter()
+                .position(|(tid, _)| tid == transfer_id)
+            {
+                let (_, mi) = self.pending_transfers.swap_remove(pos);
+                if let Some(m) = self.mitigations.get_mut(mi) {
+                    if let Phase::AwaitState { outstanding } = &mut m.phase {
+                        *outstanding -= 1;
+                        if *outstanding == 0 {
+                            // Fig. 3.2(e,f): all helpers have the
+                            // state; change the partitioning logic.
+                            let skewed = m.skewed;
+                            let helpers = m.helpers.clone();
+                            m.phase = Phase::CatchUp;
+                            if self.phase1_enabled {
+                                for &h in &helpers {
+                                    self.push_route(ctx, skewed, h, ShareMode::CatchUpAll);
+                                }
+                            } else {
+                                // Fig. 3.18/3.19 ablation: phase 2 only.
+                                self.start_phase2(ctx, mi);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see DESIGN.md; serialized
+//! protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1) and
+//! executes them from the engine's hot path.
+//!
+//! Python runs only at build time (`make artifacts`); at run time the
+//! rust binary is self-contained: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → compile once → execute many.
+
+pub mod pjrt;
+
+pub use pjrt::{InferenceHandle, InferenceServer, Tensor};

@@ -1,0 +1,175 @@
+//! The inference server: a dedicated thread owning the PJRT client and
+//! compiled executables.
+//!
+//! The `xla` crate's wrappers hold raw pointers (not `Send`/`Sync`), so
+//! executables cannot be shared across worker threads. Instead a single
+//! server thread owns the client and an executable cache; ML-operator
+//! workers talk to it through a cloneable [`InferenceHandle`] (request
+//! channel + per-request reply channel). Model compilation happens once
+//! per model name, on first use.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+/// A host tensor crossing the server boundary.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    I32(Vec<i32>, Vec<i64>),
+    F32(Vec<f32>, Vec<i64>),
+}
+
+impl Tensor {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Tensor::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+            Tensor::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+        })
+    }
+}
+
+struct Request {
+    model: String,
+    inputs: Vec<Tensor>,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+/// Cloneable client handle to the inference server.
+#[derive(Clone)]
+pub struct InferenceHandle {
+    tx: Sender<Request>,
+}
+
+impl InferenceHandle {
+    /// Run `model` (loaded from `<artifacts>/<model>.hlo.txt`) on the
+    /// inputs; returns the flattened f32 output of the first tuple
+    /// element.
+    pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<f32>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { model: model.to_string(), inputs, reply: rtx })
+            .map_err(|_| anyhow!("inference server gone"))?;
+        rrx.recv().map_err(|_| anyhow!("inference server dropped reply"))?
+    }
+}
+
+/// The server: spawn once per process (or per benchmark run).
+pub struct InferenceServer {
+    handle: InferenceHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start the server reading artifacts from `dir`.
+    pub fn start(dir: &str) -> InferenceServer {
+        let dir = PathBuf::from(dir);
+        let (tx, rx) = channel::<Request>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-server".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        // Fail every request with the construction error.
+                        while let Ok(req) = rx.recv() {
+                            let _ = req
+                                .reply
+                                .send(Err(anyhow!("PJRT client init failed: {e}")));
+                        }
+                        return;
+                    }
+                };
+                let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+                while let Ok(req) = rx.recv() {
+                    let result = serve(&client, &mut cache, &dir, &req);
+                    let _ = req.reply.send(result);
+                }
+            })
+            .expect("spawn pjrt server");
+        InferenceServer { handle: InferenceHandle { tx }, thread: Some(thread) }
+    }
+
+    pub fn handle(&self) -> InferenceHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        // Close the request channel; the thread exits on recv error.
+        let (tx, _) = channel();
+        self.handle = InferenceHandle { tx };
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: &std::path::Path,
+    req: &Request,
+) -> Result<Vec<f32>> {
+    if !cache.contains_key(&req.model) {
+        let path = dir.join(format!("{}.hlo.txt", req.model));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", req.model))?;
+        cache.insert(req.model.clone(), exe);
+    }
+    let exe = cache.get(&req.model).unwrap();
+    let literals: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+    let out = result.to_tuple1()?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+/// Whether the artifacts directory has a given model (tests skip
+/// gracefully when `make artifacts` has not run).
+pub fn artifact_exists(dir: &str, model: &str) -> bool {
+    PathBuf::from(dir).join(format!("{model}.hlo.txt")).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end smoke test against the classifier artifact; skipped
+    /// when artifacts have not been built.
+    #[test]
+    fn classifier_artifact_runs() {
+        let dir = "artifacts";
+        if !artifact_exists(dir, "classifier") {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let server = InferenceServer::start(dir);
+        let h = server.handle();
+        // Shapes must match python/compile/model.py: tokens i32[B, T].
+        let (b, t) = (crate::operators::ml_infer::BATCH, crate::operators::ml_infer::TOKENS);
+        let tokens = vec![1i32; b * t];
+        let out = h
+            .run("classifier", vec![Tensor::I32(tokens, vec![b as i64, t as i64])])
+            .expect("inference");
+        assert_eq!(out.len(), b * crate::operators::ml_infer::CLASSES);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn missing_model_errors_cleanly() {
+        let server = InferenceServer::start("artifacts");
+        let h = server.handle();
+        let err = h.run("no_such_model", vec![Tensor::F32(vec![0.0], vec![1])]);
+        assert!(err.is_err());
+    }
+}

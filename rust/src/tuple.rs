@@ -1,0 +1,269 @@
+//! The relational data model: [`Value`], [`Tuple`], [`Schema`].
+//!
+//! The paper (§2.2.1) "focuses on the relational data model, in which
+//! data is modeled as bags of tuples". Strings are `Arc<str>` so that
+//! tuple clones along fan-out edges (replication, broadcast of heavy
+//! hitters) are cheap.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A single field value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Int(i64),
+    Float(f64),
+    Str(Arc<str>),
+}
+
+impl Value {
+    pub fn str(s: &str) -> Value {
+        Value::Str(Arc::from(s))
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Stable 64-bit hash of the value (used for hash partitioning).
+    /// FNV-1a — deterministic across runs, unlike `DefaultHasher` with
+    /// random keys, which matters for fault-tolerance replay.
+    pub fn stable_hash(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        match self {
+            Value::Null => eat(&[0]),
+            Value::Int(i) => {
+                eat(&[1]);
+                eat(&i.to_le_bytes());
+            }
+            Value::Float(f) => {
+                eat(&[2]);
+                eat(&f.to_bits().to_le_bytes());
+            }
+            Value::Str(s) => {
+                eat(&[3]);
+                eat(s.as_bytes());
+            }
+        }
+        h
+    }
+
+    /// Approximate in-memory size in bytes (used by Maestro's
+    /// materialization-size accounting, Figs. 4.23/4.24).
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Value::Null => 1,
+            Value::Int(_) => 8,
+            Value::Float(_) => 8,
+            Value::Str(s) => 16 + s.len(),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "NULL"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Total order over values for sort operators: NULL < Int/Float < Str;
+/// numeric values compare numerically across Int/Float.
+pub fn value_cmp(a: &Value, b: &Value) -> std::cmp::Ordering {
+    use std::cmp::Ordering::*;
+    use Value::*;
+    match (a, b) {
+        (Null, Null) => Equal,
+        (Null, _) => Less,
+        (_, Null) => Greater,
+        (Int(x), Int(y)) => x.cmp(y),
+        (Float(x), Float(y)) => x.partial_cmp(y).unwrap_or(Equal),
+        (Int(x), Float(y)) => (*x as f64).partial_cmp(y).unwrap_or(Equal),
+        (Float(x), Int(y)) => x.partial_cmp(&(*y as f64)).unwrap_or(Equal),
+        (Str(x), Str(y)) => x.cmp(y),
+        (Str(_), _) => Greater,
+        (_, Str(_)) => Less,
+    }
+}
+
+/// A tuple: a boxed slice of values. Field access is positional; the
+/// [`Schema`] maps names to positions at plan-compile time so the hot
+/// path never does string lookups.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tuple {
+    pub values: Box<[Value]>,
+}
+
+impl Tuple {
+    pub fn new(values: Vec<Value>) -> Tuple {
+        Tuple { values: values.into_boxed_slice() }
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> &Value {
+        &self.values[idx]
+    }
+
+    pub fn arity(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Concatenate two tuples (join output).
+    pub fn concat(&self, other: &Tuple) -> Tuple {
+        let mut v = Vec::with_capacity(self.values.len() + other.values.len());
+        v.extend_from_slice(&self.values);
+        v.extend_from_slice(&other.values);
+        Tuple::new(v)
+    }
+
+    pub fn byte_size(&self) -> usize {
+        8 + self.values.iter().map(Value::byte_size).sum::<usize>()
+    }
+}
+
+impl fmt::Display for Tuple {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, v) in self.values.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Field types for schema declaration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FieldType {
+    Int,
+    Float,
+    Str,
+}
+
+/// A named, typed schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schema {
+    pub fields: Vec<(String, FieldType)>,
+}
+
+impl Schema {
+    pub fn new(fields: &[(&str, FieldType)]) -> Schema {
+        Schema {
+            fields: fields
+                .iter()
+                .map(|(n, t)| (n.to_string(), *t))
+                .collect(),
+        }
+    }
+
+    /// Position of a field by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|(n, _)| n == name)
+    }
+
+    /// Schema of a join output (concatenation; right-side names prefixed
+    /// on collision).
+    pub fn concat(&self, other: &Schema) -> Schema {
+        let mut fields = self.fields.clone();
+        for (n, t) in &other.fields {
+            let name = if self.index_of(n).is_some() {
+                format!("r_{n}")
+            } else {
+                n.clone()
+            };
+            fields.push((name, *t));
+        }
+        Schema { fields }
+    }
+
+    pub fn arity(&self) -> usize {
+        self.fields.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_hash_is_stable() {
+        let v = Value::str("california");
+        assert_eq!(v.stable_hash(), Value::str("california").stable_hash());
+        assert_ne!(v.stable_hash(), Value::str("arizona").stable_hash());
+        assert_ne!(Value::Int(1).stable_hash(), Value::Int(2).stable_hash());
+        // Int and Float with same numeric value hash differently (typed).
+        assert_ne!(
+            Value::Int(1).stable_hash(),
+            Value::Float(1.0).stable_hash()
+        );
+    }
+
+    #[test]
+    fn value_order_total() {
+        use std::cmp::Ordering::*;
+        assert_eq!(value_cmp(&Value::Null, &Value::Int(0)), Less);
+        assert_eq!(value_cmp(&Value::Int(2), &Value::Float(2.5)), Less);
+        assert_eq!(value_cmp(&Value::Float(3.0), &Value::Int(3)), Equal);
+        assert_eq!(value_cmp(&Value::str("b"), &Value::str("a")), Greater);
+        assert_eq!(value_cmp(&Value::str("a"), &Value::Int(9)), Greater);
+    }
+
+    #[test]
+    fn tuple_concat() {
+        let a = Tuple::new(vec![Value::Int(1)]);
+        let b = Tuple::new(vec![Value::str("x"), Value::Float(2.0)]);
+        let c = a.concat(&b);
+        assert_eq!(c.arity(), 3);
+        assert_eq!(c.get(1).as_str(), Some("x"));
+    }
+
+    #[test]
+    fn schema_lookup_and_concat() {
+        let s1 = Schema::new(&[("id", FieldType::Int), ("loc", FieldType::Str)]);
+        let s2 = Schema::new(&[("id", FieldType::Int), ("val", FieldType::Float)]);
+        assert_eq!(s1.index_of("loc"), Some(1));
+        let j = s1.concat(&s2);
+        assert_eq!(j.arity(), 4);
+        assert_eq!(j.index_of("r_id"), Some(2));
+        assert_eq!(j.index_of("val"), Some(3));
+    }
+
+    #[test]
+    fn byte_size_counts_strings() {
+        let t = Tuple::new(vec![Value::str("abcd"), Value::Int(5)]);
+        assert_eq!(t.byte_size(), 8 + (16 + 4) + 8);
+    }
+}

@@ -1,0 +1,183 @@
+//! `check` — a minimal property-based testing harness (proptest-lite).
+//!
+//! The vendored crate set has no `proptest`/`quickcheck`, so coordinator
+//! invariants (routing, batching, state migration, region graphs) are
+//! property-tested with this ~100-line harness: generate N random cases
+//! from a seeded [`Rng`](crate::util::Rng), run the property, and on
+//! failure greedily shrink the case before reporting.
+
+use super::rng::Rng;
+
+/// Number of random cases per property (override with `CHECK_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator produces a value from randomness, and knows how to shrink
+/// a failing value toward smaller counterexamples.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values, most aggressive first. Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `cases` random values from `gen`; panic with the
+/// (shrunk) counterexample on failure. Deterministic per `seed`.
+pub fn check<G: Gen>(seed: u64, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    check_n(seed, default_cases(), gen, prop)
+}
+
+/// Like [`check`] with an explicit case count.
+pub fn check_n<G: Gen>(
+    seed: u64,
+    cases: u32,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let shrunk = shrink_loop(gen, v, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}); \
+                 shrunk counterexample: {shrunk:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut v: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> G::Value {
+    // Greedy: take the first shrink candidate that still fails; stop when
+    // no candidate fails (local minimum) or after a bounded number of steps.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    v
+}
+
+/// Generator for `u64` in `[lo, hi]`; shrinks toward `lo`.
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator for vectors of values from an inner generator; shrinks by
+/// halving the vector and by shrinking individual elements.
+pub struct VecGen<G> {
+    pub inner: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.below(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+            let mut tail = v.clone();
+            tail.pop();
+            out.push(tail);
+            // Shrink the first element.
+            for cand in self.inner.shrink(&v[0]) {
+                let mut w = v.clone();
+                w[0] = cand;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Generator that maps another generator through a function (no shrink).
+pub struct MapGen<G, F> {
+    pub inner: G,
+    pub f: F,
+}
+
+impl<G: Gen, T: Clone + std::fmt::Debug, F: Fn(G::Value) -> T> Gen for MapGen<G, F> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.f)(self.inner.generate(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_clean() {
+        check(1, &U64Range(0, 100), |v| *v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, &U64Range(0, 100), |v| *v < 5);
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        // Collect the shrunk value by catching the panic message.
+        let r = std::panic::catch_unwind(|| {
+            check_n(3, 200, &U64Range(0, 1000), |v| *v < 50);
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land on a small counterexample (>= 50).
+        let shrunk: u64 = msg
+            .rsplit(": ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(shrunk >= 50, "shrunk {shrunk} not a counterexample");
+        assert!(shrunk <= 75, "shrunk {shrunk} far from minimal");
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let g = VecGen { inner: U64Range(0, 9), max_len: 8 };
+        check(4, &g, |v| v.len() <= 8 && v.iter().all(|x| *x <= 9));
+    }
+}

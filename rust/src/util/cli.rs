@@ -1,0 +1,113 @@
+//! Tiny CLI argument parser (the vendored crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, which is all the `amber` launcher and the bench harnesses
+//! need.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Get an option parsed to `T`, or a default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Get a required string option.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Whether a bare flag is present.
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("run --workers 8 w1 --batch=400");
+        assert_eq!(a.positional, vec!["run", "w1"]);
+        assert_eq!(a.get::<usize>("workers", 0), 8);
+        assert_eq!(a.get::<usize>("batch", 0), 400);
+    }
+
+    #[test]
+    fn flags_detected() {
+        let a = parse("bench --verbose --workers 2");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get::<usize>("workers", 0), 2);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse("run --checkpoint");
+        assert!(a.has("checkpoint"));
+        assert!(a.positional == vec!["run"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get::<u64>("tau", 100), 100);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("x --lo -5");
+        // "-5" doesn't start with --, so it is consumed as the value.
+        assert_eq!(a.get::<i64>("lo", 0), -5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: deterministic RNG, a mini
+//! property-testing harness, and CLI argument parsing.
+//!
+//! The offline crate set has no `rand`, `proptest`, or `clap`; these
+//! modules provide the minimal equivalents the rest of the crate needs.
+
+pub mod rng;
+pub mod check;
+pub mod cli;
+
+pub use rng::{Rng, Zipf};

@@ -1,0 +1,215 @@
+//! DSB-like generator (skew-enhanced TPC-DS): `web_sales` fact table and
+//! the dimension tables of the Ch. 3 workflow W2 (based on TPC-DS query
+//! 18: total count per item category for 2001 web sales by customers
+//! with `birth_month >= 6`).
+//!
+//! Three join attributes with different skew (Figs. 3.15d–f):
+//! `item_id` is **highly** skewed (zipf θ≈1.1), `date_id` **moderately**
+//! skewed (θ≈0.5), `customer_id` mildly skewed.
+
+use super::TupleSource;
+use crate::tuple::{FieldType, Schema, Tuple, Value};
+use crate::util::{Rng, Zipf};
+
+pub const NUM_ITEMS: u64 = 2_000;
+pub const NUM_DATES: u64 = 730; // two years of dates; year 2001 = first 365
+pub const NUM_CUSTOMERS: u64 = 5_000;
+pub const NUM_CATEGORIES: i64 = 10;
+
+/// web_sales: (item_id, date_id, customer_id, quantity, price).
+pub fn web_sales_schema() -> Schema {
+    Schema::new(&[
+        ("item_id", FieldType::Int),
+        ("date_id", FieldType::Int),
+        ("customer_id", FieldType::Int),
+        ("quantity", FieldType::Int),
+        ("price", FieldType::Float),
+    ])
+}
+
+pub const WS_ITEM: usize = 0;
+pub const WS_DATE: usize = 1;
+pub const WS_CUSTOMER: usize = 2;
+pub const WS_QUANTITY: usize = 3;
+pub const WS_PRICE: usize = 4;
+
+/// item: (item_id, category).
+pub fn item_schema() -> Schema {
+    Schema::new(&[("item_id", FieldType::Int), ("category", FieldType::Int)])
+}
+
+/// date_dim: (date_id, year).
+pub fn date_schema() -> Schema {
+    Schema::new(&[("date_id", FieldType::Int), ("year", FieldType::Int)])
+}
+
+/// customer: (customer_id, birth_month).
+pub fn customer_schema() -> Schema {
+    Schema::new(&[
+        ("customer_id", FieldType::Int),
+        ("birth_month", FieldType::Int),
+    ])
+}
+
+/// Skew exponents for the three fact-table foreign keys.
+#[derive(Clone, Copy, Debug)]
+pub struct SkewProfile {
+    pub item_theta: f64,
+    pub date_theta: f64,
+    pub customer_theta: f64,
+}
+
+impl Default for SkewProfile {
+    fn default() -> SkewProfile {
+        SkewProfile { item_theta: 1.1, date_theta: 0.5, customer_theta: 0.3 }
+    }
+}
+
+/// Deterministic partitioned `web_sales` source.
+pub struct WebSalesSource {
+    total: usize,
+    parts: usize,
+    idx: usize,
+    pos: usize,
+    seed: u64,
+    item_z: Zipf,
+    date_z: Zipf,
+    cust_z: Zipf,
+}
+
+impl WebSalesSource {
+    pub fn new(
+        total: usize,
+        parts: usize,
+        idx: usize,
+        seed: u64,
+        profile: SkewProfile,
+    ) -> WebSalesSource {
+        WebSalesSource {
+            total,
+            parts,
+            idx,
+            pos: 0,
+            seed,
+            item_z: Zipf::new(NUM_ITEMS, profile.item_theta),
+            date_z: Zipf::new(NUM_DATES, profile.date_theta),
+            cust_z: Zipf::new(NUM_CUSTOMERS, profile.customer_theta),
+        }
+    }
+}
+
+impl TupleSource for WebSalesSource {
+    fn next_tuple(&mut self) -> Option<Tuple> {
+        let i = self.idx + self.pos * self.parts;
+        if i >= self.total {
+            return None;
+        }
+        self.pos += 1;
+        let mut rng = Rng::new(self.seed ^ (i as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+        Some(Tuple::new(vec![
+            Value::Int(self.item_z.sample(&mut rng) as i64),
+            Value::Int(self.date_z.sample(&mut rng) as i64),
+            Value::Int(self.cust_z.sample(&mut rng) as i64),
+            Value::Int(1 + rng.below(10) as i64),
+            Value::Float(5.0 + rng.f64() * 495.0),
+        ]))
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn seek(&mut self, pos: usize) {
+        self.pos = pos;
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        let (t, p, i) = (self.total, self.parts, self.idx);
+        Some(if i >= t { 0 } else { (t - i + p - 1) / p })
+    }
+}
+
+/// Dimension tables (small; materialized).
+pub fn item_table() -> Vec<Tuple> {
+    (0..NUM_ITEMS as i64)
+        .map(|id| Tuple::new(vec![Value::Int(id), Value::Int(id % NUM_CATEGORIES)]))
+        .collect()
+}
+
+pub fn date_table() -> Vec<Tuple> {
+    (0..NUM_DATES as i64)
+        .map(|id| {
+            let year = if id < 365 { 2001 } else { 2002 };
+            Tuple::new(vec![Value::Int(id), Value::Int(year)])
+        })
+        .collect()
+}
+
+pub fn customer_table(seed: u64) -> Vec<Tuple> {
+    let mut rng = Rng::new(seed);
+    (0..NUM_CUSTOMERS as i64)
+        .map(|id| {
+            Tuple::new(vec![Value::Int(id), Value::Int(1 + rng.below(12) as i64)])
+        })
+        .collect()
+}
+
+/// The "slang"-style category dimension used in docs/examples.
+pub fn category_name(cat: i64) -> String {
+    format!("category_{cat}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key_counts(field: usize, n: u64, rows: usize) -> Vec<usize> {
+        let mut s = WebSalesSource::new(rows, 1, 0, 11, SkewProfile::default());
+        let mut counts = vec![0usize; n as usize];
+        while let Some(t) = s.next_tuple() {
+            counts[t.get(field).as_int().unwrap() as usize] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn item_highly_skewed_date_moderate() {
+        let items = key_counts(WS_ITEM, NUM_ITEMS, 60_000);
+        let dates = key_counts(WS_DATE, NUM_DATES, 60_000);
+        let top_item_share = *items.iter().max().unwrap() as f64 / 60_000.0;
+        let top_date_share = *dates.iter().max().unwrap() as f64 / 60_000.0;
+        assert!(
+            top_item_share > 2.5 * top_date_share,
+            "item {top_item_share} vs date {top_date_share}"
+        );
+    }
+
+    #[test]
+    fn dims_cover_fact_keys() {
+        assert_eq!(item_table().len() as u64, NUM_ITEMS);
+        assert_eq!(date_table().len() as u64, NUM_DATES);
+        assert_eq!(customer_table(1).len() as u64, NUM_CUSTOMERS);
+    }
+
+    #[test]
+    fn year_2001_is_half_of_dates() {
+        let n_2001 = date_table()
+            .iter()
+            .filter(|t| t.get(1).as_int() == Some(2001))
+            .count();
+        assert_eq!(n_2001, 365);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut s = WebSalesSource::new(5_000, 2, 1, 3, SkewProfile::default());
+        let a: Vec<Tuple> = std::iter::from_fn(|| s.next_tuple()).collect();
+        s.reset();
+        let b: Vec<Tuple> = std::iter::from_fn(|| s.next_tuple()).collect();
+        assert_eq!(a, b);
+    }
+}

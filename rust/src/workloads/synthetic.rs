@@ -1,0 +1,167 @@
+//! Synthetic changing-distribution workload (Ch. 3 workflow W4,
+//! Fig. 3.24): a large stream whose key distribution shifts mid-run,
+//! plus a small uniform dimension table.
+//!
+//! Paper setting (§3.7.8): both tables have 42 keys; the big table has
+//! 80M rows (scaled down here). "For the first 20M tuples, 80% was
+//! allotted to key 0 and the rest uniformly distributed among the
+//! remaining keys. For the next 60M tuples, 60% was allotted to key 0,
+//! 20% to key 10, and the rest uniformly distributed."
+
+use super::TupleSource;
+use crate::tuple::{FieldType, Schema, Tuple, Value};
+use crate::util::Rng;
+
+pub const NUM_KEYS: u64 = 42;
+/// The key whose worker is skewed throughout.
+pub const HOT_KEY: i64 = 0;
+/// The key that becomes hot after the distribution change.
+pub const SECOND_KEY: i64 = 10;
+
+/// (key, value) schema shared by both tables.
+pub fn schema() -> Schema {
+    Schema::new(&[("key", FieldType::Int), ("value", FieldType::Int)])
+}
+
+pub const F_KEY: usize = 0;
+pub const F_VALUE: usize = 1;
+
+/// The big streaming table with the mid-run distribution shift at
+/// `change_at` (fraction of `total`, 0.25 in the paper: 20M of 80M).
+pub struct ShiftingSource {
+    total: usize,
+    parts: usize,
+    idx: usize,
+    pos: usize,
+    seed: u64,
+    change_at: usize,
+}
+
+impl ShiftingSource {
+    pub fn new(total: usize, parts: usize, idx: usize, seed: u64) -> ShiftingSource {
+        ShiftingSource { total, parts, idx, pos: 0, seed, change_at: total / 4 }
+    }
+
+    fn key_for(&self, i: usize, rng: &mut Rng) -> i64 {
+        let u = rng.f64();
+        if i < self.change_at {
+            // Phase A: 80% key 0, 20% uniform over the other 41 keys.
+            if u < 0.8 {
+                HOT_KEY
+            } else {
+                other_key(rng, &[HOT_KEY])
+            }
+        } else {
+            // Phase B: 60% key 0, 20% key 10, 20% uniform over the rest.
+            if u < 0.6 {
+                HOT_KEY
+            } else if u < 0.8 {
+                SECOND_KEY
+            } else {
+                other_key(rng, &[HOT_KEY, SECOND_KEY])
+            }
+        }
+    }
+}
+
+fn other_key(rng: &mut Rng, excluded: &[i64]) -> i64 {
+    loop {
+        let k = rng.below(NUM_KEYS) as i64;
+        if !excluded.contains(&k) {
+            return k;
+        }
+    }
+}
+
+impl TupleSource for ShiftingSource {
+    fn next_tuple(&mut self) -> Option<Tuple> {
+        let i = self.idx + self.pos * self.parts;
+        if i >= self.total {
+            return None;
+        }
+        self.pos += 1;
+        let mut rng = Rng::new(self.seed ^ (i as u64).wrapping_mul(0x94D049BB133111EB));
+        let key = self.key_for(i, &mut rng);
+        Some(Tuple::new(vec![
+            Value::Int(key),
+            Value::Int(rng.below(1_000_000) as i64),
+        ]))
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn seek(&mut self, pos: usize) {
+        self.pos = pos;
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        let (t, p, i) = (self.total, self.parts, self.idx);
+        Some(if i >= t { 0 } else { (t - i + p - 1) / p })
+    }
+}
+
+/// The small build-side table: 100 rows per key, uniform (the paper's
+/// 4,200-row table over 42 keys).
+pub fn dim_table(rows_per_key: usize) -> Vec<Tuple> {
+    let mut out = Vec::with_capacity(NUM_KEYS as usize * rows_per_key);
+    for k in 0..NUM_KEYS as i64 {
+        for v in 0..rows_per_key as i64 {
+            out.push(Tuple::new(vec![Value::Int(k), Value::Int(v)]));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_a_80_percent_hot() {
+        let total = 40_000;
+        let mut s = ShiftingSource::new(total, 1, 0, 5);
+        let mut hot = 0usize;
+        for _ in 0..total / 4 {
+            let t = s.next_tuple().unwrap();
+            if t.get(F_KEY).as_int() == Some(HOT_KEY) {
+                hot += 1;
+            }
+        }
+        let share = hot as f64 / (total / 4) as f64;
+        assert!((0.75..0.85).contains(&share), "hot share {share}");
+    }
+
+    #[test]
+    fn phase_b_60_20_split() {
+        let total = 40_000;
+        let mut s = ShiftingSource::new(total, 1, 0, 5);
+        for _ in 0..total / 4 {
+            s.next_tuple();
+        }
+        let (mut hot, mut second, mut n) = (0usize, 0usize, 0usize);
+        while let Some(t) = s.next_tuple() {
+            n += 1;
+            match t.get(F_KEY).as_int().unwrap() {
+                HOT_KEY => hot += 1,
+                SECOND_KEY => second += 1,
+                _ => {}
+            }
+        }
+        let hs = hot as f64 / n as f64;
+        let ss = second as f64 / n as f64;
+        assert!((0.55..0.65).contains(&hs), "hot {hs}");
+        assert!((0.15..0.25).contains(&ss), "second {ss}");
+    }
+
+    #[test]
+    fn dim_table_uniform() {
+        let t = dim_table(100);
+        assert_eq!(t.len(), 4_200);
+    }
+}

@@ -1,0 +1,248 @@
+//! TPC-H-like generator: `lineitem`, `orders`, `customer`.
+//!
+//! Used by the Ch. 2 workflows (W1 ≈ TPC-H Q1 over `lineitem`, W2 ≈ Q13
+//! over `customer ⋈ orders`) and the Ch. 3 sort workflow W3 (range
+//! partition of `orders` on `totalprice`, whose bell-shaped distribution
+//! — Fig. 3.15b — is what makes equal-width ranges skewed).
+
+use super::TupleSource;
+use crate::tuple::{FieldType, Schema, Tuple, Value};
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// Rows per "scale-factor unit"; the paper's SF1 lineitem is 6M rows —
+/// we scale 1 unit = `LINEITEM_PER_SF` rows for single-machine runs.
+pub const LINEITEM_PER_SF: usize = 60_000;
+pub const ORDERS_PER_SF: usize = 15_000;
+pub const CUSTOMER_PER_SF: usize = 1_500;
+
+/// lineitem: (orderkey, quantity, extendedprice, discount, tax,
+/// returnflag, linestatus, shipdate).
+pub fn lineitem_schema() -> Schema {
+    Schema::new(&[
+        ("orderkey", FieldType::Int),
+        ("quantity", FieldType::Int),
+        ("extendedprice", FieldType::Float),
+        ("discount", FieldType::Float),
+        ("tax", FieldType::Float),
+        ("returnflag", FieldType::Str),
+        ("linestatus", FieldType::Str),
+        ("shipdate", FieldType::Int),
+    ])
+}
+
+pub const L_ORDERKEY: usize = 0;
+pub const L_QUANTITY: usize = 1;
+pub const L_EXTENDEDPRICE: usize = 2;
+pub const L_DISCOUNT: usize = 3;
+pub const L_TAX: usize = 4;
+pub const L_RETURNFLAG: usize = 5;
+pub const L_LINESTATUS: usize = 6;
+pub const L_SHIPDATE: usize = 7;
+
+/// orders: (orderkey, custkey, orderstatus, totalprice, orderdate).
+pub fn orders_schema() -> Schema {
+    Schema::new(&[
+        ("orderkey", FieldType::Int),
+        ("custkey", FieldType::Int),
+        ("orderstatus", FieldType::Str),
+        ("totalprice", FieldType::Float),
+        ("orderdate", FieldType::Int),
+    ])
+}
+
+pub const O_ORDERKEY: usize = 0;
+pub const O_CUSTKEY: usize = 1;
+pub const O_ORDERSTATUS: usize = 2;
+pub const O_TOTALPRICE: usize = 3;
+pub const O_ORDERDATE: usize = 4;
+
+/// customer: (custkey, mktsegment).
+pub fn customer_schema() -> Schema {
+    Schema::new(&[
+        ("custkey", FieldType::Int),
+        ("mktsegment", FieldType::Str),
+    ])
+}
+
+pub const C_CUSTKEY: usize = 0;
+
+const RETURN_FLAGS: &[&str] = &["A", "N", "R"];
+const LINE_STATUS: &[&str] = &["O", "F"];
+const ORDER_STATUS: &[&str] = &["O", "F", "P"];
+const SEGMENTS: &[&str] = &["AUTOMOBILE", "BUILDING", "FURNITURE", "MACHINERY", "HOUSEHOLD"];
+
+#[inline]
+fn gaussian(rng: &mut Rng) -> f64 {
+    // Box-Muller.
+    let u1 = rng.f64().max(1e-12);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Bell-shaped totalprice like Fig. 3.15b: mean ~150k, sd ~60k, clipped
+/// to [1000, 550_000].
+pub fn sample_totalprice(rng: &mut Rng) -> f64 {
+    let v = 150_000.0 + 60_000.0 * gaussian(rng);
+    v.clamp(1_000.0, 550_000.0)
+}
+
+macro_rules! make_source {
+    ($name:ident, $per_sf:expr, $make:expr) => {
+        /// Deterministic partitioned generator; see module docs.
+        pub struct $name {
+            total: usize,
+            parts: usize,
+            idx: usize,
+            pos: usize,
+            seed: u64,
+        }
+
+        impl $name {
+            /// `sf` scale-factor units; partition `idx` of `parts`.
+            pub fn new(sf: f64, parts: usize, idx: usize, seed: u64) -> $name {
+                $name {
+                    total: (sf * $per_sf as f64) as usize,
+                    parts,
+                    idx,
+                    pos: 0,
+                    seed,
+                }
+            }
+
+            pub fn with_rows(total: usize, parts: usize, idx: usize, seed: u64) -> $name {
+                $name { total, parts, idx, pos: 0, seed }
+            }
+        }
+
+        impl TupleSource for $name {
+            fn next_tuple(&mut self) -> Option<Tuple> {
+                let i = self.idx + self.pos * self.parts;
+                if i >= self.total {
+                    return None;
+                }
+                self.pos += 1;
+                let mut rng =
+                    Rng::new(self.seed ^ (i as u64).wrapping_mul(0xD1B54A32D192ED03));
+                #[allow(clippy::redundant_closure_call)]
+                Some(($make)(i, &mut rng))
+            }
+
+            fn reset(&mut self) {
+                self.pos = 0;
+            }
+
+            fn position(&self) -> usize {
+                self.pos
+            }
+
+            fn seek(&mut self, pos: usize) {
+                self.pos = pos;
+            }
+
+            fn len_hint(&self) -> Option<usize> {
+                let (t, p, i) = (self.total, self.parts, self.idx);
+                Some(if i >= t { 0 } else { (t - i + p - 1) / p })
+            }
+        }
+    };
+}
+
+make_source!(LineitemSource, LINEITEM_PER_SF, |i: usize, rng: &mut Rng| {
+    Tuple::new(vec![
+        Value::Int((i / 4) as i64),
+        Value::Int(1 + rng.below(50) as i64),
+        Value::Float(1_000.0 + rng.f64() * 90_000.0),
+        Value::Float((rng.below(11) as f64) / 100.0),
+        Value::Float((rng.below(9) as f64) / 100.0),
+        Value::Str(Arc::from(*rng.pick(RETURN_FLAGS))),
+        Value::Str(Arc::from(*rng.pick(LINE_STATUS))),
+        Value::Int(rng.range_i64(19920101, 19981201)),
+    ])
+});
+
+make_source!(OrdersSource, ORDERS_PER_SF, |i: usize, rng: &mut Rng| {
+    let custkeys = (self_customers(i) as u64).max(1);
+    Tuple::new(vec![
+        Value::Int(i as i64),
+        Value::Int(rng.below(custkeys) as i64),
+        Value::Str(Arc::from(*rng.pick(ORDER_STATUS))),
+        Value::Float(sample_totalprice(rng)),
+        Value::Int(rng.range_i64(19920101, 19981201)),
+    ])
+});
+
+/// custkey domain used by [`OrdersSource`]; sized so Q13-style group-bys
+/// have realistic group counts. (Free function because the macro
+/// closure cannot capture the source struct.)
+fn self_customers(_i: usize) -> usize {
+    10_000
+}
+
+make_source!(CustomerSource, CUSTOMER_PER_SF, |i: usize, rng: &mut Rng| {
+    Tuple::new(vec![
+        Value::Int(i as i64),
+        Value::Str(Arc::from(*rng.pick(SEGMENTS))),
+    ])
+});
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lineitem_row_count_scales() {
+        let mut s = LineitemSource::new(0.1, 1, 0, 1);
+        let mut n = 0;
+        while s.next_tuple().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, (0.1 * LINEITEM_PER_SF as f64) as usize);
+    }
+
+    #[test]
+    fn totalprice_bell_shaped() {
+        // More mass in the middle band than the outer bands → equal-width
+        // range partitioning is skewed (the premise of W3, Table 3.2).
+        let mut rng = Rng::new(3);
+        let (mut mid, mut outer) = (0, 0);
+        for _ in 0..20_000 {
+            let p = sample_totalprice(&mut rng);
+            if (90_000.0..210_000.0).contains(&p) {
+                mid += 1;
+            } else {
+                outer += 1;
+            }
+        }
+        assert!(mid > outer * 2, "mid={mid} outer={outer}");
+    }
+
+    #[test]
+    fn orders_custkeys_in_domain() {
+        let mut s = OrdersSource::new(0.2, 1, 0, 5);
+        while let Some(t) = s.next_tuple() {
+            let ck = t.get(O_CUSTKEY).as_int().unwrap();
+            assert!((0..10_000).contains(&ck));
+        }
+    }
+
+    #[test]
+    fn sources_replay_identically() {
+        let mut s = LineitemSource::new(0.05, 3, 2, 9);
+        let a: Vec<Tuple> = std::iter::from_fn(|| s.next_tuple()).collect();
+        s.reset();
+        let b: Vec<Tuple> = std::iter::from_fn(|| s.next_tuple()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partition_union_is_total() {
+        let total: usize = (0..5)
+            .map(|p| {
+                let s = CustomerSource::new(1.0, 5, p, 2);
+                s.len_hint().unwrap()
+            })
+            .sum();
+        assert_eq!(total, CUSTOMER_PER_SF);
+    }
+}

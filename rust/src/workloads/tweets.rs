@@ -1,0 +1,286 @@
+//! Tweet dataset generator.
+//!
+//! Models the paper's 180M-tweet US corpus: each tweet has a location
+//! (US state), month, day, text and follower count. The *location*
+//! distribution reproduces the skew of Fig. 3.15a exactly where the
+//! experiments depend on it:
+//!
+//! * California is the heaviest key;
+//! * `CA : AZ = 6.85` and `CA : IL = 4.05` — the target ratios the
+//!   Fig. 3.16/3.17 result-awareness experiments monitor;
+//! * the remaining states follow a zipf-like tail.
+//!
+//! Months are skewed toward December vs October at roughly 4:1 to mirror
+//! the running covid example (Fig. 3.1: "December tuples are almost four
+//! times the tuples of October").
+
+use super::TupleSource;
+use crate::tuple::{FieldType, Schema, Tuple, Value};
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// Number of US states modeled (the paper's tweet experiments use 48–56
+/// workers so that each state maps to one worker).
+pub const NUM_STATES: usize = 50;
+
+/// State indices for the keys the experiments monitor.
+pub const CA: usize = 6; // "California (location 6)" — §3.7.2
+pub const AZ: usize = 4; // "Arizona (location 4)"
+pub const IL: usize = 17; // "Illinois (location 17)"
+pub const TX: usize = 48; // "Texas (location 48)" — §3.7.5
+pub const WV: usize = 33; // West Virginia: shares CA's worker pre-mitigation
+
+/// Paper ratios (§3.7.2): actual CA:AZ and CA:IL tweet-count ratios.
+pub const CA_AZ_RATIO: f64 = 6.85;
+pub const CA_IL_RATIO: f64 = 4.05;
+
+/// Relative weight of each state's tweet volume.
+pub fn state_weights() -> Vec<f64> {
+    let mut w = vec![0.0; NUM_STATES];
+    // Anchors taken from the paper's counts (CA 26M, AZ 3.8M, IL 6.5M of
+    // 180M) — these fix the monitored ratios.
+    w[CA] = 26.0;
+    w[AZ] = 26.0 / CA_AZ_RATIO; // ≈ 3.8
+    w[IL] = 26.0 / CA_IL_RATIO; // ≈ 6.42
+    w[TX] = 20.0; // second-heaviest (§3.7.5 monitors CA and TX)
+    w[WV] = 0.6; // small key co-located with CA's worker (§3.7.4)
+    // Zipf-ish tail for the rest, calibrated so the total ≈ 180 units.
+    let mut rank = 2.0;
+    for i in 0..NUM_STATES {
+        if w[i] == 0.0 {
+            w[i] = 14.0 / (rank + 1.0);
+            rank += 1.0;
+        }
+    }
+    w
+}
+
+/// Cumulative distribution over states derived from [`state_weights`].
+fn state_cdf() -> Vec<f64> {
+    let w = state_weights();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    w.iter()
+        .map(|x| {
+            acc += x / total;
+            acc
+        })
+        .collect()
+}
+
+/// Schema: (id, location, month, day, text, follower_num).
+pub fn schema() -> Schema {
+    Schema::new(&[
+        ("id", FieldType::Int),
+        ("location", FieldType::Int),
+        ("month", FieldType::Int),
+        ("day", FieldType::Int),
+        ("text", FieldType::Str),
+        ("follower_num", FieldType::Int),
+    ])
+}
+
+/// Field indices (hot paths use positions, not names).
+pub const F_ID: usize = 0;
+pub const F_LOCATION: usize = 1;
+pub const F_MONTH: usize = 2;
+pub const F_DAY: usize = 3;
+pub const F_TEXT: usize = 4;
+pub const F_FOLLOWERS: usize = 5;
+
+const TEXT_POOL: &[&str] = &[
+    "just tested positive for covid, staying home",
+    "wildfire smoke everywhere today",
+    "climate change is real, look at this fire season",
+    "new slang just dropped: no cap fr fr",
+    "measles outbreak reported near downtown",
+    "watching the game tonight",
+    "zika travel advisory for the summer",
+    "blunt talk: this coffee is terrible",
+    "covid cases rising again this month",
+    "beautiful sunset over the bay",
+];
+
+/// Deterministic tweet source; partition `idx` of `parts` generates the
+/// round-robin slice of the full id space so scan workers cover the
+/// corpus disjointly.
+pub struct TweetSource {
+    total: usize,
+    parts: usize,
+    idx: usize,
+    pos: usize,
+    cdf: Vec<f64>,
+    seed: u64,
+}
+
+impl TweetSource {
+    pub fn new(total: usize, parts: usize, idx: usize, seed: u64) -> TweetSource {
+        TweetSource { total, parts, idx, pos: 0, cdf: state_cdf(), seed }
+    }
+
+    /// Generate the tweet with global id `i` (pure function of id+seed).
+    fn make(&self, i: usize) -> Tuple {
+        let mut rng = Rng::new(self.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let u = rng.f64();
+        let location = self
+            .cdf
+            .iter()
+            .position(|&c| u <= c)
+            .unwrap_or(NUM_STATES - 1) as i64;
+        // Month: Dec:Oct ≈ 4:1 with the rest mild; day uniform and
+        // increasing with id within a month so order-sensitive plots
+        // (Fig. 3.4's line chart) have a meaningful input order.
+        let m = rng.f64();
+        let month = if m < 0.32 {
+            12
+        } else if m < 0.40 {
+            10
+        } else {
+            // Uniform over the other ten months.
+            const OTHERS: [i64; 10] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 11];
+            OTHERS[rng.below(10) as usize]
+        };
+        let day = 1 + ((i / 1000) % 28) as i64;
+        let text = TEXT_POOL[rng.below(TEXT_POOL.len() as u64) as usize];
+        let followers = (rng.f64().powi(3) * 10_000.0) as i64;
+        Tuple::new(vec![
+            Value::Int(i as i64),
+            Value::Int(location),
+            Value::Int(month),
+            Value::Int(day),
+            Value::Str(Arc::from(text)),
+            Value::Int(followers),
+        ])
+    }
+}
+
+impl TupleSource for TweetSource {
+    fn next_tuple(&mut self) -> Option<Tuple> {
+        let i = self.idx + self.pos * self.parts;
+        if i >= self.total {
+            return None;
+        }
+        self.pos += 1;
+        Some(self.make(i))
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn seek(&mut self, pos: usize) {
+        self.pos = pos;
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        let t = self.total;
+        let (p, i) = (self.parts, self.idx);
+        Some(if i >= t { 0 } else { (t - i + p - 1) / p })
+    }
+}
+
+/// The "top slang words per location" dimension table joined against
+/// tweets in W1 (§3.7.1): one row per state.
+pub fn slang_table() -> Vec<Tuple> {
+    (0..NUM_STATES as i64)
+        .map(|loc| {
+            Tuple::new(vec![
+                Value::Int(loc),
+                Value::Str(Arc::from(format!("slang_{loc}_a slang_{loc}_b"))),
+            ])
+        })
+        .collect()
+}
+
+/// Schema of [`slang_table`]: (location, slang).
+pub fn slang_schema() -> Schema {
+    Schema::new(&[("location", FieldType::Int), ("slang", FieldType::Str)])
+}
+
+/// Monthly covid-case counts (running example of Fig. 3.1): one row per
+/// month.
+pub fn covid_cases_table() -> Vec<Tuple> {
+    (1..=12i64)
+        .map(|month| {
+            Tuple::new(vec![Value::Int(month), Value::Int(month * 10_000)])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn location_counts(total: usize) -> Vec<usize> {
+        let mut src = TweetSource::new(total, 1, 0, 7);
+        let mut counts = vec![0usize; NUM_STATES];
+        while let Some(t) = src.next_tuple() {
+            counts[t.get(F_LOCATION).as_int().unwrap() as usize] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn ca_is_heaviest_state() {
+        let counts = location_counts(200_000);
+        let max = counts.iter().enumerate().max_by_key(|(_, c)| **c).unwrap().0;
+        assert_eq!(max, CA);
+    }
+
+    #[test]
+    fn monitored_ratios_match_paper() {
+        let counts = location_counts(400_000);
+        let ca_az = counts[CA] as f64 / counts[AZ] as f64;
+        let ca_il = counts[CA] as f64 / counts[IL] as f64;
+        assert!((ca_az - CA_AZ_RATIO).abs() / CA_AZ_RATIO < 0.1, "CA:AZ={ca_az}");
+        assert!((ca_il - CA_IL_RATIO).abs() / CA_IL_RATIO < 0.1, "CA:IL={ca_il}");
+    }
+
+    #[test]
+    fn december_about_4x_october() {
+        let mut src = TweetSource::new(300_000, 1, 0, 7);
+        let (mut dec, mut oct) = (0usize, 0usize);
+        while let Some(t) = src.next_tuple() {
+            match t.get(F_MONTH).as_int().unwrap() {
+                12 => dec += 1,
+                10 => oct += 1,
+                _ => {}
+            }
+        }
+        let ratio = dec as f64 / oct as f64;
+        assert!((2.8..5.2).contains(&ratio), "Dec:Oct={ratio}");
+    }
+
+    #[test]
+    fn partitions_disjoint_and_complete() {
+        let total = 10_000;
+        let mut all: Vec<i64> = Vec::new();
+        for p in 0..4 {
+            let mut src = TweetSource::new(total, 4, p, 7);
+            while let Some(t) = src.next_tuple() {
+                all.push(t.get(F_ID).as_int().unwrap());
+            }
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..total as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = TweetSource::new(1000, 2, 1, 42);
+        let first: Vec<Tuple> = std::iter::from_fn(|| a.next_tuple()).collect();
+        a.reset();
+        let second: Vec<Tuple> = std::iter::from_fn(|| a.next_tuple()).collect();
+        assert_eq!(first, second);
+        assert_eq!(first.len(), a.len_hint().unwrap());
+    }
+
+    #[test]
+    fn slang_covers_all_states() {
+        assert_eq!(slang_table().len(), NUM_STATES);
+    }
+}

@@ -1,0 +1,176 @@
+//! Fault tolerance (§2.6): quiesced checkpoints + control-replay log —
+//! crash, recover, verify results and post-control state equivalence.
+
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, WorkerId, Workflow};
+use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::operators::{AggKind, CollectSink, GroupByFinal, GroupByPartial, SinkHandle};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::VecSource;
+
+/// scan → filter → group-by(count per key) → sink; deterministic input.
+fn wf(total: usize, handle: SinkHandle) -> Workflow {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64), Value::Int((i % 10) as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary("filter", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Lt, Value::Int(8))) // keep 80%
+    }));
+    let partial = w.add(OpSpec::unary("gb_partial", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(GroupByPartial::new(1, 0, AggKind::Count))
+    }));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Count))
+        })
+        .with_blocking(vec![0]),
+    );
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    w
+}
+
+fn expected_counts(total: usize) -> Vec<(i64, f64)> {
+    // keys 0..7 kept; each appears total/10 times.
+    (0..8).map(|k| (k, (total / 10) as f64)).collect()
+}
+
+fn result_counts(handle: &SinkHandle) -> Vec<(i64, f64)> {
+    let mut rows: Vec<(i64, f64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    rows.sort_by_key(|(k, _)| *k);
+    rows
+}
+
+#[test]
+fn checkpoint_and_recover_mid_run() {
+    let total = 200_000;
+    let cfg = Config { ft_log: true, ..Config::default() };
+    let handle = SinkHandle::new(0);
+    let exec = Execution::start(wf(total, handle.clone()), cfg.clone());
+    std::thread::sleep(Duration::from_millis(30));
+    // Quiesced checkpoint mid-run.
+    let checkpoint = exec.checkpoint();
+    assert!(!checkpoint.workers.is_empty());
+    std::thread::sleep(Duration::from_millis(10));
+    // Simulate a machine failure: kill one filter worker's partition,
+    // then abandon the execution entirely and recover from the
+    // checkpoint.
+    exec.crash_workers(vec![WorkerId::new(1, 0)]);
+    let log = exec.take_replay_log();
+    drop(exec); // tear down the damaged execution
+
+    let handle2 = SinkHandle::new(0);
+    let recovered = Execution::recover(wf(total, handle2.clone()), cfg, checkpoint, log);
+    recovered.join();
+    assert_eq!(result_counts(&handle2), expected_counts(total));
+}
+
+#[test]
+fn recovery_from_scratchless_checkpoint_is_exact() {
+    // Checkpoint immediately (trivial state), recover, verify equal
+    // results — the recovery path itself must not distort anything.
+    let total = 50_000;
+    let cfg = Config { ft_log: true, ..Config::default() };
+    let handle = SinkHandle::new(0);
+    let exec = Execution::start(wf(total, handle.clone()), cfg.clone());
+    let checkpoint = exec.checkpoint(); // likely very early
+    exec.crash_workers(vec![WorkerId::new(0, 0), WorkerId::new(0, 1)]);
+    let log = exec.take_replay_log();
+    drop(exec);
+    let handle2 = SinkHandle::new(0);
+    let recovered = Execution::recover(wf(total, handle2.clone()), cfg, checkpoint, log);
+    recovered.join();
+    assert_eq!(result_counts(&handle2), expected_counts(total));
+}
+
+#[test]
+fn paused_state_recovers_via_control_replay() {
+    // §2.7.8: pause the workflow, crash, recover — the recreated
+    // workers replay the logged Pause at the same stream position and
+    // the workflow is paused again after recovery.
+    let total = 400_000;
+    let cfg = Config { ft_log: true, ..Config::default() };
+    let handle = SinkHandle::new(0);
+    let exec = Execution::start(wf(total, handle.clone()), cfg.clone());
+    std::thread::sleep(Duration::from_millis(20));
+    let checkpoint = exec.checkpoint();
+    std::thread::sleep(Duration::from_millis(10));
+    exec.pause(); // logged control message after the checkpoint
+    let log = exec.take_replay_log();
+    assert!(!log.is_empty(), "pause was not logged");
+    drop(exec);
+
+    let handle2 = SinkHandle::new(0);
+    let recovered = Execution::recover(wf(total, handle2.clone()), cfg, checkpoint, log);
+    // The recovered execution recomputes up to the replay point, where
+    // the logged Pause re-applies and progress stops. Poll until the
+    // processed count is stable across a 300 ms window.
+    let sample = || -> u64 {
+        recovered.stats().iter().map(|(_, s)| s.processed).sum()
+    };
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let mut prev = sample();
+    let mut stable = false;
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(300));
+        let cur = sample();
+        if cur == prev && cur > 0 {
+            stable = true;
+            break;
+        }
+        prev = cur;
+    }
+    assert!(stable, "workflow never quiesced after replayed Pause");
+    // Paused, not completed: at completion the summed processed count
+    // exceeds the scan volume (scan + filter + group-by layers all
+    // count); the paused total must stay below it.
+    assert!(prev < total as u64, "paused total {prev} looks like a completed run");
+    // Resume → completes with exact results.
+    recovered.resume();
+    recovered.join();
+    assert_eq!(result_counts(&handle2), expected_counts(total));
+}
+
+#[test]
+fn replay_log_cleared_by_checkpoint() {
+    let total = 200_000;
+    let cfg = Config { ft_log: true, ..Config::default() };
+    let handle = SinkHandle::new(0);
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    std::thread::sleep(Duration::from_millis(10));
+    exec.pause();
+    exec.resume();
+    assert!(!exec.take_replay_log().is_empty());
+    // A checkpoint absorbs prior control effects into state (§2.6.2).
+    // The only records allowed afterwards are the checkpoint's own
+    // trailing Resume broadcast (post-checkpoint control *should* be
+    // logged — it happened after the snapshot).
+    let _cp = exec.checkpoint();
+    let residual = exec.take_replay_log();
+    assert!(
+        residual.iter().all(|r| matches!(
+            r.ctrl,
+            texera_amber::engine::ControlMessage::Resume
+        )),
+        "non-Resume records survived the checkpoint: {residual:?}"
+    );
+    exec.join();
+}

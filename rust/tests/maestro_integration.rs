@@ -1,0 +1,133 @@
+//! Maestro end-to-end: region scheduling on the Ch. 4 climate-analysis
+//! workflow shape — cyclic region graph, materialization choice, region
+//! order, first-response-time measurement.
+
+use texera_amber::config::Config;
+use texera_amber::engine::{OpSpec, PartitionScheme, Workflow};
+use texera_amber::maestro::cost::CostParams;
+use texera_amber::maestro::{enumerate_choices, MaestroScheduler};
+use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::operators::{CollectSink, HashJoin, SinkHandle};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::VecSource;
+
+/// Fig. 4.2-style wildfire workflow slice: zipcode history replicated
+/// into both the build input and (via a filter) the probe input of a
+/// strict join — a cyclic region graph that needs materialization.
+fn climate_workflow(zipcodes: usize) -> (Workflow, SinkHandle, usize, Vec<usize>) {
+    let mut w = Workflow::new();
+    // History scan: (zipcode, fire_count).
+    let hist = w.add(OpSpec::source("scan_history", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..zipcodes)
+            .filter(|i| i % parts == idx)
+            .map(|z| Tuple::new(vec![Value::Int(z as i64), Value::Int((z % 7) as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    // Filter zipcodes with fires → build side.
+    let filt = w.add(OpSpec::unary("filter_fires", 1, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Gt, Value::Int(0)))
+    }));
+    // Probe side: the same scan through a pass-all filter.
+    let before = w.add(OpSpec::unary("before_filter", 1, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Ge, Value::Int(0)))
+    }));
+    let j1 = w.add(OpSpec::binary(
+        "join_before",
+        2,
+        [PartitionScheme::Hash { key: 0 }, PartitionScheme::Hash { key: 0 }],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 0).strict()),
+    ));
+    let handle = SinkHandle::new(0);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("bar_chart", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(hist, filt, 0);
+    w.connect(filt, j1, 0);
+    w.connect(hist, before, 0);
+    w.connect(before, j1, 1);
+    w.connect(j1, sink, 0);
+    (w, handle, sink, vec![hist, filt, before, j1])
+}
+
+#[test]
+fn cyclic_workflow_scheduled_with_strict_join() {
+    let (w, handle, sink, _) = climate_workflow(100);
+    let mut cost = CostParams::new();
+    cost.source_rows.insert(0, 100.0);
+    let sched = MaestroScheduler::new(Config::for_tests(), cost);
+    let outcome = sched.run(w, &[sink]);
+    assert!(!outcome.choice.is_empty(), "materialization was required");
+    // Join output: zipcodes with fires (z%7>0) joined against all 100
+    // probe rows with the same zipcode.
+    let expect = (0..100).filter(|z| z % 7 > 0).count() as u64;
+    assert_eq!(handle.total(), expect, "strict join lost tuples");
+    assert!(outcome.measured_frt.is_finite());
+}
+
+#[test]
+fn all_choices_produce_identical_results() {
+    // Result correctness is independent of the materialization choice;
+    // only timing/size change (§4.5).
+    let mut totals = Vec::new();
+    let (w0, _, sink, _) = climate_workflow(60);
+    let choices = enumerate_choices(&w0, 2);
+    assert!(choices.len() >= 2, "want multiple choices, got {choices:?}");
+    for c in &choices {
+        let (w, handle, sink2, _) = climate_workflow(60);
+        assert_eq!(sink, sink2);
+        let sched = MaestroScheduler::new(Config::for_tests(), CostParams::new());
+        let outcome = sched.run_with_choice(w, &[sink2], c, 0.0);
+        totals.push((handle.total(), outcome.mat_bytes.iter().sum::<u64>()));
+    }
+    let first = totals[0].0;
+    for (t, _) in &totals {
+        assert_eq!(*t, first, "results differ across choices: {totals:?}");
+    }
+    // Some choice materializes a nonzero volume.
+    assert!(totals.iter().any(|(_, b)| *b > 0));
+}
+
+#[test]
+fn estimated_frt_ranks_choices() {
+    let (w, _, sink, ops) = climate_workflow(200);
+    let mut cost = CostParams::new();
+    cost.source_rows.insert(ops[0], 200.0);
+    let choices = enumerate_choices(&w, 2);
+    let mut est: Vec<(Vec<usize>, f64)> = Vec::new();
+    for c in &choices {
+        let (frt, _) =
+            texera_amber::maestro::first_response_time(&w, c, &cost, &[sink]);
+        assert!(frt.is_finite() && frt > 0.0);
+        est.push((c.clone(), frt));
+    }
+    est.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    assert!(est[0].1 <= est[est.len() - 1].1);
+}
+
+#[test]
+fn larger_input_larger_materialization() {
+    // Figs. 4.23/4.24: materialized bytes grow with input size.
+    let mut sizes = Vec::new();
+    for n in [50usize, 100, 200] {
+        let (w, _, sink, _) = climate_workflow(n);
+        let sched = MaestroScheduler::new(Config::for_tests(), CostParams::new());
+        let outcome = sched.run(w, &[sink]);
+        sizes.push(outcome.mat_bytes.iter().sum::<u64>());
+    }
+    assert!(sizes[0] < sizes[1] && sizes[1] < sizes[2], "{sizes:?}");
+}
+
+#[test]
+fn region_order_is_valid_permutation() {
+    let (w, _, sink, _) = climate_workflow(80);
+    let sched = MaestroScheduler::new(Config::for_tests(), CostParams::new());
+    let outcome = sched.run(w, &[sink]);
+    let mut seen = outcome.region_order.clone();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), outcome.region_order.len());
+    assert!(outcome.region_order.len() >= 2);
+}

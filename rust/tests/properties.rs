@@ -1,0 +1,347 @@
+//! Property-based tests over coordinator invariants: routing, batching,
+//! region graphs, breakpoint splitting, state migration — driven by the
+//! built-in `util::check` mini-harness (seeded generation + shrinking).
+
+use texera_amber::engine::breakpoint::{BpAction, GlobalBreakpoint};
+use texera_amber::engine::partitioner::{
+    MitigationRoute, PartitionScheme, Partitioner, ShareMode,
+};
+use texera_amber::maestro::cycles::{feasible_with, is_feasible};
+use texera_amber::maestro::enumerate_choices;
+use texera_amber::maestro::region_graph::region_graph;
+use texera_amber::maestro::regions_of;
+use texera_amber::reshape::detector::detect;
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::util::check::{check_n, Gen, U64Range, VecGen};
+use texera_amber::util::Rng;
+
+// ---------- routing ----------
+
+/// Any partitioner maps every tuple to a valid destination, and the
+/// mapping is stable for hash/range schemes.
+#[test]
+fn prop_routing_valid_and_stable() {
+    struct Case {
+        scheme: u8,
+        receivers: usize,
+        keys: Vec<i64>,
+    }
+    struct G;
+    impl Gen for G {
+        type Value = (u8, u64, Vec<u64>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (
+                rng.below(3) as u8,
+                1 + rng.below(16),
+                (0..rng.below(50) + 1).map(|_| rng.below(10_000)).collect(),
+            )
+        }
+    }
+    check_n(11, 128, &G, |(scheme, receivers, keys)| {
+        let case = Case {
+            scheme: *scheme,
+            receivers: *receivers as usize,
+            keys: keys.iter().map(|k| *k as i64).collect(),
+        };
+        let mk = |idx: usize| -> Partitioner {
+            let s = match case.scheme {
+                0 => PartitionScheme::Hash { key: 0 },
+                1 => PartitionScheme::RoundRobin,
+                _ => PartitionScheme::Range {
+                    key: 0,
+                    bounds: (1..case.receivers as i64)
+                        .map(|i| Value::Int(i * 1000))
+                        .collect(),
+                },
+            };
+            Partitioner::new(s, case.receivers, idx)
+        };
+        let mut p = mk(0);
+        for k in &case.keys {
+            let t = Tuple::new(vec![Value::Int(*k)]);
+            let d = p.route(&t);
+            if d >= case.receivers {
+                return false;
+            }
+            // Hash/range: any sender agrees on the destination.
+            if case.scheme != 1 {
+                let mut q = mk(3);
+                if q.route(&t) != d {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Mitigation overlays preserve totals: every tuple still goes to
+/// exactly one worker, and clearing routes restores base behavior.
+#[test]
+fn prop_overlay_conservation_and_revert() {
+    struct G;
+    impl Gen for G {
+        type Value = (u64, u64, Vec<u64>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let receivers = 2 + rng.below(8);
+            let skewed = rng.below(receivers);
+            let keys = (0..100).map(|_| rng.below(5_000)).collect();
+            (receivers, skewed, keys)
+        }
+    }
+    check_n(12, 64, &G, |(receivers, skewed, keys)| {
+        let n = *receivers as usize;
+        let skewed = *skewed as usize;
+        let helper = (skewed + 1) % n;
+        let mut p = Partitioner::new(PartitionScheme::Hash { key: 0 }, n, 0);
+        let baseline: Vec<usize> = keys
+            .iter()
+            .map(|k| p.route(&Tuple::new(vec![Value::Int(*k as i64)])))
+            .collect();
+        p.set_route(MitigationRoute {
+            skewed,
+            helper,
+            mode: ShareMode::SplitRecords { num: 1, den: 3 },
+            epoch: 1,
+        });
+        for k in keys {
+            let d = p.route(&Tuple::new(vec![Value::Int(*k as i64)]));
+            if d >= n {
+                return false;
+            }
+        }
+        p.clear_route(skewed, helper);
+        let after: Vec<usize> = keys
+            .iter()
+            .map(|k| p.route(&Tuple::new(vec![Value::Int(*k as i64)])))
+            .collect();
+        baseline == after
+    });
+}
+
+// ---------- breakpoints ----------
+
+/// COUNT breakpoint protocol: regardless of worker progress order, the
+/// breakpoint hits after exactly the target amount in total.
+#[test]
+fn prop_count_breakpoint_exact() {
+    struct G;
+    impl Gen for G {
+        type Value = (u64, u64, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (2 + rng.below(6), 10 + rng.below(200), rng.next_u64())
+        }
+    }
+    check_n(13, 96, &G, |(workers, total, seed)| {
+        let workers = *workers as usize;
+        let total = *total;
+        let mut bp = GlobalBreakpoint::count(1, total, workers);
+        let mut targets = vec![0.0f64; workers];
+        for (w, amt) in bp.initial_assignments() {
+            targets[w] = amt;
+        }
+        let mut rng = Rng::new(*seed);
+        let mut produced_total = 0.0f64;
+        // Simulate until hit; workers make random progress and report.
+        for _round in 0..10_000 {
+            // Pick the worker that "reaches" first: any with target > 0.
+            let candidates: Vec<usize> =
+                (0..workers).filter(|&w| targets[w] > 0.0).collect();
+            if candidates.is_empty() {
+                return false; // no outstanding work but no hit
+            }
+            let reached = *rng.pick(&candidates);
+            produced_total += targets[reached];
+            let produced = targets[reached];
+            targets[reached] = 0.0;
+            match bp.on_target_reached(reached, produced) {
+                BpAction::Hit => return (produced_total - total as f64).abs() < 1e-9,
+                BpAction::StartTimer => {
+                    // Timer fires; inquiries report random partial
+                    // progress.
+                    if let BpAction::Inquire(missing) = bp.on_timeout() {
+                        let mut last = BpAction::None;
+                        for w in missing {
+                            let partial =
+                                (targets[w] * rng.f64()).floor().clamp(0.0, targets[w]);
+                            produced_total += partial;
+                            targets[w] = 0.0;
+                            last = bp.on_inquiry_report(w, partial);
+                        }
+                        match last {
+                            BpAction::Hit => {
+                                return (produced_total - total as f64).abs() < 1e-9
+                            }
+                            BpAction::Assign(assignments) => {
+                                for (w, amt) in assignments {
+                                    targets[w] = amt;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                BpAction::Assign(assignments) => {
+                    for (w, amt) in assignments {
+                        targets[w] = amt;
+                    }
+                }
+                _ => {}
+            }
+        }
+        false
+    });
+}
+
+// ---------- reshape detector ----------
+
+/// Detector invariants: pairs are disjoint, skewed worker satisfies
+/// both inequalities vs each helper, helpers not in `excluded`.
+#[test]
+fn prop_detector_invariants() {
+    let gen = VecGen { inner: U64Range(0, 2_000), max_len: 24 };
+    check_n(14, 128, &gen, |loads_u| {
+        if loads_u.len() < 2 {
+            return true;
+        }
+        let loads: Vec<f64> = loads_u.iter().map(|x| *x as f64).collect();
+        let r = detect(&loads, &[], 100.0, 100.0, 2);
+        let mut used = std::collections::HashSet::new();
+        for (s, helpers) in &r.pairs {
+            if !used.insert(*s) {
+                return false;
+            }
+            for h in helpers {
+                if !used.insert(*h) {
+                    return false;
+                }
+                if !(loads[*s] >= 100.0 && loads[*s] - loads[*h] >= 100.0) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+// ---------- maestro ----------
+
+/// Random layered DAGs: regions partition the operators; every
+/// enumerated choice is feasible; feasible workflows need no choice.
+#[test]
+fn prop_region_partition_and_choices() {
+    use texera_amber::engine::{OpSpec, Workflow};
+    use texera_amber::operators::basic::Filter;
+    use texera_amber::operators::basic::Cmp;
+    use texera_amber::workloads::VecSource;
+
+    struct G;
+    impl Gen for G {
+        type Value = u64;
+        fn generate(&self, rng: &mut Rng) -> u64 {
+            rng.next_u64()
+        }
+    }
+    check_n(15, 48, &G, |seed| {
+        let mut rng = Rng::new(*seed);
+        // Random workflow: 1-2 sources, 2-5 unary ops (some blocking),
+        // 0-2 joins wired to random upstream ops.
+        let mut w = Workflow::new();
+        let mut pool: Vec<usize> = Vec::new();
+        for i in 0..1 + rng.below(2) {
+            let s = w.add(OpSpec::source(&format!("src{i}"), 1, |_, _| {
+                Box::new(VecSource::new(Vec::new()))
+            }));
+            pool.push(s);
+        }
+        for i in 0..2 + rng.below(4) {
+            let blocking = rng.chance(0.3);
+            let mut spec = OpSpec::unary(
+                &format!("u{i}"),
+                1,
+                PartitionScheme::RoundRobin,
+                |_, _| Box::new(Filter::new(0, Cmp::Ge, Value::Int(0))),
+            );
+            if blocking {
+                spec = spec.with_blocking(vec![0]);
+            }
+            let op = w.add(spec);
+            let from = *rng.pick(&pool);
+            w.connect(from, op, 0);
+            pool.push(op);
+        }
+        for i in 0..rng.below(3) {
+            let j = w.add(OpSpec::binary(
+                &format!("j{i}"),
+                1,
+                [PartitionScheme::RoundRobin, PartitionScheme::RoundRobin],
+                vec![0],
+                |_, _| {
+                    Box::new(texera_amber::operators::HashJoin::new(0, 0))
+                },
+            ));
+            let a = *rng.pick(&pool);
+            let b = *rng.pick(&pool);
+            w.connect(a, j, 0);
+            w.connect(b, j, 1);
+            pool.push(j);
+        }
+        // Invariant 1: regions partition ops.
+        let regions = regions_of(&w);
+        let mut seen = vec![false; w.ops.len()];
+        for r in &regions {
+            for &op in &r.ops {
+                if seen[op] {
+                    return false;
+                }
+                seen[op] = true;
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return false;
+        }
+        // Invariant 2: dep endpoints valid.
+        let g = region_graph(&w);
+        for (u, v, _) in &g.deps {
+            if *u >= regions.len() || *v >= regions.len() {
+                return false;
+            }
+        }
+        // Invariant 3: enumerate → all feasible; feasible → empty set.
+        let choices = enumerate_choices(&w, 2);
+        if is_feasible(&w) {
+            if choices != vec![Vec::new()] {
+                return false;
+            }
+        } else {
+            for c in &choices {
+                if !feasible_with(&w, c) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+// ---------- estimator ----------
+
+/// Mean estimator: prediction within [min, max] of sample; ε shrinks
+/// monotonically in n for constant-variance inputs.
+#[test]
+fn prop_estimator_bounds() {
+    let gen = VecGen { inner: U64Range(0, 10_000), max_len: 64 };
+    check_n(16, 128, &gen, |xs| {
+        if xs.len() < 2 {
+            return true;
+        }
+        let mut e = texera_amber::reshape::MeanEstimator::new(128);
+        for x in xs {
+            e.observe(*x as f64);
+        }
+        let p = e.predict();
+        let lo = *xs.iter().min().unwrap() as f64;
+        let hi = *xs.iter().max().unwrap() as f64;
+        p >= lo - 1e-9 && p <= hi + 1e-9 && e.standard_error() >= 0.0
+    });
+}

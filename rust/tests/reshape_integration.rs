@@ -1,0 +1,387 @@
+//! Reshape end-to-end: skewed tweet-join workloads through the engine
+//! with the Reshape plugin, verifying detection, two-phase transfer,
+//! load balancing, and the result-awareness property (observed CA:AZ
+//! ratio approaches the true ratio while running).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
+use texera_amber::metrics::LoadBalanceRatio;
+use texera_amber::operators::{
+    CollectSink, CountByKeySink, HashJoin, SinkHandle, SortMerge, SortWorker,
+};
+use texera_amber::reshape::baselines::FluxPlugin;
+use texera_amber::reshape::{Approach, ReshapePlugin};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::tweets::{self, TweetSource};
+use texera_amber::workloads::{TupleSource, VecSource};
+
+/// W1-of-Ch.3-style workflow: tweets ⋈ slang on location, counting
+/// join outputs per location at the sink.
+fn w1(total_tweets: usize, join_workers: usize) -> (Workflow, SinkHandle, usize) {
+    let mut w = Workflow::new();
+    let slang: Arc<Vec<Tuple>> = Arc::new(tweets::slang_table());
+    let s2 = slang.clone();
+    let build_scan = w.add(OpSpec::source("slang_scan", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = s2
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % parts == idx)
+            .map(|(_, t)| t.clone())
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let tweet_scan = w.add(OpSpec::source("tweet_scan", 2, move |idx, parts| {
+        Box::new(TweetSource::new(total_tweets, parts, idx, 0xBEE5)) as Box<dyn TupleSource>
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        join_workers,
+        [
+            PartitionScheme::Hash { key: 0 },                  // slang.location
+            PartitionScheme::Hash { key: tweets::F_LOCATION }, // tweet.location
+        ],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, tweets::F_LOCATION)),
+    ));
+    let handle = SinkHandle::new(tweets::NUM_STATES);
+    let h2 = handle.clone();
+    // Join output = slang(2 cols) ++ tweet(6 cols); location is field 3.
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CountByKeySink::new(h2.clone(), 2 + tweets::F_LOCATION))
+    }));
+    w.connect(build_scan, join, 0);
+    w.connect(tweet_scan, join, 1);
+    w.connect(join, sink, 0);
+    (w, handle, join)
+}
+
+/// The join worker that owns a location key under hash partitioning.
+fn worker_of(location: usize, workers: usize) -> usize {
+    (Value::Int(location as i64).stable_hash() % workers as u64) as usize
+}
+
+fn reshape_cfg() -> Config {
+    Config {
+        batch_size: 64,
+        data_queue_cap: 16, // small queues → join is the bottleneck
+        reshape_eta: 100.0,
+        reshape_tau: 100.0,
+        reshape_metric_period_ms: 10,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn detects_and_mitigates_ca_skew() {
+    let workers = 8;
+    let (w, _handle, join) = w1(120_000, workers);
+    let plugin = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+    let report = plugin.report();
+    let exec = Execution::start_with_plugin(w, reshape_cfg(), Box::new(plugin));
+    let summary = exec.join();
+
+    let rep = report.lock().unwrap();
+    assert!(
+        !rep.mitigations.is_empty(),
+        "CA-dominated worker never detected as skewed"
+    );
+    // The mitigated worker must be the one owning the CA key.
+    let ca_worker = worker_of(tweets::CA, workers);
+    assert!(
+        rep.mitigations.iter().any(|(_, s, _)| *s == ca_worker),
+        "expected worker {ca_worker} (CA) in {:?}",
+        rep.mitigations
+    );
+    // State was replicated before routing changed (Fig. 3.2 order).
+    assert!(!rep.transfers.is_empty(), "no state transfer happened");
+    // Phase 2 engaged.
+    assert!(!rep.phase2.is_empty(), "never reached the rebalance phase");
+    // All 120k tweets joined (no loss/duplication through mitigation).
+    assert_eq!(summary.produced(join), 120_000);
+}
+
+#[test]
+fn mitigation_improves_load_balance_vs_unmitigated() {
+    let workers = 8;
+    let run = |mitigate: bool| -> f64 {
+        let (w, _handle, join) = w1(100_000, workers);
+        let cfg = reshape_cfg();
+        let (exec, report) = if mitigate {
+            let plugin = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+            let rep = plugin.report();
+            (Execution::start_with_plugin(w, cfg, Box::new(plugin)), Some(rep))
+        } else {
+            (Execution::start(w, cfg), None)
+        };
+        let summary = exec.join();
+        // Average load-balancing ratio (§3.7.4) for (CA worker, its
+        // helper or the least-loaded worker).
+        let ca_worker = worker_of(tweets::CA, workers);
+        let helper = report
+            .and_then(|r| {
+                let rep = r.lock().unwrap();
+                rep.mitigations
+                    .iter()
+                    .find(|(_, s, _)| *s == ca_worker)
+                    .map(|(_, _, h)| h[0])
+            })
+            .unwrap_or_else(|| {
+                // Unmitigated: compare against the least-loaded worker.
+                (0..workers)
+                    .filter(|&i| i != ca_worker)
+                    .min_by_key(|&i| {
+                        summary
+                            .worker_stats
+                            .iter()
+                            .find(|(id, _)| id.op == join && id.idx == i)
+                            .map(|(_, s)| s.processed)
+                            .unwrap_or(0)
+                    })
+                    .unwrap()
+            });
+        let get = |idx: usize| {
+            summary
+                .worker_stats
+                .iter()
+                .find(|(id, _)| id.op == join && id.idx == idx)
+                .map(|(_, s)| s.processed as f64)
+                .unwrap_or(0.0)
+        };
+        let mut lbr = LoadBalanceRatio::default();
+        lbr.observe(get(ca_worker), get(helper));
+        lbr.average()
+    };
+    let with = run(true);
+    let without = run(false);
+    assert!(
+        with > without * 1.5,
+        "mitigated balance {with:.3} not clearly better than unmitigated {without:.3}"
+    );
+    assert!(with > 0.4, "final balance too poor: {with:.3}");
+}
+
+#[test]
+fn observed_ratio_approaches_actual_with_mitigation() {
+    // The Fig. 3.16 result-awareness property: with SBR mitigation the
+    // CA:AZ ratio at the sink converges toward the true 6.85 while the
+    // run is still in progress.
+    let workers = 8;
+    let (w, handle, join) = w1(150_000, workers);
+    let plugin = ReshapePlugin::new(join, Approach::SplitByRecords, true);
+    let exec = Execution::start_with_plugin(w, reshape_cfg(), Box::new(plugin));
+    // Sample the observed ratio while running.
+    let mut best_mid_run = f64::NAN;
+    for _ in 0..400 {
+        std::thread::sleep(Duration::from_millis(5));
+        let r = handle.ratio(tweets::CA, tweets::AZ);
+        if r.is_finite() {
+            best_mid_run = r;
+        }
+        if handle.total() > 120_000 {
+            break;
+        }
+    }
+    exec.join();
+    let final_ratio = handle.ratio(tweets::CA, tweets::AZ);
+    assert!(
+        (final_ratio - tweets::CA_AZ_RATIO).abs() / tweets::CA_AZ_RATIO < 0.15,
+        "final ratio {final_ratio} far from {}",
+        tweets::CA_AZ_RATIO
+    );
+    // Mid-run the mitigated ratio should already be well above the
+    // unmitigated ~1.0 plateau.
+    assert!(
+        best_mid_run > 2.0,
+        "mid-run ratio {best_mid_run} stuck near the unmitigated plateau"
+    );
+}
+
+#[test]
+fn flux_cannot_split_heavy_hitter() {
+    // Flux moves whole keys only; the CA worker keeps its heavy hitter
+    // so its processed count stays dominant (Fig. 3.20's ~0.06 ratio).
+    let workers = 8;
+    let (w, _handle, join) = w1(80_000, workers);
+    let plugin = FluxPlugin::new(join);
+    // Flux observes an initial window before acting ("Flux used a 2
+    // second initial duration to detect overloaded keys", §3.7.1;
+    // scaled down) so its key-distribution sample is representative.
+    let cfg = Config { reshape_initial_delay_ms: 100, ..reshape_cfg() };
+    let exec = Execution::start_with_plugin(w, cfg, Box::new(plugin));
+    let summary = exec.join();
+    let ca_worker = worker_of(tweets::CA, workers);
+    let ca_processed = summary
+        .worker_stats
+        .iter()
+        .find(|(id, _)| id.op == join && id.idx == ca_worker)
+        .map(|(_, s)| s.processed)
+        .unwrap();
+    // Expected CA tweet volume from the generator's weights.
+    let weights = tweets::state_weights();
+    let ca_share = weights[tweets::CA] / weights.iter().sum::<f64>();
+    let expected_ca = (80_000.0 * ca_share) as u64;
+    // Flux cannot split a single key: the CA worker still processed at
+    // least (almost) all CA tweets itself.
+    assert!(
+        ca_processed as f64 >= expected_ca as f64 * 0.9,
+        "CA hot key appears split by Flux: processed {ca_processed}, CA volume ≈ {expected_ca}"
+    );
+    assert_eq!(summary.produced(join), 80_000);
+}
+
+#[test]
+fn sort_sbr_scattered_state_merges_correctly() {
+    // Range-partitioned sort under SBR mitigation: foreign runs are
+    // shipped back at EOF (§3.5.4) and the merged output is globally
+    // ordered with no loss.
+    let n = 30_000usize;
+    let bounds = vec![Value::Int(6_000), Value::Int(24_000)]; // skewed middle range
+    let b2 = bounds.clone();
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let data: Vec<Tuple> = (0..n)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64)]))
+            .collect();
+        Box::new(VecSource::new(data)) as Box<dyn TupleSource>
+    }));
+    let sort = w.add(
+        OpSpec::unary(
+            "sort",
+            3,
+            PartitionScheme::Range { key: 0, bounds: bounds.clone() },
+            // Per-tuple cost keeps the sort workers the bottleneck so
+            // the skewed middle range reliably builds a queue.
+            move |idx, _| {
+                Box::new(SortWorker::new(0, idx as u64, b2.clone()).with_cost(3_000))
+            },
+        )
+        .with_blocking(vec![0])
+        .with_scatter_merge(),
+    );
+    let merge = w.add(
+        OpSpec::unary("merge", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(SortMerge::new(0))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, sort, 0);
+    w.connect(sort, merge, 0);
+    w.connect(merge, sink, 0);
+
+    // Mutable-state operator: no upfront state replication.
+    let plugin = ReshapePlugin::new(sort, Approach::SplitByRecords, false);
+    let report = plugin.report();
+    let cfg = Config {
+        batch_size: 32,
+        data_queue_cap: 8,
+        reshape_eta: 50.0,
+        reshape_tau: 50.0,
+        ..Config::default()
+    };
+    let exec = Execution::start_with_plugin(w, cfg, Box::new(plugin));
+    exec.join();
+    let rows = handle.tuples();
+    assert_eq!(rows.len(), n, "scattered-state merge lost/duplicated tuples");
+    let vals: Vec<i64> = rows.iter().map(|t| t.get(0).as_int().unwrap()).collect();
+    let mut sorted = vals.clone();
+    sorted.sort_unstable();
+    assert_eq!(vals, sorted, "global order violated after SBR on sort");
+    // Some sort worker was mitigated (which one wins the detection
+    // race depends on timing; exactness is asserted above either way).
+    let rep = report.lock().unwrap();
+    assert!(
+        !rep.mitigations.is_empty(),
+        "no sort worker was ever mitigated"
+    );
+}
+
+#[test]
+fn sbk_groupby_marker_synchronized_migration() {
+    // Mutable-state SBK (§3.5.3): a CA-skewed group-by count; Reshape
+    // moves whole keys to the helper, with the running aggregates
+    // migrating at the marker-aligned safe point. Counts must be exact.
+    use texera_amber::operators::{AggKind, GroupByFinal};
+    use texera_amber::operators::basic::MapUdf;
+
+    let total = 60_000usize;
+    let workers = 6usize;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("tweet_scan", 2, move |idx, parts| {
+        Box::new(TweetSource::new(total, parts, idx, 0x5EED)) as Box<dyn TupleSource>
+    }));
+    // Slow per-tuple stage inside the group-by workers' feed keeps the
+    // group-by the bottleneck: model with a costly pre-projection that
+    // emits (location, 1).
+    let prep = w.add(OpSpec::unary("prep", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(MapUdf {
+            f: Box::new(|t: &Tuple| {
+                Tuple::new(vec![t.get(tweets::F_LOCATION).clone(), Value::Float(1.0)])
+            }),
+            cost_ns: 0,
+        })
+    }));
+    // Single-layer hash group-by (GroupByFinal sums partials — feeding
+    // it (key, 1.0) rows makes it a plain count), with a per-tuple cost
+    // via a wrapper: use the engine-level queue bottleneck instead by
+    // tiny queues.
+    let gb = w.add(
+        OpSpec::unary("group_by", workers, PartitionScheme::Hash { key: 0 }, |idx, n| {
+            Box::new(GroupByFinal::new_partitioned(AggKind::Sum, idx, n))
+        })
+        .with_blocking(vec![0])
+        .with_scatter_merge(),
+    );
+    let handle = SinkHandle::new(0);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, prep, 0);
+    w.connect(prep, gb, 0);
+    w.connect(gb, sink, 0);
+
+    // SBK on a mutable-state operator: keys move, aggregates migrate at
+    // marker alignment (replicate=false).
+    let plugin = ReshapePlugin::new(gb, Approach::SplitByKeys, false);
+    let report = plugin.report();
+    let cfg = Config {
+        batch_size: 32,
+        data_queue_cap: 8,
+        reshape_eta: 60.0,
+        reshape_tau: 60.0,
+        ..Config::default()
+    };
+    let exec = Execution::start_with_plugin(w, cfg, Box::new(plugin));
+    exec.join();
+
+    // Exactness: per-location counts must match the generator exactly —
+    // any key double-counted (state replicated instead of moved) or
+    // lost (moved before alignment) breaks this.
+    let mut expected = vec![0f64; tweets::NUM_STATES];
+    let mut src = TweetSource::new(total, 1, 0, 0x5EED);
+    while let Some(t) = src.next_tuple() {
+        expected[t.get(tweets::F_LOCATION).as_int().unwrap() as usize] += 1.0;
+    }
+    let rows = handle.tuples();
+    let mut got = vec![0f64; tweets::NUM_STATES];
+    for r in &rows {
+        got[r.get(0).as_int().unwrap() as usize] = r.get(1).as_float().unwrap();
+    }
+    assert_eq!(got, expected, "SBK migration corrupted group counts");
+    // A mitigation actually happened (otherwise this test proves nothing).
+    let rep = report.lock().unwrap();
+    assert!(
+        !rep.mitigations.is_empty(),
+        "no skew detected — test setup lost its bottleneck"
+    );
+}
