@@ -24,7 +24,11 @@ fn main() {
     pjrt_classifier_throughput();
 }
 
-fn pipeline(total: usize, workers: usize, batch: usize) -> f64 {
+/// One scan→filter→sink run; returns tuples/second. `ctrl_interval`
+/// is the DP chunk length: 1 reproduces the old per-tuple emit path
+/// (one `process` dispatch + one route per tuple), larger values
+/// exercise the batch-at-a-time plane.
+fn pipeline(total: usize, workers: usize, batch: usize, ctrl_interval: usize) -> f64 {
     let mut w = Workflow::new();
     let scan = w.add(OpSpec::source("scan", workers, move |idx, parts| {
         let rows: Vec<Tuple> = (0..total)
@@ -44,24 +48,68 @@ fn pipeline(total: usize, workers: usize, batch: usize) -> f64 {
     }));
     w.connect(scan, filter, 0);
     w.connect(filter, sink, 0);
-    let cfg = Config { batch_size: batch, ..Config::default() };
+    let cfg = Config {
+        batch_size: batch,
+        ctrl_check_interval: ctrl_interval,
+        ..Config::default()
+    };
     let t0 = Instant::now();
     Execution::start(w, cfg).join();
     total as f64 / t0.elapsed().as_secs_f64()
 }
 
 /// Engine throughput vs batch size (scan→filter→sink, 2 workers).
+/// Row `batch=1` is the old per-tuple emit path (every tuple is its
+/// own message, chunk length 1); the other rows chunk at the batch
+/// size. Results land in BENCH_perf.json so the perf trajectory is
+/// tracked across PRs.
 fn throughput_vs_batch_size() {
     println!("--- engine throughput vs batch size ---");
-    println!("{:>8} {:>16}", "batch", "ktuples/s");
+    println!("{:>8} {:>10} {:>16} {:>10}", "batch", "interval", "ktuples/s", "vs b=1");
     let total = 1_000_000;
-    for batch in [16usize, 64, 200, 400, 1600, 6400] {
+    let mut rows: Vec<(usize, usize, f64)> = Vec::new();
+    let mut baseline = 0.0f64;
+    for batch in [1usize, 16, 64, 200, 400, 1024, 6400] {
+        // Per-tuple baseline uses chunk length 1; batch rows chunk at
+        // the batch size (bounded pause latency either way).
+        let interval = if batch == 1 { 1 } else { batch };
         // Warm + measure best of 2 (1-core noise).
-        let a = pipeline(total, 2, batch);
-        let b = pipeline(total, 2, batch);
-        println!("{batch:>8} {:>16.0}", a.max(b) / 1e3);
+        let a = pipeline(total, 2, batch, interval);
+        let b = pipeline(total, 2, batch, interval);
+        let best = a.max(b);
+        if batch == 1 {
+            baseline = best;
+        }
+        let speedup = if baseline > 0.0 { best / baseline } else { 1.0 };
+        println!(
+            "{batch:>8} {interval:>10} {:>16.0} {speedup:>9.1}x",
+            best / 1e3
+        );
+        rows.push((batch, interval, best));
     }
+    write_bench_json(&rows, baseline);
     println!();
+}
+
+/// Write BENCH_perf.json (machine-readable perf trajectory).
+fn write_bench_json(rows: &[(usize, usize, f64)], baseline: f64) {
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"throughput_vs_batch_size\",\n");
+    s.push_str("  \"pipeline\": \"scan->filter->sink (2 workers, 1M tuples)\",\n");
+    s.push_str("  \"rows\": [\n");
+    for (i, (batch, interval, tps)) in rows.iter().enumerate() {
+        let speedup = if baseline > 0.0 { tps / baseline } else { 1.0 };
+        s.push_str(&format!(
+            "    {{\"batch_size\": {batch}, \"ctrl_check_interval\": {interval}, \
+             \"tuples_per_sec\": {tps:.0}, \"speedup_vs_batch1\": {speedup:.2}}}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_perf.json", &s) {
+        Ok(()) => println!("(wrote BENCH_perf.json)"),
+        Err(e) => println!("(could not write BENCH_perf.json: {e})"),
+    }
 }
 
 /// Partitioner routing nanoseconds per tuple.

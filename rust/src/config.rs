@@ -30,6 +30,11 @@ pub struct Config {
     pub data_queue_cap: usize,
     /// How many tuples the DP loop processes between checks of the
     /// control flag (1 = the paper's per-iteration check, §2.4.3).
+    /// This is also the chunk length handed to `process_batch`, so it
+    /// bounds both pause latency and the span over which per-tuple
+    /// overheads amortize. The worker drops to single-tuple stepping
+    /// while breakpoint targets or replay records are armed, keeping
+    /// their semantics exact at any interval.
     pub ctrl_check_interval: usize,
     /// Principal's waiting threshold τ for global breakpoints, in ms
     /// (§2.5.3, Fig. 2.13).

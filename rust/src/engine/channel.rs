@@ -11,7 +11,10 @@
 //! atomic load on the hot path).
 //!
 //! The inbox supports an artificial delivery delay (per-message due
-//! time) used by the Fig. 3.21 control-latency experiment.
+//! time) used by the Fig. 3.21 control-latency experiment. Receivers
+//! always dequeue the *earliest-due* message rather than the queue
+//! front, so a delayed message cannot head-of-line-block an already-due
+//! one behind it.
 
 use crate::engine::message::{ControlMessage, DataEvent};
 use std::collections::VecDeque;
@@ -60,16 +63,31 @@ impl ControlInbox {
         self.pending.load(Ordering::Acquire)
     }
 
-    /// Dequeue the next *due* message, if any.
+    /// Index of the earliest-due message (first wins among equal due
+    /// times, preserving FIFO for undelayed messages). Receivers must
+    /// scan rather than peek the front: a front message carrying an
+    /// artificial delivery delay would otherwise hide an already-due
+    /// message queued behind it (head-of-line blocking).
+    fn earliest_idx(q: &VecDeque<(Instant, ControlMessage)>) -> Option<usize> {
+        let mut best: Option<(usize, Instant)> = None;
+        for (i, (due, _)) in q.iter().enumerate() {
+            if best.map_or(true, |(_, b)| *due < b) {
+                best = Some((i, *due));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Dequeue the earliest *due* message, if any.
     pub fn try_recv(&self) -> Option<ControlMessage> {
         if !self.maybe_pending() {
             return None;
         }
         let mut q = self.queue.lock().unwrap();
         let now = Instant::now();
-        if let Some((due, _)) = q.front() {
-            if *due <= now {
-                let (_, msg) = q.pop_front().unwrap();
+        if let Some(idx) = Self::earliest_idx(&q) {
+            if q[idx].0 <= now {
+                let (_, msg) = q.remove(idx).unwrap();
                 if q.is_empty() {
                     self.pending.store(false, Ordering::Release);
                 }
@@ -85,19 +103,21 @@ impl ControlInbox {
         let mut q = self.queue.lock().unwrap();
         loop {
             let now = Instant::now();
-            if let Some((due, _)) = q.front() {
-                if *due <= now {
-                    let (_, msg) = q.pop_front().unwrap();
+            if let Some(idx) = Self::earliest_idx(&q) {
+                let due = q[idx].0;
+                if due <= now {
+                    let (_, msg) = q.remove(idx).unwrap();
                     if q.is_empty() {
                         self.pending.store(false, Ordering::Release);
                     }
                     return Some(msg);
                 }
-                // Wait until the front message becomes due (or deadline).
-                let wait = (*due).min(deadline).saturating_duration_since(now);
-                if wait.is_zero() && *due > deadline {
+                // Wait until the earliest message becomes due (or the
+                // deadline passes).
+                if now >= deadline {
                     return None;
                 }
+                let wait = due.min(deadline).saturating_duration_since(now);
                 let (qq, _) = self.cv.wait_timeout(q, wait.max(Duration::from_micros(50))).unwrap();
                 q = qq;
             } else {
@@ -255,6 +275,32 @@ mod tests {
     }
 
     #[test]
+    fn delayed_head_does_not_block_due_message() {
+        // A front message with an artificial delivery delay must not
+        // hide an already-due message queued behind it.
+        let inbox = ControlInbox::new();
+        inbox.send(ControlMessage::Pause, Duration::from_millis(250));
+        inbox.send(ControlMessage::Resume, Duration::ZERO);
+        assert!(matches!(inbox.try_recv(), Some(ControlMessage::Resume)));
+        // The delayed head is still queued but not yet due.
+        assert!(inbox.try_recv().is_none());
+        assert!(inbox.maybe_pending());
+        std::thread::sleep(Duration::from_millis(260));
+        assert!(matches!(inbox.try_recv(), Some(ControlMessage::Pause)));
+    }
+
+    #[test]
+    fn recv_timeout_skips_delayed_head() {
+        let inbox = ControlInbox::new();
+        inbox.send(ControlMessage::Pause, Duration::from_secs(60));
+        inbox.send(ControlMessage::Resume, Duration::ZERO);
+        let t0 = Instant::now();
+        let got = inbox.recv_timeout(Duration::from_secs(5));
+        assert!(matches!(got, Some(ControlMessage::Resume)));
+        assert!(t0.elapsed() < Duration::from_secs(1), "blocked on delayed head");
+    }
+
+    #[test]
     fn recv_timeout_wakes_on_send() {
         let inbox = Arc::new(ControlInbox::new());
         let i2 = inbox.clone();
@@ -296,7 +342,7 @@ mod tests {
                 from: WorkerId::new(0, 0),
                 port: 0,
                 seq,
-                batch: vec![],
+                batch: crate::tuple::TupleBatch::empty(),
             }))
             .unwrap();
         }

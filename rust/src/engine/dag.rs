@@ -9,7 +9,7 @@
 
 use crate::engine::operator::{Emitter, Operator};
 use crate::engine::partitioner::PartitionScheme;
-use crate::tuple::Tuple;
+use crate::tuple::{Tuple, TupleBatch};
 use crate::workloads::TupleSource;
 use std::sync::Arc;
 
@@ -30,6 +30,10 @@ impl Operator for PassThrough {
     }
     fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
         out.emit(t);
+    }
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
+        // Forward the shared allocation untouched (zero-copy scan path).
+        out.emit_batch(batch.clone());
     }
 }
 

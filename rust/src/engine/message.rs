@@ -10,7 +10,7 @@
 
 use crate::engine::operator::{OpPatch, OpState};
 use crate::engine::partitioner::MitigationRoute;
-use crate::tuple::Tuple;
+use crate::tuple::{Tuple, TupleBatch};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -37,12 +37,16 @@ impl std::fmt::Display for WorkerId {
 /// A batch of tuples on an edge. `seq` is the per-(sender, receiver)
 /// sequence number used for FIFO/exactly-once accounting and the
 /// fault-tolerance control-replay log (§2.6.2).
+///
+/// The payload is a shared [`TupleBatch`]: cloning the message (fan-out
+/// edges, snapshots of a partially processed batch) copies an `Arc`,
+/// never the tuples.
 #[derive(Clone, Debug)]
 pub struct DataMessage {
     pub from: WorkerId,
     pub port: usize,
     pub seq: u64,
-    pub batch: Vec<Tuple>,
+    pub batch: TupleBatch,
 }
 
 /// Everything that travels on the data plane.

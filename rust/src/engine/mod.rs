@@ -10,11 +10,15 @@
 //!
 //! Message model (§2.3.3 / §2.4.2): data flows in batched
 //! [`message::DataEvent`]s over bounded FIFO channels (congestion
-//! control); control flows through a separate always-responsive
+//! control); payloads are shared [`crate::tuple::TupleBatch`]es, so
+//! fan-out edges (broadcast, replication) clone an `Arc`, not tuples.
+//! Control flows through a separate always-responsive
 //! [`channel::ControlInbox`] whose `pending` flag the worker's
-//! data-processing loop checks **between tuples** — the paper's
-//! per-iteration `Paused`-variable check that yields sub-second pause
-//! latency regardless of batch size.
+//! data-processing loop checks **between chunks** of at most
+//! `ctrl_check_interval` tuples — the paper's per-iteration
+//! `Paused`-variable check (interval 1 is exactly that) generalized to
+//! amortize per-tuple overheads while keeping pause latency sub-second
+//! regardless of batch size.
 
 pub mod message;
 pub mod channel;

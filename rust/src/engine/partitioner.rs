@@ -175,23 +175,36 @@ impl Partitioner {
 
     /// (base destination, final destination) — senders maintain both
     /// the σ_w and the natural-share gauges from one routing pass.
+    ///
+    /// The partitioning-key hash is computed at most once per tuple and
+    /// reused for both the base route and the mitigation overlay (the
+    /// pre-refactor code hashed twice on overlaid hash edges).
     #[inline]
     pub fn route_with_base(&mut self, t: &Tuple) -> (usize, usize) {
+        if let PartitionScheme::Hash { key } = &self.scheme {
+            let key = *key;
+            let h = t.get(key).stable_hash();
+            let base = (h % self.receivers as u64) as usize;
+            let dest = self.overlay_route(base, h);
+            return (base, dest);
+        }
         let base = self.base_route(t);
-        (base, self.overlay_route(base, t))
+        if base == usize::MAX || self.overlays.is_empty() {
+            return (base, base);
+        }
+        let h = match &self.scheme {
+            PartitionScheme::Range { key, .. } => t.get(*key).stable_hash(),
+            _ => 0,
+        };
+        let dest = self.overlay_route(base, h);
+        (base, dest)
     }
 
     #[inline]
-    fn overlay_route(&mut self, base: usize, t: &Tuple) -> usize {
+    fn overlay_route(&mut self, base: usize, key: u64) -> usize {
         if base == usize::MAX || self.overlays.is_empty() {
             return base;
         }
-        let key = match &self.scheme {
-            PartitionScheme::Hash { key } | PartitionScheme::Range { key, .. } => {
-                t.get(*key).stable_hash()
-            }
-            _ => 0,
-        };
         let Some(ov) = self.overlays.get_mut(&base) else {
             return base;
         };

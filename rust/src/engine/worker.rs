@@ -1,21 +1,37 @@
-//! The worker actor (§2.4): processes one data partition, forwards
-//! results in batches, and reacts to control messages **between
-//! tuples**.
+//! The worker actor (§2.4): processes one data partition batch-at-a-
+//! time, forwards results in shared [`TupleBatch`]es, and reacts to
+//! control messages **between chunks**.
 //!
 //! The paper splits each Orleans actor into a main thread (mailbox) and
 //! a data-processing thread sharing a `Paused` flag checked after every
 //! iteration (Fig. 2.4). Our worker is one OS thread with two mailboxes
 //! — a bounded data channel and an always-responsive
-//! [`ControlInbox`](crate::engine::channel::ControlInbox) — and the DP
-//! loop polls the inbox's atomic `pending` flag per tuple, which is the
-//! same structure with one fewer thread.
+//! [`ControlInbox`](crate::engine::channel::ControlInbox). The DP loop
+//! slices each incoming batch into chunks of at most
+//! `ctrl_check_interval` tuples, hands each chunk to
+//! [`Operator::process_batch`], and polls the inbox's atomic `pending`
+//! flag between chunks. Interval 1 reproduces the paper's per-iteration
+//! check exactly; larger intervals amortize the per-tuple virtual call
+//! and routing cost while keeping pause latency bounded by one chunk.
+//! Whenever tuple-exact positions matter — an armed local breakpoint,
+//! an outstanding global-breakpoint target, or pending control-replay
+//! records — the chunk length drops to 1, so conditional-breakpoint
+//! culprits, COUNT-target exactness (§2.5.3) and replay positions
+//! (§2.6.2) are bit-identical to the tuple-at-a-time engine.
+//!
+//! Chunks are zero-copy slices of the received batch (`Arc`-backed), and
+//! the resumption index (§2.4.3) is a slice offset, so pausing
+//! mid-batch never copies tuples.
 //!
 //! Responsibilities:
 //! * pausing with resumption-index state save (§2.4.3) and responding
 //!   to messages after pausing (§2.4.4);
 //! * local conditional breakpoints (§2.5.2) and global-breakpoint
 //!   target counting (§2.5.3);
-//! * output batching + partitioning with Reshape's mitigation overlay;
+//! * output batching + partitioning with Reshape's mitigation overlay
+//!   ([`OutBox`] scatters whole batches through the partitioner in one
+//!   pass, hashing each key once, and ships broadcast edges as clones
+//!   of one shared allocation);
 //! * state migration send/receive (§3.2.2, §3.5);
 //! * control-replay logging and replay for fault tolerance (§2.6.2);
 //! * first-output timestamps (Maestro first-response-time metric).
@@ -27,8 +43,8 @@ use crate::engine::message::{
     WorkerId, WorkerStats,
 };
 use crate::engine::operator::{Emitter, Operator};
-use crate::engine::partitioner::Partitioner;
-use crate::tuple::Tuple;
+use crate::engine::partitioner::{PartitionScheme, Partitioner};
+use crate::tuple::{Tuple, TupleBatch};
 use crate::workloads::TupleSource;
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
@@ -56,14 +72,26 @@ impl OutputEdge {
         senders: Vec<DataSender>,
     ) -> OutputEdge {
         let n = senders.len();
+        // Broadcast edges keep a single buffer: the flush wraps it into
+        // one shared TupleBatch and every destination receives a clone
+        // of that allocation (zero per-destination tuple clones).
+        let nbuf = if matches!(partitioner.scheme, PartitionScheme::Broadcast) {
+            1
+        } else {
+            n
+        };
         OutputEdge {
             target_op,
             port,
             partitioner,
             senders,
-            buffers: (0..n).map(|_| Vec::new()).collect(),
+            buffers: (0..nbuf).map(|_| Vec::new()).collect(),
             seqs: vec![0; n],
         }
+    }
+
+    fn is_broadcast(&self) -> bool {
+        matches!(self.partitioner.scheme, PartitionScheme::Broadcast)
     }
 }
 
@@ -145,18 +173,9 @@ struct OutBox {
 }
 
 impl OutBox {
-    /// Flush buffer `d` of edge `e`.
-    fn flush_one(&mut self, e: usize, d: usize) {
+    /// Send one message carrying `batch` to destination `d` of edge `e`.
+    fn send_msg(&mut self, e: usize, d: usize, batch: TupleBatch) {
         let edge = &mut self.edges[e];
-        if edge.buffers[d].is_empty() {
-            return;
-        }
-        // Swap in a preallocated buffer (perf: mem::take resets the
-        // capacity to zero, forcing a realloc ladder every batch).
-        let batch = std::mem::replace(
-            &mut edge.buffers[d],
-            Vec::with_capacity(self.batch_size),
-        );
         let msg = DataMessage {
             from: self.id,
             port: edge.port,
@@ -170,12 +189,56 @@ impl OutBox {
         }
     }
 
-    /// Flush every non-empty buffer (pause points, EOF).
-    fn flush_all(&mut self) {
-        for e in 0..self.edges.len() {
+    /// Flush buffer `d` of edge `e` (broadcast edges flush all
+    /// destinations at once — they share one buffer).
+    fn flush_one(&mut self, e: usize, d: usize) {
+        if self.edges[e].is_broadcast() {
+            self.flush_broadcast(e);
+            return;
+        }
+        if self.edges[e].buffers[d].is_empty() {
+            return;
+        }
+        // Swap in a preallocated buffer (perf: mem::take resets the
+        // capacity to zero, forcing a realloc ladder every batch).
+        let buf = std::mem::replace(
+            &mut self.edges[e].buffers[d],
+            Vec::with_capacity(self.batch_size),
+        );
+        self.send_msg(e, d, TupleBatch::new(buf));
+    }
+
+    /// Flush a broadcast edge: wrap the single buffer into one shared
+    /// batch and send a clone of it to every destination.
+    fn flush_broadcast(&mut self, e: usize) {
+        if self.edges[e].buffers[0].is_empty() {
+            return;
+        }
+        let buf = std::mem::replace(
+            &mut self.edges[e].buffers[0],
+            Vec::with_capacity(self.batch_size),
+        );
+        let shared = TupleBatch::new(buf);
+        for d in 0..self.edges[e].senders.len() {
+            self.send_msg(e, d, shared.clone());
+        }
+    }
+
+    /// Flush every buffer of edge `e`.
+    fn flush_edge(&mut self, e: usize) {
+        if self.edges[e].is_broadcast() {
+            self.flush_broadcast(e);
+        } else {
             for d in 0..self.edges[e].senders.len() {
                 self.flush_one(e, d);
             }
+        }
+    }
+
+    /// Flush every non-empty buffer (pause points, EOF).
+    fn flush_all(&mut self) {
+        for e in 0..self.edges.len() {
+            self.flush_edge(e);
         }
     }
 
@@ -196,9 +259,7 @@ impl OutBox {
                 continue;
             }
             // Flush buffered data first so the marker orders correctly.
-            for d in 0..self.edges[e].senders.len() {
-                self.flush_one(e, d);
-            }
+            self.flush_edge(e);
             let edge = &self.edges[e];
             for s in &edge.senders {
                 let _ = s.send(DataEvent::Marker {
@@ -209,11 +270,8 @@ impl OutBox {
             }
         }
     }
-}
 
-impl Emitter for OutBox {
-    fn emit(&mut self, mut t: Tuple) {
-        self.produced += 1;
+    fn note_first_output(&mut self) {
         if !self.first_output_sent {
             self.first_output_sent = true;
             let _ = self.event_tx.send(WorkerEvent::FirstOutput {
@@ -221,14 +279,10 @@ impl Emitter for OutBox {
                 at: Instant::now(),
             });
         }
-        // Local conditional breakpoint (§2.5.2): record the culprit
-        // tuple; the worker loop pauses after the current iteration.
-        if let Some(p) = &self.local_bp {
-            if self.bp_hit.is_none() && p(&t) {
-                self.bp_hit = Some(t.clone());
-            }
-        }
-        // Global-breakpoint target accounting (§2.5.3).
+    }
+
+    /// Global-breakpoint target accounting for one tuple (§2.5.3).
+    fn note_target(&mut self, t: &Tuple) {
         if let Some(remaining) = self.target.target {
             let amount = match self.target.sum_field {
                 None => 1.0,
@@ -239,6 +293,25 @@ impl Emitter for OutBox {
                 self.target_reached = true;
             }
         }
+    }
+
+    /// Local conditional breakpoint (§2.5.2): record the culprit
+    /// tuple; the worker loop pauses after the current chunk.
+    fn note_local_bp(&mut self, t: &Tuple) {
+        if let Some(p) = &self.local_bp {
+            if self.bp_hit.is_none() && p(t) {
+                self.bp_hit = Some(t.clone());
+            }
+        }
+    }
+}
+
+impl Emitter for OutBox {
+    fn emit(&mut self, mut t: Tuple) {
+        self.produced += 1;
+        self.note_first_output();
+        self.note_local_bp(&t);
+        self.note_target(&t);
         // Route and buffer. Single-edge unicast (the common case)
         // moves the tuple; fan-out clones.
         let n_edges = self.edges.len();
@@ -246,12 +319,16 @@ impl Emitter for OutBox {
             let last_edge = e + 1 == n_edges;
             let (base, dest) = self.edges[e].partitioner.route_with_base(&t);
             if dest == usize::MAX {
-                // Broadcast.
-                for d in 0..self.edges[e].senders.len() {
-                    self.edges[e].buffers[d].push(t.clone());
-                    if self.edges[e].buffers[d].len() >= self.batch_size {
-                        self.flush_one(e, d);
-                    }
+                // Broadcast: buffer once; the flush shares one
+                // allocation across every destination.
+                if last_edge {
+                    let moved = std::mem::replace(&mut t, Tuple { values: Box::new([]) });
+                    self.edges[e].buffers[0].push(moved);
+                } else {
+                    self.edges[e].buffers[0].push(t.clone());
+                }
+                if self.edges[e].buffers[0].len() >= self.batch_size {
+                    self.flush_broadcast(e);
                 }
             } else {
                 // Track routed-input accounting on the receiver gauges:
@@ -273,6 +350,85 @@ impl Emitter for OutBox {
                 }
                 if self.edges[e].buffers[dest].len() >= self.batch_size {
                     self.flush_one(e, dest);
+                }
+            }
+        }
+    }
+
+    /// Scatter a whole batch through the per-edge partitioners in one
+    /// pass. On fan-out (broadcast) and single-destination edges,
+    /// full-size chunks forward the *shared* allocation directly and
+    /// smaller chunks are buffered up to `batch_size` (so message
+    /// sizing matches the tuple-at-a-time engine at any
+    /// `ctrl_check_interval`); multi-destination scatter routes tuple
+    /// by tuple, computing each key hash once.
+    fn emit_batch(&mut self, batch: TupleBatch) {
+        let n = batch.len();
+        if n == 0 {
+            return;
+        }
+        self.produced += n as u64;
+        self.note_first_output();
+        if self.local_bp.is_some() {
+            for t in batch.iter() {
+                self.note_local_bp(t);
+            }
+        }
+        if self.target.target.is_some() {
+            for t in batch.iter() {
+                self.note_target(t);
+            }
+        }
+        for e in 0..self.edges.len() {
+            if self.edges[e].is_broadcast() {
+                if n >= self.batch_size {
+                    // Full-size chunk: ship buffered singles first
+                    // (FIFO per destination), then clones of the shared
+                    // payload — zero tuple copies.
+                    self.flush_broadcast(e);
+                    for d in 0..self.edges[e].senders.len() {
+                        self.send_msg(e, d, batch.clone());
+                    }
+                } else {
+                    // Sub-batch chunk: buffer so message sizing matches
+                    // the configured batch_size; the flush still shares
+                    // one allocation across destinations.
+                    self.edges[e].buffers[0].extend_from_slice(batch.as_slice());
+                    if self.edges[e].buffers[0].len() >= self.batch_size {
+                        self.flush_broadcast(e);
+                    }
+                }
+            } else if self.edges[e].senders.len() == 1
+                && self.edges[e].partitioner.active_overlays() == 0
+            {
+                // Single destination: every scheme routes to index 0.
+                let s = &self.edges[e].senders[0];
+                s.gauges.received.fetch_add(n as i64, Ordering::Relaxed);
+                s.gauges.base_received.fetch_add(n as i64, Ordering::Relaxed);
+                if n >= self.batch_size {
+                    self.flush_one(e, 0);
+                    self.send_msg(e, 0, batch.clone());
+                } else {
+                    self.edges[e].buffers[0].extend_from_slice(batch.as_slice());
+                    if self.edges[e].buffers[0].len() >= self.batch_size {
+                        self.flush_one(e, 0);
+                    }
+                }
+            } else {
+                for t in batch.iter() {
+                    let (base, dest) = self.edges[e].partitioner.route_with_base(t);
+                    self.edges[e].senders[dest]
+                        .gauges
+                        .received
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.edges[e].senders[base]
+                        .gauges
+                        .base_received
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.edges[e].buffers[dest].push(t.clone());
+                    if self.edges[e].buffers[dest].len() >= self.batch_size {
+                        self.flush_one(e, dest);
+                    }
                 }
             }
         }
@@ -571,7 +727,9 @@ impl Worker {
         let mut resume_offset = 0usize;
         if let Some((msg, idx)) = &self.current {
             let mut m = msg.clone();
-            m.batch = m.batch[*idx..].to_vec();
+            // Zero-copy: the remainder is a suffix view of the shared
+            // batch.
+            m.batch = m.batch.slice_from(*idx);
             resume_offset = *idx;
             msg_count = msg_count.saturating_sub(1);
             pending.push(DataEvent::Batch(m));
@@ -668,85 +826,95 @@ impl Worker {
         }
     }
 
-    /// Process tuples of the current batch until it is exhausted or an
-    /// interruption (pause/bp) occurs.
+    /// Chunk length for the DP loop: `ctrl_check_interval` tuples
+    /// between control checks (1 = the paper's per-iteration check).
+    /// Drops to single-tuple stepping whenever tuple-exact positions
+    /// matter: an armed local breakpoint (exact culprit + pause point),
+    /// an outstanding global-breakpoint target (exact COUNT semantics,
+    /// §2.5.3), or pending replay records (exact replay positions,
+    /// §2.6.2).
+    fn chunk_len(&self) -> usize {
+        if self.out.local_bp.is_some()
+            || self.out.target.target.is_some()
+            || !self.replay.is_empty()
+        {
+            1
+        } else {
+            self.ctrl_check_interval
+        }
+    }
+
+    /// Process the current batch chunk-at-a-time until it is exhausted
+    /// or an interruption (pause/bp) occurs. Chunks are zero-copy
+    /// slices of the shared batch; the resumption index (§2.4.3) is the
+    /// slice offset.
     fn process_current(&mut self) {
-        let Some((mut msg, mut idx)) = self.current.take() else {
+        let Some((msg, mut idx)) = self.current.take() else {
             return;
         };
         let port = msg.port;
+        let total = msg.batch.len();
         let t0 = Instant::now();
-        let mut since_check = 0usize;
-        while idx < msg.batch.len() {
-            // The per-iteration control check (§2.4.3): a single atomic
+        while idx < total {
+            // The between-chunk control check (§2.4.3): a single atomic
             // load unless something is pending.
-            since_check += 1;
-            if since_check >= self.ctrl_check_interval {
-                since_check = 0;
-                if self.mailbox.control.maybe_pending() {
-                    self.current = Some((msg.clone(), idx));
-                    if !self.drain_control() {
-                        self.dead = true;
-                        return;
-                    }
-                    let (m, i) = self.current.take().unwrap();
-                    if self.pause.any() || self.dead {
-                        // Save resumption index and exit to outer loop.
-                        self.current = Some((m, i));
-                        self.busy_ns += t0.elapsed().as_nanos() as u64;
-                        self.update_busy_gauge();
-                        return;
-                    }
+            if self.mailbox.control.maybe_pending() {
+                // Park the batch so control handlers (snapshot, replay
+                // logging) observe the exact resumption position.
+                self.current = Some((msg.clone(), idx));
+                if !self.drain_control() {
+                    self.dead = true;
+                    return;
                 }
+                let (m, i) = self.current.take().unwrap();
+                if self.pause.any() || self.dead {
+                    // Save resumption index and exit to outer loop.
+                    self.current = Some((m, i));
+                    self.busy_ns += t0.elapsed().as_nanos() as u64;
+                    self.update_busy_gauge();
+                    return;
+                }
+                idx = i;
             }
-            // Take ownership instead of cloning (perf: a Tuple clone
-            // allocates a boxed slice per tuple); the slot before the
-            // resumption index is never re-read — pause snapshots copy
-            // only `batch[idx..]`.
-            let t = std::mem::replace(
-                &mut msg.batch[idx],
-                Tuple { values: Box::new([]) },
-            );
-            idx += 1;
+            let end = (idx + self.chunk_len()).min(total);
+            let chunk = msg.batch.slice(idx, end);
             // Optional per-key workload distribution (enabled only when
             // SBK-style mitigation needs it).
             if self.mailbox.gauges.track_keys.load(Ordering::Relaxed) {
                 if let Some(Some(f)) = self.port_key_fields.get(port) {
-                    let h = t.get(*f).stable_hash();
-                    *self
-                        .mailbox
-                        .gauges
-                        .key_counts
-                        .lock()
-                        .unwrap()
-                        .entry(h)
-                        .or_insert(0) += 1;
+                    let mut counts = self.mailbox.gauges.key_counts.lock().unwrap();
+                    for t in chunk.iter() {
+                        *counts.entry(t.get(*f).stable_hash()).or_insert(0) += 1;
+                    }
                 }
             }
-            self.op.process(t, port, &mut self.out);
-            self.processed += 1;
-            // queued is the Reshape workload metric — per-tuple
-            // freshness matters; the other gauges update per batch.
-            self.mailbox.gauges.queued.fetch_sub(1, Ordering::Relaxed);
+            self.op.process_batch(&chunk, port, &mut self.out);
+            let n = (end - idx) as u64;
+            idx = end;
+            self.processed += n;
+            // queued is the Reshape workload metric — chunk-level
+            // freshness suffices; the other gauges update per batch.
+            self.mailbox.gauges.queued.fetch_sub(n as i64, Ordering::Relaxed);
             if self.out.dead {
                 self.dead = true;
                 return;
             }
             self.post_tuple_checks();
             if self.pause.any() {
-                if idx < msg.batch.len() {
+                if idx < total {
                     self.current = Some((msg, idx));
                 }
                 self.busy_ns += t0.elapsed().as_nanos() as u64;
                 self.update_busy_gauge();
                 return;
             }
-            // Replay records due mid-batch.
+            // Replay records due mid-batch (single-tuple chunks while
+            // any are pending keep positions exact).
             if !self.replay.is_empty() {
                 self.current = Some((msg.clone(), idx));
                 self.apply_due_replays();
                 self.current.take();
-                if self.pause.any() {
+                if self.pause.any() || self.dead {
                     self.current = Some((msg, idx));
                     self.busy_ns += t0.elapsed().as_nanos() as u64;
                     self.update_busy_gauge();
@@ -883,15 +1051,14 @@ impl Worker {
         });
     }
 
-    /// Source-worker production step: emit up to one batch.
+    /// Source-worker production step: emit up to one batch, generated
+    /// and processed chunk-at-a-time with the same control cadence as
+    /// the receive path.
     fn produce_from_source(&mut self) {
         let t0 = Instant::now();
-        let mut since_check = 0usize;
-        for _ in 0..self.batch_size {
-            since_check += 1;
-            if since_check >= self.ctrl_check_interval
-                && self.mailbox.control.maybe_pending()
-            {
+        let mut emitted = 0usize;
+        while emitted < self.batch_size {
+            if self.mailbox.control.maybe_pending() {
                 break;
             }
             // Replayed control messages due at this source position.
@@ -901,30 +1068,43 @@ impl Worker {
                     break;
                 }
             }
+            let want = self.chunk_len().min(self.batch_size - emitted);
             let Some(src) = self.source.as_mut() else { break };
-            match src.next_tuple() {
-                Some(t) => {
-                    self.op.process(t, 0, &mut self.out);
-                    self.processed += 1;
-                    self.mailbox
-                        .gauges
-                        .processed
-                        .fetch_add(1, Ordering::Relaxed);
-                    if self.out.dead {
-                        self.dead = true;
-                        return;
-                    }
-                    self.post_tuple_checks();
-                    if self.pause.any() {
+            let mut rows = Vec::with_capacity(want);
+            let mut eof = false;
+            for _ in 0..want {
+                match src.next_tuple() {
+                    Some(t) => rows.push(t),
+                    None => {
+                        eof = true;
                         break;
                     }
                 }
-                None => {
-                    self.busy_ns += t0.elapsed().as_nanos() as u64;
-                    self.update_busy_gauge();
-                    self.finish();
+            }
+            if !rows.is_empty() {
+                let n = rows.len();
+                let chunk = TupleBatch::new(rows);
+                self.op.process_batch(&chunk, 0, &mut self.out);
+                self.processed += n as u64;
+                self.mailbox
+                    .gauges
+                    .processed
+                    .fetch_add(n as i64, Ordering::Relaxed);
+                emitted += n;
+                if self.out.dead {
+                    self.dead = true;
                     return;
                 }
+                self.post_tuple_checks();
+            }
+            if self.pause.any() || self.dead {
+                break;
+            }
+            if eof {
+                self.busy_ns += t0.elapsed().as_nanos() as u64;
+                self.update_busy_gauge();
+                self.finish();
+                return;
             }
         }
         self.busy_ns += t0.elapsed().as_nanos() as u64;
@@ -1057,6 +1237,19 @@ mod tests {
         std::sync::mpsc::Receiver<DataEvent>,
         std::thread::JoinHandle<()>,
     ) {
+        single_worker_cfg(batch_size, 1)
+    }
+
+    fn single_worker_cfg(
+        batch_size: usize,
+        ctrl_check_interval: usize,
+    ) -> (
+        std::sync::Arc<crate::engine::channel::ControlInbox>,
+        DataSender,
+        std::sync::mpsc::Receiver<WorkerEvent>,
+        std::sync::mpsc::Receiver<DataEvent>,
+        std::thread::JoinHandle<()>,
+    ) {
         let (in_tx, in_mb) = mailbox(64);
         let (down_tx, down_rx) = mailbox(1024);
         let (ev_tx, ev_rx) = channel();
@@ -1078,7 +1271,7 @@ mod tests {
             source: None,
             source_autostart: true,
             batch_size,
-            ctrl_check_interval: 1,
+            ctrl_check_interval,
             ft_log: false,
             snapshot: None,
             scatter_merge: false,
@@ -1092,7 +1285,7 @@ mod tests {
             from: WorkerId::new(9, 0),
             port: 0,
             seq,
-            batch: tuples,
+            batch: tuples.into(),
         }))
         .unwrap();
     }
@@ -1107,7 +1300,7 @@ mod tests {
         let mut got = Vec::new();
         loop {
             match down_rx.recv_timeout(Duration::from_secs(5)).unwrap() {
-                DataEvent::Batch(b) => got.extend(b.batch),
+                DataEvent::Batch(b) => got.extend(b.batch.iter().cloned()),
                 DataEvent::End { .. } => break,
                 _ => {}
             }
@@ -1259,5 +1452,127 @@ mod tests {
         h.join().unwrap();
         // No PausedAck/Completed events.
         assert!(ev_rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn count_target_exact_with_chunked_interval() {
+        // Even with a 64-tuple control-check interval, an armed target
+        // forces single-tuple stepping: COUNT stays exact (§2.5.3).
+        let (ctrl, tx, ev_rx, _down, h) = single_worker_cfg(400, 64);
+        ctrl.send(
+            ControlMessage::AssignTarget(BreakpointTarget {
+                id: 1,
+                amount: 7.0,
+                sum_field: None,
+            }),
+            Duration::ZERO,
+        );
+        // Give the assignment time to land before data floods in.
+        std::thread::sleep(Duration::from_millis(20));
+        send_batch(&tx, 0, (0..1000).map(tuple).collect());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut reached = None;
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::TargetReached { produced, .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                reached = Some(produced);
+                break;
+            }
+        }
+        assert_eq!(reached, Some(7.0));
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_pause_acks_quickly() {
+        // Large interval, huge batch: pause latency is bounded by one
+        // chunk, far below a second.
+        let (ctrl, tx, ev_rx, _down, h) = single_worker_cfg(1024, 1024);
+        send_batch(&tx, 0, (0..200_000).map(tuple).collect());
+        let t0 = Instant::now();
+        ctrl.send(ControlMessage::Pause, Duration::ZERO);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut acked = false;
+        while Instant::now() < deadline {
+            if let Ok(WorkerEvent::PausedAck { .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                acked = true;
+                break;
+            }
+        }
+        assert!(acked, "no PausedAck");
+        assert!(t0.elapsed() < Duration::from_secs(1), "pause not sub-second");
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn broadcast_shares_one_allocation_across_destinations() {
+        // Three downstream workers on a broadcast edge: each must
+        // receive a clone of the *same* TupleBatch allocation.
+        let (in_tx, in_mb) = mailbox(64);
+        let mut down_txs = Vec::new();
+        let mut down_rxs = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = mailbox(64);
+            down_txs.push(tx);
+            down_rxs.push(rx);
+        }
+        let (ev_tx, _ev_rx) = channel();
+        let ctrl = in_mb.control.clone();
+        let edge = OutputEdge::new(
+            1,
+            0,
+            Partitioner::new(PartitionScheme::Broadcast, 3, 0),
+            down_txs,
+        );
+        let ctx = WorkerContext {
+            id: WorkerId::new(0, 0),
+            mailbox: in_mb,
+            event_tx: ev_tx,
+            outputs: vec![edge],
+            upstream_counts: vec![1],
+            peers: vec![],
+            port_key_fields: vec![None],
+            source: None,
+            source_autostart: true,
+            batch_size: 8,
+            ctrl_check_interval: 8,
+            ft_log: false,
+            snapshot: None,
+            scatter_merge: false,
+        };
+        let h = std::thread::spawn(move || {
+            run_worker(ctx, Box::new(crate::engine::dag::PassThrough))
+        });
+        send_batch(&in_tx, 0, (0..8).map(tuple).collect());
+        in_tx
+            .send(DataEvent::End { from: WorkerId::new(9, 0), port: 0 })
+            .unwrap();
+        let mut received = Vec::new();
+        for rx in &down_rxs {
+            loop {
+                match rx.data.recv_timeout(Duration::from_secs(5)).unwrap() {
+                    DataEvent::Batch(b) if !b.batch.is_empty() => {
+                        received.push(b.batch);
+                        break;
+                    }
+                    DataEvent::End { .. } => panic!("EOF before data"),
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(received.len(), 3);
+        assert_eq!(received[0].len(), 8);
+        assert!(
+            crate::tuple::TupleBatch::ptr_eq(&received[0], &received[1])
+                && crate::tuple::TupleBatch::ptr_eq(&received[1], &received[2]),
+            "broadcast destinations did not share one allocation"
+        );
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
     }
 }

@@ -11,7 +11,15 @@
 //!   engine with a fast control-message path enabling sub-second
 //!   pause/resume, operator investigation/modification at runtime,
 //!   local & global conditional breakpoints, and fault tolerance via
-//!   checkpoints + a control-replay log.
+//!   checkpoints + a control-replay log. The data plane is
+//!   **batch-at-a-time**: tuples travel in shared
+//!   [`tuple::TupleBatch`]es (`Arc`-backed, zero-copy on slice and
+//!   fan-out), operators process chunks through
+//!   [`engine::Operator::process_batch`], and the worker re-checks the
+//!   control flag between chunks of `ctrl_check_interval` tuples — so
+//!   the paper's §2.4 control semantics (sub-second pause, exact
+//!   breakpoints, replayable positions) are preserved while per-tuple
+//!   dispatch, routing and clone costs amortize across the batch.
 //! * [`reshape`] — **Reshape** (Ch. 3): adaptive, result-aware
 //!   partitioning-skew mitigation built on the engine's control messages.
 //! * [`maestro`] — **Maestro** (Ch. 4): result-aware region scheduling

@@ -1,12 +1,17 @@
-//! Stateless tuple-at-a-time operators (§2.4.3 category 1): selection,
-//! projection, keyword search, regex parsing, UDF map, union.
+//! Stateless operators (§2.4.3 category 1): selection, projection,
+//! keyword search, regex parsing, UDF map, union.
+//!
+//! The hot ones (filter, project, keyword search, union) override
+//! [`Operator::process_batch`] to amortize dispatch across a chunk and
+//! to forward the *shared* batch allocation unchanged whenever every
+//! tuple passes — the common case on selective-late pipelines.
 //!
 //! These support runtime modification via [`Operator::modify`] — the
 //! paper's "change the threshold in a selection predicate, a regular
 //! expression in an entity extractor operator" (§2.1).
 
 use crate::engine::operator::{Emitter, OpPatch, Operator};
-use crate::tuple::{value_cmp, Tuple, Value};
+use crate::tuple::{value_cmp, Tuple, TupleBatch, Value};
 
 /// Comparison operator for [`Filter`] predicates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,6 +60,13 @@ impl Filter {
     }
 }
 
+impl Filter {
+    #[inline]
+    fn keep(&self, t: &Tuple) -> bool {
+        self.cmp.eval(value_cmp(t.get(self.field), &self.constant))
+    }
+}
+
 impl Operator for Filter {
     fn name(&self) -> &str {
         "filter"
@@ -64,9 +76,16 @@ impl Operator for Filter {
         if self.cost_ns > 0 {
             busy_spin(self.cost_ns);
         }
-        if self.cmp.eval(value_cmp(t.get(self.field), &self.constant)) {
+        if self.keep(&t) {
             out.emit(t);
         }
+    }
+
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
+        if self.cost_ns > 0 {
+            busy_spin(self.cost_ns * batch.len() as u64);
+        }
+        emit_filtered(batch, out, |t| self.keep(t));
     }
 
     fn modify(&mut self, patch: &OpPatch) -> Result<(), String> {
@@ -109,6 +128,41 @@ fn busy_spin(ns: u64) {
     }
 }
 
+/// Single-pass batched selection: evaluates `pred` once per tuple,
+/// forwards the *shared* allocation when everything passes (zero
+/// clones), and otherwise clones only the kept tuples.
+fn emit_filtered(
+    batch: &TupleBatch,
+    out: &mut dyn Emitter,
+    mut pred: impl FnMut(&Tuple) -> bool,
+) {
+    let mut kept: Option<Vec<Tuple>> = None;
+    for (i, t) in batch.iter().enumerate() {
+        if pred(t) {
+            if let Some(v) = kept.as_mut() {
+                v.push(t.clone());
+            }
+        } else if kept.is_none() {
+            // First rejection: everything before `i` passed.
+            let mut v = Vec::with_capacity(batch.len().saturating_sub(1));
+            v.extend_from_slice(&batch.as_slice()[..i]);
+            kept = Some(v);
+        }
+    }
+    match kept {
+        None => {
+            if !batch.is_empty() {
+                out.emit_batch(batch.clone());
+            }
+        }
+        Some(v) => {
+            if !v.is_empty() {
+                out.emit_batch(v.into());
+            }
+        }
+    }
+}
+
 /// Keyword search over a string field: keep tuples whose field contains
 /// *any* of the keywords. Keywords are runtime-modifiable — the
 /// "blunt"-tweets example of Ch. 1 (`modify("keywords", "a,b,c")`).
@@ -126,17 +180,29 @@ impl KeywordSearch {
     }
 }
 
+impl KeywordSearch {
+    #[inline]
+    fn matches(&self, t: &Tuple) -> bool {
+        t.get(self.field)
+            .as_str()
+            .map(|text| self.keywords.iter().any(|k| text.contains(k.as_str())))
+            .unwrap_or(false)
+    }
+}
+
 impl Operator for KeywordSearch {
     fn name(&self) -> &str {
         "keyword_search"
     }
 
     fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
-        if let Some(text) = t.get(self.field).as_str() {
-            if self.keywords.iter().any(|k| text.contains(k.as_str())) {
-                out.emit(t);
-            }
+        if self.matches(&t) {
+            out.emit(t);
         }
+    }
+
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
+        emit_filtered(batch, out, |t| self.matches(t));
     }
 
     fn modify(&mut self, patch: &OpPatch) -> Result<(), String> {
@@ -162,15 +228,27 @@ impl Project {
     }
 }
 
+impl Project {
+    #[inline]
+    fn apply(&self, t: &Tuple) -> Tuple {
+        Tuple::new(self.fields.iter().map(|&i| t.get(i).clone()).collect())
+    }
+}
+
 impl Operator for Project {
     fn name(&self) -> &str {
         "project"
     }
 
     fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
-        out.emit(Tuple::new(
-            self.fields.iter().map(|&i| t.get(i).clone()).collect(),
-        ))
+        out.emit(self.apply(&t))
+    }
+
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
+        if batch.is_empty() {
+            return;
+        }
+        out.emit_batch(batch.iter().map(|t| self.apply(t)).collect());
     }
 }
 
@@ -285,6 +363,10 @@ impl Operator for Union {
     fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
         out.emit(t);
     }
+
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
+        out.emit_batch(batch.clone());
+    }
 }
 
 #[cfg(test)]
@@ -336,6 +418,56 @@ mod tests {
         assert!(f
             .modify(&OpPatch { param: "nope".into(), value: "1".into() })
             .is_err());
+    }
+
+    #[test]
+    fn filter_batch_matches_per_tuple() {
+        let batch: TupleBatch =
+            (0..10).map(|i| t(vec![Value::Int(i)])).collect();
+        let mut a = Filter::new(0, Cmp::Lt, Value::Int(5));
+        let mut out_b = VecEmitter::default();
+        a.process_batch(&batch, 0, &mut out_b);
+        let mut out_t = VecEmitter::default();
+        for tup in batch.iter() {
+            a.process(tup.clone(), 0, &mut out_t);
+        }
+        assert_eq!(out_b.0, out_t.0);
+        assert_eq!(out_b.0.len(), 5);
+    }
+
+    #[test]
+    fn filter_all_pass_forwards_shared_batch() {
+        struct Capture(Option<TupleBatch>);
+        impl Emitter for Capture {
+            fn emit(&mut self, _t: Tuple) {
+                panic!("expected a batch emit");
+            }
+            fn emit_batch(&mut self, b: TupleBatch) {
+                self.0 = Some(b);
+            }
+        }
+        let batch: TupleBatch =
+            (0..6).map(|i| t(vec![Value::Int(i)])).collect();
+        let mut f = Filter::new(0, Cmp::Ge, Value::Int(0));
+        let mut cap = Capture(None);
+        f.process_batch(&batch, 0, &mut cap);
+        let got = cap.0.expect("no batch emitted");
+        assert!(
+            TupleBatch::ptr_eq(&batch, &got),
+            "all-pass filter must forward the shared allocation"
+        );
+    }
+
+    #[test]
+    fn project_batch_matches_per_tuple() {
+        let batch: TupleBatch = (0..4)
+            .map(|i| t(vec![Value::Int(i), Value::str("x")]))
+            .collect();
+        let mut p = Project::new(&[1, 0]);
+        let mut out_b = VecEmitter::default();
+        p.process_batch(&batch, 0, &mut out_b);
+        assert_eq!(out_b.0.len(), 4);
+        assert_eq!(out_b.0[2].get(1).as_int(), Some(2));
     }
 
     #[test]

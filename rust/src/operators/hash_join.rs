@@ -16,8 +16,15 @@
 //! memory cost Maestro's materialization planning avoids.
 
 use crate::engine::operator::{Emitter, OpState, Operator};
-use crate::tuple::Tuple;
+use crate::tuple::{Tuple, TupleBatch};
 use std::collections::HashMap;
+
+fn busy_spin(ns: u64) {
+    let t0 = std::time::Instant::now();
+    while (t0.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
 
 /// Build port index.
 pub const BUILD: usize = 0;
@@ -103,10 +110,7 @@ impl Operator for HashJoin {
             }
             PROBE => {
                 if self.probe_cost_ns > 0 {
-                    let t0 = std::time::Instant::now();
-                    while (t0.elapsed().as_nanos() as u64) < self.probe_cost_ns {
-                        std::hint::spin_loop();
-                    }
+                    busy_spin(self.probe_cost_ns);
                 }
                 if self.build_done {
                     self.probe_one(&t, out);
@@ -118,6 +122,26 @@ impl Operator for HashJoin {
                 }
             }
             _ => unreachable!("hash join has 2 ports"),
+        }
+    }
+
+    /// Batched probe: once the build side is complete, probe tuples are
+    /// read straight out of the shared batch — no per-tuple clone, one
+    /// spin covering the whole chunk's modeled cost. Build input and
+    /// pre-build-EOF probes fall back to the per-tuple path (they take
+    /// ownership / buffer).
+    fn process_batch(&mut self, batch: &TupleBatch, port: usize, out: &mut dyn Emitter) {
+        if port == PROBE && self.build_done {
+            if self.probe_cost_ns > 0 {
+                busy_spin(self.probe_cost_ns * batch.len() as u64);
+            }
+            for t in batch.iter() {
+                self.probe_one(t, out);
+            }
+            return;
+        }
+        for t in batch.iter() {
+            self.process(t.clone(), port, out);
         }
     }
 
@@ -257,6 +281,41 @@ mod tests {
         j.process(kv(1, "p"), PROBE, &mut out);
         assert!(j.violated);
         assert_eq!(out.0.len(), 0);
+    }
+
+    #[test]
+    fn batched_probe_matches_per_tuple() {
+        let build: Vec<Tuple> = (0..5).map(|k| kv(k, "b")).collect();
+        let probes: TupleBatch = (0..20).map(|i| kv(i % 7, "p")).collect();
+        // Per-tuple reference.
+        let mut a = HashJoin::new(0, 0);
+        let mut out_a = VecEmitter::default();
+        for b in &build {
+            a.process(b.clone(), BUILD, &mut out_a);
+        }
+        a.finish_port(BUILD, &mut out_a);
+        for p in probes.iter() {
+            a.process(p.clone(), PROBE, &mut out_a);
+        }
+        // Batched probe.
+        let mut b_join = HashJoin::new(0, 0);
+        let mut out_b = VecEmitter::default();
+        b_join.process_batch(&build.clone().into(), BUILD, &mut out_b);
+        b_join.finish_port(BUILD, &mut out_b);
+        b_join.process_batch(&probes, PROBE, &mut out_b);
+        assert_eq!(out_a.0, out_b.0);
+    }
+
+    #[test]
+    fn batched_early_probe_still_buffers() {
+        let mut j = HashJoin::new(0, 0);
+        let mut out = VecEmitter::default();
+        let early: TupleBatch = vec![kv(1, "p-early")].into();
+        j.process_batch(&early, PROBE, &mut out);
+        assert_eq!(out.0.len(), 0);
+        j.process(kv(1, "b"), BUILD, &mut out);
+        j.finish_port(BUILD, &mut out);
+        assert_eq!(out.0.len(), 1, "buffered probe replayed at build EOF");
     }
 
     #[test]

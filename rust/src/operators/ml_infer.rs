@@ -14,7 +14,7 @@
 
 use crate::engine::operator::{Emitter, Operator};
 use crate::runtime::{InferenceHandle, Tensor};
-use crate::tuple::{Tuple, Value};
+use crate::tuple::{Tuple, TupleBatch, Value};
 
 /// Model input batch size (must match python/compile/model.py).
 pub const BATCH: usize = 32;
@@ -88,7 +88,7 @@ impl MlInfer {
             vals.push(Value::Int(class));
             out.emit(Tuple::new(vals));
         }
-        let _ = n;
+        debug_assert!(n <= BATCH);
     }
 }
 
@@ -101,6 +101,19 @@ impl Operator for MlInfer {
         self.buffer.push(t);
         if self.buffer.len() >= BATCH {
             self.flush(out);
+        }
+    }
+
+    /// Batched intake: an incoming chunk tops up the model's fixed
+    /// `BATCH` shape directly, so a chunk of ≥ `BATCH` tuples triggers
+    /// PJRT inference inline instead of one micro-flush per tuple.
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
+        self.buffer.reserve(batch.len().min(BATCH));
+        for t in batch.iter() {
+            self.buffer.push(t.clone());
+            if self.buffer.len() >= BATCH {
+                self.flush(out);
+            }
         }
     }
 

@@ -7,7 +7,7 @@
 //! (atomic adds).
 
 use crate::engine::operator::{Emitter, Operator};
-use crate::tuple::Tuple;
+use crate::tuple::{Tuple, TupleBatch};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -94,6 +94,25 @@ impl Operator for CollectSink {
             .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
         self.handle.captured.lock().unwrap().push(t);
     }
+
+    /// Batched capture: two atomic adds and one lock per chunk instead
+    /// of per tuple.
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
+        if batch.is_empty() {
+            return;
+        }
+        self.handle
+            .total
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        self.handle
+            .bytes
+            .fetch_add(batch.byte_size() as u64, Ordering::Relaxed);
+        self.handle
+            .captured
+            .lock()
+            .unwrap()
+            .extend_from_slice(batch.as_slice());
+    }
 }
 
 /// Sink that only counts per key (big result streams: the bar-chart
@@ -107,6 +126,17 @@ impl CountByKeySink {
     pub fn new(handle: SinkHandle, key_field: usize) -> CountByKeySink {
         CountByKeySink { handle, key_field }
     }
+
+    #[inline]
+    fn count_key(&self, t: &Tuple) {
+        if let Some(k) = t.get(self.key_field).as_int() {
+            if k >= 0 {
+                if let Some(c) = self.handle.counts.get(k as usize) {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
 }
 
 impl Operator for CountByKeySink {
@@ -119,12 +149,21 @@ impl Operator for CountByKeySink {
         self.handle
             .bytes
             .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
-        if let Some(k) = t.get(self.key_field).as_int() {
-            if k >= 0 {
-                if let Some(c) = self.handle.counts.get(k as usize) {
-                    c.fetch_add(1, Ordering::Relaxed);
-                }
-            }
+        self.count_key(&t);
+    }
+
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
+        if batch.is_empty() {
+            return;
+        }
+        self.handle
+            .total
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        self.handle
+            .bytes
+            .fetch_add(batch.byte_size() as u64, Ordering::Relaxed);
+        for t in batch.iter() {
+            self.count_key(t);
         }
     }
 }

@@ -6,7 +6,11 @@
 //! Python runs only at build time (`make artifacts`); at run time the
 //! rust binary is self-contained: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → compile once → execute many.
+//!
+//! The native path lives behind the `xla` cargo feature; the default
+//! build ships a stub so the engine (and its ML operator plumbing)
+//! compiles with zero external dependencies. See [`pjrt`].
 
 pub mod pjrt;
 
-pub use pjrt::{InferenceHandle, InferenceServer, Tensor};
+pub use pjrt::{InferenceHandle, InferenceServer, PjrtError, Tensor};

@@ -7,11 +7,29 @@
 //! workers talk to it through a cloneable [`InferenceHandle`] (request
 //! channel + per-request reply channel). Model compilation happens once
 //! per model name, on first use.
+//!
+//! The native backend is feature-gated: building with `--features xla`
+//! selects the real PJRT path (which additionally requires adding the
+//! `xla` crate to `[dependencies]` — it is not vendored, keeping the
+//! default build offline and dependency-free). Without the feature this
+//! module compiles a stub whose [`artifact_exists`] reports every model
+//! as absent, so ML tests and benches skip gracefully instead of
+//! failing.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::sync::mpsc::{channel, Sender};
+/// Error from the inference runtime.
+#[derive(Clone, Debug)]
+pub struct PjrtError(pub String);
+
+impl std::fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pjrt: {}", self.0)
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+/// Inference-runtime result type.
+pub type Result<T> = std::result::Result<T, PjrtError>;
 
 /// A host tensor crossing the server boundary.
 #[derive(Clone, Debug)]
@@ -20,124 +38,197 @@ pub enum Tensor {
     F32(Vec<f32>, Vec<i64>),
 }
 
-impl Tensor {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        Ok(match self {
-            Tensor::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
-            Tensor::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
-        })
+#[cfg(feature = "xla")]
+pub use backend::{artifact_exists, InferenceHandle, InferenceServer};
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{artifact_exists, InferenceHandle, InferenceServer};
+
+/// Real PJRT backend (requires the `xla` crate; see module docs).
+#[cfg(feature = "xla")]
+mod backend {
+    use super::{PjrtError, Result, Tensor};
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::mpsc::{channel, Sender};
+
+    fn err<E: std::fmt::Display>(ctx: &str, e: E) -> PjrtError {
+        PjrtError(format!("{ctx}: {e}"))
     }
-}
 
-struct Request {
-    model: String,
-    inputs: Vec<Tensor>,
-    reply: Sender<Result<Vec<f32>>>,
-}
-
-/// Cloneable client handle to the inference server.
-#[derive(Clone)]
-pub struct InferenceHandle {
-    tx: Sender<Request>,
-}
-
-impl InferenceHandle {
-    /// Run `model` (loaded from `<artifacts>/<model>.hlo.txt`) on the
-    /// inputs; returns the flattened f32 output of the first tuple
-    /// element.
-    pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<f32>> {
-        let (rtx, rrx) = channel();
-        self.tx
-            .send(Request { model: model.to_string(), inputs, reply: rtx })
-            .map_err(|_| anyhow!("inference server gone"))?;
-        rrx.recv().map_err(|_| anyhow!("inference server dropped reply"))?
-    }
-}
-
-/// The server: spawn once per process (or per benchmark run).
-pub struct InferenceServer {
-    handle: InferenceHandle,
-    thread: Option<std::thread::JoinHandle<()>>,
-}
-
-impl InferenceServer {
-    /// Start the server reading artifacts from `dir`.
-    pub fn start(dir: &str) -> InferenceServer {
-        let dir = PathBuf::from(dir);
-        let (tx, rx) = channel::<Request>();
-        let thread = std::thread::Builder::new()
-            .name("pjrt-server".into())
-            .spawn(move || {
-                let client = match xla::PjRtClient::cpu() {
-                    Ok(c) => c,
-                    Err(e) => {
-                        // Fail every request with the construction error.
-                        while let Ok(req) = rx.recv() {
-                            let _ = req
-                                .reply
-                                .send(Err(anyhow!("PJRT client init failed: {e}")));
-                        }
-                        return;
-                    }
-                };
-                let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
-                while let Ok(req) = rx.recv() {
-                    let result = serve(&client, &mut cache, &dir, &req);
-                    let _ = req.reply.send(result);
-                }
+    impl Tensor {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            Ok(match self {
+                Tensor::I32(data, dims) => xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| err("reshape", e))?,
+                Tensor::F32(data, dims) => xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| err("reshape", e))?,
             })
-            .expect("spawn pjrt server");
-        InferenceServer { handle: InferenceHandle { tx }, thread: Some(thread) }
-    }
-
-    pub fn handle(&self) -> InferenceHandle {
-        self.handle.clone()
-    }
-}
-
-impl Drop for InferenceServer {
-    fn drop(&mut self) {
-        // Close the request channel; the thread exits on recv error.
-        let (tx, _) = channel();
-        self.handle = InferenceHandle { tx };
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
         }
     }
-}
 
-fn serve(
-    client: &xla::PjRtClient,
-    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-    dir: &std::path::Path,
-    req: &Request,
-) -> Result<Vec<f32>> {
-    if !cache.contains_key(&req.model) {
-        let path = dir.join(format!("{}.hlo.txt", req.model));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("loading {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", req.model))?;
-        cache.insert(req.model.clone(), exe);
+    struct Request {
+        model: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Vec<f32>>>,
     }
-    let exe = cache.get(&req.model).unwrap();
-    let literals: Vec<xla::Literal> = req
-        .inputs
-        .iter()
-        .map(|t| t.to_literal())
-        .collect::<Result<_>>()?;
-    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-    // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-    let out = result.to_tuple1()?;
-    Ok(out.to_vec::<f32>()?)
+
+    /// Cloneable client handle to the inference server.
+    #[derive(Clone)]
+    pub struct InferenceHandle {
+        tx: Sender<Request>,
+    }
+
+    impl InferenceHandle {
+        /// Run `model` (loaded from `<artifacts>/<model>.hlo.txt`) on the
+        /// inputs; returns the flattened f32 output of the first tuple
+        /// element.
+        pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<f32>> {
+            let (rtx, rrx) = channel();
+            self.tx
+                .send(Request { model: model.to_string(), inputs, reply: rtx })
+                .map_err(|_| PjrtError("inference server gone".into()))?;
+            rrx.recv()
+                .map_err(|_| PjrtError("inference server dropped reply".into()))?
+        }
+    }
+
+    /// The server: spawn once per process (or per benchmark run).
+    pub struct InferenceServer {
+        handle: InferenceHandle,
+        thread: Option<std::thread::JoinHandle<()>>,
+    }
+
+    impl InferenceServer {
+        /// Start the server reading artifacts from `dir`.
+        pub fn start(dir: &str) -> InferenceServer {
+            let dir = PathBuf::from(dir);
+            let (tx, rx) = channel::<Request>();
+            let thread = std::thread::Builder::new()
+                .name("pjrt-server".into())
+                .spawn(move || {
+                    let client = match xla::PjRtClient::cpu() {
+                        Ok(c) => c,
+                        Err(e) => {
+                            // Fail every request with the construction error.
+                            while let Ok(req) = rx.recv() {
+                                let _ = req
+                                    .reply
+                                    .send(Err(err("PJRT client init failed", &e)));
+                            }
+                            return;
+                        }
+                    };
+                    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> =
+                        HashMap::new();
+                    while let Ok(req) = rx.recv() {
+                        let result = serve(&client, &mut cache, &dir, &req);
+                        let _ = req.reply.send(result);
+                    }
+                })
+                .expect("spawn pjrt server");
+            InferenceServer { handle: InferenceHandle { tx }, thread: Some(thread) }
+        }
+
+        pub fn handle(&self) -> InferenceHandle {
+            self.handle.clone()
+        }
+    }
+
+    impl Drop for InferenceServer {
+        fn drop(&mut self) {
+            // Close the request channel; the thread exits on recv error.
+            let (tx, _) = channel();
+            self.handle = InferenceHandle { tx };
+            if let Some(t) = self.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+
+    fn serve(
+        client: &xla::PjRtClient,
+        cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+        dir: &std::path::Path,
+        req: &Request,
+    ) -> Result<Vec<f32>> {
+        if !cache.contains_key(&req.model) {
+            let path = dir.join(format!("{}.hlo.txt", req.model));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| err(&format!("loading {}", path.display()), e))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| err(&format!("compiling {}", req.model), e))?;
+            cache.insert(req.model.clone(), exe);
+        }
+        let exe = cache.get(&req.model).unwrap();
+        let literals: Vec<xla::Literal> = req
+            .inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| err("execute", e))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err("to_literal", e))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| err("to_tuple1", e))?;
+        out.to_vec::<f32>().map_err(|e| err("to_vec", e))
+    }
+
+    /// Whether the artifacts directory has a given model (tests skip
+    /// gracefully when `make artifacts` has not run).
+    pub fn artifact_exists(dir: &str, model: &str) -> bool {
+        PathBuf::from(dir).join(format!("{model}.hlo.txt")).exists()
+    }
 }
 
-/// Whether the artifacts directory has a given model (tests skip
-/// gracefully when `make artifacts` has not run).
-pub fn artifact_exists(dir: &str, model: &str) -> bool {
-    PathBuf::from(dir).join(format!("{model}.hlo.txt")).exists()
+/// Stub backend for the default (offline, no-`xla`) build: the server
+/// starts, but every request fails and no artifact is ever reported as
+/// runnable — callers that gate on [`artifact_exists`] skip cleanly.
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::{PjrtError, Result, Tensor};
+
+    /// Cloneable client handle to the (stub) inference server.
+    #[derive(Clone, Default)]
+    pub struct InferenceHandle;
+
+    impl InferenceHandle {
+        /// Always fails: there is no compiled-in PJRT backend.
+        pub fn run(&self, model: &str, _inputs: Vec<Tensor>) -> Result<Vec<f32>> {
+            Err(PjrtError(format!(
+                "PJRT backend not compiled in (build with --features xla); \
+                 cannot run model {model}"
+            )))
+        }
+    }
+
+    /// Stub server: hands out failing handles.
+    #[derive(Default)]
+    pub struct InferenceServer {
+        handle: InferenceHandle,
+    }
+
+    impl InferenceServer {
+        pub fn start(_dir: &str) -> InferenceServer {
+            InferenceServer::default()
+        }
+
+        pub fn handle(&self) -> InferenceHandle {
+            self.handle.clone()
+        }
+    }
+
+    /// No backend → no artifact is runnable; gated tests and benches
+    /// skip.
+    pub fn artifact_exists(_dir: &str, _model: &str) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]
@@ -145,7 +236,8 @@ mod tests {
     use super::*;
 
     /// End-to-end smoke test against the classifier artifact; skipped
-    /// when artifacts have not been built.
+    /// when artifacts have not been built (always skipped on the stub
+    /// backend, whose `artifact_exists` is constantly false).
     #[test]
     fn classifier_artifact_runs() {
         let dir = "artifacts";
@@ -171,5 +263,11 @@ mod tests {
         let h = server.handle();
         let err = h.run("no_such_model", vec![Tensor::F32(vec![0.0], vec![1])]);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn pjrt_error_displays_context() {
+        let e = PjrtError("boom".into());
+        assert!(format!("{e}").contains("boom"));
     }
 }

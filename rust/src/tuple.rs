@@ -1,9 +1,17 @@
-//! The relational data model: [`Value`], [`Tuple`], [`Schema`].
+//! The relational data model: [`Value`], [`Tuple`], [`TupleBatch`],
+//! [`Schema`].
 //!
 //! The paper (§2.2.1) "focuses on the relational data model, in which
 //! data is modeled as bags of tuples". Strings are `Arc<str>` so that
 //! tuple clones along fan-out edges (replication, broadcast of heavy
 //! hitters) are cheap.
+//!
+//! The engine's unit of data movement is the [`TupleBatch`]: an
+//! immutable run of tuples behind an `Arc<[Tuple]>`. Batches are
+//! sliced (for the worker's resumption index and control-check
+//! chunking) and fanned out (broadcast, replicate, Reshape
+//! heavy-hitter split) without copying tuples — every view shares the
+//! one allocation.
 
 use std::fmt;
 use std::sync::Arc;
@@ -165,6 +173,119 @@ impl fmt::Display for Tuple {
     }
 }
 
+/// An immutable batch of tuples behind a shared allocation.
+///
+/// `clone` and [`slice`](TupleBatch::slice) are O(1): they bump the
+/// `Arc` and adjust the view bounds. This is what makes broadcast
+/// edges zero-copy — every destination receives a clone of the same
+/// batch — and what lets the worker chunk a batch at
+/// `ctrl_check_interval` without materializing sub-batches.
+#[derive(Clone, Debug)]
+pub struct TupleBatch {
+    data: Arc<[Tuple]>,
+    start: usize,
+    end: usize,
+}
+
+impl TupleBatch {
+    pub fn new(tuples: Vec<Tuple>) -> TupleBatch {
+        let data: Arc<[Tuple]> = tuples.into();
+        let end = data.len();
+        TupleBatch { data, start: 0, end }
+    }
+
+    pub fn empty() -> TupleBatch {
+        TupleBatch::new(Vec::new())
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> &Tuple {
+        &self.data[self.start + idx]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[Tuple] {
+        &self.data[self.start..self.end]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Tuple> {
+        self.as_slice().iter()
+    }
+
+    /// Zero-copy sub-view `[start, end)` of this view (shares storage).
+    pub fn slice(&self, start: usize, end: usize) -> TupleBatch {
+        assert!(start <= end && end <= self.len());
+        TupleBatch {
+            data: self.data.clone(),
+            start: self.start + start,
+            end: self.start + end,
+        }
+    }
+
+    /// Zero-copy suffix view from `start` (resumption-index slicing).
+    pub fn slice_from(&self, start: usize) -> TupleBatch {
+        self.slice(start, self.len())
+    }
+
+    /// Owned copy of the view's tuples.
+    pub fn to_vec(&self) -> Vec<Tuple> {
+        self.as_slice().to_vec()
+    }
+
+    /// Whether two batches share the same underlying allocation
+    /// (used to assert that fan-out edges did not copy tuples).
+    pub fn ptr_eq(a: &TupleBatch, b: &TupleBatch) -> bool {
+        Arc::ptr_eq(&a.data, &b.data)
+    }
+
+    /// Approximate in-memory size of the viewed tuples.
+    pub fn byte_size(&self) -> usize {
+        self.iter().map(Tuple::byte_size).sum()
+    }
+}
+
+impl Default for TupleBatch {
+    fn default() -> TupleBatch {
+        TupleBatch::empty()
+    }
+}
+
+impl From<Vec<Tuple>> for TupleBatch {
+    fn from(tuples: Vec<Tuple>) -> TupleBatch {
+        TupleBatch::new(tuples)
+    }
+}
+
+impl FromIterator<Tuple> for TupleBatch {
+    fn from_iter<I: IntoIterator<Item = Tuple>>(iter: I) -> TupleBatch {
+        TupleBatch::new(iter.into_iter().collect())
+    }
+}
+
+impl<'a> IntoIterator for &'a TupleBatch {
+    type Item = &'a Tuple;
+    type IntoIter = std::slice::Iter<'a, Tuple>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl PartialEq for TupleBatch {
+    fn eq(&self, other: &TupleBatch) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
 /// Field types for schema declaration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FieldType {
@@ -265,5 +386,45 @@ mod tests {
     fn byte_size_counts_strings() {
         let t = Tuple::new(vec![Value::str("abcd"), Value::Int(5)]);
         assert_eq!(t.byte_size(), 8 + (16 + 4) + 8);
+    }
+
+    fn int_batch(n: i64) -> TupleBatch {
+        (0..n).map(|i| Tuple::new(vec![Value::Int(i)])).collect()
+    }
+
+    #[test]
+    fn batch_clone_and_slice_share_storage() {
+        let b = int_batch(10);
+        let c = b.clone();
+        assert!(TupleBatch::ptr_eq(&b, &c));
+        let s = b.slice(2, 7);
+        assert!(TupleBatch::ptr_eq(&b, &s));
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.get(0).get(0).as_int(), Some(2));
+        // Slicing a slice stays relative to the view, not the storage.
+        let s2 = s.slice_from(3);
+        assert_eq!(s2.len(), 2);
+        assert_eq!(s2.get(0).get(0).as_int(), Some(5));
+        assert!(TupleBatch::ptr_eq(&b, &s2));
+    }
+
+    #[test]
+    fn batch_equality_is_by_content() {
+        let a = int_batch(4);
+        let b = int_batch(4);
+        assert!(!TupleBatch::ptr_eq(&a, &b));
+        assert_eq!(a, b);
+        assert_ne!(a, a.slice(0, 3));
+    }
+
+    #[test]
+    fn batch_empty_and_iter() {
+        assert!(TupleBatch::empty().is_empty());
+        assert_eq!(TupleBatch::default().len(), 0);
+        let b = int_batch(3);
+        let vals: Vec<i64> = b.iter().map(|t| t.get(0).as_int().unwrap()).collect();
+        assert_eq!(vals, vec![0, 1, 2]);
+        assert_eq!(b.to_vec().len(), 3);
+        assert_eq!(b.byte_size(), 3 * 16);
     }
 }

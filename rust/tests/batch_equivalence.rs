@@ -1,0 +1,155 @@
+//! Batch/tuple equivalence regression tests: the batch-at-a-time data
+//! plane must produce sink results identical (same multiset) to the
+//! per-tuple path at any batch size, and keep the paper's sub-second
+//! pause guarantee (§2.4) at large batches.
+
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
+use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::operators::{
+    AggKind, CollectSink, CountByKeySink, GroupByFinal, GroupByPartial, HashJoin, SinkHandle,
+};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::VecSource;
+
+/// filter → join (broadcast build) → two-layer group-by → sink.
+///
+/// * probe: (i, i % 20) for i in 0..4000, filtered to i < 3000;
+/// * build: (k, k * 100) for k in 0..20, broadcast to every join
+///   worker (exercising the zero-copy fan-out path);
+/// * join on k, then SUM(k * 100) grouped by k.
+fn run_workflow(batch_size: usize, ctrl_check_interval: usize) -> Vec<(i64, f64)> {
+    let mut w = Workflow::new();
+    let build_scan = w.add(OpSpec::source("dim_scan", 1, |idx, parts| {
+        let rows: Vec<Tuple> = (0..20i64)
+            .filter(|k| (*k as usize) % parts == idx)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(k * 100)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let probe_scan = w.add(OpSpec::source("probe_scan", 2, |idx, parts| {
+        let rows: Vec<Tuple> = (0..4000usize)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64), Value::Int((i % 20) as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary("filter", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(0, Cmp::Lt, Value::Int(3000)))
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        3,
+        [PartitionScheme::Broadcast, PartitionScheme::Hash { key: 1 }],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 1)),
+    ));
+    let partial = w.add(OpSpec::unary(
+        "gb_partial",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(GroupByPartial::new(0, 1, AggKind::Sum)),
+    ));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(build_scan, join, 0);
+    w.connect(probe_scan, filter, 0);
+    w.connect(filter, join, 1);
+    w.connect(join, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+
+    let cfg = Config {
+        batch_size,
+        ctrl_check_interval,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    exec.join();
+    let mut rows: Vec<(i64, f64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    rows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rows
+}
+
+#[test]
+fn sink_results_identical_across_batch_sizes() {
+    // Expected: keys 0..20, each hit by 150 filtered probe tuples, so
+    // SUM(k * 100) = 150 * k * 100.
+    let expected: Vec<(i64, f64)> =
+        (0..20i64).map(|k| (k, (150 * k * 100) as f64)).collect();
+    let per_tuple = run_workflow(1, 1);
+    assert_eq!(per_tuple, expected, "per-tuple reference run is wrong");
+    for (batch, interval) in [(32usize, 32usize), (1024, 256)] {
+        let got = run_workflow(batch, interval);
+        assert_eq!(
+            got, per_tuple,
+            "batch_size={batch} interval={interval} diverged from per-tuple results"
+        );
+    }
+}
+
+#[test]
+fn sub_second_pause_at_batch_1024() {
+    let total = 400_000usize;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64), Value::Int((i % 10) as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary("filter", 4, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(0, Cmp::Ge, Value::Int(0)))
+    }));
+    let handle = SinkHandle::new(10);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CountByKeySink::new(h2.clone(), 1))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, sink, 0);
+
+    let cfg = Config {
+        batch_size: 1024,
+        ctrl_check_interval: 1024,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    std::thread::sleep(Duration::from_millis(20));
+    let latency = exec.pause();
+    assert!(
+        latency < Duration::from_secs(1),
+        "pause took {latency:?} at batch 1024 (paper: sub-second)"
+    );
+    // Output stops while paused (modulo already-buffered batches).
+    let at_pause = handle.total();
+    std::thread::sleep(Duration::from_millis(100));
+    let drained = handle.total();
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(
+        handle.total(),
+        drained,
+        "sink kept growing while paused (started at {at_pause})"
+    );
+    exec.resume();
+    exec.join();
+    assert_eq!(handle.total() as usize, total);
+}
