@@ -6,11 +6,12 @@
 //! cargo bench --bench bench_perf
 //! ```
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use texera_amber::config::Config;
 use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
 use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::operators::group_by::{AggKind, GroupByFinal, GroupByPartial};
 use texera_amber::operators::{CollectSink, SinkHandle};
 use texera_amber::engine::partitioner::{PartitionScheme as PS, Partitioner};
 use texera_amber::tuple::{Tuple, Value};
@@ -18,7 +19,9 @@ use texera_amber::workloads::{TupleSource, VecSource};
 
 fn main() {
     println!("=== bench_perf: hot-path microbenchmarks ===\n");
-    throughput_vs_batch_size();
+    let (rows, baseline) = throughput_vs_batch_size();
+    let elastic = elastic_scaling();
+    write_bench_json(&rows, baseline, &elastic);
     routing_cost();
     pause_latency();
     pjrt_classifier_throughput();
@@ -63,7 +66,7 @@ fn pipeline(total: usize, workers: usize, batch: usize, ctrl_interval: usize) ->
 /// own message, chunk length 1); the other rows chunk at the batch
 /// size. Results land in BENCH_perf.json so the perf trajectory is
 /// tracked across PRs.
-fn throughput_vs_batch_size() {
+fn throughput_vs_batch_size() -> (Vec<(usize, usize, f64)>, f64) {
     println!("--- engine throughput vs batch size ---");
     println!("{:>8} {:>10} {:>16} {:>10}", "batch", "interval", "ktuples/s", "vs b=1");
     let total = 1_000_000;
@@ -87,12 +90,108 @@ fn throughput_vs_batch_size() {
         );
         rows.push((batch, interval, best));
     }
-    write_bench_json(&rows, baseline);
     println!();
+    (rows, baseline)
+}
+
+/// Elastic-scaling result: throughput of the scaled operator before and
+/// after a mid-run 2→4 scale-up, plus the fence duration.
+struct ElasticBench {
+    workers_before: usize,
+    workers_after: usize,
+    before_tps: f64,
+    after_tps: f64,
+    fence_ms: f64,
+}
+
+/// Mid-run 2→4 scale-up on a skewed group-by workload (90% of tuples
+/// hit one hot key; the partial layer carries a latency-bound per-tuple
+/// cost, the paper's expensive-UDF shape, so added workers absorb it
+/// even on one core). Throughput is the partial layer's processed rate
+/// over a fixed window before vs. after the scale.
+fn elastic_scaling() -> ElasticBench {
+    println!("--- elastic scaling: mid-run 2->4 scale-up (skewed group-by) ---");
+    let total = 150_000usize;
+    const COST_NS: u64 = 40_000;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                // 90% hot key 0, the rest spread over 100 keys.
+                let key = if i % 10 != 0 { 0 } else { (i % 100) as i64 + 1 };
+                Tuple::new(vec![Value::Int(key), Value::Int(1)])
+            })
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let partial = w.add(OpSpec::unary(
+        "gb_partial",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(GroupByPartial::new(0, 1, AggKind::Sum).with_cost(COST_NS)),
+    ));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    let cfg = Config {
+        batch_size: 400,
+        // Chunked control checks: the artificial cost sleeps once per
+        // 64-tuple chunk, so sleep granularity doesn't distort rates.
+        ctrl_check_interval: 64,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    let processed = |exec: &Execution| -> u64 {
+        exec.stats()
+            .iter()
+            .filter(|(id, _)| id.op == partial)
+            .map(|(_, s)| s.processed)
+            .sum()
+    };
+    let window = Duration::from_millis(400);
+    std::thread::sleep(Duration::from_millis(100)); // warm-up
+    let p0 = processed(&exec);
+    std::thread::sleep(window);
+    let p1 = processed(&exec);
+    let before_tps = (p1 - p0) as f64 / window.as_secs_f64();
+    let fence = exec.scale_operator(partial, 4);
+    let p2 = processed(&exec);
+    std::thread::sleep(window);
+    let p3 = processed(&exec);
+    let after_tps = (p3 - p2) as f64 / window.as_secs_f64();
+    exec.join();
+    let speedup = if before_tps > 0.0 { after_tps / before_tps } else { 0.0 };
+    println!(
+        "2 workers: {:.0} tuples/s | 4 workers: {:.0} tuples/s | {speedup:.2}x | fence {:.1} ms",
+        before_tps,
+        after_tps,
+        fence.as_secs_f64() * 1e3
+    );
+    println!("(sink groups: {})\n", handle.tuples().len());
+    ElasticBench {
+        workers_before: 2,
+        workers_after: 4,
+        before_tps,
+        after_tps,
+        fence_ms: fence.as_secs_f64() * 1e3,
+    }
 }
 
 /// Write BENCH_perf.json (machine-readable perf trajectory).
-fn write_bench_json(rows: &[(usize, usize, f64)], baseline: f64) {
+fn write_bench_json(rows: &[(usize, usize, f64)], baseline: f64, elastic: &ElasticBench) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"throughput_vs_batch_size\",\n");
     s.push_str("  \"pipeline\": \"scan->filter->sink (2 workers, 1M tuples)\",\n");
@@ -105,7 +204,29 @@ fn write_bench_json(rows: &[(usize, usize, f64)], baseline: f64) {
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    let es = if elastic.before_tps > 0.0 {
+        elastic.after_tps / elastic.before_tps
+    } else {
+        0.0
+    };
+    s.push_str("  \"elastic_scaling\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan->gb_partial(40us/tuple)->gb_final->sink, 90% hot key\",\n",
+    );
+    s.push_str(&format!(
+        "    \"workers_before\": {}, \"workers_after\": {},\n",
+        elastic.workers_before, elastic.workers_after
+    ));
+    s.push_str(&format!(
+        "    \"tuples_per_sec_before\": {:.0}, \"tuples_per_sec_after\": {:.0},\n",
+        elastic.before_tps, elastic.after_tps
+    ));
+    s.push_str(&format!(
+        "    \"post_scale_speedup\": {es:.2}, \"fence_ms\": {:.1}\n  }}\n",
+        elastic.fence_ms
+    ));
+    s.push_str("}\n");
     match std::fs::write("BENCH_perf.json", &s) {
         Ok(()) => println!("(wrote BENCH_perf.json)"),
         Err(e) => println!("(could not write BENCH_perf.json: {e})"),

@@ -78,6 +78,17 @@ pub struct Config {
     /// estimator.
     pub reshape_sample_window: usize,
 
+    // ---- elastic scaling (engine::scale) ----
+    /// Autoscale: a worker queue at/above this marks the operator
+    /// overloaded (scale-up signal, in tuples).
+    pub autoscale_high_queue: f64,
+    /// Autoscale: total queued tuples at/below this marks the operator
+    /// idle (scale-down signal).
+    pub autoscale_low_queue: f64,
+    /// Autoscale: consecutive ticks a signal must persist before the
+    /// plugin requests a scale (also sizes the post-scale cooldown).
+    pub autoscale_sustain_ticks: u32,
+
     // ---- Maestro (Ch. 4) ----
     /// Cost-model constant: per-tuple processing cost (relative units).
     pub maestro_tuple_cost: f64,
@@ -112,6 +123,9 @@ impl Default for Config {
             reshape_metric: WorkloadMetric::QueueSize,
             reshape_busy_threshold: 0.8,
             reshape_sample_window: 64,
+            autoscale_high_queue: 512.0,
+            autoscale_low_queue: 4.0,
+            autoscale_sustain_ticks: 5,
             maestro_tuple_cost: 1.0,
             maestro_mat_byte_cost: 0.01,
             seed: 0xA3BE12,

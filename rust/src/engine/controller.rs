@@ -15,16 +15,18 @@
 
 use crate::config::Config;
 use crate::engine::breakpoint::{BpAction, GlobalBreakpoint};
-use crate::engine::channel::{mailbox, ControlInbox, DataSender, WorkerGauges};
+use crate::engine::channel::{mailbox, ControlInbox, DataSender, Mailbox, WorkerGauges};
 use crate::engine::dag::Workflow;
 use crate::engine::fault::{Checkpoint, LogRecord, ReplayLog};
 use crate::engine::message::{
-    BreakpointTarget, ControlMessage, LocalPredicate, WorkerEvent, WorkerId, WorkerStats,
+    BreakpointTarget, ControlMessage, DataEvent, DataMessage, LocalPredicate, WorkerEvent,
+    WorkerId, WorkerStats,
 };
-use crate::engine::operator::OpPatch;
-use crate::engine::partitioner::Partitioner;
+use crate::engine::operator::{OpPatch, OpState};
+use crate::engine::partitioner::{PartitionScheme, Partitioner};
 use crate::engine::worker::{run_worker, OutputEdge, WorkerContext};
 use crate::tuple::Tuple;
+use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -51,6 +53,11 @@ pub enum Command {
     AwaitDone { reply: Sender<ExecSummary> },
     SendControl { to: WorkerId, msg: ControlMessage },
     TrackKeys { op: usize, on: bool },
+    /// Elastic scaling (engine::scale): change `op`'s parallelism to
+    /// `new_workers` inside one fenced epoch. Replies with the fence
+    /// duration (zero if the request was refused — see the `do_scale`
+    /// guards).
+    Scale { op: usize, new_workers: usize, reply: Sender<Duration> },
     Shutdown,
 }
 
@@ -86,7 +93,7 @@ impl ExecSummary {
     }
 }
 
-/// Interface the coordinator exposes to plugins (Reshape).
+/// Interface the coordinator exposes to plugins (Reshape, autoscale).
 pub struct PluginCtx<'a> {
     pub workflow: &'a Workflow,
     pub gauges: &'a HashMap<WorkerId, Arc<WorkerGauges>>,
@@ -95,6 +102,9 @@ pub struct PluginCtx<'a> {
     pub started: Instant,
     /// Workers that have completed (skew tests skip them).
     pub completed: &'a HashSet<WorkerId>,
+    /// Elastic-scaling requests queued by the plugin; the coordinator
+    /// drains and executes them after the plugin callback returns.
+    scale_requests: &'a RefCell<Vec<(usize, usize)>>,
 }
 
 impl<'a> PluginCtx<'a> {
@@ -127,6 +137,13 @@ impl<'a> PluginCtx<'a> {
 
     pub fn workers_of(&self, op: usize) -> usize {
         self.workflow.ops[op].workers
+    }
+
+    /// Queue an elastic-scaling request: set `op`'s parallelism to
+    /// `new_workers`. Executed by the coordinator (one fenced epoch per
+    /// request) after the current plugin callback returns.
+    pub fn request_scale(&self, op: usize, new_workers: usize) {
+        self.scale_requests.borrow_mut().push((op, new_workers));
     }
 }
 
@@ -165,9 +182,25 @@ struct Coordinator {
     rx: Receiver<CoordMsg>,
     started: Instant,
 
+    // Elastic scaling (engine::scale): the coordinator retains every
+    // worker's data sender and the event-channel template so it can
+    // spawn workers and re-inject surrendered input mid-run.
+    senders: HashMap<WorkerId, DataSender>,
+    ev_tx: Sender<WorkerEvent>,
+    /// States + pending input collected from the scaled operator's old
+    /// workers during a fence (keyed by worker).
+    scale_collect: HashMap<WorkerId, (OpState, Vec<DataEvent>)>,
+    /// Commands that arrived mid-fence, replayed after it closes.
+    deferred: Vec<Command>,
+    /// Scale requests queued by the coordinator plugin.
+    scale_requests: RefCell<Vec<(usize, usize)>>,
+
     // Pause bookkeeping.
     pause_outstanding: HashSet<WorkerId>,
     pause_reply: Option<(Sender<Duration>, Instant)>,
+    /// The driver explicitly paused the workflow (a scale fence must
+    /// not resume it on exit).
+    user_paused: bool,
 
     // Completion.
     completed: HashSet<WorkerId>,
@@ -183,6 +216,9 @@ struct Coordinator {
     port_waiters: Vec<(usize, usize, Sender<()>)>,
 
     // Breakpoints.
+    /// Last local-breakpoint predicate installed per operator, so
+    /// workers spawned mid-run by elastic scaling inherit it.
+    local_bps: HashMap<usize, Option<LocalPredicate>>,
     next_bp_id: u64,
     breakpoints: HashMap<u64, BpState>,
     bp_waiters: Vec<Sender<BpHit>>,
@@ -362,6 +398,8 @@ impl Execution {
                     ft_log: config.ft_log,
                     snapshot,
                     scatter_merge: op.scatter_merge,
+                    initial_eofs: None,
+                    start_paused: false,
                 };
                 let builder = op.builder.clone();
                 let workers = op.workers;
@@ -375,8 +413,10 @@ impl Execution {
                 );
             }
         }
-        drop(senders);
-        drop(ev_tx);
+        // The coordinator keeps `senders` and `ev_tx`: elastic scaling
+        // spawns workers and re-injects surrendered input mid-run.
+        // (Workers therefore never observe a data-channel disconnect
+        // before `Die`, which the teardown path already sends.)
 
         // Replay the control log (recovery).
         if !log.is_empty() {
@@ -404,8 +444,14 @@ impl Execution {
             handles,
             rx,
             started,
+            senders,
+            ev_tx,
+            scale_collect: HashMap::new(),
+            deferred: Vec::new(),
+            scale_requests: RefCell::new(Vec::new()),
             pause_outstanding: HashSet::new(),
             pause_reply: None,
+            user_paused: false,
             completed: HashSet::new(),
             total_workers,
             final_stats: Vec::new(),
@@ -415,6 +461,7 @@ impl Execution {
             ops_waiters: Vec::new(),
             port_completed: HashMap::new(),
             port_waiters: Vec::new(),
+            local_bps: HashMap::new(),
             next_bp_id: 1,
             breakpoints: HashMap::new(),
             bp_waiters: Vec::new(),
@@ -546,6 +593,18 @@ impl Execution {
         self.cmd(Command::TrackKeys { op, on });
     }
 
+    /// Elastic scaling: change `op`'s worker count to `new_workers`
+    /// without stopping the workflow (engine::scale). Blocks until the
+    /// fenced epoch completes and returns its duration; returns
+    /// `Duration::ZERO` when the request was refused (unknown/source/
+    /// scatter-merge operator, unchanged count, or the operator already
+    /// has completed workers).
+    pub fn scale_operator(&self, op: usize, new_workers: usize) -> Duration {
+        let (tx, rx) = channel();
+        self.cmd(Command::Scale { op, new_workers, reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
     /// Send a raw control message (tests, baselines).
     pub fn send_control(&self, to: WorkerId, msg: ControlMessage) {
         self.cmd(Command::SendControl { to, msg });
@@ -621,6 +680,7 @@ impl Coordinator {
                 config: &self.config,
                 started: self.started,
                 completed: &self.completed,
+                scale_requests: &self.scale_requests,
             };
             plugin.tick(&ctx);
         }
@@ -638,6 +698,7 @@ impl Coordinator {
                 config: &self.config,
                 started: self.started,
                 completed: &self.completed,
+                scale_requests: &self.scale_requests,
             };
             plugin.on_event(ev, &ctx);
         }
@@ -843,6 +904,9 @@ impl Coordinator {
                     self.maybe_done();
                 }
             }
+            WorkerEvent::ScaleState { worker, state, pending } => {
+                self.scale_collect.insert(worker, (state, pending));
+            }
             WorkerEvent::Log(rec) => {
                 self.replay_log.append(rec);
             }
@@ -872,8 +936,12 @@ impl Coordinator {
 
     fn handle_cmd(&mut self, cmd: Command) {
         match cmd {
-            Command::Pause { reply } => self.begin_pause(Some(reply)),
+            Command::Pause { reply } => {
+                self.user_paused = true;
+                self.begin_pause(Some(reply));
+            }
             Command::Resume { reply } => {
+                self.user_paused = false;
                 self.broadcast_all(ControlMessage::Resume);
                 let _ = reply.send(());
             }
@@ -895,6 +963,7 @@ impl Coordinator {
                 let _ = reply.send(out);
             }
             Command::SetLocalBp { op, pred, reply } => {
+                self.local_bps.insert(op, pred.clone());
                 self.broadcast_op(op, ControlMessage::SetLocalBreakpoint(pred));
                 let _ = reply.send(());
             }
@@ -1005,6 +1074,11 @@ impl Coordinator {
                 }
             }
             Command::SendControl { to, msg } => self.send_control(to, msg),
+            Command::Scale { op, new_workers, reply } => {
+                let d = self.do_scale(op, new_workers);
+                let _ = reply.send(d);
+                self.drain_deferred();
+            }
             Command::TrackKeys { op, on } => {
                 for w in 0..self.workflow.ops[op].workers {
                     if let Some(h) = self.handles.get(&WorkerId::new(op, w)) {
@@ -1014,6 +1088,412 @@ impl Coordinator {
             }
             Command::Shutdown => {
                 self.shutdown = true;
+            }
+        }
+    }
+
+    // ---- elastic scaling (engine::scale) -------------------------------
+
+    /// Pump one message while a fence is open: worker events are handled
+    /// normally (pause acks, completions, scale-state replies); driver
+    /// commands are deferred until the fence closes so the epoch stays
+    /// atomic with respect to the control API.
+    fn pump_fence(&mut self) {
+        match self.rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(CoordMsg::Cmd(c)) => self.deferred.push(c),
+            Ok(CoordMsg::Event(e)) => self.handle_event(e),
+            Err(_) => {}
+        }
+    }
+
+    /// Replay commands that arrived while a fence was open.
+    fn drain_deferred(&mut self) {
+        while !self.deferred.is_empty() {
+            let cmds: Vec<Command> = self.deferred.drain(..).collect();
+            for c in cmds {
+                self.handle_cmd(c);
+            }
+        }
+    }
+
+    /// Live workers of `op` (they will each send one `End` downstream,
+    /// either already — completed — or eventually).
+    fn live_workers_of(&self, op: usize) -> usize {
+        self.handles.keys().filter(|w| w.op == op).count()
+    }
+
+    /// Expected `End` count per input port of `op`, from the *live*
+    /// upstream worker sets (completed workers already sent theirs,
+    /// alive ones will; retired workers never do).
+    fn expected_ends(&self, op: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.workflow.ops[op].input_partitioning.len()];
+        for e in self.workflow.in_edges(op) {
+            counts[e.to_port] += self.live_workers_of(e.from);
+        }
+        counts
+    }
+
+    /// `End`s a worker of `op` spawned *now* will never receive: one per
+    /// already-completed upstream worker (those sent `End` to the old
+    /// receiver set only).
+    fn missed_ends(&self, op: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.workflow.ops[op].input_partitioning.len()];
+        for e in self.workflow.in_edges(op) {
+            counts[e.to_port] +=
+                self.completed.iter().filter(|w| w.op == e.from).count();
+        }
+        counts
+    }
+
+    /// Change `op`'s parallelism to `new_n` inside one fenced epoch:
+    ///
+    /// 1. **Fence** — pause every worker and await all acks; upstream
+    ///    senders flush on pause, so all in-flight data is parked in
+    ///    receiver channels/stashes.
+    /// 2. **Unplug** — each old worker of `op` surrenders its operator
+    ///    state and unprocessed input (`ExtractScaleState` →
+    ///    `ScaleState`).
+    /// 3. **Retire/spawn** — worker threads + mailboxes are destroyed or
+    ///    created; range bounds are recomputed for the new receiver set.
+    /// 4. **Re-hash** — every surrendered state shard is split by
+    ///    `scope % new_n` and installed on its new owner; surrendered
+    ///    input is re-routed through a fresh partitioner.
+    /// 5. **Rewire** — upstream partitioners swap to the new receiver
+    ///    set, siblings swap peer senders, downstream EOF accounting
+    ///    updates.
+    /// 6. **Resume** — unless the driver had explicitly paused.
+    ///
+    /// Refused (returns `Duration::ZERO`) for source operators (their
+    /// input partitions are fixed at plan time), scatter-merge
+    /// operators (the EOF peer barrier counts a worker set frozen at
+    /// deploy), operators with completed workers (the EOF cascade is
+    /// already under way), and unknown ops / unchanged counts.
+    fn do_scale(&mut self, op: usize, new_n: usize) -> Duration {
+        let t0 = Instant::now();
+        if self.shutdown
+            || op >= self.workflow.ops.len()
+            || new_n == 0
+            || new_n == self.workflow.ops[op].workers
+            || self.workflow.ops[op].is_source
+            || self.workflow.ops[op].scatter_merge
+            || self.completed.iter().any(|w| w.op == op)
+            || self.workflow.ops[op]
+                .input_partitioning
+                .iter()
+                .any(|s| matches!(s, PartitionScheme::Broadcast))
+        {
+            return Duration::ZERO;
+        }
+        let old_n = self.workflow.ops[op].workers;
+        let deadline = Instant::now() + Duration::from_secs(30);
+
+        // Let any in-flight pause/checkpoint handshake settle first so
+        // the fence does not interleave with it.
+        while (self.checkpoint_reply.is_some()
+            || !self.snapshot_outstanding.is_empty()
+            || !self.pause_outstanding.is_empty())
+            && Instant::now() < deadline
+        {
+            self.pump_fence();
+        }
+
+        // (1) Fence: pause-all, await acks (completed workers ack too).
+        self.pause_outstanding = self.handles.keys().copied().collect();
+        self.broadcast_all(ControlMessage::Pause);
+        while !self.pause_outstanding.is_empty() && Instant::now() < deadline {
+            self.pump_fence();
+        }
+        // Abort (nothing has been touched yet) if the fence could not
+        // close: a worker failed to ack in time, or a target worker
+        // completed between the guard check and the fence closing (its
+        // results are already emitted, so the epoch can't be exact).
+        if !self.pause_outstanding.is_empty()
+            || self.completed.iter().any(|w| w.op == op)
+        {
+            self.pause_outstanding.clear();
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+
+        // (2) Unplug the old worker set.
+        self.scale_collect.clear();
+        let old_ids: Vec<WorkerId> = (0..old_n)
+            .map(|w| WorkerId::new(op, w))
+            .filter(|id| self.handles.contains_key(id))
+            .collect();
+        for id in &old_ids {
+            self.send_control(*id, ControlMessage::ExtractScaleState);
+        }
+        while self.scale_collect.len() < old_ids.len() && Instant::now() < deadline {
+            self.pump_fence();
+        }
+        // Abort-and-restore if any worker failed to surrender in time:
+        // hand every collected state/pending back to its original owner
+        // rather than proceed with a partial (silently lossy) epoch.
+        if self.scale_collect.len() < old_ids.len() {
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+
+        // (3) Update the plan-time facts: worker count and range bounds.
+        self.workflow.ops[op].workers = new_n;
+        for scheme in self.workflow.ops[op].input_partitioning.iter_mut() {
+            if let PartitionScheme::Range { bounds, .. } = scheme {
+                let nb = crate::engine::scale::rescale_bounds(bounds, new_n);
+                *bounds = nb;
+            }
+        }
+        // Retire surplus workers (none completed — guarded above), or
+        // create mailboxes + spawn threads for the new ones. New workers
+        // start paused and join the closing Resume with everyone else.
+        if new_n < old_n {
+            for w in new_n..old_n {
+                let id = WorkerId::new(op, w);
+                self.send_control(id, ControlMessage::Die);
+                if let Some(mut h) = self.handles.remove(&id) {
+                    if let Some(t) = h.thread.take() {
+                        let _ = t.join();
+                    }
+                    self.total_workers -= 1;
+                }
+                self.senders.remove(&id);
+            }
+        } else {
+            let mut mailboxes = Vec::new();
+            for w in old_n..new_n {
+                let id = WorkerId::new(op, w);
+                let (tx, mb) = mailbox(self.config.data_queue_cap);
+                self.senders.insert(id, tx);
+                mailboxes.push((w, mb));
+            }
+            for (w, mb) in mailboxes {
+                self.spawn_scaled_worker(op, w, mb);
+                self.total_workers += 1;
+            }
+        }
+        let new_senders: Vec<DataSender> = (0..new_n)
+            .map(|w| self.senders[&WorkerId::new(op, w)].clone())
+            .collect();
+        let schemes = self.workflow.ops[op].input_partitioning.clone();
+
+        // (4a) Re-hash the surrendered state. Shards are split per
+        // source worker and merged by the *operator* on the receiving
+        // side (`install_state`), so kind-aware combination (min/max,
+        // avg pairs, sorted runs) stays with the operator.
+        let mut collected: Vec<(WorkerId, (OpState, Vec<DataEvent>))> =
+            self.scale_collect.drain().collect();
+        collected.sort_by_key(|(id, _)| *id);
+        let mut pending_events: Vec<(WorkerId, Vec<DataEvent>)> = Vec::new();
+        for (id, (state, pending)) in collected {
+            self.install_state_shards(op, new_n, state);
+            pending_events.push((id, pending));
+        }
+        // (4b) Re-route the surrendered input through a fresh
+        // partitioner per port. In-flight migrated state merges like
+        // extracted state; stale epoch markers are dropped (overlays
+        // are cleared below); an `End` surrendered by a survivor is
+        // re-delivered to that same survivor — its per-port EOF count
+        // is still expecting it.
+        let mut routers: Vec<Partitioner> = schemes
+            .iter()
+            .map(|s| Partitioner::new(s.clone(), new_n, 0))
+            .collect();
+        let mut ends: Vec<(WorkerId, DataEvent)> = Vec::new();
+        let mut batches: Vec<Vec<Vec<Tuple>>> =
+            vec![vec![Vec::new(); schemes.len()]; new_n];
+        for (src, pending) in pending_events {
+            for ev in pending {
+                match ev {
+                    DataEvent::Batch(msg) => {
+                        for t in msg.batch.iter() {
+                            let dest = routers[msg.port].route(t);
+                            batches[dest][msg.port].push(t.clone());
+                        }
+                    }
+                    DataEvent::State { state, .. } => {
+                        self.install_state_shards(op, new_n, state);
+                    }
+                    DataEvent::End { from, port } if src.idx < new_n => {
+                        ends.push((src, DataEvent::End { from, port }));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for (dest, ports) in batches.into_iter().enumerate() {
+            for (port, tuples) in ports.into_iter().enumerate() {
+                if tuples.is_empty() {
+                    continue;
+                }
+                let _ = self.senders[&WorkerId::new(op, dest)].send(DataEvent::Batch(
+                    DataMessage {
+                        from: WorkerId::new(op, dest),
+                        port,
+                        seq: 0,
+                        batch: tuples.into(),
+                    },
+                ));
+            }
+        }
+        for (to, ev) in ends {
+            let _ = self.senders[&to].send(ev);
+        }
+
+        // (5) Rewire the topology around the new worker set.
+        for w in 0..new_n {
+            self.send_control(
+                WorkerId::new(op, w),
+                ControlMessage::RescaleSelf { peers: new_senders.clone(), workers: new_n },
+            );
+        }
+        let mut upstream_ops: Vec<usize> =
+            self.workflow.in_edges(op).iter().map(|e| e.from).collect();
+        upstream_ops.sort_unstable();
+        upstream_ops.dedup();
+        let up_workers: Vec<WorkerId> = self
+            .handles
+            .keys()
+            .filter(|w| upstream_ops.contains(&w.op))
+            .copied()
+            .collect();
+        for id in up_workers {
+            self.send_control(
+                id,
+                ControlMessage::RescaleEdge {
+                    target_op: op,
+                    receivers: new_n,
+                    port_schemes: schemes.clone(),
+                    senders: new_senders.clone(),
+                },
+            );
+        }
+        let downstream: Vec<(usize, usize)> = self
+            .workflow
+            .out_edges(op)
+            .iter()
+            .map(|e| (e.to, e.to_port))
+            .collect();
+        for (dst, port) in downstream {
+            let count = self.expected_ends(dst)[port];
+            for w in 0..self.workflow.ops[dst].workers {
+                self.send_control(
+                    WorkerId::new(dst, w),
+                    ControlMessage::UpdateUpstreamCount { port, count },
+                );
+            }
+        }
+
+        // (6) Close the epoch. `FenceResume` undoes only the fence's
+        // pause, so a worker that was parked at a breakpoint or a
+        // global-breakpoint target before the fence stays parked.
+        if !self.user_paused {
+            self.broadcast_all(ControlMessage::FenceResume);
+        }
+        self.maybe_done();
+        t0.elapsed()
+    }
+
+    /// Abandon an open fence: return every surrendered state/pending
+    /// set to its original owner and lift the fence pause. Leaves the
+    /// workflow exactly as before the scale attempt.
+    fn abort_scale(&mut self) {
+        let collected: Vec<(WorkerId, (OpState, Vec<DataEvent>))> =
+            self.scale_collect.drain().collect();
+        for (id, (state, pending)) in collected {
+            if !state.is_empty() {
+                self.send_control(id, ControlMessage::InstallState(state));
+            }
+            if let Some(s) = self.senders.get(&id) {
+                for ev in pending {
+                    let _ = s.send(ev);
+                }
+            }
+        }
+        if !self.user_paused {
+            self.broadcast_all(ControlMessage::FenceResume);
+        }
+    }
+
+    /// Split one surrendered state by hash owner and install each
+    /// non-empty shard on its new worker.
+    fn install_state_shards(&self, op: usize, new_n: usize, state: OpState) {
+        for (dest, shard) in state.split_by_hash(new_n).into_iter().enumerate() {
+            if !shard.is_empty() {
+                self.send_control(
+                    WorkerId::new(op, dest),
+                    ControlMessage::InstallState(shard),
+                );
+            }
+        }
+    }
+
+    /// Spawn one additional worker of `op` mid-run (scale-up). Mirrors
+    /// the deploy-time spawn in `start_inner`, but computes upstream
+    /// EOF accounting from the *live* worker sets and seeds the EOFs
+    /// the new worker can never receive from already-completed
+    /// upstream workers.
+    fn spawn_scaled_worker(&mut self, op_idx: usize, w: usize, mb: Mailbox) {
+        let spec = &self.workflow.ops[op_idx];
+        let new_n = spec.workers;
+        let id = WorkerId::new(op_idx, w);
+        let mut outputs = Vec::new();
+        for e in self.workflow.out_edges(op_idx) {
+            let dst = &self.workflow.ops[e.to];
+            let scheme = dst.input_partitioning[e.to_port].clone();
+            let dst_senders: Vec<DataSender> = (0..dst.workers)
+                .map(|d| self.senders[&WorkerId::new(e.to, d)].clone())
+                .collect();
+            outputs.push(OutputEdge::new(
+                e.to,
+                e.to_port,
+                Partitioner::new(scheme, dst.workers, w),
+                dst_senders,
+            ));
+        }
+        let peers: Vec<DataSender> = (0..new_n)
+            .filter_map(|i| self.senders.get(&WorkerId::new(op_idx, i)).cloned())
+            .collect();
+        let port_key_fields: Vec<Option<usize>> = spec
+            .input_partitioning
+            .iter()
+            .map(|s| match s {
+                PartitionScheme::Hash { key } => Some(*key),
+                PartitionScheme::Range { key, .. } => Some(*key),
+                _ => None,
+            })
+            .collect();
+        let control = mb.control.clone();
+        let gauges = mb.gauges.clone();
+        let ctx = WorkerContext {
+            id,
+            mailbox: mb,
+            event_tx: self.ev_tx.clone(),
+            outputs,
+            upstream_counts: self.expected_ends(op_idx),
+            peers,
+            port_key_fields,
+            source: None,
+            source_autostart: true,
+            batch_size: self.config.batch_size,
+            ctrl_check_interval: self.config.ctrl_check_interval,
+            ft_log: self.config.ft_log,
+            snapshot: None,
+            scatter_merge: spec.scatter_merge,
+            initial_eofs: Some(self.missed_ends(op_idx)),
+            start_paused: true,
+        };
+        let builder = spec.builder.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("{}", id))
+            .spawn(move || run_worker(ctx, builder(w, new_n)))
+            .expect("spawn scaled worker");
+        self.handles
+            .insert(id, WorkerHandle { control, gauges, thread: Some(thread) });
+        // Inherit the operator's armed local breakpoint, if any — the
+        // original SetLocalBreakpoint broadcast predates this worker.
+        if let Some(pred) = self.local_bps.get(&op_idx).cloned() {
+            if pred.is_some() {
+                self.send_control(id, ControlMessage::SetLocalBreakpoint(pred));
             }
         }
     }
@@ -1073,6 +1553,15 @@ impl Coordinator {
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
             }
             self.fire_timers();
+            // Autoscale: execute plugin-requested parallelism changes
+            // (one fenced epoch each), then replay commands deferred
+            // while the fence was open.
+            let reqs: Vec<(usize, usize)> =
+                self.scale_requests.borrow_mut().drain(..).collect();
+            for (op, n) in reqs {
+                let _ = self.do_scale(op, n);
+            }
+            self.drain_deferred();
         }
     }
 }

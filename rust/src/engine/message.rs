@@ -127,6 +127,45 @@ pub enum ControlMessage {
     /// Fault-tolerance replay (§2.6.2): re-apply these logged control
     /// messages at their recorded data positions during recomputation.
     ReplayLog(Vec<crate::engine::fault::LogRecord>),
+
+    // ---- elastic scaling (engine::scale) ----
+    /// Scale fence step (b): unplug — hand the coordinator the full
+    /// operator state plus all unprocessed input (stash, queued channel
+    /// contents, the remainder of a partially processed batch). Sent
+    /// only while the worker is fence-paused; the worker replies with
+    /// [`WorkerEvent::ScaleState`] and is left stateless/input-less.
+    ExtractScaleState,
+    /// Scale fence step (d): install a re-hashed shard of the combined
+    /// operator state ([`crate::engine::operator::Operator::install_state`]).
+    InstallState(OpState),
+    /// Scale fence step (e), sent to workers of the *scaled* operator:
+    /// replace the sibling sender set (state-migration peers) and tell
+    /// the operator its new parallelism
+    /// ([`crate::engine::operator::Operator::rescale`]).
+    RescaleSelf { peers: Vec<crate::engine::channel::DataSender>, workers: usize },
+    /// Scale fence step (e), sent to workers of *upstream* operators:
+    /// rebuild every output edge targeting `target_op` — new receiver
+    /// count, fresh partitioner from `port_schemes[edge.port]` (range
+    /// bounds already recomputed by the coordinator; any mitigation
+    /// overlay is dropped — Reshape re-detects against the new worker
+    /// set), and the new destination sender set.
+    RescaleEdge {
+        target_op: usize,
+        receivers: usize,
+        /// Input-partitioning scheme per destination port.
+        port_schemes: Vec<crate::engine::partitioner::PartitionScheme>,
+        senders: Vec<crate::engine::channel::DataSender>,
+    },
+    /// Scale fence step (f), sent to workers of *downstream* operators:
+    /// the number of upstream senders on `port` changed, so EOF
+    /// accounting must expect `count` `End` events instead.
+    UpdateUpstreamCount { port: usize, count: usize },
+    /// Close of a scale fence: undo the fence's `Pause` only. Unlike
+    /// [`ControlMessage::Resume`] it clears just the user/coordinator
+    /// pause cause, so a worker that was already parked at a local
+    /// breakpoint or a global-breakpoint target before the fence stays
+    /// parked afterwards.
+    FenceResume,
 }
 
 impl std::fmt::Debug for ControlMessage {
@@ -145,6 +184,12 @@ impl std::fmt::Debug for ControlMessage {
             ControlMessage::Die => "Die",
             ControlMessage::StartSource => "StartSource",
             ControlMessage::ReplayLog(_) => "ReplayLog",
+            ControlMessage::ExtractScaleState => "ExtractScaleState",
+            ControlMessage::InstallState(_) => "InstallState",
+            ControlMessage::RescaleSelf { .. } => "RescaleSelf",
+            ControlMessage::RescaleEdge { .. } => "RescaleEdge",
+            ControlMessage::UpdateUpstreamCount { .. } => "UpdateUpstreamCount",
+            ControlMessage::FenceResume => "FenceResume",
         };
         write!(f, "{name}")
     }
@@ -197,4 +242,9 @@ pub enum WorkerEvent {
     /// The worker produced its first output tuple (first-response-time
     /// instrumentation for Maestro experiments, §4.5.3).
     FirstOutput { worker: WorkerId, at: Instant },
+    /// Reply to [`ControlMessage::ExtractScaleState`]: the worker's full
+    /// operator state and every unprocessed input event, surrendered to
+    /// the coordinator for re-hashing/re-routing across the new worker
+    /// set (engine::scale fence step (c)).
+    ScaleState { worker: WorkerId, state: OpState, pending: Vec<DataEvent> },
 }

@@ -19,6 +19,12 @@
 //! `Paused`-variable check (interval 1 is exactly that) generalized to
 //! amortize per-tuple overheads while keeping pause latency sub-second
 //! regardless of batch size.
+//!
+//! Worker sets are **elastic**: the [`scale`] module changes an
+//! operator's parallelism mid-run inside one fenced epoch
+//! (pause → extract/re-hash state → rewire partitioners → resume),
+//! driven manually ([`Execution::scale_operator`]) or by the
+//! [`scale::AutoscalePlugin`] policy.
 
 pub mod message;
 pub mod channel;
@@ -29,8 +35,10 @@ pub mod worker;
 pub mod breakpoint;
 pub mod controller;
 pub mod fault;
+pub mod scale;
 
 pub use controller::{Execution, ExecSummary};
+pub use scale::AutoscalePlugin;
 pub use dag::{Edge, OpSpec, Workflow};
 pub use message::{ControlMessage, DataEvent, WorkerEvent, WorkerId};
 pub use operator::{Emitter, OpState, Operator};

@@ -47,6 +47,27 @@ impl OpState {
         self.keyed_tuples.values().map(Vec::len).sum::<usize>() + self.keyed_aggs.len()
     }
 
+    /// Partition this state across `n` owners by stable key hash
+    /// (`scope → scope % n`), the inverse of how hash partitioning
+    /// routes tuples. Used by elastic scaling to redistribute the
+    /// combined state of the old worker set over the new one; entries
+    /// for the same scope (tuples + aggregates) stay together. Unkeyed
+    /// `counters` land on owner 0.
+    pub fn split_by_hash(self, n: usize) -> Vec<OpState> {
+        assert!(n > 0);
+        let mut shards: Vec<OpState> = (0..n).map(|_| OpState::default()).collect();
+        for (k, v) in self.keyed_tuples {
+            shards[(k % n as u64) as usize].keyed_tuples.insert(k, v);
+        }
+        for (k, v) in self.keyed_aggs {
+            shards[(k % n as u64) as usize].keyed_aggs.insert(k, v);
+        }
+        for (k, v) in self.counters {
+            shards[0].counters.insert(k, v);
+        }
+        shards
+    }
+
     /// Merge another state into this one (helper receiving migrated
     /// state; scattered-state merge for sort is operator-specific and
     /// overrides this).
@@ -169,6 +190,20 @@ pub trait Operator: Send {
     /// Merge migrated state received from a skewed worker.
     fn merge_state(&mut self, _s: OpState) {}
 
+    /// Install a re-hashed state shard during elastic scaling. The
+    /// default delegates to [`Operator::merge_state`]; operators whose
+    /// merge semantics differ between skew mitigation and scaling can
+    /// override.
+    fn install_state(&mut self, s: OpState) {
+        self.merge_state(s);
+    }
+
+    /// The operator's parallelism changed at runtime (elastic scaling):
+    /// this instance is now worker `idx` of `workers`. Operators that
+    /// cache their (idx, n) placement — e.g. group-by's scattered-state
+    /// ownership — update it here; the default is a no-op.
+    fn rescale(&mut self, _idx: usize, _workers: usize) {}
+
     /// Whether this operator's *current phase* has mutable state
     /// (Table 3.1). The engine consults this to decide the migration
     /// protocol.
@@ -252,6 +287,29 @@ mod tests {
         e.emit_batch(batch.clone());
         assert_eq!(e.0.len(), 4);
         assert_eq!(e.0, batch.to_vec());
+    }
+
+    #[test]
+    fn split_by_hash_partitions_and_preserves() {
+        let mut s = OpState::default();
+        for k in 0..10u64 {
+            s.keyed_tuples.insert(k, vec![Tuple::new(vec![Value::Int(k as i64)])]);
+            s.keyed_aggs.insert(k, vec![k as f64]);
+        }
+        s.counters.insert("c".into(), 5);
+        let shards = s.split_by_hash(3);
+        assert_eq!(shards.len(), 3);
+        // Every key lands on exactly its hash owner; nothing lost.
+        let mut seen = 0;
+        for (i, sh) in shards.iter().enumerate() {
+            for k in sh.keyed_tuples.keys() {
+                assert_eq!((k % 3) as usize, i);
+            }
+            assert_eq!(sh.keyed_tuples.len(), sh.keyed_aggs.len());
+            seen += sh.keyed_tuples.len();
+        }
+        assert_eq!(seen, 10);
+        assert_eq!(shards[0].counters["c"], 5);
     }
 
     #[test]

@@ -250,9 +250,44 @@ impl Partitioner {
         base
     }
 
+    /// Re-target this partitioner at a resized receiver set (elastic
+    /// scaling). Every mitigation overlay is dropped: overlay routes
+    /// reference receiver indices of the *old* set, and on hash edges
+    /// the base destinations themselves move, so any surviving overlay
+    /// would mis-route relative to the freshly re-hashed operator
+    /// state. Reshape re-detects skew against the new worker set.
+    /// `bounds` replaces the range-bound vector when the scheme is
+    /// `Range` (the coordinator recomputes them); `None` keeps it.
+    ///
+    /// Semantically equivalent to the worker's `RescaleEdge` handler,
+    /// which rebuilds the whole output edge (sender set and buffers
+    /// change size) and therefore constructs a fresh partitioner; this
+    /// in-place form serves embedders that own a bare partitioner and
+    /// the scale-event property tests.
+    pub fn rescale(&mut self, receivers: usize, bounds: Option<Vec<Value>>) {
+        assert!(receivers > 0);
+        self.receivers = receivers;
+        self.overlays.clear();
+        self.rr_cursor = self.sender_idx % receivers;
+        self.epoch += 1;
+        if let (PartitionScheme::Range { bounds: b, .. }, Some(nb)) =
+            (&mut self.scheme, bounds)
+        {
+            *b = nb;
+        }
+    }
+
     /// Install or replace the route for (skewed → helper); merges with
     /// existing routes for the same skewed worker.
+    ///
+    /// Routes whose endpoints fall outside the current receiver set are
+    /// ignored: a delayed `UpdateRoute` can land *after* a scale event
+    /// shrank the operator, and applying it would route tuples to a
+    /// retired worker (out-of-bounds sender index).
     pub fn set_route(&mut self, route: MitigationRoute) {
+        if route.skewed >= self.receivers || route.helper >= self.receivers {
+            return;
+        }
         self.epoch = self.epoch.max(route.epoch);
         let ov = self.overlays.entry(route.skewed).or_default();
         match route.mode {
@@ -527,6 +562,53 @@ mod tests {
         let b = equal_width_bounds(0.0, 100.0, 4);
         assert_eq!(b.len(), 3);
         assert_eq!(b[0], Value::Float(25.0));
+    }
+
+    #[test]
+    fn rescale_clears_overlays_and_stays_in_range() {
+        let mut p = Partitioner::new(PartitionScheme::Hash { key: 0 }, 4, 0);
+        p.set_route(MitigationRoute {
+            skewed: 1,
+            helper: 3,
+            mode: ShareMode::CatchUpAll,
+            epoch: 1,
+        });
+        assert_eq!(p.active_overlays(), 1);
+        p.rescale(2, None);
+        assert_eq!(p.active_overlays(), 0);
+        for k in 0..200 {
+            assert!(p.route(&t_int(k)) < 2);
+        }
+    }
+
+    #[test]
+    fn rescale_replaces_range_bounds() {
+        let mut p = Partitioner::new(
+            PartitionScheme::Range { key: 0, bounds: vec![Value::Int(10)] },
+            2,
+            0,
+        );
+        p.rescale(4, Some(vec![Value::Int(5), Value::Int(10), Value::Int(15)]));
+        assert_eq!(p.route(&t_int(3)), 0);
+        assert_eq!(p.route(&t_int(8)), 1);
+        assert_eq!(p.route(&t_int(12)), 2);
+        assert_eq!(p.route(&t_int(99)), 3);
+    }
+
+    #[test]
+    fn stale_out_of_range_route_is_ignored() {
+        let mut p = Partitioner::new(PartitionScheme::Hash { key: 0 }, 2, 0);
+        // A delayed route for a 4-worker epoch arrives after 4→2.
+        p.set_route(MitigationRoute {
+            skewed: 0,
+            helper: 3,
+            mode: ShareMode::CatchUpAll,
+            epoch: 7,
+        });
+        assert_eq!(p.active_overlays(), 0);
+        for k in 0..100 {
+            assert!(p.route(&t_int(k)) < 2);
+        }
     }
 
     #[test]

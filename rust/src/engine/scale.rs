@@ -1,0 +1,292 @@
+//! Elastic worker scaling: change an operator's parallelism mid-run
+//! through the control plane, in one sub-second fenced epoch.
+//!
+//! The engine fixes each operator's worker count at plan time
+//! (`OpSpec.workers`); Reshape (Ch. 3) re-routes tuples *around* a
+//! skewed worker but cannot add capacity. This module decouples work
+//! allocation from the static plan (the Whiz/F² argument): a
+//! [`Command::Scale`](crate::engine::controller::Command) request —
+//! from the driver via
+//! [`Execution::scale_operator`](crate::engine::Execution::scale_operator)
+//! or from the [`AutoscalePlugin`] — runs the following epoch protocol
+//! entirely over the existing control plane:
+//!
+//! ```text
+//!           coordinator                    workers
+//!               │
+//!   (1) FENCE   │── Pause ──────────────▶  all workers
+//!               │◀─ PausedAck ──────────   (output flushed: all
+//!               │     × every worker        in-flight data parked in
+//!               │                           receiver channels/stashes)
+//!   (2) UNPLUG  │── ExtractScaleState ──▶  old workers of the target
+//!               │◀─ ScaleState ─────────   {operator state + every
+//!               │     × old worker set      unprocessed input event}
+//!   (3) RESHAPE │  retire threads (n↓) / spawn threads+mailboxes (n↑),
+//!       THE SET │  recompute Range bounds for the new receiver count
+//!   (4) REHASH  │── InstallState ───────▶  shard s: scope % new_n == w
+//!               │   re-route surrendered   (operator-side install_state
+//!               │   input through a fresh   merges kind-aware: min/max,
+//!               │   partitioner             avg pairs, sorted runs)
+//!   (5) REWIRE  │── RescaleSelf ────────▶  target workers (new peers)
+//!               │── RescaleEdge ────────▶  upstream workers (new
+//!               │                           partitioner + senders;
+//!               │                           mitigation overlays drop)
+//!               │── UpdateUpstreamCount ▶  downstream workers (EOF
+//!               │                           accounting)
+//!   (6) RESUME  │── FenceResume ────────▶  all workers (skipped if the
+//!               │                           driver had paused; undoes
+//!               │                           only the fence's pause, so
+//!               │                           pre-fence breakpoint parks
+//!               │                           survive)
+//! ```
+//!
+//! **Exactness.** Pausing flushes every sender, so the epoch observes a
+//! quiescent data plane; the unplug step surrenders *all* state and
+//! *all* unprocessed input of the old worker set, so nothing is lost or
+//! duplicated; state shards and future tuples are partitioned by the
+//! same function (`scope % new_n` / the rebuilt base partitioner), so
+//! every key's state and its future input meet on one worker. Sink
+//! multisets are therefore identical to an unscaled run.
+//!
+//! **EOF accounting.** A worker spawned mid-run can never receive the
+//! `End`s that already-completed upstream workers sent to the old
+//! receiver set; the coordinator seeds those as `initial_eofs`.
+//! Retired workers never send their `End`s; downstream expectations are
+//! rewritten from the live worker sets (`UpdateUpstreamCount`).
+//!
+//! **Refusals.** Source operators (input partitions are fixed at plan
+//! time), scatter-merge operators (the EOF peer barrier counts a worker
+//! set frozen at deploy), broadcast-input operators (earlier broadcast
+//! deliveries cannot be reconstructed for new workers), and operators
+//! that already have completed workers (the EOF cascade is under way)
+//! are refused — `scale_operator` returns `Duration::ZERO`.
+//!
+//! **Interactions.** Mitigation overlays are cleared on every scale
+//! (their indices and hash bases refer to the old set); Reshape
+//! re-detects skew against the new set, and stale `UpdateRoute`s that
+//! arrive late are ignored by the partitioner's range guard. The
+//! control-replay log does not cover fence messages; recovery
+//! re-deploys at the checkpoint's parallelism. Workers spawned mid-run
+//! inherit the operator's armed *local* breakpoint; outstanding
+//! *global*-breakpoint target assignments are not redistributed — a
+//! COUNT/SUM breakpoint armed across a scale keeps its exactness on
+//! the old workers' targets but the new workers receive targets only
+//! at the next inquiry round. A fence that cannot close (missing pause
+//! acks or surrendered states within the deadline) aborts and restores
+//! every surrendered state to its owner instead of proceeding.
+
+use crate::engine::controller::{CoordPlugin, PluginCtx};
+use crate::engine::message::{WorkerEvent, WorkerId};
+use crate::reshape::detector;
+use crate::tuple::Value;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// Recompute range-partition bounds for a resized receiver set.
+///
+/// The old bounds are treated as empirical quantile marks: old bound
+/// `i` (0-based) sits at fraction `(i+1)/old_n` of the value
+/// distribution. New bounds are read off that piecewise-linear CDF at
+/// fractions `j/new_n`, clamping at the outermost marks (the engine
+/// cannot extrapolate beyond what the plan knew). Non-numeric bounds
+/// fall back to nearest-mark selection. Routing stays total for any
+/// bounds vector — the last receiver takes everything above the final
+/// bound — so a skewed interpolation costs balance, never correctness.
+pub fn rescale_bounds(old: &[Value], new_n: usize) -> Vec<Value> {
+    if new_n <= 1 || old.is_empty() {
+        return Vec::new();
+    }
+    let m = old.len();
+    let numeric: Option<Vec<f64>> = old.iter().map(|v| v.as_float()).collect();
+    (1..new_n)
+        .map(|j| {
+            // Position in old-quantile units, 1.0 = first old bound.
+            let p = j as f64 * (m as f64 + 1.0) / new_n as f64;
+            let t = (p - 1.0).clamp(0.0, (m - 1) as f64);
+            match &numeric {
+                Some(xs) => {
+                    let i = t.floor() as usize;
+                    let f = t - i as f64;
+                    let v = if i + 1 < m {
+                        xs[i] * (1.0 - f) + xs[i + 1] * f
+                    } else {
+                        xs[m - 1]
+                    };
+                    Value::Float(v)
+                }
+                None => old[(t.round() as usize).min(m - 1)].clone(),
+            }
+        })
+        .collect()
+}
+
+/// A simple autoscale policy as a coordinator plugin.
+///
+/// Reuses the Reshape workload metric (the per-worker unprocessed-queue
+/// gauge φ_w, §3.2.1) and the Reshape skew detector: sustained
+/// imbalance (the detector finds a skewed worker) or sustained overload
+/// (some queue above `autoscale_high_queue`) doubles the operator's
+/// workers up to `max`; sustained idleness (total queue below
+/// `autoscale_low_queue`) halves them down to `min`. A cooldown after
+/// every decision lets the re-hashed state and fresh queues settle
+/// before the next reading.
+pub struct AutoscalePlugin {
+    target_op: usize,
+    min_workers: usize,
+    max_workers: usize,
+    high_ticks: u32,
+    idle_ticks: u32,
+    cooldown: u32,
+    /// Scale decisions taken: (elapsed s, new worker count).
+    pub decisions: std::sync::Arc<std::sync::Mutex<Vec<(f64, usize)>>>,
+}
+
+impl AutoscalePlugin {
+    /// Autoscale `target_op` between `min_workers` and `max_workers`.
+    pub fn new(target_op: usize, min_workers: usize, max_workers: usize) -> AutoscalePlugin {
+        assert!(min_workers >= 1 && min_workers <= max_workers);
+        AutoscalePlugin {
+            target_op,
+            min_workers,
+            max_workers,
+            high_ticks: 0,
+            idle_ticks: 0,
+            cooldown: 0,
+            decisions: std::sync::Arc::new(std::sync::Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Shared handle to the decision log (for harnesses/tests).
+    pub fn decisions(&self) -> std::sync::Arc<std::sync::Mutex<Vec<(f64, usize)>>> {
+        self.decisions.clone()
+    }
+}
+
+impl CoordPlugin for AutoscalePlugin {
+    fn name(&self) -> &str {
+        "autoscale"
+    }
+
+    fn period(&self) -> Duration {
+        Duration::from_millis(20)
+    }
+
+    fn tick(&mut self, ctx: &PluginCtx) {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return;
+        }
+        let n = ctx.workers_of(self.target_op);
+        let mut loads = Vec::with_capacity(n);
+        let mut live = 0usize;
+        for i in 0..n {
+            let id = WorkerId::new(self.target_op, i);
+            if ctx.completed.contains(&id) {
+                loads.push(0.0);
+                continue;
+            }
+            let Some(g) = ctx.gauges_of(id) else {
+                loads.push(0.0);
+                continue;
+            };
+            loads.push(g.queued.load(Ordering::Relaxed).max(0) as f64);
+            live += 1;
+        }
+        if live == 0 {
+            return;
+        }
+        let cfg = ctx.config;
+        let max_q = loads.iter().cloned().fold(0.0f64, f64::max);
+        let total_q: f64 = loads.iter().sum();
+        // Sustained imbalance (the Reshape skew test) or overload.
+        let skewed = !detector::detect(
+            &loads,
+            &[],
+            cfg.reshape_eta,
+            cfg.reshape_tau,
+            1,
+        )
+        .pairs
+        .is_empty();
+        if skewed || max_q >= cfg.autoscale_high_queue {
+            self.high_ticks += 1;
+            self.idle_ticks = 0;
+        } else if total_q <= cfg.autoscale_low_queue {
+            self.idle_ticks += 1;
+            self.high_ticks = 0;
+        } else {
+            self.high_ticks = 0;
+            self.idle_ticks = 0;
+        }
+        let sustain = cfg.autoscale_sustain_ticks;
+        if self.high_ticks >= sustain && n < self.max_workers {
+            let target = (n * 2).min(self.max_workers);
+            ctx.request_scale(self.target_op, target);
+            self.decisions
+                .lock()
+                .unwrap()
+                .push((ctx.started.elapsed().as_secs_f64(), target));
+            self.high_ticks = 0;
+            self.cooldown = sustain * 2;
+        } else if self.idle_ticks >= sustain && n > self.min_workers {
+            let target = (n / 2).max(self.min_workers);
+            ctx.request_scale(self.target_op, target);
+            self.decisions
+                .lock()
+                .unwrap()
+                .push((ctx.started.elapsed().as_secs_f64(), target));
+            self.idle_ticks = 0;
+            self.cooldown = sustain * 2;
+        }
+    }
+
+    fn on_event(&mut self, _ev: &WorkerEvent, _ctx: &PluginCtx) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(v: &Value) -> f64 {
+        v.as_float().unwrap()
+    }
+
+    #[test]
+    fn rescale_bounds_doubles_receivers() {
+        // 2 receivers (1 bound at the median) → 4 receivers: quartile
+        // marks interpolated/clamped around the single known mark.
+        let old = vec![Value::Float(50.0)];
+        let nb = rescale_bounds(&old, 4);
+        assert_eq!(nb.len(), 3);
+        // Monotone non-decreasing, centred on the old median.
+        assert!(f(&nb[0]) <= f(&nb[1]) && f(&nb[1]) <= f(&nb[2]));
+        assert_eq!(f(&nb[1]), 50.0);
+    }
+
+    #[test]
+    fn rescale_bounds_preserves_marks_on_halving() {
+        // 4 receivers → 2: the new median is the old 2nd bound.
+        let old = vec![Value::Float(25.0), Value::Float(50.0), Value::Float(75.0)];
+        let nb = rescale_bounds(&old, 2);
+        assert_eq!(nb.len(), 1);
+        assert_eq!(f(&nb[0]), 50.0);
+    }
+
+    #[test]
+    fn rescale_bounds_monotone_for_any_sizes() {
+        let old: Vec<Value> = (1..8).map(|i| Value::Float(i as f64 * 10.0)).collect();
+        for n in 2..20 {
+            let nb = rescale_bounds(&old, n);
+            assert_eq!(nb.len(), n - 1);
+            for w in nb.windows(2) {
+                assert!(f(&w[0]) <= f(&w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn rescale_bounds_degenerate_cases() {
+        assert!(rescale_bounds(&[], 4).is_empty());
+        assert!(rescale_bounds(&[Value::Float(1.0)], 1).is_empty());
+    }
+}

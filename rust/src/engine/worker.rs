@@ -128,6 +128,15 @@ pub struct WorkerContext {
     /// foreign runs to their owners, then wait for every sibling's
     /// `PeerEof` before finishing.
     pub scatter_merge: bool,
+    /// For workers spawned mid-run by elastic scaling: EOFs per port
+    /// this worker will never receive because the upstream sender
+    /// completed (and sent `End` to the old receiver set) before the
+    /// scale fence. The worker re-checks port completion against these
+    /// once its input is drained.
+    pub initial_eofs: Option<Vec<usize>>,
+    /// Spawn in the paused state (scale fence: new workers join the
+    /// fence and start with everyone else on the closing `Resume`).
+    pub start_paused: bool,
 }
 
 /// Why the worker is paused (it can be paused for several reasons at
@@ -485,6 +494,9 @@ struct Worker {
     resume_offset: usize,
     /// Markers seen per epoch (mutable-state migration sync, §3.5.3).
     marker_counts: std::collections::HashMap<u64, usize>,
+    /// Re-evaluate port completion once input is drained (set when a
+    /// scale event changed `upstream_counts` or seeded `eofs_seen`).
+    recheck_ports: bool,
     busy_ns: u64,
     dead: bool,
 }
@@ -534,9 +546,17 @@ impl Worker {
             resume_msg_count: u64::MAX,
             resume_offset: 0,
             marker_counts: std::collections::HashMap::new(),
+            recheck_ports: false,
             busy_ns: 0,
             dead: false,
         };
+        if ctx.start_paused {
+            w.pause.by_user = true;
+        }
+        if let Some(init) = ctx.initial_eofs {
+            w.eofs_seen = init;
+            w.recheck_ports = true;
+        }
         if let Some(snap) = ctx.snapshot {
             w.restore(snap);
         }
@@ -696,12 +716,93 @@ impl Worker {
                     self.replay.push_back(r);
                 }
             }
+            ControlMessage::ExtractScaleState => {
+                // Scale fence (b): unplug. Only sent while fence-paused,
+                // so the input channel is quiescent; surrender state and
+                // every unprocessed input event to the coordinator for
+                // re-hashing/re-routing over the new worker set.
+                while let Ok(ev) = self.mailbox.data.try_recv() {
+                    self.stash.push_back(ev);
+                }
+                let mut pending: Vec<DataEvent> = Vec::new();
+                if let Some((msg, idx)) = self.current.take() {
+                    let mut m = msg;
+                    m.batch = m.batch.slice_from(idx);
+                    pending.push(DataEvent::Batch(m));
+                }
+                pending.extend(self.stash.drain(..));
+                // The surrendered tuples leave this worker's queue; the
+                // re-injection re-adds them on their new owners' gauges.
+                let surrendered: i64 = pending
+                    .iter()
+                    .map(|ev| match ev {
+                        DataEvent::Batch(b) => b.batch.len() as i64,
+                        _ => 0,
+                    })
+                    .sum();
+                self.mailbox
+                    .gauges
+                    .queued
+                    .fetch_sub(surrendered, Ordering::Relaxed);
+                let state = self.op.extract_state(None, false);
+                let _ = self.event_tx.send(WorkerEvent::ScaleState {
+                    worker: self.id,
+                    state,
+                    pending,
+                });
+            }
+            ControlMessage::InstallState(s) => {
+                self.op.install_state(s);
+            }
+            ControlMessage::RescaleSelf { peers, workers } => {
+                self.peers = peers;
+                self.op.rescale(self.id.idx, workers);
+            }
+            ControlMessage::RescaleEdge { target_op, receivers, port_schemes, senders } => {
+                for e in 0..self.out.edges.len() {
+                    if self.out.edges[e].target_op != target_op {
+                        continue;
+                    }
+                    // Buffers are empty while fence-paused (Pause
+                    // flushes), but flush defensively before the edge is
+                    // rebuilt so no tuple can be dropped.
+                    self.out.flush_edge(e);
+                    let port = self.out.edges[e].port;
+                    let scheme = port_schemes
+                        .get(port)
+                        .cloned()
+                        .unwrap_or(PartitionScheme::RoundRobin);
+                    self.out.edges[e] = OutputEdge::new(
+                        target_op,
+                        port,
+                        Partitioner::new(scheme, receivers, self.id.idx),
+                        senders.clone(),
+                    );
+                }
+            }
+            ControlMessage::UpdateUpstreamCount { port, count } => {
+                if let Some(c) = self.upstream_counts.get_mut(port) {
+                    *c = count;
+                    self.recheck_ports = true;
+                }
+            }
+            ControlMessage::FenceResume => {
+                // Undo only the fence's Pause; a pre-fence breakpoint or
+                // target pause survives the epoch.
+                self.pause.by_user = false;
+                let _ = self
+                    .event_tx
+                    .send(WorkerEvent::ResumedAck { worker: self.id });
+            }
         }
         true
     }
 
     /// Which control messages are logged for replay (state-changing
-    /// ones; pure queries are not).
+    /// ones; pure queries are not). Scale-fence messages are excluded:
+    /// they carry live channel endpoints and are only meaningful inside
+    /// the epoch that issued them — recovery re-deploys at the
+    /// post-scale parallelism instead of replaying the fence.
     fn should_log(&self, msg: &ControlMessage) -> bool {
         !matches!(
             msg,
@@ -709,6 +810,12 @@ impl Worker {
                 | ControlMessage::TakeSnapshot
                 | ControlMessage::ReplayLog(_)
                 | ControlMessage::Die
+                | ControlMessage::ExtractScaleState
+                | ControlMessage::InstallState(_)
+                | ControlMessage::RescaleSelf { .. }
+                | ControlMessage::RescaleEdge { .. }
+                | ControlMessage::UpdateUpstreamCount { .. }
+                | ControlMessage::FenceResume
         )
     }
 
@@ -951,19 +1058,7 @@ impl Worker {
             }
             DataEvent::End { port, .. } => {
                 self.eofs_seen[port] += 1;
-                if self.eofs_seen[port] >= self.upstream_counts[port]
-                    && !self.ports_done[port]
-                {
-                    self.ports_done[port] = true;
-                    self.op.finish_port(port, &mut self.out);
-                    let _ = self.event_tx.send(WorkerEvent::PortCompleted {
-                        worker: self.id,
-                        port,
-                    });
-                    if self.ports_done.iter().all(|&d| d) {
-                        self.finish();
-                    }
-                }
+                self.try_close_port(port);
             }
             DataEvent::Marker { epoch, port, .. } => {
                 let c = self.marker_counts.entry(epoch).or_insert(0);
@@ -997,6 +1092,34 @@ impl Worker {
         }
     }
 
+    /// Close `port` if every expected upstream `End` has been counted.
+    fn try_close_port(&mut self, port: usize) {
+        if self.eofs_seen[port] >= self.upstream_counts[port] && !self.ports_done[port] {
+            self.ports_done[port] = true;
+            self.op.finish_port(port, &mut self.out);
+            let _ = self.event_tx.send(WorkerEvent::PortCompleted {
+                worker: self.id,
+                port,
+            });
+            if self.ports_done.iter().all(|&d| d) {
+                self.finish();
+            }
+        }
+    }
+
+    /// Re-evaluate every port after a scale event changed the expected
+    /// sender counts (or seeded `eofs_seen` for a worker spawned
+    /// mid-run). Called only once all pending input is drained, so a
+    /// port can never close ahead of re-injected data.
+    fn recheck_ports(&mut self) {
+        self.recheck_ports = false;
+        for port in 0..self.upstream_counts.len() {
+            if self.upstream_counts[port] > 0 {
+                self.try_close_port(port);
+            }
+        }
+    }
+
     /// All ports done (or source exhausted): either finish directly or
     /// enter the scattered-state peer barrier first (§3.5.4).
     fn finish(&mut self) {
@@ -1005,17 +1128,24 @@ impl Worker {
         }
         if self.scatter_merge && self.peers.len() > 1 {
             // Ship foreign runs to their owners (Fig. 3.11(e,f)), then
-            // announce our EOF to all siblings.
+            // announce our EOF to all siblings. An owner index outside
+            // the live sibling set (stale ownership after an elastic
+            // scale-down) keeps its part here instead of dropping it —
+            // the part is emitted with this worker's own output.
             for (owner, state) in self.op.scattered_parts() {
                 let owner = owner as usize;
-                if owner != self.id.idx {
-                    if let Some(p) = self.peers.get(owner) {
+                if owner == self.id.idx {
+                    continue;
+                }
+                match self.peers.get(owner) {
+                    Some(p) => {
                         let _ = p.send(DataEvent::State {
                             from: self.id,
                             state,
                             transfer_id: u64::MAX, // barrier transfer
                         });
                     }
+                    None => self.op.merge_state(state),
                 }
             }
             for (i, p) in self.peers.iter().enumerate() {
@@ -1187,6 +1317,18 @@ impl Worker {
                 }
                 continue;
             }
+            // A scale event changed the EOF accounting: re-evaluate port
+            // completion, but only once every already-delivered event is
+            // consumed (current batch, stash and channel are empty here
+            // except for the channel, checked non-blockingly below) so
+            // re-injected input is never outrun by an early port close.
+            if self.recheck_ports {
+                match self.mailbox.data.try_recv() {
+                    Ok(ev) => self.handle_data_event(ev),
+                    Err(_) => self.recheck_ports(),
+                }
+                continue;
+            }
             match self.mailbox.data.recv_timeout(Duration::from_millis(2)) {
                 Ok(ev) => self.handle_data_event(ev),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
@@ -1275,6 +1417,8 @@ mod tests {
             ft_log: false,
             snapshot: None,
             scatter_merge: false,
+            initial_eofs: None,
+            start_paused: false,
         };
         let h = std::thread::spawn(move || run_worker(ctx, Box::new(Identity)));
         (ctrl, in_tx, ev_rx, down_rx.data, h)
@@ -1544,6 +1688,8 @@ mod tests {
             ft_log: false,
             snapshot: None,
             scatter_merge: false,
+            initial_eofs: None,
+            start_paused: false,
         };
         let h = std::thread::spawn(move || {
             run_worker(ctx, Box::new(crate::engine::dag::PassThrough))

@@ -253,21 +253,49 @@ impl Operator for Project {
 }
 
 /// Regex-style parser: splits a raw text field on a delimiter into
-/// typed fields (the RegexParser of §2.5.1). Tuples that fail to parse
-/// are dropped or, with `strict`, reported through a panic — the
-/// Fig. 1.1 scenario where a breakpoint should catch them instead.
+/// typed fields (the RegexParser of §2.5.1). Unparseable tuples are
+/// never fatal: they are skipped and counted (`dropped`, plus
+/// `strict_skipped` with a sample of the offending input when
+/// `strict`). An earlier revision panicked in strict mode, which
+/// killed the whole worker thread on one bad row — the exact failure
+/// the Fig. 1.1 adaptivity story exists to avoid; now the workflow
+/// keeps running and the counters surface the problem for a breakpoint
+/// or a runtime `modify` to act on.
 pub struct RegexParser {
     pub field: usize,
     pub delimiter: char,
     pub expected_fields: usize,
     pub strict: bool,
-    /// Count of dropped (unparseable) tuples.
+    /// Count of skipped (unparseable) tuples.
     pub dropped: u64,
+    /// Skipped tuples observed while `strict` — the "should have been
+    /// an error" count.
+    pub strict_skipped: u64,
+    /// Sample of the most recent strict-mode offender (diagnostics).
+    pub last_bad_input: Option<String>,
 }
 
 impl RegexParser {
     pub fn new(field: usize, delimiter: char, expected_fields: usize) -> RegexParser {
-        RegexParser { field, delimiter, expected_fields, strict: false, dropped: 0 }
+        RegexParser {
+            field,
+            delimiter,
+            expected_fields,
+            strict: false,
+            dropped: 0,
+            strict_skipped: 0,
+            last_bad_input: None,
+        }
+    }
+
+    fn skip(&mut self, raw: Option<&str>) {
+        self.dropped += 1;
+        if self.strict {
+            self.strict_skipped += 1;
+            if let Some(r) = raw {
+                self.last_bad_input = Some(r.to_string());
+            }
+        }
     }
 }
 
@@ -278,15 +306,13 @@ impl Operator for RegexParser {
 
     fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
         let Some(raw) = t.get(self.field).as_str() else {
-            self.dropped += 1;
+            self.skip(None);
             return;
         };
         let parts: Vec<&str> = raw.split(self.delimiter).collect();
         if parts.len() != self.expected_fields {
-            if self.strict {
-                panic!("regex_parser: cannot parse {raw:?}");
-            }
-            self.dropped += 1;
+            let raw = raw.to_string();
+            self.skip(Some(&raw));
             return;
         }
         out.emit(Tuple::new(parts.iter().map(|p| parse_value(p)).collect()));
@@ -525,12 +551,22 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "cannot parse")]
-    fn parser_strict_panics() {
+    fn parser_strict_skips_and_counts_instead_of_crashing() {
+        // Malformed rows must never kill the worker (Fig. 1.1): strict
+        // mode records the skip and a sample of the offender instead.
         let mut p = RegexParser::new(0, '\t', 3);
         p.strict = true;
         let mut out = VecEmitter::default();
         p.process(t(vec![Value::str("bad")]), 0, &mut out);
+        p.process(t(vec![Value::str("also\tbad")]), 0, &mut out);
+        // A non-string field is also skipped, not fatal.
+        p.process(t(vec![Value::Int(7)]), 0, &mut out);
+        // Well-formed rows still parse after the bad ones.
+        p.process(t(vec![Value::str("1\ttwo\t3.0")]), 0, &mut out);
+        assert_eq!(out.0.len(), 1);
+        assert_eq!(p.dropped, 3);
+        assert_eq!(p.strict_skipped, 3);
+        assert_eq!(p.last_bad_input.as_deref(), Some("also\tbad"));
     }
 
     #[test]

@@ -78,12 +78,23 @@ pub struct GroupByPartial {
     /// Value field (ignored for COUNT).
     pub value_field: usize,
     pub kind: AggKind,
+    /// Artificial per-tuple cost in ns, modelled as a *sleep* like
+    /// [`MapUdf`](crate::operators::basic::MapUdf): latency-bound work
+    /// (the paper's expensive UDF operators) that more workers absorb
+    /// even on a single core — the elastic-scaling benchmark workload.
+    pub cost_ns: u64,
     groups: HashMap<u64, (Value, Vec<f64>)>,
 }
 
 impl GroupByPartial {
     pub fn new(key_field: usize, value_field: usize, kind: AggKind) -> GroupByPartial {
-        GroupByPartial { key_field, value_field, kind, groups: HashMap::new() }
+        GroupByPartial { key_field, value_field, kind, cost_ns: 0, groups: HashMap::new() }
+    }
+
+    /// Builder: artificial latency-bound per-tuple cost.
+    pub fn with_cost(mut self, ns: u64) -> GroupByPartial {
+        self.cost_ns = ns;
+        self
     }
 
     #[inline]
@@ -105,12 +116,22 @@ impl Operator for GroupByPartial {
     }
 
     fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        if self.cost_ns > 0 {
+            std::thread::sleep(std::time::Duration::from_nanos(self.cost_ns));
+        }
         self.absorb(&t);
     }
 
     /// Pre-aggregation reads tuples straight out of the shared batch —
-    /// no per-tuple clone, one dispatch per chunk.
+    /// no per-tuple clone, one dispatch per chunk. The artificial cost
+    /// sleeps once per chunk (chunk length × per-tuple cost), keeping
+    /// pause latency bounded by one chunk.
     fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
+        if self.cost_ns > 0 && !batch.is_empty() {
+            std::thread::sleep(std::time::Duration::from_nanos(
+                self.cost_ns * batch.len() as u64,
+            ));
+        }
         for t in batch.iter() {
             self.absorb(t);
         }
@@ -337,6 +358,14 @@ impl Operator for GroupByFinal {
 
     fn state_mutable(&self) -> bool {
         true
+    }
+
+    fn rescale(&mut self, idx: usize, workers: usize) {
+        // Elastic scaling moved this instance into a `workers`-wide
+        // hash-partitioned set; scattered-state ownership follows.
+        if self.ownership.is_some() {
+            self.ownership = Some((idx, workers));
+        }
     }
 
     fn scattered_parts(&mut self) -> Vec<(u64, OpState)> {

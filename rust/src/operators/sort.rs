@@ -217,6 +217,28 @@ impl Operator for SortMerge {
         self.buffer.len()
     }
 
+    /// Elastic scaling migrates the merge buffer whole (scope 0): the
+    /// merge layer re-sorts everything at EOF, so which worker holds
+    /// which run never affects the output order.
+    fn extract_state(&mut self, _keys: Option<&[u64]>, replicate: bool) -> OpState {
+        let mut s = OpState::default();
+        let buf = if replicate {
+            self.buffer.clone()
+        } else {
+            std::mem::take(&mut self.buffer)
+        };
+        if !buf.is_empty() {
+            s.keyed_tuples.insert(0, buf);
+        }
+        s
+    }
+
+    fn merge_state(&mut self, mut s: OpState) {
+        for (_, mut v) in s.keyed_tuples.drain() {
+            self.buffer.append(&mut v);
+        }
+    }
+
     fn state_mutable(&self) -> bool {
         true
     }

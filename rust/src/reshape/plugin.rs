@@ -356,14 +356,23 @@ impl CoordPlugin for ReshapePlugin {
             self.tau = ctx.config.reshape_tau;
         }
         let n = ctx.workers_of(self.target_op);
-        if self.estimators.is_empty() {
+        if self.estimators.len() != n {
+            // First tick, or an elastic scale changed the protected
+            // operator's parallelism: every per-worker series and every
+            // mitigation references the old worker set, so start over
+            // against the new one (the scale fence already cleared the
+            // overlay routes and re-hashed the state).
+            self.mitigations.clear();
+            self.pending_transfers.clear();
+            self.pending_sbk_moves.clear();
             self.estimators =
                 vec![MeanEstimator::new(ctx.config.reshape_sample_window); n];
             self.last_base = vec![0; n];
-            if self.approach == Approach::SplitByKeys {
-                // SBK needs the per-key distribution (§3.3.1).
-                for i in 0..n {
-                    if let Some(g) = ctx.gauges_of(WorkerId::new(self.target_op, i)) {
+            for i in 0..n {
+                if let Some(g) = ctx.gauges_of(WorkerId::new(self.target_op, i)) {
+                    self.last_base[i] = g.base_received.load(Ordering::Relaxed);
+                    if self.approach == Approach::SplitByKeys {
+                        // SBK needs the per-key distribution (§3.3.1).
                         g.track_keys.store(true, Ordering::Relaxed);
                     }
                 }

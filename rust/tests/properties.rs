@@ -119,6 +119,92 @@ fn prop_overlay_conservation_and_revert() {
     });
 }
 
+/// Elastic scaling: under any interleaving of overlay routes, clears
+/// and rescale events, every tuple routes to exactly one live receiver
+/// (`dest < receivers`), and all senders of an operator compute
+/// identical routes for keyed schemes — the determinism invariant the
+/// migration protocol depends on (state lands where future tuples go).
+#[test]
+fn prop_partitioner_scale_events_valid_and_deterministic() {
+    use texera_amber::engine::scale::rescale_bounds;
+
+    struct G;
+    impl Gen for G {
+        type Value = (u8, u64, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            // (scheme kind, initial receivers, event-stream seed)
+            (rng.below(3) as u8, 2 + rng.below(7), rng.next_u64())
+        }
+    }
+    check_n(21, 96, &G, |(kind, receivers, stream_seed)| {
+        let kind = *kind;
+        let mut n = *receivers as usize;
+        let bounds: Vec<Value> = (1..n as i64).map(|i| Value::Int(i * 1000)).collect();
+        let mk = |idx: usize, n: usize, bounds: &[Value]| -> Partitioner {
+            let s = match kind {
+                0 => PartitionScheme::Hash { key: 0 },
+                1 => PartitionScheme::RoundRobin,
+                _ => PartitionScheme::Range { key: 0, bounds: bounds.to_vec() },
+            };
+            Partitioner::new(s, n, idx)
+        };
+        // Two senders of the same operator; every control event is
+        // applied to both, in the same order.
+        let mut pa = mk(0, n, &bounds);
+        let mut pb = mk(3, n, &bounds);
+        let mut rng = Rng::new(*stream_seed);
+        for _ in 0..200 {
+            match rng.below(10) {
+                // Mostly: route a tuple.
+                0..=5 => {
+                    let t = Tuple::new(vec![Value::Int(rng.below(8_000) as i64)]);
+                    let da = pa.route(&t);
+                    if da >= n {
+                        return false;
+                    }
+                    // Keyed schemes: all senders agree.
+                    if kind != 1 && pb.route(&t) != da {
+                        return false;
+                    }
+                }
+                // Install a random overlay route (indices may be stale
+                // after a scale — the partitioner must stay safe).
+                6 | 7 => {
+                    let skewed = rng.below(10) as usize;
+                    let helper = rng.below(10) as usize;
+                    let mode = match rng.below(3) {
+                        0 => ShareMode::CatchUpAll,
+                        1 => ShareMode::SplitRecords {
+                            num: 1 + rng.below(9) as u32,
+                            den: 10,
+                        },
+                        _ => ShareMode::SplitKeys(vec![rng.below(8_000)]),
+                    };
+                    let route = MitigationRoute { skewed, helper, mode, epoch: 1 };
+                    pa.set_route(route.clone());
+                    pb.set_route(route);
+                }
+                // Clear a route.
+                8 => {
+                    let skewed = rng.below(10) as usize;
+                    let helper = rng.below(10) as usize;
+                    pa.clear_route(skewed, helper);
+                    pb.clear_route(skewed, helper);
+                }
+                // Scale event: new receiver count + recomputed bounds.
+                _ => {
+                    let new_n = 1 + rng.below(8) as usize;
+                    let nb = rescale_bounds(&bounds, new_n);
+                    pa.rescale(new_n, Some(nb.clone()));
+                    pb.rescale(new_n, Some(nb));
+                    n = new_n;
+                }
+            }
+        }
+        true
+    });
+}
+
 // ---------- breakpoints ----------
 
 /// COUNT breakpoint protocol: regardless of worker progress order, the
@@ -322,6 +408,173 @@ fn prop_region_partition_and_choices() {
         }
         true
     });
+}
+
+// ---------- chaos: control-plane interleavings ----------
+
+/// Seeded command-fuzzer over one workflow: random interleavings of
+/// pause/resume, checkpoint, Reshape-style mitigation routes, and
+/// elastic scale commands must preserve the exact sink result. Three
+/// rounds per run; `CHAOS_SEED` (CI matrix) shifts the whole stream.
+#[test]
+fn prop_chaos_control_interleavings_preserve_results() {
+    let base: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    for round in 0..3 {
+        chaos_round(base.wrapping_mul(1000).wrapping_add(round));
+    }
+}
+
+fn chaos_round(seed: u64) {
+    use std::time::Duration;
+    use texera_amber::config::Config;
+    use texera_amber::engine::{ControlMessage, Execution, OpSpec, WorkerId, Workflow};
+    use texera_amber::operators::basic::{Cmp, Filter};
+    use texera_amber::operators::group_by::{AggKind, GroupByFinal, GroupByPartial};
+    use texera_amber::operators::{CollectSink, SinkHandle};
+    use texera_amber::workloads::VecSource;
+
+    const ROWS: usize = 200_000;
+    const KEYS: i64 = 53;
+
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..ROWS)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                Tuple::new(vec![Value::Int(i as i64 % KEYS), Value::Int(i as i64 % 7)])
+            })
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary(
+        "filter",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| {
+            let mut f = Filter::new(1, Cmp::Ne, Value::Int(3));
+            f.cost_ns = 400;
+            Box::new(f)
+        },
+    ));
+    let partial = w.add(OpSpec::unary(
+        "gb_partial",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(GroupByPartial::new(0, 1, AggKind::Sum)),
+    ));
+    let fin = w.add(
+        OpSpec::unary(
+            "gb_final",
+            2,
+            PartitionScheme::Hash { key: 0 },
+            |_, _| Box::new(GroupByFinal::new(AggKind::Sum)),
+        )
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "sink",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h.clone())),
+    ));
+    w.connect(scan, filter, 0);
+    w.connect(filter, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+
+    let exec = Execution::start(w, Config { batch_size: 256, ..Config::default() });
+    let mut rng = Rng::new(seed);
+    let mut paused = false;
+    // Worker counts as far as the driver knows (a refused scale —
+    // fence duration zero — leaves them unchanged).
+    let mut counts = [2usize, 2, 2]; // filter, partial, fin
+    let scalable = [filter, partial, fin];
+    let mut epoch = 1u64;
+    for _ in 0..14 {
+        std::thread::sleep(Duration::from_millis(1 + rng.below(8)));
+        match rng.below(8) {
+            0 => {
+                if !paused {
+                    exec.pause();
+                    paused = true;
+                }
+            }
+            1 => {
+                if paused {
+                    exec.resume();
+                    paused = false;
+                }
+            }
+            2 => {
+                // Quiesced checkpoint (internally pauses + resumes).
+                if !paused {
+                    let _ = exec.checkpoint();
+                }
+            }
+            3..=5 => {
+                let which = rng.below(3) as usize;
+                let target = 1 + rng.below(4) as usize;
+                if exec.scale_operator(scalable[which], target) > Duration::ZERO {
+                    counts[which] = target;
+                }
+            }
+            _ => {
+                // Reshape-style SBR mitigation on the scan→filter edge
+                // (stateless target: exact under any record split).
+                if counts[0] >= 2 {
+                    epoch += 1;
+                    let skewed = rng.below(counts[0] as u64) as usize;
+                    let helper = (skewed + 1) % counts[0];
+                    for sw in 0..2 {
+                        exec.send_control(
+                            WorkerId::new(scan, sw),
+                            ControlMessage::UpdateRoute {
+                                target_op: filter,
+                                route: MitigationRoute {
+                                    skewed,
+                                    helper,
+                                    mode: ShareMode::SplitRecords {
+                                        num: 1 + rng.below(500) as u32,
+                                        den: 1000,
+                                    },
+                                    epoch,
+                                },
+                            },
+                        );
+                    }
+                }
+            }
+        }
+    }
+    if paused {
+        exec.resume();
+    }
+    exec.join();
+
+    // Ground truth, computed directly.
+    let mut expect: std::collections::HashMap<i64, f64> = std::collections::HashMap::new();
+    for i in 0..ROWS {
+        let (k, v) = (i as i64 % KEYS, i as i64 % 7);
+        if v != 3 {
+            *expect.entry(k).or_insert(0.0) += v as f64;
+        }
+    }
+    let mut got: Vec<(i64, f64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(got.len(), expect.len(), "seed {seed}: wrong group count");
+    for (k, s) in &got {
+        assert_eq!(expect[k], *s, "seed {seed}: wrong sum for key {k}");
+    }
 }
 
 // ---------- estimator ----------
