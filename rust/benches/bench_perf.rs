@@ -1,10 +1,18 @@
 //! Performance microbenchmarks (§Perf of EXPERIMENTS.md): the engine's
-//! hot-path numbers — tuple throughput vs batch size, routing cost,
+//! hot-path numbers — tuple throughput vs batch size, hash-shuffle
+//! (exchange) throughput, scatter micro old-vs-new, routing cost,
 //! control-path latency, PJRT classifier throughput.
 //!
 //! ```text
-//! cargo bench --bench bench_perf
+//! cargo bench --bench bench_perf            # full run
+//! cargo bench --bench bench_perf -- --smoke # CI smoke (small totals)
 //! ```
+//!
+//! Results land in `BENCH_perf.json` at the repository root (falling
+//! back to the crate dir when run elsewhere), so the perf trajectory
+//! is tracked across PRs. The per-tuple exchange path is retained as
+//! `Partitioner::route_with_base`, so "old vs new" is re-measured live
+//! on every run rather than pinned to stale numbers.
 
 use std::time::{Duration, Instant};
 
@@ -12,19 +20,33 @@ use texera_amber::config::Config;
 use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
 use texera_amber::operators::basic::{Cmp, Filter};
 use texera_amber::operators::group_by::{AggKind, GroupByFinal, GroupByPartial};
-use texera_amber::operators::{CollectSink, SinkHandle};
-use texera_amber::engine::partitioner::{PartitionScheme as PS, Partitioner};
-use texera_amber::tuple::{Tuple, Value};
+use texera_amber::operators::{CollectSink, CountByKeySink, SinkHandle};
+use texera_amber::engine::partitioner::{
+    hash_column, PartitionScheme as PS, Partitioner, RouteVec,
+};
+use texera_amber::tuple::{Tuple, TupleBatch, Value};
 use texera_amber::workloads::{TupleSource, VecSource};
 
 fn main() {
-    println!("=== bench_perf: hot-path microbenchmarks ===\n");
-    let (rows, baseline) = throughput_vs_batch_size();
-    let elastic = elastic_scaling();
-    write_bench_json(&rows, baseline, &elastic);
-    routing_cost();
-    pause_latency();
-    pjrt_classifier_throughput();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "=== bench_perf: hot-path microbenchmarks{} ===\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let (rows, baseline) = throughput_vs_batch_size(smoke);
+    let shuffle = shuffle_section(smoke);
+    let micro = scatter_micro_section(smoke);
+    let elastic = elastic_scaling(smoke);
+    if smoke {
+        // Smoke totals are not trajectory-quality numbers: exercise
+        // the sections but leave the recorded BENCH_perf.json alone.
+        println!("(smoke: BENCH_perf.json not written)");
+    } else {
+        write_bench_json(&rows, baseline, &elastic, &shuffle, &micro);
+        routing_cost();
+        pause_latency();
+        pjrt_classifier_throughput();
+    }
 }
 
 /// One scan→filter→sink run; returns tuples/second. `ctrl_interval`
@@ -66,13 +88,18 @@ fn pipeline(total: usize, workers: usize, batch: usize, ctrl_interval: usize) ->
 /// own message, chunk length 1); the other rows chunk at the batch
 /// size. Results land in BENCH_perf.json so the perf trajectory is
 /// tracked across PRs.
-fn throughput_vs_batch_size() -> (Vec<(usize, usize, f64)>, f64) {
+fn throughput_vs_batch_size(smoke: bool) -> (Vec<(usize, usize, f64)>, f64) {
     println!("--- engine throughput vs batch size ---");
     println!("{:>8} {:>10} {:>16} {:>10}", "batch", "interval", "ktuples/s", "vs b=1");
-    let total = 1_000_000;
+    let total = if smoke { 100_000 } else { 1_000_000 };
+    let batches: &[usize] = if smoke {
+        &[1, 400, 1024]
+    } else {
+        &[1, 16, 64, 200, 400, 1024, 6400]
+    };
     let mut rows: Vec<(usize, usize, f64)> = Vec::new();
     let mut baseline = 0.0f64;
-    for batch in [1usize, 16, 64, 200, 400, 1024, 6400] {
+    for &batch in batches {
         // Per-tuple baseline uses chunk length 1; batch rows chunk at
         // the batch size (bounded pause latency either way).
         let interval = if batch == 1 { 1 } else { batch };
@@ -94,6 +121,142 @@ fn throughput_vs_batch_size() -> (Vec<(usize, usize, f64)>, f64) {
     (rows, baseline)
 }
 
+/// One hash-shuffle measurement: distribution × batch size → tuples/s.
+struct ShuffleRow {
+    dist: &'static str,
+    batch: usize,
+    tps: f64,
+}
+
+/// End-to-end hash shuffle: scan(2 workers) ──Hash(key)──▶ count-sink
+/// (4 workers). The edge crosses the vectorized exchange; the sink
+/// costs two atomic adds per batch, so the shuffle dominates.
+/// `skewed` puts 90% of tuples on one hot key (plus 100 cold keys);
+/// uniform cycles 512 keys.
+fn shuffle_tps(total: usize, batch: usize, skewed: bool) -> f64 {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                let key = if skewed {
+                    if i % 10 != 0 { 0 } else { (i % 100) as i64 + 1 }
+                } else {
+                    (i % 512) as i64
+                };
+                Tuple::new(vec![Value::Int(key)])
+            })
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let handle = SinkHandle::new(512);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "count_sink",
+        4,
+        PartitionScheme::Hash { key: 0 },
+        move |_, _| Box::new(CountByKeySink::new(h.clone(), 0)),
+    ));
+    w.connect(scan, sink, 0);
+    let cfg = Config {
+        batch_size: batch,
+        ctrl_check_interval: batch.max(1),
+        ..Config::default()
+    };
+    let t0 = Instant::now();
+    Execution::start(w, cfg).join();
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert_eq!(handle.total() as usize, total, "shuffle dropped tuples");
+    total as f64 / elapsed
+}
+
+/// Hash-shuffle tuples/s at batch 1/32/1024, uniform and skewed —
+/// recorded in BENCH_perf.json (the acceptance row for the exchange
+/// rework is skewed @ batch 1024).
+fn shuffle_section(smoke: bool) -> Vec<ShuffleRow> {
+    println!("--- hash-shuffle throughput (scan(2) --Hash--> count-sink(4)) ---");
+    println!("{:>8} {:>8} {:>16}", "dist", "batch", "ktuples/s");
+    let total = if smoke { 60_000 } else { 1_000_000 };
+    let mut rows = Vec::new();
+    for &(dist, skewed) in &[("uniform", false), ("skewed", true)] {
+        for &batch in &[1usize, 32, 1024] {
+            // Warm + measure best of 2 (1-core noise).
+            let a = shuffle_tps(total, batch, skewed);
+            let b = shuffle_tps(total, batch, skewed);
+            let best = a.max(b);
+            println!("{dist:>8} {batch:>8} {:>16.0}", best / 1e3);
+            rows.push(ShuffleRow { dist, batch, tps: best });
+        }
+    }
+    println!();
+    rows
+}
+
+/// Old-vs-new exchange inner loop on identical data: (per-tuple
+/// `route_with_base` tuples/s, `hash_column` + `route_batch` tuples/s).
+struct ScatterMicro {
+    uniform: (f64, f64),
+    skewed: (f64, f64),
+}
+
+fn scatter_micro(skewed: bool, rounds: usize) -> (f64, f64) {
+    let receivers = 16usize;
+    let batch: TupleBatch = (0..1024usize)
+        .map(|i| {
+            let key = if skewed {
+                if i % 10 != 0 { 0 } else { (i % 100) as i64 + 1 }
+            } else {
+                i as i64
+            };
+            Tuple::new(vec![Value::Int(key)])
+        })
+        .collect();
+    let mut p = Partitioner::new(PS::Hash { key: 0 }, receivers, 0);
+    let mut acc = 0usize;
+    // Old inner loop: one route (one hash) per tuple.
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for t in batch.iter() {
+            let (b, d) = p.route_with_base(t);
+            acc = acc.wrapping_add(b + d + 1);
+        }
+    }
+    let per_tuple_tps = (rounds * batch.len()) as f64 / t0.elapsed().as_secs_f64();
+    // New inner loop: hash column + selection vectors, scratch reused.
+    let mut hashes: Vec<u64> = Vec::new();
+    let mut routes = RouteVec::default();
+    let t1 = Instant::now();
+    for _ in 0..rounds {
+        hash_column(&batch, 0, &mut hashes);
+        p.route_batch(&batch, &hashes, &mut routes);
+        acc = acc.wrapping_add(routes.sel.iter().map(Vec::len).sum::<usize>());
+    }
+    let batch_tps = (rounds * batch.len()) as f64 / t1.elapsed().as_secs_f64();
+    // Keep `acc` observable so the loops cannot be optimized away.
+    assert!(acc > 0);
+    (per_tuple_tps, batch_tps)
+}
+
+fn scatter_micro_section(smoke: bool) -> ScatterMicro {
+    println!("--- scatter micro: route_with_base (old) vs route_batch (new), 1024-tuple batches, 16 receivers ---");
+    let rounds = if smoke { 500 } else { 5_000 };
+    let micro = ScatterMicro {
+        uniform: scatter_micro(false, rounds),
+        skewed: scatter_micro(true, rounds),
+    };
+    for (name, (old, new)) in [("uniform", micro.uniform), ("skewed", micro.skewed)] {
+        println!(
+            "{name:>8}: per-tuple {:>9.0} ktuples/s | batch {:>9.0} ktuples/s | {:.2}x",
+            old / 1e3,
+            new / 1e3,
+            new / old
+        );
+    }
+    println!();
+    micro
+}
+
 /// Elastic-scaling result: throughput of the scaled operator before and
 /// after a mid-run 2→4 scale-up, plus the fence duration.
 struct ElasticBench {
@@ -109,9 +272,11 @@ struct ElasticBench {
 /// cost, the paper's expensive-UDF shape, so added workers absorb it
 /// even on one core). Throughput is the partial layer's processed rate
 /// over a fixed window before vs. after the scale.
-fn elastic_scaling() -> ElasticBench {
+fn elastic_scaling(smoke: bool) -> ElasticBench {
     println!("--- elastic scaling: mid-run 2->4 scale-up (skewed group-by) ---");
-    let total = 150_000usize;
+    // Smoke keeps the fence + rewire path exercised but shrinks the
+    // deliberately-throttled workload and measurement windows.
+    let total = if smoke { 30_000usize } else { 150_000 };
     const COST_NS: u64 = 40_000;
     let mut w = Workflow::new();
     let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
@@ -161,8 +326,8 @@ fn elastic_scaling() -> ElasticBench {
             .map(|(_, s)| s.processed)
             .sum()
     };
-    let window = Duration::from_millis(400);
-    std::thread::sleep(Duration::from_millis(100)); // warm-up
+    let window = Duration::from_millis(if smoke { 150 } else { 400 });
+    std::thread::sleep(Duration::from_millis(if smoke { 40 } else { 100 })); // warm-up
     let p0 = processed(&exec);
     std::thread::sleep(window);
     let p1 = processed(&exec);
@@ -190,8 +355,15 @@ fn elastic_scaling() -> ElasticBench {
     }
 }
 
-/// Write BENCH_perf.json (machine-readable perf trajectory).
-fn write_bench_json(rows: &[(usize, usize, f64)], baseline: f64, elastic: &ElasticBench) {
+/// Write BENCH_perf.json (machine-readable perf trajectory) at the
+/// repository root, so the bench trajectory accumulates across PRs.
+fn write_bench_json(
+    rows: &[(usize, usize, f64)],
+    baseline: f64,
+    elastic: &ElasticBench,
+    shuffle: &[ShuffleRow],
+    micro: &ScatterMicro,
+) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"throughput_vs_batch_size\",\n");
     s.push_str("  \"pipeline\": \"scan->filter->sink (2 workers, 1M tuples)\",\n");
@@ -205,6 +377,36 @@ fn write_bench_json(rows: &[(usize, usize, f64)], baseline: f64, elastic: &Elast
         ));
     }
     s.push_str("  ],\n");
+    s.push_str("  \"shuffle\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan(2) --Hash(key)--> count-sink(4); skewed = 90% one hot key\",\n",
+    );
+    s.push_str("    \"rows\": [\n");
+    for (i, r) in shuffle.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"dist\": \"{}\", \"batch_size\": {}, \"tuples_per_sec\": {:.0}}}{}\n",
+            r.dist,
+            r.batch,
+            r.tps,
+            if i + 1 == shuffle.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("    ]\n  },\n");
+    s.push_str("  \"scatter_micro\": {\n");
+    s.push_str(
+        "    \"setup\": \"1024-tuple batches, hash over 16 receivers; old = per-tuple route_with_base, new = hash_column + route_batch\",\n",
+    );
+    for (name, (old, new), comma) in [
+        ("uniform", micro.uniform, ","),
+        ("skewed", micro.skewed, ","),
+    ] {
+        s.push_str(&format!(
+            "    \"{name}\": {{\"old_tuples_per_sec\": {old:.0}, \"new_tuples_per_sec\": {new:.0}, \"speedup\": {:.2}}}{comma}\n",
+            new / old
+        ));
+    }
+    let agg = (micro.uniform.1 / micro.uniform.0 + micro.skewed.1 / micro.skewed.0) / 2.0;
+    s.push_str(&format!("    \"mean_speedup\": {agg:.2}\n  }},\n"));
     let es = if elastic.before_tps > 0.0 {
         elastic.after_tps / elastic.before_tps
     } else {
@@ -227,9 +429,16 @@ fn write_bench_json(rows: &[(usize, usize, f64)], baseline: f64, elastic: &Elast
         elastic.fence_ms
     ));
     s.push_str("}\n");
-    match std::fs::write("BENCH_perf.json", &s) {
-        Ok(()) => println!("(wrote BENCH_perf.json)"),
-        Err(e) => println!("(could not write BENCH_perf.json: {e})"),
+    // `cargo bench` runs with the crate dir as CWD; the trajectory
+    // file lives at the repository root.
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_perf.json"
+    } else {
+        "BENCH_perf.json"
+    };
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("(wrote {path})"),
+        Err(e) => println!("(could not write {path}: {e})"),
     }
 }
 

@@ -1,32 +1,82 @@
-//! Actor mailboxes: bounded FIFO data channels and the expedited
+//! Actor mailboxes: the bounded data **ring** and the expedited
 //! control inbox.
 //!
 //! The paper's §2.4.2 problem — a FIFO actor mailbox buries control
 //! messages behind queued data — is solved there by delegating data
 //! processing to a DP thread that checks a shared `Paused` flag per
-//! tuple. We implement the same structure natively: the data plane is a
-//! bounded `std::sync::mpsc::sync_channel` (congestion control, §2.3.3)
-//! and the control plane is a dedicated [`ControlInbox`] with an atomic
-//! `pending` flag the DP loop reads between tuples (a single relaxed
-//! atomic load on the hot path).
+//! tuple. We implement the same structure natively, with both planes
+//! purpose-built for their access patterns:
 //!
-//! The inbox supports an artificial delivery delay (per-message due
-//! time) used by the Fig. 3.21 control-latency experiment. Receivers
-//! always dequeue the *earliest-due* message rather than the queue
-//! front, so a delayed message cannot head-of-line-block an already-due
-//! one behind it.
+//! * **Data plane** — a bounded [`DataRing`] per worker. Producers
+//!   (upstream workers) block when the ring is full — the paper's
+//!   congestion-control backpressure (§2.3.3) — and the single
+//!   consumer (the worker's DP loop) pops batches in FIFO order.
+//!   Parking is Condvar-based and *lazy*: a producer signals the
+//!   consumer only when the consumer has actually parked on an empty
+//!   ring (and vice versa for full), so the steady-state hot path is
+//!   one short critical section per message with no syscalls and no
+//!   spinning. The consumer's empty-check (`try_recv` between control
+//!   polls) is a single atomic load. Disconnect mirrors `std::mpsc`:
+//!   a sender errors once the receiver died; the receiver reports
+//!   `Disconnected` only when every sender handle has dropped *and*
+//!   the ring is drained.
+//! * **Control plane** — a dedicated [`ControlInbox`] with an atomic
+//!   `pending` flag the DP loop reads between chunks (a single relaxed
+//!   atomic load on the hot path). The inbox supports an artificial
+//!   delivery delay (per-message due time) used by the Fig. 3.21
+//!   control-latency experiment; messages are held in a `BinaryHeap`
+//!   keyed on (due time, arrival seq), so receivers always dequeue the
+//!   earliest-due message in O(log n) — a delayed message cannot
+//!   head-of-line-block an already-due one behind it, and same-instant
+//!   messages stay FIFO.
+//!
+//! The receiver's workload gauges ([`WorkerGauges`]) ride next to the
+//! ring so senders maintain the queue-size/σ_w metrics without a
+//! control round-trip; the per-key distribution map is written once
+//! per *batch* (workers accumulate locally and merge at batch
+//! boundaries), never per tuple.
 
 use crate::engine::message::{ControlMessage, DataEvent};
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// A queued control message: due time + arrival sequence (heap key).
+struct QueuedCtrl {
+    due: Instant,
+    seq: u64,
+    msg: ControlMessage,
+}
+
+impl PartialEq for QueuedCtrl {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for QueuedCtrl {}
+impl PartialOrd for QueuedCtrl {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedCtrl {
+    /// Reversed so `BinaryHeap` (a max-heap) pops the *earliest* due
+    /// time first, FIFO (lowest seq) among equal due times.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (other.due, other.seq).cmp(&(self.due, self.seq))
+    }
+}
+
+struct CtrlQueue {
+    heap: BinaryHeap<QueuedCtrl>,
+    next_seq: u64,
+}
 
 /// Control inbox shared between the coordinator (producer) and one
 /// worker (consumer).
 pub struct ControlInbox {
-    queue: Mutex<VecDeque<(Instant, ControlMessage)>>,
+    queue: Mutex<CtrlQueue>,
     pending: AtomicBool,
     cv: Condvar,
 }
@@ -40,7 +90,7 @@ impl Default for ControlInbox {
 impl ControlInbox {
     pub fn new() -> ControlInbox {
         ControlInbox {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(CtrlQueue { heap: BinaryHeap::new(), next_seq: 0 }),
             pending: AtomicBool::new(false),
             cv: Condvar::new(),
         }
@@ -51,7 +101,9 @@ impl ControlInbox {
     pub fn send(&self, msg: ControlMessage, delay: Duration) {
         let due = Instant::now() + delay;
         let mut q = self.queue.lock().unwrap();
-        q.push_back((due, msg));
+        let seq = q.next_seq;
+        q.next_seq += 1;
+        q.heap.push(QueuedCtrl { due, seq, msg });
         // The flag is best-effort: the consumer re-checks due times.
         self.pending.store(true, Ordering::Release);
         self.cv.notify_one();
@@ -63,21 +115,6 @@ impl ControlInbox {
         self.pending.load(Ordering::Acquire)
     }
 
-    /// Index of the earliest-due message (first wins among equal due
-    /// times, preserving FIFO for undelayed messages). Receivers must
-    /// scan rather than peek the front: a front message carrying an
-    /// artificial delivery delay would otherwise hide an already-due
-    /// message queued behind it (head-of-line blocking).
-    fn earliest_idx(q: &VecDeque<(Instant, ControlMessage)>) -> Option<usize> {
-        let mut best: Option<(usize, Instant)> = None;
-        for (i, (due, _)) in q.iter().enumerate() {
-            if best.map_or(true, |(_, b)| *due < b) {
-                best = Some((i, *due));
-            }
-        }
-        best.map(|(i, _)| i)
-    }
-
     /// Dequeue the earliest *due* message, if any.
     pub fn try_recv(&self) -> Option<ControlMessage> {
         if !self.maybe_pending() {
@@ -85,14 +122,12 @@ impl ControlInbox {
         }
         let mut q = self.queue.lock().unwrap();
         let now = Instant::now();
-        if let Some(idx) = Self::earliest_idx(&q) {
-            if q[idx].0 <= now {
-                let (_, msg) = q.remove(idx).unwrap();
-                if q.is_empty() {
-                    self.pending.store(false, Ordering::Release);
-                }
-                return Some(msg);
+        if q.heap.peek().is_some_and(|item| item.due <= now) {
+            let msg = q.heap.pop().unwrap().msg;
+            if q.heap.is_empty() {
+                self.pending.store(false, Ordering::Release);
             }
+            return Some(msg);
         }
         None
     }
@@ -103,32 +138,34 @@ impl ControlInbox {
         let mut q = self.queue.lock().unwrap();
         loop {
             let now = Instant::now();
-            if let Some(idx) = Self::earliest_idx(&q) {
-                let due = q[idx].0;
-                if due <= now {
-                    let (_, msg) = q.remove(idx).unwrap();
-                    if q.is_empty() {
+            match q.heap.peek().map(|item| item.due) {
+                Some(due) if due <= now => {
+                    let msg = q.heap.pop().unwrap().msg;
+                    if q.heap.is_empty() {
                         self.pending.store(false, Ordering::Release);
                     }
                     return Some(msg);
                 }
-                // Wait until the earliest message becomes due (or the
-                // deadline passes).
-                if now >= deadline {
-                    return None;
+                Some(due) => {
+                    // Wait until the earliest message becomes due (or
+                    // the deadline passes).
+                    if now >= deadline {
+                        return None;
+                    }
+                    let wait = due.min(deadline).saturating_duration_since(now);
+                    let (qq, _) = self
+                        .cv
+                        .wait_timeout(q, wait.max(Duration::from_micros(50)))
+                        .unwrap();
+                    q = qq;
                 }
-                let wait = due.min(deadline).saturating_duration_since(now);
-                let (qq, _) = self.cv.wait_timeout(q, wait.max(Duration::from_micros(50))).unwrap();
-                q = qq;
-            } else {
-                if now >= deadline {
-                    return None;
+                None => {
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (qq, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+                    q = qq;
                 }
-                let (qq, _) = self
-                    .cv
-                    .wait_timeout(q, deadline - now)
-                    .unwrap();
-                q = qq;
             }
         }
     }
@@ -147,8 +184,9 @@ pub struct WorkerGauges {
     /// Total tuples produced (output).
     pub produced: AtomicI64,
     /// Total tuples received, by *final* routed destination accounting:
-    /// incremented by senders when routing a tuple here (σ_w, the
-    /// "total input received", §3.4.1).
+    /// incremented by senders when routing a batch here (σ_w, the
+    /// "total input received", §3.4.1) — once per destination per
+    /// batch, from the routed selection-vector lengths.
     pub received: AtomicI64,
     /// Tuples this worker would have received under the *base*
     /// partitioning, ignoring mitigation overlays — the estimator's
@@ -164,7 +202,11 @@ pub struct WorkerGauges {
     /// requires the workers to store the distribution of workload per
     /// key").
     pub track_keys: AtomicBool,
-    /// Input tuples seen per partitioning-key hash.
+    /// Input tuples seen per partitioning-key hash. Written once per
+    /// batch (the worker accumulates into a thread-local map and
+    /// merges at batch boundaries), so this lock is off the per-tuple
+    /// hot path; readers (the Reshape plugin, baselines) take it at
+    /// metric-tick cadence.
     pub key_counts: Mutex<std::collections::HashMap<u64, u64>>,
 }
 
@@ -179,16 +221,199 @@ impl WorkerGauges {
     }
 }
 
-/// The sending half of a worker's data plane: a sync sender plus the
-/// receiver's gauges so the sender can maintain the queue-size metric.
-#[derive(Clone)]
+/// Receive-side errors of the data ring (mirrors `std::mpsc`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingRecvError {
+    /// Nothing queued (`try_recv`) / nothing arrived in time
+    /// (`recv_timeout`).
+    Empty,
+    /// Every sender handle dropped and the ring is drained.
+    Disconnected,
+}
+
+/// `try_send` failure: the ring was full, or the receiver died. Carries
+/// the event back to the caller either way.
+#[derive(Debug)]
+pub enum RingTrySendError {
+    Full(DataEvent),
+    Disconnected(DataEvent),
+}
+
+/// Ring interior: the queue plus parking state, under one short-held
+/// mutex. `rx_waiting`/`tx_waiting` make notifications lazy — nobody
+/// signals a condvar unless the other side actually parked.
+struct RingState {
+    queue: VecDeque<DataEvent>,
+    /// Receiver alive? (false once the worker's `Mailbox` dropped).
+    rx_alive: bool,
+    /// Consumer parked on empty.
+    rx_waiting: bool,
+    /// Producers parked on full.
+    tx_waiting: usize,
+}
+
+/// A bounded FIFO data ring with Condvar parking (no spin on full or
+/// empty): the worker's data plane. Single consumer (the owning
+/// worker); producers are the upstream workers holding [`DataSender`]
+/// clones. Blocking `send` on a full ring is the §2.3.3
+/// congestion-control backpressure.
+pub struct DataRing {
+    cap: usize,
+    state: Mutex<RingState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Queue-length mirror: the consumer's lock-free empty check.
+    len: AtomicUsize,
+    /// Live `DataSender` handles (0 + drained ⇒ disconnected).
+    sender_count: AtomicUsize,
+}
+
+impl DataRing {
+    /// A ring with `cap` slots and one live sender handle (the one
+    /// [`mailbox`] returns).
+    fn new(cap: usize) -> DataRing {
+        DataRing {
+            cap: cap.max(1),
+            state: Mutex::new(RingState {
+                queue: VecDeque::with_capacity(cap.max(1)),
+                rx_alive: true,
+                rx_waiting: false,
+                tx_waiting: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            len: AtomicUsize::new(0),
+            sender_count: AtomicUsize::new(1),
+        }
+    }
+
+    fn add_sender(&self) {
+        self.sender_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn drop_sender(&self) {
+        if self.sender_count.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last sender gone: wake a parked consumer so it can
+            // observe the disconnect. Taking the lock orders this
+            // after any in-progress recv's park decision.
+            let _s = self.state.lock().unwrap();
+            self.not_empty.notify_all();
+        }
+    }
+
+    fn close_rx(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.rx_alive = false;
+        // Unbuffered senders must not block forever on a dead worker.
+        self.not_full.notify_all();
+    }
+
+    /// Push one event; blocks on full when `block`, else returns it.
+    fn push(&self, ev: DataEvent, block: bool) -> Result<(), RingTrySendError> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.rx_alive {
+                return Err(RingTrySendError::Disconnected(ev));
+            }
+            if s.queue.len() < self.cap {
+                s.queue.push_back(ev);
+                self.len.store(s.queue.len(), Ordering::Release);
+                if s.rx_waiting {
+                    s.rx_waiting = false;
+                    self.not_empty.notify_one();
+                }
+                return Ok(());
+            }
+            if !block {
+                return Err(RingTrySendError::Full(ev));
+            }
+            s.tx_waiting += 1;
+            s = self.not_full.wait(s).unwrap();
+            s.tx_waiting -= 1;
+        }
+    }
+
+    /// Pop under the lock; wakes one parked producer per freed slot.
+    fn pop_locked(&self, s: &mut RingState) -> Option<DataEvent> {
+        let ev = s.queue.pop_front()?;
+        self.len.store(s.queue.len(), Ordering::Release);
+        if s.tx_waiting > 0 {
+            self.not_full.notify_one();
+        }
+        Some(ev)
+    }
+
+    fn try_recv(&self) -> Result<DataEvent, RingRecvError> {
+        // Fast path: one atomic load when idle (the DP loop polls this
+        // between control checks).
+        if self.len.load(Ordering::Acquire) == 0
+            && self.sender_count.load(Ordering::Acquire) > 0
+        {
+            return Err(RingRecvError::Empty);
+        }
+        let mut s = self.state.lock().unwrap();
+        match self.pop_locked(&mut s) {
+            Some(ev) => Ok(ev),
+            None if self.sender_count.load(Ordering::Acquire) == 0 => {
+                Err(RingRecvError::Disconnected)
+            }
+            None => Err(RingRecvError::Empty),
+        }
+    }
+
+    fn recv_deadline(&self, deadline: Option<Instant>) -> Result<DataEvent, RingRecvError> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(ev) = self.pop_locked(&mut s) {
+                return Ok(ev);
+            }
+            if self.sender_count.load(Ordering::Acquire) == 0 {
+                return Err(RingRecvError::Disconnected);
+            }
+            s.rx_waiting = true;
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        s.rx_waiting = false;
+                        return Err(RingRecvError::Empty);
+                    }
+                    let (ss, _) = self.not_empty.wait_timeout(s, d - now).unwrap();
+                    s = ss;
+                }
+                None => {
+                    s = self.not_empty.wait(s).unwrap();
+                }
+            }
+            s.rx_waiting = false;
+        }
+    }
+}
+
+/// The sending half of a worker's data plane: a handle on the
+/// receiver's ring plus its gauges, so the sender maintains the
+/// queue-size metric. Cloning tracks liveness (`std::mpsc`-style
+/// disconnect when the last clone drops).
 pub struct DataSender {
-    pub tx: SyncSender<DataEvent>,
+    ring: Arc<DataRing>,
     pub gauges: Arc<WorkerGauges>,
 }
 
+impl Clone for DataSender {
+    fn clone(&self) -> DataSender {
+        self.ring.add_sender();
+        DataSender { ring: self.ring.clone(), gauges: self.gauges.clone() }
+    }
+}
+
+impl Drop for DataSender {
+    fn drop(&mut self) {
+        self.ring.drop_sender();
+    }
+}
+
 impl DataSender {
-    /// Send a data event, blocking if the receiver's queue is full
+    /// Send a data event, blocking if the receiver's ring is full
     /// (congestion control / backpressure).
     pub fn send(&self, ev: DataEvent) -> Result<(), ()> {
         if let DataEvent::Batch(b) = &ev {
@@ -196,38 +421,66 @@ impl DataSender {
                 .queued
                 .fetch_add(b.batch.len() as i64, Ordering::Relaxed);
         }
-        // Blocking send (FIFO, bounded — the paper's congestion
-        // control); error only if the receiver hung up (crash).
-        self.tx.send(ev).map_err(|_| ())
+        // Blocking send (FIFO, bounded); error only if the receiver
+        // hung up (crash/teardown).
+        self.ring.push(ev, true).map_err(|_| ())
     }
 }
 
-/// The receiving half: data receiver + control inbox + gauges.
+/// The receiving half of the data ring (single consumer).
+pub struct RingReceiver {
+    ring: Arc<DataRing>,
+}
+
+impl Drop for RingReceiver {
+    fn drop(&mut self) {
+        self.ring.close_rx();
+    }
+}
+
+impl RingReceiver {
+    /// Non-blocking pop; `Empty` costs one atomic load.
+    pub fn try_recv(&self) -> Result<DataEvent, RingRecvError> {
+        self.ring.try_recv()
+    }
+
+    /// Blocking pop (tests / drain loops).
+    pub fn recv(&self) -> Result<DataEvent, RingRecvError> {
+        self.ring.recv_deadline(None)
+    }
+
+    /// Pop, parking for at most `timeout`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<DataEvent, RingRecvError> {
+        self.ring.recv_deadline(Some(Instant::now() + timeout))
+    }
+}
+
+/// The receiving half: data ring + control inbox + gauges.
 pub struct Mailbox {
-    pub data: Receiver<DataEvent>,
+    pub data: RingReceiver,
     pub control: Arc<ControlInbox>,
     pub gauges: Arc<WorkerGauges>,
 }
 
 /// Create the mailbox for one worker; returns the sender template.
 pub fn mailbox(cap: usize) -> (DataSender, Mailbox) {
-    let (tx, rx) = std::sync::mpsc::sync_channel(cap);
+    let ring = Arc::new(DataRing::new(cap));
     let gauges = Arc::new(WorkerGauges::default());
     let control = Arc::new(ControlInbox::new());
     (
-        DataSender { tx, gauges: gauges.clone() },
-        Mailbox { data: rx, control, gauges },
+        DataSender { ring: ring.clone(), gauges: gauges.clone() },
+        Mailbox { data: RingReceiver { ring }, control, gauges },
     )
 }
 
 /// Non-blocking send helper used in tests.
-pub fn try_send(s: &DataSender, ev: DataEvent) -> Result<(), TrySendError<DataEvent>> {
+pub fn try_send(s: &DataSender, ev: DataEvent) -> Result<(), RingTrySendError> {
     if let DataEvent::Batch(b) = &ev {
         s.gauges
             .queued
             .fetch_add(b.batch.len() as i64, Ordering::Relaxed);
     }
-    s.tx.try_send(ev)
+    s.ring.push(ev, false)
 }
 
 #[cfg(test)]
@@ -272,6 +525,21 @@ mod tests {
         inbox.send(ControlMessage::Resume, Duration::ZERO);
         assert!(matches!(inbox.try_recv(), Some(ControlMessage::Pause)));
         assert!(matches!(inbox.try_recv(), Some(ControlMessage::Resume)));
+    }
+
+    #[test]
+    fn control_inbox_fifo_among_equal_due_times() {
+        // Same artificial delay ⇒ same due instant is possible; the
+        // arrival sequence must break the tie FIFO.
+        let inbox = ControlInbox::new();
+        for _ in 0..5 {
+            inbox.send(ControlMessage::Pause, Duration::ZERO);
+            inbox.send(ControlMessage::Resume, Duration::ZERO);
+        }
+        for _ in 0..5 {
+            assert!(matches!(inbox.try_recv(), Some(ControlMessage::Pause)));
+            assert!(matches!(inbox.try_recv(), Some(ControlMessage::Resume)));
+        }
     }
 
     #[test]
@@ -324,8 +592,8 @@ mod tests {
         let (tx, mb) = mailbox(8);
         tx.send(batch(5)).unwrap();
         assert_eq!(mb.gauges.queued.load(Ordering::Relaxed), 5);
-        // Receiver drains and decrements per tuple (done by worker loop;
-        // simulate here).
+        // Receiver drains and decrements per batch (done by worker
+        // loop; simulate here).
         if let Ok(DataEvent::Batch(b)) = mb.data.try_recv() {
             mb.gauges
                 .queued
@@ -335,7 +603,7 @@ mod tests {
     }
 
     #[test]
-    fn data_channel_fifo_per_sender() {
+    fn data_ring_fifo_per_sender() {
         let (tx, mb) = mailbox(16);
         for seq in 0..5u64 {
             tx.send(DataEvent::Batch(DataMessage {
@@ -352,5 +620,56 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn data_ring_backpressure_blocks_until_pop() {
+        let (tx, mb) = mailbox(2);
+        tx.send(batch(1)).unwrap();
+        tx.send(batch(1)).unwrap();
+        // Full: try_send bounces; a blocking send parks until a pop
+        // frees a slot (join would hang forever if the parked sender
+        // were never woken).
+        assert!(matches!(try_send(&tx, batch(1)), Err(RingTrySendError::Full(_))));
+        let t2 = tx.clone();
+        let h = std::thread::spawn(move || t2.send(batch(1)).unwrap());
+        std::thread::sleep(Duration::from_millis(40));
+        mb.data.recv().unwrap(); // frees one slot
+        h.join().unwrap();
+        // Both remaining events drain.
+        assert!(mb.data.recv().is_ok());
+        assert!(mb.data.recv().is_ok());
+    }
+
+    #[test]
+    fn data_ring_disconnects_when_all_senders_drop() {
+        let (tx, mb) = mailbox(4);
+        let tx2 = tx.clone();
+        tx.send(batch(1)).unwrap();
+        drop(tx);
+        // A live clone keeps the ring connected.
+        assert!(matches!(mb.data.try_recv(), Ok(_)));
+        assert!(matches!(mb.data.try_recv(), Err(RingRecvError::Empty)));
+        drop(tx2);
+        assert!(matches!(
+            mb.data.recv_timeout(Duration::from_secs(1)),
+            Err(RingRecvError::Disconnected)
+        ));
+    }
+
+    #[test]
+    fn data_ring_send_errors_after_receiver_drop() {
+        let (tx, mb) = mailbox(4);
+        drop(mb);
+        assert!(tx.send(batch(1)).is_err());
+    }
+
+    #[test]
+    fn data_ring_recv_timeout_wakes_on_send() {
+        let (tx, mb) = mailbox(4);
+        let h = std::thread::spawn(move || mb.data.recv_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        tx.send(batch(1)).unwrap();
+        assert!(h.join().unwrap().is_ok());
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Three directions, mirroring Fig. 2.3 of the paper:
 //! * worker → worker: [`DataEvent`] (batched tuples, EOF markers,
-//!   partitioning-epoch markers, migrated state);
+//!   partitioning-epoch markers, migrated state), carried by the
+//!   bounded [`crate::engine::channel::DataRing`] — senders block on a
+//!   full ring (congestion control, §2.3.3);
 //! * coordinator → worker: [`ControlMessage`] (pause/resume, breakpoint
 //!   targets, partitioner updates, operator patches, …);
 //! * worker → coordinator: [`WorkerEvent`] (acks, breakpoint reports,

@@ -29,24 +29,26 @@
 //! * local conditional breakpoints (§2.5.2) and global-breakpoint
 //!   target counting (§2.5.3);
 //! * output batching + partitioning with Reshape's mitigation overlay
-//!   ([`OutBox`] scatters whole batches through the partitioner in one
-//!   pass, hashing each key once, and ships broadcast edges as clones
-//!   of one shared allocation);
+//!   ([`OutBox`] scatters whole batches through
+//!   [`Partitioner::route_batch`] selection vectors — one stable hash
+//!   per tuple into a memoized per-batch hash column, receiver gauges
+//!   bumped once per destination — and ships broadcast edges and
+//!   single-run batches as clones of one shared allocation);
 //! * state migration send/receive (§3.2.2, §3.5);
 //! * control-replay logging and replay for fault tolerance (§2.6.2);
 //! * first-output timestamps (Maestro first-response-time metric).
 
-use crate::engine::channel::{DataSender, Mailbox};
+use crate::engine::channel::{DataSender, Mailbox, RingRecvError};
 use crate::engine::fault::{LogRecord, ReplayPos, WorkerSnapshot};
 use crate::engine::message::{
     BreakpointTarget, ControlMessage, DataEvent, DataMessage, LocalPredicate, WorkerEvent,
     WorkerId, WorkerStats,
 };
 use crate::engine::operator::{Emitter, Operator};
-use crate::engine::partitioner::{PartitionScheme, Partitioner};
+use crate::engine::partitioner::{hash_column, PartitionScheme, Partitioner, RouteVec};
 use crate::tuple::{Tuple, TupleBatch};
 use crate::workloads::TupleSource;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
@@ -167,6 +169,18 @@ struct TargetState {
     produced_since: f64,
 }
 
+/// Reusable per-batch scatter scratch: the stable-hash column (computed
+/// once per batch per key field and shared by every edge that
+/// partitions on that field) and the per-destination selection vectors.
+#[derive(Default)]
+struct ExchangeScratch {
+    hashes: Vec<u64>,
+    /// Key field the hash column currently holds, for the batch being
+    /// emitted (`None` = stale).
+    hashes_for: Option<usize>,
+    routes: RouteVec,
+}
+
 struct OutBox {
     id: WorkerId,
     edges: Vec<OutputEdge>,
@@ -179,6 +193,7 @@ struct OutBox {
     first_output_sent: bool,
     event_tx: Sender<WorkerEvent>,
     dead: bool,
+    scratch: ExchangeScratch,
 }
 
 impl OutBox {
@@ -364,13 +379,18 @@ impl Emitter for OutBox {
         }
     }
 
-    /// Scatter a whole batch through the per-edge partitioners in one
-    /// pass. On fan-out (broadcast) and single-destination edges,
-    /// full-size chunks forward the *shared* allocation directly and
-    /// smaller chunks are buffered up to `batch_size` (so message
-    /// sizing matches the tuple-at-a-time engine at any
-    /// `ctrl_check_interval`); multi-destination scatter routes tuple
-    /// by tuple, computing each key hash once.
+    /// Scatter a whole batch through the per-edge partitioners at batch
+    /// granularity ([`Partitioner::route_batch`]): the partitioning key
+    /// is hashed once per tuple into a memoized per-batch hash column
+    /// (shared by every edge keyed on the same field), destinations
+    /// come back as per-destination selection vectors, and the σ_w /
+    /// natural-share gauges are bumped **once per destination** instead
+    /// of once per tuple. Broadcast edges and single-run batches (all
+    /// tuples to one destination — structurally for one-to-one edges,
+    /// detected for hash/range) ship the *shared* allocation: full-size
+    /// chunks forward it directly, smaller chunks buffer up to
+    /// `batch_size` so message sizing matches the tuple-at-a-time
+    /// engine at any `ctrl_check_interval`.
     fn emit_batch(&mut self, batch: TupleBatch) {
         let n = batch.len();
         if n == 0 {
@@ -388,6 +408,8 @@ impl Emitter for OutBox {
                 self.note_target(t);
             }
         }
+        // New batch: whatever hash column the scratch holds is stale.
+        self.scratch.hashes_for = None;
         for e in 0..self.edges.len() {
             if self.edges[e].is_broadcast() {
                 if n >= self.batch_size {
@@ -407,39 +429,78 @@ impl Emitter for OutBox {
                         self.flush_broadcast(e);
                     }
                 }
-            } else if self.edges[e].senders.len() == 1
-                && self.edges[e].partitioner.active_overlays() == 0
-            {
-                // Single destination: every scheme routes to index 0.
-                let s = &self.edges[e].senders[0];
-                s.gauges.received.fetch_add(n as i64, Ordering::Relaxed);
-                s.gauges.base_received.fetch_add(n as i64, Ordering::Relaxed);
+                continue;
+            }
+            // Hash column: once per batch per key field.
+            if self.edges[e].partitioner.needs_hashes() {
+                let key = self.edges[e].partitioner.key_field().unwrap_or(0);
+                if self.scratch.hashes_for != Some(key) {
+                    hash_column(&batch, key, &mut self.scratch.hashes);
+                    self.scratch.hashes_for = Some(key);
+                }
+            }
+            let mut routes = std::mem::take(&mut self.scratch.routes);
+            self.edges[e]
+                .partitioner
+                .route_batch(&batch, &self.scratch.hashes, &mut routes);
+            // Natural-share gauge: one add per destination with tuples.
+            for d in 0..self.edges[e].senders.len() {
+                let c = routes.base_counts[d];
+                if c > 0 {
+                    self.edges[e].senders[d]
+                        .gauges
+                        .base_received
+                        .fetch_add(c as i64, Ordering::Relaxed);
+                }
+            }
+            if let Some(d) = routes.single {
+                // Single-run batch: ship the shared allocation, like
+                // broadcast — zero per-destination tuple clones.
+                self.edges[e].senders[d]
+                    .gauges
+                    .received
+                    .fetch_add(n as i64, Ordering::Relaxed);
                 if n >= self.batch_size {
-                    self.flush_one(e, 0);
-                    self.send_msg(e, 0, batch.clone());
+                    self.flush_one(e, d);
+                    self.send_msg(e, d, batch.clone());
                 } else {
-                    self.edges[e].buffers[0].extend_from_slice(batch.as_slice());
-                    if self.edges[e].buffers[0].len() >= self.batch_size {
-                        self.flush_one(e, 0);
+                    self.edges[e].buffers[d].extend_from_slice(batch.as_slice());
+                    if self.edges[e].buffers[d].len() >= self.batch_size {
+                        self.flush_one(e, d);
                     }
                 }
             } else {
-                for t in batch.iter() {
-                    let (base, dest) = self.edges[e].partitioner.route_with_base(t);
-                    self.edges[e].senders[dest]
+                for d in 0..self.edges[e].senders.len() {
+                    let sel_len = routes.sel[d].len();
+                    if sel_len == 0 {
+                        continue;
+                    }
+                    self.edges[e].senders[d]
                         .gauges
                         .received
-                        .fetch_add(1, Ordering::Relaxed);
-                    self.edges[e].senders[base]
-                        .gauges
-                        .base_received
-                        .fetch_add(1, Ordering::Relaxed);
-                    self.edges[e].buffers[dest].push(t.clone());
-                    if self.edges[e].buffers[dest].len() >= self.batch_size {
-                        self.flush_one(e, dest);
+                        .fetch_add(sel_len as i64, Ordering::Relaxed);
+                    // Append in batch_size-capped slices, flushing at
+                    // each boundary: message sizing (and the receiver's
+                    // data_queue_cap × batch_size memory bound) stays
+                    // identical to the per-tuple path even when one
+                    // emitted batch scatters many tuples to `d`.
+                    let mut start = 0usize;
+                    while start < sel_len {
+                        let buf = &mut self.edges[e].buffers[d];
+                        let room = self.batch_size.saturating_sub(buf.len()).max(1);
+                        let end = (start + room).min(sel_len);
+                        buf.reserve(end - start);
+                        for &i in &routes.sel[d][start..end] {
+                            buf.push(batch.get(i as usize).clone());
+                        }
+                        start = end;
+                        if self.edges[e].buffers[d].len() >= self.batch_size {
+                            self.flush_one(e, d);
+                        }
                     }
                 }
             }
+            self.scratch.routes = routes;
         }
     }
 }
@@ -493,7 +554,11 @@ struct Worker {
     resume_msg_count: u64,
     resume_offset: usize,
     /// Markers seen per epoch (mutable-state migration sync, §3.5.3).
-    marker_counts: std::collections::HashMap<u64, usize>,
+    marker_counts: HashMap<u64, usize>,
+    /// Per-key input counts accumulated lock-free during a batch and
+    /// merged into the shared `gauges.key_counts` map once per batch
+    /// (the old path took the gauge lock on the hot path).
+    local_key_counts: HashMap<u64, u64>,
     /// Re-evaluate port completion once input is drained (set when a
     /// scale event changed `upstream_counts` or seeded `eofs_seen`).
     recheck_ports: bool,
@@ -518,6 +583,7 @@ impl Worker {
                 first_output_sent: false,
                 event_tx: ctx.event_tx.clone(),
                 dead: false,
+                scratch: ExchangeScratch::default(),
             },
             mailbox: ctx.mailbox,
             event_tx: ctx.event_tx,
@@ -545,7 +611,8 @@ impl Worker {
             held_ctrl: VecDeque::new(),
             resume_msg_count: u64::MAX,
             resume_offset: 0,
-            marker_counts: std::collections::HashMap::new(),
+            marker_counts: HashMap::new(),
+            local_key_counts: HashMap::new(),
             recheck_ports: false,
             busy_ns: 0,
             dead: false,
@@ -979,6 +1046,7 @@ impl Worker {
                     self.current = Some((m, i));
                     self.busy_ns += t0.elapsed().as_nanos() as u64;
                     self.update_busy_gauge();
+                    self.flush_key_counts();
                     return;
                 }
                 idx = i;
@@ -986,12 +1054,16 @@ impl Worker {
             let end = (idx + self.chunk_len()).min(total);
             let chunk = msg.batch.slice(idx, end);
             // Optional per-key workload distribution (enabled only when
-            // SBK-style mitigation needs it).
+            // SBK-style mitigation needs it): accumulate into the
+            // worker-local map — no lock on the hot path; merged into
+            // the shared gauge once per batch.
             if self.mailbox.gauges.track_keys.load(Ordering::Relaxed) {
                 if let Some(Some(f)) = self.port_key_fields.get(port) {
-                    let mut counts = self.mailbox.gauges.key_counts.lock().unwrap();
                     for t in chunk.iter() {
-                        *counts.entry(t.get(*f).stable_hash()).or_insert(0) += 1;
+                        *self
+                            .local_key_counts
+                            .entry(t.get(*f).stable_hash())
+                            .or_insert(0) += 1;
                     }
                 }
             }
@@ -1013,6 +1085,7 @@ impl Worker {
                 }
                 self.busy_ns += t0.elapsed().as_nanos() as u64;
                 self.update_busy_gauge();
+                self.flush_key_counts();
                 return;
             }
             // Replay records due mid-batch (single-tuple chunks while
@@ -1025,12 +1098,27 @@ impl Worker {
                     self.current = Some((msg, idx));
                     self.busy_ns += t0.elapsed().as_nanos() as u64;
                     self.update_busy_gauge();
+                    self.flush_key_counts();
                     return;
                 }
             }
         }
         self.busy_ns += t0.elapsed().as_nanos() as u64;
         self.update_busy_gauge();
+        self.flush_key_counts();
+    }
+
+    /// Merge the batch-local per-key counts into the shared gauge map
+    /// (one lock per batch boundary; readers poll at metric-tick
+    /// cadence, so batch-granularity freshness suffices).
+    fn flush_key_counts(&mut self) {
+        if self.local_key_counts.is_empty() {
+            return;
+        }
+        let mut shared = self.mailbox.gauges.key_counts.lock().unwrap();
+        for (k, v) in self.local_key_counts.drain() {
+            *shared.entry(k).or_insert(0) += v;
+        }
     }
 
     fn update_busy_gauge(&self) {
@@ -1331,8 +1419,8 @@ impl Worker {
             }
             match self.mailbox.data.recv_timeout(Duration::from_millis(2)) {
                 Ok(ev) => self.handle_data_event(ev),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(RingRecvError::Empty) => {}
+                Err(RingRecvError::Disconnected) => {
                     // All senders gone; if EOFs were consumed we have
                     // finished already — otherwise treat as teardown.
                     if !self.finished {
@@ -1376,7 +1464,7 @@ mod tests {
         std::sync::Arc<crate::engine::channel::ControlInbox>,
         DataSender,
         std::sync::mpsc::Receiver<WorkerEvent>,
-        std::sync::mpsc::Receiver<DataEvent>,
+        crate::engine::channel::RingReceiver,
         std::thread::JoinHandle<()>,
     ) {
         single_worker_cfg(batch_size, 1)
@@ -1389,7 +1477,7 @@ mod tests {
         std::sync::Arc<crate::engine::channel::ControlInbox>,
         DataSender,
         std::sync::mpsc::Receiver<WorkerEvent>,
-        std::sync::mpsc::Receiver<DataEvent>,
+        crate::engine::channel::RingReceiver,
         std::thread::JoinHandle<()>,
     ) {
         let (in_tx, in_mb) = mailbox(64);

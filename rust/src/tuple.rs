@@ -52,35 +52,31 @@ impl Value {
         }
     }
 
-    /// Stable 64-bit hash of the value (used for hash partitioning).
-    /// FNV-1a — deterministic across runs, unlike `DefaultHasher` with
-    /// random keys, which matters for fault-tolerance replay.
+    /// Stable 64-bit hash of the value (used for hash partitioning,
+    /// SBK key sets, and keyed operator-state scopes).
+    ///
+    /// Deterministic and seed-free — unlike `DefaultHasher`'s random
+    /// keys — so hash routes are byte-stable across runs, which
+    /// fault-tolerance replay (§2.6.2) depends on. Scalars hash in one
+    /// full-avalanche round; strings are eaten a 64-bit word at a time
+    /// (wyhash-style) instead of the byte-at-a-time FNV loop this
+    /// replaced (one multiply per 8 bytes instead of per byte).
+    ///
+    /// Type tags keep `Int(1)`, `Float(1.0)` and `Str` values in
+    /// disjoint hash families. `-0.0` normalizes to `0.0` before
+    /// hashing: the two compare equal under `PartialEq`, so they must
+    /// co-partition — hashing the raw sign bit would route one logical
+    /// key to two different workers.
     pub fn stable_hash(&self) -> u64 {
-        const OFFSET: u64 = 0xcbf29ce484222325;
-        const PRIME: u64 = 0x100000001b3;
-        let mut h = OFFSET;
-        let mut eat = |bytes: &[u8]| {
-            for &b in bytes {
-                h ^= b as u64;
-                h = h.wrapping_mul(PRIME);
-            }
-        };
         match self {
-            Value::Null => eat(&[0]),
-            Value::Int(i) => {
-                eat(&[1]);
-                eat(&i.to_le_bytes());
-            }
+            Value::Null => mix64(TAG_NULL),
+            Value::Int(i) => mix64((*i as u64) ^ TAG_INT),
             Value::Float(f) => {
-                eat(&[2]);
-                eat(&f.to_bits().to_le_bytes());
+                let bits = if *f == 0.0 { 0 } else { f.to_bits() };
+                mix64(bits ^ TAG_FLOAT)
             }
-            Value::Str(s) => {
-                eat(&[3]);
-                eat(s.as_bytes());
-            }
+            Value::Str(s) => hash_bytes(s.as_bytes()),
         }
-        h
     }
 
     /// Approximate in-memory size in bytes (used by Maestro's
@@ -93,6 +89,48 @@ impl Value {
             Value::Str(s) => 16 + s.len(),
         }
     }
+}
+
+// Type tags xor-ed into scalar hashes (arbitrary odd 64-bit constants)
+// so equal bit patterns of different types land in disjoint families.
+const TAG_NULL: u64 = 0x6c62_272e_07bb_0142;
+const TAG_INT: u64 = 0xa076_1d64_78bd_642f;
+const TAG_FLOAT: u64 = 0xe703_7ed1_a0b4_28db;
+const TAG_STR: u64 = 0x8ebc_6af0_9c88_c6e3;
+
+/// SplitMix64 finalizer: a full-avalanche bijection on `u64`, so every
+/// input bit flips ~half the output bits — what `hash % receivers`
+/// needs to spread consecutive keys evenly.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Word-at-a-time byte-string hash: one multiply-rotate round per
+/// 64-bit word (FxHash-style), finalized by [`mix64`]. The length is
+/// folded into the seed, so the zero-padded tail word is unambiguous.
+#[inline]
+fn hash_bytes(bytes: &[u8]) -> u64 {
+    const M: u64 = 0x517c_c1b7_2722_0a95;
+    let mut h = TAG_STR ^ (bytes.len() as u64).wrapping_mul(M);
+    let mut chunks = bytes.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let w = u64::from_le_bytes(c.try_into().unwrap());
+        h = (h ^ w).wrapping_mul(M).rotate_left(23);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut w = 0u64;
+        for (i, &b) in rem.iter().enumerate() {
+            w |= (b as u64) << (8 * i);
+        }
+        h = (h ^ w).wrapping_mul(M).rotate_left(23);
+    }
+    mix64(h)
 }
 
 impl fmt::Display for Value {
@@ -350,6 +388,45 @@ mod tests {
             Value::Int(1).stable_hash(),
             Value::Float(1.0).stable_hash()
         );
+    }
+
+    #[test]
+    fn stable_hash_normalizes_negative_zero() {
+        // -0.0 and 0.0 are PartialEq-equal, so they must hash-route
+        // to the same worker at every parallelism (regression: the FNV
+        // path hashed the raw sign bit and split the key).
+        assert_eq!(Value::Float(-0.0), Value::Float(0.0));
+        assert_eq!(
+            Value::Float(-0.0).stable_hash(),
+            Value::Float(0.0).stable_hash()
+        );
+        for n in 2u64..10 {
+            assert_eq!(
+                Value::Float(-0.0).stable_hash() % n,
+                Value::Float(0.0).stable_hash() % n
+            );
+        }
+        // Other negative floats keep their sign.
+        assert_ne!(
+            Value::Float(-1.5).stable_hash(),
+            Value::Float(1.5).stable_hash()
+        );
+    }
+
+    #[test]
+    fn stable_hash_strings_word_at_a_time_boundaries() {
+        // Lengths around the 8-byte word boundary must stay distinct
+        // (tail-padding must not alias shorter strings).
+        let cases = ["", "a", "abcdefg", "abcdefgh", "abcdefghi", "abcdefgh\0"];
+        for (i, a) in cases.iter().enumerate() {
+            for b in cases.iter().skip(i + 1) {
+                assert_ne!(
+                    Value::str(a).stable_hash(),
+                    Value::str(b).stable_hash(),
+                    "{a:?} vs {b:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -28,7 +28,9 @@ pub const CA: usize = 6; // "California (location 6)" — §3.7.2
 pub const AZ: usize = 4; // "Arizona (location 4)"
 pub const IL: usize = 17; // "Illinois (location 17)"
 pub const TX: usize = 48; // "Texas (location 48)" — §3.7.5
-pub const WV: usize = 33; // West Virginia: shares CA's worker pre-mitigation
+// West Virginia: shares CA's worker pre-mitigation (co-located under
+// `stable_hash % 8`, the reshape experiments' worker count).
+pub const WV: usize = 32;
 
 /// Paper ratios (§3.7.2): actual CA:AZ and CA:IL tweet-count ratios.
 pub const CA_AZ_RATIO: f64 = 6.85;

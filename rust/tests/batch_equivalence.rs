@@ -104,6 +104,59 @@ fn sink_results_identical_across_batch_sizes() {
     }
 }
 
+/// Skewed hash shuffle: 95% of tuples carry one hot key, so most
+/// chunks route to a single destination and the exchange's single-run
+/// zero-copy path carries the bulk of the traffic, while the cold keys
+/// scatter through selection vectors. The sink multiset must be
+/// byte-identical to the per-tuple path at every batch size.
+#[test]
+fn skewed_hash_shuffle_identical_across_batch_sizes() {
+    fn run(batch_size: usize, ctrl_check_interval: usize) -> Vec<(i64, i64)> {
+        let mut w = Workflow::new();
+        let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+            let rows: Vec<Tuple> = (0..60_000usize)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| {
+                    let key = if i % 20 != 0 { 0 } else { (i % 50) as i64 + 1 };
+                    Tuple::new(vec![Value::Int(key), Value::Int(i as i64)])
+                })
+                .collect();
+            Box::new(VecSource::new(rows))
+        }));
+        let handle = SinkHandle::new(0);
+        let h2 = handle.clone();
+        let sink = w.add(OpSpec::unary(
+            "sink",
+            4,
+            PartitionScheme::Hash { key: 0 },
+            move |_, _| Box::new(CollectSink::new(h2.clone())),
+        ));
+        w.connect(scan, sink, 0);
+        let exec = Execution::start(
+            w,
+            Config { batch_size, ctrl_check_interval, ..Config::default() },
+        );
+        exec.join();
+        let mut rows: Vec<(i64, i64)> = handle
+            .tuples()
+            .iter()
+            .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_int().unwrap()))
+            .collect();
+        rows.sort_unstable();
+        rows
+    }
+    let per_tuple = run(1, 1);
+    assert_eq!(per_tuple.len(), 60_000);
+    for (batch, interval) in [(32usize, 32usize), (1024, 1024)] {
+        assert_eq!(
+            run(batch, interval),
+            per_tuple,
+            "batch_size={batch} interval={interval} diverged on the skewed shuffle"
+        );
+    }
+}
+
 #[test]
 fn sub_second_pause_at_batch_1024() {
     let total = 400_000usize;

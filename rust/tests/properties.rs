@@ -205,6 +205,126 @@ fn prop_partitioner_scale_events_valid_and_deterministic() {
     });
 }
 
+/// The vectorized exchange (`route_batch`) is observationally identical
+/// to the per-tuple path (`route_with_base`): under any interleaving of
+/// mitigation-overlay installs/clears, `set_route` epochs, `rescale`
+/// events and batch lengths, the selection vectors reproduce the exact
+/// per-tuple destinations AND the per-destination base (natural-share)
+/// gauge counts, and every stateful counter (round-robin cursor, SBR
+/// windows, catch-up cursor) stays in phase across batches.
+#[test]
+fn prop_route_batch_matches_per_tuple_under_events() {
+    use texera_amber::engine::partitioner::{hash_column, RouteVec};
+    use texera_amber::engine::scale::rescale_bounds;
+    use texera_amber::tuple::TupleBatch;
+
+    struct G;
+    impl Gen for G {
+        type Value = (u8, u64, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            // (scheme kind, initial receivers, event-stream seed)
+            (rng.below(4) as u8, 2 + rng.below(7), rng.next_u64())
+        }
+    }
+    check_n(22, 96, &G, |(kind, receivers, stream_seed)| {
+        let kind = *kind;
+        let mut n = *receivers as usize;
+        let bounds: Vec<Value> = (1..n as i64).map(|i| Value::Int(i * 1000)).collect();
+        let mk = |n: usize, bounds: &[Value]| -> Partitioner {
+            let s = match kind {
+                0 => PartitionScheme::Hash { key: 0 },
+                1 => PartitionScheme::RoundRobin,
+                2 => PartitionScheme::OneToOne,
+                _ => PartitionScheme::Range { key: 0, bounds: bounds.to_vec() },
+            };
+            Partitioner::new(s, n, 1)
+        };
+        // Twin partitioners: `pt` routes per tuple, `pb` per batch.
+        // Every control event applies to both, in the same order.
+        let mut pt = mk(n, &bounds);
+        let mut pb = mk(n, &bounds);
+        let mut rng = Rng::new(*stream_seed);
+        let mut hashes: Vec<u64> = Vec::new();
+        let mut routes = RouteVec::default();
+        for _ in 0..60 {
+            // 0-4 route, 5-6 install overlay, 7 clear, 8-9 rescale.
+            match rng.below(10) {
+                // Mostly: route a random batch both ways and compare.
+                0..=4 => {
+                    let len = 1 + rng.below(40) as usize;
+                    let batch: TupleBatch = (0..len)
+                        .map(|_| Tuple::new(vec![Value::Int(rng.below(8_000) as i64)]))
+                        .collect();
+                    let mut dests = Vec::with_capacity(len);
+                    let mut bases = vec![0u32; n];
+                    for t in batch.iter() {
+                        let (b, d) = pt.route_with_base(t);
+                        dests.push(d);
+                        bases[b] += 1;
+                    }
+                    hashes.clear();
+                    if pb.needs_hashes() {
+                        hash_column(&batch, 0, &mut hashes);
+                    }
+                    pb.route_batch(&batch, &hashes, &mut routes);
+                    if routes.broadcast {
+                        return false;
+                    }
+                    if routes.dests(len, n) != dests {
+                        return false;
+                    }
+                    for d in 0..n {
+                        if routes.base_counts[d] != bases[d] {
+                            return false;
+                        }
+                    }
+                }
+                // Install a random overlay route (covering every
+                // ShareMode branch; indices may be stale after scale).
+                5 | 6 => {
+                    let skewed = rng.below(10) as usize;
+                    let helper = rng.below(10) as usize;
+                    let key = Value::Int(rng.below(8_000) as i64).stable_hash();
+                    let mode = match rng.below(5) {
+                        0 => ShareMode::CatchUpAll,
+                        1 => ShareMode::CatchUpKeys(vec![key]),
+                        2 => ShareMode::SplitRecords {
+                            num: 1 + rng.below(9) as u32,
+                            den: 10,
+                        },
+                        3 => ShareMode::SplitRecordsKeys {
+                            keys: vec![key],
+                            num: 1 + rng.below(4) as u32,
+                            den: 5,
+                        },
+                        _ => ShareMode::SplitKeys(vec![key]),
+                    };
+                    let epoch = rng.below(9);
+                    let route = MitigationRoute { skewed, helper, mode, epoch };
+                    pt.set_route(route.clone());
+                    pb.set_route(route);
+                }
+                // Clear a route.
+                7 => {
+                    let skewed = rng.below(10) as usize;
+                    let helper = rng.below(10) as usize;
+                    pt.clear_route(skewed, helper);
+                    pb.clear_route(skewed, helper);
+                }
+                // Scale event: new receiver count + recomputed bounds.
+                _ => {
+                    let new_n = 1 + rng.below(8) as usize;
+                    let nb = rescale_bounds(&bounds, new_n);
+                    pt.rescale(new_n, Some(nb.clone()));
+                    pb.rescale(new_n, Some(nb));
+                    n = new_n;
+                }
+            }
+        }
+        true
+    });
+}
+
 // ---------- breakpoints ----------
 
 /// COUNT breakpoint protocol: regardless of worker progress order, the
@@ -415,19 +535,21 @@ fn prop_region_partition_and_choices() {
 /// Seeded command-fuzzer over one workflow: random interleavings of
 /// pause/resume, checkpoint, Reshape-style mitigation routes, and
 /// elastic scale commands must preserve the exact sink result. Three
-/// rounds per run; `CHAOS_SEED` (CI matrix) shifts the whole stream.
+/// rounds per run, each at a different batch size (32 / 256 / 1024) so
+/// the vectorized exchange is fuzzed across buffering regimes;
+/// `CHAOS_SEED` (CI matrix) shifts the whole command/timing stream.
 #[test]
 fn prop_chaos_control_interleavings_preserve_results() {
     let base: u64 = std::env::var("CHAOS_SEED")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(7);
-    for round in 0..3 {
-        chaos_round(base.wrapping_mul(1000).wrapping_add(round));
+    for (round, batch_size) in [(0u64, 256usize), (1, 1024), (2, 32)] {
+        chaos_round(base.wrapping_mul(1000).wrapping_add(round), batch_size);
     }
 }
 
-fn chaos_round(seed: u64) {
+fn chaos_round(seed: u64, batch_size: usize) {
     use std::time::Duration;
     use texera_amber::config::Config;
     use texera_amber::engine::{ControlMessage, Execution, OpSpec, WorkerId, Workflow};
@@ -488,7 +610,7 @@ fn chaos_round(seed: u64) {
     w.connect(partial, fin, 0);
     w.connect(fin, sink, 0);
 
-    let exec = Execution::start(w, Config { batch_size: 256, ..Config::default() });
+    let exec = Execution::start(w, Config { batch_size, ..Config::default() });
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Worker counts as far as the driver knows (a refused scale —

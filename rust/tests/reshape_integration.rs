@@ -63,6 +63,31 @@ fn worker_of(location: usize, workers: usize) -> usize {
     (Value::Int(location as i64).stable_hash() % workers as u64) as usize
 }
 
+/// Pins the workload invariant `tweets::WV` encodes: the small WV key
+/// co-locates with the CA hot key at the experiments' 8-worker
+/// parallelism (§3.7.4 relies on a small key sharing the skewed
+/// worker), and the monitored keys stay on distinct workers. The
+/// constant is hash-dependent — anyone changing `Value::stable_hash`
+/// must re-derive it, and this test is what tells them.
+#[test]
+fn wv_co_locates_with_ca_and_monitored_keys_stay_distinct() {
+    assert_eq!(
+        worker_of(tweets::WV, 8),
+        worker_of(tweets::CA, 8),
+        "tweets::WV must share CA's worker at 8-way parallelism; \
+         re-derive the WV constant for the current stable_hash"
+    );
+    let ca = worker_of(tweets::CA, 8);
+    for (name, key) in [("AZ", tweets::AZ), ("IL", tweets::IL), ("TX", tweets::TX)] {
+        assert_ne!(
+            worker_of(key, 8),
+            ca,
+            "{name} unexpectedly landed on CA's worker; the ratio/skew \
+             experiments assume the monitored keys are on distinct workers"
+        );
+    }
+}
+
 fn reshape_cfg() -> Config {
     Config {
         batch_size: 64,
