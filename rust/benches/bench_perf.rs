@@ -10,17 +10,23 @@
 //!
 //! Results land in `BENCH_perf.json` at the repository root (falling
 //! back to the crate dir when run elsewhere), so the perf trajectory
-//! is tracked across PRs. The per-tuple exchange path is retained as
+//! is tracked across PRs; the file's full schema — every section,
+//! field meanings and units — is documented in `docs/BENCH.md`. The
+//! per-tuple exchange path is retained as
 //! `Partitioner::route_with_base`, so "old vs new" is re-measured live
-//! on every run rather than pinned to stale numbers.
+//! on every run rather than pinned to stale numbers. The `maestro`
+//! section compares a static region schedule against the elastic,
+//! observation-driven one (per-region worker budget + re-planning).
 
 use std::time::{Duration, Instant};
 
 use texera_amber::config::Config;
 use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
-use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::maestro::cost::CostParams;
+use texera_amber::maestro::MaestroScheduler;
+use texera_amber::operators::basic::{Cmp, Filter, MapUdf};
 use texera_amber::operators::group_by::{AggKind, GroupByFinal, GroupByPartial};
-use texera_amber::operators::{CollectSink, CountByKeySink, SinkHandle};
+use texera_amber::operators::{CollectSink, CountByKeySink, HashJoin, SinkHandle};
 use texera_amber::engine::partitioner::{
     hash_column, PartitionScheme as PS, Partitioner, RouteVec,
 };
@@ -37,12 +43,13 @@ fn main() {
     let shuffle = shuffle_section(smoke);
     let micro = scatter_micro_section(smoke);
     let elastic = elastic_scaling(smoke);
+    let maestro = maestro_section(smoke);
     if smoke {
         // Smoke totals are not trajectory-quality numbers: exercise
         // the sections but leave the recorded BENCH_perf.json alone.
         println!("(smoke: BENCH_perf.json not written)");
     } else {
-        write_bench_json(&rows, baseline, &elastic, &shuffle, &micro);
+        write_bench_json(&rows, baseline, &elastic, &shuffle, &micro, &maestro);
         routing_cost();
         pause_latency();
         pjrt_classifier_throughput();
@@ -355,14 +362,157 @@ fn elastic_scaling(smoke: bool) -> ElasticBench {
     }
 }
 
+/// Maestro static-vs-elastic schedule comparison on one skewed
+/// multi-region workflow.
+struct MaestroBench {
+    rows: usize,
+    budget: usize,
+    static_frt_s: f64,
+    static_total_s: f64,
+    elastic_frt_s: f64,
+    elastic_total_s: f64,
+    replans: usize,
+    scales_applied: usize,
+}
+
+/// The skewed multi-region workflow: one scan replicates into an
+/// expensive build-side UDF chain (the paper's ML stand-in) and into
+/// the probe of a strict join, so the region graph is cyclic and
+/// Maestro must materialize a probe-path edge. The ancestor region
+/// carries the UDF, so its completion time dominates the sink region's
+/// first response time — exactly the lever per-region worker
+/// assignment moves. Keys are 90% hot (key 0), the rest spread, with
+/// rows `i < 64` carrying key `i` so the build side (`val < 64`) holds
+/// one row per key and the join emits one tuple per probe row.
+fn maestro_workflow(
+    rows: usize,
+    udf_cost_ns: u64,
+) -> (Workflow, SinkHandle, usize, usize, usize) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let data: Vec<Tuple> = (0..rows)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                let key = if i < 64 {
+                    i as i64
+                } else if i % 10 != 0 {
+                    0
+                } else {
+                    (i % 64) as i64
+                };
+                Tuple::new(vec![Value::Int(key), Value::Int(i as i64)])
+            })
+            .collect();
+        Box::new(VecSource::new(data)) as Box<dyn TupleSource>
+    }));
+    let udf = w.add(OpSpec::unary("udf_build", 2, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(MapUdf::identity(udf_cost_ns))
+    }));
+    let buildf = w.add(OpSpec::unary("buildf", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Lt, Value::Int(64)))
+    }));
+    let prep = w.add(OpSpec::unary("prep", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Ge, Value::Int(0)))
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        2,
+        [PartitionScheme::Hash { key: 0 }, PartitionScheme::Hash { key: 0 }],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 0).strict()),
+    ));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, udf, 0);
+    w.connect(udf, buildf, 0);
+    w.connect(buildf, join, 0);
+    w.connect(scan, prep, 0);
+    w.connect(prep, join, 1);
+    w.connect(join, sink, 0);
+    (w, handle, sink, udf, buildf)
+}
+
+/// One scheduled run; returns (measured FRT s, end-to-end s, replans,
+/// scales applied).
+fn maestro_run(
+    rows: usize,
+    udf_cost_ns: u64,
+    budget: usize,
+) -> (f64, f64, usize, usize) {
+    let (w, handle, sink, udf, buildf) = maestro_workflow(rows, udf_cost_ns);
+    let mut cost = CostParams::new();
+    cost.source_rows.insert(0, rows as f64);
+    cost.tuple_cost.insert(udf, udf_cost_ns as f64 / 1_000.0);
+    cost.selectivity.insert(buildf, 64.0 / rows as f64);
+    let cfg = Config {
+        max_workers: budget,
+        ctrl_check_interval: 64,
+        ..Config::default()
+    };
+    let sched = MaestroScheduler::new(cfg, cost);
+    let t0 = Instant::now();
+    let outcome = sched.run(w, &[sink]);
+    let total = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        handle.total(),
+        rows as u64,
+        "maestro bench dropped tuples (budget {budget})"
+    );
+    let applied = outcome
+        .replans
+        .iter()
+        .flat_map(|r| r.decisions.iter())
+        .filter(|d| d.applied)
+        .count();
+    (outcome.measured_frt, total, outcome.replans.len(), applied)
+}
+
+/// Static-schedule vs elastic-schedule FRT and end-to-end time on the
+/// skewed multi-region workflow — recorded in BENCH_perf.json (the
+/// acceptance row for elastic region scheduling is elastic FRT ≤
+/// static FRT).
+fn maestro_section(smoke: bool) -> MaestroBench {
+    println!("--- maestro: static vs elastic region schedule (skewed multi-region workflow) ---");
+    let rows = if smoke { 4_000 } else { 20_000 };
+    let udf_cost_ns: u64 = if smoke { 15_000 } else { 25_000 };
+    let budget = 8usize;
+    let (static_frt, static_total, _, _) = maestro_run(rows, udf_cost_ns, 0);
+    let (elastic_frt, elastic_total, replans, scales) =
+        maestro_run(rows, udf_cost_ns, budget);
+    println!(
+        "  static : FRT {static_frt:.3}s | end-to-end {static_total:.3}s (authored counts)"
+    );
+    println!(
+        "  elastic: FRT {elastic_frt:.3}s | end-to-end {elastic_total:.3}s \
+         (budget {budget}, {replans} re-plans, {scales} scales applied)"
+    );
+    println!("  FRT speedup: {:.2}x\n", static_frt / elastic_frt);
+    MaestroBench {
+        rows,
+        budget,
+        static_frt_s: static_frt,
+        static_total_s: static_total,
+        elastic_frt_s: elastic_frt,
+        elastic_total_s: elastic_total,
+        replans,
+        scales_applied: scales,
+    }
+}
+
 /// Write BENCH_perf.json (machine-readable perf trajectory) at the
 /// repository root, so the bench trajectory accumulates across PRs.
+/// The file's schema is documented in `docs/BENCH.md`.
 fn write_bench_json(
     rows: &[(usize, usize, f64)],
     baseline: f64,
     elastic: &ElasticBench,
     shuffle: &[ShuffleRow],
     micro: &ScatterMicro,
+    maestro: &MaestroBench,
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"throughput_vs_batch_size\",\n");
@@ -425,8 +575,28 @@ fn write_bench_json(
         elastic.before_tps, elastic.after_tps
     ));
     s.push_str(&format!(
-        "    \"post_scale_speedup\": {es:.2}, \"fence_ms\": {:.1}\n  }}\n",
+        "    \"post_scale_speedup\": {es:.2}, \"fence_ms\": {:.1}\n  }},\n",
         elastic.fence_ms
+    ));
+    s.push_str("  \"maestro\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan->udf_build(25us/tuple)->buildf->join.build, scan->prep->join.probe (strict), join->sink; 90% hot key; probe path materialized\",\n",
+    );
+    s.push_str(&format!(
+        "    \"rows\": {}, \"worker_budget\": {},\n",
+        maestro.rows, maestro.budget
+    ));
+    s.push_str(&format!(
+        "    \"static\": {{\"frt_s\": {:.4}, \"end_to_end_s\": {:.4}}},\n",
+        maestro.static_frt_s, maestro.static_total_s
+    ));
+    s.push_str(&format!(
+        "    \"elastic\": {{\"frt_s\": {:.4}, \"end_to_end_s\": {:.4}, \"replans\": {}, \"scales_applied\": {}}},\n",
+        maestro.elastic_frt_s, maestro.elastic_total_s, maestro.replans, maestro.scales_applied
+    ));
+    s.push_str(&format!(
+        "    \"frt_speedup\": {:.2}\n  }}\n",
+        maestro.static_frt_s / maestro.elastic_frt_s
     ));
     s.push_str("}\n");
     // `cargo bench` runs with the crate dir as CWD; the trajectory

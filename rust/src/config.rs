@@ -94,6 +94,17 @@ pub struct Config {
     pub maestro_tuple_cost: f64,
     /// Cost-model constant: per-byte materialization write+read cost.
     pub maestro_mat_byte_cost: f64,
+    /// Per-region worker budget for **elastic region scheduling**: the
+    /// scheduler assigns each region's operators worker counts summing
+    /// to at most this many workers, and re-plans the counts from
+    /// observed statistics between region activations. The cap is **per
+    /// region**, not global: Maestro's schedule is region-sequential
+    /// along every dependency chain, but independent sibling regions
+    /// (disjoint ancestor sets) can run concurrently and then each hold
+    /// up to this many busy workers at once. `0` disables elasticity —
+    /// every operator deploys at its authored `OpSpec.workers`, exactly
+    /// the pre-elastic behavior.
+    pub max_workers: usize,
 
     // ---- misc ----
     /// RNG seed for workload generation.
@@ -128,6 +139,7 @@ impl Default for Config {
             autoscale_sustain_ticks: 5,
             maestro_tuple_cost: 1.0,
             maestro_mat_byte_cost: 0.01,
+            max_workers: 0,
             seed: 0xA3BE12,
             artifacts_dir: "artifacts".to_string(),
         }

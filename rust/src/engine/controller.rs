@@ -946,18 +946,27 @@ impl Coordinator {
                 let _ = reply.send(());
             }
             Command::Stats { reply } => {
-                // Read gauges directly (cheap, no round trip).
+                // Completed workers report their exact final stats (the
+                // gauges can lag output emitted inside `finish_port`/
+                // `finish`, e.g. a group-by's entire result — Maestro's
+                // re-planner reads these as observed cardinalities, so
+                // exactness matters); live workers read gauges directly
+                // (cheap, no round trip).
+                let done: HashMap<WorkerId, &WorkerStats> =
+                    self.final_stats.iter().map(|(id, s)| (*id, s)).collect();
                 let mut out = Vec::new();
                 for (id, h) in &self.handles {
-                    out.push((
-                        *id,
-                        WorkerStats {
+                    let stats = match done.get(id) {
+                        Some(s) => (*s).clone(),
+                        None => WorkerStats {
                             processed: h.gauges.processed.load(Ordering::Relaxed) as u64,
                             produced: h.gauges.produced.load(Ordering::Relaxed) as u64,
                             queued: h.gauges.queued.load(Ordering::Relaxed),
                             state_tuples: 0,
+                            busy_ns: h.gauges.busy_ns.load(Ordering::Relaxed).max(0) as u64,
                         },
-                    ));
+                    };
+                    out.push((*id, stats));
                 }
                 out.sort_by_key(|(id, _)| *id);
                 let _ = reply.send(out);

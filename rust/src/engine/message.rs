@@ -205,6 +205,13 @@ pub struct WorkerStats {
     pub produced: u64,
     pub queued: i64,
     pub state_tuples: u64,
+    /// Nanoseconds this worker has spent processing tuples (the
+    /// Flink-style busy-time base, §3.7.12), exposed for observation
+    /// harnesses. Folding it into Maestro's per-tuple cost calibration
+    /// is still open (see ROADMAP, "Result-aware elastic region
+    /// scheduling"); today the re-planner feeds back cardinalities and
+    /// materialized bytes only.
+    pub busy_ns: u64,
 }
 
 /// Worker → coordinator events.

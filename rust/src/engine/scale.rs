@@ -61,6 +61,20 @@
 //! that already have completed workers (the EOF cascade is under way)
 //! are refused — `scale_operator` returns `Duration::ZERO`.
 //!
+//! **Maestro integration.** The region scheduler
+//! ([`MaestroScheduler`](crate::maestro::MaestroScheduler)) drives this
+//! protocol between region activations: with a worker budget
+//! configured ([`Config::max_workers`](crate::config::Config)), it
+//! re-plans the remaining regions' worker counts from observed
+//! statistics and applies the deltas here while those regions' workers
+//! are **alive but dormant** — deployed, paused on empty inputs,
+//! sources not yet started. Scaling an idle operator exercises the
+//! same fence as a mid-stream scale; there is simply no pending input
+//! to surrender. Operators whose region already drained through
+//! pipelined links (and thus completed without an explicit await) are
+//! refused by the completed-workers guard, which the scheduler treats
+//! as "keep the deploy-time count".
+//!
 //! **Interactions.** Mitigation overlays are cleared on every scale
 //! (their indices and hash bases refer to the old set); Reshape
 //! re-detects skew against the new set, and stale `UpdateRoute`s that

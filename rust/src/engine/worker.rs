@@ -29,7 +29,7 @@
 //! * local conditional breakpoints (§2.5.2) and global-breakpoint
 //!   target counting (§2.5.3);
 //! * output batching + partitioning with Reshape's mitigation overlay
-//!   ([`OutBox`] scatters whole batches through
+//!   (the worker-private `OutBox` scatters whole batches through
 //!   [`Partitioner::route_batch`] selection vectors — one stable hash
 //!   per tuple into a memoized per-batch hash column, receiver gauges
 //!   bumped once per destination — and ships broadcast edges and
@@ -661,6 +661,7 @@ impl Worker {
             produced: self.out.produced,
             queued: self.mailbox.gauges.queued.load(Ordering::Relaxed),
             state_tuples: self.op.state_size() as u64,
+            busy_ns: self.busy_ns,
         }
     }
 
@@ -1263,6 +1264,11 @@ impl Worker {
         self.finished = true;
         self.op.finish(&mut self.out);
         self.out.send_eof();
+        // Sync the gauges one last time: `finish_port`/`finish` may have
+        // emitted output (group-by results, sink deliveries) since the
+        // last batch-boundary update, and gauge readers (autoscale,
+        // Maestro observation) must see the final counts.
+        self.update_busy_gauge();
         let _ = self.event_tx.send(WorkerEvent::Completed {
             worker: self.id,
             stats: self.stats(),

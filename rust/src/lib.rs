@@ -22,15 +22,25 @@
 //!   dispatch, routing and clone costs amortize across the batch.
 //! * [`reshape`] — **Reshape** (Ch. 3): adaptive, result-aware
 //!   partitioning-skew mitigation built on the engine's control messages.
-//! * [`maestro`] — **Maestro** (Ch. 4): result-aware region scheduling
-//!   with materialization-choice enumeration minimizing first response
-//!   time.
+//! * [`maestro`] — **Maestro** (Ch. 4): result-aware, **elastic**
+//!   region scheduling — materialization-choice enumeration and a
+//!   worker-aware first-response-time cost model pick a plan under a
+//!   cluster-wide worker budget, and observed statistics re-plan the
+//!   remaining regions' worker counts between region activations
+//!   (applied through the engine's fenced scaling).
 //!
 //! Supporting substrates: [`operators`] (relational + ML operator
 //! library), [`workloads`] (synthetic TPC-H/DSB/tweet generators),
 //! [`batch`] (a stage-by-stage comparator engine standing in for Spark),
 //! [`runtime`] (PJRT loader for the AOT-compiled JAX/Pallas artifacts),
 //! and [`metrics`]/[`util`] utilities.
+//!
+//! A chapter-by-chapter map of the dissertation onto these modules —
+//! including the full region-scheduling lifecycle walkthrough
+//! (enumerate → cost → deploy dormant → activate → observe → re-plan →
+//! scale) with pointers into the code — lives in `docs/ARCHITECTURE.md`
+//! at the repository root; the perf-trajectory file the benches write
+//! is documented in `docs/BENCH.md`.
 
 pub mod util;
 pub mod tuple;

@@ -1,44 +1,105 @@
-//! First-response-time cost model (§4.5.3–4.5.4).
+//! First-response-time cost model (§4.5.3–4.5.4), **worker-aware**.
 //!
 //! For a materialization choice c applied to a workflow, the first
 //! response time is
 //!
 //! ```text
-//! FRT(c) = Σ_{r ∈ ancestors(sink region)} time(r) + ε_first(sink region)
+//! FRT(c, n⃗) = Σ_{r ∈ ancestors(sink region)} time(r, n⃗) + ε_first(sink region)
 //! ```
 //!
 //! — every region the sink region (transitively) depends on must fully
 //! execute, then the sink region only needs to produce a single tuple
 //! (Fig. 4.13). Region time is modeled from per-operator cardinality
-//! and per-tuple cost estimates divided by worker parallelism, plus
-//! per-byte materialization write/read costs on the region's
-//! materialized boundaries (Fig. 4.14 extends this to the several
-//! sink-containing regions; we take the minimum when multiple sinks
-//! exist).
+//! and per-tuple cost estimates divided by the operator's **worker
+//! count** n⃗, plus per-byte materialization write/read costs on the
+//! region's materialized boundaries.
+//!
+//! Two things make the model *elastic* and *result-aware*:
+//!
+//! 1. **Joint planning.** [`best_choice_elastic`] searches over
+//!    (materialization choice × per-region worker assignment) pairs: for
+//!    every enumerated choice it calls [`assign_workers`], which
+//!    distributes a cluster-wide budget ([`Config::max_workers`]) over
+//!    each region's operators by greedy marginal gain — one worker at a
+//!    time to the operator whose modeled region-time drops the most,
+//!    which converges to the square-root allocation n_i ∝ √work_i the
+//!    continuous relaxation prescribes. Operators tied by one-to-one
+//!    edges (e.g. a `MatWriter` behind its producer) are grouped and
+//!    always share one count. The budget applies **per region**, not to
+//!    the whole workflow at once — the Maestro schedule is
+//!    region-sequential along every dependency chain, though
+//!    independent sibling regions may overlap and transiently hold the
+//!    budget each.
+//!
+//! 2. **Observed cardinalities.** [`CostParams::pinned_rows`] overrides
+//!    the estimated rows-out of an operator with a measured value. The
+//!    scheduler pins every completed operator's actual output (and every
+//!    finished `MatStore`'s row count) before re-planning the remaining
+//!    regions, so later decisions are driven by data properties observed
+//!    at runtime rather than plan-time guesses — the Whiz/F² argument
+//!    for decoupling work allocation from the static plan.
+//!
+//! [`Config::max_workers`]: crate::config::Config::max_workers
 
 use crate::engine::dag::Workflow;
+use crate::engine::partitioner::PartitionScheme;
 use crate::maestro::materialize::apply_choice;
-use crate::maestro::region::region_of;
+use crate::maestro::region::{region_of, Region};
 use std::collections::HashMap;
 
 /// Cardinality / cost annotations for the model.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct CostParams {
     /// Rows produced by each source operator.
     pub source_rows: HashMap<usize, f64>,
     /// Output/input selectivity per operator (default 1.0).
     pub selectivity: HashMap<usize, f64>,
-    /// Per-tuple processing cost per operator (default 1.0).
+    /// Per-tuple processing cost per operator (default
+    /// [`default_tuple_cost`](Self::default_tuple_cost)).
     pub tuple_cost: HashMap<usize, f64>,
+    /// Per-tuple cost for operators without a `tuple_cost` entry
+    /// ([`Config::maestro_tuple_cost`](crate::config::Config)).
+    pub default_tuple_cost: f64,
     /// Average bytes per tuple (materialization sizing; default 64).
     pub bytes_per_tuple: f64,
     /// Cost per byte written+read at a materialized boundary.
     pub mat_byte_cost: f64,
+    /// **Observed** rows-out per operator: overrides the estimate in
+    /// [`cardinalities`] and stops selectivity errors from propagating
+    /// past a measured point. The scheduler fills this between region
+    /// activations from completed operators' `produced` counters and
+    /// finished `MatStore`s.
+    pub pinned_rows: HashMap<usize, f64>,
+}
+
+impl Default for CostParams {
+    fn default() -> CostParams {
+        CostParams {
+            source_rows: HashMap::new(),
+            selectivity: HashMap::new(),
+            tuple_cost: HashMap::new(),
+            default_tuple_cost: 1.0,
+            bytes_per_tuple: 64.0,
+            mat_byte_cost: 0.01,
+            pinned_rows: HashMap::new(),
+        }
+    }
 }
 
 impl CostParams {
     pub fn new() -> CostParams {
-        CostParams { bytes_per_tuple: 64.0, mat_byte_cost: 0.01, ..Default::default() }
+        CostParams::default()
+    }
+
+    /// Seed the model constants from the engine configuration
+    /// (`maestro_tuple_cost` is the default per-tuple cost unit,
+    /// `maestro_mat_byte_cost` the materialization IO cost).
+    pub fn from_config(config: &crate::config::Config) -> CostParams {
+        CostParams {
+            default_tuple_cost: config.maestro_tuple_cost,
+            mat_byte_cost: config.maestro_mat_byte_cost,
+            ..Default::default()
+        }
     }
 
     fn sel(&self, op: usize) -> f64 {
@@ -46,40 +107,80 @@ impl CostParams {
     }
 
     fn cost(&self, op: usize) -> f64 {
-        self.tuple_cost.get(&op).copied().unwrap_or(1.0)
+        self.tuple_cost
+            .get(&op)
+            .copied()
+            .unwrap_or(self.default_tuple_cost)
     }
 }
 
 /// Estimated rows flowing *out of* each operator (topological pass).
-/// Multi-input operators emit the sum of inputs times selectivity.
+/// Multi-input operators emit the sum of inputs times selectivity; an
+/// operator with a [`CostParams::pinned_rows`] entry emits exactly the
+/// observed value instead, and downstream estimates build on it.
 pub fn cardinalities(w: &Workflow, p: &CostParams) -> Vec<f64> {
     let mut rows_out = vec![0.0f64; w.ops.len()];
     let order = w.topo_order();
     for &op in &order {
-        let rows_in: f64 = if w.ops[op].is_source {
-            p.source_rows.get(&op).copied().unwrap_or(1000.0)
-        } else {
-            w.in_edges(op).iter().map(|e| rows_out[e.from]).sum()
-        };
-        rows_out[op] = rows_in * p.sel(op);
+        if let Some(&obs) = p.pinned_rows.get(&op) {
+            rows_out[op] = obs;
+            continue;
+        }
+        rows_out[op] = rows_in_of(w, p, &rows_out, op) * p.sel(op);
     }
     rows_out
 }
 
-/// Per-operator work: rows_in · cost / workers.
-fn op_work(w: &Workflow, p: &CostParams, rows_out: &[f64], op: usize) -> f64 {
-    let rows_in: f64 = if w.ops[op].is_source {
+/// Rows entering an operator given the rows-out of its upstreams.
+fn rows_in_of(w: &Workflow, p: &CostParams, rows_out: &[f64], op: usize) -> f64 {
+    if w.ops[op].is_source {
         p.source_rows.get(&op).copied().unwrap_or(1000.0)
     } else {
         w.in_edges(op).iter().map(|e| rows_out[e.from]).sum()
-    };
-    rows_in * p.cost(op) / w.ops[op].workers.max(1) as f64
+    }
 }
 
-/// First response time of the workflow after materializing `choice`.
-/// Also returns the total materialized bytes (the Figs. 4.23/4.24
-/// metric). `sink_ops` are the result operators to measure (first
-/// tuple out of any of them).
+/// Per-operator work at parallelism `n`: rows_in · cost / n.
+fn op_work_n(w: &Workflow, p: &CostParams, rows_out: &[f64], op: usize, n: usize) -> f64 {
+    rows_in_of(w, p, rows_out, op) * p.cost(op) / n.max(1) as f64
+}
+
+/// Time to fully execute one region at the given worker counts:
+/// per-operator work plus materialization IO on the region's writer
+/// and reader boundaries (IO cost is volume-bound, not divided by
+/// workers).
+fn region_time(
+    w: &Workflow,
+    p: &CostParams,
+    rows_out: &[f64],
+    r: &Region,
+    workers: &[usize],
+    writers: &[usize],
+    readers: &[usize],
+) -> f64 {
+    let mut t: f64 = r
+        .ops
+        .iter()
+        .map(|&op| op_work_n(w, p, rows_out, op, workers[op]))
+        .sum();
+    for &wr in writers {
+        if r.contains(wr) {
+            t += rows_in_of(w, p, rows_out, wr) * p.bytes_per_tuple * p.mat_byte_cost;
+        }
+    }
+    for &rd in readers {
+        if r.contains(rd) {
+            t += rows_out[rd] * p.bytes_per_tuple * p.mat_byte_cost;
+        }
+    }
+    t
+}
+
+/// First response time of the workflow after materializing `choice`,
+/// at the workflow's **authored** worker counts. Also returns the total
+/// estimated materialized bytes (the Figs. 4.23/4.24 metric).
+/// `sink_ops` are the result operators to measure (first tuple out of
+/// any of them).
 pub fn first_response_time(
     w: &Workflow,
     choice: &[usize],
@@ -87,6 +188,19 @@ pub fn first_response_time(
     sink_ops: &[usize],
 ) -> (f64, f64) {
     let m = apply_choice(w, choice);
+    let workers: Vec<usize> = m.workflow.ops.iter().map(|o| o.workers).collect();
+    frt_of_materialized(&m, p, sink_ops, &workers)
+}
+
+/// FRT + estimated materialized bytes of an already-materialized
+/// workflow at explicit per-operator worker counts (indexed like
+/// `m.workflow.ops`).
+pub fn frt_of_materialized(
+    m: &crate::maestro::materialize::Materialized,
+    p: &CostParams,
+    sink_ops: &[usize],
+    workers: &[usize],
+) -> (f64, f64) {
     let mw = &m.workflow;
     let g = crate::maestro::region_graph::region_graph_ext(mw, &m.links);
     let rows_out = cardinalities(mw, p);
@@ -94,55 +208,29 @@ pub fn first_response_time(
     let mat_bytes: f64 = m
         .writers
         .iter()
-        .map(|&wr| {
-            let rows: f64 = mw.in_edges(wr).iter().map(|e| rows_out[e.from]).sum();
-            rows * p.bytes_per_tuple
-        })
+        .map(|&wr| rows_in_of(mw, p, &rows_out, wr) * p.bytes_per_tuple)
         .sum();
-    // Region execution times (full completion).
-    let region_time: Vec<f64> = g
+    let times: Vec<f64> = g
         .regions
         .iter()
-        .map(|r| {
-            let mut t: f64 = r.ops.iter().map(|&op| op_work(mw, p, &rows_out, op)).sum();
-            // Materialization IO inside this region: writers add write
-            // cost; readers add read cost.
-            for &wr in &m.writers {
-                if r.contains(wr) {
-                    let rows: f64 =
-                        mw.in_edges(wr).iter().map(|e| rows_out[e.from]).sum();
-                    t += rows * p.bytes_per_tuple * p.mat_byte_cost;
-                }
-            }
-            for &rd in &m.readers {
-                if r.contains(rd) {
-                    t += rows_out[rd] * p.bytes_per_tuple * p.mat_byte_cost;
-                }
-            }
-            t
-        })
+        .map(|r| region_time(mw, p, &rows_out, r, workers, &m.writers, &m.readers))
         .collect();
     // FRT per sink: ancestors fully execute; the sink region produces
-    // one tuple (ε — modeled as the region's pipeline latency: one
-    // tuple through each op, negligible vs region times; we charge the
-    // per-tuple cost chain).
+    // one tuple (ε — the single-tuple latency through the region's
+    // operator chain, negligible against region times).
     let mut best = f64::INFINITY;
     for &sink in sink_ops {
         let rs = region_of(&g.regions, sink);
         let ancestors = g.ancestors(rs);
-        let mut t: f64 = ancestors.iter().map(|&r| region_time[r]).sum();
-        // Single-tuple latency through the sink region's operator chain.
-        t += g.regions[rs]
-            .ops
-            .iter()
-            .map(|&op| p.cost(op))
-            .sum::<f64>();
+        let mut t: f64 = ancestors.iter().map(|&r| times[r]).sum();
+        t += g.regions[rs].ops.iter().map(|&op| p.cost(op)).sum::<f64>();
         best = best.min(t);
     }
     (best, mat_bytes)
 }
 
-/// Pick the choice minimizing FRT (ties → smaller materialized bytes).
+/// Pick the choice minimizing FRT at authored worker counts (ties →
+/// smaller materialized bytes).
 pub fn best_choice(
     w: &Workflow,
     choices: &[Vec<usize>],
@@ -157,6 +245,238 @@ pub fn best_choice(
         }
     }
     best
+}
+
+// ---- elastic planning -------------------------------------------------
+
+/// A joint (materialization, parallelism) plan for one workflow.
+#[derive(Clone, Debug)]
+pub struct ElasticPlan {
+    /// Chosen materialization (edge indices of the original workflow).
+    pub choice: Vec<usize>,
+    /// Worker count per operator of the **materialized** workflow
+    /// (`apply_choice` is deterministic, so indices are stable across
+    /// re-application of the same choice).
+    pub workers: Vec<usize>,
+    /// Estimated FRT at those counts (cost-model units).
+    pub estimated_frt: f64,
+    /// Estimated rows-out per materialized operator at plan time — kept
+    /// so the scheduler's decision trail can report estimate-vs-observed
+    /// q-errors.
+    pub est_rows: Vec<f64>,
+}
+
+/// Operators that must share one worker count: every edge landing on a
+/// one-to-one input port forces its endpoints to equal parallelism
+/// (worker *i* feeds worker *i*), e.g. a `MatWriter` behind its
+/// producer. Returns disjoint groups covering all ops, each sorted,
+/// ordered by first member.
+pub fn one_to_one_groups(w: &Workflow) -> Vec<Vec<usize>> {
+    let n = w.ops.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut [usize], x: usize) -> usize {
+        let mut r = x;
+        while parent[r] != r {
+            r = parent[r];
+        }
+        let mut c = x;
+        while parent[c] != r {
+            let next = parent[c];
+            parent[c] = r;
+            c = next;
+        }
+        r
+    }
+    for e in &w.edges {
+        let scheme = &w.ops[e.to].input_partitioning[e.to_port];
+        if matches!(scheme, PartitionScheme::OneToOne) {
+            let (a, b) = (find(&mut parent, e.from), find(&mut parent, e.to));
+            if a != b {
+                parent[a.max(b)] = a.min(b);
+            }
+        }
+    }
+    let mut by_root: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for op in 0..n {
+        let r = find(&mut parent, op);
+        by_root.entry(r).or_default().push(op);
+    }
+    by_root.into_values().collect()
+}
+
+/// Distribute a per-region worker budget over a workflow's operators.
+///
+/// For each region independently: every one-to-one group starts at one
+/// worker per member (or its pinned count from `fixed` — operators the
+/// runtime cannot rescale, like already-deployed sources), then spare
+/// budget is handed out greedily, one group at a time, to the group
+/// with the largest marginal drop in modeled region time
+/// (`W_g(1/n − 1/(n+1))` per worker slot). A group never grows beyond
+/// the rows it is estimated to process — a 5-row operator gets no 8-way
+/// fan-out. Groups containing a `fixed` member keep that count.
+///
+/// Returns one count per operator. The budget is a best-effort cap: if
+/// `fixed` counts alone exceed it, the remaining groups still get one
+/// worker each.
+pub fn assign_workers(
+    w: &Workflow,
+    regions: &[Region],
+    rows_out: &[f64],
+    p: &CostParams,
+    budget: usize,
+    fixed: &HashMap<usize, usize>,
+) -> Vec<usize> {
+    let mut out: Vec<usize> = w.ops.iter().map(|o| o.workers).collect();
+    let groups = one_to_one_groups(w);
+    for r in regions {
+        // Groups fully inside this region (one-to-one edges are
+        // pipelined, so a group never straddles a region boundary).
+        // Ordered by first member already (`one_to_one_groups` keys its
+        // BTreeMap on the union-find root, which is the min member), so
+        // greedy tie-breaks are deterministic.
+        let region_groups: Vec<&Vec<usize>> = groups
+            .iter()
+            .filter(|g| g.iter().all(|op| r.contains(*op)))
+            .collect();
+        struct G<'a> {
+            ops: &'a [usize],
+            work: f64,
+            count: usize,
+            cap: usize,
+            free: bool,
+        }
+        let mut gs: Vec<G> = region_groups
+            .iter()
+            .map(|g| {
+                let work: f64 = g
+                    .iter()
+                    .map(|&op| rows_in_of(w, p, rows_out, op) * p.cost(op))
+                    .sum();
+                let cap = g
+                    .iter()
+                    .map(|&op| rows_in_of(w, p, rows_out, op).ceil().max(1.0) as usize)
+                    .max()
+                    .unwrap_or(1);
+                let pinned = g.iter().find_map(|op| fixed.get(op).copied());
+                G {
+                    ops: g.as_slice(),
+                    work,
+                    count: pinned.unwrap_or(1),
+                    cap,
+                    free: pinned.is_none(),
+                }
+            })
+            .collect();
+        let spent: usize = gs.iter().map(|g| g.count * g.ops.len()).sum();
+        let mut slots = budget.saturating_sub(spent);
+        loop {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, g) in gs.iter().enumerate() {
+                if !g.free || g.count >= g.cap || g.ops.len() > slots {
+                    continue;
+                }
+                let gain = g.work * (1.0 / g.count as f64 - 1.0 / (g.count + 1) as f64)
+                    / g.ops.len() as f64;
+                if best.map(|(_, b)| gain > b).unwrap_or(gain > 0.0) {
+                    best = Some((i, gain));
+                }
+            }
+            let Some((i, _)) = best else { break };
+            slots -= gs[i].ops.len();
+            gs[i].count += 1;
+        }
+        for g in &gs {
+            for &op in g.ops {
+                out[op] = g.count;
+            }
+        }
+    }
+    out
+}
+
+/// Seed mat-reader cardinalities: a reader is a source the base model
+/// knows nothing about, so its `source_rows` entry is estimated from
+/// the rows *entering the paired writer*, iterated to a fixed point
+/// over chained materializations — a wrong guess at the scan then
+/// propagates consistently instead of being papered over by the
+/// unknown-source default. Readers with a pinned (observed) cardinality
+/// are never touched; `skip(writer, reader)` exempts further links
+/// (caller-supplied estimates at plan time, finished writers whose
+/// exact store counts are already in place at re-plan time).
+pub(crate) fn seed_reader_rows(
+    m: &crate::maestro::materialize::Materialized,
+    p: &mut CostParams,
+    mut skip: impl FnMut(usize, usize) -> bool,
+) {
+    for _ in 0..=m.links.len() {
+        let rows = cardinalities(&m.workflow, p);
+        for &(writer, reader) in &m.links {
+            if p.pinned_rows.contains_key(&reader) || skip(writer, reader) {
+                continue;
+            }
+            let entering = rows_in_of(&m.workflow, p, &rows, writer);
+            p.source_rows.insert(reader, entering);
+        }
+    }
+}
+
+/// Build the elastic plan for one materialization choice: assign worker
+/// counts under `budget` and evaluate the resulting FRT. Mat-reader
+/// cardinalities are seeded via [`seed_reader_rows`], honoring any
+/// reader estimate the caller supplied up front.
+pub fn plan_for_choice(
+    w: &Workflow,
+    choice: &[usize],
+    p: &CostParams,
+    sink_ops: &[usize],
+    budget: usize,
+    fixed: &HashMap<usize, usize>,
+) -> ElasticPlan {
+    let m = apply_choice(w, choice);
+    let mut p = p.clone();
+    let preset: std::collections::HashSet<usize> = m
+        .links
+        .iter()
+        .map(|&(_, reader)| reader)
+        .filter(|r| p.source_rows.contains_key(r))
+        .collect();
+    seed_reader_rows(&m, &mut p, |_, reader| preset.contains(&reader));
+    let g = crate::maestro::region_graph::region_graph_ext(&m.workflow, &m.links);
+    let rows_out = cardinalities(&m.workflow, &p);
+    let workers = assign_workers(&m.workflow, &g.regions, &rows_out, &p, budget, fixed);
+    let (frt, _) = frt_of_materialized(&m, &p, sink_ops, &workers);
+    ElasticPlan {
+        choice: choice.to_vec(),
+        workers,
+        estimated_frt: frt,
+        est_rows: rows_out,
+    }
+}
+
+/// Jointly pick the (choice, worker assignment) pair with the least
+/// estimated FRT under the per-region worker budget. Returns the index
+/// of the winning choice and its plan.
+pub fn best_choice_elastic(
+    w: &Workflow,
+    choices: &[Vec<usize>],
+    p: &CostParams,
+    sink_ops: &[usize],
+    budget: usize,
+) -> (usize, ElasticPlan) {
+    let fixed = HashMap::new();
+    let mut best: Option<(usize, ElasticPlan)> = None;
+    for (i, c) in choices.iter().enumerate() {
+        let plan = plan_for_choice(w, c, p, sink_ops, budget, &fixed);
+        if best
+            .as_ref()
+            .map(|(_, b)| plan.estimated_frt < b.estimated_frt)
+            .unwrap_or(true)
+        {
+            best = Some((i, plan));
+        }
+    }
+    best.expect("no choices given")
 }
 
 #[cfg(test)]
@@ -222,27 +542,27 @@ mod tests {
     }
 
     #[test]
+    fn pinned_rows_override_estimates_and_propagate() {
+        let (w, _) = fig_4_1();
+        let mut p = CostParams::new();
+        p.source_rows.insert(0, 1000.0);
+        p.selectivity.insert(1, 0.5); // estimate says 500…
+        p.pinned_rows.insert(1, 900.0); // …observation says 900
+        let rows = cardinalities(&w, &p);
+        assert_eq!(rows[1], 900.0);
+        // The join estimate builds on the observed value.
+        assert_eq!(rows[3], 900.0 + 1000.0);
+    }
+
+    #[test]
     fn frt_prefers_materializing_small_side() {
         let (w, sink) = fig_4_1();
         let mut p = CostParams::new();
         p.source_rows.insert(0, 10_000.0);
-        // filter2 (build path) is very selective → materializing the
-        // small build side (e1 after filter2… here e1 is pre-filter; the
-        // comparable choice is e0-vs-e1 with f2 selective): choice {e1}
-        // materializes 10k rows; {e0} also 10k. Make f1 selective
-        // instead so the probe path shrinks.
         p.selectivity.insert(2, 0.01); // filter2 keeps 1%
         let choices = vec![vec![0usize], vec![1usize]];
         let (frt0, bytes0) = first_response_time(&w, &choices[0], &p, &[sink]);
         let (frt1, bytes1) = first_response_time(&w, &choices[1], &p, &[sink]);
-        // Materializing e0 (probe raw feed) forces the whole probe feed
-        // into an ancestor region; materializing e1 defers only the
-        // build feed. Both materialize 10k rows here, but the ancestor
-        // work differs: with {e1}, the ancestor region includes the
-        // probe chain too? Regions: with {e1}: region A = {scan, f1,
-        // writer}… the sink region contains j,k and depends on A and
-        // the f2-chain region. With {e0}: similar shape. The FRTs
-        // must at least be finite, positive and distinguishable.
         assert!(frt0.is_finite() && frt1.is_finite());
         assert!(frt0 > 0.0 && frt1 > 0.0);
         assert_eq!(bytes0, bytes1); // same rows materialized pre-filter
@@ -282,5 +602,93 @@ mod tests {
         assert_eq!(bytes, 0.0);
         assert!(frt <= 3.0, "pipelined FRT should be tiny, got {frt}");
         let _ = s;
+    }
+
+    #[test]
+    fn assignment_respects_budget_and_favors_heavy_ops() {
+        // scan → heavy → sink, one region, budget 8.
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let h = w.add(OpSpec::unary("heavy", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        let k = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        w.connect(s, h, 0);
+        w.connect(h, k, 0);
+        let mut p = CostParams::new();
+        p.source_rows.insert(s, 100_000.0);
+        p.tuple_cost.insert(h, 50.0);
+        let regions = crate::maestro::region::regions_of(&w);
+        let rows = cardinalities(&w, &p);
+        let assigned = assign_workers(&w, &regions, &rows, &p, 8, &HashMap::new());
+        assert_eq!(assigned.iter().sum::<usize>(), 8, "{assigned:?}");
+        assert!(
+            assigned[h] > assigned[s] && assigned[h] > assigned[k],
+            "heavy op should dominate the budget: {assigned:?}"
+        );
+        for &n in &assigned {
+            assert!(n >= 1);
+        }
+    }
+
+    #[test]
+    fn assignment_caps_at_estimated_rows() {
+        // A 3-row workflow must not fan out to 8 workers per op.
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let k = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        w.connect(s, k, 0);
+        let mut p = CostParams::new();
+        p.source_rows.insert(s, 3.0);
+        let regions = crate::maestro::region::regions_of(&w);
+        let rows = cardinalities(&w, &p);
+        let assigned = assign_workers(&w, &regions, &rows, &p, 16, &HashMap::new());
+        assert!(assigned[s] <= 3 && assigned[k] <= 3, "{assigned:?}");
+    }
+
+    #[test]
+    fn assignment_keeps_fixed_ops_and_one_to_one_groups() {
+        let (w, sink) = fig_4_1();
+        let mut p = CostParams::new();
+        p.source_rows.insert(0, 10_000.0);
+        // Materialize the probe edge → writer (one-to-one behind
+        // filter1) + reader appear.
+        let plan = plan_for_choice(&w, &[3], &p, &[sink], 10, &HashMap::new());
+        let m = apply_choice(&w, &[3]);
+        let writer = m.writers[0];
+        // Writer count matches its one-to-one producer (filter1 = op 1).
+        assert_eq!(plan.workers[writer], plan.workers[1], "{:?}", plan.workers);
+        // Fixed pin survives assignment.
+        let g = crate::maestro::region_graph::region_graph_ext(&m.workflow, &m.links);
+        let rows = cardinalities(&m.workflow, &p);
+        let mut fixed = HashMap::new();
+        fixed.insert(m.readers[0], 2usize);
+        let assigned = assign_workers(&m.workflow, &g.regions, &rows, &p, 10, &fixed);
+        assert_eq!(assigned[m.readers[0]], 2);
+    }
+
+    #[test]
+    fn elastic_plan_beats_or_matches_static_frt() {
+        let (w, sink) = fig_4_1();
+        let mut p = CostParams::new();
+        p.source_rows.insert(0, 10_000.0);
+        p.tuple_cost.insert(1, 10.0);
+        let choices = crate::maestro::enumerate_choices(&w, 2);
+        let (_, static_frt, _) = best_choice(&w, &choices, &p, &[sink]);
+        let (_, plan) = best_choice_elastic(&w, &choices, &p, &[sink], 8);
+        // The budget (8 > the 1-worker authored counts) can only help.
+        assert!(
+            plan.estimated_frt <= static_frt + 1e-9,
+            "elastic {} vs static {static_frt}",
+            plan.estimated_frt
+        );
     }
 }

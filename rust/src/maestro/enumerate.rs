@@ -6,6 +6,13 @@
 //! the Fig. 4.11 walk over the sub-DAG between the replication point
 //! and the join, generalized to arbitrary DAGs by searching candidate
 //! edges of cyclic regions.
+//!
+//! The enumeration is parallelism-agnostic: each choice is later scored
+//! by [`cost::best_choice`](crate::maestro::cost::best_choice) at the
+//! workflow's authored worker counts, or — under a worker budget — by
+//! [`cost::best_choice_elastic`](crate::maestro::cost::best_choice_elastic),
+//! which pairs every choice here with its best per-region worker
+//! assignment before comparing first response times.
 
 use crate::engine::dag::Workflow;
 use crate::maestro::cycles::{candidate_edges, feasible_with, is_feasible};

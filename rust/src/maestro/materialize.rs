@@ -6,6 +6,13 @@
 //! Figs. 4.23/4.24); the reader is a dormant source activated when its
 //! region is scheduled — by then the writer's region has completed and
 //! the buffer is final.
+//!
+//! A finished store doubles as an **observation point** for the elastic
+//! scheduler: [`MatStore::rows`] is the exact cardinality entering the
+//! reader's region and [`MatStore::mean_bytes_per_tuple`] the measured
+//! tuple width, both fed back into
+//! [`CostParams`](crate::maestro::cost::CostParams) when the remaining
+//! regions are re-planned.
 
 use crate::engine::dag::{OpSpec, Workflow};
 use crate::engine::operator::{Emitter, Operator};
@@ -33,6 +40,18 @@ impl MatStore {
 
     pub fn rows(&self) -> usize {
         self.data.lock().unwrap().len()
+    }
+
+    /// Observed average tuple width in bytes (`None` until the store
+    /// holds rows) — re-planning feeds this back into
+    /// [`CostParams::bytes_per_tuple`](crate::maestro::cost::CostParams).
+    pub fn mean_bytes_per_tuple(&self) -> Option<f64> {
+        let rows = self.rows();
+        if rows == 0 {
+            None
+        } else {
+            Some(self.bytes() as f64 / rows as f64)
+        }
     }
 }
 

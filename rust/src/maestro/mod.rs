@@ -1,15 +1,32 @@
-//! **Maestro** (Ch. 4): result-aware region scheduling for pipelined
-//! execution.
+//! **Maestro** (Ch. 4): result-aware, elastic region scheduling for
+//! pipelined execution.
 //!
-//! Pipeline: [`region`] splits the workflow DAG at blocking links into
-//! regions; [`region_graph`] derives inter-region dependencies;
-//! [`cycles`] detects infeasible (cyclic) region graphs and repairs
-//! them by inserting **materialization** on pipelined links;
+//! Planning pipeline: [`region`] splits the workflow DAG at blocking
+//! links into regions; [`region_graph`](mod@region_graph) derives
+//! inter-region dependencies; [`cycles`] detects infeasible (cyclic)
+//! region graphs
+//! and repairs them by inserting **materialization** on pipelined links;
 //! [`enumerate`] lists every minimal materialization choice (§4.5.1);
-//! [`cost`] scores each choice by **first response time** (§4.5.3);
-//! [`scheduler`] executes the chosen plan region-by-region on the
-//! engine (sources deployed dormant, activated in topological region
-//! order); [`corpus`] bundles the workflow shapes of Table 4.1.
+//! [`cost`] scores each choice by **first response time** (§4.5.3) — and,
+//! when a worker budget is configured
+//! ([`Config::max_workers`](crate::config::Config::max_workers)), jointly
+//! assigns per-region worker counts to each choice
+//! ([`cost::best_choice_elastic`]); [`corpus`] bundles the workflow
+//! shapes of Table 4.1.
+//!
+//! Execution: [`scheduler`] runs the chosen plan region-by-region on
+//! the engine — deploy all workers with dormant sources, activate each
+//! region's sources in topological region order, and between
+//! activations **observe** the completed regions (actual cardinalities,
+//! materialized bytes) and **re-plan** the remaining
+//! regions' worker counts, applying changes through the engine's
+//! fenced [`scale`](crate::engine::scale) protocol while those workers
+//! are still dormant. Every estimate, observation and scale decision is
+//! recorded in the [`ScheduleOutcome`] trail, so a run's adaptive
+//! behavior is inspectable after the fact.
+//!
+//! See `docs/ARCHITECTURE.md` at the repository root for the full
+//! region-scheduling lifecycle walkthrough.
 
 pub mod region;
 pub mod region_graph;
@@ -20,8 +37,12 @@ pub mod materialize;
 pub mod scheduler;
 pub mod corpus;
 
-pub use cost::{CostParams, first_response_time};
+pub use cost::{
+    best_choice_elastic, first_response_time, CostParams, ElasticPlan,
+};
 pub use enumerate::enumerate_choices;
 pub use region::{regions_of, Region};
 pub use region_graph::{region_graph, RegionGraph};
-pub use scheduler::{MaestroScheduler, ScheduleOutcome};
+pub use scheduler::{
+    MaestroScheduler, ObservedOp, RegionPlan, ScaleDecision, ScheduleOutcome,
+};

@@ -1,38 +1,136 @@
-//! The Maestro scheduler (§4.3): execute a workflow region-by-region.
+//! The Maestro scheduler (§4.3): execute a workflow region-by-region,
+//! **adaptively**.
 //!
-//! Steps: enumerate materialization choices (if the region graph is
-//! cyclic), pick the choice with the least estimated first response
-//! time (§4.5.4), rewrite the workflow, deploy with **dormant
-//! sources**, then activate each region's sources in topological
-//! region order, awaiting completion of its ancestor regions first.
-//! Workers of downstream regions are alive from the start (Fig. 4.3:
-//! every join worker runs both build and probe phases), so a region's
-//! output streams directly into the next region's waiting operators.
+//! The static flow: enumerate materialization choices (if the region
+//! graph is cyclic), pick the choice with the least estimated first
+//! response time (§4.5.4), rewrite the workflow, deploy with **dormant
+//! sources**, then activate each region's sources in topological region
+//! order, awaiting completion of its ancestor regions first. Workers of
+//! downstream regions are alive from the start (Fig. 4.3: every join
+//! worker runs both build and probe phases), so a region's output
+//! streams directly into the next region's waiting operators.
+//!
+//! With a worker budget ([`Config::max_workers`] > 0) the scheduler is
+//! additionally **elastic and observation-driven**:
+//!
+//! 1. **Plan** — [`best_choice_elastic`] jointly picks the
+//!    materialization choice *and* a per-region worker-count assignment
+//!    under the budget; the workflow deploys at the assigned counts.
+//! 2. **Observe** — whenever an ancestor region completes, the
+//!    scheduler reads the execution's per-worker statistics (exact
+//!    produced counts) and every finished [`MatStore`]'s row count and
+//!    tuple width, and pins them into the cost model
+//!    ([`CostParams::pinned_rows`]) — actual cardinalities replace
+//!    plan-time guesses. (Busy time is exposed in `WorkerStats` but not
+//!    yet folded into per-tuple cost calibration.)
+//! 3. **Re-plan** — the remaining (not-yet-activated) regions' worker
+//!    counts are re-assigned under the same budget with the corrected
+//!    model. Deltas are applied through
+//!    [`Execution::scale_operator`] (one fenced epoch per operator)
+//!    while those regions' workers are still alive-but-dormant, i.e.
+//!    before [`Execution::start_sources`] wakes the region. Operators
+//!    the runtime cannot rescale (sources, scatter-merge,
+//!    broadcast-input) stay at their deploy-time counts, as does any
+//!    operator whose scale request the engine refuses.
+//! 4. **Record** — every step lands in the [`ScheduleOutcome`] decision
+//!    trail ([`RegionPlan`]): estimated vs observed cardinalities with
+//!    q-errors, the worker assignment after each re-plan, each scale
+//!    decision with its fence duration, and per-region completion times
+//!    (the FRT contribution of each ancestor region).
+//!
+//! [`Config::max_workers`]: crate::config::Config::max_workers
+//! [`CostParams::pinned_rows`]: crate::maestro::cost::CostParams
+//! [`MatStore`]: crate::maestro::materialize::MatStore
+//! [`best_choice_elastic`]: crate::maestro::cost::best_choice_elastic
 
 use crate::config::Config;
 use crate::engine::controller::{ExecSummary, Execution};
 use crate::engine::dag::Workflow;
-use crate::maestro::cost::{best_choice, CostParams};
+use crate::engine::partitioner::PartitionScheme;
+use crate::maestro::cost::{
+    best_choice, best_choice_elastic, cardinalities, plan_for_choice, CostParams, ElasticPlan,
+};
 use crate::maestro::enumerate::enumerate_choices;
-use crate::maestro::materialize::{apply_choice, MatStore};
+use crate::maestro::materialize::{apply_choice, MatStore, Materialized};
+use crate::maestro::region_graph::RegionGraph;
+use crate::metrics::q_error;
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+/// One estimate-vs-observation row of the decision trail.
+#[derive(Clone, Debug)]
+pub struct ObservedOp {
+    /// Operator index in the materialized workflow.
+    pub op: usize,
+    /// Rows-out the initial plan estimated for it.
+    pub estimated_rows: f64,
+    /// Rows-out actually observed when its region completed.
+    pub observed_rows: f64,
+    /// `max(est/obs, obs/est)` — see [`q_error`].
+    pub q_error: f64,
+}
+
+/// One elastic-scaling decision taken by a re-plan.
+#[derive(Clone, Debug)]
+pub struct ScaleDecision {
+    /// Operator index in the materialized workflow.
+    pub op: usize,
+    pub from: usize,
+    pub to: usize,
+    /// Fence duration in milliseconds (0 when the engine refused).
+    pub fence_ms: f64,
+    /// Whether the engine accepted the scale (a refusal leaves the
+    /// operator at `from`).
+    pub applied: bool,
+}
+
+/// Decision-trail entry recorded before each region activation that
+/// had observations to act on.
+#[derive(Clone, Debug)]
+pub struct RegionPlan {
+    /// Region about to be activated.
+    pub region: usize,
+    /// Seconds since deployment when this re-plan ran.
+    pub at: f64,
+    /// Operators newly pinned to observed cardinalities by this
+    /// re-plan.
+    pub observed: Vec<ObservedOp>,
+    /// Worker count per materialized operator after this re-plan.
+    pub workers: Vec<usize>,
+    /// Scale requests issued (empty when the revised assignment matched
+    /// the current one).
+    pub decisions: Vec<ScaleDecision>,
+}
 
 /// Outcome of a scheduled run.
+#[derive(Debug)]
 pub struct ScheduleOutcome {
     pub summary: ExecSummary,
     /// Chosen materialization (edge indices of the original workflow).
     pub choice: Vec<usize>,
     /// Estimated FRT of the chosen plan (cost-model units).
     pub estimated_frt: f64,
-    /// Measured first-response time: seconds until a sink operator
-    /// emitted… for sinks (no out-edges) we use the sink's own
-    /// processing start; recorded as the first tuple *arriving* at the
-    /// sink op (`first_output` of its upstream) plus sink latency —
-    /// reported here as seconds until any `sink_ops` member saw input.
+    /// Measured first-response time: seconds from deployment until a
+    /// `sink_ops` member delivered its **first result** (the sink's own
+    /// first-output timestamp — sinks report result delivery as
+    /// output). For a sink operator that never reports output (a custom
+    /// sink that swallows tuples), this falls back to the first output
+    /// of the operators feeding it, i.e. input arrival.
     pub measured_frt: f64,
     /// Bytes materialized per choice edge.
     pub mat_bytes: Vec<u64>,
     /// Region execution order.
     pub region_order: Vec<usize>,
+    /// Worker count per materialized operator at deployment.
+    pub initial_workers: Vec<usize>,
+    /// Worker count per materialized operator after the last re-plan.
+    pub final_workers: Vec<usize>,
+    /// Decision trail: one entry per region activation that re-planned.
+    pub replans: Vec<RegionPlan>,
+    /// `(region, seconds since deployment)` when each awaited region's
+    /// completion was observed — the per-region contribution to the
+    /// measured FRT of everything scheduled after it.
+    pub region_completed_at: Vec<(usize, f64)>,
 }
 
 /// Maestro: plans and runs one workflow.
@@ -48,7 +146,14 @@ impl MaestroScheduler {
         MaestroScheduler { config, cost, max_mat_edges: 3 }
     }
 
-    /// Plan only: (chosen edge set, estimated FRT).
+    /// The per-region worker budget (0 = elasticity off, deploy at
+    /// authored counts).
+    fn budget(&self) -> usize {
+        self.config.max_workers
+    }
+
+    /// Plan only, at authored worker counts: (chosen edge set,
+    /// estimated FRT).
     pub fn plan(&self, w: &Workflow, sink_ops: &[usize]) -> (Vec<usize>, f64) {
         let choices = enumerate_choices(w, self.max_mat_edges);
         assert!(
@@ -60,16 +165,42 @@ impl MaestroScheduler {
         (choices[idx].clone(), frt)
     }
 
+    /// Joint plan under the worker budget: materialization choice plus
+    /// per-region worker assignment (requires `config.max_workers > 0`).
+    pub fn plan_elastic(&self, w: &Workflow, sink_ops: &[usize]) -> ElasticPlan {
+        assert!(self.budget() > 0, "plan_elastic needs config.max_workers > 0");
+        let choices = enumerate_choices(w, self.max_mat_edges);
+        assert!(
+            !choices.is_empty(),
+            "no feasible materialization choice (≤{} edges)",
+            self.max_mat_edges
+        );
+        let (_, plan) =
+            best_choice_elastic(w, &choices, &self.cost, sink_ops, self.budget());
+        plan
+    }
+
     /// Plan + execute; `sink_ops` are result operators (indices in the
     /// *original* workflow — sinks are preserved by materialization
     /// rewriting).
     pub fn run(&self, w: Workflow, sink_ops: &[usize]) -> ScheduleOutcome {
-        let (choice, estimated_frt) = self.plan(&w, sink_ops);
-        self.run_with_choice(w, sink_ops, &choice, estimated_frt)
+        if self.budget() > 0 {
+            // Hand the joint plan straight to execution — recomputing it
+            // in run_inner would be duplicate work and a silent-
+            // divergence hazard between two "identical" plan calls.
+            let plan = self.plan_elastic(&w, sink_ops);
+            let choice = plan.choice.clone();
+            let frt = plan.estimated_frt;
+            self.run_inner(w, sink_ops, &choice, frt, Some(plan), None)
+        } else {
+            let (choice, estimated_frt) = self.plan(&w, sink_ops);
+            self.run_with_choice(w, sink_ops, &choice, estimated_frt)
+        }
     }
 
     /// Execute with an explicit materialization choice (experiment
-    /// harnesses sweep all choices this way).
+    /// harnesses sweep all choices this way). Under a worker budget the
+    /// assignment for the given choice is recomputed deterministically.
     pub fn run_with_choice(
         &self,
         w: Workflow,
@@ -91,12 +222,50 @@ impl MaestroScheduler {
         estimated_frt: f64,
         plugin: Option<Box<dyn crate::engine::controller::CoordPlugin>>,
     ) -> ScheduleOutcome {
-        let m = apply_choice(&w, choice);
+        self.run_inner(w, sink_ops, choice, estimated_frt, None, plugin)
+    }
+
+    /// The execution loop behind `run`/`run_with_choice`/
+    /// `run_pluggable`. `plan` carries a precomputed elastic plan (from
+    /// [`run`](Self::run)); when absent and a budget is set, the plan
+    /// for `choice` is recomputed deterministically.
+    fn run_inner(
+        &self,
+        w: Workflow,
+        sink_ops: &[usize],
+        choice: &[usize],
+        mut estimated_frt: f64,
+        plan: Option<ElasticPlan>,
+        plugin: Option<Box<dyn crate::engine::controller::CoordPlugin>>,
+    ) -> ScheduleOutcome {
+        let mut m = apply_choice(&w, choice);
         let stores: Vec<MatStore> = m.stores.clone();
         let g = crate::maestro::region_graph::region_graph_ext(&m.workflow, &m.links);
         let order = g
             .topo_order()
             .expect("chosen materialization must yield an acyclic region graph");
+        // Initial estimates (for the decision trail's q-errors) and, if
+        // a budget is set, the deploy-time worker assignment.
+        let mut cost = self.cost.clone();
+        let mut initial_rows = cardinalities(&m.workflow, &cost);
+        if self.budget() > 0 {
+            let plan = plan.unwrap_or_else(|| {
+                plan_for_choice(&w, choice, &cost, sink_ops, self.budget(), &HashMap::new())
+            });
+            for (op, &n) in plan.workers.iter().enumerate() {
+                m.workflow.ops[op].workers = n;
+            }
+            // Report the estimate that matches the deployed counts — a
+            // caller sweeping choices passes the authored-counts FRT,
+            // which would be inconsistent with what actually runs.
+            estimated_frt = plan.estimated_frt;
+            // The plan's estimates include mat-reader seeding — use them
+            // as the q-error baseline in the decision trail.
+            initial_rows = plan.est_rows;
+        }
+        let mut current: Vec<usize> = m.workflow.ops.iter().map(|o| o.workers).collect();
+        let initial_workers = current.clone();
+
         let exec = match plugin {
             Some(p) => Execution::start_scheduled_with_plugin(
                 m.workflow.clone(),
@@ -105,12 +274,39 @@ impl MaestroScheduler {
             ),
             None => Execution::start_scheduled(m.workflow.clone(), self.config.clone()),
         };
-        let started = std::time::Instant::now();
-        for &rid in &order {
+        let started = Instant::now();
+        let mut completed_regions: HashSet<usize> = HashSet::new();
+        let mut region_completed_at: Vec<(usize, f64)> = Vec::new();
+        let mut pinned_ops: HashSet<usize> = HashSet::new();
+        let mut unscalable: HashSet<usize> = HashSet::new();
+        let mut replans: Vec<RegionPlan> = Vec::new();
+        for (pos, &rid) in order.iter().enumerate() {
             // Wait for all ancestor regions to fully complete.
-            let ancestors = g.ancestors(rid);
-            for a in ancestors {
+            for a in g.ancestors(rid) {
                 exec.await_ops(g.regions[a].ops.clone());
+                if completed_regions.insert(a) {
+                    region_completed_at.push((a, started.elapsed().as_secs_f64()));
+                }
+            }
+            // Observe + re-plan the not-yet-activated regions before
+            // waking this one.
+            if self.budget() > 0 && !completed_regions.is_empty() {
+                let plan = self.replan_remaining(
+                    &exec,
+                    &m,
+                    &g,
+                    &order[pos..],
+                    rid,
+                    &completed_regions,
+                    &stores,
+                    &initial_rows,
+                    &mut cost,
+                    &mut current,
+                    &mut pinned_ops,
+                    &mut unscalable,
+                    started,
+                );
+                replans.push(plan);
             }
             // Activate this region's sources (scans + mat readers).
             let sources: Vec<usize> = g.regions[rid]
@@ -124,14 +320,19 @@ impl MaestroScheduler {
             }
         }
         let summary = exec.join();
-        let _ = started;
-        // Measured FRT: first output of any op feeding a sink (the
-        // sink's first input) — sinks have no outputs of their own.
+        // Measured FRT: the first *output* of a sink operator itself —
+        // sinks report result delivery through the emitter. Custom
+        // sinks that never emit fall back to input arrival (first
+        // output of the operators feeding them).
         let mut measured = f64::INFINITY;
         for &sink in sink_ops {
-            for e in m.workflow.in_edges(sink) {
-                if let Some(&t) = summary.first_output.get(&e.from) {
-                    measured = measured.min(t);
+            if let Some(&t) = summary.first_output.get(&sink) {
+                measured = measured.min(t);
+            } else {
+                for e in m.workflow.in_edges(sink) {
+                    if let Some(&t) = summary.first_output.get(&e.from) {
+                        measured = measured.min(t);
+                    }
                 }
             }
         }
@@ -142,6 +343,193 @@ impl MaestroScheduler {
             measured_frt: measured,
             mat_bytes: stores.iter().map(|s| s.bytes()).collect(),
             region_order: order,
+            initial_workers,
+            final_workers: current,
+            replans,
+            region_completed_at,
+        }
+    }
+
+    /// Observe completed regions, fold the observations into the cost
+    /// model, re-assign worker counts for the remaining regions under
+    /// the budget, and apply the deltas through the engine's fenced
+    /// scale protocol. Returns the trail entry.
+    #[allow(clippy::too_many_arguments)]
+    fn replan_remaining(
+        &self,
+        exec: &Execution,
+        m: &Materialized,
+        g: &RegionGraph,
+        remaining: &[usize],
+        about_to_activate: usize,
+        completed_regions: &HashSet<usize>,
+        stores: &[MatStore],
+        initial_rows: &[f64],
+        cost: &mut CostParams,
+        current: &mut [usize],
+        pinned_ops: &mut HashSet<usize>,
+        unscalable: &mut HashSet<usize>,
+        started: Instant,
+    ) -> RegionPlan {
+        let mw = &m.workflow;
+        // --- observe -----------------------------------------------------
+        let mut produced: HashMap<usize, u64> = HashMap::new();
+        for (id, st) in exec.stats() {
+            *produced.entry(id.op).or_insert(0) += st.produced;
+        }
+        let writer_ops: HashSet<usize> = m.writers.iter().copied().collect();
+        let mut observed = Vec::new();
+        for &r in completed_regions {
+            for &op in &g.regions[r].ops {
+                // MatWriters never emit — their observation is the store
+                // row count, folded in via the links loop below; pinning
+                // their zero `produced` would pollute the trail with
+                // spurious infinite q-errors.
+                if writer_ops.contains(&op) {
+                    continue;
+                }
+                if !pinned_ops.insert(op) {
+                    continue;
+                }
+                let rows = produced.get(&op).copied().unwrap_or(0) as f64;
+                cost.pinned_rows.insert(op, rows);
+                if mw.ops[op].is_source {
+                    cost.source_rows.insert(op, rows);
+                }
+                observed.push(ObservedOp {
+                    op,
+                    estimated_rows: initial_rows[op],
+                    observed_rows: rows,
+                    q_error: q_error(initial_rows[op], rows),
+                });
+            }
+        }
+        // Finished materialization stores: exact cardinality and tuple
+        // width entering the reader's region.
+        let mut widths = Vec::new();
+        for (li, &(writer, reader)) in m.links.iter().enumerate() {
+            let writer_region = crate::maestro::region::region_of(&g.regions, writer);
+            if !completed_regions.contains(&writer_region) {
+                continue;
+            }
+            let rows = stores[li].rows() as f64;
+            cost.source_rows.insert(reader, rows);
+            cost.pinned_rows.entry(reader).or_insert(rows);
+            if let Some(wid) = stores[li].mean_bytes_per_tuple() {
+                widths.push(wid);
+            }
+        }
+        if !widths.is_empty() {
+            cost.bytes_per_tuple = widths.iter().sum::<f64>() / widths.len() as f64;
+        }
+        // Readers of *unfinished* writers: estimate their cardinality
+        // from the rows entering the paired writer so a link whose
+        // writer region is still pending doesn't fall back to the
+        // unknown-source default mid-replan. Links whose writer region
+        // completed are skipped — their exact store row counts were
+        // just installed above.
+        crate::maestro::cost::seed_reader_rows(m, cost, |writer, _| {
+            let wr = crate::maestro::region::region_of(&g.regions, writer);
+            completed_regions.contains(&wr)
+        });
+        // --- re-plan -----------------------------------------------------
+        let rows_out = cardinalities(mw, cost);
+        let remaining_regions: Vec<crate::maestro::region::Region> = remaining
+            .iter()
+            .map(|&r| g.regions[r].clone())
+            .collect();
+        let mut fixed: HashMap<usize, usize> = HashMap::new();
+        for r in &remaining_regions {
+            for &op in &r.ops {
+                let spec = &mw.ops[op];
+                let structurally_fixed = spec.is_source
+                    || spec.scatter_merge
+                    || spec
+                        .input_partitioning
+                        .iter()
+                        .any(|s| matches!(s, PartitionScheme::Broadcast));
+                if structurally_fixed || unscalable.contains(&op) {
+                    fixed.insert(op, current[op]);
+                }
+            }
+        }
+        let assigned = crate::maestro::cost::assign_workers(
+            mw,
+            &remaining_regions,
+            &rows_out,
+            cost,
+            self.budget(),
+            &fixed,
+        );
+        // --- apply -------------------------------------------------------
+        // One-to-one groups must keep equal counts (worker *i* feeds
+        // worker *i*), so deltas apply group-atomically: if any member's
+        // scale is refused, already-scaled members are rolled back and
+        // the whole group is memoized as unscalable — a refusal (e.g.
+        // the region drained through pipelined links and completed
+        // without an explicit await, so the engine's completed-workers
+        // guard fires) must not leave the group at mismatched
+        // parallelism, and is never retried.
+        let groups = crate::maestro::cost::one_to_one_groups(mw);
+        let mut decisions = Vec::new();
+        for r in &remaining_regions {
+            for g_ops in groups.iter().filter(|g| g.iter().all(|op| r.contains(*op))) {
+                let changes: Vec<(usize, usize, usize)> = g_ops
+                    .iter()
+                    .map(|&op| (op, current[op], assigned[op]))
+                    .filter(|&(op, from, to)| to != from && !fixed.contains_key(&op))
+                    .collect();
+                if changes.is_empty() {
+                    continue;
+                }
+                let mut refused = false;
+                let mut done: Vec<(usize, usize)> = Vec::new(); // (op, from)
+                for &(op, from, to) in &changes {
+                    let fence = exec.scale_operator(op, to);
+                    let applied = fence > Duration::ZERO;
+                    if applied {
+                        current[op] = to;
+                        done.push((op, from));
+                    } else {
+                        refused = true;
+                    }
+                    decisions.push(ScaleDecision {
+                        op,
+                        from,
+                        to,
+                        fence_ms: fence.as_secs_f64() * 1e3,
+                        applied,
+                    });
+                    if refused {
+                        break;
+                    }
+                }
+                if refused {
+                    // Roll back so the group keeps one count. A rollback
+                    // that is itself refused leaves the mismatch (the
+                    // group is pinned below, so it is never widened).
+                    for &(op, from) in done.iter().rev() {
+                        if exec.scale_operator(op, from) > Duration::ZERO {
+                            current[op] = from;
+                            if let Some(d) =
+                                decisions.iter_mut().rev().find(|d| d.op == op)
+                            {
+                                d.applied = false;
+                            }
+                        }
+                    }
+                    for &op in g_ops {
+                        unscalable.insert(op);
+                    }
+                }
+            }
+        }
+        RegionPlan {
+            region: about_to_activate,
+            at: started.elapsed().as_secs_f64(),
+            observed,
+            workers: current.to_vec(),
+            decisions,
         }
     }
 }
@@ -150,6 +538,7 @@ impl MaestroScheduler {
 mod tests {
     use super::*;
     use crate::engine::dag::OpSpec;
+    use crate::engine::operator::{Emitter, Operator};
     use crate::engine::partitioner::PartitionScheme;
     use crate::operators::basic::{Cmp, Filter};
     use crate::operators::{CollectSink, HashJoin, SinkHandle};
@@ -214,6 +603,10 @@ mod tests {
         assert!(outcome.mat_bytes.iter().sum::<u64>() > 0);
         assert!(outcome.region_order.len() >= 2);
         assert!(outcome.measured_frt.is_finite());
+        // Static run: no elasticity, counts untouched end to end.
+        assert_eq!(outcome.initial_workers, outcome.final_workers);
+        assert!(outcome.replans.is_empty());
+        assert!(!outcome.region_completed_at.is_empty());
     }
 
     #[test]
@@ -267,5 +660,60 @@ mod tests {
         assert!(outcome.choice.is_empty());
         assert_eq!(handle.total(), 100);
         assert_eq!(outcome.mat_bytes.len(), 0);
+    }
+
+    /// A sink that delays before recording (and reporting) its first
+    /// result: `measured_frt` must reflect the first sink *output*, not
+    /// the first tuple *arriving* at the sink.
+    struct SlowSink {
+        inner: CollectSink,
+        delay_ms: u64,
+        delayed: bool,
+    }
+
+    impl Operator for SlowSink {
+        fn name(&self) -> &str {
+            "slow_sink"
+        }
+        fn process(&mut self, t: Tuple, port: usize, out: &mut dyn Emitter) {
+            if !self.delayed {
+                self.delayed = true;
+                std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
+            }
+            self.inner.process(t, port, out);
+        }
+    }
+
+    #[test]
+    fn measured_frt_is_first_sink_output_not_input_arrival() {
+        const DELAY_MS: u64 = 150;
+        let handle = SinkHandle::new(0);
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 1, |_, _| {
+            Box::new(VecSource::new(
+                (0..100).map(|i| Tuple::new(vec![Value::Int(i)])).collect(),
+            ))
+        }));
+        let h2 = handle.clone();
+        let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+            Box::new(SlowSink {
+                inner: CollectSink::new(h2.clone()),
+                delay_ms: DELAY_MS,
+                delayed: false,
+            })
+        }));
+        w.connect(s, sink, 0);
+        let sched = MaestroScheduler::new(Config::for_tests(), CostParams::new());
+        let outcome = sched.run(w, &[sink]);
+        assert_eq!(handle.total(), 100);
+        // The scan's first output lands almost immediately; the sink's
+        // first *result* is at least DELAY_MS later. Under the old
+        // (input-arrival) definition this assertion fails.
+        let upstream = outcome.summary.first_output[&s];
+        assert!(
+            outcome.measured_frt >= upstream + (DELAY_MS as f64 / 1e3) * 0.5,
+            "measured_frt {} vs upstream first output {upstream}",
+            outcome.measured_frt
+        );
     }
 }

@@ -5,6 +5,22 @@
 
 use std::time::Instant;
 
+/// Cardinality-estimation q-error: `max(est/obs, obs/est)`, the
+/// standard factor-off metric (1.0 = exact). Degenerate inputs: both
+/// sides non-positive is a perfect estimate (1.0 — predicting an empty
+/// output that was empty); exactly one side non-positive is infinitely
+/// wrong (infinity). Maestro's re-planner records one per operator
+/// when it pins observed cardinalities over plan-time guesses.
+pub fn q_error(est: f64, obs: f64) -> f64 {
+    if est <= 0.0 && obs <= 0.0 {
+        1.0
+    } else if est <= 0.0 || obs <= 0.0 {
+        f64::INFINITY
+    } else {
+        (est / obs).max(obs / est)
+    }
+}
+
 /// Percentile summary over a set of f64 samples.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
@@ -140,6 +156,16 @@ impl LoadBalanceRatio {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn q_error_symmetric_and_exact_at_one() {
+        assert_eq!(q_error(100.0, 100.0), 1.0);
+        assert_eq!(q_error(10.0, 1000.0), 100.0);
+        assert_eq!(q_error(1000.0, 10.0), 100.0);
+        assert_eq!(q_error(0.0, 0.0), 1.0);
+        assert_eq!(q_error(0.0, 5.0), f64::INFINITY);
+        assert_eq!(q_error(5.0, 0.0), f64::INFINITY);
+    }
 
     #[test]
     fn percentiles_ordered() {

@@ -87,17 +87,23 @@ impl Operator for CollectSink {
         "collect_sink"
     }
 
-    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
         self.handle.total.fetch_add(1, Ordering::Relaxed);
         self.handle
             .bytes
             .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
-        self.handle.captured.lock().unwrap().push(t);
+        self.handle.captured.lock().unwrap().push(t.clone());
+        // Report the delivered result as this worker's output: sinks
+        // have no out-edges, so nothing is routed, but the `produced`
+        // gauge and the first-output timestamp (Maestro's measured
+        // first-response time, §4.5.3) now mark *result delivery*
+        // rather than input arrival.
+        out.emit(t);
     }
 
     /// Batched capture: two atomic adds and one lock per chunk instead
     /// of per tuple.
-    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
         if batch.is_empty() {
             return;
         }
@@ -112,6 +118,9 @@ impl Operator for CollectSink {
             .lock()
             .unwrap()
             .extend_from_slice(batch.as_slice());
+        // Delivered-results accounting (see `process`): an Arc clone of
+        // the shared batch, dropped by the edge-less emitter.
+        out.emit_batch(batch.clone());
     }
 }
 
@@ -144,15 +153,17 @@ impl Operator for CountByKeySink {
         "count_by_key_sink"
     }
 
-    fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
         self.handle.total.fetch_add(1, Ordering::Relaxed);
         self.handle
             .bytes
             .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
         self.count_key(&t);
+        // Delivered-results accounting (see `CollectSink::process`).
+        out.emit(t);
     }
 
-    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
+    fn process_batch(&mut self, batch: &TupleBatch, _port: usize, out: &mut dyn Emitter) {
         if batch.is_empty() {
             return;
         }
@@ -165,6 +176,7 @@ impl Operator for CountByKeySink {
         for t in batch.iter() {
             self.count_key(t);
         }
+        out.emit_batch(batch.clone());
     }
 }
 

@@ -1,0 +1,186 @@
+//! Elastic region scheduling end-to-end: an observation-driven
+//! schedule (worker budget set, counts re-planned between region
+//! activations via fenced scales on dormant operators) must produce
+//! byte-identical sink multisets to the static schedule, and a
+//! deliberately wrong initial cost model must lead the post-region
+//! re-plan to a different worker assignment than the initial plan.
+
+use texera_amber::config::Config;
+use texera_amber::engine::{OpSpec, PartitionScheme, Workflow};
+use texera_amber::maestro::cost::CostParams;
+use texera_amber::maestro::MaestroScheduler;
+use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::operators::{CollectSink, HashJoin, SinkHandle};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::VecSource;
+
+/// Cyclic-region workflow (the Fig. 4.1 pathology with real operators):
+/// one scan replicates into the build filter and, through a pass-all
+/// prep filter, into the probe of a strict join — so Maestro must
+/// materialize a probe-path edge and schedule two regions, the second
+/// gated on a dormant mat reader.
+///
+/// Keys: rows `i < 64` carry key `i` (so the build side, `val < 64`,
+/// holds exactly one row per key); later rows are uniform (`i % 64`) or
+/// 90%-hot-key-0 skewed. Every probe row therefore joins exactly one
+/// build row and the join output multiset has `rows` tuples.
+fn cyclic_workflow(rows: usize, skewed: bool) -> (Workflow, SinkHandle, usize, usize) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let data: Vec<Tuple> = (0..rows)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                let key = if i < 64 {
+                    i as i64
+                } else if skewed {
+                    if i % 10 != 0 { 0 } else { (i % 64) as i64 }
+                } else {
+                    (i % 64) as i64
+                };
+                Tuple::new(vec![Value::Int(key), Value::Int(i as i64)])
+            })
+            .collect();
+        Box::new(VecSource::new(data))
+    }));
+    let prep = w.add(OpSpec::unary("prep", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Ge, Value::Int(0)))
+    }));
+    let buildf = w.add(OpSpec::unary("buildf", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Lt, Value::Int(64)))
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        2,
+        [PartitionScheme::Hash { key: 0 }, PartitionScheme::Hash { key: 0 }],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 0).strict()),
+    ));
+    let handle = SinkHandle::new(0);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, prep, 0);
+    w.connect(scan, buildf, 0);
+    w.connect(buildf, join, 0);
+    w.connect(prep, join, 1);
+    w.connect(join, sink, 0);
+    (w, handle, sink, join)
+}
+
+/// Canonical multiset of sink tuples: sorted debug renderings (the
+/// byte-identical comparison the chaos/equivalence suites use).
+fn multiset(handle: &SinkHandle) -> Vec<String> {
+    let mut rows: Vec<String> = handle.tuples().iter().map(|t| format!("{t:?}")).collect();
+    rows.sort_unstable();
+    rows
+}
+
+fn run_mode(rows: usize, skewed: bool, budget: usize) -> (Vec<String>, u64) {
+    let (w, handle, sink, _) = cyclic_workflow(rows, skewed);
+    let mut cost = CostParams::new();
+    cost.source_rows.insert(0, rows as f64);
+    cost.selectivity.insert(2, 64.0 / rows as f64); // buildf tiny
+    let cfg = Config {
+        batch_size: 1024,
+        ctrl_check_interval: 1024,
+        max_workers: budget,
+        ..Config::for_tests()
+    };
+    let sched = MaestroScheduler::new(cfg, cost);
+    let outcome = sched.run(w, &[sink]);
+    assert!(outcome.measured_frt.is_finite());
+    if budget > 0 {
+        assert!(
+            !outcome.replans.is_empty(),
+            "elastic schedule never re-planned"
+        );
+    }
+    (multiset(&handle), handle.total())
+}
+
+#[test]
+fn elastic_schedule_matches_static_uniform_batch_1024() {
+    let rows = 4000;
+    let (static_rows, static_total) = run_mode(rows, false, 0);
+    let (elastic_rows, elastic_total) = run_mode(rows, false, 6);
+    assert_eq!(static_total, rows as u64);
+    assert_eq!(elastic_total, static_total);
+    assert_eq!(
+        elastic_rows, static_rows,
+        "elastic schedule changed the sink multiset (uniform)"
+    );
+}
+
+#[test]
+fn elastic_schedule_matches_static_skewed_batch_1024() {
+    let rows = 4000;
+    let (static_rows, static_total) = run_mode(rows, true, 0);
+    let (elastic_rows, elastic_total) = run_mode(rows, true, 6);
+    assert_eq!(static_total, rows as u64);
+    assert_eq!(elastic_total, static_total);
+    assert_eq!(
+        elastic_rows, static_rows,
+        "elastic schedule changed the sink multiset (90% hot key)"
+    );
+}
+
+#[test]
+fn wrong_initial_costs_lead_replan_to_different_assignment() {
+    let rows = 4000;
+    let (w, handle, sink, join) = cyclic_workflow(rows, false);
+    // Deliberately wrong initial model: the scan is claimed to produce
+    // 4 rows (actual: 4000), so the initial per-region assignment is
+    // starved by the rows cap; the join is expensive, so once the
+    // observed cardinalities land, the re-plan shifts budget onto it.
+    let mut cost = CostParams::new();
+    cost.source_rows.insert(0, 4.0);
+    cost.tuple_cost.insert(join, 50.0);
+    let cfg = Config {
+        batch_size: 1024,
+        ctrl_check_interval: 1024,
+        max_workers: 12,
+        ..Config::for_tests()
+    };
+    let sched = MaestroScheduler::new(cfg, cost);
+    let outcome = sched.run(w, &[sink]);
+    // Results stay correct across the dormant-operator scale fences.
+    assert_eq!(handle.total(), rows as u64, "elastic re-plan lost tuples");
+    // The trail recorded large estimation errors…
+    let worst_q = outcome
+        .replans
+        .iter()
+        .flat_map(|r| r.observed.iter())
+        .map(|o| o.q_error)
+        .fold(0.0f64, f64::max);
+    assert!(
+        worst_q >= 10.0,
+        "expected a large q-error from the wrong model, got {worst_q}"
+    );
+    // …and the re-plan moved to a different assignment than the initial
+    // plan, applying at least one fenced scale on a dormant operator.
+    assert_ne!(
+        outcome.initial_workers, outcome.final_workers,
+        "re-plan never changed the worker assignment: {outcome:?}"
+    );
+    let applied: Vec<_> = outcome
+        .replans
+        .iter()
+        .flat_map(|r| r.decisions.iter())
+        .filter(|d| d.applied)
+        .collect();
+    assert!(
+        !applied.is_empty(),
+        "no scale decision was applied: {:?}",
+        outcome.replans
+    );
+    assert!(applied.iter().all(|d| d.fence_ms > 0.0));
+    // The starved join specifically gained workers.
+    assert!(
+        outcome.final_workers[join] > outcome.initial_workers[join],
+        "join not scaled up: initial {:?} final {:?}",
+        outcome.initial_workers,
+        outcome.final_workers
+    );
+}
