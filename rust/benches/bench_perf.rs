@@ -16,7 +16,10 @@
 //! `Partitioner::route_with_base`, so "old vs new" is re-measured live
 //! on every run rather than pinned to stale numbers. The `maestro`
 //! section compares a static region schedule against the elastic,
-//! observation-driven one (per-region worker budget + re-planning).
+//! observation-driven one (per-region worker budget + re-planning);
+//! the `source_scale` section measures a mid-run 2→4 scale-up of a
+//! **source** operator (universal elasticity: splittable scan ranges)
+//! on a source-heavy skewed workflow.
 
 use std::time::{Duration, Instant};
 
@@ -43,13 +46,22 @@ fn main() {
     let shuffle = shuffle_section(smoke);
     let micro = scatter_micro_section(smoke);
     let elastic = elastic_scaling(smoke);
+    let source_scale = source_scale_section(smoke);
     let maestro = maestro_section(smoke);
     if smoke {
         // Smoke totals are not trajectory-quality numbers: exercise
         // the sections but leave the recorded BENCH_perf.json alone.
         println!("(smoke: BENCH_perf.json not written)");
     } else {
-        write_bench_json(&rows, baseline, &elastic, &shuffle, &micro, &maestro);
+        write_bench_json(
+            &rows,
+            baseline,
+            &elastic,
+            &source_scale,
+            &shuffle,
+            &micro,
+            &maestro,
+        );
         routing_cost();
         pause_latency();
         pjrt_classifier_throughput();
@@ -362,6 +374,104 @@ fn elastic_scaling(smoke: bool) -> ElasticBench {
     }
 }
 
+/// Source-scale result: scan-layer throughput before and after a
+/// mid-run 2→4 *source* scale-up (universal elasticity), plus the
+/// fence duration.
+struct SourceScaleBench {
+    workers_before: usize,
+    workers_after: usize,
+    before_tps: f64,
+    after_tps: f64,
+    fence_ms: f64,
+}
+
+/// Mid-run 2→4 scale-up of a **source** operator on a source-heavy
+/// skewed workflow: the scan carries a latency-bound per-tuple parse
+/// cost (the expensive-ingest shape) and feeds a cheap skewed group-by,
+/// so the scan layer is the bottleneck and splitting its scan ranges
+/// across more workers absorbs it. Throughput is the scan layer's
+/// processed rate over a fixed window before vs. after the scale —
+/// the formerly refusal-only path this PR's tentpole opens.
+fn source_scale_section(smoke: bool) -> SourceScaleBench {
+    println!("--- source scaling: mid-run 2->4 scan scale-up (source-heavy skewed workflow) ---");
+    let total = if smoke { 30_000usize } else { 150_000 };
+    const PARSE_COST_NS: u64 = 40_000;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source_with_op(
+        "scan",
+        2,
+        move |idx, parts| {
+            let rows: Vec<Tuple> = (0..total)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| {
+                    // 90% hot key 0, the rest spread over 100 keys.
+                    let key = if i % 10 != 0 { 0 } else { (i % 100) as i64 + 1 };
+                    Tuple::new(vec![Value::Int(key), Value::Int(1)])
+                })
+                .collect();
+            Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+        },
+        |_, _| Box::new(MapUdf::identity(PARSE_COST_NS)),
+    ));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, fin, 0);
+    w.connect(fin, sink, 0);
+    let cfg = Config {
+        batch_size: 400,
+        // Chunked control checks: the artificial parse cost sleeps once
+        // per 64-tuple chunk, so sleep granularity doesn't distort
+        // rates.
+        ctrl_check_interval: 64,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    let processed = |exec: &Execution| -> u64 {
+        exec.stats()
+            .iter()
+            .filter(|(id, _)| id.op == scan)
+            .map(|(_, s)| s.processed)
+            .sum()
+    };
+    let window = Duration::from_millis(if smoke { 150 } else { 400 });
+    std::thread::sleep(Duration::from_millis(if smoke { 40 } else { 100 })); // warm-up
+    let p0 = processed(&exec);
+    std::thread::sleep(window);
+    let p1 = processed(&exec);
+    let before_tps = (p1 - p0) as f64 / window.as_secs_f64();
+    let fence = exec.scale_operator(scan, 4);
+    let p2 = processed(&exec);
+    std::thread::sleep(window);
+    let p3 = processed(&exec);
+    let after_tps = (p3 - p2) as f64 / window.as_secs_f64();
+    exec.join();
+    let speedup = if before_tps > 0.0 { after_tps / before_tps } else { 0.0 };
+    println!(
+        "2 scan workers: {:.0} tuples/s | 4 scan workers: {:.0} tuples/s | {speedup:.2}x | fence {:.1} ms",
+        before_tps,
+        after_tps,
+        fence.as_secs_f64() * 1e3
+    );
+    println!("(sink groups: {})\n", handle.tuples().len());
+    SourceScaleBench {
+        workers_before: 2,
+        workers_after: 4,
+        before_tps,
+        after_tps,
+        fence_ms: fence.as_secs_f64() * 1e3,
+    }
+}
+
 /// Maestro static-vs-elastic schedule comparison on one skewed
 /// multi-region workflow.
 struct MaestroBench {
@@ -510,6 +620,7 @@ fn write_bench_json(
     rows: &[(usize, usize, f64)],
     baseline: f64,
     elastic: &ElasticBench,
+    source_scale: &SourceScaleBench,
     shuffle: &[ShuffleRow],
     micro: &ScatterMicro,
     maestro: &MaestroBench,
@@ -577,6 +688,27 @@ fn write_bench_json(
     s.push_str(&format!(
         "    \"post_scale_speedup\": {es:.2}, \"fence_ms\": {:.1}\n  }},\n",
         elastic.fence_ms
+    ));
+    let ss = if source_scale.before_tps > 0.0 {
+        source_scale.after_tps / source_scale.before_tps
+    } else {
+        0.0
+    };
+    s.push_str("  \"source_scale\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan+parse(40us/tuple)->gb_final->sink, 90% hot key; the *scan* (source class) is scaled\",\n",
+    );
+    s.push_str(&format!(
+        "    \"workers_before\": {}, \"workers_after\": {},\n",
+        source_scale.workers_before, source_scale.workers_after
+    ));
+    s.push_str(&format!(
+        "    \"tuples_per_sec_before\": {:.0}, \"tuples_per_sec_after\": {:.0},\n",
+        source_scale.before_tps, source_scale.after_tps
+    ));
+    s.push_str(&format!(
+        "    \"post_scale_speedup\": {ss:.2}, \"fence_ms\": {:.1}\n  }},\n",
+        source_scale.fence_ms
     ));
     s.push_str("  \"maestro\": {\n");
     s.push_str(

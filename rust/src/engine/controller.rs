@@ -26,6 +26,7 @@ use crate::engine::operator::{OpPatch, OpState};
 use crate::engine::partitioner::{PartitionScheme, Partitioner};
 use crate::engine::worker::{run_worker, OutputEdge, WorkerContext};
 use crate::tuple::Tuple;
+use crate::workloads::{redistribute_sources, TupleSource};
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::Ordering;
@@ -175,6 +176,28 @@ struct WorkerHandle {
     thread: Option<JoinHandle<()>>,
 }
 
+/// Everything one worker hands back during a scale fence's unplug step
+/// (`WorkerEvent::ScaleState`).
+struct ScaleSurrender {
+    state: OpState,
+    pending: Vec<DataEvent>,
+    /// The live scan range, for source workers (repartitioned over the
+    /// new worker set).
+    source: Option<Box<dyn TupleSource>>,
+}
+
+/// Who scaled an operator first: the engine's ownership/veto guard
+/// against the `AutoscalePlugin` and an external driver (Maestro's
+/// re-planner, tests) issuing conflicting parallelism changes for the
+/// same operator. The first party whose scale is *accepted* owns the
+/// operator; the other party's later requests are refused outright
+/// instead of silently last-writer-winning.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ScaleOwner {
+    Driver,
+    Plugin,
+}
+
 struct Coordinator {
     workflow: Workflow,
     config: Config,
@@ -187,13 +210,25 @@ struct Coordinator {
     // spawn workers and re-inject surrendered input mid-run.
     senders: HashMap<WorkerId, DataSender>,
     ev_tx: Sender<WorkerEvent>,
-    /// States + pending input collected from the scaled operator's old
-    /// workers during a fence (keyed by worker).
-    scale_collect: HashMap<WorkerId, (OpState, Vec<DataEvent>)>,
+    /// States + pending input (+ sources) collected from the scaled
+    /// operator's old workers during a fence (keyed by worker).
+    scale_collect: HashMap<WorkerId, ScaleSurrender>,
     /// Commands that arrived mid-fence, replayed after it closes.
     deferred: Vec<Command>,
     /// Scale requests queued by the coordinator plugin.
     scale_requests: RefCell<Vec<(usize, usize)>>,
+    /// Monotone worker-set version, bumped per scale fence; stamped
+    /// into `RescaleSelf` and spawned workers (the scatter-merge peer
+    /// barrier is keyed on it).
+    fence_epoch: u64,
+    /// Ownership/veto guard: who scaled each operator first.
+    scale_owner: HashMap<usize, ScaleOwner>,
+    /// Whether sources were deployed auto-starting (false = Maestro
+    /// dormant deployment), and which dormant source ops have since
+    /// been started — workers spawned by a *source* scale must inherit
+    /// the operator's current started/dormant status.
+    sources_autostart: bool,
+    started_sources: HashSet<usize>,
 
     // Pause bookkeeping.
     pause_outstanding: HashSet<WorkerId>,
@@ -398,6 +433,7 @@ impl Execution {
                     ft_log: config.ft_log,
                     snapshot,
                     scatter_merge: op.scatter_merge,
+                    scale_epoch: 0,
                     initial_eofs: None,
                     start_paused: false,
                 };
@@ -449,6 +485,10 @@ impl Execution {
             scale_collect: HashMap::new(),
             deferred: Vec::new(),
             scale_requests: RefCell::new(Vec::new()),
+            fence_epoch: 0,
+            scale_owner: HashMap::new(),
+            sources_autostart,
+            started_sources: HashSet::new(),
             pause_outstanding: HashSet::new(),
             pause_reply: None,
             user_paused: false,
@@ -594,11 +634,16 @@ impl Execution {
     }
 
     /// Elastic scaling: change `op`'s worker count to `new_workers`
-    /// without stopping the workflow (engine::scale). Blocks until the
-    /// fenced epoch completes and returns its duration; returns
-    /// `Duration::ZERO` when the request was refused (unknown/source/
-    /// scatter-merge operator, unchanged count, or the operator already
-    /// has completed workers).
+    /// without stopping the workflow (engine::scale). Works for every
+    /// operator class — including sources (splittable scan ranges),
+    /// scatter-merge operators (epoch-keyed peer barrier) and
+    /// broadcast-input operators (build-side replication). Blocks until
+    /// the fenced epoch completes and returns its duration; returns
+    /// `Duration::ZERO` when the request was refused: unknown operator,
+    /// zero/unchanged count, the operator already has completed workers
+    /// (the EOF cascade is under way), or the operator is owned by the
+    /// other scaling party (the `AutoscalePlugin` vs driver/Maestro
+    /// ownership guard — whoever scales an operator first owns it).
     pub fn scale_operator(&self, op: usize, new_workers: usize) -> Duration {
         let (tx, rx) = channel();
         self.cmd(Command::Scale { op, new_workers, reply: tx });
@@ -904,8 +949,9 @@ impl Coordinator {
                     self.maybe_done();
                 }
             }
-            WorkerEvent::ScaleState { worker, state, pending } => {
-                self.scale_collect.insert(worker, (state, pending));
+            WorkerEvent::ScaleState { worker, state, pending, source } => {
+                self.scale_collect
+                    .insert(worker, ScaleSurrender { state, pending, source });
             }
             WorkerEvent::Log(rec) => {
                 self.replay_log.append(rec);
@@ -1058,6 +1104,7 @@ impl Coordinator {
             }
             Command::StartSources { ops, reply } => {
                 for op in ops {
+                    self.started_sources.insert(op);
                     self.broadcast_op(op, ControlMessage::StartSource);
                 }
                 let _ = reply.send(());
@@ -1084,7 +1131,22 @@ impl Coordinator {
             }
             Command::SendControl { to, msg } => self.send_control(to, msg),
             Command::Scale { op, new_workers, reply } => {
-                let d = self.do_scale(op, new_workers);
+                // Ownership/veto guard: once the autoscale plugin has
+                // scaled an operator, driver-side requests (Maestro's
+                // re-planner, the API) for that operator are refused —
+                // and vice versa — so the two policies can never
+                // interleave conflicting parallelism changes
+                // (last-writer-wins) on one operator.
+                let vetoed =
+                    matches!(self.scale_owner.get(&op), Some(ScaleOwner::Plugin));
+                let d = if vetoed {
+                    Duration::ZERO
+                } else {
+                    self.do_scale(op, new_workers)
+                };
+                if d > Duration::ZERO {
+                    self.scale_owner.insert(op, ScaleOwner::Driver);
+                }
                 let _ = reply.send(d);
                 self.drain_deferred();
             }
@@ -1158,42 +1220,54 @@ impl Coordinator {
     ///
     /// 1. **Fence** — pause every worker and await all acks; upstream
     ///    senders flush on pause, so all in-flight data is parked in
-    ///    receiver channels/stashes.
+    ///    receiver channels/stashes. The fence bumps the worker-set
+    ///    epoch stamped into `RescaleSelf` and spawned workers.
     /// 2. **Unplug** — each old worker of `op` surrenders its operator
-    ///    state and unprocessed input (`ExtractScaleState` →
-    ///    `ScaleState`).
+    ///    state, unprocessed input, operator-buffered input and — on
+    ///    scan workers — its live `TupleSource`
+    ///    (`ExtractScaleState` → `ScaleState`). Broadcast-input
+    ///    operators take the replicate/retire path
+    ///    ([`Coordinator::scale_broadcast`]) instead.
     /// 3. **Retire/spawn** — worker threads + mailboxes are destroyed or
-    ///    created; range bounds are recomputed for the new receiver set.
+    ///    created; range bounds are recomputed for the new receiver
+    ///    set; surrendered scan ranges are repartitioned over the new
+    ///    worker set ([`redistribute_sources`]: stride splits on
+    ///    scale-up, chains on scale-down).
     /// 4. **Re-hash** — every surrendered state shard is split by
     ///    `scope % new_n` and installed on its new owner; surrendered
-    ///    input is re-routed through a fresh partitioner.
+    ///    input is re-routed through a fresh partitioner; surviving
+    ///    scan workers get their repartitioned range (`InstallSource`).
     /// 5. **Rewire** — upstream partitioners swap to the new receiver
-    ///    set, siblings swap peer senders, downstream EOF accounting
-    ///    updates.
+    ///    set, siblings swap peer senders + barrier epoch, downstream
+    ///    EOF accounting updates.
     /// 6. **Resume** — unless the driver had explicitly paused.
     ///
-    /// Refused (returns `Duration::ZERO`) for source operators (their
-    /// input partitions are fixed at plan time), scatter-merge
-    /// operators (the EOF peer barrier counts a worker set frozen at
-    /// deploy), operators with completed workers (the EOF cascade is
-    /// already under way), and unknown ops / unchanged counts.
+    /// Refused (returns `Duration::ZERO`) for operators with completed
+    /// workers (the EOF cascade is already under way) and for unknown
+    /// ops / unchanged counts. Source, scatter-merge and
+    /// broadcast-input operators — refused before universal elasticity
+    /// — now scale through the same fence (splittable scan ranges, the
+    /// epoch-keyed peer barrier, and build-side replication
+    /// respectively).
     fn do_scale(&mut self, op: usize, new_n: usize) -> Duration {
         let t0 = Instant::now();
         if self.shutdown
             || op >= self.workflow.ops.len()
             || new_n == 0
             || new_n == self.workflow.ops[op].workers
-            || self.workflow.ops[op].is_source
-            || self.workflow.ops[op].scatter_merge
             || self.completed.iter().any(|w| w.op == op)
-            || self.workflow.ops[op]
-                .input_partitioning
-                .iter()
-                .any(|s| matches!(s, PartitionScheme::Broadcast))
         {
             return Duration::ZERO;
         }
         let old_n = self.workflow.ops[op].workers;
+        let is_source = self.workflow.ops[op].is_source;
+        let broadcast_ports: Vec<usize> = self.workflow.ops[op]
+            .input_partitioning
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, PartitionScheme::Broadcast))
+            .map(|(p, _)| p)
+            .collect();
         let deadline = Instant::now() + Duration::from_secs(30);
 
         // Let any in-flight pause/checkpoint handshake settle first so
@@ -1223,35 +1297,61 @@ impl Coordinator {
             self.abort_scale();
             return Duration::ZERO;
         }
+        // Worker-set version for this fence: scatter-merge peer
+        // barriers and spawned workers are keyed on it.
+        self.fence_epoch += 1;
+        let epoch = self.fence_epoch;
 
-        // (2) Unplug the old worker set.
+        // Broadcast-input operators replicate the build side instead of
+        // re-hashing it; their protocol differs from here on.
+        if !broadcast_ports.is_empty() {
+            return self.scale_broadcast(op, new_n, &broadcast_ports, epoch, t0, deadline);
+        }
+
+        // (2) Unplug the old worker set (scan workers also surrender
+        // their live sources).
         self.scale_collect.clear();
         let old_ids: Vec<WorkerId> = (0..old_n)
             .map(|w| WorkerId::new(op, w))
             .filter(|id| self.handles.contains_key(id))
             .collect();
         for id in &old_ids {
-            self.send_control(*id, ControlMessage::ExtractScaleState);
+            self.send_control(*id, ControlMessage::ExtractScaleState { replicate: false });
         }
         while self.scale_collect.len() < old_ids.len() && Instant::now() < deadline {
             self.pump_fence();
         }
         // Abort-and-restore if any worker failed to surrender in time:
-        // hand every collected state/pending back to its original owner
-        // rather than proceed with a partial (silently lossy) epoch.
+        // hand every collected state/pending/source back to its original
+        // owner rather than proceed with a partial (silently lossy)
+        // epoch.
         if self.scale_collect.len() < old_ids.len() {
             self.abort_scale();
             return Duration::ZERO;
         }
+        let mut collected: Vec<(WorkerId, ScaleSurrender)> =
+            self.scale_collect.drain().collect();
+        collected.sort_by_key(|(id, _)| *id);
 
         // (3) Update the plan-time facts: worker count and range bounds.
-        self.workflow.ops[op].workers = new_n;
-        for scheme in self.workflow.ops[op].input_partitioning.iter_mut() {
-            if let PartitionScheme::Range { bounds, .. } = scheme {
-                let nb = crate::engine::scale::rescale_bounds(bounds, new_n);
-                *bounds = nb;
-            }
-        }
+        self.update_plan_facts(op, new_n);
+        // Source ops: repartition the surrendered scan-range remainders
+        // over the new worker set — stride splits on scale-up, chained
+        // remainders on scale-down. The multiset union of the new
+        // ranges equals the union of the remainders, and every range is
+        // itself deterministic/seekable, so replay stays byte-stable.
+        let mut new_sources: Vec<Option<Box<dyn TupleSource>>> = if is_source {
+            let srcs: Vec<Box<dyn TupleSource>> = collected
+                .iter_mut()
+                .filter_map(|(_, s)| s.source.take())
+                .collect();
+            redistribute_sources(srcs, new_n)
+                .into_iter()
+                .map(Some)
+                .collect()
+        } else {
+            (0..new_n).map(|_| None).collect()
+        };
         // Retire surplus workers (none completed — guarded above), or
         // create mailboxes + spawn threads for the new ones. New workers
         // start paused and join the closing Resume with everyone else.
@@ -1276,26 +1376,38 @@ impl Coordinator {
                 mailboxes.push((w, mb));
             }
             for (w, mb) in mailboxes {
-                self.spawn_scaled_worker(op, w, mb);
+                let src = new_sources[w].take();
+                self.spawn_scaled_worker(op, w, mb, src, epoch);
                 self.total_workers += 1;
             }
         }
-        let new_senders: Vec<DataSender> = (0..new_n)
-            .map(|w| self.senders[&WorkerId::new(op, w)].clone())
-            .collect();
+        // Surviving scan workers swap to their repartitioned ranges.
+        if is_source {
+            for (w, slot) in new_sources
+                .into_iter()
+                .enumerate()
+                .take(old_n.min(new_n))
+            {
+                if let Some(src) = slot {
+                    self.send_control(
+                        WorkerId::new(op, w),
+                        ControlMessage::InstallSource(
+                            crate::engine::message::source_slot(src),
+                        ),
+                    );
+                }
+            }
+        }
         let schemes = self.workflow.ops[op].input_partitioning.clone();
 
         // (4a) Re-hash the surrendered state. Shards are split per
         // source worker and merged by the *operator* on the receiving
         // side (`install_state`), so kind-aware combination (min/max,
         // avg pairs, sorted runs) stays with the operator.
-        let mut collected: Vec<(WorkerId, (OpState, Vec<DataEvent>))> =
-            self.scale_collect.drain().collect();
-        collected.sort_by_key(|(id, _)| *id);
         let mut pending_events: Vec<(WorkerId, Vec<DataEvent>)> = Vec::new();
-        for (id, (state, pending)) in collected {
-            self.install_state_shards(op, new_n, state);
-            pending_events.push((id, pending));
+        for (id, surrender) in collected {
+            self.install_state_shards(op, new_n, surrender.state);
+            pending_events.push((id, surrender.pending));
         }
         // (4b) Re-route the surrendered input through a fresh
         // partitioner per port. In-flight migrated state merges like
@@ -1348,11 +1460,222 @@ impl Coordinator {
             let _ = self.senders[&to].send(ev);
         }
 
-        // (5) Rewire the topology around the new worker set.
+        // (5)+(6) Rewire the topology and close the epoch.
+        self.rewire_and_resume(op, new_n, epoch, &schemes);
+        self.maybe_done();
+        t0.elapsed()
+    }
+
+    /// Scale a **broadcast-input** operator (the fence is already
+    /// closed and `epoch` stamped). Every worker of such an operator
+    /// holds an identical replica of the broadcast-built state, so the
+    /// protocol never moves state between survivors:
+    ///
+    /// * **Scale-up** — a donor (worker 0) *copies* its broadcast-side
+    ///   state ([`crate::engine::operator::Operator::replicate_broadcast_state`])
+    ///   and pending input (`ExtractScaleState { replicate: true }`);
+    ///   each spawned worker receives the replica (`InstallReplica`)
+    ///   plus a clone of the donor's pending **broadcast-port**
+    ///   batches. Its view of the broadcast stream then equals the
+    ///   donor's — past deliveries in the replica, parked deliveries in
+    ///   the cloned pending, future deliveries fanned out by the
+    ///   rewired upstream edges. `End` events are never cloned: the
+    ///   spawned worker's `initial_eofs` already account for completed
+    ///   upstream senders, and live senders will deliver theirs.
+    /// * **Scale-down** — only the retiring workers unplug; their
+    ///   replica state, broadcast-port pending, and per-receiver `End`
+    ///   copies are dropped (every survivor holds its own), while
+    ///   non-broadcast pending — hash/RR-partitioned ports, including
+    ///   operator-buffered input such as a join's early probes — is
+    ///   re-routed to the survivors through a fresh partitioner.
+    ///
+    /// Assumes broadcast-input operators keep only broadcast-derived
+    /// (replicated) keyed state plus transient buffered input — the
+    /// broadcast hash join this protocol exists for.
+    fn scale_broadcast(
+        &mut self,
+        op: usize,
+        new_n: usize,
+        bports: &[usize],
+        epoch: u64,
+        t0: Instant,
+        deadline: Instant,
+    ) -> Duration {
+        let old_n = self.workflow.ops[op].workers;
+        if new_n > old_n {
+            // (2) Replicate from a donor (worker 0 is alive: the fence
+            // closed with no completed worker of `op`).
+            self.scale_collect.clear();
+            let donor = WorkerId::new(op, 0);
+            self.send_control(
+                donor,
+                ControlMessage::ExtractScaleState { replicate: true },
+            );
+            while self.scale_collect.is_empty() && Instant::now() < deadline {
+                self.pump_fence();
+            }
+            let Some(surrender) = self.scale_collect.remove(&donor) else {
+                // Nothing was surrendered (the donor kept its copy), so
+                // the abort only lifts the fence pause.
+                self.scale_collect.clear();
+                self.abort_scale();
+                return Duration::ZERO;
+            };
+            self.update_plan_facts(op, new_n);
+            let mut mailboxes = Vec::new();
+            for w in old_n..new_n {
+                let id = WorkerId::new(op, w);
+                let (tx, mb) = mailbox(self.config.data_queue_cap);
+                self.senders.insert(id, tx);
+                mailboxes.push((w, mb));
+            }
+            for (w, mb) in mailboxes {
+                self.spawn_scaled_worker(op, w, mb, None, epoch);
+                self.total_workers += 1;
+            }
+            // (4) Replicate the build side + parked broadcast input.
+            for w in old_n..new_n {
+                let id = WorkerId::new(op, w);
+                if !surrender.state.is_empty() {
+                    self.send_control(
+                        id,
+                        ControlMessage::InstallReplica(surrender.state.clone()),
+                    );
+                }
+                for ev in &surrender.pending {
+                    if let DataEvent::Batch(msg) = ev {
+                        if bports.contains(&msg.port) {
+                            let _ = self.senders[&id].send(DataEvent::Batch(DataMessage {
+                                from: msg.from,
+                                port: msg.port,
+                                seq: 0,
+                                batch: msg.batch.clone(),
+                            }));
+                        }
+                    }
+                }
+            }
+        } else {
+            // (2) Unplug the retiring workers only; survivors keep
+            // their replicas and pending untouched.
+            self.scale_collect.clear();
+            let retiring: Vec<WorkerId> = (new_n..old_n)
+                .map(|w| WorkerId::new(op, w))
+                .filter(|id| self.handles.contains_key(id))
+                .collect();
+            for id in &retiring {
+                self.send_control(
+                    *id,
+                    ControlMessage::ExtractScaleState { replicate: false },
+                );
+            }
+            while self.scale_collect.len() < retiring.len() && Instant::now() < deadline {
+                self.pump_fence();
+            }
+            if self.scale_collect.len() < retiring.len() {
+                self.abort_scale();
+                return Duration::ZERO;
+            }
+            let mut collected: Vec<(WorkerId, ScaleSurrender)> =
+                self.scale_collect.drain().collect();
+            collected.sort_by_key(|(id, _)| *id);
+            self.update_plan_facts(op, new_n);
+            for w in new_n..old_n {
+                let id = WorkerId::new(op, w);
+                self.send_control(id, ControlMessage::Die);
+                if let Some(mut h) = self.handles.remove(&id) {
+                    if let Some(t) = h.thread.take() {
+                        let _ = t.join();
+                    }
+                    self.total_workers -= 1;
+                }
+                self.senders.remove(&id);
+            }
+            // (4) Re-route the retirees' non-broadcast pending to the
+            // survivors (through the freshly recomputed schemes);
+            // broadcast replicas are dropped.
+            let schemes = self.workflow.ops[op].input_partitioning.clone();
+            let mut routers: Vec<Partitioner> = schemes
+                .iter()
+                .map(|s| Partitioner::new(s.clone(), new_n, 0))
+                .collect();
+            let mut batches: Vec<Vec<Vec<Tuple>>> =
+                vec![vec![Vec::new(); schemes.len()]; new_n];
+            for (_, surrender) in collected {
+                for ev in surrender.pending {
+                    if let DataEvent::Batch(msg) = ev {
+                        if bports.contains(&msg.port) {
+                            continue;
+                        }
+                        for t in msg.batch.iter() {
+                            let dest = routers[msg.port].route(t);
+                            batches[dest][msg.port].push(t.clone());
+                        }
+                    }
+                }
+            }
+            for (dest, ports) in batches.into_iter().enumerate() {
+                for (port, tuples) in ports.into_iter().enumerate() {
+                    if tuples.is_empty() {
+                        continue;
+                    }
+                    let _ = self.senders[&WorkerId::new(op, dest)].send(DataEvent::Batch(
+                        DataMessage {
+                            from: WorkerId::new(op, dest),
+                            port,
+                            seq: 0,
+                            batch: tuples.into(),
+                        },
+                    ));
+                }
+            }
+        }
+        let schemes = self.workflow.ops[op].input_partitioning.clone();
+        self.rewire_and_resume(op, new_n, epoch, &schemes);
+        self.maybe_done();
+        t0.elapsed()
+    }
+
+    /// Scale fence step (3), plan-fact half: set the new worker count
+    /// and recompute Range partition bounds for the resized receiver
+    /// set. Shared by the generic and broadcast fence paths (a
+    /// broadcast-input operator may still have a Range-partitioned
+    /// other port).
+    fn update_plan_facts(&mut self, op: usize, new_n: usize) {
+        self.workflow.ops[op].workers = new_n;
+        for scheme in self.workflow.ops[op].input_partitioning.iter_mut() {
+            if let PartitionScheme::Range { bounds, .. } = scheme {
+                let nb = crate::engine::scale::rescale_bounds(bounds, new_n);
+                *bounds = nb;
+            }
+        }
+    }
+
+    /// Scale fence steps (5)+(6): swap the scaled operator's sibling
+    /// senders and worker-set epoch (`RescaleSelf`), rebuild upstream
+    /// partitioners against the new receiver set (`RescaleEdge`),
+    /// rewrite downstream EOF expectations (`UpdateUpstreamCount`), and
+    /// lift the fence pause. `FenceResume` undoes only the fence's
+    /// pause, so a worker that was parked at a breakpoint or a
+    /// global-breakpoint target before the fence stays parked.
+    fn rewire_and_resume(
+        &mut self,
+        op: usize,
+        new_n: usize,
+        epoch: u64,
+        schemes: &[PartitionScheme],
+    ) {
+        let new_senders: Vec<DataSender> = (0..new_n)
+            .map(|w| self.senders[&WorkerId::new(op, w)].clone())
+            .collect();
         for w in 0..new_n {
             self.send_control(
                 WorkerId::new(op, w),
-                ControlMessage::RescaleSelf { peers: new_senders.clone(), workers: new_n },
+                ControlMessage::RescaleSelf {
+                    peers: new_senders.clone(),
+                    workers: new_n,
+                    epoch,
+                },
             );
         }
         let mut upstream_ops: Vec<usize> =
@@ -1371,7 +1694,7 @@ impl Coordinator {
                 ControlMessage::RescaleEdge {
                     target_op: op,
                     receivers: new_n,
-                    port_schemes: schemes.clone(),
+                    port_schemes: schemes.to_vec(),
                     senders: new_senders.clone(),
                 },
             );
@@ -1391,29 +1714,29 @@ impl Coordinator {
                 );
             }
         }
-
-        // (6) Close the epoch. `FenceResume` undoes only the fence's
-        // pause, so a worker that was parked at a breakpoint or a
-        // global-breakpoint target before the fence stays parked.
         if !self.user_paused {
             self.broadcast_all(ControlMessage::FenceResume);
         }
-        self.maybe_done();
-        t0.elapsed()
     }
 
     /// Abandon an open fence: return every surrendered state/pending
-    /// set to its original owner and lift the fence pause. Leaves the
-    /// workflow exactly as before the scale attempt.
+    /// set (and scan range) to its original owner and lift the fence
+    /// pause. Leaves the workflow exactly as before the scale attempt.
     fn abort_scale(&mut self) {
-        let collected: Vec<(WorkerId, (OpState, Vec<DataEvent>))> =
+        let collected: Vec<(WorkerId, ScaleSurrender)> =
             self.scale_collect.drain().collect();
-        for (id, (state, pending)) in collected {
-            if !state.is_empty() {
-                self.send_control(id, ControlMessage::InstallState(state));
+        for (id, surrender) in collected {
+            if !surrender.state.is_empty() {
+                self.send_control(id, ControlMessage::InstallState(surrender.state));
+            }
+            if let Some(src) = surrender.source {
+                self.send_control(
+                    id,
+                    ControlMessage::InstallSource(crate::engine::message::source_slot(src)),
+                );
             }
             if let Some(s) = self.senders.get(&id) {
-                for ev in pending {
+                for ev in surrender.pending {
                     let _ = s.send(ev);
                 }
             }
@@ -1438,10 +1761,20 @@ impl Coordinator {
 
     /// Spawn one additional worker of `op` mid-run (scale-up). Mirrors
     /// the deploy-time spawn in `start_inner`, but computes upstream
-    /// EOF accounting from the *live* worker sets and seeds the EOFs
-    /// the new worker can never receive from already-completed
-    /// upstream workers.
-    fn spawn_scaled_worker(&mut self, op_idx: usize, w: usize, mb: Mailbox) {
+    /// EOF accounting from the *live* worker sets, seeds the EOFs the
+    /// new worker can never receive from already-completed upstream
+    /// workers, stamps the fence's worker-set `epoch` (scatter-merge
+    /// barrier), hands scale-spawned *scan* workers their repartitioned
+    /// range, and inherits the operator's current started/dormant
+    /// source status (Maestro deploys sources dormant).
+    fn spawn_scaled_worker(
+        &mut self,
+        op_idx: usize,
+        w: usize,
+        mb: Mailbox,
+        source: Option<Box<dyn TupleSource>>,
+        epoch: u64,
+    ) {
         let spec = &self.workflow.ops[op_idx];
         let new_n = spec.workers;
         let id = WorkerId::new(op_idx, w);
@@ -1473,6 +1806,8 @@ impl Coordinator {
             .collect();
         let control = mb.control.clone();
         let gauges = mb.gauges.clone();
+        let source_autostart =
+            self.sources_autostart || self.started_sources.contains(&op_idx);
         let ctx = WorkerContext {
             id,
             mailbox: mb,
@@ -1481,13 +1816,14 @@ impl Coordinator {
             upstream_counts: self.expected_ends(op_idx),
             peers,
             port_key_fields,
-            source: None,
-            source_autostart: true,
+            source,
+            source_autostart,
             batch_size: self.config.batch_size,
             ctrl_check_interval: self.config.ctrl_check_interval,
             ft_log: self.config.ft_log,
             snapshot: None,
             scatter_merge: spec.scatter_merge,
+            scale_epoch: epoch,
             initial_eofs: Some(self.missed_ends(op_idx)),
             start_paused: true,
         };
@@ -1564,11 +1900,18 @@ impl Coordinator {
             self.fire_timers();
             // Autoscale: execute plugin-requested parallelism changes
             // (one fenced epoch each), then replay commands deferred
-            // while the fence was open.
+            // while the fence was open. Requests for operators the
+            // driver (Maestro) already scaled are vetoed (see the
+            // ownership guard in `Command::Scale`).
             let reqs: Vec<(usize, usize)> =
                 self.scale_requests.borrow_mut().drain(..).collect();
             for (op, n) in reqs {
-                let _ = self.do_scale(op, n);
+                if matches!(self.scale_owner.get(&op), Some(ScaleOwner::Driver)) {
+                    continue;
+                }
+                if self.do_scale(op, n) > Duration::ZERO {
+                    self.scale_owner.insert(op, ScaleOwner::Plugin);
+                }
             }
             self.drain_deferred();
         }

@@ -36,7 +36,7 @@ pub struct LogRecord {
 }
 
 /// Snapshot of a single worker taken while the workflow is paused.
-#[derive(Debug, Default)]
+#[derive(Default)]
 pub struct WorkerSnapshot {
     /// Operator keyed state.
     pub op_state: crate::engine::operator::OpState,
@@ -45,6 +45,16 @@ pub struct WorkerSnapshot {
     pub pending: Vec<DataEvent>,
     /// Source read position (scan workers replay from here).
     pub source_pos: Option<usize>,
+    /// A fork of the scan worker's live source at its read position
+    /// ([`crate::workloads::TupleSource::fork`]). After an elastic
+    /// *source* scale the live scan ranges no longer correspond to any
+    /// plan-time partitioning, so `source_pos` alone cannot reproduce
+    /// them; recovery installs this fork instead when present, which is
+    /// how a checkpoint taken across a source-scale epoch re-deploys at
+    /// the post-scale parallelism. `None` for non-source workers and
+    /// for sources that do not implement `fork` (those fall back to
+    /// the plan-time builder + `source_pos`).
+    pub source: Option<Box<dyn crate::workloads::TupleSource>>,
     /// EOFs already seen per port.
     pub eofs_seen: Vec<usize>,
     /// Data messages dequeued so far (replay-position base). When the
@@ -59,6 +69,23 @@ pub struct WorkerSnapshot {
     /// Stats counters to restore (processed/produced).
     pub processed: u64,
     pub produced: u64,
+}
+
+// Manual: the embedded `Box<dyn TupleSource>` has no `Debug`.
+impl std::fmt::Debug for WorkerSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerSnapshot")
+            .field("op_state", &self.op_state)
+            .field("pending", &self.pending)
+            .field("source_pos", &self.source_pos)
+            .field("source", &self.source.as_ref().map(|_| "<fork>"))
+            .field("eofs_seen", &self.eofs_seen)
+            .field("msg_count", &self.msg_count)
+            .field("resume_offset", &self.resume_offset)
+            .field("processed", &self.processed)
+            .field("produced", &self.produced)
+            .finish()
+    }
 }
 
 /// A whole-workflow checkpoint: one snapshot per worker.

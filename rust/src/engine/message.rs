@@ -13,8 +13,20 @@
 use crate::engine::operator::{OpPatch, OpState};
 use crate::engine::partitioner::MitigationRoute;
 use crate::tuple::{Tuple, TupleBatch};
+use crate::workloads::TupleSource;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// A shared slot carrying one repartitioned [`TupleSource`] to one
+/// worker during a source-scale fence. The control plane is `Clone`
+/// (broadcast-friendly), boxed sources are not; the slot is cloned as
+/// an `Arc` and the receiving worker *takes* the box out.
+pub type SourceSlot = Arc<std::sync::Mutex<Option<Box<dyn TupleSource>>>>;
+
+/// Wrap a repartitioned source for [`ControlMessage::InstallSource`].
+pub fn source_slot(src: Box<dyn TupleSource>) -> SourceSlot {
+    Arc::new(std::sync::Mutex::new(Some(src)))
+}
 
 /// Identifies a worker: (operator index in the DAG, worker index within
 /// the operator).
@@ -68,7 +80,11 @@ pub enum DataEvent {
     State { from: WorkerId, state: OpState, transfer_id: u64 },
     /// Peer-barrier marker for the scattered-state merge (§3.5.4): a
     /// sibling worker has shipped all its foreign runs (Fig. 3.11(e)).
-    PeerEof { from: WorkerId },
+    /// `epoch` is the worker-set version stamped by the last scale
+    /// fence (0 = the deploy-time set): receivers count PeerEofs per
+    /// epoch, so a barrier announced against a retired sibling set can
+    /// never satisfy — or deadlock — the rebuilt one.
+    PeerEof { from: WorkerId, epoch: u64 },
 }
 
 /// A local conditional-breakpoint predicate over output tuples
@@ -131,20 +147,43 @@ pub enum ControlMessage {
     ReplayLog(Vec<crate::engine::fault::LogRecord>),
 
     // ---- elastic scaling (engine::scale) ----
-    /// Scale fence step (b): unplug — hand the coordinator the full
-    /// operator state plus all unprocessed input (stash, queued channel
-    /// contents, the remainder of a partially processed batch). Sent
-    /// only while the worker is fence-paused; the worker replies with
-    /// [`WorkerEvent::ScaleState`] and is left stateless/input-less.
-    ExtractScaleState,
+    /// Scale fence step (b): unplug. With `replicate: false` the worker
+    /// hands the coordinator its full operator state plus all
+    /// unprocessed input (stash, queued channel contents, the remainder
+    /// of a partially processed batch, any operator-buffered input, and
+    /// — on source workers — the live [`crate::workloads::TupleSource`]
+    /// itself), replying with [`WorkerEvent::ScaleState`] and ending up
+    /// stateless/input-less. With `replicate: true` (broadcast-input
+    /// scale-up donor) the worker replies with a **copy** — the
+    /// broadcast-side state replica
+    /// ([`crate::engine::operator::Operator::replicate_broadcast_state`])
+    /// and a clone of its pending input — and keeps everything. Sent
+    /// only while the worker is fence-paused, so its input channel is
+    /// quiescent.
+    ExtractScaleState { replicate: bool },
     /// Scale fence step (d): install a re-hashed shard of the combined
     /// operator state ([`crate::engine::operator::Operator::install_state`]).
     InstallState(OpState),
+    /// Scale fence step (d), broadcast-input scale-up: install the
+    /// donor's broadcast-side replica on a freshly spawned worker
+    /// ([`crate::engine::operator::Operator::install_replica`]).
+    InstallReplica(OpState),
+    /// Scale fence step (d), source operators: install a repartitioned
+    /// scan range on a surviving worker (the first handler takes the
+    /// box out of the shared slot).
+    InstallSource(SourceSlot),
     /// Scale fence step (e), sent to workers of the *scaled* operator:
-    /// replace the sibling sender set (state-migration peers) and tell
+    /// replace the sibling sender set (state-migration peers), tell
     /// the operator its new parallelism
-    /// ([`crate::engine::operator::Operator::rescale`]).
-    RescaleSelf { peers: Vec<crate::engine::channel::DataSender>, workers: usize },
+    /// ([`crate::engine::operator::Operator::rescale`]), and stamp the
+    /// new worker-set version `epoch` (the scatter-merge EOF peer
+    /// barrier is keyed on it — a worker parked in a stale barrier
+    /// re-enters it against the new sibling set).
+    RescaleSelf {
+        peers: Vec<crate::engine::channel::DataSender>,
+        workers: usize,
+        epoch: u64,
+    },
     /// Scale fence step (e), sent to workers of *upstream* operators:
     /// rebuild every output edge targeting `target_op` — new receiver
     /// count, fresh partitioner from `port_schemes[edge.port]` (range
@@ -186,8 +225,10 @@ impl std::fmt::Debug for ControlMessage {
             ControlMessage::Die => "Die",
             ControlMessage::StartSource => "StartSource",
             ControlMessage::ReplayLog(_) => "ReplayLog",
-            ControlMessage::ExtractScaleState => "ExtractScaleState",
+            ControlMessage::ExtractScaleState { .. } => "ExtractScaleState",
             ControlMessage::InstallState(_) => "InstallState",
+            ControlMessage::InstallReplica(_) => "InstallReplica",
+            ControlMessage::InstallSource(_) => "InstallSource",
             ControlMessage::RescaleSelf { .. } => "RescaleSelf",
             ControlMessage::RescaleEdge { .. } => "RescaleEdge",
             ControlMessage::UpdateUpstreamCount { .. } => "UpdateUpstreamCount",
@@ -215,7 +256,6 @@ pub struct WorkerStats {
 }
 
 /// Worker → coordinator events.
-#[derive(Debug)]
 pub enum WorkerEvent {
     /// Ack of a `Pause` (or self-pause on breakpoint); carries the
     /// position info the FT log needs (§2.6.2 step iii).
@@ -251,9 +291,40 @@ pub enum WorkerEvent {
     /// The worker produced its first output tuple (first-response-time
     /// instrumentation for Maestro experiments, §4.5.3).
     FirstOutput { worker: WorkerId, at: Instant },
-    /// Reply to [`ControlMessage::ExtractScaleState`]: the worker's full
-    /// operator state and every unprocessed input event, surrendered to
-    /// the coordinator for re-hashing/re-routing across the new worker
-    /// set (engine::scale fence step (c)).
-    ScaleState { worker: WorkerId, state: OpState, pending: Vec<DataEvent> },
+    /// Reply to [`ControlMessage::ExtractScaleState`]: the worker's
+    /// operator state and unprocessed input events — surrendered
+    /// (`replicate: false`, plus the live `TupleSource` on scan
+    /// workers) or copied (`replicate: true`, broadcast-build donor;
+    /// `source` is then `None`) — for re-hashing/re-routing/replication
+    /// across the new worker set (engine::scale fence step (c)).
+    ScaleState {
+        worker: WorkerId,
+        state: OpState,
+        pending: Vec<DataEvent>,
+        source: Option<Box<dyn TupleSource>>,
+    },
+}
+
+// Manual: `Box<dyn TupleSource>` (in `ScaleState`) has no `Debug`;
+// variant names are all diagnostics ever needed here.
+impl std::fmt::Debug for WorkerEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            WorkerEvent::PausedAck { .. } => "PausedAck",
+            WorkerEvent::ResumedAck { .. } => "ResumedAck",
+            WorkerEvent::Stats { .. } => "Stats",
+            WorkerEvent::LocalBreakpointHit { .. } => "LocalBreakpointHit",
+            WorkerEvent::TargetReached { .. } => "TargetReached",
+            WorkerEvent::InquiryReport { .. } => "InquiryReport",
+            WorkerEvent::Snapshot { .. } => "Snapshot",
+            WorkerEvent::StateApplied { .. } => "StateApplied",
+            WorkerEvent::PortCompleted { .. } => "PortCompleted",
+            WorkerEvent::MarkerAligned { .. } => "MarkerAligned",
+            WorkerEvent::Completed { .. } => "Completed",
+            WorkerEvent::Log(_) => "Log",
+            WorkerEvent::FirstOutput { .. } => "FirstOutput",
+            WorkerEvent::ScaleState { .. } => "ScaleState",
+        };
+        write!(f, "{name}")
+    }
 }

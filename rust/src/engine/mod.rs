@@ -20,11 +20,15 @@
 //! amortize per-tuple overheads while keeping pause latency sub-second
 //! regardless of batch size.
 //!
-//! Worker sets are **elastic**: the [`scale`] module changes an
-//! operator's parallelism mid-run inside one fenced epoch
-//! (pause → extract/re-hash state → rewire partitioners → resume),
-//! driven manually ([`Execution::scale_operator`]) or by the
-//! [`scale::AutoscalePlugin`] policy.
+//! Worker sets are **universally elastic**: the [`scale`] module
+//! changes any operator's parallelism mid-run inside one fenced epoch
+//! (pause → extract/re-hash state → rewire partitioners → resume) —
+//! including sources (splittable scan ranges), scatter-merge operators
+//! (epoch-keyed EOF peer barrier) and broadcast-input operators
+//! (build-side replication) — driven manually
+//! ([`Execution::scale_operator`]) or by the
+//! [`scale::AutoscalePlugin`] policy (with an ownership guard so the
+//! plugin and an external scheduler never fight over one operator).
 
 pub mod message;
 pub mod channel;

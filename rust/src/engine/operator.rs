@@ -211,6 +211,39 @@ pub trait Operator: Send {
         false
     }
 
+    /// Elastic scaling of a **broadcast-input** operator: return a copy
+    /// of the state built from broadcast deliveries (the "build side"),
+    /// installable on a scale-spawned worker via
+    /// [`Operator::install_replica`]. Every worker of a broadcast-input
+    /// operator holds an identical replica of this state, so one donor's
+    /// copy plus its pending broadcast input reconstructs the stream a
+    /// new worker missed (the Spark-AQE broadcast-build argument). The
+    /// default returns the full [`Operator::snapshot`] — correct for
+    /// operators whose whole state derives from broadcast input;
+    /// operators that also hold per-worker state (e.g. a join's
+    /// early-probe buffer) override to exclude it.
+    fn replicate_broadcast_state(&self) -> OpState {
+        self.snapshot()
+    }
+
+    /// Install a broadcast-side replica produced by
+    /// [`Operator::replicate_broadcast_state`] on a freshly spawned
+    /// worker. Defaults to [`Operator::restore`].
+    fn install_replica(&mut self, s: OpState) {
+        self.restore(s);
+    }
+
+    /// Surrender buffered *input* tuples that are neither reflected in
+    /// emitted output nor in keyed state — e.g. a hash join's
+    /// early-probe buffer — as `(port, tuples)` pairs. Elastic scaling
+    /// re-routes these through the new partitioner exactly like
+    /// in-flight channel input, so a retiring worker's buffered rows
+    /// reach their new owners instead of dying with it. The operator
+    /// must forget the returned tuples.
+    fn drain_buffered_input(&mut self) -> Vec<(usize, Vec<Tuple>)> {
+        Vec::new()
+    }
+
     /// Scattered-state parts held for *other* workers (§3.5.4): pairs
     /// of (owner worker index, state). Called at EOF when the operator
     /// runs under SBR mitigation; the engine ships each part to its

@@ -488,6 +488,9 @@ impl Partitioner {
     /// state. Reshape re-detects skew against the new worker set.
     /// `bounds` replaces the range-bound vector when the scheme is
     /// `Range` (the coordinator recomputes them); `None` keeps it.
+    /// `Broadcast` edges rescale too (universal elasticity): the
+    /// sentinel semantics are unchanged and the new receiver count
+    /// simply widens/narrows the fan-out set the sender flushes to.
     ///
     /// Semantically equivalent to the worker's `RescaleEdge` handler,
     /// which rebuilds the whole output edge (sender set and buffers
@@ -823,6 +826,20 @@ mod tests {
         assert_eq!(p.route(&t_int(8)), 1);
         assert_eq!(p.route(&t_int(12)), 2);
         assert_eq!(p.route(&t_int(99)), 3);
+    }
+
+    #[test]
+    fn rescale_broadcast_keeps_sentinel_and_widens_fanout() {
+        let mut p = Partitioner::new(PartitionScheme::Broadcast, 2, 0);
+        p.rescale(5, None);
+        assert_eq!(p.receivers, 5);
+        assert_eq!(p.route(&t_int(1)), usize::MAX);
+        let mut rv = RouteVec::default();
+        p.route_batch(&batch_of(&[1, 2, 3]), &[], &mut rv);
+        assert!(rv.broadcast);
+        p.rescale(1, None);
+        assert_eq!(p.receivers, 1);
+        assert_eq!(p.route(&t_int(1)), usize::MAX);
     }
 
     #[test]

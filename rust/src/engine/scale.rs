@@ -17,17 +17,36 @@
 //!   (1) FENCE   │── Pause ──────────────▶  all workers
 //!               │◀─ PausedAck ──────────   (output flushed: all
 //!               │     × every worker        in-flight data parked in
-//!               │                           receiver channels/stashes)
+//!               │   bump worker-set epoch   receiver channels/stashes)
 //!   (2) UNPLUG  │── ExtractScaleState ──▶  old workers of the target
 //!               │◀─ ScaleState ─────────   {operator state + every
-//!               │     × old worker set      unprocessed input event}
+//!               │     × old worker set      unprocessed input event +
+//!               │                           operator-buffered input +
+//!               │                           the live TupleSource on
+//!               │                           scan workers}
+//!               │   (broadcast-input ops: replicate=true to ONE donor
+//!               │    on scale-up — copy, donor keeps everything — or
+//!               │    unplug of the RETIRING workers only on
+//!               │    scale-down)
 //!   (3) RESHAPE │  retire threads (n↓) / spawn threads+mailboxes (n↑),
-//!       THE SET │  recompute Range bounds for the new receiver count
+//!       THE SET │  recompute Range bounds for the new receiver count,
+//!               │  repartition surrendered scan ranges over new_n
+//!               │  (TupleSource::split stride re-cuts on n↑, chained
+//!               │   remainders on n↓ — multiset union preserved)
 //!   (4) REHASH  │── InstallState ───────▶  shard s: scope % new_n == w
 //!               │   re-route surrendered   (operator-side install_state
 //!               │   input through a fresh   merges kind-aware: min/max,
 //!               │   partitioner             avg pairs, sorted runs)
-//!   (5) REWIRE  │── RescaleSelf ────────▶  target workers (new peers)
+//!               │── InstallSource ──────▶  surviving scan workers (the
+//!               │                           repartitioned range)
+//!               │── InstallReplica ─────▶  scale-spawned workers of a
+//!               │   + clone of donor's      broadcast-input op (the
+//!               │   pending broadcast       donor's build-side copy)
+//!               │   batches
+//!   (5) REWIRE  │── RescaleSelf ────────▶  target workers (new peers +
+//!               │                           worker-set epoch; a worker
+//!               │                           parked in a stale EOF peer
+//!               │                           barrier re-enters it)
 //!               │── RescaleEdge ────────▶  upstream workers (new
 //!               │                           partitioner + senders;
 //!               │                           mitigation overlays drop)
@@ -48,18 +67,57 @@
 //! every key's state and its future input meet on one worker. Sink
 //! multisets are therefore identical to an unscaled run.
 //!
+//! **Sources.** Scan ranges are *splittable*
+//! ([`TupleSource::split`](crate::workloads::TupleSource::split)): the
+//! built-in generators are stride views over a global id space in which
+//! each tuple is a pure function of its id, so the unread remainder of
+//! a mid-read worker re-cuts into `n` disjoint deterministic sub-ranges
+//! (scale-up) or chains with its siblings' remainders
+//! ([`ChainSource`](crate::workloads::ChainSource), scale-down) without
+//! changing the emitted multiset or the §2.5/§2.6 replay bytes.
+//! Checkpoints embed a [`fork`](crate::workloads::TupleSource::fork) of
+//! each live range, so recovery from a checkpoint taken after a source
+//! scale re-deploys at the **post-scale** parallelism.
+//!
+//! **Scatter-merge.** The EOF peer barrier (§3.5.4) is keyed on the
+//! fence's worker-set epoch: `PeerEof` carries the epoch of the sibling
+//! set it was announced against, receivers count per epoch, and
+//! `RescaleSelf` makes a worker parked in a stale barrier re-enter it —
+//! re-shipping scattered parts from its re-installed state and
+//! re-announcing EOF under the new epoch — so the barrier can neither
+//! complete against retired siblings nor wedge on their missing
+//! announcements.
+//!
+//! **Broadcast-input.** Every worker of a broadcast-input operator
+//! holds a replica of the broadcast-built state, so scale-up clones one
+//! donor — its build-side state
+//! ([`Operator::replicate_broadcast_state`](crate::engine::operator::Operator::replicate_broadcast_state))
+//! plus its parked broadcast-port input — onto each spawned worker, and
+//! scale-down simply drops the retirees' replicas while re-routing
+//! their partitioned-port pending (including operator-buffered input
+//! such as a join's early probes,
+//! [`Operator::drain_buffered_input`](crate::engine::operator::Operator::drain_buffered_input))
+//! to the survivors.
+//!
 //! **EOF accounting.** A worker spawned mid-run can never receive the
 //! `End`s that already-completed upstream workers sent to the old
 //! receiver set; the coordinator seeds those as `initial_eofs`.
 //! Retired workers never send their `End`s; downstream expectations are
 //! rewritten from the live worker sets (`UpdateUpstreamCount`).
 //!
-//! **Refusals.** Source operators (input partitions are fixed at plan
-//! time), scatter-merge operators (the EOF peer barrier counts a worker
-//! set frozen at deploy), broadcast-input operators (earlier broadcast
-//! deliveries cannot be reconstructed for new workers), and operators
-//! that already have completed workers (the EOF cascade is under way)
-//! are refused — `scale_operator` returns `Duration::ZERO`.
+//! **Refusals.** Operators that already have completed workers (the EOF
+//! cascade is under way) and unknown ops / zero or unchanged counts are
+//! refused — `scale_operator` returns `Duration::ZERO`. The historical
+//! structural refusals (source, scatter-merge, broadcast-input) are
+//! gone: all three classes scale through the protocols above.
+//!
+//! **Ownership.** The coordinator tracks which party — the driver API
+//! (tests, Maestro's re-planner) or the [`AutoscalePlugin`] — first
+//! successfully scaled each operator, and refuses the other party's
+//! later requests for it. Without the guard both policies could
+//! interleave conflicting parallelism changes on one operator
+//! (last-writer-wins races between Maestro's budgeted assignment and
+//! the queue-driven policy).
 //!
 //! **Maestro integration.** The region scheduler
 //! ([`MaestroScheduler`](crate::maestro::MaestroScheduler)) drives this
@@ -70,10 +128,11 @@
 //! are **alive but dormant** — deployed, paused on empty inputs,
 //! sources not yet started. Scaling an idle operator exercises the
 //! same fence as a mid-stream scale; there is simply no pending input
-//! to surrender. Operators whose region already drained through
-//! pipelined links (and thus completed without an explicit await) are
-//! refused by the completed-workers guard, which the scheduler treats
-//! as "keep the deploy-time count".
+//! to surrender (scaling a dormant *source* re-cuts its untouched scan
+//! range). Operators whose region already drained through pipelined
+//! links (and thus completed without an explicit await) are refused by
+//! the completed-workers guard, which the scheduler treats as "keep
+//! the deploy-time count".
 //!
 //! **Interactions.** Mitigation overlays are cleared on every scale
 //! (their indices and hash bases refer to the old set); Reshape

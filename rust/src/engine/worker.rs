@@ -130,6 +130,10 @@ pub struct WorkerContext {
     /// foreign runs to their owners, then wait for every sibling's
     /// `PeerEof` before finishing.
     pub scatter_merge: bool,
+    /// Worker-set version this worker is born into (0 at deploy; the
+    /// fence epoch for workers spawned by elastic scaling). The
+    /// scatter-merge peer barrier counts `PeerEof`s of this epoch only.
+    pub scale_epoch: u64,
     /// For workers spawned mid-run by elastic scaling: EOFs per port
     /// this worker will never receive because the upstream sender
     /// completed (and sent `End` to the old receiver set) before the
@@ -536,8 +540,18 @@ struct Worker {
     finished: bool,
     /// Peer-barrier state: true while waiting for sibling PeerEofs.
     awaiting_peers: bool,
-    /// PeerEofs received so far (siblings can finish before we do).
-    peer_eofs_seen: usize,
+    /// PeerEofs received so far, **per worker-set epoch** (siblings can
+    /// finish before we do; a scale fence bumps the epoch, so barrier
+    /// announcements against a retired sibling set can never satisfy —
+    /// or wedge — the rebuilt one).
+    peer_eofs: HashMap<u64, usize>,
+    /// Current worker-set epoch (stamped by `RescaleSelf`).
+    scale_epoch: u64,
+    /// A scale fence invalidated the peer barrier this worker was
+    /// parked in: re-enter it (re-ship scattered parts under the
+    /// re-installed state, announce EOF with the new epoch) once the
+    /// re-injected input is drained.
+    rebarrier: bool,
     scatter_merge: bool,
     processed: u64,
     /// Data messages dequeued so far (replay position base).
@@ -603,7 +617,9 @@ impl Worker {
             ports_done: vec![false; ports],
             finished: false,
             awaiting_peers: false,
-            peer_eofs_seen: 0,
+            peer_eofs: HashMap::new(),
+            scale_epoch: ctx.scale_epoch,
+            rebarrier: false,
             scatter_merge: ctx.scatter_merge,
             processed: 0,
             msg_count: 0,
@@ -635,7 +651,12 @@ impl Worker {
         for ev in snap.pending {
             self.stash.push_back(ev);
         }
-        if let (Some(src), Some(pos)) = (self.source.as_mut(), snap.source_pos) {
+        // A checkpoint taken after an elastic source scale embeds the
+        // live (re-cut) scan range as a fork — the plan-time builder
+        // cannot reproduce it. Fall back to builder + seek otherwise.
+        if let Some(src) = snap.source {
+            self.source = Some(src);
+        } else if let (Some(src), Some(pos)) = (self.source.as_mut(), snap.source_pos) {
             src.seek(pos);
         }
         self.eofs_seen = if snap.eofs_seen.is_empty() {
@@ -784,47 +805,103 @@ impl Worker {
                     self.replay.push_back(r);
                 }
             }
-            ControlMessage::ExtractScaleState => {
+            ControlMessage::ExtractScaleState { replicate } => {
                 // Scale fence (b): unplug. Only sent while fence-paused,
-                // so the input channel is quiescent; surrender state and
-                // every unprocessed input event to the coordinator for
-                // re-hashing/re-routing over the new worker set.
+                // so the input channel is quiescent. Drain it into the
+                // stash either way, then surrender (move) or replicate
+                // (copy) state + pending.
                 while let Ok(ev) = self.mailbox.data.try_recv() {
                     self.stash.push_back(ev);
                 }
-                let mut pending: Vec<DataEvent> = Vec::new();
-                if let Some((msg, idx)) = self.current.take() {
-                    let mut m = msg;
-                    m.batch = m.batch.slice_from(idx);
-                    pending.push(DataEvent::Batch(m));
+                if replicate {
+                    // Broadcast scale-up donor: copy, keep everything.
+                    let mut pending: Vec<DataEvent> = Vec::new();
+                    if let Some((msg, idx)) = &self.current {
+                        let mut m = msg.clone();
+                        m.batch = m.batch.slice_from(*idx);
+                        pending.push(DataEvent::Batch(m));
+                    }
+                    pending.extend(self.stash.iter().cloned());
+                    let state = self.op.replicate_broadcast_state();
+                    let _ = self.event_tx.send(WorkerEvent::ScaleState {
+                        worker: self.id,
+                        state,
+                        pending,
+                        source: None,
+                    });
+                } else {
+                    let mut pending: Vec<DataEvent> = Vec::new();
+                    if let Some((msg, idx)) = self.current.take() {
+                        let mut m = msg;
+                        m.batch = m.batch.slice_from(idx);
+                        pending.push(DataEvent::Batch(m));
+                    }
+                    pending.extend(self.stash.drain(..));
+                    // The surrendered tuples leave this worker's queue;
+                    // the re-injection re-adds them on their new
+                    // owners' gauges.
+                    let surrendered: i64 = pending
+                        .iter()
+                        .map(|ev| match ev {
+                            DataEvent::Batch(b) => b.batch.len() as i64,
+                            _ => 0,
+                        })
+                        .sum();
+                    self.mailbox
+                        .gauges
+                        .queued
+                        .fetch_sub(surrendered, Ordering::Relaxed);
+                    // Operator-buffered input (e.g. a join's early-probe
+                    // rows) re-enters the pending set as synthesized
+                    // batches, so the coordinator re-routes it exactly
+                    // like in-flight channel input. Not counted against
+                    // `queued` — it was already counted as processed.
+                    for (port, tuples) in self.op.drain_buffered_input() {
+                        if tuples.is_empty() {
+                            continue;
+                        }
+                        pending.push(DataEvent::Batch(DataMessage {
+                            from: self.id,
+                            port,
+                            seq: 0,
+                            batch: tuples.into(),
+                        }));
+                    }
+                    let state = self.op.extract_state(None, false);
+                    // Scan workers surrender the live source for
+                    // repartitioning over the new worker set.
+                    let source = self.source.take();
+                    let _ = self.event_tx.send(WorkerEvent::ScaleState {
+                        worker: self.id,
+                        state,
+                        pending,
+                        source,
+                    });
                 }
-                pending.extend(self.stash.drain(..));
-                // The surrendered tuples leave this worker's queue; the
-                // re-injection re-adds them on their new owners' gauges.
-                let surrendered: i64 = pending
-                    .iter()
-                    .map(|ev| match ev {
-                        DataEvent::Batch(b) => b.batch.len() as i64,
-                        _ => 0,
-                    })
-                    .sum();
-                self.mailbox
-                    .gauges
-                    .queued
-                    .fetch_sub(surrendered, Ordering::Relaxed);
-                let state = self.op.extract_state(None, false);
-                let _ = self.event_tx.send(WorkerEvent::ScaleState {
-                    worker: self.id,
-                    state,
-                    pending,
-                });
             }
             ControlMessage::InstallState(s) => {
                 self.op.install_state(s);
             }
-            ControlMessage::RescaleSelf { peers, workers } => {
+            ControlMessage::InstallReplica(s) => {
+                self.op.install_replica(s);
+            }
+            ControlMessage::InstallSource(slot) => {
+                if let Some(src) = slot.lock().unwrap().take() {
+                    self.source = Some(src);
+                }
+            }
+            ControlMessage::RescaleSelf { peers, workers, epoch } => {
                 self.peers = peers;
+                self.scale_epoch = epoch;
                 self.op.rescale(self.id.idx, workers);
+                if self.awaiting_peers {
+                    // The barrier this worker was parked in counted a
+                    // worker set that no longer exists; re-enter it
+                    // against the new sibling set once re-injected
+                    // input has drained (run loop).
+                    self.awaiting_peers = false;
+                    self.rebarrier = true;
+                }
             }
             ControlMessage::RescaleEdge { target_op, receivers, port_schemes, senders } => {
                 for e in 0..self.out.edges.len() {
@@ -878,8 +955,10 @@ impl Worker {
                 | ControlMessage::TakeSnapshot
                 | ControlMessage::ReplayLog(_)
                 | ControlMessage::Die
-                | ControlMessage::ExtractScaleState
+                | ControlMessage::ExtractScaleState { .. }
                 | ControlMessage::InstallState(_)
+                | ControlMessage::InstallReplica(_)
+                | ControlMessage::InstallSource(_)
                 | ControlMessage::RescaleSelf { .. }
                 | ControlMessage::RescaleEdge { .. }
                 | ControlMessage::UpdateUpstreamCount { .. }
@@ -914,6 +993,7 @@ impl Worker {
             op_state: self.op.snapshot(),
             pending,
             source_pos: self.source.as_ref().map(|s| s.position()),
+            source: self.source.as_ref().and_then(|s| s.fork()),
             eofs_seen: self.eofs_seen.clone(),
             msg_count,
             resume_offset,
@@ -1169,11 +1249,18 @@ impl Worker {
                     transfer_id,
                 });
             }
-            DataEvent::PeerEof { .. } => {
+            DataEvent::PeerEof { epoch, .. } => {
                 // Siblings may finish before we enter the barrier;
-                // count every PeerEof regardless.
-                self.peer_eofs_seen += 1;
-                if self.awaiting_peers && self.peer_eofs_seen >= self.peers.len() - 1 {
+                // count every PeerEof under its worker-set epoch.
+                // Stale-epoch announcements (sent before a scale fence
+                // rebuilt the sibling set) accumulate harmlessly under
+                // their own key and never complete the current barrier.
+                let c = self.peer_eofs.entry(epoch).or_insert(0);
+                *c += 1;
+                if self.awaiting_peers
+                    && epoch == self.scale_epoch
+                    && *c >= self.peers.len().saturating_sub(1)
+                {
                     self.awaiting_peers = false;
                     self.finish_now();
                 }
@@ -1237,12 +1324,13 @@ impl Worker {
                     None => self.op.merge_state(state),
                 }
             }
+            let epoch = self.scale_epoch;
             for (i, p) in self.peers.iter().enumerate() {
                 if i != self.id.idx {
-                    let _ = p.send(DataEvent::PeerEof { from: self.id });
+                    let _ = p.send(DataEvent::PeerEof { from: self.id, epoch });
                 }
             }
-            if self.peer_eofs_seen >= self.peers.len() - 1 {
+            if self.peer_eofs.get(&epoch).copied().unwrap_or(0) >= self.peers.len() - 1 {
                 self.finish_now();
             } else {
                 self.awaiting_peers = true;
@@ -1372,6 +1460,24 @@ impl Worker {
             // Then stashed events.
             if let Some(ev) = self.stash.pop_front() {
                 self.handle_data_event(ev);
+                continue;
+            }
+            // A scale fence voided the peer barrier this worker was
+            // parked in. Drain any re-injected input first (its tuples
+            // belong in this worker's runs), then re-enter the barrier
+            // against the new sibling set: re-ship scattered parts from
+            // the re-installed state and announce EOF with the fence's
+            // epoch.
+            if self.rebarrier {
+                match self.mailbox.data.try_recv() {
+                    Ok(ev) => self.handle_data_event(ev),
+                    Err(_) => {
+                        self.rebarrier = false;
+                        if self.ports_done.iter().all(|&d| d) && !self.finished {
+                            self.finish();
+                        }
+                    }
+                }
                 continue;
             }
             if self.finished {
@@ -1511,6 +1617,7 @@ mod tests {
             ft_log: false,
             snapshot: None,
             scatter_merge: false,
+            scale_epoch: 0,
             initial_eofs: None,
             start_paused: false,
         };
@@ -1782,6 +1889,7 @@ mod tests {
             ft_log: false,
             snapshot: None,
             scatter_merge: false,
+            scale_epoch: 0,
             initial_eofs: None,
             start_paused: false,
         };

@@ -308,9 +308,10 @@ pub fn one_to_one_groups(w: &Workflow) -> Vec<Vec<usize>> {
 /// Distribute a per-region worker budget over a workflow's operators.
 ///
 /// For each region independently: every one-to-one group starts at one
-/// worker per member (or its pinned count from `fixed` — operators the
-/// runtime cannot rescale, like already-deployed sources), then spare
-/// budget is handed out greedily, one group at a time, to the group
+/// worker per member (or its pinned count from `fixed` — operators
+/// whose scale request the engine refused, e.g. their region drained
+/// early and workers completed), then spare budget is handed out
+/// greedily, one group at a time, to the group
 /// with the largest marginal drop in modeled region time
 /// (`W_g(1/n − 1/(n+1))` per worker slot). A group never grows beyond
 /// the rows it is estimated to process — a 5-row operator gets no 8-way

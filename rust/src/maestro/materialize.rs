@@ -135,6 +135,35 @@ impl TupleSource for MatSource {
     fn seek(&mut self, pos: usize) {
         self.pos = pos;
     }
+
+    fn fork(&self) -> Option<Box<dyn TupleSource>> {
+        Some(Box::new(MatSource {
+            store: self.store.clone(),
+            parts: self.parts,
+            idx: self.idx,
+            pos: self.pos,
+        }))
+    }
+
+    fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+        assert!(n > 0);
+        // Stride re-cut over the shared store. Valid even while the
+        // store is still being written (a dormant reader being scaled
+        // before its writer region completed): the id-space mapping is
+        // independent of the store's current length.
+        Some(
+            (0..n)
+                .map(|j| {
+                    Box::new(MatSource {
+                        store: self.store.clone(),
+                        parts: self.parts * n,
+                        idx: self.idx + (self.pos + j) * self.parts,
+                        pos: 0,
+                    }) as Box<dyn TupleSource>
+                })
+                .collect(),
+        )
+    }
 }
 
 /// Result of applying a materialization choice.

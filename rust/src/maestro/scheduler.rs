@@ -28,10 +28,13 @@
 //!    model. Deltas are applied through
 //!    [`Execution::scale_operator`] (one fenced epoch per operator)
 //!    while those regions' workers are still alive-but-dormant, i.e.
-//!    before [`Execution::start_sources`] wakes the region. Operators
-//!    the runtime cannot rescale (sources, scatter-merge,
-//!    broadcast-input) stay at their deploy-time counts, as does any
-//!    operator whose scale request the engine refuses.
+//!    before [`Execution::start_sources`] wakes the region. **Every**
+//!    operator class is eligible — sources (splittable scan ranges,
+//!    incl. mat readers), scatter-merge and broadcast-input operators
+//!    scale through the universal fence (engine::scale); only an
+//!    operator whose scale request the engine actually refuses (e.g.
+//!    its region drained early and workers completed) is pinned at its
+//!    current count and never retried.
 //! 4. **Record** — every step lands in the [`ScheduleOutcome`] decision
 //!    trail ([`RegionPlan`]): estimated vs observed cardinalities with
 //!    q-errors, the worker assignment after each re-plan, each scale
@@ -46,7 +49,6 @@
 use crate::config::Config;
 use crate::engine::controller::{ExecSummary, Execution};
 use crate::engine::dag::Workflow;
-use crate::engine::partitioner::PartitionScheme;
 use crate::maestro::cost::{
     best_choice, best_choice_elastic, cardinalities, plan_for_choice, CostParams, ElasticPlan,
 };
@@ -438,17 +440,15 @@ impl MaestroScheduler {
             .iter()
             .map(|&r| g.regions[r].clone())
             .collect();
+        // Universal elasticity: no operator class is structurally
+        // pinned anymore (sources split their scan ranges,
+        // scatter-merge ops carry an epoch-keyed barrier,
+        // broadcast-input ops replicate the build side). Only operators
+        // whose scale request the engine actually refused stay fixed.
         let mut fixed: HashMap<usize, usize> = HashMap::new();
         for r in &remaining_regions {
             for &op in &r.ops {
-                let spec = &mw.ops[op];
-                let structurally_fixed = spec.is_source
-                    || spec.scatter_merge
-                    || spec
-                        .input_partitioning
-                        .iter()
-                        .any(|s| matches!(s, PartitionScheme::Broadcast));
-                if structurally_fixed || unscalable.contains(&op) {
+                if unscalable.contains(&op) {
                     fixed.insert(op, current[op]);
                 }
             }

@@ -225,6 +225,57 @@ impl Operator for HashJoin {
         // Mutability is per-phase (§3.5.1).
         !self.build_done
     }
+
+    /// Elastic-scale shard install. Unlike [`Operator::merge_state`]
+    /// (Reshape probe-phase migration, which implies the donor passed
+    /// build EOF) a re-hashed shard carries no phase information: keep
+    /// this worker's own phase, so a mid-build scale does not start
+    /// probing an incomplete table. (A scale-spawned worker reaches
+    /// `build_done` through its own seeded EOF accounting.)
+    fn install_state(&mut self, s: OpState) {
+        for (k, mut v) in s.keyed_tuples {
+            if k == u64::MAX {
+                continue;
+            }
+            self.tuples_in_state += v.len();
+            self.table.entry(k).or_default().append(&mut v);
+        }
+    }
+
+    /// Broadcast-build replica (elastic scaling): the hash table plus
+    /// the build-EOF flag, **without** the early-probe buffer — probe
+    /// tuples are partitioned per worker, so replicating a donor's
+    /// buffer would duplicate their join output on the new worker.
+    fn replicate_broadcast_state(&self) -> OpState {
+        let mut s = OpState::default();
+        s.keyed_tuples = self.table.clone();
+        s.counters.insert("build_done".into(), self.build_done as i64);
+        s
+    }
+
+    /// Install a broadcast-build replica on a scale-spawned worker:
+    /// unlike [`Operator::merge_state`] (Reshape probe-phase migration,
+    /// which implies build EOF) this copies the donor's actual phase,
+    /// so a mid-build scale-up keeps buffering early probes instead of
+    /// probing an incomplete table.
+    fn install_replica(&mut self, mut s: OpState) {
+        self.build_done = s.counters.get("build_done").copied().unwrap_or(0) != 0;
+        s.keyed_tuples.remove(&u64::MAX);
+        self.tuples_in_state = s.keyed_tuples.values().map(Vec::len).sum();
+        self.table = s.keyed_tuples;
+    }
+
+    /// The early-probe buffer is re-routable input, not keyed state:
+    /// a retiring worker's buffered probes must reach the new probe
+    /// owners, and a surviving worker's buffer must be re-hashed when
+    /// the probe partitioning changes arity.
+    fn drain_buffered_input(&mut self) -> Vec<(usize, Vec<Tuple>)> {
+        if self.early_probe.is_empty() {
+            Vec::new()
+        } else {
+            vec![(PROBE, std::mem::take(&mut self.early_probe))]
+        }
+    }
 }
 
 #[cfg(test)]

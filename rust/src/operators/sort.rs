@@ -144,6 +144,23 @@ impl Operator for SortWorker {
         true
     }
 
+    /// Elastic scaling: adopt the new placement and re-derive the range
+    /// bounds with the same interpolation the coordinator applies to
+    /// the upstream `Range` partitioner
+    /// ([`rescale_bounds`](crate::engine::scale::rescale_bounds)), so
+    /// future tuples keep classifying own-vs-foreign consistently with
+    /// where the exchange actually sends them. Runs accumulated under
+    /// old scope ids stay keyed as they are — the foreign-run fallback
+    /// in `finish`/`scattered_parts` emits or ships them
+    /// regardless, so the output multiset is unaffected either way;
+    /// this hook only prevents a resized worker set from classifying
+    /// *all* new input as foreign and funneling it back through the
+    /// old workers at EOF.
+    fn rescale(&mut self, idx: usize, workers: usize) {
+        self.own_scope = idx as u64;
+        self.bounds = crate::engine::scale::rescale_bounds(&self.bounds, workers);
+    }
+
     fn scattered_parts(&mut self) -> Vec<(u64, OpState)> {
         // Foreign runs (scopes ≠ own) are shipped back to their owners
         // at EOF (Fig. 3.11(e,f)); scope id == owner worker index

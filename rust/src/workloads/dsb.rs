@@ -131,6 +131,39 @@ impl TupleSource for WebSalesSource {
         let (t, p, i) = (self.total, self.parts, self.idx);
         Some(if i >= t { 0 } else { (t - i + p - 1) / p })
     }
+
+    fn fork(&self) -> Option<Box<dyn TupleSource>> {
+        Some(Box::new(WebSalesSource {
+            total: self.total,
+            parts: self.parts,
+            idx: self.idx,
+            pos: self.pos,
+            seed: self.seed,
+            item_z: self.item_z.clone(),
+            date_z: self.date_z.clone(),
+            cust_z: self.cust_z.clone(),
+        }))
+    }
+
+    fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+        assert!(n > 0);
+        Some(
+            (0..n)
+                .map(|j| {
+                    Box::new(WebSalesSource {
+                        total: self.total,
+                        parts: self.parts * n,
+                        idx: self.idx + (self.pos + j) * self.parts,
+                        pos: 0,
+                        seed: self.seed,
+                        item_z: self.item_z.clone(),
+                        date_z: self.date_z.clone(),
+                        cust_z: self.cust_z.clone(),
+                    }) as Box<dyn TupleSource>
+                })
+                .collect(),
+        )
+    }
 }
 
 /// Dimension tables (small; materialized).

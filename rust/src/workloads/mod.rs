@@ -12,6 +12,29 @@
 //! scaled down from cluster scale to single-machine scale; experiments
 //! measure relative behaviour (ratios, percentiles, crossovers), which
 //! the generators preserve by reproducing the papers' key distributions.
+//!
+//! ## Splittable scan ranges
+//!
+//! Elastic scaling of *source* operators (engine::scale) needs the scan
+//! range held by a mid-read worker to be repartitionable. Two optional
+//! [`TupleSource`] methods provide that contract:
+//!
+//! * [`TupleSource::split`] — cut the **unread remainder** into `n`
+//!   disjoint sub-sources whose multiset union equals the remainder.
+//!   All built-in generators are stride views over a global id space
+//!   (`id = idx + pos·parts`, each tuple a pure function of its id), so
+//!   sub-source `j` is simply the same generator at
+//!   `idx' = idx + (pos+j)·parts`, `parts' = n·parts` — replay from any
+//!   recorded position in a sub-range is byte-identical to the unsplit
+//!   stream (§2.6 assumption A3 survives the split).
+//! * [`TupleSource::fork`] — clone the source at its current read
+//!   position; quiesced checkpoints embed forks so recovery can
+//!   re-deploy a post-scale worker set whose scan ranges no longer
+//!   match any plan-time partitioning.
+//!
+//! Scale-down concatenates surrendered remainders with [`ChainSource`];
+//! [`redistribute_sources`] is the engine-facing helper that maps `k`
+//! surrendered remainders onto `n` workers using both.
 
 pub mod tweets;
 pub mod tpch;
@@ -34,29 +57,61 @@ pub trait TupleSource: Send {
     fn position(&self) -> usize;
     /// Jump to an absolute read position.
     fn seek(&mut self, pos: usize);
+
+    /// Clone this source **at its current read position**. Used by
+    /// quiesced checkpoints (the snapshot embeds the fork so recovery
+    /// replays the exact live range, even after elastic source scaling
+    /// re-cut the ranges) and by test harnesses. `None` = not forkable;
+    /// checkpoints then fall back to recording the position only.
+    fn fork(&self) -> Option<Box<dyn TupleSource>> {
+        None
+    }
+
+    /// Split the **unread remainder** of this source into `n` disjoint
+    /// sub-sources (each starting at position 0) whose multiset union
+    /// equals the remainder. Every sub-source must itself satisfy the
+    /// determinism/seek contract, so §2.6 replay stays byte-stable
+    /// across the split. `None` = unsplittable; elastic scaling then
+    /// hands the remainder to one worker whole and pads with empty
+    /// sources (correct, just unbalanced).
+    fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+        let _ = n;
+        None
+    }
 }
 
 /// A source over a pre-materialized vector (used in tests and for small
-/// dimension tables).
+/// dimension tables). Generalized to a stride view (`global index =
+/// start + pos·stride`) so [`TupleSource::split`] can re-cut it.
 pub struct VecSource {
     data: std::sync::Arc<Vec<Tuple>>,
+    start: usize,
+    stride: usize,
     pos: usize,
 }
 
 impl VecSource {
     pub fn new(data: Vec<Tuple>) -> VecSource {
-        VecSource { data: std::sync::Arc::new(data), pos: 0 }
+        VecSource { data: std::sync::Arc::new(data), start: 0, stride: 1, pos: 0 }
     }
 
     pub fn shared(data: std::sync::Arc<Vec<Tuple>>) -> VecSource {
-        VecSource { data, pos: 0 }
+        VecSource { data, start: 0, stride: 1, pos: 0 }
+    }
+
+    /// A stride view: rows `start, start+stride, start+2·stride, …`.
+    pub fn strided(data: std::sync::Arc<Vec<Tuple>>, start: usize, stride: usize) -> VecSource {
+        assert!(stride > 0);
+        VecSource { data, start, stride, pos: 0 }
     }
 }
 
 impl TupleSource for VecSource {
     fn next_tuple(&mut self) -> Option<Tuple> {
-        let t = self.data.get(self.pos).cloned();
-        self.pos += 1;
+        let t = self.data.get(self.start + self.pos * self.stride).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
         t
     }
 
@@ -65,7 +120,12 @@ impl TupleSource for VecSource {
     }
 
     fn len_hint(&self) -> Option<usize> {
-        Some(self.data.len())
+        let l = self.data.len();
+        Some(if self.start >= l {
+            0
+        } else {
+            (l - self.start + self.stride - 1) / self.stride
+        })
     }
 
     fn position(&self) -> usize {
@@ -75,6 +135,202 @@ impl TupleSource for VecSource {
     fn seek(&mut self, pos: usize) {
         self.pos = pos;
     }
+
+    fn fork(&self) -> Option<Box<dyn TupleSource>> {
+        Some(Box::new(VecSource {
+            data: self.data.clone(),
+            start: self.start,
+            stride: self.stride,
+            pos: self.pos,
+        }))
+    }
+
+    fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+        assert!(n > 0);
+        Some(
+            (0..n)
+                .map(|j| {
+                    Box::new(VecSource {
+                        data: self.data.clone(),
+                        start: self.start + (self.pos + j) * self.stride,
+                        stride: self.stride * n,
+                        pos: 0,
+                    }) as Box<dyn TupleSource>
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Concatenation of several sources: the *merge* side of the
+/// split/merge contract. Elastic scale-down hands one worker the
+/// remainders of several retired scan partitions as one chain.
+/// Deterministic: parts are consumed in order.
+///
+/// The chain's position space starts at its **construction** point:
+/// parts may already be mid-read (they are live remainders), so the
+/// chain records each part's base position and `reset`/`seek` rewind
+/// to *those*, never to the parts' absolute beginnings — position 0
+/// of the chain is the first not-yet-consumed tuple, and replay can
+/// never re-emit tuples the pre-scale worker already produced.
+pub struct ChainSource {
+    parts: Vec<Box<dyn TupleSource>>,
+    /// Each part's read position at chain construction.
+    bases: Vec<usize>,
+    cur: usize,
+    consumed: usize,
+}
+
+impl ChainSource {
+    pub fn new(parts: Vec<Box<dyn TupleSource>>) -> ChainSource {
+        let bases = parts.iter().map(|p| p.position()).collect();
+        ChainSource { parts, bases, cur: 0, consumed: 0 }
+    }
+}
+
+impl TupleSource for ChainSource {
+    fn next_tuple(&mut self) -> Option<Tuple> {
+        while self.cur < self.parts.len() {
+            if let Some(t) = self.parts[self.cur].next_tuple() {
+                self.consumed += 1;
+                return Some(t);
+            }
+            self.cur += 1;
+        }
+        None
+    }
+
+    fn reset(&mut self) {
+        for (p, &b) in self.parts.iter_mut().zip(&self.bases) {
+            p.seek(b);
+        }
+        self.cur = 0;
+        self.consumed = 0;
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        // Tuples this chain will produce from its position 0: each
+        // part's total minus what it had consumed before chaining.
+        self.parts
+            .iter()
+            .zip(&self.bases)
+            .map(|(p, &b)| p.len_hint().map(|l| l.saturating_sub(b)))
+            .sum()
+    }
+
+    fn position(&self) -> usize {
+        self.consumed
+    }
+
+    fn seek(&mut self, pos: usize) {
+        self.reset();
+        self.consumed = pos;
+        let mut rest = pos;
+        for (i, (p, &b)) in self.parts.iter_mut().zip(&self.bases).enumerate() {
+            let cap = p
+                .len_hint()
+                .map(|l| l.saturating_sub(b))
+                .unwrap_or(usize::MAX);
+            if rest >= cap {
+                p.seek(b + cap);
+                rest -= cap;
+            } else {
+                p.seek(b + rest);
+                self.cur = i;
+                return;
+            }
+        }
+        self.cur = self.parts.len();
+    }
+
+    fn fork(&self) -> Option<Box<dyn TupleSource>> {
+        let parts: Option<Vec<Box<dyn TupleSource>>> =
+            self.parts.iter().map(|p| p.fork()).collect();
+        parts.map(|parts| {
+            Box::new(ChainSource {
+                parts,
+                bases: self.bases.clone(),
+                cur: self.cur,
+                consumed: self.consumed,
+            }) as Box<dyn TupleSource>
+        })
+    }
+
+    fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+        assert!(n > 0);
+        // Flatten to the remainders of the live parts, then let the
+        // shared redistribution logic re-cut them.
+        let mut live: Vec<Box<dyn TupleSource>> = Vec::new();
+        for mut p in self.parts.drain(..) {
+            match p.split(1) {
+                Some(mut one) if one.len() == 1 => live.push(one.pop().unwrap()),
+                _ => live.push(p),
+            }
+        }
+        self.bases.clear();
+        self.cur = 0;
+        self.consumed = 0;
+        Some(redistribute_sources(live, n))
+    }
+}
+
+/// Map the unread remainders of `sources` (as surrendered by a scaled
+/// source operator's old workers) onto exactly `n` workers:
+///
+/// * `k == n` — identity (each worker keeps one remainder);
+/// * `k > n` — merge: remainders round-robin into `n` [`ChainSource`]s;
+/// * `k < n` — split: each remainder is [`TupleSource::split`] into its
+///   share of `n`; an unsplittable remainder stays whole and its share
+///   is padded with empty sources (correct, just unbalanced).
+///
+/// The multiset union of the returned sources' outputs always equals
+/// the union of the inputs' remainders — the invariant the elastic
+/// scale fence needs for byte-identical sink multisets.
+pub fn redistribute_sources(
+    mut sources: Vec<Box<dyn TupleSource>>,
+    n: usize,
+) -> Vec<Box<dyn TupleSource>> {
+    assert!(n > 0);
+    if sources.is_empty() {
+        return (0..n)
+            .map(|_| Box::new(VecSource::new(Vec::new())) as Box<dyn TupleSource>)
+            .collect();
+    }
+    let k = sources.len();
+    if k == n {
+        return sources;
+    }
+    if k > n {
+        let mut buckets: Vec<Vec<Box<dyn TupleSource>>> = (0..n).map(|_| Vec::new()).collect();
+        for (i, s) in sources.into_iter().enumerate() {
+            buckets[i % n].push(s);
+        }
+        return buckets
+            .into_iter()
+            .map(|mut b| {
+                if b.len() == 1 {
+                    b.pop().unwrap()
+                } else {
+                    Box::new(ChainSource::new(b)) as Box<dyn TupleSource>
+                }
+            })
+            .collect();
+    }
+    let mut out: Vec<Box<dyn TupleSource>> = Vec::with_capacity(n);
+    for (i, mut s) in sources.drain(..).enumerate() {
+        let share = n / k + usize::from(i < n % k);
+        match s.split(share) {
+            Some(subs) if subs.len() == share => out.extend(subs),
+            _ => {
+                out.push(s);
+                for _ in 1..share {
+                    out.push(Box::new(VecSource::new(Vec::new())));
+                }
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), n);
+    out
 }
 
 /// Split a source's index space across `n` partitions: partition `i`
@@ -88,6 +344,16 @@ pub fn partition_range(total: usize, parts: usize, idx: usize) -> impl Iterator<
 mod tests {
     use super::*;
     use crate::tuple::Value;
+
+    fn rows(n: usize) -> Vec<Tuple> {
+        (0..n as i64).map(|i| Tuple::new(vec![Value::Int(i)])).collect()
+    }
+
+    fn drain(s: &mut dyn TupleSource) -> Vec<i64> {
+        std::iter::from_fn(|| s.next_tuple())
+            .map(|t| t.get(0).as_int().unwrap())
+            .collect()
+    }
 
     #[test]
     fn vec_source_replays() {
@@ -113,5 +379,86 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn vec_source_split_covers_remainder() {
+        let mut s = VecSource::new(rows(23));
+        for _ in 0..5 {
+            s.next_tuple();
+        }
+        let mut union: Vec<i64> = Vec::new();
+        for mut sub in s.split(3).unwrap() {
+            union.extend(drain(sub.as_mut()));
+        }
+        union.sort_unstable();
+        assert_eq!(union, (5..23).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn vec_source_fork_resumes_at_position() {
+        let mut s = VecSource::new(rows(10));
+        for _ in 0..4 {
+            s.next_tuple();
+        }
+        let mut f = s.fork().unwrap();
+        assert_eq!(drain(f.as_mut()), (4..10).collect::<Vec<i64>>());
+        // The original is untouched.
+        assert_eq!(s.position(), 4);
+    }
+
+    #[test]
+    fn chain_source_concatenates_and_seeks() {
+        let a = Box::new(VecSource::new(rows(4))) as Box<dyn TupleSource>;
+        let b = Box::new(VecSource::new(rows(3))) as Box<dyn TupleSource>;
+        let mut c = ChainSource::new(vec![a, b]);
+        assert_eq!(c.len_hint(), Some(7));
+        assert_eq!(drain(&mut c), vec![0, 1, 2, 3, 0, 1, 2]);
+        assert_eq!(c.position(), 7);
+        c.seek(5);
+        assert_eq!(c.position(), 5);
+        assert_eq!(drain(&mut c), vec![1, 2]);
+        c.reset();
+        assert_eq!(drain(&mut c).len(), 7);
+    }
+
+    #[test]
+    fn chain_of_mid_read_parts_never_replays_consumed_tuples() {
+        // Live remainders: a part consumed 2 of 5 before chaining. The
+        // chain's position space must start at the remainder, so
+        // reset/seek can never rewind into pre-chain territory.
+        let mut a = VecSource::new(rows(5));
+        a.next_tuple();
+        a.next_tuple();
+        let mut c = ChainSource::new(vec![
+            Box::new(a) as Box<dyn TupleSource>,
+            Box::new(VecSource::new(rows(3))) as Box<dyn TupleSource>,
+        ]);
+        assert_eq!(c.len_hint(), Some(6));
+        assert_eq!(drain(&mut c), vec![2, 3, 4, 0, 1, 2]);
+        c.seek(1);
+        assert_eq!(drain(&mut c), vec![3, 4, 0, 1, 2]);
+        c.reset();
+        assert_eq!(drain(&mut c), vec![2, 3, 4, 0, 1, 2]);
+    }
+
+    #[test]
+    fn redistribute_merges_and_splits() {
+        // 3 remainders → 2 workers: chained, nothing lost.
+        let srcs: Vec<Box<dyn TupleSource>> = (0..3)
+            .map(|_| Box::new(VecSource::new(rows(5))) as Box<dyn TupleSource>)
+            .collect();
+        let mut merged = redistribute_sources(srcs, 2);
+        assert_eq!(merged.len(), 2);
+        let total: usize = merged.iter_mut().map(|s| drain(s.as_mut()).len()).sum();
+        assert_eq!(total, 15);
+        // 2 remainders → 5 workers: split, nothing lost or duplicated.
+        let srcs: Vec<Box<dyn TupleSource>> = (0..2)
+            .map(|_| Box::new(VecSource::new(rows(7))) as Box<dyn TupleSource>)
+            .collect();
+        let mut split = redistribute_sources(srcs, 5);
+        assert_eq!(split.len(), 5);
+        let total: usize = split.iter_mut().map(|s| drain(s.as_mut()).len()).sum();
+        assert_eq!(total, 14);
     }
 }

@@ -104,6 +104,37 @@ impl TupleSource for ShiftingSource {
         let (t, p, i) = (self.total, self.parts, self.idx);
         Some(if i >= t { 0 } else { (t - i + p - 1) / p })
     }
+
+    fn fork(&self) -> Option<Box<dyn TupleSource>> {
+        Some(Box::new(ShiftingSource {
+            total: self.total,
+            parts: self.parts,
+            idx: self.idx,
+            pos: self.pos,
+            seed: self.seed,
+            change_at: self.change_at,
+        }))
+    }
+
+    fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+        assert!(n > 0);
+        // `change_at` is a property of the *global* id space, so the
+        // distribution shift lands at the same rows after the split.
+        Some(
+            (0..n)
+                .map(|j| {
+                    Box::new(ShiftingSource {
+                        total: self.total,
+                        parts: self.parts * n,
+                        idx: self.idx + (self.pos + j) * self.parts,
+                        pos: 0,
+                        seed: self.seed,
+                        change_at: self.change_at,
+                    }) as Box<dyn TupleSource>
+                })
+                .collect(),
+        )
+    }
 }
 
 /// The small build-side table: 100 rows per key, uniform (the paper's

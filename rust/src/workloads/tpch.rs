@@ -144,6 +144,35 @@ macro_rules! make_source {
                 let (t, p, i) = (self.total, self.parts, self.idx);
                 Some(if i >= t { 0 } else { (t - i + p - 1) / p })
             }
+
+            fn fork(&self) -> Option<Box<dyn TupleSource>> {
+                Some(Box::new($name {
+                    total: self.total,
+                    parts: self.parts,
+                    idx: self.idx,
+                    pos: self.pos,
+                    seed: self.seed,
+                }))
+            }
+
+            fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+                assert!(n > 0);
+                // Stride re-cut of the unread remainder; each tuple is a
+                // pure function of its global id, so replay is stable.
+                Some(
+                    (0..n)
+                        .map(|j| {
+                            Box::new($name {
+                                total: self.total,
+                                parts: self.parts * n,
+                                idx: self.idx + (self.pos + j) * self.parts,
+                                pos: 0,
+                                seed: self.seed,
+                            }) as Box<dyn TupleSource>
+                        })
+                        .collect(),
+                )
+            }
         }
     };
 }

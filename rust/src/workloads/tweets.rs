@@ -183,6 +183,38 @@ impl TupleSource for TweetSource {
         let (p, i) = (self.parts, self.idx);
         Some(if i >= t { 0 } else { (t - i + p - 1) / p })
     }
+
+    fn fork(&self) -> Option<Box<dyn TupleSource>> {
+        Some(Box::new(TweetSource {
+            total: self.total,
+            parts: self.parts,
+            idx: self.idx,
+            pos: self.pos,
+            cdf: self.cdf.clone(),
+            seed: self.seed,
+        }))
+    }
+
+    fn split(&mut self, n: usize) -> Option<Vec<Box<dyn TupleSource>>> {
+        assert!(n > 0);
+        // Remaining ids are idx + p·parts for p ≥ pos; sub-range j takes
+        // p ≡ pos + j (mod n), i.e. the same pure generator at a finer
+        // stride — replay stays byte-identical per id.
+        Some(
+            (0..n)
+                .map(|j| {
+                    Box::new(TweetSource {
+                        total: self.total,
+                        parts: self.parts * n,
+                        idx: self.idx + (self.pos + j) * self.parts,
+                        pos: 0,
+                        cdf: self.cdf.clone(),
+                        seed: self.seed,
+                    }) as Box<dyn TupleSource>
+                })
+                .collect(),
+        )
+    }
 }
 
 /// The "top slang words per location" dimension table joined against

@@ -178,10 +178,12 @@ fn repeated_scales_up_and_down_stay_exact() {
 }
 
 #[test]
-fn scaling_refuses_sources_and_bad_requests() {
+fn scaling_refuses_bad_requests() {
+    // Sources are no longer structurally refused (universal
+    // elasticity; see tests/elastic_universal.rs) — only genuinely
+    // invalid requests are.
     let (w, gb, handle) = build(2);
     let exec = Execution::start(w, config());
-    assert_eq!(exec.scale_operator(0, 4), Duration::ZERO, "scaled a source");
     assert_eq!(exec.scale_operator(99, 4), Duration::ZERO, "scaled unknown op");
     assert_eq!(exec.scale_operator(gb, 0), Duration::ZERO, "scaled to zero");
     assert_eq!(exec.scale_operator(gb, 2), Duration::ZERO, "no-op scale ran");

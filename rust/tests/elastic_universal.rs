@@ -1,0 +1,485 @@
+//! Universal elasticity (engine::scale): the three formerly
+//! refusal-only operator classes — **sources** (splittable scan
+//! ranges), **scatter-merge** operators (epoch-keyed EOF peer barrier)
+//! and **broadcast-input** operators (build-side replication) — scale
+//! up and down mid-run with byte-identical sink multisets vs an
+//! unscaled run, sub-second fences at batch 1024, and recovery from a
+//! checkpoint taken across a source-scale epoch re-deploys at the
+//! post-scale parallelism.
+
+use std::time::Duration;
+use texera_amber::config::Config;
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, WorkerId, Workflow};
+use texera_amber::operators::basic::{Cmp, Filter, MapUdf};
+use texera_amber::operators::group_by::{AggKind, GroupByFinal};
+use texera_amber::operators::sort::{SortMerge, SortWorker};
+use texera_amber::operators::{CollectSink, HashJoin, SinkHandle};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::util::Rng;
+use texera_amber::workloads::VecSource;
+
+fn seed() -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42)
+}
+
+fn config() -> Config {
+    Config {
+        batch_size: 1024,
+        ctrl_check_interval: 1024,
+        ..Config::default()
+    }
+}
+
+/// Canonical sorted (key, value) pairs from a sink.
+fn kv_result(handle: &SinkHandle) -> Vec<(i64, f64)> {
+    let mut out: Vec<(i64, f64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+// ---------------------------------------------------------------- sources
+
+const SRC_ROWS: usize = 600_000;
+const SRC_KEYS: i64 = 97;
+
+/// scan(`scan_workers`) → filter(2, costed) → group-by-sum(2, hash) →
+/// sink(1). The *scan* is the scaled operator here.
+fn source_wf(scan_workers: usize) -> (Workflow, usize, SinkHandle) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", scan_workers, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..SRC_ROWS)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                Tuple::new(vec![
+                    Value::Int(i as i64 % SRC_KEYS),
+                    Value::Int(i as i64 % 10),
+                ])
+            })
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary(
+        "filter",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| {
+            let mut f = Filter::new(1, Cmp::Ne, Value::Int(0));
+            // Keeps the run long enough that the scale point is
+            // genuinely mid-run.
+            f.cost_ns = 800;
+            Box::new(f)
+        },
+    ));
+    let gb = w.add(
+        OpSpec::unary("group_by", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "sink",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h.clone())),
+    ));
+    w.connect(scan, filter, 0);
+    w.connect(filter, gb, 0);
+    w.connect(gb, sink, 0);
+    (w, scan, handle)
+}
+
+fn source_reference() -> Vec<(i64, f64)> {
+    let mut expect = std::collections::HashMap::new();
+    for i in 0..SRC_ROWS {
+        let (k, v) = (i as i64 % SRC_KEYS, i as i64 % 10);
+        if v != 0 {
+            *expect.entry(k).or_insert(0.0) += v as f64;
+        }
+    }
+    let mut out: Vec<(i64, f64)> = expect.into_iter().collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+fn scaled_source_run(from: usize, to: usize, delay_ms: u64) -> (Vec<(i64, f64)>, Duration) {
+    let (w, scan, handle) = source_wf(from);
+    let exec = Execution::start(w, config());
+    std::thread::sleep(Duration::from_millis(delay_ms));
+    let fence = exec.scale_operator(scan, to);
+    exec.join();
+    (kv_result(&handle), fence)
+}
+
+#[test]
+fn source_scale_up_2_to_4_exact_and_subsecond() {
+    let mut rng = Rng::new(seed() ^ 0x50c1);
+    let reference = source_reference();
+    // Unscaled run sanity check.
+    let (w, _, handle) = source_wf(2);
+    Execution::start(w, config()).join();
+    assert_eq!(kv_result(&handle), reference, "unscaled source run wrong");
+
+    let (scaled, fence) = scaled_source_run(2, 4, 20 + rng.below(100));
+    assert!(
+        fence > Duration::ZERO,
+        "source scale was refused — run finished before the scale point?"
+    );
+    assert!(
+        fence < Duration::from_secs(1),
+        "source-scale fence took {fence:?} (≥1s) at batch 1024"
+    );
+    assert_eq!(scaled, reference, "2→4 source scale changed the sink multiset");
+}
+
+#[test]
+fn source_scale_down_4_to_2_exact_and_subsecond() {
+    let mut rng = Rng::new(seed() ^ 0x50c2);
+    let reference = source_reference();
+    let (scaled, fence) = scaled_source_run(4, 2, 20 + rng.below(100));
+    assert!(fence > Duration::ZERO, "source scale was refused");
+    assert!(fence < Duration::from_secs(1), "fence took {fence:?}");
+    assert_eq!(scaled, reference, "4→2 source scale changed the sink multiset");
+}
+
+// ---------------------------------------------------------- scatter-merge
+
+const SORT_ROWS: usize = 200_000;
+
+/// scan(2) → range-sort(`sort_workers`, scatter-merge) → merge(1) →
+/// sink(1). The *sort* (scatter-merge class) is the scaled operator.
+/// Single-field tuples, so the merged order is deterministic even
+/// among equal keys.
+fn sort_wf(sort_workers: usize) -> (Workflow, usize, SinkHandle) {
+    let bounds: Vec<Value> = (1..sort_workers as i64)
+        .map(|i| Value::Int(i * 1000 / sort_workers as i64))
+        .collect();
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..SORT_ROWS)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(((i * 37) % 1000) as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let b = bounds.clone();
+    let sortw = w.add(
+        OpSpec::unary(
+            "sort",
+            sort_workers,
+            PartitionScheme::Range { key: 0, bounds },
+            move |idx, _| {
+                Box::new(SortWorker::new(0, idx as u64, b.clone()).with_cost(3000))
+            },
+        )
+        .with_blocking(vec![0])
+        .with_scatter_merge(),
+    );
+    let merge = w.add(
+        OpSpec::unary("merge", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(SortMerge::new(0))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "sink",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h.clone())),
+    ));
+    w.connect(scan, sortw, 0);
+    w.connect(sortw, merge, 0);
+    w.connect(merge, sink, 0);
+    (w, sortw, handle)
+}
+
+fn sort_output(handle: &SinkHandle) -> Vec<i64> {
+    handle
+        .tuples()
+        .iter()
+        .map(|t| t.get(0).as_int().unwrap())
+        .collect()
+}
+
+fn sort_reference() -> Vec<i64> {
+    let mut v: Vec<i64> = (0..SORT_ROWS).map(|i| ((i * 37) % 1000) as i64).collect();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn scatter_merge_scale_up_2_to_4_exact_and_subsecond() {
+    let mut rng = Rng::new(seed() ^ 0x5ca1);
+    let reference = sort_reference();
+    let (w, sortw, handle) = sort_wf(2);
+    let exec = Execution::start(w, config());
+    std::thread::sleep(Duration::from_millis(10 + rng.below(50)));
+    let fence = exec.scale_operator(sortw, 4);
+    exec.join();
+    assert!(
+        fence > Duration::ZERO,
+        "scatter-merge scale was refused — run finished early?"
+    );
+    assert!(fence < Duration::from_secs(1), "fence took {fence:?}");
+    assert_eq!(
+        sort_output(&handle),
+        reference,
+        "2→4 scatter-merge scale changed the sorted output"
+    );
+}
+
+#[test]
+fn scatter_merge_scale_down_4_to_2_exact_and_subsecond() {
+    let mut rng = Rng::new(seed() ^ 0x5ca2);
+    let reference = sort_reference();
+    let (w, sortw, handle) = sort_wf(4);
+    let exec = Execution::start(w, config());
+    std::thread::sleep(Duration::from_millis(10 + rng.below(50)));
+    let fence = exec.scale_operator(sortw, 2);
+    exec.join();
+    assert!(fence > Duration::ZERO, "scatter-merge scale was refused");
+    assert!(fence < Duration::from_secs(1), "fence took {fence:?}");
+    assert_eq!(
+        sort_output(&handle),
+        reference,
+        "4→2 scatter-merge scale changed the sorted output"
+    );
+}
+
+// -------------------------------------------------------- broadcast-input
+
+const JOIN_ROWS: usize = 200_000;
+const JOIN_KEYS: i64 = 61;
+
+/// dim(1) ──Broadcast──▶ join(`join_workers`) ◀──RR── scan(2); join →
+/// sink(1). The *join* (broadcast-input class) is the scaled operator.
+fn bcast_wf(join_workers: usize) -> (Workflow, usize, SinkHandle) {
+    let mut w = Workflow::new();
+    let dim = w.add(OpSpec::source("dim", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..JOIN_KEYS)
+            .filter(|k| (*k as usize) % parts == idx)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(k * 3)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..JOIN_ROWS)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                Tuple::new(vec![
+                    Value::Int(i as i64 % JOIN_KEYS),
+                    Value::Int(i as i64 % 11),
+                ])
+            })
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let join = w.add(OpSpec::binary(
+        "join",
+        join_workers,
+        [PartitionScheme::Broadcast, PartitionScheme::RoundRobin],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 0).with_probe_cost(3000)),
+    ));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "sink",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h.clone())),
+    ));
+    w.connect(dim, join, 0);
+    w.connect(scan, join, 1);
+    w.connect(join, sink, 0);
+    (w, join, handle)
+}
+
+/// Join output rows as sortable quadruples (build ⋈ probe).
+fn join_result(handle: &SinkHandle) -> Vec<(i64, i64, i64, i64)> {
+    let mut out: Vec<(i64, i64, i64, i64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| {
+            (
+                t.get(0).as_int().unwrap(),
+                t.get(1).as_int().unwrap(),
+                t.get(2).as_int().unwrap(),
+                t.get(3).as_int().unwrap(),
+            )
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+fn join_reference() -> Vec<(i64, i64, i64, i64)> {
+    let mut expect: Vec<(i64, i64, i64, i64)> = (0..JOIN_ROWS)
+        .map(|i| {
+            let (k, v) = (i as i64 % JOIN_KEYS, i as i64 % 11);
+            (k, k * 3, k, v)
+        })
+        .collect();
+    expect.sort_unstable();
+    expect
+}
+
+#[test]
+fn broadcast_join_scale_up_2_to_4_exact_and_subsecond() {
+    let mut rng = Rng::new(seed() ^ 0xbca1);
+    let reference = join_reference();
+    let (w, join, handle) = bcast_wf(2);
+    let exec = Execution::start(w, config());
+    std::thread::sleep(Duration::from_millis(10 + rng.below(80)));
+    let fence = exec.scale_operator(join, 4);
+    exec.join();
+    assert!(
+        fence > Duration::ZERO,
+        "broadcast-input scale was refused — run finished early?"
+    );
+    assert!(fence < Duration::from_secs(1), "fence took {fence:?}");
+    assert_eq!(
+        join_result(&handle),
+        reference,
+        "2→4 broadcast-join scale changed the sink multiset"
+    );
+}
+
+#[test]
+fn broadcast_join_scale_down_4_to_2_exact_and_subsecond() {
+    let mut rng = Rng::new(seed() ^ 0xbca2);
+    let reference = join_reference();
+    let (w, join, handle) = bcast_wf(4);
+    let exec = Execution::start(w, config());
+    std::thread::sleep(Duration::from_millis(10 + rng.below(80)));
+    let fence = exec.scale_operator(join, 2);
+    exec.join();
+    assert!(fence > Duration::ZERO, "broadcast-input scale was refused");
+    assert!(fence < Duration::from_secs(1), "fence took {fence:?}");
+    assert_eq!(
+        join_result(&handle),
+        reference,
+        "4→2 broadcast-join scale changed the sink multiset"
+    );
+}
+
+// ----------------------------------------- recovery across a source scale
+
+#[test]
+fn recovery_across_source_scale_redeploys_at_post_scale_parallelism() {
+    let cfg = Config { ft_log: true, ..Config::default() };
+    let reference = source_reference();
+    let (w, scan, handle) = source_wf(2);
+    let exec = Execution::start(w, cfg.clone());
+    std::thread::sleep(Duration::from_millis(30));
+    // Scale the source mid-run, then checkpoint *across* the epoch.
+    let fence = exec.scale_operator(scan, 4);
+    assert!(fence > Duration::ZERO, "source scale was refused");
+    std::thread::sleep(Duration::from_millis(10));
+    let checkpoint = exec.checkpoint();
+    // The checkpoint records the post-scale worker set, each scan
+    // worker with its live (re-cut) range embedded as a fork.
+    assert!(
+        checkpoint.workers.contains_key(&WorkerId::new(scan, 3)),
+        "checkpoint did not capture the post-scale scan workers"
+    );
+    // Crash a worker and abandon the execution.
+    exec.crash_workers(vec![WorkerId::new(1, 0)]);
+    let log = exec.take_replay_log();
+    drop(exec);
+    drop(handle);
+
+    // Recover into a workflow declared at the *post-scale* parallelism;
+    // the snapshot-embedded forks replace the plan-time ranges, so the
+    // recomputation is byte-identical to the damaged run's remainder.
+    let (w2, _, handle2) = source_wf(4);
+    let recovered = Execution::recover(w2, cfg, checkpoint, log);
+    recovered.join();
+    assert_eq!(
+        kv_result(&handle2),
+        reference,
+        "recovery across a source-scale epoch lost or duplicated rows"
+    );
+}
+
+// -------------------------------------------------- ownership/veto guard
+
+/// Regression test for the AutoscalePlugin-vs-driver conflict (ROADMAP
+/// PR-4 remaining): once the driver (Maestro's re-planner in
+/// production) scales an operator, the autoscale plugin's requests for
+/// it are vetoed — the count cannot be silently overwritten by the
+/// queue-driven policy (last-writer-wins).
+#[test]
+fn driver_scale_vetoes_autoscale_plugin_for_same_operator() {
+    use texera_amber::engine::AutoscalePlugin;
+
+    let rows = 40_000usize;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 1, move |idx, parts| {
+        let data: Vec<Tuple> = (0..rows)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64)]))
+            .collect();
+        Box::new(VecSource::new(data))
+    }));
+    let udf = w.add(OpSpec::unary(
+        "udf",
+        1,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(MapUdf::identity(20_000)),
+    ));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "sink",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h.clone())),
+    ));
+    w.connect(scan, udf, 0);
+    w.connect(udf, sink, 0);
+    let cfg = Config {
+        batch_size: 64,
+        autoscale_high_queue: 64.0,
+        autoscale_sustain_ticks: 3,
+        ..Config::default()
+    };
+    // An aggressive plugin that would otherwise double the saturated
+    // operator's workers (see elastic_scaling.rs, where it does).
+    let plugin = AutoscalePlugin::new(udf, 1, 4);
+    let exec = Execution::start_with_plugin(w, cfg, Box::new(plugin));
+    // Claim the operator for the driver before the plugin's sustain
+    // window (3 × 20 ms ticks) can possibly elapse.
+    std::thread::sleep(Duration::from_millis(15));
+    let fence = exec.scale_operator(udf, 3);
+    assert!(fence > Duration::ZERO, "driver scale was refused");
+    let summary = exec.join();
+    assert_eq!(handle.total() as usize, rows, "run lost tuples");
+    // The driver's count survived: exactly workers {0,1,2} completed —
+    // the plugin's later double/halve requests were vetoed.
+    let udf_workers: std::collections::HashSet<usize> = summary
+        .worker_stats
+        .iter()
+        .filter(|(id, _)| id.op == udf)
+        .map(|(id, _)| id.idx)
+        .collect();
+    assert_eq!(
+        udf_workers,
+        [0usize, 1, 2].into_iter().collect(),
+        "autoscale plugin overrode the driver-owned worker count"
+    );
+}

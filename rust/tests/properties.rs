@@ -614,9 +614,10 @@ fn chaos_round(seed: u64, batch_size: usize) {
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Worker counts as far as the driver knows (a refused scale —
-    // fence duration zero — leaves them unchanged).
-    let mut counts = [2usize, 2, 2]; // filter, partial, fin
-    let scalable = [filter, partial, fin];
+    // fence duration zero — leaves them unchanged). The scan is
+    // scalable too (universal elasticity: splittable scan ranges).
+    let mut counts = [2usize, 2, 2, 2]; // scan, filter, partial, fin
+    let scalable = [scan, filter, partial, fin];
     let mut epoch = 1u64;
     for _ in 0..14 {
         std::thread::sleep(Duration::from_millis(1 + rng.below(8)));
@@ -640,7 +641,7 @@ fn chaos_round(seed: u64, batch_size: usize) {
                 }
             }
             3..=5 => {
-                let which = rng.below(3) as usize;
+                let which = rng.below(4) as usize;
                 let target = 1 + rng.below(4) as usize;
                 if exec.scale_operator(scalable[which], target) > Duration::ZERO {
                     counts[which] = target;
@@ -649,11 +650,11 @@ fn chaos_round(seed: u64, batch_size: usize) {
             _ => {
                 // Reshape-style SBR mitigation on the scan→filter edge
                 // (stateless target: exact under any record split).
-                if counts[0] >= 2 {
+                if counts[1] >= 2 {
                     epoch += 1;
-                    let skewed = rng.below(counts[0] as u64) as usize;
-                    let helper = (skewed + 1) % counts[0];
-                    for sw in 0..2 {
+                    let skewed = rng.below(counts[1] as u64) as usize;
+                    let helper = (skewed + 1) % counts[1];
+                    for sw in 0..counts[0] {
                         exec.send_control(
                             WorkerId::new(scan, sw),
                             ControlMessage::UpdateRoute {
@@ -697,6 +698,320 @@ fn chaos_round(seed: u64, batch_size: usize) {
     for (k, s) in &got {
         assert_eq!(expect[k], *s, "seed {seed}: wrong sum for key {k}");
     }
+}
+
+// ---------- chaos: universal elasticity ----------
+
+/// Seeded command-fuzzer over the three formerly refusal-only operator
+/// classes: a *source* scan, a *broadcast-input* hash join, and a
+/// *scatter-merge* range sort are all scaled up/down at random points,
+/// interleaved with pause/resume, quiesced checkpoints and
+/// Reshape-style mitigation routes. The sink multiset must be
+/// byte-identical to a direct computation at batch 32 / 256 / 1024.
+/// `CHAOS_SEED` (CI matrix) shifts the whole command/timing stream.
+#[test]
+fn prop_chaos_universal_elasticity_preserves_results() {
+    let base: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    for (round, batch_size) in [(0u64, 256usize), (1, 1024), (2, 32)] {
+        universal_chaos_round(
+            base.wrapping_mul(7000).wrapping_add(round),
+            batch_size,
+        );
+    }
+}
+
+fn universal_chaos_round(seed: u64, batch_size: usize) {
+    use std::time::Duration;
+    use texera_amber::config::Config;
+    use texera_amber::engine::{ControlMessage, Execution, OpSpec, WorkerId, Workflow};
+    use texera_amber::operators::basic::MapUdf;
+    use texera_amber::operators::sort::SortWorker;
+    use texera_amber::operators::{CollectSink, HashJoin, SinkHandle};
+    use texera_amber::workloads::VecSource;
+
+    const ROWS: usize = 120_000;
+    const KEYS: i64 = 41;
+
+    let mut w = Workflow::new();
+    // Probe stream: (key, val) rows, round-robin-partitioned scan. A
+    // small per-tuple parse cost keeps the scan alive long enough that
+    // source-scale commands land mid-read at every batch size.
+    let scan = w.add(OpSpec::source_with_op(
+        "scan",
+        2,
+        move |idx, parts| {
+            let rows: Vec<Tuple> = (0..ROWS)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| {
+                    Tuple::new(vec![
+                        Value::Int(i as i64 % KEYS),
+                        Value::Int(i as i64 % 9),
+                    ])
+                })
+                .collect();
+            Box::new(VecSource::new(rows))
+        },
+        |_, _| Box::new(MapUdf::identity(2000)),
+    ));
+    // Build side: one row per key, broadcast to every join worker.
+    let dim = w.add(OpSpec::source("dim", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..KEYS)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(2 * k)]))
+            .collect::<Vec<_>>()
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % parts == idx)
+            .map(|(_, t)| t)
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    // Broadcast-input class: build port 0 broadcast, probe port 1 RR.
+    let join = w.add(OpSpec::binary(
+        "join",
+        2,
+        [PartitionScheme::Broadcast, PartitionScheme::RoundRobin],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 0)),
+    ));
+    // Scatter-merge class: range sort on the probe value (field 3 of
+    // the build⋈probe concat), with the EOF peer barrier armed.
+    let sort_bounds = vec![Value::Int(4)];
+    let sb = sort_bounds.clone();
+    let sortw = w.add(
+        OpSpec::unary(
+            "sort",
+            2,
+            PartitionScheme::Range { key: 3, bounds: sort_bounds },
+            move |idx, _| Box::new(SortWorker::new(3, idx as u64, sb.clone())),
+        )
+        .with_blocking(vec![0])
+        .with_scatter_merge(),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "sink",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h.clone())),
+    ));
+    w.connect(dim, join, 0);
+    w.connect(scan, join, 1);
+    w.connect(join, sortw, 0);
+    w.connect(sortw, sink, 0);
+
+    let exec = Execution::start(w, Config { batch_size, ..Config::default() });
+    let mut rng = Rng::new(seed);
+    let mut paused = false;
+    // Tracked worker counts (a refused scale leaves them unchanged).
+    let mut counts = [2usize, 2, 2]; // scan, join, sortw
+    let scalable = [scan, join, sortw];
+    let mut epoch = 1u64;
+    for _ in 0..14 {
+        std::thread::sleep(Duration::from_millis(1 + rng.below(8)));
+        match rng.below(8) {
+            0 => {
+                if !paused {
+                    exec.pause();
+                    paused = true;
+                }
+            }
+            1 => {
+                if paused {
+                    exec.resume();
+                    paused = false;
+                }
+            }
+            2 => {
+                if !paused {
+                    let _ = exec.checkpoint();
+                }
+            }
+            3..=6 => {
+                // The heart of the fuzz: scale a source, a
+                // broadcast-input join, or a scatter-merge sort.
+                let which = rng.below(3) as usize;
+                let target = 1 + rng.below(4) as usize;
+                if exec.scale_operator(scalable[which], target) > Duration::ZERO {
+                    counts[which] = target;
+                }
+            }
+            _ => {
+                // Mitigation on the join→sort range edge: SBR record
+                // splits create foreign runs, exercising the
+                // scattered-state barrier under scaling.
+                if counts[2] >= 2 {
+                    epoch += 1;
+                    let skewed = rng.below(counts[2] as u64) as usize;
+                    let helper = (skewed + 1) % counts[2];
+                    for jw in 0..counts[1] {
+                        exec.send_control(
+                            WorkerId::new(join, jw),
+                            ControlMessage::UpdateRoute {
+                                target_op: sortw,
+                                route: MitigationRoute {
+                                    skewed,
+                                    helper,
+                                    mode: ShareMode::SplitRecords {
+                                        num: 1 + rng.below(400) as u32,
+                                        den: 1000,
+                                    },
+                                    epoch,
+                                },
+                            },
+                        );
+                    }
+                }
+            }
+        }
+    }
+    if paused {
+        exec.resume();
+    }
+    exec.join();
+
+    // Ground truth, computed directly: every scan row joins exactly
+    // its key's dim row → (k, 2k, k, v).
+    let mut expect: Vec<(i64, i64, i64, i64)> = (0..ROWS)
+        .map(|i| {
+            let (k, v) = (i as i64 % KEYS, i as i64 % 9);
+            (k, 2 * k, k, v)
+        })
+        .collect();
+    expect.sort_unstable();
+    let mut got: Vec<(i64, i64, i64, i64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| {
+            (
+                t.get(0).as_int().unwrap(),
+                t.get(1).as_int().unwrap(),
+                t.get(2).as_int().unwrap(),
+                t.get(3).as_int().unwrap(),
+            )
+        })
+        .collect();
+    got.sort_unstable();
+    assert_eq!(
+        got.len(),
+        expect.len(),
+        "seed {seed} batch {batch_size}: wrong row count"
+    );
+    assert_eq!(got, expect, "seed {seed} batch {batch_size}: multiset differs");
+}
+
+// ---------- splittable scan ranges ----------
+
+/// Source split/replay contract (universal elasticity): for any
+/// built-in `TupleSource`, any consumed prefix and any split arity `n`,
+/// the multiset union of the `n` sub-ranges equals the unsplit
+/// remainder, and replay from any recorded position of a sub-range is
+/// byte-identical to its first reading.
+#[test]
+fn prop_source_split_union_and_replay() {
+    use texera_amber::workloads::dsb::{SkewProfile, WebSalesSource};
+    use texera_amber::workloads::synthetic::ShiftingSource;
+    use texera_amber::workloads::tpch::LineitemSource;
+    use texera_amber::workloads::tweets::TweetSource;
+    use texera_amber::workloads::{TupleSource, VecSource};
+
+    fn drain(s: &mut dyn TupleSource) -> Vec<Tuple> {
+        std::iter::from_fn(|| s.next_tuple()).collect()
+    }
+    /// Canonical multiset key (tuples have no Ord).
+    fn canon(mut v: Vec<Tuple>) -> Vec<String> {
+        let mut keys: Vec<String> = v.drain(..).map(|t| format!("{t:?}")).collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    struct G;
+    impl Gen for G {
+        type Value = (u8, u64, u64, u64, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            // (source kind, total rows, consumed prefix %, arity, seed)
+            (
+                rng.below(5) as u8,
+                50 + rng.below(400),
+                rng.below(100),
+                1 + rng.below(6),
+                rng.next_u64(),
+            )
+        }
+    }
+    check_n(23, 48, &G, |(kind, total, pre_pct, arity, seed)| {
+        let total = *total as usize;
+        let n = *arity as usize;
+        let mk = |parts: usize, idx: usize| -> Box<dyn TupleSource> {
+            match kind {
+                0 => Box::new(VecSource::strided(
+                    std::sync::Arc::new(
+                        (0..total as i64)
+                            .map(|i| Tuple::new(vec![Value::Int(i)]))
+                            .collect(),
+                    ),
+                    idx,
+                    parts,
+                )),
+                1 => Box::new(TweetSource::new(total, parts, idx, *seed | 1)),
+                2 => Box::new(ShiftingSource::new(total, parts, idx, *seed | 1)),
+                3 => Box::new(LineitemSource::with_rows(total, parts, idx, *seed | 1)),
+                _ => Box::new(WebSalesSource::new(
+                    total,
+                    parts,
+                    idx,
+                    *seed | 1,
+                    SkewProfile::default(),
+                )),
+            }
+        };
+        // A 2-way partition like a deployed scan worker would hold.
+        let mut src = mk(2, 1);
+        let part_len = src.len_hint().unwrap();
+        let pre = (part_len * *pre_pct as usize) / 100;
+        for _ in 0..pre {
+            if src.next_tuple().is_none() {
+                return false;
+            }
+        }
+        // Reference remainder via fork (also checks fork ≡ original).
+        let mut fork = match src.fork() {
+            Some(f) => f,
+            None => return false,
+        };
+        let remainder = canon(drain(fork.as_mut()));
+        // Split and union the sub-ranges.
+        let subs = match src.split(n) {
+            Some(s) => s,
+            None => return false,
+        };
+        if subs.len() != n {
+            return false;
+        }
+        let mut union: Vec<Tuple> = Vec::new();
+        let mut rng = Rng::new(seed.wrapping_add(17));
+        for mut sub in subs {
+            let out = drain(sub.as_mut());
+            // Replay from a random recorded position is identical.
+            let p = (rng.below(out.len() as u64 + 1)) as usize;
+            sub.seek(p);
+            let tail = drain(sub.as_mut());
+            if tail != out[p..] {
+                return false;
+            }
+            // Full reset replays the whole sub-range.
+            sub.reset();
+            if drain(sub.as_mut()) != out {
+                return false;
+            }
+            union.extend(out);
+        }
+        canon(union) == remainder
+    });
 }
 
 // ---------- estimator ----------
