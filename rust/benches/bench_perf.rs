@@ -1,6 +1,7 @@
 //! Performance microbenchmarks (§Perf of EXPERIMENTS.md): the engine's
 //! hot-path numbers — tuple throughput vs batch size, hash-shuffle
-//! (exchange) throughput, scatter micro old-vs-new, routing cost,
+//! (exchange) throughput, scatter micro old-vs-new, row-vs-columnar
+//! data plane, SPSC exchange-lane throughput, routing cost,
 //! control-path latency, PJRT classifier throughput.
 //!
 //! ```text
@@ -45,6 +46,8 @@ fn main() {
     let (rows, baseline) = throughput_vs_batch_size(smoke);
     let shuffle = shuffle_section(smoke);
     let micro = scatter_micro_section(smoke);
+    let rvc = row_vs_columnar_section(smoke);
+    let lanes = lanes_section(smoke);
     let elastic = elastic_scaling(smoke);
     let source_scale = source_scale_section(smoke);
     let maestro = maestro_section(smoke);
@@ -60,6 +63,8 @@ fn main() {
             &source_scale,
             &shuffle,
             &micro,
+            &rvc,
+            &lanes,
             &maestro,
         );
         routing_cost();
@@ -71,8 +76,16 @@ fn main() {
 /// One scan→filter→sink run; returns tuples/second. `ctrl_interval`
 /// is the DP chunk length: 1 reproduces the old per-tuple emit path
 /// (one `process` dispatch + one route per tuple), larger values
-/// exercise the batch-at-a-time plane.
-fn pipeline(total: usize, workers: usize, batch: usize, ctrl_interval: usize) -> f64 {
+/// exercise the batch-at-a-time plane. `columnar` toggles the
+/// struct-of-arrays data plane (typed column batches + column kernels)
+/// vs the row-major layout on identical plans.
+fn pipeline_cfg(
+    total: usize,
+    workers: usize,
+    batch: usize,
+    ctrl_interval: usize,
+    columnar: bool,
+) -> f64 {
     let mut w = Workflow::new();
     let scan = w.add(OpSpec::source("scan", workers, move |idx, parts| {
         let rows: Vec<Tuple> = (0..total)
@@ -95,11 +108,16 @@ fn pipeline(total: usize, workers: usize, batch: usize, ctrl_interval: usize) ->
     let cfg = Config {
         batch_size: batch,
         ctrl_check_interval: ctrl_interval,
+        columnar,
         ..Config::default()
     };
     let t0 = Instant::now();
     Execution::start(w, cfg).join();
     total as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn pipeline(total: usize, workers: usize, batch: usize, ctrl_interval: usize) -> f64 {
+    pipeline_cfg(total, workers, batch, ctrl_interval, true)
 }
 
 /// Engine throughput vs batch size (scan→filter→sink, 2 workers).
@@ -153,6 +171,10 @@ struct ShuffleRow {
 /// `skewed` puts 90% of tuples on one hot key (plus 100 cold keys);
 /// uniform cycles 512 keys.
 fn shuffle_tps(total: usize, batch: usize, skewed: bool) -> f64 {
+    shuffle_tps_cfg(total, batch, skewed, true)
+}
+
+fn shuffle_tps_cfg(total: usize, batch: usize, skewed: bool, columnar: bool) -> f64 {
     let mut w = Workflow::new();
     let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
         let rows: Vec<Tuple> = (0..total)
@@ -181,6 +203,7 @@ fn shuffle_tps(total: usize, batch: usize, skewed: bool) -> f64 {
     let cfg = Config {
         batch_size: batch,
         ctrl_check_interval: batch.max(1),
+        columnar,
         ..Config::default()
     };
     let t0 = Instant::now();
@@ -274,6 +297,120 @@ fn scatter_micro_section(smoke: bool) -> ScatterMicro {
     }
     println!();
     micro
+}
+
+/// Row-major vs columnar data plane on identical plans: filter
+/// pipeline and skewed hash shuffle, both at batch 1024.
+struct RowVsColumnar {
+    pipeline_row_tps: f64,
+    pipeline_col_tps: f64,
+    shuffle_row_tps: f64,
+    shuffle_col_tps: f64,
+}
+
+/// `Config::columnar` off vs on: the same scan→filter→sink pipeline
+/// and the same skewed hash shuffle, so the delta isolates the
+/// struct-of-arrays layout (typed column kernels in operators, shipped
+/// hash columns and gather-based scatter in the exchange) against the
+/// row-at-a-time layout. Recorded in BENCH_perf.json; the acceptance
+/// row for the columnar rework is the shuffle speedup.
+fn row_vs_columnar_section(smoke: bool) -> RowVsColumnar {
+    println!("--- row vs columnar data plane (batch 1024) ---");
+    let total = if smoke { 100_000 } else { 1_000_000 };
+    let best = |f: &dyn Fn() -> f64| {
+        let a = f();
+        let b = f();
+        a.max(b)
+    };
+    let pipeline_row = best(&|| pipeline_cfg(total, 2, 1024, 1024, false));
+    let pipeline_col = best(&|| pipeline_cfg(total, 2, 1024, 1024, true));
+    let shuffle_row = best(&|| shuffle_tps_cfg(total, 1024, true, false));
+    let shuffle_col = best(&|| shuffle_tps_cfg(total, 1024, true, true));
+    for (name, row, col) in [
+        ("filter pipeline", pipeline_row, pipeline_col),
+        ("skewed shuffle", shuffle_row, shuffle_col),
+    ] {
+        println!(
+            "{name:>16}: row {:>9.0} ktuples/s | columnar {:>9.0} ktuples/s | {:.2}x",
+            row / 1e3,
+            col / 1e3,
+            col / row
+        );
+    }
+    println!();
+    RowVsColumnar {
+        pipeline_row_tps: pipeline_row,
+        pipeline_col_tps: pipeline_col,
+        shuffle_row_tps: shuffle_row,
+        shuffle_col_tps: shuffle_col,
+    }
+}
+
+/// SPSC exchange-lane throughput: N producer threads, one consumer.
+struct LanesBench {
+    senders_1_tps: f64,
+    senders_4_tps: f64,
+}
+
+/// Raw data-ring throughput through the per-sender SPSC lanes: each
+/// producer thread owns a private bounded lane into one consumer
+/// (cloning the sender registers a fresh lane), so producers never
+/// serialize on each other — the multi-producer row measures exactly
+/// that.
+fn lanes_tps(senders: usize, batches_per_sender: usize) -> f64 {
+    use texera_amber::engine::channel::mailbox;
+    use texera_amber::engine::message::DataMessage;
+    use texera_amber::engine::{DataEvent, WorkerId};
+    let (tx, mbox) = mailbox(64);
+    let batch: TupleBatch = (0..1024usize)
+        .map(|i| Tuple::new(vec![Value::Int(i as i64)]))
+        .collect();
+    let total_tuples = senders * batches_per_sender * batch.len();
+    let t0 = Instant::now();
+    let mut producers = Vec::new();
+    for s in 0..senders {
+        let tx = tx.clone();
+        let batch = batch.clone();
+        producers.push(std::thread::spawn(move || {
+            for seq in 0..batches_per_sender {
+                let msg = DataMessage {
+                    from: WorkerId::new(0, s),
+                    port: 0,
+                    seq: seq as u64,
+                    batch: batch.clone(),
+                    hashes: None,
+                };
+                tx.send(DataEvent::Batch(msg)).expect("receiver alive");
+            }
+        }));
+    }
+    drop(tx);
+    let mut got = 0usize;
+    while let Ok(ev) = mbox.data.recv() {
+        if let DataEvent::Batch(m) = ev {
+            got += m.batch.len();
+        }
+    }
+    for p in producers {
+        p.join().expect("producer thread");
+    }
+    assert_eq!(got, total_tuples, "lanes bench dropped events");
+    total_tuples as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn lanes_section(smoke: bool) -> LanesBench {
+    println!("--- SPSC exchange lanes: 1024-tuple batches through the data ring ---");
+    let batches = if smoke { 500 } else { 5_000 };
+    let one = lanes_tps(1, batches);
+    let four = lanes_tps(4, batches);
+    println!(
+        "1 sender: {:>9.0} ktuples/s | 4 senders: {:>9.0} ktuples/s ({:.2}x aggregate)",
+        one / 1e3,
+        four / 1e3,
+        four / one
+    );
+    println!();
+    LanesBench { senders_1_tps: one, senders_4_tps: four }
 }
 
 /// Elastic-scaling result: throughput of the scaled operator before and
@@ -616,6 +753,7 @@ fn maestro_section(smoke: bool) -> MaestroBench {
 /// Write BENCH_perf.json (machine-readable perf trajectory) at the
 /// repository root, so the bench trajectory accumulates across PRs.
 /// The file's schema is documented in `docs/BENCH.md`.
+#[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     rows: &[(usize, usize, f64)],
     baseline: f64,
@@ -623,6 +761,8 @@ fn write_bench_json(
     source_scale: &SourceScaleBench,
     shuffle: &[ShuffleRow],
     micro: &ScatterMicro,
+    rvc: &RowVsColumnar,
+    lanes: &LanesBench,
     maestro: &MaestroBench,
 ) {
     let mut s = String::new();
@@ -668,6 +808,32 @@ fn write_bench_json(
     }
     let agg = (micro.uniform.1 / micro.uniform.0 + micro.skewed.1 / micro.skewed.0) / 2.0;
     s.push_str(&format!("    \"mean_speedup\": {agg:.2}\n  }},\n"));
+    s.push_str("  \"row_vs_columnar\": {\n");
+    s.push_str(
+        "    \"setup\": \"Config::columnar off vs on, batch 1024; pipeline = scan->filter->sink (2 workers), shuffle = skewed scan(2) --Hash--> count-sink(4)\",\n",
+    );
+    s.push_str(&format!(
+        "    \"pipeline\": {{\"row_tuples_per_sec\": {:.0}, \"columnar_tuples_per_sec\": {:.0}, \"speedup\": {:.2}}},\n",
+        rvc.pipeline_row_tps,
+        rvc.pipeline_col_tps,
+        rvc.pipeline_col_tps / rvc.pipeline_row_tps
+    ));
+    s.push_str(&format!(
+        "    \"shuffle\": {{\"row_tuples_per_sec\": {:.0}, \"columnar_tuples_per_sec\": {:.0}, \"speedup\": {:.2}}}\n  }},\n",
+        rvc.shuffle_row_tps,
+        rvc.shuffle_col_tps,
+        rvc.shuffle_col_tps / rvc.shuffle_row_tps
+    ));
+    s.push_str("  \"lanes\": {\n");
+    s.push_str(
+        "    \"setup\": \"data ring of per-sender SPSC lanes, 1024-tuple batches, one consumer\",\n",
+    );
+    s.push_str(&format!(
+        "    \"senders_1_tuples_per_sec\": {:.0}, \"senders_4_tuples_per_sec\": {:.0}, \"aggregate_speedup\": {:.2}\n  }},\n",
+        lanes.senders_1_tps,
+        lanes.senders_4_tps,
+        lanes.senders_4_tps / lanes.senders_1_tps
+    ));
     let es = if elastic.before_tps > 0.0 {
         elastic.after_tps / elastic.before_tps
     } else {

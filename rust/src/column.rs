@@ -1,0 +1,936 @@
+//! Columnar (struct-of-arrays) batch storage: typed column vectors
+//! with validity masks, plus the hash / gather / transpose kernels and
+//! the column builders the exchange uses to keep batches columnar
+//! across worker boundaries.
+//!
+//! A [`crate::tuple::TupleBatch`] carries its tuples in one of two
+//! physical layouts — row-major (`[Tuple]`, the original layout) or
+//! columnar (a [`ColumnSet`]: one typed vector per field) — and lazily
+//! converts between them, caching both. The columnar layout turns the
+//! data plane's hot loops into tight, branch-light passes over
+//! contiguous `i64`/`f64`/`Arc<str>` vectors:
+//!
+//! * **hashing** — [`Column::hash_range`] reproduces
+//!   [`Value::stable_hash`] *byte-exactly* per element (same type tags,
+//!   same SplitMix64 finalizer, same `-0.0` normalization), so hash
+//!   routes, SBK key sets and keyed state scopes are identical whichever
+//!   layout computed them — fault-tolerance replay (§2.6.2) depends on
+//!   routes being byte-stable;
+//! * **predicates** — operators read the raw vectors through
+//!   [`Column::int_vals`] / [`Column::float_vals`] / [`Column::str_vals`]
+//!   and evaluate comparisons without per-tuple enum dispatch;
+//! * **gathers** — [`ColumnSet::gather`] applies a selection vector
+//!   column-at-a-time (the exchange's scatter), and
+//!   [`ColumnSet::project`] is O(arity): projection just `Arc`-clones
+//!   the kept columns;
+//! * **scatter buffers** — [`ColumnAppender`] is the per-destination
+//!   output buffer of the exchange: it accepts rows, batch slices and
+//!   gathered selections, keeps them columnar when it can, and degrades
+//!   to a row buffer on ragged arity (or when the engine runs with
+//!   `Config::columnar = false`).
+//!
+//! Validity masks: a typed column stores `Value::Null` as a default
+//! scalar plus a `false` bit in an optional side mask (`None` = all
+//! valid — the overwhelmingly common case pays nothing). Columns whose
+//! values mix scalar types fall back to [`Column::Mixed`], a plain
+//! `Vec<Value>` with row semantics.
+//!
+//! Every kernel here is observationally identical to the row path it
+//! replaces; `rust/tests/properties.rs` fuzzes that equivalence and the
+//! unit tests below pin the byte-exactness of hashes and byte sizes.
+
+use crate::tuple::{hash_bytes, mix64, Tuple, TupleBatch, Value, TAG_FLOAT, TAG_INT, TAG_NULL};
+use std::sync::Arc;
+
+#[inline]
+fn valid(validity: &Option<Vec<bool>>, i: usize) -> bool {
+    match validity {
+        Some(m) => m[i],
+        None => true,
+    }
+}
+
+/// Push one validity bit, materializing the mask lazily: while every
+/// element is valid the mask stays `None`.
+fn mask_push(validity: &mut Option<Vec<bool>>, len_before: usize, ok: bool) {
+    match validity {
+        Some(m) => m.push(ok),
+        None => {
+            if !ok {
+                let mut m = vec![true; len_before];
+                m.push(false);
+                *validity = Some(m);
+            }
+        }
+    }
+}
+
+/// Extend a validity mask with a source range (`None` src = all valid).
+fn mask_extend(
+    dst: &mut Option<Vec<bool>>,
+    len_before: usize,
+    added: usize,
+    src: Option<&[bool]>,
+) {
+    if let Some(d) = dst.as_mut() {
+        match src {
+            Some(s) => d.extend_from_slice(s),
+            None => d.resize(len_before + added, true),
+        }
+        return;
+    }
+    if let Some(s) = src {
+        if s.iter().any(|&b| !b) {
+            let mut m = vec![true; len_before];
+            m.extend_from_slice(s);
+            *dst = Some(m);
+        }
+    }
+}
+
+/// Extend a validity mask with gathered source bits.
+fn mask_gather(
+    dst: &mut Option<Vec<bool>>,
+    len_before: usize,
+    src: Option<&[bool]>,
+    base: usize,
+    sel: &[u32],
+) {
+    if let Some(d) = dst.as_mut() {
+        match src {
+            Some(s) => d.extend(sel.iter().map(|&i| s[base + i as usize])),
+            None => d.resize(len_before + sel.len(), true),
+        }
+        return;
+    }
+    if let Some(s) = src {
+        if sel.iter().any(|&i| !s[base + i as usize]) {
+            let mut m = vec![true; len_before];
+            m.extend(sel.iter().map(|&i| s[base + i as usize]));
+            *dst = Some(m);
+        }
+    }
+}
+
+fn gathered_mask(validity: &Option<Vec<bool>>, base: usize, sel: &[u32]) -> Option<Vec<bool>> {
+    let m = validity.as_ref()?;
+    let g: Vec<bool> = sel.iter().map(|&i| m[base + i as usize]).collect();
+    if g.iter().all(|&b| b) {
+        None
+    } else {
+        Some(g)
+    }
+}
+
+/// One typed column: a contiguous vector of one scalar type plus an
+/// optional validity mask (`None` = all valid; a `false` bit reads as
+/// [`Value::Null`]). Heterogeneous columns fall back to
+/// [`Column::Mixed`].
+#[derive(Clone, Debug)]
+pub enum Column {
+    /// `i64` values; invalid slots hold `0`.
+    Int {
+        /// The packed values.
+        vals: Vec<i64>,
+        /// Validity bits; `None` = all valid.
+        validity: Option<Vec<bool>>,
+    },
+    /// `f64` values (bit-preserving, including NaN payloads and signed
+    /// zeros); invalid slots hold `0.0`.
+    Float {
+        /// The packed values.
+        vals: Vec<f64>,
+        /// Validity bits; `None` = all valid.
+        validity: Option<Vec<bool>>,
+    },
+    /// Shared strings; invalid slots hold the empty string.
+    Str {
+        /// The packed values.
+        vals: Vec<Arc<str>>,
+        /// Validity bits; `None` = all valid.
+        validity: Option<Vec<bool>>,
+    },
+    /// Row-semantics fallback for columns mixing scalar types.
+    Mixed {
+        /// The values, verbatim.
+        vals: Vec<Value>,
+    },
+}
+
+impl Column {
+    /// An empty column typed for `v` (`Null` starts as `Int`; a later
+    /// non-int value promotes the column to `Mixed`).
+    pub fn new_for(v: &Value) -> Column {
+        match v {
+            Value::Int(_) | Value::Null => Column::Int { vals: Vec::new(), validity: None },
+            Value::Float(_) => Column::Float { vals: Vec::new(), validity: None },
+            Value::Str(_) => Column::Str { vals: Vec::new(), validity: None },
+        }
+    }
+
+    /// An empty column of the same variant as `self`.
+    pub fn empty_like(&self) -> Column {
+        match self {
+            Column::Int { .. } => Column::Int { vals: Vec::new(), validity: None },
+            Column::Float { .. } => Column::Float { vals: Vec::new(), validity: None },
+            Column::Str { .. } => Column::Str { vals: Vec::new(), validity: None },
+            Column::Mixed { .. } => Column::Mixed { vals: Vec::new() },
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Int { vals, .. } => vals.len(),
+            Column::Float { vals, .. } => vals.len(),
+            Column::Str { vals, .. } => vals.len(),
+            Column::Mixed { vals } => vals.len(),
+        }
+    }
+
+    /// Whether the column has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The element at `i`, re-materialized as a [`Value`].
+    pub fn value_at(&self, i: usize) -> Value {
+        match self {
+            Column::Int { vals, validity } => {
+                if valid(validity, i) {
+                    Value::Int(vals[i])
+                } else {
+                    Value::Null
+                }
+            }
+            Column::Float { vals, validity } => {
+                if valid(validity, i) {
+                    Value::Float(vals[i])
+                } else {
+                    Value::Null
+                }
+            }
+            Column::Str { vals, validity } => {
+                if valid(validity, i) {
+                    Value::Str(vals[i].clone())
+                } else {
+                    Value::Null
+                }
+            }
+            Column::Mixed { vals } => vals[i].clone(),
+        }
+    }
+
+    /// The raw `i64` vector + mask, when this is an `Int` column.
+    pub fn int_vals(&self) -> Option<(&[i64], Option<&[bool]>)> {
+        match self {
+            Column::Int { vals, validity } => Some((vals, validity.as_deref())),
+            _ => None,
+        }
+    }
+
+    /// The raw `f64` vector + mask, when this is a `Float` column.
+    pub fn float_vals(&self) -> Option<(&[f64], Option<&[bool]>)> {
+        match self {
+            Column::Float { vals, validity } => Some((vals, validity.as_deref())),
+            _ => None,
+        }
+    }
+
+    /// The raw string vector + mask, when this is a `Str` column.
+    pub fn str_vals(&self) -> Option<(&[Arc<str>], Option<&[bool]>)> {
+        match self {
+            Column::Str { vals, validity } => Some((vals, validity.as_deref())),
+            _ => None,
+        }
+    }
+
+    fn promote_to_mixed(&mut self) {
+        if matches!(self, Column::Mixed { .. }) {
+            return;
+        }
+        let vals: Vec<Value> = (0..self.len()).map(|i| self.value_at(i)).collect();
+        *self = Column::Mixed { vals };
+    }
+
+    /// Append one value; a type mismatch promotes the column to
+    /// `Mixed` (never lossy).
+    pub fn push_value(&mut self, v: &Value) {
+        let ok = match (&mut *self, v) {
+            (Column::Int { vals, validity }, Value::Int(i)) => {
+                vals.push(*i);
+                if let Some(m) = validity {
+                    m.push(true);
+                }
+                true
+            }
+            (Column::Int { vals, validity }, Value::Null) => {
+                let before = vals.len();
+                vals.push(0);
+                mask_push(validity, before, false);
+                true
+            }
+            (Column::Float { vals, validity }, Value::Float(f)) => {
+                vals.push(*f);
+                if let Some(m) = validity {
+                    m.push(true);
+                }
+                true
+            }
+            (Column::Float { vals, validity }, Value::Null) => {
+                let before = vals.len();
+                vals.push(0.0);
+                mask_push(validity, before, false);
+                true
+            }
+            (Column::Str { vals, validity }, Value::Str(s)) => {
+                vals.push(s.clone());
+                if let Some(m) = validity {
+                    m.push(true);
+                }
+                true
+            }
+            (Column::Str { vals, validity }, Value::Null) => {
+                let before = vals.len();
+                vals.push(Arc::from(""));
+                mask_push(validity, before, false);
+                true
+            }
+            (Column::Mixed { vals }, v) => {
+                vals.push(v.clone());
+                true
+            }
+            _ => false,
+        };
+        if !ok {
+            self.promote_to_mixed();
+            if let Column::Mixed { vals } = self {
+                vals.push(v.clone());
+            }
+        }
+    }
+
+    /// Append `src[start..end]`; same-variant pairs take a bulk
+    /// `extend_from_slice`, anything else goes element-wise through
+    /// [`Column::push_value`] (promoting as needed).
+    pub fn append_range(&mut self, src: &Column, start: usize, end: usize) {
+        let bulk = match (&mut *self, src) {
+            (Column::Int { vals: d, validity: dm }, Column::Int { vals: s, validity: sm }) => {
+                let before = d.len();
+                d.extend_from_slice(&s[start..end]);
+                mask_extend(dm, before, end - start, sm.as_ref().map(|m| &m[start..end]));
+                true
+            }
+            (Column::Float { vals: d, validity: dm }, Column::Float { vals: s, validity: sm }) => {
+                let before = d.len();
+                d.extend_from_slice(&s[start..end]);
+                mask_extend(dm, before, end - start, sm.as_ref().map(|m| &m[start..end]));
+                true
+            }
+            (Column::Str { vals: d, validity: dm }, Column::Str { vals: s, validity: sm }) => {
+                let before = d.len();
+                d.extend_from_slice(&s[start..end]);
+                mask_extend(dm, before, end - start, sm.as_ref().map(|m| &m[start..end]));
+                true
+            }
+            (Column::Mixed { vals: d }, s) => {
+                for i in start..end {
+                    d.push(s.value_at(i));
+                }
+                true
+            }
+            _ => false,
+        };
+        if !bulk {
+            for i in start..end {
+                self.push_value(&src.value_at(i));
+            }
+        }
+    }
+
+    /// Append the gathered elements `src[base + sel[..]]` (the
+    /// exchange's scatter: `sel` is a selection vector relative to a
+    /// batch view starting at `base`).
+    pub fn append_gather(&mut self, src: &Column, base: usize, sel: &[u32]) {
+        let bulk = match (&mut *self, src) {
+            (Column::Int { vals: d, validity: dm }, Column::Int { vals: s, validity: sm }) => {
+                let before = d.len();
+                d.extend(sel.iter().map(|&i| s[base + i as usize]));
+                mask_gather(dm, before, sm.as_deref(), base, sel);
+                true
+            }
+            (Column::Float { vals: d, validity: dm }, Column::Float { vals: s, validity: sm }) => {
+                let before = d.len();
+                d.extend(sel.iter().map(|&i| s[base + i as usize]));
+                mask_gather(dm, before, sm.as_deref(), base, sel);
+                true
+            }
+            (Column::Str { vals: d, validity: dm }, Column::Str { vals: s, validity: sm }) => {
+                let before = d.len();
+                d.extend(sel.iter().map(|&i| s[base + i as usize].clone()));
+                mask_gather(dm, before, sm.as_deref(), base, sel);
+                true
+            }
+            (Column::Mixed { vals: d }, s) => {
+                for &i in sel {
+                    d.push(s.value_at(base + i as usize));
+                }
+                true
+            }
+            _ => false,
+        };
+        if !bulk {
+            for &i in sel {
+                self.push_value(&src.value_at(base + i as usize));
+            }
+        }
+    }
+
+    /// A new column holding `self[base + sel[..]]`.
+    pub fn gather(&self, base: usize, sel: &[u32]) -> Column {
+        match self {
+            Column::Int { vals, validity } => Column::Int {
+                vals: sel.iter().map(|&i| vals[base + i as usize]).collect(),
+                validity: gathered_mask(validity, base, sel),
+            },
+            Column::Float { vals, validity } => Column::Float {
+                vals: sel.iter().map(|&i| vals[base + i as usize]).collect(),
+                validity: gathered_mask(validity, base, sel),
+            },
+            Column::Str { vals, validity } => Column::Str {
+                vals: sel.iter().map(|&i| vals[base + i as usize].clone()).collect(),
+                validity: gathered_mask(validity, base, sel),
+            },
+            Column::Mixed { vals } => Column::Mixed {
+                vals: sel.iter().map(|&i| vals[base + i as usize].clone()).collect(),
+            },
+        }
+    }
+
+    /// Append the [`Value::stable_hash`] of each element in
+    /// `[start, end)` to `out` — byte-identical to hashing the
+    /// re-materialized values, in one tight typed loop.
+    pub fn hash_range(&self, start: usize, end: usize, out: &mut Vec<u64>) {
+        out.reserve(end - start);
+        match self {
+            Column::Int { vals, validity: None } => {
+                out.extend(vals[start..end].iter().map(|&v| mix64((v as u64) ^ TAG_INT)));
+            }
+            Column::Int { vals, validity: Some(m) } => {
+                out.extend(vals[start..end].iter().zip(m[start..end].iter()).map(
+                    |(&v, &ok)| {
+                        if ok {
+                            mix64((v as u64) ^ TAG_INT)
+                        } else {
+                            mix64(TAG_NULL)
+                        }
+                    },
+                ));
+            }
+            Column::Float { vals, validity: None } => {
+                out.extend(vals[start..end].iter().map(|&v| {
+                    let bits = if v == 0.0 { 0 } else { v.to_bits() };
+                    mix64(bits ^ TAG_FLOAT)
+                }));
+            }
+            Column::Float { vals, validity: Some(m) } => {
+                out.extend(vals[start..end].iter().zip(m[start..end].iter()).map(
+                    |(&v, &ok)| {
+                        if ok {
+                            let bits = if v == 0.0 { 0 } else { v.to_bits() };
+                            mix64(bits ^ TAG_FLOAT)
+                        } else {
+                            mix64(TAG_NULL)
+                        }
+                    },
+                ));
+            }
+            Column::Str { vals, validity: None } => {
+                out.extend(vals[start..end].iter().map(|s| hash_bytes(s.as_bytes())));
+            }
+            Column::Str { vals, validity: Some(m) } => {
+                out.extend(vals[start..end].iter().zip(m[start..end].iter()).map(
+                    |(s, &ok)| {
+                        if ok {
+                            hash_bytes(s.as_bytes())
+                        } else {
+                            mix64(TAG_NULL)
+                        }
+                    },
+                ));
+            }
+            Column::Mixed { vals } => {
+                out.extend(vals[start..end].iter().map(Value::stable_hash));
+            }
+        }
+    }
+
+    /// `Value::as_float().unwrap_or(0.0)` over `[start, end)` — the
+    /// aggregation accumulators' numeric coercion, vectorized.
+    pub fn float_or_zero_range(&self, start: usize, end: usize, out: &mut Vec<f64>) {
+        out.reserve(end - start);
+        match self {
+            Column::Float { vals, validity: None } => out.extend_from_slice(&vals[start..end]),
+            Column::Float { vals, validity: Some(m) } => {
+                out.extend(
+                    vals[start..end]
+                        .iter()
+                        .zip(m[start..end].iter())
+                        .map(|(&v, &ok)| if ok { v } else { 0.0 }),
+                );
+            }
+            Column::Int { vals, validity: None } => {
+                out.extend(vals[start..end].iter().map(|&v| v as f64));
+            }
+            Column::Int { vals, validity: Some(m) } => {
+                out.extend(
+                    vals[start..end]
+                        .iter()
+                        .zip(m[start..end].iter())
+                        .map(|(&v, &ok)| if ok { v as f64 } else { 0.0 }),
+                );
+            }
+            Column::Str { .. } => out.resize(out.len() + (end - start), 0.0),
+            Column::Mixed { vals } => {
+                out.extend(vals[start..end].iter().map(|v| v.as_float().unwrap_or(0.0)));
+            }
+        }
+    }
+
+    /// Sum of [`Value::byte_size`] over `[start, end)`, matching the
+    /// row layout's accounting exactly (a null costs 1 byte).
+    pub fn byte_size_range(&self, start: usize, end: usize) -> usize {
+        match self {
+            Column::Int { validity: None, .. } | Column::Float { validity: None, .. } => {
+                8 * (end - start)
+            }
+            Column::Int { validity: Some(m), .. } | Column::Float { validity: Some(m), .. } => {
+                m[start..end].iter().map(|&ok| if ok { 8 } else { 1 }).sum()
+            }
+            Column::Str { vals, validity: None } => {
+                vals[start..end].iter().map(|s| 16 + s.len()).sum()
+            }
+            Column::Str { vals, validity: Some(m) } => vals[start..end]
+                .iter()
+                .zip(m[start..end].iter())
+                .map(|(s, &ok)| if ok { 16 + s.len() } else { 1 })
+                .sum(),
+            Column::Mixed { vals } => vals[start..end].iter().map(Value::byte_size).sum(),
+        }
+    }
+}
+
+/// The columnar layout of one batch: one [`Column`] per field, all the
+/// same length. Columns are individually `Arc`-shared, so
+/// [`ColumnSet::project`] and clones are zero-copy.
+#[derive(Clone, Debug, Default)]
+pub struct ColumnSet {
+    /// The columns, in field order.
+    pub cols: Vec<Arc<Column>>,
+    len: usize,
+}
+
+impl ColumnSet {
+    /// Assemble a set from owned columns (all must share `len`).
+    pub fn new(cols: Vec<Column>, len: usize) -> ColumnSet {
+        debug_assert!(cols.iter().all(|c| c.len() == len));
+        ColumnSet { cols: cols.into_iter().map(Arc::new).collect(), len }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the set has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of columns.
+    pub fn arity(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Transpose a row slice. Returns `None` when the rows are ragged
+    /// (mixed arities) — such batches stay row-major.
+    pub fn from_rows(rows: &[Tuple]) -> Option<ColumnSet> {
+        let Some(first) = rows.first() else {
+            return Some(ColumnSet::default());
+        };
+        let arity = first.arity();
+        if arity == 0 || rows.iter().any(|t| t.arity() != arity) {
+            return None;
+        }
+        // Type each column from its first non-null value so a leading
+        // null doesn't force a Mixed column.
+        let mut cols: Vec<Column> = (0..arity)
+            .map(|c| {
+                let proto = rows
+                    .iter()
+                    .map(|t| t.get(c))
+                    .find(|v| !matches!(v, Value::Null))
+                    .unwrap_or(&Value::Null);
+                Column::new_for(proto)
+            })
+            .collect();
+        for t in rows {
+            for (c, col) in cols.iter_mut().enumerate() {
+                col.push_value(t.get(c));
+            }
+        }
+        Some(ColumnSet::new(cols, rows.len()))
+    }
+
+    /// Re-materialize row `i`.
+    pub fn row(&self, i: usize) -> Tuple {
+        Tuple::new(self.cols.iter().map(|c| c.value_at(i)).collect())
+    }
+
+    /// Re-materialize rows `[start, end)`.
+    pub fn to_rows(&self, start: usize, end: usize) -> Vec<Tuple> {
+        (start..end).map(|i| self.row(i)).collect()
+    }
+
+    /// Zero-copy projection: the kept columns are `Arc`-cloned, no
+    /// values move.
+    pub fn project(&self, fields: &[usize]) -> ColumnSet {
+        ColumnSet {
+            cols: fields.iter().map(|&f| self.cols[f].clone()).collect(),
+            len: self.len,
+        }
+    }
+
+    /// Gather `sel` (indices relative to a view starting at `base`)
+    /// out of every column.
+    pub fn gather(&self, base: usize, sel: &[u32]) -> ColumnSet {
+        ColumnSet {
+            cols: self.cols.iter().map(|c| Arc::new(c.gather(base, sel))).collect(),
+            len: sel.len(),
+        }
+    }
+
+    /// Sum of [`Tuple::byte_size`] over rows `[start, end)`, without
+    /// materializing them.
+    pub fn byte_size_range(&self, start: usize, end: usize) -> usize {
+        8 * (end - start)
+            + self
+                .cols
+                .iter()
+                .map(|c| c.byte_size_range(start, end))
+                .sum::<usize>()
+    }
+}
+
+#[derive(Debug)]
+enum AppendState {
+    Empty,
+    Cols(Vec<Column>),
+    Rows(Vec<Tuple>),
+}
+
+/// A growable batch buffer that keeps appended data columnar when it
+/// can: the exchange's per-destination scatter buffer. Accepts single
+/// rows ([`ColumnAppender::push_row`]), whole batch views
+/// ([`ColumnAppender::append_batch`]) and gathered selections
+/// ([`ColumnAppender::append_gather`]); degrades to a plain row buffer
+/// on ragged arity or when constructed with `columnar = false` (the
+/// retained row path, used by the equivalence tests and
+/// `Config::columnar`).
+#[derive(Debug)]
+pub struct ColumnAppender {
+    columnar: bool,
+    len: usize,
+    state: AppendState,
+}
+
+impl ColumnAppender {
+    /// A new empty buffer; `columnar = false` pins it to row storage.
+    pub fn new(columnar: bool) -> ColumnAppender {
+        ColumnAppender { columnar, len: 0, state: AppendState::Empty }
+    }
+
+    /// Buffered tuple count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn degrade_to_rows(&mut self) {
+        if let AppendState::Cols(cols) = &self.state {
+            let rows: Vec<Tuple> = (0..self.len)
+                .map(|i| Tuple::new(cols.iter().map(|c| c.value_at(i)).collect()))
+                .collect();
+            self.state = AppendState::Rows(rows);
+        }
+    }
+
+    /// Append one tuple (cloned).
+    pub fn push_row(&mut self, t: &Tuple) {
+        match &mut self.state {
+            AppendState::Rows(rows) => rows.push(t.clone()),
+            AppendState::Cols(cols) => {
+                if cols.len() == t.arity() {
+                    for (c, col) in cols.iter_mut().enumerate() {
+                        col.push_value(t.get(c));
+                    }
+                } else {
+                    self.degrade_to_rows();
+                    if let AppendState::Rows(rows) = &mut self.state {
+                        rows.push(t.clone());
+                    }
+                }
+            }
+            AppendState::Empty => {
+                if self.columnar && t.arity() > 0 {
+                    let mut cols: Vec<Column> =
+                        t.values.iter().map(Column::new_for).collect();
+                    for (c, col) in cols.iter_mut().enumerate() {
+                        col.push_value(t.get(c));
+                    }
+                    self.state = AppendState::Cols(cols);
+                } else {
+                    self.state = AppendState::Rows(vec![t.clone()]);
+                }
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Append one tuple, taking ownership (avoids the clone on the row
+    /// path).
+    pub fn push_owned(&mut self, t: Tuple) {
+        if let AppendState::Rows(rows) = &mut self.state {
+            rows.push(t);
+            self.len += 1;
+            return;
+        }
+        if matches!(self.state, AppendState::Empty) && !(self.columnar && t.arity() > 0) {
+            self.state = AppendState::Rows(vec![t]);
+            self.len += 1;
+            return;
+        }
+        self.push_row(&t);
+    }
+
+    fn try_append_columns(&mut self, b: &TupleBatch) -> bool {
+        let Some(cv) = b.columns() else {
+            return false;
+        };
+        if cv.set.arity() == 0 {
+            return false;
+        }
+        if matches!(self.state, AppendState::Empty) && self.columnar {
+            self.state =
+                AppendState::Cols(cv.set.cols.iter().map(|c| c.empty_like()).collect());
+        }
+        let AppendState::Cols(cols) = &mut self.state else {
+            return false;
+        };
+        if cols.len() != cv.set.arity() {
+            return false;
+        }
+        for (c, col) in cols.iter_mut().enumerate() {
+            col.append_range(&cv.set.cols[c], cv.start, cv.end);
+        }
+        self.len += b.len();
+        true
+    }
+
+    /// Append every tuple of a batch view (bulk column copies when both
+    /// sides are columnar with matching arity).
+    pub fn append_batch(&mut self, b: &TupleBatch) {
+        if b.is_empty() {
+            return;
+        }
+        if self.try_append_columns(b) {
+            return;
+        }
+        if let AppendState::Rows(rows) = &mut self.state {
+            rows.extend_from_slice(b.as_slice());
+            self.len += b.len();
+            return;
+        }
+        for t in b.iter() {
+            self.push_row(t);
+        }
+    }
+
+    /// Append the selected tuples `b[sel[..]]` (`sel` relative to the
+    /// batch view) — the exchange's per-destination gather.
+    pub fn append_gather(&mut self, b: &TupleBatch, sel: &[u32]) {
+        if sel.is_empty() {
+            return;
+        }
+        if let Some(cv) = b.columns() {
+            if cv.set.arity() > 0 {
+                if matches!(self.state, AppendState::Empty) && self.columnar {
+                    self.state = AppendState::Cols(
+                        cv.set.cols.iter().map(|c| c.empty_like()).collect(),
+                    );
+                }
+                if let AppendState::Cols(cols) = &mut self.state {
+                    if cols.len() == cv.set.arity() {
+                        for (c, col) in cols.iter_mut().enumerate() {
+                            col.append_gather(&cv.set.cols[c], cv.start, sel);
+                        }
+                        self.len += sel.len();
+                        return;
+                    }
+                }
+            }
+        }
+        if let AppendState::Rows(rows) = &mut self.state {
+            rows.extend(sel.iter().map(|&i| b.get(i as usize).clone()));
+            self.len += sel.len();
+            return;
+        }
+        for &i in sel {
+            self.push_row(b.get(i as usize));
+        }
+    }
+
+    /// Drain the buffer into a batch (columnar when the buffer stayed
+    /// columnar) and reset to empty.
+    pub fn take_batch(&mut self) -> TupleBatch {
+        let len = self.len;
+        self.len = 0;
+        match std::mem::replace(&mut self.state, AppendState::Empty) {
+            AppendState::Empty => TupleBatch::empty(),
+            AppendState::Rows(rows) => TupleBatch::new(rows),
+            AppendState::Cols(cols) => TupleBatch::from_columns(ColumnSet::new(cols, len)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_rows() -> Vec<Tuple> {
+        vec![
+            Tuple::new(vec![Value::Int(7), Value::Float(2.5), Value::str("abc")]),
+            Tuple::new(vec![Value::Null, Value::Float(-0.0), Value::str("")]),
+            Tuple::new(vec![Value::Int(-3), Value::Null, Value::str("abcdefgh")]),
+            Tuple::new(vec![Value::Int(0), Value::Float(1.0), Value::Null]),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_preserves_values() {
+        let rows = sample_rows();
+        let set = ColumnSet::from_rows(&rows).unwrap();
+        assert_eq!(set.len(), rows.len());
+        assert_eq!(set.arity(), 3);
+        assert_eq!(set.to_rows(0, rows.len()), rows);
+    }
+
+    #[test]
+    fn hash_range_matches_stable_hash() {
+        let rows = sample_rows();
+        let set = ColumnSet::from_rows(&rows).unwrap();
+        for (c, col) in set.cols.iter().enumerate() {
+            let mut got = Vec::new();
+            col.hash_range(0, rows.len(), &mut got);
+            let want: Vec<u64> =
+                rows.iter().map(|t| t.get(c).stable_hash()).collect();
+            assert_eq!(got, want, "column {c}");
+            // Sub-ranges too (batch-view slicing).
+            let mut sub = Vec::new();
+            col.hash_range(1, 3, &mut sub);
+            assert_eq!(sub, want[1..3]);
+        }
+    }
+
+    #[test]
+    fn byte_size_matches_rows() {
+        let rows = sample_rows();
+        let set = ColumnSet::from_rows(&rows).unwrap();
+        let want: usize = rows.iter().map(Tuple::byte_size).sum();
+        assert_eq!(set.byte_size_range(0, rows.len()), want);
+        let want13: usize = rows[1..3].iter().map(Tuple::byte_size).sum();
+        assert_eq!(set.byte_size_range(1, 3), want13);
+    }
+
+    #[test]
+    fn mixed_type_column_promotes() {
+        let rows = vec![
+            Tuple::new(vec![Value::Int(1)]),
+            Tuple::new(vec![Value::str("x")]),
+        ];
+        let set = ColumnSet::from_rows(&rows).unwrap();
+        assert!(matches!(&*set.cols[0], Column::Mixed { .. }));
+        assert_eq!(set.to_rows(0, 2), rows);
+    }
+
+    #[test]
+    fn ragged_rows_stay_row_major() {
+        let rows = vec![
+            Tuple::new(vec![Value::Int(1)]),
+            Tuple::new(vec![Value::Int(1), Value::Int(2)]),
+        ];
+        assert!(ColumnSet::from_rows(&rows).is_none());
+    }
+
+    #[test]
+    fn gather_and_project() {
+        let rows = sample_rows();
+        let set = ColumnSet::from_rows(&rows).unwrap();
+        let g = set.gather(0, &[3, 1]);
+        assert_eq!(g.row(0), rows[3]);
+        assert_eq!(g.row(1), rows[1]);
+        let p = set.project(&[2, 0]);
+        assert!(Arc::ptr_eq(&p.cols[0], &set.cols[2]), "projection is zero-copy");
+        assert_eq!(p.row(2).get(1), rows[2].get(0));
+    }
+
+    #[test]
+    fn float_or_zero_matches_as_float() {
+        let rows = sample_rows();
+        let set = ColumnSet::from_rows(&rows).unwrap();
+        for (c, col) in set.cols.iter().enumerate() {
+            let mut got = Vec::new();
+            col.float_or_zero_range(0, rows.len(), &mut got);
+            let want: Vec<f64> = rows
+                .iter()
+                .map(|t| t.get(c).as_float().unwrap_or(0.0))
+                .collect();
+            assert_eq!(got, want, "column {c}");
+        }
+    }
+
+    #[test]
+    fn appender_columnar_and_row_modes_agree() {
+        let rows = sample_rows();
+        let batch = TupleBatch::new(rows.clone());
+        let mut col_app = ColumnAppender::new(true);
+        let mut row_app = ColumnAppender::new(false);
+        for a in [&mut col_app, &mut row_app] {
+            a.push_row(&rows[0]);
+            a.append_batch(&batch.slice(1, 3));
+            a.append_gather(&batch, &[3, 0]);
+        }
+        assert_eq!(col_app.len(), row_app.len());
+        let cb = col_app.take_batch();
+        let rb = row_app.take_batch();
+        assert!(cb.has_columns());
+        assert!(!rb.has_columns());
+        assert_eq!(cb, rb);
+        assert!(col_app.is_empty());
+    }
+
+    #[test]
+    fn appender_degrades_on_ragged_arity() {
+        let mut a = ColumnAppender::new(true);
+        a.push_row(&Tuple::new(vec![Value::Int(1), Value::Int(2)]));
+        a.push_row(&Tuple::new(vec![Value::Int(3)]));
+        let b = a.take_batch();
+        assert_eq!(b.len(), 2);
+        assert!(!b.has_columns());
+        assert_eq!(b.get(1).get(0).as_int(), Some(3));
+    }
+}

@@ -44,6 +44,13 @@ pub struct Config {
     pub ctrl_delay_ms: u64,
     /// Enable the fault-tolerance control-replay log (§2.6.2).
     pub ft_log: bool,
+    /// Use the columnar (struct-of-arrays) data plane: sources and the
+    /// exchange build [`crate::column::ColumnSet`]-backed batches and
+    /// operators take their column-at-a-time paths. `false` pins every
+    /// batch to the row layout — the retained per-tuple path the
+    /// equivalence property tests compare against; results are
+    /// identical either way.
+    pub columnar: bool,
 
     // ---- Reshape (Ch. 3) ----
     /// Absolute-load threshold η of skew test inequality (3.1).
@@ -122,6 +129,7 @@ impl Default for Config {
             breakpoint_tau_ms: 5,
             ctrl_delay_ms: 0,
             ft_log: false,
+            columnar: true,
             reshape_eta: 100.0,
             reshape_tau: 100.0,
             reshape_dynamic_tau: false,

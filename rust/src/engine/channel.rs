@@ -7,19 +7,29 @@
 //! tuple. We implement the same structure natively, with both planes
 //! purpose-built for their access patterns:
 //!
-//! * **Data plane** — a bounded [`DataRing`] per worker. Producers
-//!   (upstream workers) block when the ring is full — the paper's
-//!   congestion-control backpressure (§2.3.3) — and the single
-//!   consumer (the worker's DP loop) pops batches in FIFO order.
-//!   Parking is Condvar-based and *lazy*: a producer signals the
-//!   consumer only when the consumer has actually parked on an empty
-//!   ring (and vice versa for full), so the steady-state hot path is
-//!   one short critical section per message with no syscalls and no
-//!   spinning. The consumer's empty-check (`try_recv` between control
-//!   polls) is a single atomic load. Disconnect mirrors `std::mpsc`:
-//!   a sender errors once the receiver died; the receiver reports
-//!   `Disconnected` only when every sender handle has dropped *and*
-//!   the ring is drained.
+//! * **Data plane** — a bounded [`DataRing`] per worker, organized as
+//!   true **per-sender SPSC lanes**: every [`DataSender`] clone owns a
+//!   private bounded FIFO lane into the receiver, so concurrent
+//!   producers never contend on a shared queue mutex — a sender's push
+//!   touches only its own lane (one uncontended lock) plus two atomic
+//!   counters. The single consumer (the worker's DP loop) drains the
+//!   lanes round-robin, which preserves the only ordering the engine
+//!   ever relied on: FIFO **per sender** (seq numbers, EOF/marker
+//!   alignment and state-transfer ordering are all per-sender
+//!   protocols; cross-sender interleaving was always scheduler-
+//!   dependent). Each lane is bounded at the ring's `cap`, so a
+//!   producer still blocks when *its* lane is full — the paper's
+//!   congestion-control backpressure (§2.3.3), now applied to the
+//!   congesting sender instead of serializing all of them. Parking is
+//!   Condvar-based and *lazy* on a shared wakeup lock: a producer
+//!   takes it only when the consumer has actually parked on an empty
+//!   ring (and vice versa for full), so the steady-state hot path has
+//!   no syscalls and no spinning. The consumer's empty-check
+//!   (`try_recv` between control polls) is a single atomic load on the
+//!   ring-wide length. Disconnect mirrors `std::mpsc`: a sender errors
+//!   once the receiver died; the receiver reports `Disconnected` only
+//!   when every sender handle has dropped *and* every lane is drained
+//!   (a dropped sender's undrained lane remains poppable).
 //! * **Control plane** — a dedicated [`ControlInbox`] with an atomic
 //!   `pending` flag the DP loop reads between chunks (a single relaxed
 //!   atomic load on the hot path). The inbox supports an artificial
@@ -231,130 +241,214 @@ pub enum RingRecvError {
     Disconnected,
 }
 
-/// `try_send` failure: the ring was full, or the receiver died. Carries
-/// the event back to the caller either way.
+/// `try_send` failure: the sender's lane was full, or the receiver
+/// died. Carries the event back to the caller either way.
 #[derive(Debug)]
 pub enum RingTrySendError {
     Full(DataEvent),
     Disconnected(DataEvent),
 }
 
-/// Ring interior: the queue plus parking state, under one short-held
-/// mutex. `rx_waiting`/`tx_waiting` make notifications lazy — nobody
-/// signals a condvar unless the other side actually parked.
-struct RingState {
-    queue: VecDeque<DataEvent>,
-    /// Receiver alive? (false once the worker's `Mailbox` dropped).
-    rx_alive: bool,
-    /// Consumer parked on empty.
-    rx_waiting: bool,
-    /// Producers parked on full.
-    tx_waiting: usize,
+/// One sender's private FIFO into the receiver. Single producer (the
+/// owning [`DataSender`]), single consumer (the ring's receiver): the
+/// `events` mutex is therefore at most 1-vs-1 contended, and only when
+/// the consumer happens to drain this exact lane mid-push.
+struct Lane {
+    events: Mutex<VecDeque<DataEvent>>,
+    /// Queued events in this lane (producer adds, consumer subtracts).
+    len: AtomicUsize,
+    /// False once the owning sender handle dropped; a dead lane is
+    /// pruned by the consumer after it drains.
+    tx_alive: AtomicBool,
 }
 
-/// A bounded FIFO data ring with Condvar parking (no spin on full or
-/// empty): the worker's data plane. Single consumer (the owning
-/// worker); producers are the upstream workers holding [`DataSender`]
-/// clones. Blocking `send` on a full ring is the §2.3.3
-/// congestion-control backpressure.
+impl Lane {
+    fn new(cap: usize) -> Lane {
+        Lane {
+            events: Mutex::new(VecDeque::with_capacity(cap)),
+            len: AtomicUsize::new(0),
+            tx_alive: AtomicBool::new(true),
+        }
+    }
+}
+
+/// A bounded data ring of per-sender SPSC lanes with lazy Condvar
+/// parking (no spin on full or empty): the worker's data plane. Single
+/// consumer (the owning worker); each producer ([`DataSender`] clone)
+/// owns one bounded lane, so producers never serialize on each other.
+/// Blocking `send` on a full lane is the §2.3.3 congestion-control
+/// backpressure, applied per congesting sender.
+///
+/// The wakeup protocol is Dekker-style over SeqCst atomics: a parking
+/// side re-checks its condition while holding the shared `wake` lock,
+/// and the waking side notifies under that same lock only when the
+/// `rx_waiting`/`tx_waiting` flags say someone actually parked — so
+/// the hot path never takes `wake`, and no wakeup can be lost.
 pub struct DataRing {
+    /// Per-lane capacity (events).
     cap: usize,
-    state: Mutex<RingState>,
+    /// Lane registry. Locked only to append (sender clone), to scan on
+    /// a non-empty pop, and to prune drained dead lanes — never held
+    /// while parking.
+    lanes: Mutex<Vec<Arc<Lane>>>,
+    /// Shared parking lock for both directions (never held while
+    /// holding a lane's `events` lock).
+    wake: Mutex<()>,
     not_empty: Condvar,
     not_full: Condvar,
-    /// Queue-length mirror: the consumer's lock-free empty check.
-    len: AtomicUsize,
+    /// Ring-wide queued-event count: the consumer's lock-free empty
+    /// check.
+    total_len: AtomicUsize,
     /// Live `DataSender` handles (0 + drained ⇒ disconnected).
     sender_count: AtomicUsize,
+    /// Receiver alive? (false once the worker's `Mailbox` dropped).
+    rx_alive: AtomicBool,
+    /// Consumer parked on empty.
+    rx_waiting: AtomicBool,
+    /// Producers parked on full lanes.
+    tx_waiting: AtomicUsize,
+    /// Round-robin drain position (single consumer; no contention).
+    cursor: AtomicUsize,
 }
 
 impl DataRing {
-    /// A ring with `cap` slots and one live sender handle (the one
-    /// [`mailbox`] returns).
-    fn new(cap: usize) -> DataRing {
-        DataRing {
-            cap: cap.max(1),
-            state: Mutex::new(RingState {
-                queue: VecDeque::with_capacity(cap.max(1)),
-                rx_alive: true,
-                rx_waiting: false,
-                tx_waiting: 0,
-            }),
+    /// A ring with `cap`-slot lanes and one live sender handle (the
+    /// one [`mailbox`] returns).
+    fn new(cap: usize) -> (Arc<DataRing>, Arc<Lane>) {
+        let cap = cap.max(1);
+        let lane = Arc::new(Lane::new(cap));
+        let ring = Arc::new(DataRing {
+            cap,
+            lanes: Mutex::new(vec![lane.clone()]),
+            wake: Mutex::new(()),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
-            len: AtomicUsize::new(0),
+            total_len: AtomicUsize::new(0),
             sender_count: AtomicUsize::new(1),
-        }
+            rx_alive: AtomicBool::new(true),
+            rx_waiting: AtomicBool::new(false),
+            tx_waiting: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+        });
+        (ring, lane)
     }
 
-    fn add_sender(&self) {
-        self.sender_count.fetch_add(1, Ordering::Relaxed);
+    /// Register a fresh lane for a cloned sender.
+    fn add_sender(&self) -> Arc<Lane> {
+        let lane = Arc::new(Lane::new(self.cap));
+        self.lanes.lock().unwrap().push(lane.clone());
+        self.sender_count.fetch_add(1, Ordering::SeqCst);
+        lane
     }
 
-    fn drop_sender(&self) {
-        if self.sender_count.fetch_sub(1, Ordering::AcqRel) == 1 {
+    fn drop_sender(&self, lane: &Lane) {
+        lane.tx_alive.store(false, Ordering::SeqCst);
+        if self.sender_count.fetch_sub(1, Ordering::SeqCst) == 1 {
             // Last sender gone: wake a parked consumer so it can
-            // observe the disconnect. Taking the lock orders this
+            // observe the disconnect. Taking the wake lock orders this
             // after any in-progress recv's park decision.
-            let _s = self.state.lock().unwrap();
+            let _g = self.wake.lock().unwrap();
             self.not_empty.notify_all();
         }
     }
 
     fn close_rx(&self) {
-        let mut s = self.state.lock().unwrap();
-        s.rx_alive = false;
+        self.rx_alive.store(false, Ordering::SeqCst);
         // Unbuffered senders must not block forever on a dead worker.
+        let _g = self.wake.lock().unwrap();
         self.not_full.notify_all();
     }
 
-    /// Push one event; blocks on full when `block`, else returns it.
-    fn push(&self, ev: DataEvent, block: bool) -> Result<(), RingTrySendError> {
-        let mut s = self.state.lock().unwrap();
+    /// Push one event onto `lane`; blocks on a full lane when `block`,
+    /// else returns the event.
+    fn push(&self, lane: &Lane, ev: DataEvent, block: bool) -> Result<(), RingTrySendError> {
         loop {
-            if !s.rx_alive {
+            if !self.rx_alive.load(Ordering::SeqCst) {
                 return Err(RingTrySendError::Disconnected(ev));
             }
-            if s.queue.len() < self.cap {
-                s.queue.push_back(ev);
-                self.len.store(s.queue.len(), Ordering::Release);
-                if s.rx_waiting {
-                    s.rx_waiting = false;
-                    self.not_empty.notify_one();
+            if lane.len.load(Ordering::SeqCst) < self.cap {
+                lane.events.lock().unwrap().push_back(ev);
+                lane.len.fetch_add(1, Ordering::SeqCst);
+                self.total_len.fetch_add(1, Ordering::SeqCst);
+                // Lazy wake: only if the consumer actually parked. The
+                // consumer re-checks `total_len` under `wake` before
+                // sleeping, so this SeqCst pair cannot lose a wakeup.
+                if self.rx_waiting.load(Ordering::SeqCst) {
+                    let _g = self.wake.lock().unwrap();
+                    self.not_empty.notify_all();
                 }
                 return Ok(());
             }
             if !block {
                 return Err(RingTrySendError::Full(ev));
             }
-            s.tx_waiting += 1;
-            s = self.not_full.wait(s).unwrap();
-            s.tx_waiting -= 1;
+            // Park until the consumer frees a slot in this lane (or
+            // hangs up). The condition re-check happens under `wake`.
+            let mut g = self.wake.lock().unwrap();
+            self.tx_waiting.fetch_add(1, Ordering::SeqCst);
+            while lane.len.load(Ordering::SeqCst) >= self.cap
+                && self.rx_alive.load(Ordering::SeqCst)
+            {
+                g = self.not_full.wait(g).unwrap();
+            }
+            self.tx_waiting.fetch_sub(1, Ordering::SeqCst);
         }
     }
 
-    /// Pop under the lock; wakes one parked producer per freed slot.
-    fn pop_locked(&self, s: &mut RingState) -> Option<DataEvent> {
-        let ev = s.queue.pop_front()?;
-        self.len.store(s.queue.len(), Ordering::Release);
-        if s.tx_waiting > 0 {
-            self.not_full.notify_one();
+    /// Scan the lanes round-robin and pop one event. Prunes drained
+    /// lanes of dropped senders along the way.
+    fn pop_any(&self) -> Option<DataEvent> {
+        let mut lanes = self.lanes.lock().unwrap();
+        let n = lanes.len();
+        if n == 0 {
+            return None;
         }
-        Some(ev)
+        let start = self.cursor.load(Ordering::Relaxed);
+        for k in 0..n {
+            let i = (start + k) % n;
+            if lanes[i].len.load(Ordering::SeqCst) == 0 {
+                continue;
+            }
+            let lane = lanes[i].clone();
+            let ev = lane.events.lock().unwrap().pop_front();
+            let Some(ev) = ev else { continue };
+            lane.len.fetch_sub(1, Ordering::SeqCst);
+            self.total_len.fetch_sub(1, Ordering::SeqCst);
+            self.cursor.store((i + 1) % n, Ordering::Relaxed);
+            drop(lanes);
+            if self.tx_waiting.load(Ordering::SeqCst) > 0 {
+                let _g = self.wake.lock().unwrap();
+                self.not_full.notify_all();
+            }
+            return Some(ev);
+        }
+        // Nothing queued anywhere: retire lanes whose sender dropped
+        // (nobody can ever push to them again).
+        if lanes
+            .iter()
+            .any(|l| !l.tx_alive.load(Ordering::SeqCst) && l.len.load(Ordering::SeqCst) == 0)
+        {
+            lanes.retain(|l| {
+                l.tx_alive.load(Ordering::SeqCst) || l.len.load(Ordering::SeqCst) > 0
+            });
+            self.cursor.store(0, Ordering::Relaxed);
+        }
+        None
     }
 
     fn try_recv(&self) -> Result<DataEvent, RingRecvError> {
         // Fast path: one atomic load when idle (the DP loop polls this
         // between control checks).
-        if self.len.load(Ordering::Acquire) == 0
-            && self.sender_count.load(Ordering::Acquire) > 0
-        {
-            return Err(RingRecvError::Empty);
+        if self.total_len.load(Ordering::SeqCst) == 0 {
+            return if self.sender_count.load(Ordering::SeqCst) == 0 {
+                Err(RingRecvError::Disconnected)
+            } else {
+                Err(RingRecvError::Empty)
+            };
         }
-        let mut s = self.state.lock().unwrap();
-        match self.pop_locked(&mut s) {
+        match self.pop_any() {
             Some(ev) => Ok(ev),
-            None if self.sender_count.load(Ordering::Acquire) == 0 => {
+            None if self.sender_count.load(Ordering::SeqCst) == 0 => {
                 Err(RingRecvError::Disconnected)
             }
             None => Err(RingRecvError::Empty),
@@ -362,58 +456,72 @@ impl DataRing {
     }
 
     fn recv_deadline(&self, deadline: Option<Instant>) -> Result<DataEvent, RingRecvError> {
-        let mut s = self.state.lock().unwrap();
         loop {
-            if let Some(ev) = self.pop_locked(&mut s) {
+            if let Some(ev) = self.pop_any() {
                 return Ok(ev);
             }
-            if self.sender_count.load(Ordering::Acquire) == 0 {
+            if self.sender_count.load(Ordering::SeqCst) == 0 {
                 return Err(RingRecvError::Disconnected);
             }
-            s.rx_waiting = true;
+            // Park. Announce first, then re-check the condition under
+            // the wake lock: a sender that missed `rx_waiting == true`
+            // must have completed its `total_len` increment before our
+            // re-check (SeqCst), so we either see the event or the
+            // sender sees the flag.
+            let mut g = self.wake.lock().unwrap();
+            self.rx_waiting.store(true, Ordering::SeqCst);
+            if self.total_len.load(Ordering::SeqCst) > 0
+                || self.sender_count.load(Ordering::SeqCst) == 0
+            {
+                self.rx_waiting.store(false, Ordering::SeqCst);
+                continue;
+            }
             match deadline {
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
-                        s.rx_waiting = false;
+                        self.rx_waiting.store(false, Ordering::SeqCst);
                         return Err(RingRecvError::Empty);
                     }
-                    let (ss, _) = self.not_empty.wait_timeout(s, d - now).unwrap();
-                    s = ss;
+                    let (gg, _) = self.not_empty.wait_timeout(g, d - now).unwrap();
+                    g = gg;
                 }
                 None => {
-                    s = self.not_empty.wait(s).unwrap();
+                    g = self.not_empty.wait(g).unwrap();
                 }
             }
-            s.rx_waiting = false;
+            self.rx_waiting.store(false, Ordering::SeqCst);
+            drop(g);
         }
     }
 }
 
-/// The sending half of a worker's data plane: a handle on the
-/// receiver's ring plus its gauges, so the sender maintains the
-/// queue-size metric. Cloning tracks liveness (`std::mpsc`-style
-/// disconnect when the last clone drops).
+/// The sending half of a worker's data plane: a private SPSC lane into
+/// the receiver's ring plus the receiver's gauges, so the sender
+/// maintains the queue-size metric. Cloning creates a fresh lane and
+/// tracks liveness (`std::mpsc`-style disconnect when the last clone
+/// drops).
 pub struct DataSender {
     ring: Arc<DataRing>,
+    lane: Arc<Lane>,
     pub gauges: Arc<WorkerGauges>,
 }
 
 impl Clone for DataSender {
     fn clone(&self) -> DataSender {
-        self.ring.add_sender();
-        DataSender { ring: self.ring.clone(), gauges: self.gauges.clone() }
+        let lane = self.ring.add_sender();
+        DataSender { ring: self.ring.clone(), lane, gauges: self.gauges.clone() }
     }
 }
 
 impl Drop for DataSender {
     fn drop(&mut self) {
-        self.ring.drop_sender();
+        self.ring.drop_sender(&self.lane);
     }
 }
 
 impl DataSender {
-    /// Send a data event, blocking if the receiver's ring is full
+    /// Send a data event, blocking if this sender's lane is full
     /// (congestion control / backpressure).
     pub fn send(&self, ev: DataEvent) -> Result<(), ()> {
         if let DataEvent::Batch(b) = &ev {
@@ -421,9 +529,9 @@ impl DataSender {
                 .queued
                 .fetch_add(b.batch.len() as i64, Ordering::Relaxed);
         }
-        // Blocking send (FIFO, bounded); error only if the receiver
-        // hung up (crash/teardown).
-        self.ring.push(ev, true).map_err(|_| ())
+        // Blocking send (FIFO per sender, bounded); error only if the
+        // receiver hung up (crash/teardown).
+        self.ring.push(&self.lane, ev, true).map_err(|_| ())
     }
 }
 
@@ -462,13 +570,14 @@ pub struct Mailbox {
     pub gauges: Arc<WorkerGauges>,
 }
 
-/// Create the mailbox for one worker; returns the sender template.
+/// Create the mailbox for one worker; returns the sender template
+/// (cloning it gives each upstream producer its own SPSC lane).
 pub fn mailbox(cap: usize) -> (DataSender, Mailbox) {
-    let ring = Arc::new(DataRing::new(cap));
+    let (ring, lane) = DataRing::new(cap);
     let gauges = Arc::new(WorkerGauges::default());
     let control = Arc::new(ControlInbox::new());
     (
-        DataSender { ring: ring.clone(), gauges: gauges.clone() },
+        DataSender { ring: ring.clone(), lane, gauges: gauges.clone() },
         Mailbox { data: RingReceiver { ring }, control, gauges },
     )
 }
@@ -480,7 +589,7 @@ pub fn try_send(s: &DataSender, ev: DataEvent) -> Result<(), RingTrySendError> {
             .queued
             .fetch_add(b.batch.len() as i64, Ordering::Relaxed);
     }
-    s.ring.push(ev, false)
+    s.ring.push(&s.lane, ev, false)
 }
 
 #[cfg(test)]
@@ -495,6 +604,17 @@ mod tests {
             port: 0,
             seq: 0,
             batch: (0..n).map(|i| Tuple::new(vec![Value::Int(i as i64)])).collect(),
+            hashes: None,
+        })
+    }
+
+    fn seq_msg(from: WorkerId, seq: u64) -> DataEvent {
+        DataEvent::Batch(DataMessage {
+            from,
+            port: 0,
+            seq,
+            batch: crate::tuple::TupleBatch::empty(),
+            hashes: None,
         })
     }
 
@@ -606,13 +726,7 @@ mod tests {
     fn data_ring_fifo_per_sender() {
         let (tx, mb) = mailbox(16);
         for seq in 0..5u64 {
-            tx.send(DataEvent::Batch(DataMessage {
-                from: WorkerId::new(0, 0),
-                port: 0,
-                seq,
-                batch: crate::tuple::TupleBatch::empty(),
-            }))
-            .unwrap();
+            tx.send(seq_msg(WorkerId::new(0, 0), seq)).unwrap();
         }
         for seq in 0..5u64 {
             match mb.data.recv().unwrap() {
@@ -620,6 +734,66 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn spsc_lanes_keep_per_sender_fifo_under_interleaving() {
+        // Two senders interleave; each sender's stream must drain in
+        // its own seq order, whatever the round-robin interleaving.
+        let (tx_a, mb) = mailbox(64);
+        let tx_b = tx_a.clone();
+        for seq in 0..10u64 {
+            tx_a.send(seq_msg(WorkerId::new(0, 0), seq)).unwrap();
+            tx_b.send(seq_msg(WorkerId::new(0, 1), seq)).unwrap();
+        }
+        let mut next = std::collections::HashMap::new();
+        for _ in 0..20 {
+            match mb.data.recv().unwrap() {
+                DataEvent::Batch(b) => {
+                    let n = next.entry(b.from).or_insert(0u64);
+                    assert_eq!(b.seq, *n, "lane {} out of order", b.from);
+                    *n += 1;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(next.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_senders_deliver_everything_in_lane_order() {
+        // Stress the SPSC paths: 4 producer threads × 200 events each
+        // against a tiny lane cap (forced parking both directions).
+        let (tx0, mb) = mailbox(4);
+        let mut handles = Vec::new();
+        for s in 0..4usize {
+            let tx = tx0.clone();
+            handles.push(std::thread::spawn(move || {
+                for seq in 0..200u64 {
+                    tx.send(seq_msg(WorkerId::new(0, s), seq)).unwrap();
+                }
+            }));
+        }
+        drop(tx0);
+        let mut next = std::collections::HashMap::new();
+        let mut got = 0;
+        loop {
+            match mb.data.recv_timeout(Duration::from_secs(10)) {
+                Ok(DataEvent::Batch(b)) => {
+                    let n = next.entry(b.from).or_insert(0u64);
+                    assert_eq!(b.seq, *n, "lane {} out of order", b.from);
+                    *n += 1;
+                    got += 1;
+                }
+                Ok(other) => panic!("unexpected {other:?}"),
+                Err(RingRecvError::Disconnected) => break,
+                Err(RingRecvError::Empty) => panic!("timed out at {got} events"),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(got, 800);
     }
 
     #[test]
@@ -632,13 +806,18 @@ mod tests {
         // were never woken).
         assert!(matches!(try_send(&tx, batch(1)), Err(RingTrySendError::Full(_))));
         let t2 = tx.clone();
+        // The clone has its own lane with free slots; fill it so the
+        // spawned blocking send actually parks on a full lane.
+        t2.send(batch(1)).unwrap();
+        t2.send(batch(1)).unwrap();
         let h = std::thread::spawn(move || t2.send(batch(1)).unwrap());
         std::thread::sleep(Duration::from_millis(40));
         mb.data.recv().unwrap(); // frees one slot
         h.join().unwrap();
-        // Both remaining events drain.
-        assert!(mb.data.recv().is_ok());
-        assert!(mb.data.recv().is_ok());
+        // All remaining events drain.
+        for _ in 0..4 {
+            assert!(mb.data.recv().is_ok());
+        }
     }
 
     #[test]
@@ -647,7 +826,8 @@ mod tests {
         let tx2 = tx.clone();
         tx.send(batch(1)).unwrap();
         drop(tx);
-        // A live clone keeps the ring connected.
+        // A live clone keeps the ring connected, and the dropped
+        // sender's lane still drains.
         assert!(matches!(mb.data.try_recv(), Ok(_)));
         assert!(matches!(mb.data.try_recv(), Err(RingRecvError::Empty)));
         drop(tx2);

@@ -402,12 +402,15 @@ impl Execution {
                     let dst_senders: Vec<DataSender> = (0..dst.workers)
                         .map(|d| senders[&WorkerId::new(e.to, d)].clone())
                         .collect();
-                    outputs.push(OutputEdge::new(
-                        e.to,
-                        e.to_port,
-                        Partitioner::new(scheme, dst.workers, w),
-                        dst_senders,
-                    ));
+                    outputs.push(
+                        OutputEdge::new(
+                            e.to,
+                            e.to_port,
+                            Partitioner::new(scheme, dst.workers, w),
+                            dst_senders,
+                        )
+                        .with_columnar(config.columnar),
+                    );
                 }
                 let snapshot = checkpoint
                     .as_mut()
@@ -436,6 +439,7 @@ impl Execution {
                     scale_epoch: 0,
                     initial_eofs: None,
                     start_paused: false,
+                    columnar: config.columnar,
                 };
                 let builder = op.builder.clone();
                 let workers = op.workers;
@@ -1452,6 +1456,7 @@ impl Coordinator {
                         port,
                         seq: 0,
                         batch: tuples.into(),
+                        hashes: None,
                     },
                 ));
             }
@@ -1550,6 +1555,7 @@ impl Coordinator {
                                 port: msg.port,
                                 seq: 0,
                                 batch: msg.batch.clone(),
+                                hashes: msg.hashes.clone(),
                             }));
                         }
                     }
@@ -1625,6 +1631,7 @@ impl Coordinator {
                             port,
                             seq: 0,
                             batch: tuples.into(),
+                            hashes: None,
                         },
                     ));
                 }
@@ -1785,12 +1792,15 @@ impl Coordinator {
             let dst_senders: Vec<DataSender> = (0..dst.workers)
                 .map(|d| self.senders[&WorkerId::new(e.to, d)].clone())
                 .collect();
-            outputs.push(OutputEdge::new(
-                e.to,
-                e.to_port,
-                Partitioner::new(scheme, dst.workers, w),
-                dst_senders,
-            ));
+            outputs.push(
+                OutputEdge::new(
+                    e.to,
+                    e.to_port,
+                    Partitioner::new(scheme, dst.workers, w),
+                    dst_senders,
+                )
+                .with_columnar(self.config.columnar),
+            );
         }
         let peers: Vec<DataSender> = (0..new_n)
             .filter_map(|i| self.senders.get(&WorkerId::new(op_idx, i)).cloned())
@@ -1826,6 +1836,7 @@ impl Coordinator {
             scale_epoch: epoch,
             initial_eofs: Some(self.missed_ends(op_idx)),
             start_paused: true,
+            columnar: self.config.columnar,
         };
         let builder = spec.builder.clone();
         let thread = std::thread::Builder::new()

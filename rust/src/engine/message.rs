@@ -48,19 +48,68 @@ impl std::fmt::Display for WorkerId {
     }
 }
 
+/// The sender's memoized hash column, shipped alongside a batch so the
+/// receiver never re-hashes the key field: SBK gauges count shipped
+/// hashes directly, and keyed operators
+/// ([`crate::engine::operator::Operator::process_batch_hashed`]) probe
+/// with them. `key` names the field the hashes were computed over —
+/// receivers whose key field differs simply ignore the column.
+///
+/// The hashes are `Arc`-shared (fan-out clones copy a pointer) and the
+/// column carries its own `offset` so it stays aligned with
+/// `batch.slice_from(idx)` when a partially processed message is
+/// re-stashed or snapshotted: advancing the batch advances the column.
+#[derive(Clone, Debug)]
+pub struct HashColumn {
+    /// Field index the hashes were computed over.
+    pub key: usize,
+    hashes: Arc<[u64]>,
+    offset: usize,
+}
+
+impl HashColumn {
+    /// Wrap a finished hash column.
+    pub fn new(key: usize, hashes: Arc<[u64]>) -> HashColumn {
+        HashColumn { key, hashes, offset: 0 }
+    }
+
+    /// Drop the first `n` hashes from the view — mirror of
+    /// `TupleBatch::slice_from(n)` on the batch this column rides with.
+    pub fn advance(&mut self, n: usize) {
+        self.offset += n;
+    }
+
+    /// The hashes for view rows `[start, end)`.
+    pub fn range(&self, start: usize, end: usize) -> &[u64] {
+        &self.hashes[self.offset + start..self.offset + end]
+    }
+
+    /// Remaining hashes in the view.
+    pub fn len(&self) -> usize {
+        self.hashes.len() - self.offset
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// A batch of tuples on an edge. `seq` is the per-(sender, receiver)
 /// sequence number used for FIFO/exactly-once accounting and the
 /// fault-tolerance control-replay log (§2.6.2).
 ///
 /// The payload is a shared [`TupleBatch`]: cloning the message (fan-out
 /// edges, snapshots of a partially processed batch) copies an `Arc`,
-/// never the tuples.
+/// never the tuples. `hashes`, when present, is the sender's memoized
+/// key-hash column for the batch (same length as the batch view).
 #[derive(Clone, Debug)]
 pub struct DataMessage {
     pub from: WorkerId,
     pub port: usize,
     pub seq: u64,
     pub batch: TupleBatch,
+    pub hashes: Option<HashColumn>,
 }
 
 /// Everything that travels on the data plane.
@@ -247,11 +296,11 @@ pub struct WorkerStats {
     pub queued: i64,
     pub state_tuples: u64,
     /// Nanoseconds this worker has spent processing tuples (the
-    /// Flink-style busy-time base, §3.7.12), exposed for observation
-    /// harnesses. Folding it into Maestro's per-tuple cost calibration
-    /// is still open (see ROADMAP, "Result-aware elastic region
-    /// scheduling"); today the re-planner feeds back cardinalities and
-    /// materialized bytes only.
+    /// Flink-style busy-time base, §3.7.12). Maestro's re-planner folds
+    /// this into per-operator `tuple_cost` calibration when a region
+    /// completes (`busy_ns / processed`, converted to µs/tuple), so
+    /// later regions are priced from measured cost instead of the
+    /// configured default.
     pub busy_ns: u64,
 }
 

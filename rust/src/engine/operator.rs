@@ -148,6 +148,26 @@ pub trait Operator: Send {
         }
     }
 
+    /// Process a chunk whose sender shipped its memoized key-hash
+    /// column ([`crate::engine::message::HashColumn`]): `hashes[i]` is
+    /// `batch.get(i).get(key).stable_hash()`, already computed by the
+    /// upstream exchange. The default ignores the hashes and delegates
+    /// to [`Operator::process_batch`]; keyed operators (hash-join
+    /// probe, both group-by layers) override to skip re-hashing when
+    /// `key` matches their own key field. Overrides must stay
+    /// observationally identical to `process_batch` — the shipped
+    /// hashes are byte-equal to locally computed ones by construction.
+    fn process_batch_hashed(
+        &mut self,
+        batch: &TupleBatch,
+        _key: usize,
+        _hashes: &[u64],
+        port: usize,
+        out: &mut dyn Emitter,
+    ) {
+        self.process_batch(batch, port, out);
+    }
+
     /// All upstream senders on `port` reached EOF. Blocking operators
     /// (sort, group-by second layer, hash-join build) act here.
     fn finish_port(&mut self, _port: usize, _out: &mut dyn Emitter) {}

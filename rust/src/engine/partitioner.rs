@@ -38,6 +38,13 @@
 //! overlays, `set_route` epochs and `rescale` events. Batches whose
 //! tuples all route to one destination are flagged `single`, letting
 //! the sender ship the shared allocation as a zero-copy slice.
+//!
+//! With the columnar data plane, [`hash_column`] reads the typed key
+//! column directly ([`crate::column::Column::hash_range`], byte-equal
+//! to per-tuple hashing), and the exchange ships the finished column
+//! downstream inside the message
+//! ([`crate::engine::message::HashColumn`]) so receivers reuse it for
+//! SBK gauges and keyed probes instead of re-hashing.
 
 use crate::tuple::{value_cmp, Tuple, TupleBatch, Value};
 use std::collections::HashMap;
@@ -139,6 +146,15 @@ fn range_dest(v: &Value, bounds: &[Value], receivers: usize) -> usize {
 /// sender-maintained receiver gauges.
 pub fn hash_column(batch: &TupleBatch, key: usize, out: &mut Vec<u64>) {
     out.clear();
+    // Columnar fast path: hash the typed key vector in one tight loop
+    // (byte-identical to per-tuple `stable_hash`, see
+    // `Column::hash_range`). Row-only batches keep the per-tuple walk.
+    if let Some(cv) = batch.columns() {
+        if let Some(col) = cv.set.cols.get(key) {
+            col.hash_range(cv.start, cv.end, out);
+            return;
+        }
+    }
     out.reserve(batch.len());
     for t in batch.iter() {
         out.push(t.get(key).stable_hash());

@@ -33,16 +33,21 @@
 //!   [`Partitioner::route_batch`] selection vectors — one stable hash
 //!   per tuple into a memoized per-batch hash column, receiver gauges
 //!   bumped once per destination — and ships broadcast edges and
-//!   single-run batches as clones of one shared allocation);
+//!   single-run batches as clones of one shared allocation; scatter
+//!   buffers are [`ColumnAppender`]s, so re-batched output stays
+//!   columnar, and the memoized hash column travels with each shipped
+//!   batch as a [`HashColumn`] so receivers never re-hash the
+//!   partitioning key);
 //! * state migration send/receive (§3.2.2, §3.5);
 //! * control-replay logging and replay for fault tolerance (§2.6.2);
 //! * first-output timestamps (Maestro first-response-time metric).
 
+use crate::column::{ColumnAppender, ColumnSet};
 use crate::engine::channel::{DataSender, Mailbox, RingRecvError};
 use crate::engine::fault::{LogRecord, ReplayPos, WorkerSnapshot};
 use crate::engine::message::{
-    BreakpointTarget, ControlMessage, DataEvent, DataMessage, LocalPredicate, WorkerEvent,
-    WorkerId, WorkerStats,
+    BreakpointTarget, ControlMessage, DataEvent, DataMessage, HashColumn, LocalPredicate,
+    WorkerEvent, WorkerId, WorkerStats,
 };
 use crate::engine::operator::{Emitter, Operator};
 use crate::engine::partitioner::{hash_column, PartitionScheme, Partitioner, RouteVec};
@@ -51,6 +56,7 @@ use crate::workloads::TupleSource;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One outgoing edge of a worker: partitioner + per-destination senders
@@ -62,7 +68,23 @@ pub struct OutputEdge {
     pub port: usize,
     pub partitioner: Partitioner,
     pub senders: Vec<DataSender>,
-    buffers: Vec<Vec<Tuple>>,
+    /// Per-destination scatter buffers. [`ColumnAppender`]s keep
+    /// re-batched output columnar whenever the emitted batches were
+    /// (bulk column copies / gathers instead of per-tuple clones).
+    buffers: Vec<ColumnAppender>,
+    /// Partitioning hashes of the buffered tuples, aligned with
+    /// `buffers[d]`; shipped with the flushed batch as a
+    /// [`HashColumn`] so the receiver never re-hashes the key.
+    hash_bufs: Vec<Vec<u64>>,
+    /// Whether `hash_bufs[d]` still covers every buffered tuple (the
+    /// per-tuple emit path doesn't carry hashes and clears this).
+    hash_ok: Vec<bool>,
+    /// Key field hashes on this edge are computed over (`None` for
+    /// keyless schemes — no hash column is tracked or shipped).
+    hash_key: Option<usize>,
+    /// Whether the scatter buffers accumulate columnar (mirrors
+    /// `Config::columnar`; `false` pins them to row storage).
+    columnar: bool,
     seqs: Vec<u64>,
 }
 
@@ -82,14 +104,35 @@ impl OutputEdge {
         } else {
             n
         };
+        let hash_key = if partitioner.needs_hashes() {
+            partitioner.key_field()
+        } else {
+            None
+        };
         OutputEdge {
             target_op,
             port,
             partitioner,
             senders,
-            buffers: (0..nbuf).map(|_| Vec::new()).collect(),
+            buffers: (0..nbuf).map(|_| ColumnAppender::new(true)).collect(),
+            hash_bufs: (0..nbuf).map(|_| Vec::new()).collect(),
+            hash_ok: vec![true; nbuf],
+            hash_key,
+            columnar: true,
             seqs: vec![0; n],
         }
+    }
+
+    /// Pin the scatter buffers to the requested layout (builder-style;
+    /// called while the buffers are still empty). `false` = the
+    /// retained row path used when `Config::columnar` is off.
+    pub fn with_columnar(mut self, columnar: bool) -> OutputEdge {
+        if self.columnar != columnar {
+            self.columnar = columnar;
+            let nbuf = self.buffers.len();
+            self.buffers = (0..nbuf).map(|_| ColumnAppender::new(columnar)).collect();
+        }
+        self
     }
 
     fn is_broadcast(&self) -> bool {
@@ -143,6 +186,9 @@ pub struct WorkerContext {
     /// Spawn in the paused state (scale fence: new workers join the
     /// fence and start with everyone else on the closing `Resume`).
     pub start_paused: bool,
+    /// Build columnar batches on the source/produce path and in rebuilt
+    /// scatter buffers ([`Config::columnar`](crate::config::Config)).
+    pub columnar: bool,
 }
 
 /// Why the worker is paused (it can be paused for several reasons at
@@ -182,6 +228,10 @@ struct ExchangeScratch {
     /// Key field the hash column currently holds, for the batch being
     /// emitted (`None` = stale).
     hashes_for: Option<usize>,
+    /// Shared copy of `hashes` built lazily the first time a full-size
+    /// single-run batch ships it as a [`HashColumn`] (one allocation
+    /// per batch no matter how many edges/destinations ship it).
+    hashes_arc: Option<Arc<[u64]>>,
     routes: RouteVec,
 }
 
@@ -201,14 +251,17 @@ struct OutBox {
 }
 
 impl OutBox {
-    /// Send one message carrying `batch` to destination `d` of edge `e`.
-    fn send_msg(&mut self, e: usize, d: usize, batch: TupleBatch) {
+    /// Send one message carrying `batch` (and, when the whole batch was
+    /// hashed on the scatter path, its partitioning [`HashColumn`]) to
+    /// destination `d` of edge `e`.
+    fn send_msg(&mut self, e: usize, d: usize, batch: TupleBatch, hashes: Option<HashColumn>) {
         let edge = &mut self.edges[e];
         let msg = DataMessage {
             from: self.id,
             port: edge.port,
             seq: edge.seqs[d],
             batch,
+            hashes,
         };
         edge.seqs[d] += 1;
         if edge.senders[d].send(DataEvent::Batch(msg)).is_err() {
@@ -227,13 +280,22 @@ impl OutBox {
         if self.edges[e].buffers[d].is_empty() {
             return;
         }
-        // Swap in a preallocated buffer (perf: mem::take resets the
-        // capacity to zero, forcing a realloc ladder every batch).
-        let buf = std::mem::replace(
-            &mut self.edges[e].buffers[d],
-            Vec::with_capacity(self.batch_size),
-        );
-        self.send_msg(e, d, TupleBatch::new(buf));
+        let edge = &mut self.edges[e];
+        let batch = edge.buffers[d].take_batch();
+        // Ship the buffered hash column when it covers the whole batch
+        // (it always does on the batch-at-a-time scatter path; the
+        // per-tuple emit fallback drops it).
+        let hashes = if edge.hash_ok[d] && edge.hash_bufs[d].len() == batch.len() {
+            edge.hash_key.map(|key| {
+                let vals: Arc<[u64]> = std::mem::take(&mut edge.hash_bufs[d]).into();
+                HashColumn::new(key, vals)
+            })
+        } else {
+            edge.hash_bufs[d].clear();
+            None
+        };
+        edge.hash_ok[d] = true;
+        self.send_msg(e, d, batch, hashes);
     }
 
     /// Flush a broadcast edge: wrap the single buffer into one shared
@@ -242,14 +304,25 @@ impl OutBox {
         if self.edges[e].buffers[0].is_empty() {
             return;
         }
-        let buf = std::mem::replace(
-            &mut self.edges[e].buffers[0],
-            Vec::with_capacity(self.batch_size),
-        );
-        let shared = TupleBatch::new(buf);
+        let shared = self.edges[e].buffers[0].take_batch();
         for d in 0..self.edges[e].senders.len() {
-            self.send_msg(e, d, shared.clone());
+            self.send_msg(e, d, shared.clone(), None);
         }
+    }
+
+    /// The emitted batch's hash column as a shippable [`HashColumn`],
+    /// if edge `e` partitions on the key the scratch column was
+    /// computed for. Builds the shared allocation once per batch.
+    fn shipped_hashes(&mut self, e: usize) -> Option<HashColumn> {
+        let key = self.edges[e].hash_key?;
+        if self.scratch.hashes_for != Some(key) {
+            return None;
+        }
+        if self.scratch.hashes_arc.is_none() {
+            self.scratch.hashes_arc = Some(self.scratch.hashes.as_slice().into());
+        }
+        let vals = self.scratch.hashes_arc.as_ref().unwrap().clone();
+        Some(HashColumn::new(key, vals))
     }
 
     /// Flush every buffer of edge `e`.
@@ -351,9 +424,9 @@ impl Emitter for OutBox {
                 // allocation across every destination.
                 if last_edge {
                     let moved = std::mem::replace(&mut t, Tuple { values: Box::new([]) });
-                    self.edges[e].buffers[0].push(moved);
+                    self.edges[e].buffers[0].push_owned(moved);
                 } else {
-                    self.edges[e].buffers[0].push(t.clone());
+                    self.edges[e].buffers[0].push_row(&t);
                 }
                 if self.edges[e].buffers[0].len() >= self.batch_size {
                     self.flush_broadcast(e);
@@ -370,11 +443,16 @@ impl Emitter for OutBox {
                     .gauges
                     .base_received
                     .fetch_add(1, Ordering::Relaxed);
+                // Per-tuple routing already discarded the hash; the
+                // buffered batch can no longer ship a full hash column.
+                if self.edges[e].hash_key.is_some() {
+                    self.edges[e].hash_ok[dest] = false;
+                }
                 if last_edge {
                     let moved = std::mem::replace(&mut t, Tuple { values: Box::new([]) });
-                    self.edges[e].buffers[dest].push(moved);
+                    self.edges[e].buffers[dest].push_owned(moved);
                 } else {
-                    self.edges[e].buffers[dest].push(t.clone());
+                    self.edges[e].buffers[dest].push_row(&t);
                 }
                 if self.edges[e].buffers[dest].len() >= self.batch_size {
                     self.flush_one(e, dest);
@@ -414,6 +492,7 @@ impl Emitter for OutBox {
         }
         // New batch: whatever hash column the scratch holds is stale.
         self.scratch.hashes_for = None;
+        self.scratch.hashes_arc = None;
         for e in 0..self.edges.len() {
             if self.edges[e].is_broadcast() {
                 if n >= self.batch_size {
@@ -422,25 +501,30 @@ impl Emitter for OutBox {
                     // payload — zero tuple copies.
                     self.flush_broadcast(e);
                     for d in 0..self.edges[e].senders.len() {
-                        self.send_msg(e, d, batch.clone());
+                        self.send_msg(e, d, batch.clone(), None);
                     }
                 } else {
                     // Sub-batch chunk: buffer so message sizing matches
                     // the configured batch_size; the flush still shares
                     // one allocation across destinations.
-                    self.edges[e].buffers[0].extend_from_slice(batch.as_slice());
+                    self.edges[e].buffers[0].append_batch(&batch);
                     if self.edges[e].buffers[0].len() >= self.batch_size {
                         self.flush_broadcast(e);
                     }
                 }
                 continue;
             }
-            // Hash column: once per batch per key field.
+            // Hash column: once per batch per key field. A message whose
+            // sender memoized its hashes carries them pre-computed
+            // (`DataMessage::hashes`); this covers freshly produced
+            // output. Columnar batches hash with the typed
+            // `Column::hash_range` kernels, rows fall back per-tuple.
             if self.edges[e].partitioner.needs_hashes() {
                 let key = self.edges[e].partitioner.key_field().unwrap_or(0);
                 if self.scratch.hashes_for != Some(key) {
                     hash_column(&batch, key, &mut self.scratch.hashes);
                     self.scratch.hashes_for = Some(key);
+                    self.scratch.hashes_arc = None;
                 }
             }
             let mut routes = std::mem::take(&mut self.scratch.routes);
@@ -466,9 +550,22 @@ impl Emitter for OutBox {
                     .fetch_add(n as i64, Ordering::Relaxed);
                 if n >= self.batch_size {
                     self.flush_one(e, d);
-                    self.send_msg(e, d, batch.clone());
+                    let hashes = self.shipped_hashes(e);
+                    self.send_msg(e, d, batch.clone(), hashes);
                 } else {
-                    self.edges[e].buffers[d].extend_from_slice(batch.as_slice());
+                    let hashes_for = self.scratch.hashes_for;
+                    let edge = &mut self.edges[e];
+                    if let Some(key) = edge.hash_key {
+                        if hashes_for == Some(key)
+                            && edge.hash_ok[d]
+                            && edge.hash_bufs[d].len() == edge.buffers[d].len()
+                        {
+                            edge.hash_bufs[d].extend_from_slice(&self.scratch.hashes);
+                        } else {
+                            edge.hash_ok[d] = false;
+                        }
+                    }
+                    edge.buffers[d].append_batch(&batch);
                     if self.edges[e].buffers[d].len() >= self.batch_size {
                         self.flush_one(e, d);
                     }
@@ -490,13 +587,27 @@ impl Emitter for OutBox {
                     // emitted batch scatters many tuples to `d`.
                     let mut start = 0usize;
                     while start < sel_len {
-                        let buf = &mut self.edges[e].buffers[d];
-                        let room = self.batch_size.saturating_sub(buf.len()).max(1);
+                        let hashes_for = self.scratch.hashes_for;
+                        let edge = &mut self.edges[e];
+                        let room =
+                            self.batch_size.saturating_sub(edge.buffers[d].len()).max(1);
                         let end = (start + room).min(sel_len);
-                        buf.reserve(end - start);
-                        for &i in &routes.sel[d][start..end] {
-                            buf.push(batch.get(i as usize).clone());
+                        let sel = &routes.sel[d][start..end];
+                        // Gather the matching hash values alongside the
+                        // tuples so the flushed batch ships them.
+                        if let Some(key) = edge.hash_key {
+                            if hashes_for == Some(key)
+                                && edge.hash_ok[d]
+                                && edge.hash_bufs[d].len() == edge.buffers[d].len()
+                            {
+                                let hs = &self.scratch.hashes;
+                                edge.hash_bufs[d]
+                                    .extend(sel.iter().map(|&i| hs[i as usize]));
+                            } else {
+                                edge.hash_ok[d] = false;
+                            }
                         }
+                        edge.buffers[d].append_gather(&batch, sel);
                         start = end;
                         if self.edges[e].buffers[d].len() >= self.batch_size {
                             self.flush_one(e, d);
@@ -576,6 +687,10 @@ struct Worker {
     /// Re-evaluate port completion once input is drained (set when a
     /// scale event changed `upstream_counts` or seeded `eofs_seen`).
     recheck_ports: bool,
+    /// Columnar data plane on: sources transpose generated chunks into
+    /// [`ColumnSet`]-backed batches and rebuilt edges keep columnar
+    /// scatter buffers.
+    columnar: bool,
     busy_ns: u64,
     dead: bool,
 }
@@ -630,6 +745,7 @@ impl Worker {
             marker_counts: HashMap::new(),
             local_key_counts: HashMap::new(),
             recheck_ports: false,
+            columnar: ctx.columnar,
             busy_ns: 0,
             dead: false,
         };
@@ -819,6 +935,11 @@ impl Worker {
                     if let Some((msg, idx)) = &self.current {
                         let mut m = msg.clone();
                         m.batch = m.batch.slice_from(*idx);
+                        // Keep the shipped hash column aligned with the
+                        // remainder view.
+                        if let Some(hc) = &mut m.hashes {
+                            hc.advance(*idx);
+                        }
                         pending.push(DataEvent::Batch(m));
                     }
                     pending.extend(self.stash.iter().cloned());
@@ -834,6 +955,9 @@ impl Worker {
                     if let Some((msg, idx)) = self.current.take() {
                         let mut m = msg;
                         m.batch = m.batch.slice_from(idx);
+                        if let Some(hc) = &mut m.hashes {
+                            hc.advance(idx);
+                        }
                         pending.push(DataEvent::Batch(m));
                     }
                     pending.extend(self.stash.drain(..));
@@ -865,6 +989,7 @@ impl Worker {
                             port,
                             seq: 0,
                             batch: tuples.into(),
+                            hashes: None,
                         }));
                     }
                     let state = self.op.extract_state(None, false);
@@ -922,7 +1047,8 @@ impl Worker {
                         port,
                         Partitioner::new(scheme, receivers, self.id.idx),
                         senders.clone(),
-                    );
+                    )
+                    .with_columnar(self.columnar);
                 }
             }
             ControlMessage::UpdateUpstreamCount { port, count } => {
@@ -982,8 +1108,11 @@ impl Worker {
         if let Some((msg, idx)) = &self.current {
             let mut m = msg.clone();
             // Zero-copy: the remainder is a suffix view of the shared
-            // batch.
+            // batch (the shipped hash column advances with it).
             m.batch = m.batch.slice_from(*idx);
+            if let Some(hc) = &mut m.hashes {
+                hc.advance(*idx);
+            }
             resume_offset = *idx;
             msg_count = msg_count.saturating_sub(1);
             pending.push(DataEvent::Batch(m));
@@ -1137,18 +1266,40 @@ impl Worker {
             // Optional per-key workload distribution (enabled only when
             // SBK-style mitigation needs it): accumulate into the
             // worker-local map — no lock on the hot path; merged into
-            // the shared gauge once per batch.
+            // the shared gauge once per batch. A shipped hash column
+            // over the tracked field supplies the key hashes directly
+            // (the sender already computed them for partitioning).
             if self.mailbox.gauges.track_keys.load(Ordering::Relaxed) {
                 if let Some(Some(f)) = self.port_key_fields.get(port) {
-                    for t in chunk.iter() {
-                        *self
-                            .local_key_counts
-                            .entry(t.get(*f).stable_hash())
-                            .or_insert(0) += 1;
+                    match &msg.hashes {
+                        Some(hc) if hc.key == *f => {
+                            for &h in hc.range(idx, end) {
+                                *self.local_key_counts.entry(h).or_insert(0) += 1;
+                            }
+                        }
+                        _ => {
+                            for t in chunk.iter() {
+                                *self
+                                    .local_key_counts
+                                    .entry(t.get(*f).stable_hash())
+                                    .or_insert(0) += 1;
+                            }
+                        }
                     }
                 }
             }
-            self.op.process_batch(&chunk, port, &mut self.out);
+            // Keyed operators (hash join probe, group-by) reuse the
+            // shipped partitioning hashes instead of re-hashing.
+            match &msg.hashes {
+                Some(hc) => self.op.process_batch_hashed(
+                    &chunk,
+                    hc.key,
+                    hc.range(idx, end),
+                    port,
+                    &mut self.out,
+                ),
+                None => self.op.process_batch(&chunk, port, &mut self.out),
+            }
             let n = (end - idx) as u64;
             idx = end;
             self.processed += n;
@@ -1395,7 +1546,20 @@ impl Worker {
             }
             if !rows.is_empty() {
                 let n = rows.len();
-                let chunk = TupleBatch::new(rows);
+                // Columnar plane: transpose the generated chunk once at
+                // the source; every downstream hop (operators, exchange
+                // hashing, scatter buffers) then works column-at-a-time
+                // on shared views of it. Single-tuple chunks (exact
+                // control stepping) stay row-major — the transpose
+                // would cost more than it saves.
+                let chunk = if self.columnar && n > 1 {
+                    match ColumnSet::from_rows(&rows) {
+                        Some(set) => TupleBatch::from_columns(set),
+                        None => TupleBatch::new(rows),
+                    }
+                } else {
+                    TupleBatch::new(rows)
+                };
                 self.op.process_batch(&chunk, 0, &mut self.out);
                 self.processed += n as u64;
                 self.mailbox
@@ -1620,6 +1784,7 @@ mod tests {
             scale_epoch: 0,
             initial_eofs: None,
             start_paused: false,
+            columnar: true,
         };
         let h = std::thread::spawn(move || run_worker(ctx, Box::new(Identity)));
         (ctrl, in_tx, ev_rx, down_rx.data, h)
@@ -1631,6 +1796,7 @@ mod tests {
             port: 0,
             seq,
             batch: tuples.into(),
+            hashes: None,
         }))
         .unwrap();
     }
@@ -1892,6 +2058,7 @@ mod tests {
             scale_epoch: 0,
             initial_eofs: None,
             start_paused: false,
+            columnar: true,
         };
         let h = std::thread::spawn(move || {
             run_worker(ctx, Box::new(crate::engine::dag::PassThrough))
@@ -1920,6 +2087,81 @@ mod tests {
                 && crate::tuple::TupleBatch::ptr_eq(&received[1], &received[2]),
             "broadcast destinations did not share one allocation"
         );
+        ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn hash_partitioned_edges_ship_the_hash_column() {
+        // A hash-partitioned edge scatters batch-at-a-time; every
+        // shipped message must carry the memoized hash column, and its
+        // values must equal the per-tuple stable hashes of the key.
+        let (in_tx, in_mb) = mailbox(64);
+        let mut down_txs = Vec::new();
+        let mut down_rxs = Vec::new();
+        for _ in 0..2 {
+            let (tx, rx) = mailbox(64);
+            down_txs.push(tx);
+            down_rxs.push(rx);
+        }
+        let (ev_tx, _ev_rx) = channel();
+        let ctrl = in_mb.control.clone();
+        let edge = OutputEdge::new(
+            1,
+            0,
+            Partitioner::new(PartitionScheme::Hash { key: 0 }, 2, 0),
+            down_txs,
+        );
+        let ctx = WorkerContext {
+            id: WorkerId::new(0, 0),
+            mailbox: in_mb,
+            event_tx: ev_tx,
+            outputs: vec![edge],
+            upstream_counts: vec![1],
+            peers: vec![],
+            port_key_fields: vec![None],
+            source: None,
+            source_autostart: true,
+            batch_size: 4,
+            ctrl_check_interval: 32,
+            ft_log: false,
+            snapshot: None,
+            scatter_merge: false,
+            scale_epoch: 0,
+            initial_eofs: None,
+            start_paused: false,
+            columnar: true,
+        };
+        let h = std::thread::spawn(move || {
+            run_worker(ctx, Box::new(crate::engine::dag::PassThrough))
+        });
+        send_batch(&in_tx, 0, (0..32).map(tuple).collect());
+        in_tx
+            .send(DataEvent::End { from: WorkerId::new(9, 0), port: 0 })
+            .unwrap();
+        let mut seen = 0usize;
+        for rx in &down_rxs {
+            loop {
+                match rx.data.recv_timeout(Duration::from_secs(5)).unwrap() {
+                    DataEvent::Batch(b) => {
+                        let hc = b.hashes.as_ref().expect("batch shipped without hashes");
+                        assert_eq!(hc.key, 0);
+                        assert_eq!(hc.len(), b.batch.len());
+                        for (i, t) in b.batch.iter().enumerate() {
+                            assert_eq!(
+                                hc.range(i, i + 1)[0],
+                                t.get(0).stable_hash(),
+                                "shipped hash differs from the key's stable hash"
+                            );
+                        }
+                        seen += b.batch.len();
+                    }
+                    DataEvent::End { .. } => break,
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(seen, 32);
         ctrl.send(ControlMessage::Die, Duration::ZERO);
         h.join().unwrap();
     }

@@ -12,14 +12,20 @@
 //!   pause/resume, operator investigation/modification at runtime,
 //!   local & global conditional breakpoints, and fault tolerance via
 //!   checkpoints + a control-replay log. The data plane is
-//!   **batch-at-a-time**: tuples travel in shared
-//!   [`tuple::TupleBatch`]es (`Arc`-backed, zero-copy on slice and
-//!   fan-out), operators process chunks through
-//!   [`engine::Operator::process_batch`], and the worker re-checks the
-//!   control flag between chunks of `ctrl_check_interval` tuples — so
-//!   the paper's §2.4 control semantics (sub-second pause, exact
-//!   breakpoints, replayable positions) are preserved while per-tuple
-//!   dispatch, routing and clone costs amortize across the batch.
+//!   **batch-at-a-time and columnar**: tuples travel in shared
+//!   [`tuple::TupleBatch`]es (zero-copy on slice and fan-out) whose
+//!   storage is a struct-of-arrays [`column::ColumnSet`] of typed
+//!   vectors — hashing, predicates, projections and scatter gathers
+//!   run column-at-a-time over contiguous `i64`/`f64`/string vectors
+//!   ([`column`]), with a cached row view materialized lazily for
+//!   unconverted paths. Operators process chunks through
+//!   [`engine::Operator::process_batch`], the exchange ships the
+//!   sender's memoized hash column alongside each batch so receivers
+//!   never re-hash, and the worker re-checks the control flag between
+//!   chunks of `ctrl_check_interval` tuples — so the paper's §2.4
+//!   control semantics (sub-second pause, exact breakpoints,
+//!   replayable positions) are preserved while per-tuple dispatch,
+//!   routing and clone costs amortize across the batch.
 //! * [`reshape`] — **Reshape** (Ch. 3): adaptive, result-aware
 //!   partitioning-skew mitigation built on the engine's control messages.
 //! * [`maestro`] — **Maestro** (Ch. 4): result-aware, **elastic**
@@ -44,6 +50,7 @@
 
 pub mod util;
 pub mod tuple;
+pub mod column;
 pub mod config;
 pub mod workloads;
 pub mod engine;

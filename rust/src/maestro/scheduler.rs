@@ -18,11 +18,13 @@
 //!    under the budget; the workflow deploys at the assigned counts.
 //! 2. **Observe** — whenever an ancestor region completes, the
 //!    scheduler reads the execution's per-worker statistics (exact
-//!    produced counts) and every finished [`MatStore`]'s row count and
-//!    tuple width, and pins them into the cost model
+//!    produced counts and busy time) and every finished [`MatStore`]'s
+//!    row count and tuple width, and pins them into the cost model
 //!    ([`CostParams::pinned_rows`]) — actual cardinalities replace
-//!    plan-time guesses. (Busy time is exposed in `WorkerStats` but not
-//!    yet folded into per-tuple cost calibration.)
+//!    plan-time guesses. Observed busy time is folded into per-operator
+//!    cost calibration (`busy_ns / processed`, in µs/tuple, into
+//!    [`CostParams::tuple_cost`]), so later regions are priced from
+//!    measured per-tuple cost instead of the configured default.
 //! 3. **Re-plan** — the remaining (not-yet-activated) regions' worker
 //!    counts are re-assigned under the same budget with the corrected
 //!    model. Deltas are applied through
@@ -70,6 +72,9 @@ pub struct ObservedOp {
     pub observed_rows: f64,
     /// `max(est/obs, obs/est)` — see [`q_error`].
     pub q_error: f64,
+    /// Measured per-tuple cost in µs (`busy_ns / processed / 1000`)
+    /// folded into the cost model, when the operator processed anything.
+    pub tuple_cost_us: Option<f64>,
 }
 
 /// One elastic-scaling decision taken by a re-plan.
@@ -376,8 +381,12 @@ impl MaestroScheduler {
         let mw = &m.workflow;
         // --- observe -----------------------------------------------------
         let mut produced: HashMap<usize, u64> = HashMap::new();
+        let mut busy: HashMap<usize, (u64, u64)> = HashMap::new(); // (busy_ns, processed)
         for (id, st) in exec.stats() {
             *produced.entry(id.op).or_insert(0) += st.produced;
+            let b = busy.entry(id.op).or_insert((0, 0));
+            b.0 += st.busy_ns;
+            b.1 += st.processed;
         }
         let writer_ops: HashSet<usize> = m.writers.iter().copied().collect();
         let mut observed = Vec::new();
@@ -398,11 +407,23 @@ impl MaestroScheduler {
                 if mw.ops[op].is_source {
                     cost.source_rows.insert(op, rows);
                 }
+                // Calibrate per-tuple cost from observed busy time
+                // (µs/tuple), replacing the configured default for this
+                // operator in every later re-plan.
+                let tuple_cost_us = match busy.get(&op) {
+                    Some(&(ns, processed)) if processed > 0 => {
+                        let us = ns as f64 / processed as f64 / 1000.0;
+                        cost.tuple_cost.insert(op, us);
+                        Some(us)
+                    }
+                    _ => None,
+                };
                 observed.push(ObservedOp {
                     op,
                     estimated_rows: initial_rows[op],
                     observed_rows: rows,
                     q_error: q_error(initial_rows[op], rows),
+                    tuple_cost_us,
                 });
             }
         }

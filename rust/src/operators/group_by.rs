@@ -108,6 +108,52 @@ impl GroupByPartial {
             .or_insert_with(|| (key.clone(), init_acc(self.kind)));
         accumulate(self.kind, &mut entry.1, v);
     }
+
+    /// Row absorb with a pre-computed group hash (shipped by the
+    /// exchange); skips `stable_hash` but is otherwise identical.
+    #[inline]
+    fn absorb_hashed(&mut self, t: &Tuple, h: u64) {
+        let v = t.get(self.value_field).as_float().unwrap_or(0.0);
+        let kind = self.kind;
+        let kf = self.key_field;
+        let entry = self
+            .groups
+            .entry(h)
+            .or_insert_with(|| (t.get(kf).clone(), init_acc(kind)));
+        accumulate(kind, &mut entry.1, v);
+    }
+
+    /// Column-at-a-time absorb: hash the key column (or reuse shipped
+    /// hashes), coerce the value column to `f64` in one pass, then run
+    /// the accumulator loop over flat slices. Returns `false` when the
+    /// batch has no columnar layout (caller falls back to rows).
+    fn absorb_columnar(&mut self, batch: &TupleBatch, hashes: Option<&[u64]>) -> bool {
+        let Some(cv) = batch.columns() else { return false };
+        let (Some(key_col), Some(val_col)) =
+            (cv.set.cols.get(self.key_field), cv.set.cols.get(self.value_field))
+        else {
+            return false;
+        };
+        let mut hbuf = Vec::new();
+        let hs: &[u64] = match hashes {
+            Some(hs) => hs,
+            None => {
+                key_col.hash_range(cv.start, cv.end, &mut hbuf);
+                &hbuf
+            }
+        };
+        let mut vbuf = Vec::new();
+        val_col.float_or_zero_range(cv.start, cv.end, &mut vbuf);
+        let kind = self.kind;
+        for (i, (&h, &v)) in hs.iter().zip(vbuf.iter()).enumerate() {
+            let entry = self
+                .groups
+                .entry(h)
+                .or_insert_with(|| (key_col.value_at(cv.start + i), init_acc(kind)));
+            accumulate(kind, &mut entry.1, v);
+        }
+        true
+    }
 }
 
 impl Operator for GroupByPartial {
@@ -123,17 +169,50 @@ impl Operator for GroupByPartial {
     }
 
     /// Pre-aggregation reads tuples straight out of the shared batch —
-    /// no per-tuple clone, one dispatch per chunk. The artificial cost
-    /// sleeps once per chunk (chunk length × per-tuple cost), keeping
-    /// pause latency bounded by one chunk.
+    /// no per-tuple clone, one dispatch per chunk. Columnar batches
+    /// take the vectorized absorb (typed key hashing + one-pass float
+    /// coercion); row batches keep the per-tuple loop. The artificial
+    /// cost sleeps once per chunk (chunk length × per-tuple cost),
+    /// keeping pause latency bounded by one chunk.
     fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
         if self.cost_ns > 0 && !batch.is_empty() {
             std::thread::sleep(std::time::Duration::from_nanos(
                 self.cost_ns * batch.len() as u64,
             ));
         }
+        if self.absorb_columnar(batch, None) {
+            return;
+        }
         for t in batch.iter() {
             self.absorb(t);
+        }
+    }
+
+    /// Shipped-hash fast path: when the exchange partitioned on this
+    /// operator's group key, the shipped column *is* the group hash —
+    /// skip re-hashing entirely.
+    fn process_batch_hashed(
+        &mut self,
+        batch: &TupleBatch,
+        key: usize,
+        hashes: &[u64],
+        port: usize,
+        out: &mut dyn Emitter,
+    ) {
+        if key != self.key_field {
+            self.process_batch(batch, port, out);
+            return;
+        }
+        if self.cost_ns > 0 && !batch.is_empty() {
+            std::thread::sleep(std::time::Duration::from_nanos(
+                self.cost_ns * batch.len() as u64,
+            ));
+        }
+        if self.absorb_columnar(batch, Some(hashes)) {
+            return;
+        }
+        for (t, &h) in batch.iter().zip(hashes.iter()) {
+            self.absorb_hashed(t, h);
         }
     }
 
@@ -243,8 +322,14 @@ impl GroupByFinal {
 
     #[inline]
     fn absorb(&mut self, t: &Tuple) {
-        let key = t.get(0);
-        let h = key.stable_hash();
+        let h = t.get(0).stable_hash();
+        self.absorb_hashed(t, h);
+    }
+
+    /// Combine one `(key, partial...)` row under a pre-computed group
+    /// hash (shipped by the hash exchange or derived locally).
+    #[inline]
+    fn absorb_hashed(&mut self, t: &Tuple, h: u64) {
         let partial: Vec<f64> = (1..t.arity())
             .map(|i| t.get(i).as_float().unwrap_or(0.0))
             .collect();
@@ -253,9 +338,48 @@ impl GroupByFinal {
                 combine(self.kind, &mut e.get_mut().1, &partial);
             }
             std::collections::hash_map::Entry::Vacant(e) => {
-                e.insert((key.clone(), partial));
+                e.insert((t.get(0).clone(), partial));
             }
         }
+    }
+
+    /// Column-at-a-time combine: hash the key column once (or reuse
+    /// shipped hashes) and coerce every partial column to `f64` in one
+    /// pass each, then merge row-wise over flat slices.
+    fn absorb_columnar(&mut self, batch: &TupleBatch, hashes: Option<&[u64]>) -> bool {
+        let Some(cv) = batch.columns() else { return false };
+        let Some(key_col) = cv.set.cols.first() else { return false };
+        let arity = cv.set.arity();
+        if arity < 2 {
+            return false;
+        }
+        let mut hbuf = Vec::new();
+        let hs: &[u64] = match hashes {
+            Some(hs) => hs,
+            None => {
+                key_col.hash_range(cv.start, cv.end, &mut hbuf);
+                &hbuf
+            }
+        };
+        let mut part_cols: Vec<Vec<f64>> = Vec::with_capacity(arity - 1);
+        for c in &cv.set.cols[1..] {
+            let mut v = Vec::new();
+            c.float_or_zero_range(cv.start, cv.end, &mut v);
+            part_cols.push(v);
+        }
+        let kind = self.kind;
+        for (i, &h) in hs.iter().enumerate() {
+            let partial: Vec<f64> = part_cols.iter().map(|c| c[i]).collect();
+            match self.groups.entry(h) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    combine(kind, &mut e.get_mut().1, &partial);
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert((key_col.value_at(cv.start + i), partial));
+                }
+            }
+        }
+        true
     }
 }
 
@@ -273,8 +397,34 @@ impl Operator for GroupByFinal {
     }
 
     fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
+        if self.absorb_columnar(batch, None) {
+            return;
+        }
         for t in batch.iter() {
             self.absorb(t);
+        }
+    }
+
+    /// Shipped-hash fast path: the final layer is hash-partitioned on
+    /// field 0 (the group key), so the exchange's shipped column is
+    /// byte-equal to the group hash — reuse it verbatim.
+    fn process_batch_hashed(
+        &mut self,
+        batch: &TupleBatch,
+        key: usize,
+        hashes: &[u64],
+        port: usize,
+        out: &mut dyn Emitter,
+    ) {
+        if key != 0 {
+            self.process_batch(batch, port, out);
+            return;
+        }
+        if self.absorb_columnar(batch, Some(hashes)) {
+            return;
+        }
+        for (t, &h) in batch.iter().zip(hashes.iter()) {
+            self.absorb_hashed(t, h);
         }
     }
 
@@ -498,6 +648,73 @@ mod tests {
         per.finish(&mut oa);
         batched.finish(&mut ob);
         assert_eq!(oa.0, ob.0);
+    }
+
+    #[test]
+    fn columnar_and_shipped_hash_paths_match_per_tuple() {
+        let rows: Vec<Tuple> = (0..60).map(|i| t2(i % 7, i as f64 * 0.5)).collect();
+        let columnar_batch = TupleBatch::from_columns(
+            crate::column::ColumnSet::from_rows(&rows).expect("uniform rows"),
+        );
+        let hashes: Vec<u64> = rows.iter().map(|t| t.get(0).stable_hash()).collect();
+        let mut sink = VecEmitter::default();
+
+        // Per-tuple reference for the partial layer.
+        let mut reference = GroupByPartial::new(0, 1, AggKind::Avg);
+        for r in &rows {
+            reference.process(r.clone(), 0, &mut sink);
+        }
+        // Columnar absorb.
+        let mut col = GroupByPartial::new(0, 1, AggKind::Avg);
+        col.process_batch(&columnar_batch, 0, &mut sink);
+        // Shipped-hash absorb (exchange partitioned on the group key).
+        let mut shipped = GroupByPartial::new(0, 1, AggKind::Avg);
+        shipped.process_batch_hashed(&columnar_batch, 0, &hashes, 0, &mut sink);
+        // Wrong shipped key must fall back to local hashing, not misuse
+        // the foreign column.
+        let mut wrong_key = GroupByPartial::new(0, 1, AggKind::Avg);
+        wrong_key.process_batch_hashed(&columnar_batch, 1, &hashes, 0, &mut sink);
+
+        let (mut o1, mut o2, mut o3, mut o4) = (
+            VecEmitter::default(),
+            VecEmitter::default(),
+            VecEmitter::default(),
+            VecEmitter::default(),
+        );
+        reference.finish(&mut o1);
+        col.finish(&mut o2);
+        shipped.finish(&mut o3);
+        wrong_key.finish(&mut o4);
+        assert_eq!(o1.0, o2.0);
+        assert_eq!(o1.0, o3.0);
+        assert_eq!(o1.0, o4.0);
+
+        // Final layer: feed the partials through per-tuple vs columnar
+        // vs shipped-hash combine and compare the finished output.
+        let partials = o1.0;
+        let part_hashes: Vec<u64> =
+            partials.iter().map(|t| t.get(0).stable_hash()).collect();
+        let part_batch = TupleBatch::from_columns(
+            crate::column::ColumnSet::from_rows(&partials).expect("uniform rows"),
+        );
+        let mut f_ref = GroupByFinal::new(AggKind::Avg);
+        for t in &partials {
+            f_ref.process(t.clone(), 0, &mut sink);
+        }
+        let mut f_col = GroupByFinal::new(AggKind::Avg);
+        f_col.process_batch(&part_batch, 0, &mut sink);
+        let mut f_shipped = GroupByFinal::new(AggKind::Avg);
+        f_shipped.process_batch_hashed(&part_batch, 0, &part_hashes, 0, &mut sink);
+        let (mut fo1, mut fo2, mut fo3) = (
+            VecEmitter::default(),
+            VecEmitter::default(),
+            VecEmitter::default(),
+        );
+        f_ref.finish(&mut fo1);
+        f_col.finish(&mut fo2);
+        f_shipped.finish(&mut fo3);
+        assert_eq!(fo1.0, fo2.0);
+        assert_eq!(fo1.0, fo3.0);
     }
 
     #[test]

@@ -86,6 +86,40 @@ impl HashJoin {
             }
         }
     }
+
+    /// Probe a whole batch off a precomputed hash column (shipped by
+    /// the sender or hashed here with the typed column kernel). Rows
+    /// materialize lazily: a miss never touches the row view, so a
+    /// selective probe of a columnar batch stays column-only.
+    fn probe_hashed(&self, batch: &TupleBatch, hashes: &[u64], out: &mut dyn Emitter) {
+        for (i, &h) in hashes.iter().enumerate() {
+            if let Some(matches) = self.table.get(&h) {
+                let t = batch.get(i);
+                for b in matches {
+                    out.emit(b.concat(t));
+                }
+            }
+        }
+    }
+
+    /// Bulk build insert off a precomputed hash column.
+    fn build_hashed(&mut self, batch: &TupleBatch, hashes: &[u64]) {
+        for (i, &h) in hashes.iter().enumerate() {
+            self.table.entry(h).or_default().push(batch.get(i).clone());
+        }
+        self.tuples_in_state += batch.len();
+    }
+
+    /// Hash the key column of a columnar batch with the typed
+    /// [`crate::column::Column::hash_range`] kernel. `None` for
+    /// row-major batches or out-of-range fields.
+    fn column_hashes(batch: &TupleBatch, field: usize) -> Option<Vec<u64>> {
+        let cv = batch.columns()?;
+        let col = cv.set.cols.get(field)?;
+        let mut hashes = Vec::new();
+        col.hash_range(cv.start, cv.end, &mut hashes);
+        Some(hashes)
+    }
 }
 
 impl Operator for HashJoin {
@@ -127,21 +161,58 @@ impl Operator for HashJoin {
 
     /// Batched probe: once the build side is complete, probe tuples are
     /// read straight out of the shared batch — no per-tuple clone, one
-    /// spin covering the whole chunk's modeled cost. Build input and
-    /// pre-build-EOF probes fall back to the per-tuple path (they take
-    /// ownership / buffer).
+    /// spin covering the whole chunk's modeled cost. Columnar batches
+    /// hash the key column with the typed kernel and only materialize
+    /// rows on a match. Build input and pre-build-EOF probes fall back
+    /// to the per-tuple path (they take ownership / buffer).
     fn process_batch(&mut self, batch: &TupleBatch, port: usize, out: &mut dyn Emitter) {
         if port == PROBE && self.build_done {
             if self.probe_cost_ns > 0 {
                 busy_spin(self.probe_cost_ns * batch.len() as u64);
+            }
+            if let Some(hashes) = Self::column_hashes(batch, self.probe_key) {
+                self.probe_hashed(batch, &hashes, out);
+                return;
             }
             for t in batch.iter() {
                 self.probe_one(t, out);
             }
             return;
         }
+        if port == BUILD {
+            if let Some(hashes) = Self::column_hashes(batch, self.build_key) {
+                self.build_hashed(batch, &hashes);
+                return;
+            }
+        }
         for t in batch.iter() {
             self.process(t.clone(), port, out);
+        }
+    }
+
+    /// Shipped-hash fast path: the exchange already hashed the
+    /// partitioning key of every tuple in the batch; when that key is
+    /// this side's join key, build inserts and probe lookups reuse the
+    /// column verbatim — zero hashing on this worker.
+    fn process_batch_hashed(
+        &mut self,
+        batch: &TupleBatch,
+        key: usize,
+        hashes: &[u64],
+        port: usize,
+        out: &mut dyn Emitter,
+    ) {
+        match port {
+            PROBE if self.build_done && key == self.probe_key => {
+                if self.probe_cost_ns > 0 {
+                    busy_spin(self.probe_cost_ns * batch.len() as u64);
+                }
+                self.probe_hashed(batch, hashes, out);
+            }
+            BUILD if key == self.build_key => {
+                self.build_hashed(batch, hashes);
+            }
+            _ => self.process_batch(batch, port, out),
         }
     }
 
@@ -367,6 +438,52 @@ mod tests {
         j.process(kv(1, "b"), BUILD, &mut out);
         j.finish_port(BUILD, &mut out);
         assert_eq!(out.0.len(), 1, "buffered probe replayed at build EOF");
+    }
+
+    #[test]
+    fn columnar_and_shipped_hash_probe_match_per_tuple() {
+        let build: Vec<Tuple> = (0..5).map(|k| kv(k, "b")).collect();
+        let probe_rows: Vec<Tuple> = (0..20).map(|i| kv(i % 7, "p")).collect();
+        // Per-tuple reference.
+        let mut a = HashJoin::new(0, 0);
+        let mut out_a = VecEmitter::default();
+        for b in &build {
+            a.process(b.clone(), BUILD, &mut out_a);
+        }
+        a.finish_port(BUILD, &mut out_a);
+        for p in &probe_rows {
+            a.process(p.clone(), PROBE, &mut out_a);
+        }
+        // Columnar build + probe.
+        let col = |rows: &[Tuple]| {
+            TupleBatch::from_columns(
+                crate::column::ColumnSet::from_rows(rows).expect("uniform rows"),
+            )
+        };
+        let mut b_join = HashJoin::new(0, 0);
+        let mut out_b = VecEmitter::default();
+        b_join.process_batch(&col(&build), BUILD, &mut out_b);
+        b_join.finish_port(BUILD, &mut out_b);
+        b_join.process_batch(&col(&probe_rows), PROBE, &mut out_b);
+        assert_eq!(out_a.0, out_b.0);
+        // Shipped-hash build + probe (hashes as the exchange computes
+        // them: stable_hash of the key field).
+        let hashes = |rows: &[Tuple]| -> Vec<u64> {
+            rows.iter().map(|t| t.get(0).stable_hash()).collect()
+        };
+        let mut c_join = HashJoin::new(0, 0);
+        let mut out_c = VecEmitter::default();
+        let bb: TupleBatch = build.clone().into();
+        c_join.process_batch_hashed(&bb, 0, &hashes(&build), BUILD, &mut out_c);
+        c_join.finish_port(BUILD, &mut out_c);
+        let pb: TupleBatch = probe_rows.clone().into();
+        c_join.process_batch_hashed(&pb, 0, &hashes(&probe_rows), PROBE, &mut out_c);
+        assert_eq!(out_a.0, out_c.0);
+        // A shipped column for a *different* key must not be trusted.
+        let mut d_join = HashJoin::new(1, 1);
+        let mut out_d = VecEmitter::default();
+        d_join.process_batch_hashed(&bb, 0, &hashes(&build), BUILD, &mut out_d);
+        assert_eq!(d_join.state_size(), build.len(), "fell back to key-1 build");
     }
 
     #[test]

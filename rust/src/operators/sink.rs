@@ -146,6 +146,40 @@ impl CountByKeySink {
             }
         }
     }
+
+    /// Columnar count: run the typed `i64` slice into a local
+    /// histogram, then publish one atomic add per touched key instead
+    /// of one per tuple. Returns `false` when the key column isn't a
+    /// typed Int vector (caller falls back to the row loop).
+    fn count_keys_columnar(&self, batch: &TupleBatch) -> bool {
+        let Some(cv) = batch.columns() else { return false };
+        let Some(col) = cv.set.cols.get(self.key_field) else { return false };
+        let Some((vals, validity)) = col.int_vals() else { return false };
+        let n_keys = self.handle.counts.len();
+        let mut local = vec![0u64; n_keys];
+        match validity {
+            None => {
+                for &k in &vals[cv.start..cv.end] {
+                    if k >= 0 && (k as usize) < n_keys {
+                        local[k as usize] += 1;
+                    }
+                }
+            }
+            Some(m) => {
+                for (i, &k) in vals[cv.start..cv.end].iter().enumerate() {
+                    if m[cv.start + i] && k >= 0 && (k as usize) < n_keys {
+                        local[k as usize] += 1;
+                    }
+                }
+            }
+        }
+        for (c, &n) in self.handle.counts.iter().zip(local.iter()) {
+            if n > 0 {
+                c.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        true
+    }
 }
 
 impl Operator for CountByKeySink {
@@ -173,8 +207,10 @@ impl Operator for CountByKeySink {
         self.handle
             .bytes
             .fetch_add(batch.byte_size() as u64, Ordering::Relaxed);
-        for t in batch.iter() {
-            self.count_key(t);
+        if !self.count_keys_columnar(batch) {
+            for t in batch.iter() {
+                self.count_key(t);
+            }
         }
         out.emit_batch(batch.clone());
     }
@@ -210,6 +246,33 @@ mod tests {
         }
         assert_eq!(h.count_of(2), 6);
         assert!((h.ratio(2, 5) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn columnar_counts_match_row_path() {
+        let rows: Vec<Tuple> = (0..40)
+            .map(|i| {
+                let v = if i % 13 == 0 { Value::Null } else { Value::Int(i % 5) };
+                Tuple::new(vec![v, Value::Int(i)])
+            })
+            .collect();
+        let batch = TupleBatch::from_columns(
+            crate::column::ColumnSet::from_rows(&rows).expect("uniform rows"),
+        );
+        let row_h = SinkHandle::new(5);
+        let mut row_s = CountByKeySink::new(row_h.clone(), 0);
+        let mut out = VecEmitter::default();
+        for r in &rows {
+            row_s.process(r.clone(), 0, &mut out);
+        }
+        let col_h = SinkHandle::new(5);
+        let mut col_s = CountByKeySink::new(col_h.clone(), 0);
+        col_s.process_batch(&batch, 0, &mut out);
+        assert_eq!(row_h.total(), col_h.total());
+        assert_eq!(row_h.bytes(), col_h.bytes());
+        for k in 0..5 {
+            assert_eq!(row_h.count_of(k), col_h.count_of(k), "key {k}");
+        }
     }
 
     #[test]

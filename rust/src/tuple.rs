@@ -7,14 +7,31 @@
 //! hitters) are cheap.
 //!
 //! The engine's unit of data movement is the [`TupleBatch`]: an
-//! immutable run of tuples behind an `Arc<[Tuple]>`. Batches are
+//! immutable run of tuples behind one shared allocation. Batches are
 //! sliced (for the worker's resumption index and control-check
 //! chunking) and fanned out (broadcast, replicate, Reshape
 //! heavy-hitter split) without copying tuples — every view shares the
 //! one allocation.
+//!
+//! A batch carries its tuples in one (or, after lazy conversion, both)
+//! of two physical layouts:
+//!
+//! * **row-major** — a `[Tuple]` run, the layout operators see through
+//!   [`TupleBatch::as_slice`] / [`TupleBatch::get`];
+//! * **columnar** — a [`crate::column::ColumnSet`] of typed
+//!   struct-of-arrays vectors, exposed through
+//!   [`TupleBatch::columns`], which the hot paths (hash routing,
+//!   filters, projections, gathers) consume column-at-a-time.
+//!
+//! Conversion is lazy and cached in both directions: a columnar batch
+//! materializes rows only when a row-path consumer asks for them, and
+//! a row batch transposes only when [`TupleBatch::ensure_columns`] is
+//! called. Slicing and cloning never convert — views carry the same
+//! `[start, end)` window over whichever layouts exist.
 
+use crate::column::ColumnSet;
 use std::fmt;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// A single field value.
 #[derive(Clone, Debug, PartialEq)]
@@ -67,6 +84,10 @@ impl Value {
     /// hashing: the two compare equal under `PartialEq`, so they must
     /// co-partition — hashing the raw sign bit would route one logical
     /// key to two different workers.
+    ///
+    /// The columnar kernels ([`crate::column::Column::hash_range`])
+    /// reproduce this function byte-exactly over typed vectors; any
+    /// change here must be mirrored there.
     pub fn stable_hash(&self) -> u64 {
         match self {
             Value::Null => mix64(TAG_NULL),
@@ -93,16 +114,18 @@ impl Value {
 
 // Type tags xor-ed into scalar hashes (arbitrary odd 64-bit constants)
 // so equal bit patterns of different types land in disjoint families.
-const TAG_NULL: u64 = 0x6c62_272e_07bb_0142;
-const TAG_INT: u64 = 0xa076_1d64_78bd_642f;
-const TAG_FLOAT: u64 = 0xe703_7ed1_a0b4_28db;
+// pub(crate): the columnar hash kernels in `column` reproduce
+// `stable_hash` with the same constants.
+pub(crate) const TAG_NULL: u64 = 0x6c62_272e_07bb_0142;
+pub(crate) const TAG_INT: u64 = 0xa076_1d64_78bd_642f;
+pub(crate) const TAG_FLOAT: u64 = 0xe703_7ed1_a0b4_28db;
 const TAG_STR: u64 = 0x8ebc_6af0_9c88_c6e3;
 
 /// SplitMix64 finalizer: a full-avalanche bijection on `u64`, so every
 /// input bit flips ~half the output bits — what `hash % receivers`
 /// needs to spread consecutive keys evenly.
 #[inline]
-fn mix64(mut x: u64) -> u64 {
+pub(crate) fn mix64(mut x: u64) -> u64 {
     x ^= x >> 30;
     x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
     x ^= x >> 27;
@@ -114,7 +137,7 @@ fn mix64(mut x: u64) -> u64 {
 /// 64-bit word (FxHash-style), finalized by [`mix64`]. The length is
 /// folded into the seed, so the zero-padded tail word is unambiguous.
 #[inline]
-fn hash_bytes(bytes: &[u8]) -> u64 {
+pub(crate) fn hash_bytes(bytes: &[u8]) -> u64 {
     const M: u64 = 0x517c_c1b7_2722_0a95;
     let mut h = TAG_STR ^ (bytes.len() as u64).wrapping_mul(M);
     let mut chunks = bytes.chunks_exact(8);
@@ -211,6 +234,43 @@ impl fmt::Display for Tuple {
     }
 }
 
+/// The shared storage behind a [`TupleBatch`]: the same tuples in up
+/// to two physical layouts, each materialized at most once. Every
+/// batch view (clone/slice) points at the same `BatchData`, so a lazy
+/// conversion done through one view is visible to all of them.
+#[derive(Debug)]
+struct BatchData {
+    rows: OnceLock<Box<[Tuple]>>,
+    /// `None` inside the lock = transpose was attempted and refused
+    /// (ragged arities); such batches stay row-major forever.
+    cols: OnceLock<Option<ColumnSet>>,
+}
+
+/// A borrowed window onto a batch's columnar layout: the column set
+/// plus the view bounds `[start, end)`. All columnar kernels take the
+/// bounds explicitly, so slicing stays zero-copy in both layouts.
+#[derive(Clone, Copy, Debug)]
+pub struct ColumnsView<'a> {
+    /// The batch's full column set (unsliced).
+    pub set: &'a ColumnSet,
+    /// First row of the view within `set`.
+    pub start: usize,
+    /// One past the last row of the view within `set`.
+    pub end: usize,
+}
+
+impl ColumnsView<'_> {
+    /// Rows in the view.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
 /// An immutable batch of tuples behind a shared allocation.
 ///
 /// `clone` and [`slice`](TupleBatch::slice) are O(1): they bump the
@@ -218,18 +278,41 @@ impl fmt::Display for Tuple {
 /// edges zero-copy — every destination receives a clone of the same
 /// batch — and what lets the worker chunk a batch at
 /// `ctrl_check_interval` without materializing sub-batches.
+///
+/// Batches built by the columnar exchange hold a
+/// [`ColumnSet`] instead of (or in addition to) the row run; the row
+/// view is materialized lazily, once, on first row access. See the
+/// module docs for the layout policy.
 #[derive(Clone, Debug)]
 pub struct TupleBatch {
-    data: Arc<[Tuple]>,
+    data: Arc<BatchData>,
     start: usize,
     end: usize,
 }
 
 impl TupleBatch {
     pub fn new(tuples: Vec<Tuple>) -> TupleBatch {
-        let data: Arc<[Tuple]> = tuples.into();
-        let end = data.len();
-        TupleBatch { data, start: 0, end }
+        let end = tuples.len();
+        let rows = OnceLock::new();
+        let _ = rows.set(tuples.into_boxed_slice());
+        TupleBatch {
+            data: Arc::new(BatchData { rows, cols: OnceLock::new() }),
+            start: 0,
+            end,
+        }
+    }
+
+    /// A batch born columnar (the exchange's scatter buffers and
+    /// columnar operators produce these). Rows materialize lazily.
+    pub fn from_columns(set: ColumnSet) -> TupleBatch {
+        let end = set.len();
+        let cols = OnceLock::new();
+        let _ = cols.set(Some(set));
+        TupleBatch {
+            data: Arc::new(BatchData { rows: OnceLock::new(), cols }),
+            start: 0,
+            end,
+        }
     }
 
     pub fn empty() -> TupleBatch {
@@ -246,14 +329,53 @@ impl TupleBatch {
         self.start == self.end
     }
 
+    /// The full row run, transposing out of the columnar layout on
+    /// first use (cached for all views of this storage).
+    fn rows_all(&self) -> &[Tuple] {
+        self.data.rows.get_or_init(|| {
+            let set = self
+                .data
+                .cols
+                .get()
+                .and_then(|c| c.as_ref())
+                .expect("TupleBatch has neither rows nor columns");
+            set.to_rows(0, set.len()).into_boxed_slice()
+        })
+    }
+
     #[inline]
     pub fn get(&self, idx: usize) -> &Tuple {
-        &self.data[self.start + idx]
+        &self.rows_all()[self.start + idx]
     }
 
     #[inline]
     pub fn as_slice(&self) -> &[Tuple] {
-        &self.data[self.start..self.end]
+        &self.rows_all()[self.start..self.end]
+    }
+
+    /// The columnar layout of this view, if already materialized.
+    /// Hot paths branch on this: `Some` takes the column kernels,
+    /// `None` falls back to rows without forcing a transpose.
+    pub fn columns(&self) -> Option<ColumnsView<'_>> {
+        let set = self.data.cols.get()?.as_ref()?;
+        Some(ColumnsView { set, start: self.start, end: self.end })
+    }
+
+    /// Whether the columnar layout is materialized.
+    pub fn has_columns(&self) -> bool {
+        matches!(self.data.cols.get(), Some(Some(_)))
+    }
+
+    /// The columnar layout, transposing from rows on first use
+    /// (cached). Returns `None` only for ragged batches (mixed
+    /// arities), which stay row-major.
+    pub fn ensure_columns(&self) -> Option<ColumnsView<'_>> {
+        let set = self
+            .data
+            .cols
+            .get_or_init(|| ColumnSet::from_rows(self.rows_all()))
+            .as_ref()?;
+        Some(ColumnsView { set, start: self.start, end: self.end })
     }
 
     pub fn iter(&self) -> std::slice::Iter<'_, Tuple> {
@@ -280,15 +402,23 @@ impl TupleBatch {
         self.as_slice().to_vec()
     }
 
-    /// Whether two batches share the same underlying allocation
+    /// Whether two batches share the same underlying storage
     /// (used to assert that fan-out edges did not copy tuples).
     pub fn ptr_eq(a: &TupleBatch, b: &TupleBatch) -> bool {
         Arc::ptr_eq(&a.data, &b.data)
     }
 
-    /// Approximate in-memory size of the viewed tuples.
+    /// Approximate in-memory size of the viewed tuples. Computed from
+    /// whichever layout is materialized (both agree byte-for-byte);
+    /// never forces a conversion.
     pub fn byte_size(&self) -> usize {
-        self.iter().map(Tuple::byte_size).sum()
+        if let Some(rows) = self.data.rows.get() {
+            rows[self.start..self.end].iter().map(Tuple::byte_size).sum()
+        } else if let Some(cv) = self.columns() {
+            cv.set.byte_size_range(cv.start, cv.end)
+        } else {
+            0
+        }
     }
 }
 
@@ -503,5 +633,58 @@ mod tests {
         assert_eq!(vals, vec![0, 1, 2]);
         assert_eq!(b.to_vec().len(), 3);
         assert_eq!(b.byte_size(), 3 * 16);
+    }
+
+    #[test]
+    fn columnar_batch_is_a_shared_lazy_view() {
+        let rows: Vec<Tuple> = (0..6)
+            .map(|i| Tuple::new(vec![Value::Int(i), Value::str("k")]))
+            .collect();
+        let set = ColumnSet::from_rows(&rows).unwrap();
+        let b = TupleBatch::from_columns(set);
+        assert!(b.has_columns());
+        assert_eq!(b.len(), 6);
+        // byte_size works straight off the columns, before any rows
+        // exist, and matches the row accounting.
+        let want: usize = rows.iter().map(Tuple::byte_size).sum();
+        assert_eq!(b.byte_size(), want);
+        // Clones and slices share storage and keep the columnar view.
+        let s = b.slice(2, 5);
+        assert!(TupleBatch::ptr_eq(&b, &s));
+        let cv = s.columns().unwrap();
+        assert_eq!((cv.start, cv.end, cv.len()), (2, 5, 3));
+        // Row access lazily transposes; the values round-trip.
+        assert_eq!(s.get(0), &rows[2]);
+        assert_eq!(b.as_slice(), &rows[..]);
+        assert_eq!(b, TupleBatch::new(rows));
+    }
+
+    #[test]
+    fn row_batch_transposes_on_demand() {
+        let b = int_batch(5);
+        assert!(!b.has_columns());
+        assert!(b.columns().is_none());
+        let s = b.slice(1, 4);
+        let cv = s.ensure_columns().unwrap();
+        assert_eq!((cv.start, cv.end), (1, 4));
+        let mut hashes = Vec::new();
+        cv.set.cols[0].hash_range(cv.start, cv.end, &mut hashes);
+        let want: Vec<u64> =
+            s.iter().map(|t| t.get(0).stable_hash()).collect();
+        assert_eq!(hashes, want);
+        // The transpose is cached on the shared storage: the original
+        // view sees it too.
+        assert!(b.has_columns());
+    }
+
+    #[test]
+    fn ragged_batch_refuses_columns() {
+        let b = TupleBatch::new(vec![
+            Tuple::new(vec![Value::Int(1)]),
+            Tuple::new(vec![Value::Int(1), Value::Int(2)]),
+        ]);
+        assert!(b.ensure_columns().is_none());
+        assert!(!b.has_columns());
+        assert_eq!(b.len(), 2);
     }
 }

@@ -530,26 +530,126 @@ fn prop_region_partition_and_choices() {
     });
 }
 
+// ---------- columnar ≡ row data plane ----------
+
+/// The struct-of-arrays data plane is observationally identical to the
+/// row-major one: the same workflow (columnar filter, hash-hash join
+/// with shipped hash columns, hash-partitioned typed count sink) run
+/// with `Config::columnar` on vs off yields byte-identical sink
+/// multisets and per-key counter gauges at batch 32 / 256 / 1024.
+#[test]
+fn prop_columnar_plane_matches_row_plane() {
+    for batch_size in [32usize, 256, 1024] {
+        let row = columnar_equiv_run(batch_size, false);
+        let col = columnar_equiv_run(batch_size, true);
+        assert_eq!(row.0, col.0, "batch {batch_size}: sink multiset differs");
+        assert_eq!(row.1, col.1, "batch {batch_size}: per-key counts differ");
+    }
+}
+
+/// One run; returns (canonical collect-sink multiset, per-key counts).
+fn columnar_equiv_run(batch_size: usize, columnar: bool) -> (Vec<String>, Vec<u64>) {
+    use texera_amber::config::Config;
+    use texera_amber::engine::{Execution, OpSpec, Workflow};
+    use texera_amber::operators::basic::{Cmp, Filter};
+    use texera_amber::operators::{CollectSink, CountByKeySink, HashJoin, SinkHandle};
+    use texera_amber::workloads::VecSource;
+
+    const ROWS: usize = 50_000;
+    const KEYS: i64 = 29;
+
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..ROWS)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                Tuple::new(vec![Value::Int(i as i64 % KEYS), Value::Int(i as i64 % 11)])
+            })
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary(
+        "filter",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(Filter::new(1, Cmp::Ne, Value::Int(5))),
+    ));
+    let dim = w.add(OpSpec::source("dim", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..KEYS)
+            .filter(|k| (*k as usize) % parts == idx)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(3 * k)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    // Hash on both ports: the exchange ships its hash columns, and the
+    // join's build/probe reuse them verbatim.
+    let join = w.add(OpSpec::binary(
+        "join",
+        2,
+        [PartitionScheme::Hash { key: 0 }, PartitionScheme::Hash { key: 0 }],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 0)),
+    ));
+    let collect_h = SinkHandle::new(0);
+    let ch = collect_h.clone();
+    let collect = w.add(OpSpec::unary(
+        "collect",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(ch.clone())),
+    ));
+    // Hash-partitioned typed count sink: field 2 of the build⋈probe
+    // concat is the probe key (Int column → vectorized count path).
+    let count_h = SinkHandle::new(KEYS as usize);
+    let kh = count_h.clone();
+    let count = w.add(OpSpec::unary(
+        "count",
+        2,
+        PartitionScheme::Hash { key: 2 },
+        move |_, _| Box::new(CountByKeySink::new(kh.clone(), 2)),
+    ));
+    w.connect(scan, filter, 0);
+    w.connect(dim, join, 0);
+    w.connect(filter, join, 1);
+    w.connect(join, collect, 0);
+    w.connect(join, count, 0);
+    let cfg = Config {
+        batch_size,
+        ctrl_check_interval: batch_size,
+        columnar,
+        ..Config::default()
+    };
+    Execution::start(w, cfg).join();
+    let mut rows: Vec<String> = collect_h.tuples().iter().map(|t| format!("{t:?}")).collect();
+    rows.sort_unstable();
+    let counts: Vec<u64> = (0..KEYS as usize).map(|k| count_h.count_of(k)).collect();
+    (rows, counts)
+}
+
 // ---------- chaos: control-plane interleavings ----------
 
 /// Seeded command-fuzzer over one workflow: random interleavings of
 /// pause/resume, checkpoint, Reshape-style mitigation routes, and
 /// elastic scale commands must preserve the exact sink result. Three
 /// rounds per run, each at a different batch size (32 / 256 / 1024) so
-/// the vectorized exchange is fuzzed across buffering regimes;
-/// `CHAOS_SEED` (CI matrix) shifts the whole command/timing stream.
+/// the vectorized exchange is fuzzed across buffering regimes; the
+/// batch-32 round runs with the columnar plane disabled so the
+/// row-major fallback is fuzzed too. `CHAOS_SEED` (CI matrix) shifts
+/// the whole command/timing stream.
 #[test]
 fn prop_chaos_control_interleavings_preserve_results() {
     let base: u64 = std::env::var("CHAOS_SEED")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(7);
-    for (round, batch_size) in [(0u64, 256usize), (1, 1024), (2, 32)] {
-        chaos_round(base.wrapping_mul(1000).wrapping_add(round), batch_size);
+    for (round, batch_size, columnar) in [(0u64, 256usize, true), (1, 1024, true), (2, 32, false)]
+    {
+        chaos_round(base.wrapping_mul(1000).wrapping_add(round), batch_size, columnar);
     }
 }
 
-fn chaos_round(seed: u64, batch_size: usize) {
+fn chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     use std::time::Duration;
     use texera_amber::config::Config;
     use texera_amber::engine::{ControlMessage, Execution, OpSpec, WorkerId, Workflow};
@@ -610,7 +710,7 @@ fn chaos_round(seed: u64, batch_size: usize) {
     w.connect(partial, fin, 0);
     w.connect(fin, sink, 0);
 
-    let exec = Execution::start(w, Config { batch_size, ..Config::default() });
+    let exec = Execution::start(w, Config { batch_size, columnar, ..Config::default() });
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Worker counts as far as the driver knows (a refused scale —
@@ -707,23 +807,27 @@ fn chaos_round(seed: u64, batch_size: usize) {
 /// *scatter-merge* range sort are all scaled up/down at random points,
 /// interleaved with pause/resume, quiesced checkpoints and
 /// Reshape-style mitigation routes. The sink multiset must be
-/// byte-identical to a direct computation at batch 32 / 256 / 1024.
-/// `CHAOS_SEED` (CI matrix) shifts the whole command/timing stream.
+/// byte-identical to a direct computation at batch 32 / 256 / 1024;
+/// the batch-32 round runs with the columnar plane disabled so the
+/// row-major fallback is fuzzed too. `CHAOS_SEED` (CI matrix) shifts
+/// the whole command/timing stream.
 #[test]
 fn prop_chaos_universal_elasticity_preserves_results() {
     let base: u64 = std::env::var("CHAOS_SEED")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(7);
-    for (round, batch_size) in [(0u64, 256usize), (1, 1024), (2, 32)] {
+    for (round, batch_size, columnar) in [(0u64, 256usize, true), (1, 1024, true), (2, 32, false)]
+    {
         universal_chaos_round(
             base.wrapping_mul(7000).wrapping_add(round),
             batch_size,
+            columnar,
         );
     }
 }
 
-fn universal_chaos_round(seed: u64, batch_size: usize) {
+fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     use std::time::Duration;
     use texera_amber::config::Config;
     use texera_amber::engine::{ControlMessage, Execution, OpSpec, WorkerId, Workflow};
@@ -804,7 +908,7 @@ fn universal_chaos_round(seed: u64, batch_size: usize) {
     w.connect(join, sortw, 0);
     w.connect(sortw, sink, 0);
 
-    let exec = Execution::start(w, Config { batch_size, ..Config::default() });
+    let exec = Execution::start(w, Config { batch_size, columnar, ..Config::default() });
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Tracked worker counts (a refused scale leaves them unchanged).
