@@ -20,12 +20,15 @@
 //! observation-driven one (per-region worker budget + re-planning);
 //! the `source_scale` section measures a mid-run 2→4 scale-up of a
 //! **source** operator (universal elasticity: splittable scan ranges)
-//! on a source-heavy skewed workflow.
+//! on a source-heavy skewed workflow; the `migration` section measures
+//! throughput before/during/after each live plan-migration delta kind
+//! (repartition swap, mat insert, mat insert+remove, worker re-plan)
+//! plus each delta's fence duration.
 
 use std::time::{Duration, Instant};
 
 use texera_amber::config::Config;
-use texera_amber::engine::{Execution, OpSpec, PartitionScheme, Workflow};
+use texera_amber::engine::{Execution, OpSpec, PartitionScheme, PlanDelta, Workflow};
 use texera_amber::maestro::cost::CostParams;
 use texera_amber::maestro::MaestroScheduler;
 use texera_amber::operators::basic::{Cmp, Filter, MapUdf};
@@ -50,6 +53,7 @@ fn main() {
     let lanes = lanes_section(smoke);
     let elastic = elastic_scaling(smoke);
     let source_scale = source_scale_section(smoke);
+    let migration = migration_section(smoke);
     let maestro = maestro_section(smoke);
     if smoke {
         // Smoke totals are not trajectory-quality numbers: exercise
@@ -61,6 +65,7 @@ fn main() {
             baseline,
             &elastic,
             &source_scale,
+            &migration,
             &shuffle,
             &micro,
             &rvc,
@@ -609,6 +614,126 @@ fn source_scale_section(smoke: bool) -> SourceScaleBench {
     }
 }
 
+/// Live-migration result for one delta kind: throughput of the
+/// downstream (filter) layer before the delta, during the window
+/// spanning `Execution::migrate` itself (which contains the fence
+/// stall), and after — plus the summed fence duration the planner
+/// reports.
+struct MigrationBench {
+    kind: &'static str,
+    applied: bool,
+    before_tps: f64,
+    during_tps: f64,
+    after_tps: f64,
+    fence_ms: f64,
+}
+
+/// Mid-run plan migrations on a source-heavy pipeline (scan with a
+/// latency-bound 40µs parse cost → filter → sink): one fresh run per
+/// delta kind — repartition-scheme swap on the live scan→filter edge,
+/// live materialization insert (downstream goes quiet until the writer
+/// completes and the reader activates — that dip is the honest cost of
+/// the delta), insert followed by the measured *removal* (store drain +
+/// re-injection through the restored edge), and a 2→4 worker re-plan.
+fn migration_section(smoke: bool) -> Vec<MigrationBench> {
+    println!("--- live plan migration: throughput before/during/after each delta kind ---");
+    let total = if smoke { 30_000usize } else { 150_000 };
+    const PARSE_COST_NS: u64 = 40_000;
+    let window = Duration::from_millis(if smoke { 150 } else { 400 });
+    let mut out = Vec::new();
+    for kind in ["repartition", "mat_insert", "mat_remove", "replan"] {
+        let mut w = Workflow::new();
+        let scan = w.add(OpSpec::source_with_op(
+            "scan",
+            2,
+            move |idx, parts| {
+                let rows: Vec<Tuple> = (0..total)
+                    .skip(idx)
+                    .step_by(parts)
+                    .map(|i| {
+                        // 90% hot key 0, the rest spread over 100 keys.
+                        let key = if i % 10 != 0 { 0 } else { (i % 100) as i64 + 1 };
+                        Tuple::new(vec![Value::Int(key), Value::Int(1)])
+                    })
+                    .collect();
+                Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+            },
+            |_, _| Box::new(MapUdf::identity(PARSE_COST_NS)),
+        ));
+        let filter = w.add(OpSpec::unary("filter", 2, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Filter::new(1, Cmp::Ge, Value::Int(0)))
+        }));
+        let handle = SinkHandle::new(0);
+        let h = handle.clone();
+        let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+            Box::new(CollectSink::new(h.clone()))
+        }));
+        w.connect(scan, filter, 0);
+        w.connect(filter, sink, 0);
+        let cfg = Config {
+            batch_size: 400,
+            // Chunked control checks: the parse cost sleeps once per
+            // 64-tuple chunk, so sleep granularity doesn't distort
+            // rates.
+            ctrl_check_interval: 64,
+            ..Config::default()
+        };
+        let exec = Execution::start(w, cfg);
+        let processed = |exec: &Execution| -> u64 {
+            exec.stats()
+                .iter()
+                .filter(|(id, _)| id.op == filter)
+                .map(|(_, s)| s.processed)
+                .sum()
+        };
+        std::thread::sleep(Duration::from_millis(if smoke { 40 } else { 100 })); // warm-up
+        let p0 = processed(&exec);
+        std::thread::sleep(window);
+        let p1 = processed(&exec);
+        let before_tps = (p1 - p0) as f64 / window.as_secs_f64();
+        let delta = match kind {
+            "repartition" => PlanDelta::Repartition {
+                op: filter,
+                port: 0,
+                scheme: PartitionScheme::Hash { key: 0 },
+            },
+            "mat_insert" | "mat_remove" => {
+                PlanDelta::InsertMat { from: scan, to: filter, to_port: 0 }
+            }
+            _ => PlanDelta::Replan { workers: vec![(filter, 4)] },
+        };
+        let t0 = Instant::now();
+        let mut outcome = exec.migrate(delta);
+        if kind == "mat_remove" && outcome.applied {
+            // The measured delta is the removal of the just-inserted
+            // mat: store drain + re-injection on the restored edge.
+            outcome = exec.migrate(PlanDelta::RemoveMat { from: scan, to: filter, to_port: 0 });
+        }
+        let during = t0.elapsed().as_secs_f64().max(1e-9);
+        let p2 = processed(&exec);
+        let during_tps = (p2 - p1) as f64 / during;
+        std::thread::sleep(window);
+        let p3 = processed(&exec);
+        let after_tps = (p3 - p2) as f64 / window.as_secs_f64();
+        exec.join();
+        let fence_ms = outcome.fence_total().as_secs_f64() * 1e3;
+        println!(
+            "{kind:>12}: before {before_tps:>8.0} t/s | during {during_tps:>8.0} t/s | after {after_tps:>8.0} t/s | fence {fence_ms:.1} ms{}",
+            if outcome.applied { "" } else { " (refused)" }
+        );
+        out.push(MigrationBench {
+            kind,
+            applied: outcome.applied,
+            before_tps,
+            during_tps,
+            after_tps,
+            fence_ms,
+        });
+    }
+    println!();
+    out
+}
+
 /// Maestro static-vs-elastic schedule comparison on one skewed
 /// multi-region workflow.
 struct MaestroBench {
@@ -759,6 +884,7 @@ fn write_bench_json(
     baseline: f64,
     elastic: &ElasticBench,
     source_scale: &SourceScaleBench,
+    migration: &[MigrationBench],
     shuffle: &[ShuffleRow],
     micro: &ScatterMicro,
     rvc: &RowVsColumnar,
@@ -876,6 +1002,25 @@ fn write_bench_json(
         "    \"post_scale_speedup\": {ss:.2}, \"fence_ms\": {:.1}\n  }},\n",
         source_scale.fence_ms
     ));
+    s.push_str("  \"migration\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan+parse(40us/tuple)(2) -> filter(2) -> sink; one fresh run per delta kind; rates are the filter layer's\",\n",
+    );
+    s.push_str("    \"rows\": [\n");
+    for (i, m) in migration.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"kind\": \"{}\", \"applied\": {}, \"tuples_per_sec_before\": {:.0}, \
+             \"tuples_per_sec_during\": {:.0}, \"tuples_per_sec_after\": {:.0}, \"fence_ms\": {:.1}}}{}\n",
+            m.kind,
+            m.applied,
+            m.before_tps,
+            m.during_tps,
+            m.after_tps,
+            m.fence_ms,
+            if i + 1 == migration.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("    ]\n  },\n");
     s.push_str("  \"maestro\": {\n");
     s.push_str(
         "    \"pipeline\": \"scan->udf_build(25us/tuple)->buildf->join.build, scan->prep->join.probe (strict), join->sink; 90% hot key; probe path materialized\",\n",

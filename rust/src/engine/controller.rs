@@ -16,7 +16,8 @@
 use crate::config::Config;
 use crate::engine::breakpoint::{BpAction, GlobalBreakpoint};
 use crate::engine::channel::{mailbox, ControlInbox, DataSender, Mailbox, WorkerGauges};
-use crate::engine::dag::Workflow;
+use crate::engine::dag::{Edge, OpSpec, Workflow};
+use crate::engine::migrate::{MigrationOutcome, MigrationStep, PlanDelta, StepOutcome};
 use crate::engine::fault::{Checkpoint, LogRecord, ReplayLog};
 use crate::engine::message::{
     BreakpointTarget, ControlMessage, DataEvent, DataMessage, LocalPredicate, WorkerEvent,
@@ -59,6 +60,11 @@ pub enum Command {
     /// duration (zero if the request was refused — see the `do_scale`
     /// guards).
     Scale { op: usize, new_workers: usize, reply: Sender<Duration> },
+    /// Live plan migration (engine::migrate): apply a structural plan
+    /// delta as an ordered sequence of fenced steps, rolling the
+    /// already-applied prefix back if a later step's fence refuses or
+    /// cannot close. Replies with the per-step outcome trail.
+    Migrate { delta: PlanDelta, reply: Sender<MigrationOutcome> },
     Shutdown,
 }
 
@@ -186,6 +192,20 @@ struct ScaleSurrender {
     source: Option<Box<dyn TupleSource>>,
 }
 
+/// A materialization spliced onto a live edge mid-run
+/// (`PlanDelta::InsertMat`): the writer/reader operator pair, the
+/// shared store, and the original edge they replaced — everything
+/// needed to undo the splice on `PlanDelta::RemoveMat`.
+#[derive(Clone)]
+struct LiveMat {
+    from: usize,
+    to: usize,
+    to_port: usize,
+    writer: usize,
+    reader: usize,
+    store: crate::maestro::materialize::MatStore,
+}
+
 /// Who scaled an operator first: the engine's ownership/veto guard
 /// against the `AutoscalePlugin` and an external driver (Maestro's
 /// re-planner, tests) issuing conflicting parallelism changes for the
@@ -229,6 +249,18 @@ struct Coordinator {
     /// the operator's current started/dormant status.
     sources_autostart: bool,
     started_sources: HashSet<usize>,
+
+    // Live plan migration (engine::migrate).
+    /// Materializations spliced onto live edges mid-run.
+    live_mats: Vec<LiveMat>,
+    /// Ops whose sources must stay dormant regardless of autostart
+    /// status: mat readers wait for their writer to finish
+    /// (`MatSource` reports EOF at the store's *current* end, so an
+    /// early start would truncate the stream).
+    dormant_ops: HashSet<usize>,
+    /// writer op → reader op: when the last writer worker completes,
+    /// the paired dormant reader is started.
+    pending_mat_activations: HashMap<usize, usize>,
 
     // Pause bookkeeping.
     pause_outstanding: HashSet<WorkerId>,
@@ -493,6 +525,9 @@ impl Execution {
             scale_owner: HashMap::new(),
             sources_autostart,
             started_sources: HashSet::new(),
+            live_mats: Vec::new(),
+            dormant_ops: HashSet::new(),
+            pending_mat_activations: HashMap::new(),
             pause_outstanding: HashSet::new(),
             pause_reply: None,
             user_paused: false,
@@ -652,6 +687,28 @@ impl Execution {
         let (tx, rx) = channel();
         self.cmd(Command::Scale { op, new_workers, reply: tx });
         rx.recv().expect("coordinator gone")
+    }
+
+    /// Live plan migration (engine::migrate): apply a structural plan
+    /// delta — repartition a live edge, insert/remove a
+    /// materialization, re-plan worker counts — as an ordered sequence
+    /// of fenced steps. Blocks until the sequence completes (or
+    /// aborts-and-restores) and returns the per-step outcome trail.
+    pub fn migrate(&self, delta: PlanDelta) -> MigrationOutcome {
+        let (tx, rx) = channel();
+        self.cmd(Command::Migrate { delta, reply: tx });
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Maestro: block until the given operators complete or `timeout`
+    /// passes; returns whether they completed. The mid-region
+    /// re-planner polls this to interleave probe-stream observation
+    /// with region progress. (A timed-out waiter's reply channel is
+    /// simply dropped; the coordinator's later send to it is ignored.)
+    pub fn await_ops_timeout(&self, ops: Vec<usize>, timeout: Duration) -> bool {
+        let (tx, rx) = channel();
+        self.cmd(Command::AwaitOps { ops, reply: tx });
+        rx.recv_timeout(timeout).is_ok()
     }
 
     /// Send a raw control message (tests, baselines).
@@ -942,8 +999,23 @@ impl Coordinator {
             WorkerEvent::Completed { worker, stats } => {
                 if self.completed.insert(worker) {
                     self.final_stats.push((worker, stats));
-                    let c = self.ops_completed.entry(worker.op).or_insert(0);
-                    *c += 1;
+                    let done = {
+                        let c = self.ops_completed.entry(worker.op).or_insert(0);
+                        *c += 1;
+                        *c
+                    };
+                    // Live-mat activation: once every writer worker has
+                    // completed the store is final, so the paired
+                    // dormant reader can start streaming it.
+                    if done >= self.workflow.ops[worker.op].workers {
+                        if let Some(reader) =
+                            self.pending_mat_activations.remove(&worker.op)
+                        {
+                            self.dormant_ops.remove(&reader);
+                            self.started_sources.insert(reader);
+                            self.broadcast_op(reader, ControlMessage::StartSource);
+                        }
+                    }
                     // Also counts as a pause ack if one is outstanding.
                     self.pause_outstanding.remove(&worker);
                     if self.pause_reply.is_some() && self.pause_outstanding.is_empty() {
@@ -1154,6 +1226,11 @@ impl Coordinator {
                 let _ = reply.send(d);
                 self.drain_deferred();
             }
+            Command::Migrate { delta, reply } => {
+                let outcome = self.do_migrate(delta);
+                let _ = reply.send(outcome);
+                self.drain_deferred();
+            }
             Command::TrackKeys { op, on } => {
                 for w in 0..self.workflow.ops[op].workers {
                     if let Some(h) = self.handles.get(&WorkerId::new(op, w)) {
@@ -1320,7 +1397,14 @@ impl Coordinator {
             .filter(|id| self.handles.contains_key(id))
             .collect();
         for id in &old_ids {
-            self.send_control(*id, ControlMessage::ExtractScaleState { replicate: false });
+            self.send_control(
+                *id,
+                ControlMessage::ExtractScaleState {
+                    replicate: false,
+                    partitioned_only: false,
+                    preserve_routing: false,
+                },
+            );
         }
         while self.scale_collect.len() < old_ids.len() && Instant::now() < deadline {
             self.pump_fence();
@@ -1493,10 +1577,17 @@ impl Coordinator {
     ///   non-broadcast pending — hash/RR-partitioned ports, including
     ///   operator-buffered input such as a join's early probes — is
     ///   re-routed to the survivors through a fresh partitioner.
-    ///
-    /// Assumes broadcast-input operators keep only broadcast-derived
-    /// (replicated) keyed state plus transient buffered input — the
-    /// broadcast hash join this protocol exists for.
+    /// * Both directions additionally **sweep** keyed
+    ///   *partitioned-port* state
+    ///   ([`crate::engine::operator::Operator::partitioned_state`])
+    ///   from every pre-fence worker and re-shard it over the new
+    ///   worker set by `hash % n`: mixed-port operators (a broadcast
+    ///   dictionary plus hash-partitioned per-key state, e.g.
+    ///   [`crate::operators::Enrich`]) keep their keyed state aligned
+    ///   with the key→worker routing map, which changes with `n`. For
+    ///   broadcast-only-state operators (the hash join this protocol
+    ///   was built for) the sweep surrenders empty states and is a
+    ///   no-op.
     fn scale_broadcast(
         &mut self,
         op: usize,
@@ -1514,7 +1605,11 @@ impl Coordinator {
             let donor = WorkerId::new(op, 0);
             self.send_control(
                 donor,
-                ControlMessage::ExtractScaleState { replicate: true },
+                ControlMessage::ExtractScaleState {
+                    replicate: true,
+                    partitioned_only: false,
+                    preserve_routing: false,
+                },
             );
             while self.scale_collect.is_empty() && Instant::now() < deadline {
                 self.pump_fence();
@@ -1526,6 +1621,36 @@ impl Coordinator {
                 self.abort_scale();
                 return Duration::ZERO;
             };
+            // (2b) Sweep keyed partitioned-port state from every old
+            // worker (a *move*, unlike the donor's copy): its owner map
+            // is `hash % n` and n is about to change.
+            self.scale_collect.clear();
+            let old_ids: Vec<WorkerId> = (0..old_n)
+                .map(|w| WorkerId::new(op, w))
+                .filter(|id| self.handles.contains_key(id))
+                .collect();
+            for id in &old_ids {
+                self.send_control(
+                    *id,
+                    ControlMessage::ExtractScaleState {
+                        replicate: true,
+                        partitioned_only: true,
+                        preserve_routing: false,
+                    },
+                );
+            }
+            while self.scale_collect.len() < old_ids.len() && Instant::now() < deadline {
+                self.pump_fence();
+            }
+            if self.scale_collect.len() < old_ids.len() {
+                // Restore the swept shards we did get (the donor's
+                // replicate was a copy; nothing else has moved).
+                self.abort_scale();
+                return Duration::ZERO;
+            }
+            let mut swept: Vec<(WorkerId, ScaleSurrender)> =
+                self.scale_collect.drain().collect();
+            swept.sort_by_key(|(id, _)| *id);
             self.update_plan_facts(op, new_n);
             let mut mailboxes = Vec::new();
             for w in old_n..new_n {
@@ -1561,24 +1686,54 @@ impl Coordinator {
                     }
                 }
             }
+            // (4b) Re-shard the swept partitioned-port state over the
+            // enlarged worker set.
+            for (_, s) in swept {
+                if !s.state.is_empty() {
+                    self.install_state_shards(op, new_n, s.state);
+                }
+            }
         } else {
-            // (2) Unplug the retiring workers only; survivors keep
-            // their replicas and pending untouched.
+            // (2) Unplug the retiring workers (partitioned-port state +
+            // parked input; their broadcast replicas are dropped, every
+            // survivor holds its own); survivors keep replicas and
+            // pending untouched but still *sweep* their keyed
+            // partitioned-port state, whose `hash % n` owner map is
+            // about to change.
             self.scale_collect.clear();
             let retiring: Vec<WorkerId> = (new_n..old_n)
+                .map(|w| WorkerId::new(op, w))
+                .filter(|id| self.handles.contains_key(id))
+                .collect();
+            let surviving: Vec<WorkerId> = (0..new_n)
                 .map(|w| WorkerId::new(op, w))
                 .filter(|id| self.handles.contains_key(id))
                 .collect();
             for id in &retiring {
                 self.send_control(
                     *id,
-                    ControlMessage::ExtractScaleState { replicate: false },
+                    ControlMessage::ExtractScaleState {
+                        replicate: false,
+                        partitioned_only: true,
+                        preserve_routing: false,
+                    },
                 );
             }
-            while self.scale_collect.len() < retiring.len() && Instant::now() < deadline {
+            for id in &surviving {
+                self.send_control(
+                    *id,
+                    ControlMessage::ExtractScaleState {
+                        replicate: true,
+                        partitioned_only: true,
+                        preserve_routing: false,
+                    },
+                );
+            }
+            let expected = retiring.len() + surviving.len();
+            while self.scale_collect.len() < expected && Instant::now() < deadline {
                 self.pump_fence();
             }
-            if self.scale_collect.len() < retiring.len() {
+            if self.scale_collect.len() < expected {
                 self.abort_scale();
                 return Duration::ZERO;
             }
@@ -1597,9 +1752,11 @@ impl Coordinator {
                 }
                 self.senders.remove(&id);
             }
-            // (4) Re-route the retirees' non-broadcast pending to the
-            // survivors (through the freshly recomputed schemes);
-            // broadcast replicas are dropped.
+            // (4) Re-shard every surrendered partitioned-port state
+            // shard (retirees *and* survivor sweeps) over the survivor
+            // set, and re-route the retirees' non-broadcast pending
+            // through the freshly recomputed schemes; broadcast
+            // replicas are dropped.
             let schemes = self.workflow.ops[op].input_partitioning.clone();
             let mut routers: Vec<Partitioner> = schemes
                 .iter()
@@ -1608,6 +1765,9 @@ impl Coordinator {
             let mut batches: Vec<Vec<Vec<Tuple>>> =
                 vec![vec![Vec::new(); schemes.len()]; new_n];
             for (_, surrender) in collected {
+                if !surrender.state.is_empty() {
+                    self.install_state_shards(op, new_n, surrender.state);
+                }
                 for ev in surrender.pending {
                     if let DataEvent::Batch(msg) = ev {
                         if bports.contains(&msg.port) {
@@ -1766,6 +1926,627 @@ impl Coordinator {
         }
     }
 
+    // ---- live plan migration (engine::migrate) -------------------------
+
+    /// Open a migration fence: let any in-flight pause/checkpoint
+    /// handshake settle, then pause-all and await every ack. Returns
+    /// `false` (fence already aborted, pause lifted) if the acks do not
+    /// arrive by `deadline`.
+    fn open_fence(&mut self, deadline: Instant) -> bool {
+        while (self.checkpoint_reply.is_some()
+            || !self.snapshot_outstanding.is_empty()
+            || !self.pause_outstanding.is_empty())
+            && Instant::now() < deadline
+        {
+            self.pump_fence();
+        }
+        self.pause_outstanding = self.handles.keys().copied().collect();
+        self.broadcast_all(ControlMessage::Pause);
+        while !self.pause_outstanding.is_empty() && Instant::now() < deadline {
+            self.pump_fence();
+        }
+        if !self.pause_outstanding.is_empty() {
+            self.pause_outstanding.clear();
+            self.abort_scale();
+            return false;
+        }
+        true
+    }
+
+    /// Execute a [`PlanDelta`]: plan it into an ordered sequence of
+    /// fenced steps ([`crate::engine::migrate::plan`]), apply them in
+    /// order, and — if any step's fence refuses or cannot close — roll
+    /// the already-applied prefix back with inverse steps (best
+    /// effort). Abort-and-restore at the sequence level, mirroring
+    /// `abort_scale` at the step level.
+    fn do_migrate(&mut self, delta: PlanDelta) -> MigrationOutcome {
+        let t0 = Instant::now();
+        let steps = match crate::engine::migrate::plan(&self.workflow, &delta) {
+            Ok(s) => s,
+            Err(e) => {
+                return MigrationOutcome {
+                    applied: false,
+                    rolled_back: false,
+                    steps: vec![StepOutcome {
+                        desc: format!("refused at plan time: {e}"),
+                        fence: Duration::ZERO,
+                        applied: false,
+                    }],
+                    total: t0.elapsed(),
+                }
+            }
+        };
+        let mut outcomes = Vec::new();
+        let mut undo: Vec<MigrationStep> = Vec::new();
+        let mut ok = true;
+        for step in steps {
+            let desc = step.describe();
+            let (d, inverse) = self.apply_step(&step);
+            let applied = d > Duration::ZERO;
+            outcomes.push(StepOutcome { desc, fence: d, applied });
+            if !applied {
+                ok = false;
+                break;
+            }
+            if let Some(inv) = inverse {
+                undo.push(inv);
+            }
+        }
+        let mut rolled_back = false;
+        if !ok && !undo.is_empty() {
+            rolled_back = true;
+            for inv in undo.into_iter().rev() {
+                let desc = format!("rollback: {}", inv.describe());
+                let (d, _) = self.apply_step(&inv);
+                outcomes.push(StepOutcome {
+                    desc,
+                    fence: d,
+                    applied: d > Duration::ZERO,
+                });
+            }
+        }
+        MigrationOutcome {
+            applied: ok,
+            rolled_back,
+            steps: outcomes,
+            total: t0.elapsed(),
+        }
+    }
+
+    /// Apply one migration step; returns its fence duration (zero =
+    /// refused/aborted, nothing changed) and the inverse step that
+    /// undoes it.
+    fn apply_step(&mut self, step: &MigrationStep) -> (Duration, Option<MigrationStep>) {
+        match step {
+            MigrationStep::Repartition { op, port, scheme } => {
+                let old = self
+                    .workflow
+                    .ops
+                    .get(*op)
+                    .and_then(|o| o.input_partitioning.get(*port))
+                    .cloned();
+                let d = self.do_repartition(*op, *port, scheme.clone());
+                let inv = old.map(|s| MigrationStep::Repartition {
+                    op: *op,
+                    port: *port,
+                    scheme: s,
+                });
+                (d, inv)
+            }
+            MigrationStep::InsertMat { from, to, to_port } => {
+                let d = self.do_insert_mat(*from, *to, *to_port);
+                (
+                    d,
+                    Some(MigrationStep::RemoveMat {
+                        from: *from,
+                        to: *to,
+                        to_port: *to_port,
+                    }),
+                )
+            }
+            MigrationStep::RemoveMat { from, to, to_port } => {
+                let d = self.do_remove_mat(*from, *to, *to_port);
+                (
+                    d,
+                    Some(MigrationStep::InsertMat {
+                        from: *from,
+                        to: *to,
+                        to_port: *to_port,
+                    }),
+                )
+            }
+            MigrationStep::Scale { op, workers } => {
+                // Same ownership/veto guard as `Command::Scale`.
+                if matches!(self.scale_owner.get(op), Some(ScaleOwner::Plugin)) {
+                    return (Duration::ZERO, None);
+                }
+                let old = self.workflow.ops.get(*op).map(|o| o.workers);
+                let d = self.do_scale(*op, *workers);
+                if d > Duration::ZERO {
+                    self.scale_owner.insert(*op, ScaleOwner::Driver);
+                }
+                (d, old.map(|n| MigrationStep::Scale { op: *op, workers: n }))
+            }
+        }
+    }
+
+    /// Migration step: swap the partitioning scheme on input `port` of
+    /// `op` under one fence, worker count unchanged.
+    ///
+    /// The unplug carries `preserve_routing: true` — a promise that the
+    /// parked input comes back to the *same* worker set as one
+    /// consolidated batch per port, delivered port-ascending, which is
+    /// exactly the shape `Worker::remap_replay_positions` needs to keep
+    /// control-replay records that straddle the fence exact.
+    ///
+    /// Keyed-state colocation invariant: state shards live at
+    /// `stable_hash(key) % n`, so a worker holding non-empty keyed
+    /// state can only keep it colocated with *future* tuples if the
+    /// routing stays key-deterministic onto the same owner map. Rather
+    /// than guess, a stateful operator (n > 1) aborts-and-restores; the
+    /// empty-state case (the common mid-run window before a blocking
+    /// port fills, and every stateless operator) migrates freely.
+    fn do_repartition(
+        &mut self,
+        op: usize,
+        port: usize,
+        new_scheme: PartitionScheme,
+    ) -> Duration {
+        let t0 = Instant::now();
+        if self.shutdown
+            || op >= self.workflow.ops.len()
+            || port >= self.workflow.ops[op].input_partitioning.len()
+            || matches!(new_scheme, PartitionScheme::Broadcast)
+            || matches!(
+                self.workflow.ops[op].input_partitioning[port],
+                PartitionScheme::Broadcast
+            )
+            || self.completed.iter().any(|w| w.op == op)
+        {
+            return Duration::ZERO;
+        }
+        let n = self.workflow.ops[op].workers;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        if !self.open_fence(deadline) {
+            return Duration::ZERO;
+        }
+        if self.completed.iter().any(|w| w.op == op) {
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+        self.fence_epoch += 1;
+        let epoch = self.fence_epoch;
+
+        // (2) Unplug, with the routing-preserving promise.
+        self.scale_collect.clear();
+        let ids: Vec<WorkerId> = (0..n)
+            .map(|w| WorkerId::new(op, w))
+            .filter(|id| self.handles.contains_key(id))
+            .collect();
+        for id in &ids {
+            self.send_control(
+                *id,
+                ControlMessage::ExtractScaleState {
+                    replicate: false,
+                    partitioned_only: false,
+                    preserve_routing: true,
+                },
+            );
+        }
+        while self.scale_collect.len() < ids.len() && Instant::now() < deadline {
+            self.pump_fence();
+        }
+        if self.scale_collect.len() < ids.len() {
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+        let mut collected: Vec<(WorkerId, ScaleSurrender)> =
+            self.scale_collect.drain().collect();
+        collected.sort_by_key(|(id, _)| *id);
+
+        // Colocation invariant (see the doc comment): abort-and-restore
+        // for stateful multi-worker operators, where surrendered keyed
+        // state (or in-flight scattered state) would come apart from
+        // the new routing.
+        let stateful = collected.iter().any(|(_, s)| {
+            !s.state.is_empty()
+                || s.pending
+                    .iter()
+                    .any(|ev| matches!(ev, DataEvent::State { .. }))
+        });
+        if stateful && n > 1 {
+            self.scale_collect = collected.into_iter().collect();
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+
+        // Commit the plan fact. Empty Range bounds are recomputed from
+        // the parked tuples themselves (the migration analogue of
+        // `rescale_bounds`, which resizes *existing* bounds).
+        let mut scheme = new_scheme;
+        if let PartitionScheme::Range { key, bounds } = &mut scheme {
+            if bounds.is_empty() && n > 1 {
+                let mut sample: Vec<crate::tuple::Value> = Vec::new();
+                for (_, s) in &collected {
+                    for ev in &s.pending {
+                        if let DataEvent::Batch(msg) = ev {
+                            if msg.port == port {
+                                sample.extend(
+                                    msg.batch.iter().map(|t| t.get(*key).clone()),
+                                );
+                            }
+                        }
+                    }
+                }
+                *bounds = crate::engine::migrate::derive_bounds(sample, n);
+            }
+        }
+        self.workflow.ops[op].input_partitioning[port] = scheme;
+        let schemes = self.workflow.ops[op].input_partitioning.clone();
+
+        // (4) Same-owner state/source reinstall (n unchanged), then
+        // re-route all parked input through partitioners built from the
+        // new schemes. Delivery is one consolidated batch per
+        // (worker, port), port-ascending — the routing-preserving shape
+        // promised to `remap_replay_positions`.
+        let mut pending_events: Vec<(WorkerId, Vec<DataEvent>)> = Vec::new();
+        for (id, surrender) in collected {
+            if !surrender.state.is_empty() {
+                self.send_control(id, ControlMessage::InstallState(surrender.state));
+            }
+            if let Some(src) = surrender.source {
+                self.send_control(
+                    id,
+                    ControlMessage::InstallSource(crate::engine::message::source_slot(src)),
+                );
+            }
+            pending_events.push((id, surrender.pending));
+        }
+        let mut routers: Vec<Partitioner> = schemes
+            .iter()
+            .map(|s| Partitioner::new(s.clone(), n, 0))
+            .collect();
+        let mut ends: Vec<(WorkerId, DataEvent)> = Vec::new();
+        let mut batches: Vec<Vec<Vec<Tuple>>> = vec![vec![Vec::new(); schemes.len()]; n];
+        for (src, pending) in pending_events {
+            for ev in pending {
+                match ev {
+                    DataEvent::Batch(msg) => {
+                        for t in msg.batch.iter() {
+                            let dest = routers[msg.port].route(t);
+                            batches[dest][msg.port].push(t.clone());
+                        }
+                    }
+                    DataEvent::State { state, .. } => {
+                        self.install_state_shards(op, n, state);
+                    }
+                    DataEvent::End { from, port } if src.idx < n => {
+                        ends.push((src, DataEvent::End { from, port }));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for (dest, ports) in batches.into_iter().enumerate() {
+            for (bport, tuples) in ports.into_iter().enumerate() {
+                if tuples.is_empty() {
+                    continue;
+                }
+                let _ = self.senders[&WorkerId::new(op, dest)].send(DataEvent::Batch(
+                    DataMessage {
+                        from: WorkerId::new(op, dest),
+                        port: bport,
+                        seq: 0,
+                        batch: tuples.into(),
+                        hashes: None,
+                    },
+                ));
+            }
+        }
+        for (to, ev) in ends {
+            let _ = self.senders[&to].send(ev);
+        }
+
+        // (5)+(6) Upstream partitioners rebuild against the new scheme
+        // (mitigation overlays reset with them); resume.
+        self.rewire_and_resume(op, n, epoch, &schemes);
+        self.maybe_done();
+        t0.elapsed()
+    }
+
+    /// Migration step: materialize the live edge `from → (to, to_port)`
+    /// mid-run. Under one fence, a `MatWriter` op (OneToOne from `u`'s
+    /// workers) and a dormant `MatSource` reader op are spliced into
+    /// the plan, `u`'s output edge is retargeted onto the writer, and
+    /// `v`'s EOF accounting moves to the reader. Tuples already
+    /// delivered to `v` pre-fence bypass the store harmlessly — the
+    /// sink multiset is preserved; the store captures the post-fence
+    /// suffix of the edge. The reader starts only when the last writer
+    /// worker completes (`pending_mat_activations`).
+    fn do_insert_mat(&mut self, from: usize, to: usize, to_port: usize) -> Duration {
+        let t0 = Instant::now();
+        let edge = Edge { from, to, to_port };
+        if self.shutdown
+            || !self.workflow.edges.contains(&edge)
+            || self
+                .live_mats
+                .iter()
+                .any(|m| m.from == from && m.to == to && m.to_port == to_port)
+            || self.completed.iter().any(|w| w.op == from || w.op == to)
+        {
+            return Duration::ZERO;
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        if !self.open_fence(deadline) {
+            return Duration::ZERO;
+        }
+        if self.completed.iter().any(|w| w.op == from || w.op == to) {
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+        self.fence_epoch += 1;
+        let epoch = self.fence_epoch;
+
+        // Splice writer + reader ops into the plan (indices are
+        // append-only: retired ops keep their slot so `WorkerId.op`
+        // stays stable).
+        let store = crate::maestro::materialize::MatStore::new();
+        let u_workers = self.workflow.ops[from].workers;
+        let writer = self.workflow.ops.len();
+        let reader = writer + 1;
+        let s2 = store.clone();
+        self.workflow.ops.push(OpSpec::unary(
+            &format!("mig_mat_writer_{from}_{to}_{to_port}"),
+            u_workers,
+            PartitionScheme::OneToOne,
+            move |_, _| Box::new(crate::maestro::materialize::MatWriter::new(s2.clone())),
+        ));
+        let s3 = store.clone();
+        self.workflow.ops.push(OpSpec::source(
+            &format!("mig_mat_reader_{from}_{to}_{to_port}"),
+            u_workers,
+            move |idx, parts| {
+                Box::new(crate::maestro::materialize::MatSource::new(
+                    s3.clone(),
+                    parts,
+                    idx,
+                ))
+            },
+        ));
+        for e in self.workflow.edges.iter_mut() {
+            if *e == edge {
+                *e = Edge { from, to: writer, to_port: 0 };
+            }
+        }
+        self.workflow.edges.push(Edge { from: reader, to, to_port });
+        self.dormant_ops.insert(reader);
+        self.pending_mat_activations.insert(writer, reader);
+
+        // Spawn writer and reader workers (paused; they join the
+        // closing FenceResume). The reader workers get their store
+        // partition directly but stay dormant (`dormant_ops`).
+        for opx in [writer, reader] {
+            let mut mbs = Vec::new();
+            for w in 0..u_workers {
+                let id = WorkerId::new(opx, w);
+                let (tx, mb) = mailbox(self.config.data_queue_cap);
+                self.senders.insert(id, tx);
+                mbs.push((w, mb));
+            }
+            for (w, mb) in mbs {
+                let src: Option<Box<dyn TupleSource>> = if opx == reader {
+                    Some(Box::new(crate::maestro::materialize::MatSource::new(
+                        store.clone(),
+                        u_workers,
+                        w,
+                    )))
+                } else {
+                    None
+                };
+                self.spawn_scaled_worker(opx, w, mb, src, epoch);
+                self.total_workers += 1;
+            }
+        }
+
+        // Retarget u's output edge onto the writer; move v's EOF
+        // accounting on that port to the (future) reader Ends.
+        let writer_senders: Vec<DataSender> = (0..u_workers)
+            .map(|w| self.senders[&WorkerId::new(writer, w)].clone())
+            .collect();
+        for w in 0..self.workflow.ops[from].workers {
+            self.send_control(
+                WorkerId::new(from, w),
+                ControlMessage::RetargetEdge {
+                    old_target: to,
+                    old_port: to_port,
+                    new_target: writer,
+                    new_port: 0,
+                    receivers: u_workers,
+                    scheme: PartitionScheme::OneToOne,
+                    senders: writer_senders.clone(),
+                },
+            );
+        }
+        let count = self.expected_ends(to)[to_port];
+        for w in 0..self.workflow.ops[to].workers {
+            self.send_control(
+                WorkerId::new(to, w),
+                ControlMessage::UpdateUpstreamCount { port: to_port, count },
+            );
+        }
+        self.live_mats.push(LiveMat { from, to, to_port, writer, reader, store });
+        if !self.user_paused {
+            self.broadcast_all(ControlMessage::FenceResume);
+        }
+        t0.elapsed()
+    }
+
+    /// Migration step: remove a live materialization previously spliced
+    /// by [`Coordinator::do_insert_mat`], restoring the direct edge.
+    /// Refused once the writer has completed (the reader *is* the live
+    /// stream then — removing it would drop the store's contents).
+    /// Under one fence the writer workers unplug (parked input plus the
+    /// writer's unflushed tail, surrendered via
+    /// `MatWriter::drain_buffered_input`), `u` is retargeted back onto
+    /// `v`, writer and reader retire, and the store contents plus the
+    /// surrendered pending are re-routed to `v` through `v`'s own
+    /// scheme — every tuple reaches `v` exactly once: pre-insert
+    /// directly, in-store via re-injection, post-remove directly.
+    fn do_remove_mat(&mut self, from: usize, to: usize, to_port: usize) -> Duration {
+        let t0 = Instant::now();
+        let Some(mi) = self
+            .live_mats
+            .iter()
+            .position(|m| m.from == from && m.to == to && m.to_port == to_port)
+        else {
+            return Duration::ZERO;
+        };
+        let lm = self.live_mats[mi].clone();
+        if self.shutdown
+            || self.started_sources.contains(&lm.reader)
+            || self
+                .completed
+                .iter()
+                .any(|w| w.op == from || w.op == lm.writer || w.op == lm.reader)
+        {
+            return Duration::ZERO;
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        if !self.open_fence(deadline) {
+            return Duration::ZERO;
+        }
+        if self
+            .completed
+            .iter()
+            .any(|w| w.op == from || w.op == lm.writer)
+        {
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+        self.fence_epoch += 1;
+
+        // (2) Unplug the writer workers.
+        self.scale_collect.clear();
+        let writer_ids: Vec<WorkerId> = (0..self.workflow.ops[lm.writer].workers)
+            .map(|w| WorkerId::new(lm.writer, w))
+            .filter(|id| self.handles.contains_key(id))
+            .collect();
+        for id in &writer_ids {
+            self.send_control(
+                *id,
+                ControlMessage::ExtractScaleState {
+                    replicate: false,
+                    partitioned_only: false,
+                    preserve_routing: false,
+                },
+            );
+        }
+        while self.scale_collect.len() < writer_ids.len() && Instant::now() < deadline {
+            self.pump_fence();
+        }
+        if self.scale_collect.len() < writer_ids.len() {
+            self.abort_scale();
+            return Duration::ZERO;
+        }
+        let mut collected: Vec<(WorkerId, ScaleSurrender)> =
+            self.scale_collect.drain().collect();
+        collected.sort_by_key(|(id, _)| *id);
+
+        // Retarget u back onto v before retiring the writer.
+        let v_scheme = self.workflow.ops[to].input_partitioning[to_port].clone();
+        let v_n = self.workflow.ops[to].workers;
+        let v_senders: Vec<DataSender> = (0..v_n)
+            .map(|w| self.senders[&WorkerId::new(to, w)].clone())
+            .collect();
+        for w in 0..self.workflow.ops[from].workers {
+            self.send_control(
+                WorkerId::new(from, w),
+                ControlMessage::RetargetEdge {
+                    old_target: lm.writer,
+                    old_port: 0,
+                    new_target: to,
+                    new_port: to_port,
+                    receivers: v_n,
+                    scheme: v_scheme.clone(),
+                    senders: v_senders.clone(),
+                },
+            );
+        }
+
+        // Retire writer and reader workers; their op slots stay (worker
+        // indices must remain stable) with a zero worker count.
+        for opx in [lm.writer, lm.reader] {
+            for w in 0..self.workflow.ops[opx].workers {
+                let id = WorkerId::new(opx, w);
+                self.send_control(id, ControlMessage::Die);
+                if let Some(mut h) = self.handles.remove(&id) {
+                    if let Some(t) = h.thread.take() {
+                        let _ = t.join();
+                    }
+                    self.total_workers -= 1;
+                }
+                self.senders.remove(&id);
+            }
+            self.workflow.ops[opx].workers = 0;
+        }
+        self.workflow.edges.retain(|e| {
+            !(e.from == from && e.to == lm.writer)
+                && !(e.from == lm.reader && e.to == to)
+        });
+        self.workflow.edges.push(Edge { from, to, to_port });
+
+        // Re-inject the store contents, then the surrendered pending
+        // (store rows were emitted by u strictly before the parked
+        // ones), through v's own scheme.
+        let mut router = Partitioner::new(v_scheme, v_n, 0);
+        let mut batches: Vec<Vec<Tuple>> = vec![Vec::new(); v_n];
+        for t in lm.store.take_all() {
+            let dest = router.route(&t);
+            batches[dest].push(t);
+        }
+        for (_, surrender) in collected {
+            for ev in surrender.pending {
+                if let DataEvent::Batch(msg) = ev {
+                    for t in msg.batch.iter() {
+                        let dest = router.route(t);
+                        batches[dest].push(t.clone());
+                    }
+                }
+            }
+        }
+        for (dest, tuples) in batches.into_iter().enumerate() {
+            if tuples.is_empty() {
+                continue;
+            }
+            let _ = self.senders[&WorkerId::new(to, dest)].send(DataEvent::Batch(
+                DataMessage {
+                    from: WorkerId::new(to, dest),
+                    port: to_port,
+                    seq: 0,
+                    batch: tuples.into(),
+                    hashes: None,
+                },
+            ));
+        }
+
+        // v's EOF accounting reverts to u's live workers.
+        let count = self.expected_ends(to)[to_port];
+        for w in 0..v_n {
+            self.send_control(
+                WorkerId::new(to, w),
+                ControlMessage::UpdateUpstreamCount { port: to_port, count },
+            );
+        }
+        self.live_mats.remove(mi);
+        self.dormant_ops.remove(&lm.reader);
+        self.pending_mat_activations.remove(&lm.writer);
+        if !self.user_paused {
+            self.broadcast_all(ControlMessage::FenceResume);
+        }
+        self.maybe_done();
+        t0.elapsed()
+    }
+
     /// Spawn one additional worker of `op` mid-run (scale-up). Mirrors
     /// the deploy-time spawn in `start_inner`, but computes upstream
     /// EOF accounting from the *live* worker sets, seeds the EOFs the
@@ -1816,8 +2597,9 @@ impl Coordinator {
             .collect();
         let control = mb.control.clone();
         let gauges = mb.gauges.clone();
-        let source_autostart =
-            self.sources_autostart || self.started_sources.contains(&op_idx);
+        let source_autostart = (self.sources_autostart
+            || self.started_sources.contains(&op_idx))
+            && !self.dormant_ops.contains(&op_idx);
         let ctx = WorkerContext {
             id,
             mailbox: mb,

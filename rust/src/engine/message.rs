@@ -209,7 +209,23 @@ pub enum ControlMessage {
     /// and a clone of its pending input — and keeps everything. Sent
     /// only while the worker is fence-paused, so its input channel is
     /// quiescent.
-    ExtractScaleState { replicate: bool },
+    ///
+    /// `partitioned_only` (broadcast-input scale-down retiree): the
+    /// surrendered state is
+    /// [`crate::engine::operator::Operator::partitioned_state`] — only
+    /// the keyed, partitioned-port-derived part, excluding the
+    /// broadcast replica every survivor already holds — so mixed-port
+    /// operators with keyed non-broadcast state lose nothing when a
+    /// replica holder retires.
+    ///
+    /// `preserve_routing` (plan migration, `engine::migrate`): the
+    /// coordinator promises the surrendered input will be re-injected
+    /// into the *same* worker set under unchanged routing (a
+    /// repartition fence keeps `n` constant). A single-worker target
+    /// uses the promise to remap pending control-replay positions
+    /// across the fence's batch consolidation (see
+    /// `engine/worker.rs::remap_replay_positions`).
+    ExtractScaleState { replicate: bool, partitioned_only: bool, preserve_routing: bool },
     /// Scale fence step (d): install a re-hashed shard of the combined
     /// operator state ([`crate::engine::operator::Operator::install_state`]).
     InstallState(OpState),
@@ -250,6 +266,23 @@ pub enum ControlMessage {
     /// the number of upstream senders on `port` changed, so EOF
     /// accounting must expect `count` `End` events instead.
     UpdateUpstreamCount { port: usize, count: usize },
+    /// Plan-migration fence (`engine::migrate`), materialization
+    /// insertion/removal: retarget this worker's output edge
+    /// `(old_target, old_port)` to `(new_target, new_port)` — flush it,
+    /// then rebuild it with a fresh partitioner over `scheme` ×
+    /// `receivers` and the new destination sender set. Unlike
+    /// [`ControlMessage::RescaleEdge`] the *destination operator*
+    /// changes, not just its worker set: the edge u→v becomes
+    /// u→writer (mat insert) or u→writer reverts to u→v (mat remove).
+    RetargetEdge {
+        old_target: usize,
+        old_port: usize,
+        new_target: usize,
+        new_port: usize,
+        receivers: usize,
+        scheme: crate::engine::partitioner::PartitionScheme,
+        senders: Vec<crate::engine::channel::DataSender>,
+    },
     /// Close of a scale fence: undo the fence's `Pause` only. Unlike
     /// [`ControlMessage::Resume`] it clears just the user/coordinator
     /// pause cause, so a worker that was already parked at a local
@@ -281,6 +314,7 @@ impl std::fmt::Debug for ControlMessage {
             ControlMessage::RescaleSelf { .. } => "RescaleSelf",
             ControlMessage::RescaleEdge { .. } => "RescaleEdge",
             ControlMessage::UpdateUpstreamCount { .. } => "UpdateUpstreamCount",
+            ControlMessage::RetargetEdge { .. } => "RetargetEdge",
             ControlMessage::FenceResume => "FenceResume",
         };
         write!(f, "{name}")

@@ -1,0 +1,397 @@
+//! Live plan migration (Ch. 2/4 synthesis): the scale fence
+//! generalized into a substrate for changing *plan structure* mid-run.
+//!
+//! Elastic scaling ([`crate::engine::scale`]) changes one fact about a
+//! running plan — an operator's parallelism. The migration planner in
+//! this module accepts a whole **plan delta** ([`PlanDelta`]):
+//!
+//! * **Repartition** — swap the partitioning scheme on a live edge,
+//!   e.g. `Hash → Range` with bounds recomputed from the parked tuples
+//!   themselves;
+//! * **InsertMat / RemoveMat** — splice a materialization
+//!   (writer/reader pair over a [`MatStore`]) onto a live edge, or
+//!   undo one, without stopping the stream;
+//! * **Replan** — a mid-region worker re-plan: a batch of parallelism
+//!   changes emitted by Maestro's observation-driven re-planner.
+//!
+//! [`plan`] validates the delta against the current [`Workflow`] and
+//! decomposes it into an ordered sequence of [`MigrationStep`]s; the
+//! coordinator applies each step inside its own fence and reports a
+//! [`StepOutcome`] trail in the [`MigrationOutcome`].
+//!
+//! [`MatStore`]: crate::maestro::materialize::MatStore
+//!
+//! # Protocol
+//!
+//! Every step reuses the scale-fence machinery (see the protocol
+//! diagram in [`crate::engine::scale`]); what varies is the middle:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────┐
+//!             │ for each MigrationStep, in order:              │
+//!             │                                                │
+//!  plan(Δ) ──▶│  1 FENCE    pause-all, await every ack         │
+//!             │  2 UNPLUG   surrender state / parked input     │
+//!             │             (step-specific worker set)         │
+//!             │  3 MUTATE   the plan fact:                     │
+//!             │              · scheme swap (Repartition)       │
+//!             │              · splice writer+reader (InsertMat)│
+//!             │              · un-splice + drain store (Remove)│
+//!             │              · worker count (Replan → scale)   │
+//!             │  4 REINJECT state to owners, parked input      │
+//!             │             through the *new* routing          │
+//!             │  5 REWIRE   partitioners, peers, EOF counts    │
+//!             │  6 RESUME   (unless the driver holds a pause)  │
+//!             └───────┬────────────────────────────────────────┘
+//!                     │ fence refused / could not close
+//!                     ▼
+//!             ABORT-AND-RESTORE: surrendered state returns to its
+//!             owners (`abort_scale`), then the already-applied step
+//!             prefix is rolled back with inverse steps (RemoveMat
+//!             undoes InsertMat, the old scheme undoes Repartition,
+//!             the old count undoes Scale).
+//! ```
+//!
+//! # Invariants, per step
+//!
+//! * **Routing totality** — after step 3 every in-flight and future
+//!   tuple has exactly one destination under the new scheme set: parked
+//!   input is re-routed through partitioners built from the *mutated*
+//!   plan, and upstream edges are rebuilt (`RescaleEdge` /
+//!   `RetargetEdge`) before the resume, so no tuple is ever routed by
+//!   a mix of old and new schemes.
+//! * **EOF accounting** — `UpdateUpstreamCount` rewrites the expected
+//!   `End` count on every port whose live upstream worker set changed
+//!   (mat insertion moves it to the reader's workers; removal moves it
+//!   back), and surrendered `End` events are re-delivered to the same
+//!   owner, so every port still sees exactly one `End` per live
+//!   upstream worker.
+//! * **Keyed-state colocation** — state shards live at
+//!   `stable_hash(key) % n`. Repartitioning a *stateful* multi-worker
+//!   operator would separate existing shards from future routing, so
+//!   the fence aborts-and-restores instead (tested by the
+//!   abort-restores-state regression). Worker re-plans re-shard
+//!   through the scale fence's split/merge path as always.
+//! * **Replay exactness** — a Repartition fence consolidates each
+//!   worker's parked stream into one batch per port, renumbering the
+//!   messages a control-replay record may reference. The unplug
+//!   carries `preserve_routing: true`, the coordinator's promise that
+//!   re-injection is routing-preserving (single-worker receiver set,
+//!   one consolidated batch per port, port-ascending), under which the
+//!   worker remaps parked replay positions exactly
+//!   (`remap_replay_positions` in `engine/worker.rs` — the fence-aware
+//!   replay remap).
+//!
+//! The Chameleon exemplar reconfigures a live network through planned
+//! intermediate states, each of which must itself be valid; the same
+//! discipline applies here — after every step (and after an abort) the
+//! plan is a valid, running workflow.
+
+use crate::engine::dag::Workflow;
+use crate::engine::partitioner::PartitionScheme;
+use crate::tuple::{value_cmp, Value};
+use std::time::Duration;
+
+/// A structural change to a *running* plan, applied through
+/// [`crate::engine::Execution::migrate`].
+#[derive(Clone, Debug)]
+pub enum PlanDelta {
+    /// Swap the partitioning scheme on input `port` of `op`. A `Range`
+    /// scheme with empty bounds gets bounds recomputed from the tuples
+    /// parked in the fence.
+    Repartition { op: usize, port: usize, scheme: PartitionScheme },
+    /// Materialize the live edge `from → (to, to_port)`: splice in a
+    /// writer/reader pair around a shared store. The reader stays
+    /// dormant until the writer's workers complete.
+    InsertMat { from: usize, to: usize, to_port: usize },
+    /// Undo a live materialization previously inserted on
+    /// `from → (to, to_port)`: drain the store back into the restored
+    /// direct edge. Refused once the writer has completed.
+    RemoveMat { from: usize, to: usize, to_port: usize },
+    /// Mid-region worker re-plan: set each listed operator's
+    /// parallelism, in order (Maestro's observation-driven re-planner
+    /// emits these).
+    Replan { workers: Vec<(usize, usize)> },
+}
+
+/// One fenced step of a migration — the unit of apply and rollback.
+#[derive(Clone, Debug)]
+pub enum MigrationStep {
+    Repartition { op: usize, port: usize, scheme: PartitionScheme },
+    InsertMat { from: usize, to: usize, to_port: usize },
+    RemoveMat { from: usize, to: usize, to_port: usize },
+    Scale { op: usize, workers: usize },
+}
+
+impl MigrationStep {
+    /// Human-readable step description for the outcome trail.
+    pub fn describe(&self) -> String {
+        match self {
+            MigrationStep::Repartition { op, port, scheme } => {
+                format!("repartition op {op} port {port} -> {scheme:?}")
+            }
+            MigrationStep::InsertMat { from, to, to_port } => {
+                format!("insert mat on {from} -> ({to}, port {to_port})")
+            }
+            MigrationStep::RemoveMat { from, to, to_port } => {
+                format!("remove mat on {from} -> ({to}, port {to_port})")
+            }
+            MigrationStep::Scale { op, workers } => {
+                format!("scale op {op} -> {workers} workers")
+            }
+        }
+    }
+}
+
+/// Outcome of one fenced step.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    pub desc: String,
+    /// Fence duration; `Duration::ZERO` when refused or aborted.
+    pub fence: Duration,
+    pub applied: bool,
+}
+
+/// Outcome of a whole migration: the per-step trail plus whether the
+/// delta as a whole applied, or aborted (and if so, whether a partial
+/// prefix had to be rolled back).
+#[derive(Clone, Debug, Default)]
+pub struct MigrationOutcome {
+    /// Every step applied; the plan now reflects the delta.
+    pub applied: bool,
+    /// An applied prefix was undone after a later step refused.
+    pub rolled_back: bool,
+    pub steps: Vec<StepOutcome>,
+    pub total: Duration,
+}
+
+impl MigrationOutcome {
+    /// Total fence time across applied steps (the paper's
+    /// interruption-cost metric for a reconfiguration).
+    pub fn fence_total(&self) -> Duration {
+        self.steps.iter().map(|s| s.fence).sum()
+    }
+}
+
+/// Validate `delta` against `w` and decompose it into an ordered
+/// sequence of fenced steps. Static refusals only — conditions that
+/// depend on runtime state (completed workers, a live-mat registry
+/// entry, keyed-state colocation) are checked by the coordinator when
+/// the step's fence opens.
+pub fn plan(w: &Workflow, delta: &PlanDelta) -> Result<Vec<MigrationStep>, String> {
+    match delta {
+        PlanDelta::Repartition { op, port, scheme } => {
+            let spec = w
+                .ops
+                .get(*op)
+                .ok_or_else(|| format!("unknown operator {op}"))?;
+            if *port >= spec.input_partitioning.len() {
+                return Err(format!("operator {} has no input port {port}", spec.name));
+            }
+            if matches!(scheme, PartitionScheme::Broadcast)
+                || matches!(
+                    spec.input_partitioning[*port],
+                    PartitionScheme::Broadcast
+                )
+            {
+                return Err(
+                    "broadcast topology changes are not a repartition (the \
+                     replication protocol differs)"
+                        .into(),
+                );
+            }
+            Ok(vec![MigrationStep::Repartition {
+                op: *op,
+                port: *port,
+                scheme: scheme.clone(),
+            }])
+        }
+        PlanDelta::InsertMat { from, to, to_port } => {
+            if !w
+                .edges
+                .iter()
+                .any(|e| e.from == *from && e.to == *to && e.to_port == *to_port)
+            {
+                return Err(format!(
+                    "no edge {from} -> ({to}, port {to_port}) in the plan"
+                ));
+            }
+            Ok(vec![MigrationStep::InsertMat {
+                from: *from,
+                to: *to,
+                to_port: *to_port,
+            }])
+        }
+        PlanDelta::RemoveMat { from, to, to_port } => {
+            if *from >= w.ops.len() || *to >= w.ops.len() {
+                return Err(format!("unknown operator in {from} -> {to}"));
+            }
+            Ok(vec![MigrationStep::RemoveMat {
+                from: *from,
+                to: *to,
+                to_port: *to_port,
+            }])
+        }
+        PlanDelta::Replan { workers } => {
+            if workers.is_empty() {
+                return Err("empty re-plan".into());
+            }
+            for (op, n) in workers {
+                if *op >= w.ops.len() {
+                    return Err(format!("unknown operator {op}"));
+                }
+                if *n == 0 {
+                    return Err(format!("operator {op}: zero workers"));
+                }
+            }
+            Ok(workers
+                .iter()
+                .map(|(op, n)| MigrationStep::Scale { op: *op, workers: *n })
+                .collect())
+        }
+    }
+}
+
+/// Range bounds for `parts` receivers from an observed value sample:
+/// sorted-distinct quantile cuts (`parts - 1` upper bounds). Returns an
+/// empty vector — routing everything to receiver 0, total but skewed —
+/// when the sample has fewer distinct values than receivers; the
+/// migration analogue of [`crate::engine::scale::rescale_bounds`],
+/// which resizes *existing* bounds and so cannot invent them.
+pub fn derive_bounds(mut sample: Vec<Value>, parts: usize) -> Vec<Value> {
+    if parts <= 1 {
+        return Vec::new();
+    }
+    sample.sort_by(value_cmp);
+    sample.dedup();
+    if sample.len() < parts {
+        return Vec::new();
+    }
+    (1..parts)
+        .map(|i| sample[i * sample.len() / parts].clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dag::OpSpec;
+    use crate::engine::operator::{Emitter, Operator};
+    use crate::tuple::Tuple;
+    use crate::workloads::VecSource;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    fn workflow() -> Workflow {
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 2, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let f = w.add(OpSpec::unary("filter", 2, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(Noop)
+        }));
+        w.connect(s, f, 0);
+        w
+    }
+
+    #[test]
+    fn repartition_plans_one_step() {
+        let w = workflow();
+        let steps = plan(
+            &w,
+            &PlanDelta::Repartition {
+                op: 1,
+                port: 0,
+                scheme: PartitionScheme::Hash { key: 0 },
+            },
+        )
+        .unwrap();
+        assert_eq!(steps.len(), 1);
+        assert!(matches!(
+            steps[0],
+            MigrationStep::Repartition { op: 1, port: 0, .. }
+        ));
+    }
+
+    #[test]
+    fn repartition_refuses_bad_targets() {
+        let w = workflow();
+        // Unknown op / port.
+        assert!(plan(
+            &w,
+            &PlanDelta::Repartition { op: 9, port: 0, scheme: PartitionScheme::RoundRobin }
+        )
+        .is_err());
+        assert!(plan(
+            &w,
+            &PlanDelta::Repartition { op: 1, port: 3, scheme: PartitionScheme::RoundRobin }
+        )
+        .is_err());
+        // Broadcast in either direction.
+        assert!(plan(
+            &w,
+            &PlanDelta::Repartition { op: 1, port: 0, scheme: PartitionScheme::Broadcast }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn insert_mat_requires_the_edge() {
+        let w = workflow();
+        assert!(plan(&w, &PlanDelta::InsertMat { from: 0, to: 1, to_port: 0 }).is_ok());
+        assert!(plan(&w, &PlanDelta::InsertMat { from: 1, to: 0, to_port: 0 }).is_err());
+    }
+
+    #[test]
+    fn replan_decomposes_into_ordered_scales() {
+        let w = workflow();
+        let steps =
+            plan(&w, &PlanDelta::Replan { workers: vec![(0, 3), (1, 4)] }).unwrap();
+        assert_eq!(steps.len(), 2);
+        assert!(matches!(steps[0], MigrationStep::Scale { op: 0, workers: 3 }));
+        assert!(matches!(steps[1], MigrationStep::Scale { op: 1, workers: 4 }));
+        assert!(plan(&w, &PlanDelta::Replan { workers: vec![] }).is_err());
+        assert!(plan(&w, &PlanDelta::Replan { workers: vec![(1, 0)] }).is_err());
+    }
+
+    #[test]
+    fn derive_bounds_quantile_cuts() {
+        let sample: Vec<Value> = (0..100).map(Value::Int).collect();
+        let b = derive_bounds(sample, 4);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b, vec![Value::Int(25), Value::Int(50), Value::Int(75)]);
+        // Too few distinct values: empty (degenerate but total).
+        assert!(derive_bounds(vec![Value::Int(1), Value::Int(1)], 4).is_empty());
+        assert!(derive_bounds(Vec::new(), 1).is_empty());
+    }
+
+    #[test]
+    fn outcome_fence_total_sums_steps() {
+        let o = MigrationOutcome {
+            applied: true,
+            rolled_back: false,
+            steps: vec![
+                StepOutcome {
+                    desc: "a".into(),
+                    fence: Duration::from_millis(3),
+                    applied: true,
+                },
+                StepOutcome {
+                    desc: "b".into(),
+                    fence: Duration::from_millis(4),
+                    applied: true,
+                },
+            ],
+            total: Duration::from_millis(9),
+        };
+        assert_eq!(o.fence_total(), Duration::from_millis(7));
+    }
+}

@@ -29,6 +29,11 @@
 //! ([`Execution::scale_operator`]) or by the
 //! [`scale::AutoscalePlugin`] policy (with an ownership guard so the
 //! plugin and an external scheduler never fight over one operator).
+//! The [`migrate`] module generalizes that fence into **live plan
+//! migration**: repartitioning a live edge, splicing a
+//! materialization in or out, or applying a multi-operator worker
+//! re-plan — each as an ordered sequence of fenced steps with
+//! abort-and-restore ([`Execution::migrate`]).
 
 pub mod message;
 pub mod channel;
@@ -39,9 +44,11 @@ pub mod worker;
 pub mod breakpoint;
 pub mod controller;
 pub mod fault;
+pub mod migrate;
 pub mod scale;
 
 pub use controller::{Execution, ExecSummary};
+pub use migrate::{MigrationOutcome, PlanDelta};
 pub use scale::AutoscalePlugin;
 pub use dag::{Edge, OpSpec, Workflow};
 pub use message::{ControlMessage, DataEvent, WorkerEvent, WorkerId};

@@ -253,6 +253,22 @@ pub trait Operator: Send {
         self.restore(s);
     }
 
+    /// Elastic scale-down of a **broadcast-input** operator: surrender
+    /// the keyed state derived from *partitioned* (non-broadcast) input
+    /// only — the complement of
+    /// [`Operator::replicate_broadcast_state`]. A retiring replica
+    /// holder's broadcast-side state is redundant (every survivor keeps
+    /// an identical copy), but its partitioned-port keyed state is
+    /// unique and must be re-hashed onto the survivors. The default
+    /// returns an empty state — correct for operators whose whole state
+    /// derives from broadcast input; mixed-port operators with keyed
+    /// non-broadcast state (e.g. [`crate::operators::Enrich`]'s per-key
+    /// counts) override it. The operator must forget the returned
+    /// state.
+    fn partitioned_state(&mut self) -> OpState {
+        OpState::default()
+    }
+
     /// Surrender buffered *input* tuples that are neither reflected in
     /// emitted output nor in keyed state — e.g. a hash join's
     /// early-probe buffer — as `(port, tuples)` pairs. Elastic scaling

@@ -59,6 +59,13 @@
 //!               │                           survive)
 //! ```
 //!
+//! The fence (steps 1, 2 and 6) is also the substrate for **live plan
+//! migration** ([`crate::engine::migrate`]): repartition-scheme swaps,
+//! mat insertion/removal and multi-step worker re-plans all run the
+//! same FENCE → UNPLUG → … → RESUME epoch, with step 3 replaced by
+//! their own plan mutation (protocol diagram in the `migrate` module
+//! docs).
+//!
 //! **Exactness.** Pausing flushes every sender, so the epoch observes a
 //! quiescent data plane; the unplug step surrenders *all* state and
 //! *all* unprocessed input of the old worker set, so nothing is lost or

@@ -921,7 +921,7 @@ impl Worker {
                     self.replay.push_back(r);
                 }
             }
-            ControlMessage::ExtractScaleState { replicate } => {
+            ControlMessage::ExtractScaleState { replicate, partitioned_only, preserve_routing } => {
                 // Scale fence (b): unplug. Only sent while fence-paused,
                 // so the input channel is quiescent. Drain it into the
                 // stash either way, then surrender (move) or replicate
@@ -929,7 +929,21 @@ impl Worker {
                 while let Ok(ev) = self.mailbox.data.try_recv() {
                     self.stash.push_back(ev);
                 }
-                if replicate {
+                if replicate && partitioned_only {
+                    // Re-shard sweep: surrender (move) only the keyed
+                    // partitioned-port state, keeping pending input,
+                    // the in-progress batch and the source. Mixed-port
+                    // broadcast operators re-align their per-key state
+                    // with `hash % n` routing when the worker set
+                    // changes; broadcast-only operators surrender an
+                    // empty state, making the sweep a no-op.
+                    let _ = self.event_tx.send(WorkerEvent::ScaleState {
+                        worker: self.id,
+                        state: self.op.partitioned_state(),
+                        pending: Vec::new(),
+                        source: None,
+                    });
+                } else if replicate {
                     // Broadcast scale-up donor: copy, keep everything.
                     let mut pending: Vec<DataEvent> = Vec::new();
                     if let Some((msg, idx)) = &self.current {
@@ -952,15 +966,26 @@ impl Worker {
                     });
                 } else {
                     let mut pending: Vec<DataEvent> = Vec::new();
+                    let mut rem_base: Option<usize> = None;
                     if let Some((msg, idx)) = self.current.take() {
                         let mut m = msg;
                         m.batch = m.batch.slice_from(idx);
                         if let Some(hc) = &mut m.hashes {
                             hc.advance(idx);
                         }
+                        rem_base = Some(idx);
                         pending.push(DataEvent::Batch(m));
                     }
                     pending.extend(self.stash.drain(..));
+                    // How many of the surrendered batches came from the
+                    // stash/channel (vs. the remainder / synthesized
+                    // buffered input) — the replay remap needs the old
+                    // message numbering they occupied.
+                    let stash_batches = pending
+                        .iter()
+                        .skip(rem_base.is_some() as usize)
+                        .filter(|ev| matches!(ev, DataEvent::Batch(_)))
+                        .count();
                     // The surrendered tuples leave this worker's queue;
                     // the re-injection re-adds them on their new
                     // owners' gauges.
@@ -992,7 +1017,30 @@ impl Worker {
                             hashes: None,
                         }));
                     }
-                    let state = self.op.extract_state(None, false);
+                    // Fence-aware replay remapping (§2.6.2 across a
+                    // migration fence): the coordinator consolidates
+                    // the surrendered input into one batch per
+                    // (destination, port), so the old per-message
+                    // replay positions no longer exist. When routing is
+                    // preserved and this worker is the sole receiver,
+                    // the post-fence layout is computable here — remap
+                    // pending records onto it so they stay tuple-exact
+                    // instead of degrading to end-of-stream force-apply.
+                    if preserve_routing
+                        && self.peers.len() <= 1
+                        && self.source.is_none()
+                        && !self.replay.is_empty()
+                    {
+                        self.remap_replay_positions(&pending, rem_base, stash_batches);
+                    }
+                    let state = if partitioned_only {
+                        // Broadcast-input retiree: surrender only the
+                        // keyed partitioned-port state (survivors keep
+                        // their own broadcast replicas).
+                        self.op.partitioned_state()
+                    } else {
+                        self.op.extract_state(None, false)
+                    };
                     // Scan workers surrender the live source for
                     // repartitioning over the new worker set.
                     let source = self.source.take();
@@ -1057,6 +1105,36 @@ impl Worker {
                     self.recheck_ports = true;
                 }
             }
+            ControlMessage::RetargetEdge {
+                old_target,
+                old_port,
+                new_target,
+                new_port,
+                receivers,
+                scheme,
+                senders,
+            } => {
+                // Plan-migration fence (mat insert/remove): swap the
+                // *destination operator* of one output edge. Buffers
+                // are empty while fence-paused, but flush defensively —
+                // a buffered tuple must reach the old destination, not
+                // silently ride into the new one.
+                for e in 0..self.out.edges.len() {
+                    if self.out.edges[e].target_op != old_target
+                        || self.out.edges[e].port != old_port
+                    {
+                        continue;
+                    }
+                    self.out.flush_edge(e);
+                    self.out.edges[e] = OutputEdge::new(
+                        new_target,
+                        new_port,
+                        Partitioner::new(scheme.clone(), receivers, self.id.idx),
+                        senders.clone(),
+                    )
+                    .with_columnar(self.columnar);
+                }
+            }
             ControlMessage::FenceResume => {
                 // Undo only the fence's Pause; a pre-fence breakpoint or
                 // target pause survives the epoch.
@@ -1088,8 +1166,98 @@ impl Worker {
                 | ControlMessage::RescaleSelf { .. }
                 | ControlMessage::RescaleEdge { .. }
                 | ControlMessage::UpdateUpstreamCount { .. }
+                | ControlMessage::RetargetEdge { .. }
                 | ControlMessage::FenceResume
         )
+    }
+
+    /// Remap pending control-replay positions across a
+    /// routing-preserving migration fence (single-receiver targets).
+    ///
+    /// The fence consolidates the surrendered input — the remainder of
+    /// the partially processed batch (old message `m0`, from tuple
+    /// `rem_base`), the `stash_batches` stashed/queued batches (old
+    /// messages `m0+1 ..= m0+stash_batches`), and synthesized
+    /// operator-buffered input (never numbered) — into **one batch per
+    /// port**, re-delivered in ascending port order as new messages
+    /// `m0+1 ..= m0+C` (C = non-empty ports). A replay record pointing
+    /// into the surrendered window moves to its tuple's exact offset in
+    /// the consolidated batch; a record beyond the window shifts by
+    /// `C - stash_batches` (best effort: upstream re-produces the same
+    /// post-fence batch boundaries because the fence's pause flushed it
+    /// to a boundary). Records at or before the current position are
+    /// already applied and stay put.
+    fn remap_replay_positions(
+        &mut self,
+        pending: &[DataEvent],
+        rem_base: Option<usize>,
+        stash_batches: usize,
+    ) {
+        let m0 = self.msg_count;
+        // The remainder's recorded positions are in *original-stream*
+        // tuple coordinates; post-recovery they sit `resume_offset`
+        // beyond the recovered view (see `replay_pos`).
+        let rem_base_orig = rem_base.map(|b| {
+            b + if m0 == self.resume_msg_count { self.resume_offset } else { 0 }
+        });
+        // Walk the surrendered batches in re-injection order: per-port
+        // running prefixes give each old message its offset within the
+        // consolidated batch for its port.
+        let mut port_totals: std::collections::BTreeMap<usize, usize> =
+            std::collections::BTreeMap::new();
+        // old message number -> (port, prefix in consolidated batch)
+        let mut old_msgs: HashMap<u64, (usize, usize)> = HashMap::new();
+        let rem_off = rem_base.is_some() as usize;
+        let mut bi = 0usize;
+        for ev in pending {
+            let DataEvent::Batch(b) = ev else { continue };
+            let entry = port_totals.entry(b.port).or_insert(0);
+            let prefix = *entry;
+            *entry += b.batch.len();
+            if rem_off == 1 && bi == 0 {
+                old_msgs.insert(m0, (b.port, prefix));
+            } else if bi < rem_off + stash_batches {
+                old_msgs.insert(m0 + 1 + (bi - rem_off) as u64, (b.port, prefix));
+            }
+            bi += 1;
+        }
+        // Consolidated batches arrive port-ascending: new message
+        // number per port.
+        let new_msg: HashMap<usize, u64> = port_totals
+            .keys()
+            .enumerate()
+            .map(|(i, &p)| (p, m0 + 1 + i as u64))
+            .collect();
+        let c = port_totals.len() as u64;
+        let s = stash_batches as u64;
+        for rec in self.replay.iter_mut() {
+            let m = rec.pos.msg_count;
+            let t = rec.pos.tuple_idx;
+            if m == m0 {
+                if let (Some(base), Some(&(port, prefix))) =
+                    (rem_base_orig, old_msgs.get(&m0))
+                {
+                    if t >= base {
+                        rec.pos = ReplayPos {
+                            msg_count: new_msg[&port],
+                            tuple_idx: prefix + (t - base),
+                        };
+                    }
+                }
+            } else if m > m0 && m <= m0 + s {
+                if let Some(&(port, prefix)) = old_msgs.get(&m) {
+                    rec.pos =
+                        ReplayPos { msg_count: new_msg[&port], tuple_idx: prefix + t };
+                }
+            } else if m > m0 + s {
+                rec.pos = ReplayPos { msg_count: (m - s) + c, tuple_idx: t };
+            }
+        }
+        // The per-port regrouping can reorder records; the replay queue
+        // must stay position-sorted for `apply_due_replays`.
+        let mut recs: Vec<LogRecord> = self.replay.drain(..).collect();
+        recs.sort_by_key(|r| r.pos);
+        self.replay = recs.into();
     }
 
     fn make_snapshot(&mut self) -> WorkerSnapshot {

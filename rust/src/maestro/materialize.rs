@@ -42,6 +42,14 @@ impl MatStore {
         self.data.lock().unwrap().len()
     }
 
+    /// Drain the full store contents, resetting the byte counter. Used
+    /// by live mat *removal* ([`crate::engine::migrate`]): the rows
+    /// captured so far are re-injected into the restored direct edge.
+    pub fn take_all(&self) -> Vec<Tuple> {
+        self.bytes.store(0, Ordering::Relaxed);
+        std::mem::take(&mut *self.data.lock().unwrap())
+    }
+
     /// Observed average tuple width in bytes (`None` until the store
     /// holds rows) — re-planning feeds this back into
     /// [`CostParams::bytes_per_tuple`](crate::maestro::cost::CostParams).
@@ -88,6 +96,20 @@ impl Operator for MatWriter {
 
     fn state_size(&self) -> usize {
         self.buffer.len()
+    }
+
+    /// Unflushed tail of the write buffer, surrendered when a live mat
+    /// is removed mid-run so the tuples re-enter the restored edge
+    /// (they never reached the shared store; their bytes are deducted
+    /// since they no longer pass through it).
+    fn drain_buffered_input(&mut self) -> Vec<(usize, Vec<Tuple>)> {
+        let sz: u64 = self.buffer.iter().map(|t| t.byte_size() as u64).sum();
+        self.store.bytes.fetch_sub(sz, Ordering::Relaxed);
+        if self.buffer.is_empty() {
+            Vec::new()
+        } else {
+            vec![(0, std::mem::take(&mut self.buffer))]
+        }
     }
 }
 

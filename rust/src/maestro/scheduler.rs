@@ -37,6 +37,13 @@
 //!    operator whose scale request the engine actually refuses (e.g.
 //!    its region drained early and workers completed) is pinned at its
 //!    current count and never retried.
+//!    With a grace window set ([`MaestroScheduler::mid_replan_after_ms`])
+//!    the re-planner additionally runs **mid-region**: a region still
+//!    executing past the window is re-planned from its *live*
+//!    probe-stream observations and the deltas are applied to the
+//!    active region as one fenced migration
+//!    ([`PlanDelta::Replan`](crate::engine::migrate::PlanDelta) via
+//!    [`Execution::migrate`]), so a refusal rolls the whole batch back.
 //! 4. **Record** — every step lands in the [`ScheduleOutcome`] decision
 //!    trail ([`RegionPlan`]): estimated vs observed cardinalities with
 //!    q-errors, the worker assignment after each re-plan, each scale
@@ -107,6 +114,15 @@ pub struct RegionPlan {
     /// Scale requests issued (empty when the revised assignment matched
     /// the current one).
     pub decisions: Vec<ScaleDecision>,
+    /// `true` when this re-plan ran *inside* a region — driven by the
+    /// live probe stream instead of ancestor completion — and its
+    /// deltas were applied as one fenced migration
+    /// ([`PlanDelta::Replan`](crate::engine::migrate::PlanDelta)).
+    pub mid_region: bool,
+    /// The migration's per-step decision trail (step descriptions, in
+    /// apply order, rollback steps included). Empty for pre-activation
+    /// re-plans, which scale one operator at a time.
+    pub migration_steps: Vec<String>,
 }
 
 /// Outcome of a scheduled run.
@@ -146,11 +162,17 @@ pub struct MaestroScheduler {
     pub cost: CostParams,
     /// Maximum edges per materialization choice considered.
     pub max_mat_edges: usize,
+    /// Mid-region re-plan grace window in milliseconds (0 = off). When
+    /// set (and a worker budget is active), a region still running
+    /// this long after activation is re-planned **mid-region** from
+    /// its live probe-stream observations, the deltas applied as one
+    /// fenced migration — at most once per region.
+    pub mid_replan_after_ms: u64,
 }
 
 impl MaestroScheduler {
     pub fn new(config: Config, cost: CostParams) -> MaestroScheduler {
-        MaestroScheduler { config, cost, max_mat_edges: 3 }
+        MaestroScheduler { config, cost, max_mat_edges: 3, mid_replan_after_ms: 0 }
     }
 
     /// The per-region worker budget (0 = elasticity off, deploy at
@@ -324,6 +346,32 @@ impl MaestroScheduler {
                 .collect();
             if !sources.is_empty() {
                 exec.start_sources(sources);
+            }
+            // Mid-region re-plan (opt-in): if the region is still
+            // running once the grace window passes, correct its worker
+            // assignment from the live probe stream — at most one
+            // mid-region migration per region.
+            if self.budget() > 0
+                && self.mid_replan_after_ms > 0
+                && !exec.await_ops_timeout(
+                    g.regions[rid].ops.clone(),
+                    Duration::from_millis(self.mid_replan_after_ms),
+                )
+            {
+                if let Some(plan) = self.mid_region_replan(
+                    &exec,
+                    &m,
+                    &g,
+                    &order[pos..],
+                    rid,
+                    &initial_rows,
+                    &cost,
+                    &mut current,
+                    &mut unscalable,
+                    started,
+                ) {
+                    replans.push(plan);
+                }
             }
         }
         let summary = exec.join();
@@ -551,7 +599,160 @@ impl MaestroScheduler {
             observed,
             workers: current.to_vec(),
             decisions,
+            mid_region: false,
+            migration_steps: Vec::new(),
         }
+    }
+
+    /// Probe-stream-driven **mid-region** re-plan: runs when the
+    /// just-activated region is still executing after the grace window
+    /// ([`mid_replan_after_ms`](Self::mid_replan_after_ms)). Live
+    /// per-worker produced counts — the probe stream of the active
+    /// region — are pinned into a *scratch* cost model (they are lower
+    /// bounds, so they never enter the cross-region calibration), the
+    /// remaining regions' counts are re-assigned, and a differing
+    /// assignment for the active region is applied as **one fenced
+    /// migration** ([`PlanDelta::Replan`]) so a refusal rolls the
+    /// whole batch back. Returns the trail entry (`None` when nothing
+    /// was observed or nothing changed).
+    ///
+    /// [`PlanDelta::Replan`]: crate::engine::migrate::PlanDelta
+    #[allow(clippy::too_many_arguments)]
+    fn mid_region_replan(
+        &self,
+        exec: &Execution,
+        m: &Materialized,
+        g: &RegionGraph,
+        remaining: &[usize],
+        active: usize,
+        initial_rows: &[f64],
+        cost: &CostParams,
+        current: &mut [usize],
+        unscalable: &mut HashSet<usize>,
+        started: Instant,
+    ) -> Option<RegionPlan> {
+        let mw = &m.workflow;
+        // --- observe the live probe stream ---------------------------
+        let mut produced: HashMap<usize, u64> = HashMap::new();
+        let mut busy: HashMap<usize, (u64, u64)> = HashMap::new();
+        for (id, st) in exec.stats() {
+            *produced.entry(id.op).or_insert(0) += st.produced;
+            let b = busy.entry(id.op).or_insert((0, 0));
+            b.0 += st.busy_ns;
+            b.1 += st.processed;
+        }
+        let writer_ops: HashSet<usize> = m.writers.iter().copied().collect();
+        let mut live_cost = cost.clone();
+        let mut observed = Vec::new();
+        for &op in &g.regions[active].ops {
+            if writer_ops.contains(&op) {
+                continue;
+            }
+            let rows = produced.get(&op).copied().unwrap_or(0) as f64;
+            if rows <= 0.0 {
+                continue;
+            }
+            live_cost.pinned_rows.insert(op, rows);
+            if mw.ops[op].is_source {
+                live_cost.source_rows.insert(op, rows);
+            }
+            let tuple_cost_us = match busy.get(&op) {
+                Some(&(ns, n)) if n > 0 => {
+                    let us = ns as f64 / n as f64 / 1000.0;
+                    live_cost.tuple_cost.insert(op, us);
+                    Some(us)
+                }
+                _ => None,
+            };
+            observed.push(ObservedOp {
+                op,
+                estimated_rows: initial_rows[op],
+                observed_rows: rows,
+                q_error: q_error(initial_rows[op], rows),
+                tuple_cost_us,
+            });
+        }
+        if observed.is_empty() {
+            return None;
+        }
+        // --- re-plan -------------------------------------------------
+        let rows_out = cardinalities(mw, &live_cost);
+        let remaining_regions: Vec<crate::maestro::region::Region> =
+            remaining.iter().map(|&r| g.regions[r].clone()).collect();
+        let mut fixed: HashMap<usize, usize> = HashMap::new();
+        for r in &remaining_regions {
+            for &op in &r.ops {
+                if unscalable.contains(&op) {
+                    fixed.insert(op, current[op]);
+                }
+            }
+        }
+        let assigned = crate::maestro::cost::assign_workers(
+            mw,
+            &remaining_regions,
+            &rows_out,
+            &live_cost,
+            self.budget(),
+            &fixed,
+        );
+        // --- apply, active region only, as one fenced migration ------
+        let groups = crate::maestro::cost::one_to_one_groups(mw);
+        let active_region = &g.regions[active];
+        let mut changes: Vec<(usize, usize, usize)> = Vec::new();
+        let mut change_groups: Vec<Vec<usize>> = Vec::new();
+        for g_ops in groups
+            .iter()
+            .filter(|g| g.iter().all(|op| active_region.contains(*op)))
+        {
+            let c: Vec<(usize, usize, usize)> = g_ops
+                .iter()
+                .map(|&op| (op, current[op], assigned[op]))
+                .filter(|&(op, from, to)| to != from && !fixed.contains_key(&op))
+                .collect();
+            if !c.is_empty() {
+                changes.extend(c);
+                change_groups.push(g_ops.clone());
+            }
+        }
+        if changes.is_empty() {
+            return None;
+        }
+        let outcome = exec.migrate(crate::engine::migrate::PlanDelta::Replan {
+            workers: changes.iter().map(|&(op, _, to)| (op, to)).collect(),
+        });
+        let mut decisions = Vec::new();
+        for (i, &(op, from, to)) in changes.iter().enumerate() {
+            let step = outcome.steps.get(i);
+            let applied = outcome.applied && step.is_some_and(|s| s.applied);
+            if applied {
+                current[op] = to;
+            }
+            decisions.push(ScaleDecision {
+                op,
+                from,
+                to,
+                fence_ms: step.map_or(0.0, |s| s.fence.as_secs_f64() * 1e3),
+                applied,
+            });
+        }
+        if !outcome.applied {
+            // The sequence aborted (any applied prefix was rolled
+            // back): counts are unchanged; never retry these groups.
+            for g_ops in &change_groups {
+                for &op in g_ops {
+                    unscalable.insert(op);
+                }
+            }
+        }
+        Some(RegionPlan {
+            region: active,
+            at: started.elapsed().as_secs_f64(),
+            observed,
+            workers: current.to_vec(),
+            decisions,
+            mid_region: true,
+            migration_steps: outcome.steps.iter().map(|s| s.desc.clone()).collect(),
+        })
     }
 }
 

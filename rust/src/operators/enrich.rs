@@ -1,0 +1,396 @@
+//! Mixed-port broadcast enrichment: a broadcast dictionary **plus**
+//! hash-partitioned per-key state in one operator.
+//!
+//! Port 0 (**dict**, blocking, `Broadcast`) streams `[key, bonus]`
+//! rows that every worker replicates into a lookup table. Port 1
+//! (**events**, `Hash{0}`) streams `[key, val]` rows; each emits
+//! `[key, val + bonus(key), 1]` and bumps a per-key counter, and at
+//! EOF every counted key emits a `[key, count, -1]` summary row.
+//!
+//! The per-key counters are **partitioned-port state**: correctness
+//! depends on `stable_hash(key) % n` colocation with the event port's
+//! hash routing — exactly the state the broadcast scale path's
+//! [`Operator::partitioned_state`] sweep must re-shard when the worker
+//! set changes. A broadcast-only-state operator (e.g.
+//! [`crate::operators::HashJoin`] with a broadcast build side) keeps
+//! its default empty sweep; this operator is the regression surface
+//! for the replicate/retire path's former broadcast-only-state
+//! assumption.
+
+use crate::engine::operator::{Emitter, OpState, Operator};
+use crate::tuple::{Tuple, Value};
+use std::collections::HashMap;
+
+/// Dictionary port index (blocking, broadcast).
+pub const DICT: usize = 0;
+/// Event port index (hash-partitioned).
+pub const EVENT: usize = 1;
+
+/// State-encoding tags: dict rows vs. count rows inside one
+/// [`OpState`] (both live in `keyed_tuples`, keyed by the same
+/// `stable_hash(key)` space).
+const TAG_DICT: &str = "d";
+const TAG_COUNT: &str = "c";
+
+#[derive(Default)]
+pub struct Enrich {
+    /// Broadcast-replicated: key hash → (key, bonus).
+    dict: HashMap<u64, (Value, i64)>,
+    dict_done: bool,
+    /// Hash-partitioned: key hash → (key, event count). Colocated with
+    /// the event port's `Hash{0}` routing.
+    counts: HashMap<u64, (Value, i64)>,
+    /// Events that arrived before dict EOF (buffering mode, like the
+    /// join's early-probe buffer).
+    early: Vec<Tuple>,
+}
+
+impl Enrich {
+    pub fn new() -> Enrich {
+        Enrich::default()
+    }
+
+    fn apply_event(&mut self, t: &Tuple, out: &mut dyn Emitter) {
+        let key = t.get(0);
+        let h = key.stable_hash();
+        let bonus = self.dict.get(&h).map(|(_, b)| *b).unwrap_or(0);
+        let val = t.get(1).as_int().unwrap_or(0);
+        out.emit(Tuple::new(vec![
+            key.clone(),
+            Value::Int(val + bonus),
+            Value::Int(1),
+        ]));
+        let e = self.counts.entry(h).or_insert_with(|| (key.clone(), 0));
+        e.1 += 1;
+    }
+
+    fn tagged(tag: &str, key: &Value, n: i64) -> Tuple {
+        Tuple::new(vec![Value::str(tag), key.clone(), Value::Int(n)])
+    }
+
+    /// Fold tagged state rows into the live maps (dict rows merge by
+    /// last-write, count rows sum — shard installs and checkpoint
+    /// restores share this decoder).
+    fn absorb_tagged(&mut self, s: &OpState) {
+        for rows in s.keyed_tuples.values() {
+            for t in rows {
+                let tag = t.get(0).as_str().unwrap_or("");
+                let key = t.get(1);
+                let n = t.get(2).as_int().unwrap_or(0);
+                let h = key.stable_hash();
+                match tag {
+                    TAG_DICT => {
+                        self.dict.insert(h, (key.clone(), n));
+                    }
+                    TAG_COUNT => {
+                        let e = self
+                            .counts
+                            .entry(h)
+                            .or_insert_with(|| (key.clone(), 0));
+                        e.1 += n;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+impl Operator for Enrich {
+    fn name(&self) -> &str {
+        "enrich"
+    }
+
+    fn num_ports(&self) -> usize {
+        2
+    }
+
+    fn blocking_ports(&self) -> Vec<usize> {
+        vec![DICT]
+    }
+
+    fn process(&mut self, t: Tuple, port: usize, out: &mut dyn Emitter) {
+        match port {
+            DICT => {
+                let h = t.get(0).stable_hash();
+                let bonus = t.get(1).as_int().unwrap_or(0);
+                self.dict.insert(h, (t.get(0).clone(), bonus));
+            }
+            EVENT => {
+                if self.dict_done {
+                    self.apply_event(&t, out);
+                } else {
+                    self.early.push(t);
+                }
+            }
+            _ => unreachable!("enrich has 2 ports"),
+        }
+    }
+
+    fn finish_port(&mut self, port: usize, out: &mut dyn Emitter) {
+        if port == DICT {
+            self.dict_done = true;
+            let buffered = std::mem::take(&mut self.early);
+            for t in &buffered {
+                self.apply_event(t, out);
+            }
+        }
+    }
+
+    fn finish(&mut self, out: &mut dyn Emitter) {
+        // Per-key summaries, hash-ordered for determinism within a
+        // worker (cross-worker order is a multiset anyway).
+        let mut keys: Vec<u64> = self.counts.keys().copied().collect();
+        keys.sort_unstable();
+        for h in keys {
+            let (key, n) = &self.counts[&h];
+            out.emit(Tuple::new(vec![
+                key.clone(),
+                Value::Int(*n),
+                Value::Int(-1),
+            ]));
+        }
+    }
+
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        for (h, (k, b)) in &self.dict {
+            s.keyed_tuples
+                .entry(*h)
+                .or_default()
+                .push(Self::tagged(TAG_DICT, k, *b));
+        }
+        for (h, (k, n)) in &self.counts {
+            s.keyed_tuples
+                .entry(*h)
+                .or_default()
+                .push(Self::tagged(TAG_COUNT, k, *n));
+        }
+        if !self.early.is_empty() {
+            s.keyed_tuples
+                .entry(u64::MAX) // sentinel scope for the early buffer
+                .or_default()
+                .extend(self.early.iter().cloned());
+        }
+        s.counters.insert("dict_done".into(), self.dict_done as i64);
+        s
+    }
+
+    fn restore(&mut self, mut s: OpState) {
+        self.dict.clear();
+        self.counts.clear();
+        self.early = s.keyed_tuples.remove(&u64::MAX).unwrap_or_default();
+        self.dict_done = s.counters.get("dict_done").copied().unwrap_or(0) != 0;
+        self.absorb_tagged(&s);
+    }
+
+    fn state_size(&self) -> usize {
+        self.dict.len() + self.counts.len() + self.early.len()
+    }
+
+    fn extract_state(&mut self, _keys: Option<&[u64]>, replicate: bool) -> OpState {
+        let s = self.snapshot();
+        if !replicate {
+            self.dict.clear();
+            self.counts.clear();
+            self.early.clear();
+        }
+        s
+    }
+
+    fn merge_state(&mut self, s: OpState) {
+        self.absorb_tagged(&s);
+        // A helper receiving event-port state is past dict EOF (the
+        // skewed worker only migrates once its own dict is complete).
+        self.dict_done = true;
+    }
+
+    fn install_state(&mut self, s: OpState) {
+        // Shard install (re-shard sweep / scale): tagged rows only,
+        // keep this worker's own phase.
+        self.absorb_tagged(&s);
+    }
+
+    /// Broadcast replica: the dictionary and its EOF flag — **not**
+    /// the per-key counts (partitioned; replicating them would
+    /// double-count) and not the early buffer (events are partitioned
+    /// per worker).
+    fn replicate_broadcast_state(&self) -> OpState {
+        let mut s = OpState::default();
+        for (h, (k, b)) in &self.dict {
+            s.keyed_tuples
+                .entry(*h)
+                .or_default()
+                .push(Self::tagged(TAG_DICT, k, *b));
+        }
+        s.counters.insert("dict_done".into(), self.dict_done as i64);
+        s
+    }
+
+    fn install_replica(&mut self, s: OpState) {
+        self.dict_done = s.counters.get("dict_done").copied().unwrap_or(0) != 0;
+        self.dict.clear();
+        self.absorb_tagged(&s);
+    }
+
+    /// The per-key counters are the partitioned-port state the
+    /// broadcast scale fence sweeps and re-shards over the new worker
+    /// set (`stable_hash(key) % n` colocation with event routing).
+    fn partitioned_state(&mut self) -> OpState {
+        let mut s = OpState::default();
+        for (h, (k, n)) in std::mem::take(&mut self.counts) {
+            s.keyed_tuples
+                .entry(h)
+                .or_default()
+                .push(Self::tagged(TAG_COUNT, &k, n));
+        }
+        s
+    }
+
+    /// Early events are re-routable input, not keyed state.
+    fn drain_buffered_input(&mut self) -> Vec<(usize, Vec<Tuple>)> {
+        if self.early.is_empty() {
+            Vec::new()
+        } else {
+            vec![(EVENT, std::mem::take(&mut self.early))]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::operator::VecEmitter;
+
+    fn kv(k: i64, v: i64) -> Tuple {
+        Tuple::new(vec![Value::Int(k), Value::Int(v)])
+    }
+
+    fn run_dict(e: &mut Enrich, rows: &[(i64, i64)], out: &mut VecEmitter) {
+        for (k, b) in rows {
+            e.process(kv(*k, *b), DICT, out);
+        }
+        e.finish_port(DICT, out);
+    }
+
+    #[test]
+    fn enriches_and_counts() {
+        let mut e = Enrich::new();
+        let mut out = VecEmitter::default();
+        run_dict(&mut e, &[(1, 100), (2, 200)], &mut out);
+        e.process(kv(1, 5), EVENT, &mut out);
+        e.process(kv(1, 6), EVENT, &mut out);
+        e.process(kv(3, 7), EVENT, &mut out); // no dict entry: bonus 0
+        e.finish(&mut out);
+        let events: Vec<(i64, i64)> = out
+            .0
+            .iter()
+            .filter(|t| t.get(2).as_int() == Some(1))
+            .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_int().unwrap()))
+            .collect();
+        assert_eq!(events, vec![(1, 105), (1, 106), (3, 7)]);
+        let mut counts: Vec<(i64, i64)> = out
+            .0
+            .iter()
+            .filter(|t| t.get(2).as_int() == Some(-1))
+            .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_int().unwrap()))
+            .collect();
+        counts.sort_unstable();
+        assert_eq!(counts, vec![(1, 2), (3, 1)]);
+    }
+
+    #[test]
+    fn early_events_buffer_until_dict_eof() {
+        let mut e = Enrich::new();
+        let mut out = VecEmitter::default();
+        e.process(kv(1, 5), EVENT, &mut out);
+        assert_eq!(out.0.len(), 0);
+        run_dict(&mut e, &[(1, 10)], &mut out);
+        assert_eq!(out.0.len(), 1, "buffered event replayed at dict EOF");
+        assert_eq!(out.0[0].get(1).as_int(), Some(15));
+    }
+
+    #[test]
+    fn partitioned_state_moves_counts_only() {
+        let mut e = Enrich::new();
+        let mut out = VecEmitter::default();
+        run_dict(&mut e, &[(1, 10)], &mut out);
+        e.process(kv(1, 1), EVENT, &mut out);
+        let swept = e.partitioned_state();
+        assert_eq!(swept.keyed_tuples.len(), 1);
+        assert!(e.counts.is_empty(), "counts surrendered");
+        assert!(!e.dict.is_empty(), "dict kept");
+        // Re-install (possibly on another worker) and keep counting.
+        let mut e2 = Enrich::new();
+        e2.dict_done = true;
+        e2.install_state(swept);
+        e2.process(kv(1, 2), EVENT, &mut out);
+        e2.finish(&mut out);
+        let summary: Vec<i64> = out
+            .0
+            .iter()
+            .filter(|t| t.get(2).as_int() == Some(-1))
+            .map(|t| t.get(1).as_int().unwrap())
+            .collect();
+        assert_eq!(summary, vec![2], "counts summed across the sweep");
+    }
+
+    #[test]
+    fn replica_excludes_partitioned_counts() {
+        let mut e = Enrich::new();
+        let mut out = VecEmitter::default();
+        run_dict(&mut e, &[(1, 10)], &mut out);
+        e.process(kv(1, 1), EVENT, &mut out);
+        let rep = e.replicate_broadcast_state();
+        let mut e2 = Enrich::new();
+        e2.install_replica(rep);
+        assert!(e2.dict_done);
+        assert!(e2.counts.is_empty(), "replica carries no counts");
+        e2.process(kv(1, 3), EVENT, &mut out);
+        assert_eq!(out.0.last().unwrap().get(1).as_int(), Some(13));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut e = Enrich::new();
+        let mut out = VecEmitter::default();
+        e.process(kv(2, 9), EVENT, &mut out); // early
+        e.process(kv(1, 10), DICT, &mut out);
+        let snap = e.snapshot();
+        let mut e2 = Enrich::new();
+        e2.restore(snap);
+        assert!(!e2.dict_done);
+        assert_eq!(e2.early.len(), 1);
+        assert_eq!(e2.dict.len(), 1);
+        e2.finish_port(DICT, &mut out);
+        e2.finish(&mut out);
+        let events: Vec<i64> = out
+            .0
+            .iter()
+            .filter(|t| t.get(2).as_int() == Some(1))
+            .map(|t| t.get(1).as_int().unwrap())
+            .collect();
+        assert_eq!(events, vec![9], "early event replayed post-restore");
+    }
+
+    #[test]
+    fn split_by_hash_keeps_count_rows_with_their_shard() {
+        let mut e = Enrich::new();
+        let mut out = VecEmitter::default();
+        run_dict(&mut e, &[], &mut out);
+        for k in 0..20 {
+            e.process(kv(k, 0), EVENT, &mut out);
+        }
+        let swept = e.partitioned_state();
+        let shards = swept.split_by_hash(3);
+        // Every tagged count row lands in the shard its key routes to.
+        for (i, shard) in shards.iter().enumerate() {
+            for (h, rows) in &shard.keyed_tuples {
+                assert_eq!((*h % 3) as usize, i);
+                for t in rows {
+                    assert_eq!(t.get(1).stable_hash(), *h);
+                }
+            }
+        }
+    }
+}

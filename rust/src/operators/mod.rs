@@ -8,11 +8,13 @@
 //! |---|---|---|
 //! | [`hash_join::HashJoin`] | build | mutable |
 //! | [`hash_join::HashJoin`] | probe | immutable |
+//! | [`enrich::Enrich`] | dict | mutable (broadcast + partitioned counts) |
 //! | [`group_by::GroupByPartial`]/[`group_by::GroupByFinal`] | — | mutable |
 //! | [`sort::SortWorker`]/[`sort::SortMerge`] | — | mutable |
 //! | [`basic`] (filter, project, keyword, parser, UDF map) | — | stateless |
 
 pub mod basic;
+pub mod enrich;
 pub mod hash_join;
 pub mod group_by;
 pub mod sort;
@@ -20,6 +22,7 @@ pub mod sink;
 pub mod ml_infer;
 
 pub use basic::{Filter, KeywordSearch, MapUdf, Project, RegexParser, Union};
+pub use enrich::Enrich;
 pub use group_by::{AggKind, GroupByFinal, GroupByPartial};
 pub use hash_join::HashJoin;
 pub use sink::{CollectSink, CountByKeySink, SinkHandle};

@@ -1,0 +1,427 @@
+//! Live plan migration (engine::migrate): each delta kind applied
+//! mid-run must leave the sink multiset byte-identical to an
+//! unmigrated run; an interrupted fence aborts with state fully
+//! restored; fences stay sub-second at batch 1024; and recovery from a
+//! checkpoint taken before a migration replays exactly — including the
+//! fence-aware replay-position remap.
+
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{
+    Execution, OpSpec, PartitionScheme, PlanDelta, Workflow,
+};
+use texera_amber::operators::basic::{Cmp, Filter, MapUdf};
+use texera_amber::operators::enrich::{Enrich, DICT, EVENT};
+use texera_amber::operators::{CollectSink, SinkHandle};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::VecSource;
+
+const ROWS: usize = 80_000;
+const KEYS: i64 = 37;
+
+/// scan(2, slow) → filter(2, RR) → sink(1); rows `(i % KEYS, i % 7)`,
+/// filter drops `v == 3`. The scan's per-tuple cost keeps the run
+/// alive long enough that mid-run deltas land mid-stream.
+fn stateless_wf(handle: SinkHandle) -> (Workflow, usize, usize) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source_with_op(
+        "scan",
+        2,
+        move |idx, parts| {
+            let rows: Vec<Tuple> = (0..ROWS)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| {
+                    Tuple::new(vec![Value::Int(i as i64 % KEYS), Value::Int(i as i64 % 7)])
+                })
+                .collect();
+            Box::new(VecSource::new(rows))
+        },
+        |_, _| Box::new(MapUdf::identity(1500)),
+    ));
+    let filter = w.add(OpSpec::unary(
+        "filter",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(Filter::new(1, Cmp::Ne, Value::Int(3))),
+    ));
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, sink, 0);
+    (w, scan, filter)
+}
+
+fn expect_stateless() -> Vec<(i64, i64)> {
+    let mut rows: Vec<(i64, i64)> = (0..ROWS)
+        .map(|i| (i as i64 % KEYS, i as i64 % 7))
+        .filter(|&(_, v)| v != 3)
+        .collect();
+    rows.sort_unstable();
+    rows
+}
+
+fn collect_pairs(handle: &SinkHandle) -> Vec<(i64, i64)> {
+    let mut got: Vec<(i64, i64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_int().unwrap()))
+        .collect();
+    got.sort_unstable();
+    got
+}
+
+#[test]
+fn repartition_applies_mid_run_byte_exact() {
+    for batch_size in [32usize, 256, 1024] {
+        let handle = SinkHandle::new(0);
+        let (w, _scan, filter) = stateless_wf(handle.clone());
+        let exec = Execution::start(w, Config { batch_size, ..Config::default() });
+        std::thread::sleep(Duration::from_millis(10));
+        // RR → Hash: the whole parked stream re-routes by key.
+        let o1 = exec.migrate(PlanDelta::Repartition {
+            op: filter,
+            port: 0,
+            scheme: PartitionScheme::Hash { key: 0 },
+        });
+        assert!(o1.applied, "batch {batch_size}: hash swap refused: {:?}", o1.steps);
+        std::thread::sleep(Duration::from_millis(10));
+        // Hash → Range with *empty* bounds: the planner derives bounds
+        // from the tuples parked in the fence.
+        let o2 = exec.migrate(PlanDelta::Repartition {
+            op: filter,
+            port: 0,
+            scheme: PartitionScheme::Range { key: 0, bounds: Vec::new() },
+        });
+        assert!(o2.applied, "batch {batch_size}: range swap refused: {:?}", o2.steps);
+        exec.join();
+        assert_eq!(
+            collect_pairs(&handle),
+            expect_stateless(),
+            "batch {batch_size}: multiset differs after repartition"
+        );
+    }
+}
+
+#[test]
+fn mat_insert_applies_mid_run_byte_exact() {
+    for batch_size in [32usize, 256, 1024] {
+        let handle = SinkHandle::new(0);
+        let (w, scan, filter) = stateless_wf(handle.clone());
+        let exec = Execution::start(w, Config { batch_size, ..Config::default() });
+        std::thread::sleep(Duration::from_millis(10));
+        let o = exec.migrate(PlanDelta::InsertMat { from: scan, to: filter, to_port: 0 });
+        assert!(o.applied, "batch {batch_size}: insert refused: {:?}", o.steps);
+        // The reader stays dormant until the writer completes; the run
+        // must still drain end-to-end with identical results.
+        exec.join();
+        assert_eq!(
+            collect_pairs(&handle),
+            expect_stateless(),
+            "batch {batch_size}: multiset differs after mat insert"
+        );
+    }
+}
+
+#[test]
+fn mat_insert_then_remove_mid_run_byte_exact() {
+    for batch_size in [32usize, 256, 1024] {
+        let handle = SinkHandle::new(0);
+        let (w, scan, filter) = stateless_wf(handle.clone());
+        let exec = Execution::start(w, Config { batch_size, ..Config::default() });
+        std::thread::sleep(Duration::from_millis(8));
+        let ins = exec.migrate(PlanDelta::InsertMat { from: scan, to: filter, to_port: 0 });
+        assert!(ins.applied, "batch {batch_size}: insert refused: {:?}", ins.steps);
+        std::thread::sleep(Duration::from_millis(8));
+        // Undo while the writer is still live: the store contents and
+        // the writer's unflushed tail re-enter the restored edge.
+        let rem = exec.migrate(PlanDelta::RemoveMat { from: scan, to: filter, to_port: 0 });
+        assert!(rem.applied, "batch {batch_size}: remove refused: {:?}", rem.steps);
+        exec.join();
+        assert_eq!(
+            collect_pairs(&handle),
+            expect_stateless(),
+            "batch {batch_size}: multiset differs after mat insert+remove"
+        );
+    }
+}
+
+#[test]
+fn replan_applies_mid_run_byte_exact() {
+    for batch_size in [32usize, 256, 1024] {
+        let handle = SinkHandle::new(0);
+        let (w, scan, filter) = stateless_wf(handle.clone());
+        let exec = Execution::start(w, Config { batch_size, ..Config::default() });
+        std::thread::sleep(Duration::from_millis(10));
+        let o = exec.migrate(PlanDelta::Replan { workers: vec![(scan, 3), (filter, 3)] });
+        assert!(o.applied, "batch {batch_size}: replan refused: {:?}", o.steps);
+        assert_eq!(o.steps.len(), 2, "one fenced step per re-planned operator");
+        exec.join();
+        assert_eq!(
+            collect_pairs(&handle),
+            expect_stateless(),
+            "batch {batch_size}: multiset differs after replan"
+        );
+    }
+}
+
+/// Every delta kind in sequence at batch 1024 (the worst buffering
+/// regime): each step's fence must stay sub-second, and the end result
+/// byte-exact.
+#[test]
+fn fences_stay_sub_second_at_batch_1024() {
+    let handle = SinkHandle::new(0);
+    let (w, scan, filter) = stateless_wf(handle.clone());
+    let exec = Execution::start(w, Config { batch_size: 1024, ..Config::default() });
+    std::thread::sleep(Duration::from_millis(5));
+    let outcomes = vec![
+        exec.migrate(PlanDelta::Repartition {
+            op: filter,
+            port: 0,
+            scheme: PartitionScheme::Hash { key: 0 },
+        }),
+        exec.migrate(PlanDelta::InsertMat { from: scan, to: filter, to_port: 0 }),
+        exec.migrate(PlanDelta::RemoveMat { from: scan, to: filter, to_port: 0 }),
+        exec.migrate(PlanDelta::Replan { workers: vec![(filter, 3)] }),
+    ];
+    exec.join();
+    for o in &outcomes {
+        assert!(o.applied, "delta refused: {:?}", o.steps);
+        for s in &o.steps {
+            assert!(
+                s.fence < Duration::from_secs(1),
+                "fence of '{}' took {:?}",
+                s.desc,
+                s.fence
+            );
+        }
+    }
+    assert_eq!(collect_pairs(&handle), expect_stateless());
+}
+
+/// Repartitioning a *stateful* multi-worker operator would separate
+/// its keyed state shards from the new routing, so the fence must
+/// abort-and-restore: the delta reports unapplied, every surrendered
+/// shard returns to its owner, and the run finishes byte-exact.
+#[test]
+fn repartition_of_stateful_operator_aborts_and_restores() {
+    const N: usize = 60_000;
+    const K: i64 = 23;
+    let mut w = Workflow::new();
+    let dict = w.add(OpSpec::source("dict", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..K)
+            .filter(|k| (*k as usize) % parts == idx)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(100 + k)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let scan = w.add(OpSpec::source_with_op(
+        "scan",
+        2,
+        move |idx, parts| {
+            let rows: Vec<Tuple> = (0..N)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| Tuple::new(vec![Value::Int(i as i64 % K), Value::Int(i as i64 % 9)]))
+                .collect();
+            Box::new(VecSource::new(rows))
+        },
+        |_, _| Box::new(MapUdf::identity(1500)),
+    ));
+    let enrich = w.add(OpSpec::binary(
+        "enrich",
+        2,
+        [PartitionScheme::Broadcast, PartitionScheme::Hash { key: 0 }],
+        vec![DICT],
+        |_, _| Box::new(Enrich::new()),
+    ));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(dict, enrich, DICT);
+    w.connect(scan, enrich, EVENT);
+    w.connect(enrich, sink, 0);
+
+    let exec = Execution::start(w, Config::default());
+    // Wait until the enrich workers demonstrably hold state (dict rows
+    // and/or per-key counts) but the run is still in flight.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let processed: u64 = exec
+            .stats()
+            .iter()
+            .filter(|(id, _)| id.op == enrich)
+            .map(|(_, s)| s.processed)
+            .sum();
+        if processed > 0 || std::time::Instant::now() > deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let o = exec.migrate(PlanDelta::Repartition {
+        op: enrich,
+        port: EVENT,
+        scheme: PartitionScheme::RoundRobin,
+    });
+    assert!(
+        !o.applied,
+        "stateful repartition must abort-and-restore, got {:?}",
+        o.steps
+    );
+    assert!(!o.rolled_back, "single refused step has no prefix to roll back");
+    exec.join();
+
+    // Byte-exact despite the aborted fence: enriched events plus one
+    // summary row per key.
+    let mut expect: Vec<(i64, i64, i64)> = (0..N)
+        .map(|i| {
+            let (k, v) = (i as i64 % K, i as i64 % 9);
+            (k, v + 100 + k, 1)
+        })
+        .collect();
+    for k in 0..K {
+        let cnt = (0..N).filter(|&i| i as i64 % K == k).count() as i64;
+        expect.push((k, cnt, -1));
+    }
+    expect.sort_unstable();
+    let mut got: Vec<(i64, i64, i64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| {
+            (
+                t.get(0).as_int().unwrap(),
+                t.get(1).as_int().unwrap(),
+                t.get(2).as_int().unwrap(),
+            )
+        })
+        .collect();
+    got.sort_unstable();
+    assert_eq!(got, expect, "results distorted by the aborted fence");
+}
+
+/// A checkpoint taken *before* a migration recovers exactly: migration
+/// control traffic is not logged (the fence re-injects state
+/// in-place), so replay re-runs the original plan from the snapshot —
+/// results must match both the migrated run and the ground truth.
+#[test]
+fn checkpoint_before_migration_recovers_exact() {
+    let cfg = Config { ft_log: true, ..Config::default() };
+    let handle = SinkHandle::new(0);
+    let (w, _scan, filter) = stateless_wf(handle.clone());
+    let exec = Execution::start(w, cfg.clone());
+    std::thread::sleep(Duration::from_millis(8));
+    let checkpoint = exec.checkpoint();
+    assert!(!checkpoint.workers.is_empty());
+    std::thread::sleep(Duration::from_millis(5));
+    let o = exec.migrate(PlanDelta::Repartition {
+        op: filter,
+        port: 0,
+        scheme: PartitionScheme::Hash { key: 0 },
+    });
+    assert!(o.applied, "migration refused: {:?}", o.steps);
+    let log = exec.take_replay_log();
+    exec.join();
+    assert_eq!(collect_pairs(&handle), expect_stateless(), "migrated run differs");
+
+    // Recover from the pre-migration checkpoint with the *original*
+    // workflow: byte-exact completion.
+    let handle2 = SinkHandle::new(0);
+    let (w2, _, _) = stateless_wf(handle2.clone());
+    let recovered = Execution::recover(w2, cfg, checkpoint, log);
+    recovered.join();
+    assert_eq!(
+        collect_pairs(&handle2),
+        expect_stateless(),
+        "recovery across the migration epoch differs"
+    );
+}
+
+/// Fence-aware replay remap regression: a logged control record whose
+/// replay position points *past* the consolidation window must still
+/// apply at the exact same tuple after a migration fence renumbered
+/// the worker's parked stream. Without the remap the record applies
+/// off-by-N batches and the result multiset shifts.
+#[test]
+fn replay_position_survives_fence_consolidation() {
+    const N: usize = 16_384;
+    let cfg = Config {
+        batch_size: 16,
+        ctrl_check_interval: 16,
+        data_queue_cap: 2048,
+        ft_log: true,
+        ..Config::default()
+    };
+    let build = |handle: SinkHandle| -> (Workflow, usize) {
+        let mut w = Workflow::new();
+        let scan = w.add(OpSpec::source("scan", 1, move |idx, parts| {
+            let rows: Vec<Tuple> = (0..N)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| Tuple::new(vec![Value::Int(i as i64), Value::Int(i as i64 % 7)]))
+                .collect();
+            Box::new(VecSource::new(rows))
+        }));
+        let filter = w.add(OpSpec::unary(
+            "filter",
+            1,
+            PartitionScheme::RoundRobin,
+            |_, _| {
+                let mut f = Filter::new(1, Cmp::Ne, Value::Int(3));
+                f.cost_ns = 2000; // keep a deep parked queue behind the fence
+                Box::new(f)
+            },
+        ));
+        let h = handle.clone();
+        let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+            Box::new(CollectSink::new(h.clone()))
+        }));
+        w.connect(scan, filter, 0);
+        w.connect(filter, sink, 0);
+        (w, filter)
+    };
+
+    // Run A (reference): checkpoint early, then switch the filter
+    // constant mid-stream — the log records the patch at a deep replay
+    // position, far beyond any single batch.
+    let handle_a = SinkHandle::new(0);
+    let (wa, filter) = build(handle_a.clone());
+    let exec_a = Execution::start(wa, cfg.clone());
+    std::thread::sleep(Duration::from_millis(3));
+    let checkpoint = exec_a.checkpoint();
+    std::thread::sleep(Duration::from_millis(12));
+    exec_a.modify_operator(filter, "constant", "5");
+    exec_a.join();
+    let log = exec_a.take_replay_log();
+    assert!(
+        log.iter().any(|r| format!("{:?}", r.ctrl).contains("ModifyOperator")),
+        "patch was not logged"
+    );
+    let reference = collect_pairs(&handle_a);
+
+    // Run B: recover from the checkpoint (the patch is now a parked
+    // replay record), then immediately repartition the filter's input.
+    // The fence consolidates the whole parked stream into one batch —
+    // renumbering every message the record's position referenced — and
+    // the worker remaps the position. Byte-exact ⇔ the remap is exact.
+    let handle_b = SinkHandle::new(0);
+    let (wb, filter_b) = build(handle_b.clone());
+    let exec_b = Execution::recover(wb, cfg, checkpoint, log);
+    std::thread::sleep(Duration::from_millis(2));
+    let o = exec_b.migrate(PlanDelta::Repartition {
+        op: filter_b,
+        port: 0,
+        scheme: PartitionScheme::Hash { key: 0 },
+    });
+    assert!(o.applied, "mid-replay repartition refused: {:?}", o.steps);
+    exec_b.join();
+    assert_eq!(
+        collect_pairs(&handle_b),
+        reference,
+        "replay position drifted across the migration fence"
+    );
+}

@@ -802,12 +802,14 @@ fn chaos_round(seed: u64, batch_size: usize, columnar: bool) {
 
 // ---------- chaos: universal elasticity ----------
 
-/// Seeded command-fuzzer over the three formerly refusal-only operator
-/// classes: a *source* scan, a *broadcast-input* hash join, and a
-/// *scatter-merge* range sort are all scaled up/down at random points,
-/// interleaved with pause/resume, quiesced checkpoints and
-/// Reshape-style mitigation routes. The sink multiset must be
-/// byte-identical to a direct computation at batch 32 / 256 / 1024;
+/// Seeded command-fuzzer over the formerly refusal-only operator
+/// classes: a *source* scan, a *broadcast-input* hash join, a
+/// *scatter-merge* range sort, and a *mixed-port* enrich (broadcast
+/// dict + hash-partitioned counts in one operator) are all scaled
+/// up/down at random points, interleaved with pause/resume, quiesced
+/// checkpoints and Reshape-style mitigation routes. Both sink
+/// multisets must be byte-identical to a direct computation at batch
+/// 32 / 256 / 1024;
 /// the batch-32 round runs with the columnar plane disabled so the
 /// row-major fallback is fuzzed too. `CHAOS_SEED` (CI matrix) shifts
 /// the whole command/timing stream.
@@ -832,8 +834,9 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     use texera_amber::config::Config;
     use texera_amber::engine::{ControlMessage, Execution, OpSpec, WorkerId, Workflow};
     use texera_amber::operators::basic::MapUdf;
+    use texera_amber::operators::enrich::{DICT, EVENT};
     use texera_amber::operators::sort::SortWorker;
-    use texera_amber::operators::{CollectSink, HashJoin, SinkHandle};
+    use texera_amber::operators::{CollectSink, Enrich, HashJoin, SinkHandle};
     use texera_amber::workloads::VecSource;
 
     const ROWS: usize = 120_000;
@@ -873,6 +876,15 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
             .collect();
         Box::new(VecSource::new(rows))
     }));
+    // Second build side for the mixed-port enrich branch: one
+    // (key, bonus) row per key, broadcast on the dict port.
+    let dim2 = w.add(OpSpec::source("dim2", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..KEYS)
+            .filter(|k| (*k as usize) % parts == idx)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(2 * k + 1)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
     // Broadcast-input class: build port 0 broadcast, probe port 1 RR.
     let join = w.add(OpSpec::binary(
         "join",
@@ -895,6 +907,16 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
         .with_blocking(vec![0])
         .with_scatter_merge(),
     );
+    // Mixed-port state class: broadcast dict on one port, keyed
+    // per-key counts on the other. Scaling it must replicate the dict
+    // while re-sharding (not replicating) the partitioned counts.
+    let enrich = w.add(OpSpec::binary(
+        "enrich",
+        2,
+        [PartitionScheme::Broadcast, PartitionScheme::Hash { key: 0 }],
+        vec![DICT],
+        |_, _| Box::new(Enrich::new()),
+    ));
     let handle = SinkHandle::new(0);
     let h = handle.clone();
     let sink = w.add(OpSpec::unary(
@@ -903,17 +925,28 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
         PartitionScheme::RoundRobin,
         move |_, _| Box::new(CollectSink::new(h.clone())),
     ));
+    let handle2 = SinkHandle::new(0);
+    let h2 = handle2.clone();
+    let sink2 = w.add(OpSpec::unary(
+        "sink2",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h2.clone())),
+    ));
     w.connect(dim, join, 0);
     w.connect(scan, join, 1);
     w.connect(join, sortw, 0);
     w.connect(sortw, sink, 0);
+    w.connect(dim2, enrich, DICT);
+    w.connect(scan, enrich, EVENT);
+    w.connect(enrich, sink2, 0);
 
     let exec = Execution::start(w, Config { batch_size, columnar, ..Config::default() });
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Tracked worker counts (a refused scale leaves them unchanged).
-    let mut counts = [2usize, 2, 2]; // scan, join, sortw
-    let scalable = [scan, join, sortw];
+    let mut counts = [2usize, 2, 2, 2]; // scan, join, sortw, enrich
+    let scalable = [scan, join, sortw, enrich];
     let mut epoch = 1u64;
     for _ in 0..14 {
         std::thread::sleep(Duration::from_millis(1 + rng.below(8)));
@@ -937,8 +970,9 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
             }
             3..=6 => {
                 // The heart of the fuzz: scale a source, a
-                // broadcast-input join, or a scatter-merge sort.
-                let which = rng.below(3) as usize;
+                // broadcast-input join, a scatter-merge sort, or a
+                // mixed-state enrich.
+                let which = rng.below(4) as usize;
                 let target = 1 + rng.below(4) as usize;
                 if exec.scale_operator(scalable[which], target) > Duration::ZERO {
                     counts[which] = target;
@@ -996,6 +1030,246 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
                 t.get(1).as_int().unwrap(),
                 t.get(2).as_int().unwrap(),
                 t.get(3).as_int().unwrap(),
+            )
+        })
+        .collect();
+    got.sort_unstable();
+    assert_eq!(
+        got.len(),
+        expect.len(),
+        "seed {seed} batch {batch_size}: wrong row count"
+    );
+    assert_eq!(got, expect, "seed {seed} batch {batch_size}: multiset differs");
+
+    // Enrich branch: every scan row becomes (k, v + bonus_k, 1); at
+    // EOF each worker flushes its count shards as (k, count_k, -1).
+    let mut expect2: Vec<(i64, i64, i64)> = (0..ROWS)
+        .map(|i| {
+            let (k, v) = (i as i64 % KEYS, i as i64 % 9);
+            (k, v + 2 * k + 1, 1)
+        })
+        .collect();
+    for k in 0..KEYS {
+        let cnt = (ROWS as i64 - 1 - k) / KEYS + 1; // |{i < ROWS : i ≡ k}|
+        expect2.push((k, cnt, -1));
+    }
+    expect2.sort_unstable();
+    let mut got2: Vec<(i64, i64, i64)> = handle2
+        .tuples()
+        .iter()
+        .map(|t| {
+            (
+                t.get(0).as_int().unwrap(),
+                t.get(1).as_int().unwrap(),
+                t.get(2).as_int().unwrap(),
+            )
+        })
+        .collect();
+    got2.sort_unstable();
+    assert_eq!(
+        got2, expect2,
+        "seed {seed} batch {batch_size}: enrich multiset differs"
+    );
+}
+
+// ---------- chaos: live plan migration ----------
+
+/// Seeded command-fuzzer over whole-plan migrations: repartition-scheme
+/// swaps on a live edge (Round-Robin / Hash / Range with bounds derived
+/// from the fence's parked sample), live materialization insertion and
+/// removal, and multi-step worker re-plans, interleaved with
+/// pause/resume, quiesced checkpoints and elastic scale commands — at
+/// batch 32 / 256 / 1024, with the batch-32 round on the row-major
+/// plane. The pipeline carries a mixed-port broadcast operator
+/// ([`Enrich`]: broadcast dict + partitioned counts), so every fence
+/// crosses both state classes. The sink multiset must be byte-identical
+/// to a direct computation. `CHAOS_SEED` (CI matrix) shifts the whole
+/// command/timing stream.
+///
+/// [`Enrich`]: texera_amber::operators::Enrich
+#[test]
+fn prop_chaos_migration_preserves_results() {
+    let base: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    for (round, batch_size, columnar) in [(0u64, 256usize, true), (1, 1024, true), (2, 32, false)]
+    {
+        migration_chaos_round(
+            base.wrapping_mul(13000).wrapping_add(round),
+            batch_size,
+            columnar,
+        );
+    }
+}
+
+fn migration_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
+    use std::time::Duration;
+    use texera_amber::config::Config;
+    use texera_amber::engine::{Execution, OpSpec, PlanDelta, Workflow};
+    use texera_amber::operators::basic::{Cmp, Filter, MapUdf};
+    use texera_amber::operators::enrich::{DICT, EVENT};
+    use texera_amber::operators::{CollectSink, Enrich, SinkHandle};
+    use texera_amber::workloads::VecSource;
+
+    const ROWS: usize = 120_000;
+    const KEYS: i64 = 37;
+
+    let mut w = Workflow::new();
+    let dict = w.add(OpSpec::source("dict", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..KEYS)
+            .filter(|k| (*k as usize) % parts == idx)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(100 + k)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    // A per-tuple parse cost keeps the scan alive long enough that
+    // migrations land mid-stream at every batch size.
+    let scan = w.add(OpSpec::source_with_op(
+        "scan",
+        2,
+        move |idx, parts| {
+            let rows: Vec<Tuple> = (0..ROWS)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| {
+                    Tuple::new(vec![
+                        Value::Int(i as i64 % KEYS),
+                        Value::Int(i as i64 % 13),
+                    ])
+                })
+                .collect();
+            Box::new(VecSource::new(rows))
+        },
+        |_, _| Box::new(MapUdf::identity(2000)),
+    ));
+    let enrich = w.add(OpSpec::binary(
+        "enrich",
+        2,
+        [PartitionScheme::Broadcast, PartitionScheme::Hash { key: 0 }],
+        vec![DICT],
+        |_, _| Box::new(Enrich::new()),
+    ));
+    // Stateless pass-through (field 1 ≥ 0 for every event and summary
+    // row): the migrated edge is enrich → filter.
+    let filter = w.add(OpSpec::unary(
+        "filter",
+        2,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(Filter::new(1, Cmp::Ge, Value::Int(0))),
+    ));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary(
+        "sink",
+        1,
+        PartitionScheme::RoundRobin,
+        move |_, _| Box::new(CollectSink::new(h.clone())),
+    ));
+    w.connect(dict, enrich, DICT);
+    w.connect(scan, enrich, EVENT);
+    w.connect(enrich, filter, 0);
+    w.connect(filter, sink, 0);
+
+    let exec = Execution::start(w, Config { batch_size, columnar, ..Config::default() });
+    let mut rng = Rng::new(seed);
+    let mut paused = false;
+    // Driver's view of whether the enrich→filter edge is currently
+    // materialized (a refused migration leaves it unchanged).
+    let mut mat_on = false;
+    for _ in 0..14 {
+        std::thread::sleep(Duration::from_millis(1 + rng.below(8)));
+        match rng.below(8) {
+            0 => {
+                if !paused {
+                    exec.pause();
+                    paused = true;
+                }
+            }
+            1 => {
+                if paused {
+                    exec.resume();
+                    paused = false;
+                }
+            }
+            2 => {
+                // Quiesced checkpoint (internally pauses + resumes).
+                if !paused {
+                    let _ = exec.checkpoint();
+                }
+            }
+            3 => {
+                // Elastic scale interleaved with migrations; scaling
+                // enrich crosses the mixed broadcast/partitioned state.
+                let target = 1 + rng.below(4) as usize;
+                let which = if rng.below(2) == 0 { scan } else { enrich };
+                let _ = exec.scale_operator(which, target);
+            }
+            4 => {
+                // Repartition the live edge into the filter; the Range
+                // arm derives bounds from the fence's parked sample.
+                let scheme = match rng.below(3) {
+                    0 => PartitionScheme::RoundRobin,
+                    1 => PartitionScheme::Hash { key: 0 },
+                    _ => PartitionScheme::Range { key: 0, bounds: Vec::new() },
+                };
+                let _ = exec.migrate(PlanDelta::Repartition { op: filter, port: 0, scheme });
+            }
+            5 => {
+                if !mat_on {
+                    mat_on = exec
+                        .migrate(PlanDelta::InsertMat { from: enrich, to: filter, to_port: 0 })
+                        .applied;
+                }
+            }
+            6 => {
+                if mat_on
+                    && exec
+                        .migrate(PlanDelta::RemoveMat { from: enrich, to: filter, to_port: 0 })
+                        .applied
+                {
+                    mat_on = false;
+                }
+            }
+            _ => {
+                // Multi-step re-plan: two fenced scale steps under one
+                // migration (abort-and-restore on any refusal).
+                let _ = exec.migrate(PlanDelta::Replan {
+                    workers: vec![
+                        (scan, 1 + rng.below(3) as usize),
+                        (filter, 1 + rng.below(3) as usize),
+                    ],
+                });
+            }
+        }
+    }
+    if paused {
+        exec.resume();
+    }
+    exec.join();
+
+    // Ground truth, computed directly: every scan row becomes
+    // (k, v + 100 + k, 1); at EOF each enrich worker flushes its count
+    // shards as (k, count_k, -1). The filter passes everything.
+    let mut expect: Vec<(i64, i64, i64)> = (0..ROWS)
+        .map(|i| {
+            let (k, v) = (i as i64 % KEYS, i as i64 % 13);
+            (k, v + 100 + k, 1)
+        })
+        .collect();
+    for k in 0..KEYS {
+        let cnt = (ROWS as i64 - 1 - k) / KEYS + 1; // |{i < ROWS : i ≡ k}|
+        expect.push((k, cnt, -1));
+    }
+    expect.sort_unstable();
+    let mut got: Vec<(i64, i64, i64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| {
+            (
+                t.get(0).as_int().unwrap(),
+                t.get(1).as_int().unwrap(),
+                t.get(2).as_int().unwrap(),
             )
         })
         .collect();
