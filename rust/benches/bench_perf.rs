@@ -28,7 +28,9 @@
 use std::time::{Duration, Instant};
 
 use texera_amber::config::Config;
-use texera_amber::engine::{Execution, OpSpec, PartitionScheme, PlanDelta, Workflow};
+use texera_amber::engine::{
+    Execution, Fault, FaultPlan, OpSpec, PartitionScheme, PlanDelta, WorkerId, Workflow,
+};
 use texera_amber::maestro::cost::CostParams;
 use texera_amber::maestro::MaestroScheduler;
 use texera_amber::operators::basic::{Cmp, Filter, MapUdf};
@@ -55,6 +57,7 @@ fn main() {
     let source_scale = source_scale_section(smoke);
     let migration = migration_section(smoke);
     let maestro = maestro_section(smoke);
+    let faults = faults_section(smoke);
     if smoke {
         // Smoke totals are not trajectory-quality numbers: exercise
         // the sections but leave the recorded BENCH_perf.json alone.
@@ -71,6 +74,7 @@ fn main() {
             &rvc,
             &lanes,
             &maestro,
+            &faults,
         );
         routing_cost();
         pause_latency();
@@ -875,6 +879,126 @@ fn maestro_section(smoke: bool) -> MaestroBench {
     }
 }
 
+struct FaultsBench {
+    rows: usize,
+    detection_ms_crash: f64,
+    detection_ms_stall: f64,
+    recovery_ms_checkpoint: f64,
+    recovery_ms_scratch: f64,
+    hb_off_tps: f64,
+    hb_on_tps: f64,
+}
+
+/// One supervised run of the group-by pipeline with `plan` injected;
+/// returns the end-to-end tuples/sec and the run's supervision stats.
+fn faults_run(
+    total: usize,
+    plan: FaultPlan,
+    checkpoint_interval_ms: u64,
+    heartbeat_timeout_ms: u64,
+) -> (f64, texera_amber::engine::ExecSummary) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64 % 64), Value::Int(i as i64 % 7)]))
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let partial = w.add(OpSpec::unary("gb_partial", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(GroupByPartial::new(0, 1, AggKind::Sum))
+    }));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    let cfg = Config {
+        ft_log: true,
+        heartbeat_timeout_ms,
+        checkpoint_interval_ms,
+        recovery_backoff_ms: 5,
+        fault_plan: plan,
+        ..Config::default()
+    };
+    let t0 = Instant::now();
+    let summary = Execution::start(w, cfg).join();
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    (total as f64 / secs, summary)
+}
+
+/// Supervision cost numbers: failure-detection latency (crash vs
+/// stall), recovery time with and without a retained automatic
+/// checkpoint, and the steady-state overhead of the heartbeat sweep.
+fn faults_section(smoke: bool) -> FaultsBench {
+    println!("--- faults: detection latency, recovery time, heartbeat overhead ---");
+    let rows = if smoke { 60_000 } else { 400_000 };
+    let kill_at = (rows / 8) as u64;
+    let one = |f: Fault| {
+        let mut p = FaultPlan::default();
+        p.push(f);
+        p
+    };
+    // Crash: panic containment reports the failure immediately.
+    let (_, crash_cp) = faults_run(
+        rows,
+        one(Fault::panic_at(WorkerId::new(1, 0), kill_at)),
+        25,
+        150,
+    );
+    // Same crash with automatic checkpoints off: scratch recovery.
+    let (_, crash_scratch) = faults_run(
+        rows,
+        one(Fault::panic_at(WorkerId::new(1, 0), kill_at)),
+        0,
+        150,
+    );
+    // Stall: detection waits out the heartbeat timeout.
+    let (_, stall) = faults_run(
+        rows,
+        one(Fault::stall_at(WorkerId::new(1, 0), kill_at, 400)),
+        25,
+        100,
+    );
+    // Steady state, no faults: heartbeat sweep off vs on.
+    let (hb_off_tps, _) = faults_run(rows, FaultPlan::default(), 0, 0);
+    let (hb_on_tps, _) = faults_run(rows, FaultPlan::default(), 0, 100);
+    let out = FaultsBench {
+        rows,
+        detection_ms_crash: crash_cp.supervision.detection_ms_max,
+        detection_ms_stall: stall.supervision.detection_ms_max,
+        recovery_ms_checkpoint: crash_cp.supervision.recovery_ms_max,
+        recovery_ms_scratch: crash_scratch.supervision.recovery_ms_max,
+        hb_off_tps,
+        hb_on_tps,
+    };
+    println!(
+        "  detection: crash {:.2} ms | stall {:.2} ms (timeout 100 ms)",
+        out.detection_ms_crash, out.detection_ms_stall
+    );
+    println!(
+        "  recovery : checkpointed {:.1} ms | scratch {:.1} ms",
+        out.recovery_ms_checkpoint, out.recovery_ms_scratch
+    );
+    println!(
+        "  heartbeat: sweep off {:.0} t/s | sweep on {:.0} t/s ({:+.1}%)\n",
+        out.hb_off_tps,
+        out.hb_on_tps,
+        (out.hb_on_tps / out.hb_off_tps - 1.0) * 100.0
+    );
+    out
+}
+
 /// Write BENCH_perf.json (machine-readable perf trajectory) at the
 /// repository root, so the bench trajectory accumulates across PRs.
 /// The file's schema is documented in `docs/BENCH.md`.
@@ -890,6 +1014,7 @@ fn write_bench_json(
     rvc: &RowVsColumnar,
     lanes: &LanesBench,
     maestro: &MaestroBench,
+    faults: &FaultsBench,
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"throughput_vs_batch_size\",\n");
@@ -1038,8 +1163,27 @@ fn write_bench_json(
         maestro.elastic_frt_s, maestro.elastic_total_s, maestro.replans, maestro.scales_applied
     ));
     s.push_str(&format!(
-        "    \"frt_speedup\": {:.2}\n  }}\n",
+        "    \"frt_speedup\": {:.2}\n  }},\n",
         maestro.static_frt_s / maestro.elastic_frt_s
+    ));
+    s.push_str("  \"faults\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan(2)->gb_partial(2)->gb_final(2)->sink; one panic or stall injected at rows/8\",\n",
+    );
+    s.push_str(&format!("    \"rows\": {},\n", faults.rows));
+    s.push_str(&format!(
+        "    \"detection_ms\": {{\"crash\": {:.2}, \"stall\": {:.2}}},\n",
+        faults.detection_ms_crash, faults.detection_ms_stall
+    ));
+    s.push_str(&format!(
+        "    \"recovery_ms\": {{\"with_checkpoint_25ms\": {:.1}, \"scratch\": {:.1}}},\n",
+        faults.recovery_ms_checkpoint, faults.recovery_ms_scratch
+    ));
+    s.push_str(&format!(
+        "    \"heartbeat\": {{\"sweep_off_tuples_per_sec\": {:.0}, \"sweep_100ms_tuples_per_sec\": {:.0}, \"overhead_pct\": {:.1}}}\n  }}\n",
+        faults.hb_off_tps,
+        faults.hb_on_tps,
+        (1.0 - faults.hb_on_tps / faults.hb_off_tps) * 100.0
     ));
     s.push_str("}\n");
     // `cargo bench` runs with the crate dir as CWD; the trajectory

@@ -42,8 +42,33 @@ pub struct Config {
     /// Artificial control-message delivery delay in ms (0 = none);
     /// used by the Fig. 3.21 experiment.
     pub ctrl_delay_ms: u64,
-    /// Enable the fault-tolerance control-replay log (§2.6.2).
+    /// Enable the fault-tolerance control-replay log (§2.6.2). Also
+    /// the master switch for *automatic* replay-based recovery: with
+    /// the log on, a declared worker failure triggers restore +
+    /// replay; with it off, a failure aborts the run cleanly with
+    /// [`crate::engine::ExecError::Unsupervised`].
     pub ft_log: bool,
+    /// Declare a worker dead after this many ms without a heartbeat
+    /// stamp (`0` = heartbeat supervision off, the default). Worker
+    /// panics are detected eagerly via `WorkerFailed` regardless; this
+    /// timeout additionally catches *stalls* (live thread, no
+    /// progress).
+    pub heartbeat_timeout_ms: u64,
+    /// Take an automatic quiesced checkpoint every this many ms (`0` =
+    /// off, the default). Automatic recovery restores from the latest
+    /// one; without any, it restores from scratch via the full replay
+    /// log.
+    pub checkpoint_interval_ms: u64,
+    /// How many automatic recovery attempts before the coordinator
+    /// gives up and aborts with
+    /// [`crate::engine::ExecError::RecoveryExhausted`].
+    pub recovery_max_retries: u32,
+    /// Base delay before a recovery attempt; doubles per consecutive
+    /// attempt (exponential backoff).
+    pub recovery_backoff_ms: u64,
+    /// Deterministic fault-injection plan (empty = no faults). See
+    /// [`crate::engine::FaultPlan`].
+    pub fault_plan: crate::engine::FaultPlan,
     /// Use the columnar (struct-of-arrays) data plane: sources and the
     /// exchange build [`crate::column::ColumnSet`]-backed batches and
     /// operators take their column-at-a-time paths. `false` pins every
@@ -129,6 +154,11 @@ impl Default for Config {
             breakpoint_tau_ms: 5,
             ctrl_delay_ms: 0,
             ft_log: false,
+            heartbeat_timeout_ms: 0,
+            checkpoint_interval_ms: 0,
+            recovery_max_retries: 3,
+            recovery_backoff_ms: 20,
+            fault_plan: crate::engine::FaultPlan::default(),
             columnar: true,
             reshape_eta: 100.0,
             reshape_tau: 100.0,
@@ -187,5 +217,17 @@ mod tests {
     fn test_config_small() {
         let c = Config::for_tests();
         assert!(c.batch_size < 100);
+    }
+
+    #[test]
+    fn supervision_defaults_off() {
+        // Supervision/injection must be strictly opt-in: with the
+        // defaults, no heartbeat sweeps, no periodic checkpoints, no
+        // faults — existing behavior is unchanged.
+        let c = Config::default();
+        assert_eq!(c.heartbeat_timeout_ms, 0);
+        assert_eq!(c.checkpoint_interval_ms, 0);
+        assert!(c.fault_plan.is_empty());
+        assert!(c.recovery_max_retries > 0);
     }
 }

@@ -48,9 +48,22 @@
 
 use crate::engine::message::{ControlMessage, DataEvent};
 use std::collections::{BinaryHeap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard from a poisoned lock.
+///
+/// A worker that panics is contained by the supervision layer
+/// (`catch_unwind` → `WorkerFailed`), but its unwind poisons any mutex
+/// it held. Every mutex in this module guards a structure that stays
+/// well-formed across an unwind (pushes/pops are single complete
+/// steps), so peers recover the guard and keep operating — one
+/// panicking worker must degrade to a disconnect, never cascade-panic
+/// the actors that share its channels.
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// A queued control message: due time + arrival sequence (heap key).
 struct QueuedCtrl {
@@ -110,7 +123,7 @@ impl ControlInbox {
     /// (simulated delivery latency; 0 = immediate).
     pub fn send(&self, msg: ControlMessage, delay: Duration) {
         let due = Instant::now() + delay;
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_ok(&self.queue);
         let seq = q.next_seq;
         q.next_seq += 1;
         q.heap.push(QueuedCtrl { due, seq, msg });
@@ -130,7 +143,7 @@ impl ControlInbox {
         if !self.maybe_pending() {
             return None;
         }
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_ok(&self.queue);
         let now = Instant::now();
         if q.heap.peek().is_some_and(|item| item.due <= now) {
             let msg = q.heap.pop().unwrap().msg;
@@ -145,7 +158,7 @@ impl ControlInbox {
     /// Block until a message is due or `timeout` elapses.
     pub fn recv_timeout(&self, timeout: Duration) -> Option<ControlMessage> {
         let deadline = Instant::now() + timeout;
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_ok(&self.queue);
         loop {
             let now = Instant::now();
             match q.heap.peek().map(|item| item.due) {
@@ -166,14 +179,17 @@ impl ControlInbox {
                     let (qq, _) = self
                         .cv
                         .wait_timeout(q, wait.max(Duration::from_micros(50)))
-                        .unwrap();
+                        .unwrap_or_else(|e| e.into_inner());
                     q = qq;
                 }
                 None => {
                     if now >= deadline {
                         return None;
                     }
-                    let (qq, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+                    let (qq, _) = self
+                        .cv
+                        .wait_timeout(q, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner());
                     q = qq;
                 }
             }
@@ -207,6 +223,16 @@ pub struct WorkerGauges {
     pub busy_ns: AtomicI64,
     /// Nanoseconds alive (set once the worker starts).
     pub alive_since_ns: AtomicI64,
+    /// Liveness heartbeat: an epoch counter the worker bumps at the
+    /// top of its DP loop, between processed chunks, and while parked
+    /// (paused/finished/idle waits all cycle back within ~20 ms). The
+    /// coordinator's supervision sweep reads it lock-free and declares
+    /// the worker *stalled* after
+    /// [`crate::config::Config::heartbeat_timeout_ms`] without a
+    /// change — distinguishing a silent stall from a crash, which
+    /// reports eagerly via
+    /// [`crate::engine::message::WorkerEvent::WorkerFailed`].
+    pub heartbeat: AtomicU64,
     /// When set, the worker maintains `key_counts` (per-key workload
     /// distribution — what SBK-style mitigation needs, §3.3.1: "SBK
     /// requires the workers to store the distribution of workload per
@@ -336,7 +362,7 @@ impl DataRing {
     /// Register a fresh lane for a cloned sender.
     fn add_sender(&self) -> Arc<Lane> {
         let lane = Arc::new(Lane::new(self.cap));
-        self.lanes.lock().unwrap().push(lane.clone());
+        lock_ok(&self.lanes).push(lane.clone());
         self.sender_count.fetch_add(1, Ordering::SeqCst);
         lane
     }
@@ -347,7 +373,7 @@ impl DataRing {
             // Last sender gone: wake a parked consumer so it can
             // observe the disconnect. Taking the wake lock orders this
             // after any in-progress recv's park decision.
-            let _g = self.wake.lock().unwrap();
+            let _g = lock_ok(&self.wake);
             self.not_empty.notify_all();
         }
     }
@@ -355,7 +381,7 @@ impl DataRing {
     fn close_rx(&self) {
         self.rx_alive.store(false, Ordering::SeqCst);
         // Unbuffered senders must not block forever on a dead worker.
-        let _g = self.wake.lock().unwrap();
+        let _g = lock_ok(&self.wake);
         self.not_full.notify_all();
     }
 
@@ -367,14 +393,14 @@ impl DataRing {
                 return Err(RingTrySendError::Disconnected(ev));
             }
             if lane.len.load(Ordering::SeqCst) < self.cap {
-                lane.events.lock().unwrap().push_back(ev);
+                lock_ok(&lane.events).push_back(ev);
                 lane.len.fetch_add(1, Ordering::SeqCst);
                 self.total_len.fetch_add(1, Ordering::SeqCst);
                 // Lazy wake: only if the consumer actually parked. The
                 // consumer re-checks `total_len` under `wake` before
                 // sleeping, so this SeqCst pair cannot lose a wakeup.
                 if self.rx_waiting.load(Ordering::SeqCst) {
-                    let _g = self.wake.lock().unwrap();
+                    let _g = lock_ok(&self.wake);
                     self.not_empty.notify_all();
                 }
                 return Ok(());
@@ -384,12 +410,12 @@ impl DataRing {
             }
             // Park until the consumer frees a slot in this lane (or
             // hangs up). The condition re-check happens under `wake`.
-            let mut g = self.wake.lock().unwrap();
+            let mut g = lock_ok(&self.wake);
             self.tx_waiting.fetch_add(1, Ordering::SeqCst);
             while lane.len.load(Ordering::SeqCst) >= self.cap
                 && self.rx_alive.load(Ordering::SeqCst)
             {
-                g = self.not_full.wait(g).unwrap();
+                g = self.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
             }
             self.tx_waiting.fetch_sub(1, Ordering::SeqCst);
         }
@@ -398,7 +424,7 @@ impl DataRing {
     /// Scan the lanes round-robin and pop one event. Prunes drained
     /// lanes of dropped senders along the way.
     fn pop_any(&self) -> Option<DataEvent> {
-        let mut lanes = self.lanes.lock().unwrap();
+        let mut lanes = lock_ok(&self.lanes);
         let n = lanes.len();
         if n == 0 {
             return None;
@@ -410,14 +436,14 @@ impl DataRing {
                 continue;
             }
             let lane = lanes[i].clone();
-            let ev = lane.events.lock().unwrap().pop_front();
+            let ev = lock_ok(&lane.events).pop_front();
             let Some(ev) = ev else { continue };
             lane.len.fetch_sub(1, Ordering::SeqCst);
             self.total_len.fetch_sub(1, Ordering::SeqCst);
             self.cursor.store((i + 1) % n, Ordering::Relaxed);
             drop(lanes);
             if self.tx_waiting.load(Ordering::SeqCst) > 0 {
-                let _g = self.wake.lock().unwrap();
+                let _g = lock_ok(&self.wake);
                 self.not_full.notify_all();
             }
             return Some(ev);
@@ -468,7 +494,7 @@ impl DataRing {
             // must have completed its `total_len` increment before our
             // re-check (SeqCst), so we either see the event or the
             // sender sees the flag.
-            let mut g = self.wake.lock().unwrap();
+            let mut g = lock_ok(&self.wake);
             self.rx_waiting.store(true, Ordering::SeqCst);
             if self.total_len.load(Ordering::SeqCst) > 0
                 || self.sender_count.load(Ordering::SeqCst) == 0
@@ -483,11 +509,14 @@ impl DataRing {
                         self.rx_waiting.store(false, Ordering::SeqCst);
                         return Err(RingRecvError::Empty);
                     }
-                    let (gg, _) = self.not_empty.wait_timeout(g, d - now).unwrap();
+                    let (gg, _) = self
+                        .not_empty
+                        .wait_timeout(g, d - now)
+                        .unwrap_or_else(|e| e.into_inner());
                     g = gg;
                 }
                 None => {
-                    g = self.not_empty.wait(g).unwrap();
+                    g = self.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
                 }
             }
             self.rx_waiting.store(false, Ordering::SeqCst);
@@ -842,6 +871,31 @@ mod tests {
         let (tx, mb) = mailbox(4);
         drop(mb);
         assert!(tx.send(batch(1)).is_err());
+    }
+
+    #[test]
+    fn poisoned_locks_do_not_cascade() {
+        // A thread panicking while holding a shared gauge lock must
+        // not take the whole channel down: peers recover the guard and
+        // the data plane keeps moving (the silent-death bug class —
+        // one panic poisoning its neighbors — is contained).
+        let (tx, mb) = mailbox(4);
+        let g = mb.gauges.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = g.key_counts.lock().unwrap();
+            panic!("injected poison");
+        })
+        .join();
+        assert!(mb.gauges.key_counts.lock().is_err(), "lock should be poisoned");
+        let n = mb
+            .gauges
+            .key_counts
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .len();
+        assert_eq!(n, 0);
+        tx.send(batch(1)).unwrap();
+        assert!(mb.data.try_recv().is_ok());
     }
 
     #[test]

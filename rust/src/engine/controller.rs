@@ -18,7 +18,7 @@ use crate::engine::breakpoint::{BpAction, GlobalBreakpoint};
 use crate::engine::channel::{mailbox, ControlInbox, DataSender, Mailbox, WorkerGauges};
 use crate::engine::dag::{Edge, OpSpec, Workflow};
 use crate::engine::migrate::{MigrationOutcome, MigrationStep, PlanDelta, StepOutcome};
-use crate::engine::fault::{Checkpoint, LogRecord, ReplayLog};
+use crate::engine::fault::{Checkpoint, ExecError, LogRecord, ReplayLog, WorkerSnapshot};
 use crate::engine::message::{
     BreakpointTarget, ControlMessage, DataEvent, DataMessage, LocalPredicate, WorkerEvent,
     WorkerId, WorkerStats,
@@ -26,6 +26,7 @@ use crate::engine::message::{
 use crate::engine::operator::{OpPatch, OpState};
 use crate::engine::partitioner::{PartitionScheme, Partitioner};
 use crate::engine::worker::{run_worker, OutputEdge, WorkerContext};
+use crate::metrics::SupervisionStats;
 use crate::tuple::Tuple;
 use crate::workloads::{redistribute_sources, TupleSource};
 use std::cell::RefCell;
@@ -91,6 +92,14 @@ pub struct ExecSummary {
     pub first_output: HashMap<usize, f64>,
     /// Total tuples produced by each operator.
     pub produced_by_op: HashMap<usize, u64>,
+    /// Supervision counters: failures detected (and how), recovery
+    /// cycles and their cost, automatic checkpoint cadence/sizes.
+    pub supervision: SupervisionStats,
+    /// Structured abnormal-termination cause. `None` for a clean run;
+    /// `Some` when supervision aborted the execution (recovery
+    /// unavailable or exhausted) — the run still terminated cleanly
+    /// (workers joined, waiters released) rather than hanging.
+    pub error: Option<ExecError>,
 }
 
 impl ExecSummary {
@@ -300,6 +309,40 @@ struct Coordinator {
     snapshot_acc: Checkpoint,
     checkpoint_reply: Option<Sender<Checkpoint>>,
 
+    // Supervision (panic containment + heartbeat detection + automatic
+    // replay-based recovery).
+    /// Failures declared but not yet recovered: (worker, cause,
+    /// declaration instant). Populated by `WorkerFailed` containment
+    /// events and by the heartbeat sweep; consumed by
+    /// `check_supervision` back on the run loop (fence wait loops only
+    /// *observe* it to abort early).
+    pending_failures: Vec<(WorkerId, String, Instant)>,
+    /// Heartbeat sweep state: worker → (last counter value, instant it
+    /// last changed).
+    last_beats: HashMap<WorkerId, (u64, Instant)>,
+    /// Latest completed checkpoint retained as the recovery restore
+    /// point (`None` → recovery restores from scratch with the full
+    /// replay log). Invalidated by scale/migration fences: a checkpoint
+    /// keyed to the old worker set cannot restore onto the new one.
+    latest_checkpoint: Option<Checkpoint>,
+    /// When the next automatic checkpoint is due (`None` = disabled).
+    next_checkpoint: Option<Instant>,
+    /// The in-flight pause/snapshot cycle was started by the automatic
+    /// checkpointer (no driver reply to send).
+    auto_checkpoint: bool,
+    /// Completion instant of the previous automatic checkpoint plus the
+    /// accumulated gap stats (observed-cadence metric).
+    last_auto_checkpoint_at: Option<Instant>,
+    auto_cp_gap_sum_ms: f64,
+    auto_cp_gaps: u64,
+    /// Recovery cycles performed so far; compared against
+    /// `Config::recovery_max_retries` before each new cycle.
+    recovery_attempts: u32,
+    /// Token sequence for the post-teardown stale-event drain.
+    recovery_epoch: u64,
+    supervision: SupervisionStats,
+    exec_error: Option<ExecError>,
+
     // Plugin (Reshape).
     plugin: Option<Box<dyn CoordPlugin>>,
     next_tick: Instant,
@@ -472,6 +515,7 @@ impl Execution {
                     initial_eofs: None,
                     start_paused: false,
                     columnar: config.columnar,
+                    fault_plan: config.fault_plan.clone(),
                 };
                 let builder = op.builder.clone();
                 let workers = op.workers;
@@ -510,6 +554,11 @@ impl Execution {
             .as_ref()
             .map(|p| p.period())
             .unwrap_or(Duration::from_secs(3600));
+        let first_auto_checkpoint = if config.checkpoint_interval_ms > 0 {
+            Some(started + Duration::from_millis(config.checkpoint_interval_ms))
+        } else {
+            None
+        };
         let coord = Coordinator {
             workflow,
             config,
@@ -550,6 +599,18 @@ impl Execution {
             snapshot_outstanding: HashSet::new(),
             snapshot_acc: Checkpoint::default(),
             checkpoint_reply: None,
+            pending_failures: Vec::new(),
+            last_beats: HashMap::new(),
+            latest_checkpoint: None,
+            next_checkpoint: first_auto_checkpoint,
+            auto_checkpoint: false,
+            last_auto_checkpoint_at: None,
+            auto_cp_gap_sum_ms: 0.0,
+            auto_cp_gaps: 0,
+            recovery_attempts: 0,
+            recovery_epoch: 0,
+            supervision: SupervisionStats::default(),
+            exec_error: None,
             plugin,
             next_tick: started + period,
             shutdown: false,
@@ -832,8 +893,11 @@ impl Coordinator {
         if let Some((reply, t0)) = self.pause_reply.take() {
             let _ = reply.send(t0.elapsed());
         }
-        // If a checkpoint is waiting for quiescence, request snapshots.
-        if self.checkpoint_reply.is_some() && self.snapshot_outstanding.is_empty() {
+        // If a checkpoint (manual or automatic) is waiting for
+        // quiescence, request snapshots.
+        if (self.checkpoint_reply.is_some() || self.auto_checkpoint)
+            && self.snapshot_outstanding.is_empty()
+        {
             self.snapshot_outstanding = self.handles.keys().copied().collect();
             self.snapshot_acc = Checkpoint::default();
             self.broadcast_all(ControlMessage::TakeSnapshot);
@@ -853,6 +917,8 @@ impl Coordinator {
             worker_stats: self.final_stats.clone(),
             first_output: self.first_output.clone(),
             produced_by_op,
+            supervision: self.supervision.clone(),
+            error: self.exec_error.clone(),
         }
     }
 
@@ -969,10 +1035,46 @@ impl Coordinator {
                         // effects are in state) and resume.
                         self.replay_log.clear();
                         let cp = std::mem::take(&mut self.snapshot_acc);
-                        if let Some(r) = self.checkpoint_reply.take() {
-                            let _ = r.send(cp);
+                        self.supervision.last_checkpoint_tuples =
+                            cp.total_state_tuples() as u64;
+                        if self.auto_checkpoint {
+                            // Timer-driven checkpoint: retain as the
+                            // recovery restore point, fold the cadence
+                            // stats, schedule the next one.
+                            self.auto_checkpoint = false;
+                            self.supervision.auto_checkpoints += 1;
+                            let now = Instant::now();
+                            if let Some(prev) = self.last_auto_checkpoint_at {
+                                self.auto_cp_gap_sum_ms +=
+                                    now.duration_since(prev).as_secs_f64() * 1e3;
+                                self.auto_cp_gaps += 1;
+                                self.supervision.checkpoint_interval_ms_observed =
+                                    self.auto_cp_gap_sum_ms / self.auto_cp_gaps as f64;
+                            }
+                            self.last_auto_checkpoint_at = Some(now);
+                            if self.config.checkpoint_interval_ms > 0 {
+                                self.next_checkpoint = Some(
+                                    now + Duration::from_millis(
+                                        self.config.checkpoint_interval_ms,
+                                    ),
+                                );
+                            }
+                            self.latest_checkpoint = Some(cp);
+                            if !self.user_paused {
+                                self.broadcast_all(ControlMessage::Resume);
+                            }
+                        } else {
+                            if let Some(r) = self.checkpoint_reply.take() {
+                                // Also retain a copy as the recovery
+                                // restore point when supervision can use
+                                // it (replay-log recovery enabled).
+                                if self.config.ft_log {
+                                    self.latest_checkpoint = Some(cp.duplicate());
+                                }
+                                let _ = r.send(cp);
+                            }
+                            self.broadcast_all(ControlMessage::Resume);
                         }
-                        self.broadcast_all(ControlMessage::Resume);
                     }
                 }
             }
@@ -1036,6 +1138,19 @@ impl Coordinator {
                 self.first_output
                     .entry(worker.op)
                     .or_insert_with(|| at.duration_since(self.started).as_secs_f64());
+            }
+            WorkerEvent::WorkerFailed { worker, cause, at } => {
+                // Panic containment declared a crash. Record it; the
+                // run loop (or an aborting fence) acts on it — recovery
+                // never runs from inside a fence's event pump.
+                self.supervision.crashes_detected += 1;
+                self.supervision
+                    .observe_detection_ms(at.elapsed().as_secs_f64() * 1e3);
+                self.pending_failures.push((worker, cause, Instant::now()));
+            }
+            WorkerEvent::EpochMark { .. } => {
+                // Recovery drain marker: consumed inside `redeploy`;
+                // one reaching the normal loop is already spent.
             }
         }
     }
@@ -1337,6 +1452,7 @@ impl Coordinator {
             || new_n == 0
             || new_n == self.workflow.ops[op].workers
             || self.completed.iter().any(|w| w.op == op)
+            || !self.pending_failures.is_empty()
         {
             return Duration::ZERO;
         }
@@ -1356,22 +1472,30 @@ impl Coordinator {
         while (self.checkpoint_reply.is_some()
             || !self.snapshot_outstanding.is_empty()
             || !self.pause_outstanding.is_empty())
+            && self.pending_failures.is_empty()
             && Instant::now() < deadline
         {
             self.pump_fence();
         }
 
         // (1) Fence: pause-all, await acks (completed workers ack too).
+        // A worker declared failed mid-fence can never ack: abort the
+        // fence immediately (recovery runs back on the run loop).
         self.pause_outstanding = self.handles.keys().copied().collect();
         self.broadcast_all(ControlMessage::Pause);
-        while !self.pause_outstanding.is_empty() && Instant::now() < deadline {
+        while !self.pause_outstanding.is_empty()
+            && self.pending_failures.is_empty()
+            && Instant::now() < deadline
+        {
             self.pump_fence();
         }
         // Abort (nothing has been touched yet) if the fence could not
-        // close: a worker failed to ack in time, or a target worker
-        // completed between the guard check and the fence closing (its
-        // results are already emitted, so the epoch can't be exact).
+        // close: a worker failed to ack in time (or failed outright), or
+        // a target worker completed between the guard check and the
+        // fence closing (its results are already emitted, so the epoch
+        // can't be exact).
         if !self.pause_outstanding.is_empty()
+            || !self.pending_failures.is_empty()
             || self.completed.iter().any(|w| w.op == op)
         {
             self.pause_outstanding.clear();
@@ -1406,14 +1530,17 @@ impl Coordinator {
                 },
             );
         }
-        while self.scale_collect.len() < old_ids.len() && Instant::now() < deadline {
+        while self.scale_collect.len() < old_ids.len()
+            && self.pending_failures.is_empty()
+            && Instant::now() < deadline
+        {
             self.pump_fence();
         }
-        // Abort-and-restore if any worker failed to surrender in time:
-        // hand every collected state/pending/source back to its original
-        // owner rather than proceed with a partial (silently lossy)
-        // epoch.
-        if self.scale_collect.len() < old_ids.len() {
+        // Abort-and-restore if any worker failed to surrender in time
+        // (or failed outright): hand every collected
+        // state/pending/source back to its original owner rather than
+        // proceed with a partial (silently lossy) epoch.
+        if self.scale_collect.len() < old_ids.len() || !self.pending_failures.is_empty() {
             self.abort_scale();
             return Duration::ZERO;
         }
@@ -1552,6 +1679,7 @@ impl Coordinator {
         // (5)+(6) Rewire the topology and close the epoch.
         self.rewire_and_resume(op, new_n, epoch, &schemes);
         self.maybe_done();
+        self.invalidate_restore_point();
         t0.elapsed()
     }
 
@@ -1611,7 +1739,10 @@ impl Coordinator {
                     preserve_routing: false,
                 },
             );
-            while self.scale_collect.is_empty() && Instant::now() < deadline {
+            while self.scale_collect.is_empty()
+                && self.pending_failures.is_empty()
+                && Instant::now() < deadline
+            {
                 self.pump_fence();
             }
             let Some(surrender) = self.scale_collect.remove(&donor) else {
@@ -1639,10 +1770,14 @@ impl Coordinator {
                     },
                 );
             }
-            while self.scale_collect.len() < old_ids.len() && Instant::now() < deadline {
+            while self.scale_collect.len() < old_ids.len()
+                && self.pending_failures.is_empty()
+                && Instant::now() < deadline
+            {
                 self.pump_fence();
             }
-            if self.scale_collect.len() < old_ids.len() {
+            if self.scale_collect.len() < old_ids.len() || !self.pending_failures.is_empty()
+            {
                 // Restore the swept shards we did get (the donor's
                 // replicate was a copy; nothing else has moved).
                 self.abort_scale();
@@ -1730,10 +1865,13 @@ impl Coordinator {
                 );
             }
             let expected = retiring.len() + surviving.len();
-            while self.scale_collect.len() < expected && Instant::now() < deadline {
+            while self.scale_collect.len() < expected
+                && self.pending_failures.is_empty()
+                && Instant::now() < deadline
+            {
                 self.pump_fence();
             }
-            if self.scale_collect.len() < expected {
+            if self.scale_collect.len() < expected || !self.pending_failures.is_empty() {
                 self.abort_scale();
                 return Duration::ZERO;
             }
@@ -1800,6 +1938,7 @@ impl Coordinator {
         let schemes = self.workflow.ops[op].input_partitioning.clone();
         self.rewire_and_resume(op, new_n, epoch, &schemes);
         self.maybe_done();
+        self.invalidate_restore_point();
         t0.elapsed()
     }
 
@@ -1936,16 +2075,20 @@ impl Coordinator {
         while (self.checkpoint_reply.is_some()
             || !self.snapshot_outstanding.is_empty()
             || !self.pause_outstanding.is_empty())
+            && self.pending_failures.is_empty()
             && Instant::now() < deadline
         {
             self.pump_fence();
         }
         self.pause_outstanding = self.handles.keys().copied().collect();
         self.broadcast_all(ControlMessage::Pause);
-        while !self.pause_outstanding.is_empty() && Instant::now() < deadline {
+        while !self.pause_outstanding.is_empty()
+            && self.pending_failures.is_empty()
+            && Instant::now() < deadline
+        {
             self.pump_fence();
         }
-        if !self.pause_outstanding.is_empty() {
+        if !self.pause_outstanding.is_empty() || !self.pending_failures.is_empty() {
             self.pause_outstanding.clear();
             self.abort_scale();
             return false;
@@ -2102,6 +2245,7 @@ impl Coordinator {
                 PartitionScheme::Broadcast
             )
             || self.completed.iter().any(|w| w.op == op)
+            || !self.pending_failures.is_empty()
         {
             return Duration::ZERO;
         }
@@ -2133,10 +2277,13 @@ impl Coordinator {
                 },
             );
         }
-        while self.scale_collect.len() < ids.len() && Instant::now() < deadline {
+        while self.scale_collect.len() < ids.len()
+            && self.pending_failures.is_empty()
+            && Instant::now() < deadline
+        {
             self.pump_fence();
         }
-        if self.scale_collect.len() < ids.len() {
+        if self.scale_collect.len() < ids.len() || !self.pending_failures.is_empty() {
             self.abort_scale();
             return Duration::ZERO;
         }
@@ -2251,6 +2398,7 @@ impl Coordinator {
         // (mitigation overlays reset with them); resume.
         self.rewire_and_resume(op, n, epoch, &schemes);
         self.maybe_done();
+        self.invalidate_restore_point();
         t0.elapsed()
     }
 
@@ -2273,6 +2421,7 @@ impl Coordinator {
                 .iter()
                 .any(|m| m.from == from && m.to == to && m.to_port == to_port)
             || self.completed.iter().any(|w| w.op == from || w.op == to)
+            || !self.pending_failures.is_empty()
         {
             return Duration::ZERO;
         }
@@ -2378,6 +2527,7 @@ impl Coordinator {
         if !self.user_paused {
             self.broadcast_all(ControlMessage::FenceResume);
         }
+        self.invalidate_restore_point();
         t0.elapsed()
     }
 
@@ -2404,6 +2554,7 @@ impl Coordinator {
         let lm = self.live_mats[mi].clone();
         if self.shutdown
             || self.started_sources.contains(&lm.reader)
+            || !self.pending_failures.is_empty()
             || self
                 .completed
                 .iter()
@@ -2441,10 +2592,14 @@ impl Coordinator {
                 },
             );
         }
-        while self.scale_collect.len() < writer_ids.len() && Instant::now() < deadline {
+        while self.scale_collect.len() < writer_ids.len()
+            && self.pending_failures.is_empty()
+            && Instant::now() < deadline
+        {
             self.pump_fence();
         }
-        if self.scale_collect.len() < writer_ids.len() {
+        if self.scale_collect.len() < writer_ids.len() || !self.pending_failures.is_empty()
+        {
             self.abort_scale();
             return Duration::ZERO;
         }
@@ -2544,6 +2699,7 @@ impl Coordinator {
             self.broadcast_all(ControlMessage::FenceResume);
         }
         self.maybe_done();
+        self.invalidate_restore_point();
         t0.elapsed()
     }
 
@@ -2619,6 +2775,7 @@ impl Coordinator {
             initial_eofs: Some(self.missed_ends(op_idx)),
             start_paused: true,
             columnar: self.config.columnar,
+            fault_plan: self.config.fault_plan.clone(),
         };
         let builder = spec.builder.clone();
         let thread = std::thread::Builder::new()
@@ -2636,12 +2793,346 @@ impl Coordinator {
         }
     }
 
+    /// A successful scale/migration fence changed the plan (worker
+    /// counts, partitioning, or topology), so a checkpoint keyed to the
+    /// old worker set cannot be restored onto the new one. Recovery
+    /// falls back to a scratch redeploy — a full deterministic re-run
+    /// with the control-replay log — until the next checkpoint
+    /// completes against the new plan.
+    fn invalidate_restore_point(&mut self) {
+        self.latest_checkpoint = None;
+    }
+
+    /// Heartbeat sweep: every worker stamps `WorkerGauges::heartbeat`
+    /// from its run loop; a counter that has not moved for
+    /// `heartbeat_timeout_ms` declares the worker failed (stall). This
+    /// catches livelock/deadlock-class failures that `catch_unwind`
+    /// containment (crash-class, reported via `WorkerFailed`) cannot.
+    fn sweep_heartbeats(&mut self) {
+        let timeout_ms = self.config.heartbeat_timeout_ms;
+        if timeout_ms == 0 || self.done_at.is_some() || self.shutdown {
+            return;
+        }
+        let now = Instant::now();
+        let timeout = Duration::from_millis(timeout_ms);
+        let mut stalled: Vec<(WorkerId, Duration)> = Vec::new();
+        for (id, h) in &self.handles {
+            let hb = h.gauges.heartbeat.load(Ordering::Relaxed);
+            let e = self.last_beats.entry(*id).or_insert((hb, now));
+            if hb != e.0 {
+                *e = (hb, now);
+            } else if now.duration_since(e.1) >= timeout {
+                stalled.push((*id, now.duration_since(e.1)));
+                // Re-arm, so a declared stall is not re-declared on
+                // every sweep while recovery is still pending.
+                e.1 = now;
+            }
+        }
+        for (id, silence) in stalled {
+            self.supervision.stalls_detected += 1;
+            self.supervision
+                .observe_detection_ms(silence.as_secs_f64() * 1e3);
+            self.pending_failures.push((
+                id,
+                format!("heartbeat silent for {} ms (stall)", silence.as_millis()),
+                now,
+            ));
+        }
+    }
+
+    /// Supervision step, run once per coordinator loop iteration:
+    /// sweep heartbeats, then act on any declared failure — recover
+    /// when fault tolerance is on and retries remain, abort with a
+    /// structured error otherwise. Failures observed after completion
+    /// or during shutdown are teardown races and are dropped.
+    fn check_supervision(&mut self) {
+        self.sweep_heartbeats();
+        if self.done_at.is_some() || self.shutdown {
+            self.pending_failures.clear();
+            return;
+        }
+        if self.pending_failures.is_empty() {
+            return;
+        }
+        let (worker, cause, _) = self.pending_failures[0].clone();
+        if !self.config.ft_log {
+            self.abort_with(ExecError::Unsupervised { worker, cause });
+            return;
+        }
+        if self.recovery_attempts >= self.config.recovery_max_retries {
+            self.supervision.retries_exhausted = true;
+            self.abort_with(ExecError::RecoveryExhausted {
+                attempts: self.recovery_attempts,
+                last_failure: cause,
+            });
+            return;
+        }
+        // Attempt counter never resets: a workload that keeps dying is
+        // bounded by `recovery_max_retries` total redeploys, after
+        // which the run aborts instead of looping forever.
+        self.recovery_attempts += 1;
+        let backoff = self
+            .config
+            .recovery_backoff_ms
+            .saturating_mul(1u64 << (self.recovery_attempts - 1).min(16));
+        if backoff > 0 {
+            std::thread::sleep(Duration::from_millis(backoff));
+        }
+        let t0 = Instant::now();
+        self.redeploy();
+        self.supervision
+            .observe_recovery_ms(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    /// Automatic recovery (§2.6.2 closed into a loop): tear the whole
+    /// actor DAG down, drain stale events from the dead generation,
+    /// redeploy every worker at the *current* plan, restore from the
+    /// retained checkpoint — or from scratch when none is valid:
+    /// default snapshots reset operator state *and* shared sink
+    /// handles, so the deterministic computation re-runs cleanly —
+    /// re-inject the control-replay log, and resume.
+    fn redeploy(&mut self) {
+        // (a) Teardown. A panicked worker's mailbox is already gone;
+        // peers blocked on its lanes observed the disconnect and exit
+        // on `Die`. The DAG is acyclic, so the joins terminate: sinks
+        // drain first, unblocking their upstreams in turn. Stalled
+        // workers are joined once their stall window elapses.
+        self.broadcast_all(ControlMessage::Die);
+        for (_, mut h) in self.handles.drain() {
+            if let Some(t) = h.thread.take() {
+                let _ = t.join();
+            }
+        }
+        self.senders.clear();
+
+        // (b) Drain events the dead generation emitted before dying so
+        // stale Completed/Log/WorkerFailed records cannot pollute the
+        // rebuilt generation's bookkeeping. The event channel is FIFO
+        // through the forwarder thread, so everything the old workers
+        // sent precedes this marker.
+        self.recovery_epoch += 1;
+        let token = self.recovery_epoch;
+        let _ = self.ev_tx.send(WorkerEvent::EpochMark { token });
+        loop {
+            match self.rx.recv_timeout(Duration::from_secs(5)) {
+                Ok(CoordMsg::Event(WorkerEvent::EpochMark { token: t })) if t == token => {
+                    break
+                }
+                Ok(CoordMsg::Event(_)) => {}
+                Ok(CoordMsg::Cmd(c)) => self.deferred.push(c),
+                Err(_) => break,
+            }
+        }
+        self.pending_failures.clear();
+        self.last_beats.clear();
+
+        // (c) Reset run bookkeeping. An interrupted driver Pause
+        // handshake resolves now (workers respawn paused and stay
+        // paused while `user_paused`); an interrupted checkpoint cycle
+        // is re-armed against the rebuilt generation below.
+        if let Some((reply, t0)) = self.pause_reply.take() {
+            let _ = reply.send(t0.elapsed());
+        }
+        self.pause_outstanding.clear();
+        self.snapshot_outstanding.clear();
+        self.snapshot_acc = Checkpoint::default();
+        self.auto_checkpoint = false;
+        self.scale_collect.clear();
+        self.completed.clear();
+        self.final_stats.clear();
+        self.ops_completed.clear();
+        self.port_completed.clear();
+        self.total_workers = self.workflow.total_workers();
+
+        // (d) Restore set: duplicate the retained checkpoint so a
+        // later attempt can restore it again. Without one, every
+        // worker gets a default snapshot — fresh operator state,
+        // shared sinks reset to empty — and sources rebuild from their
+        // builders, so the full re-run is byte-exact by determinism.
+        let mut cp = self
+            .latest_checkpoint
+            .as_ref()
+            .map(|c| c.duplicate())
+            .unwrap_or_default();
+
+        // (e) Rebuild mailboxes, then spawn every worker of the
+        // current plan (paused).
+        let mut mailboxes: HashMap<WorkerId, Mailbox> = HashMap::new();
+        for (op_idx, op) in self.workflow.ops.iter().enumerate() {
+            for w in 0..op.workers {
+                let id = WorkerId::new(op_idx, w);
+                let (tx, mb) = mailbox(self.config.data_queue_cap);
+                self.senders.insert(id, tx);
+                mailboxes.insert(id, mb);
+            }
+        }
+        for op_idx in 0..self.workflow.ops.len() {
+            for w in 0..self.workflow.ops[op_idx].workers {
+                let id = WorkerId::new(op_idx, w);
+                let mb = mailboxes.remove(&id).unwrap();
+                let snap = cp.workers.remove(&id).unwrap_or_default();
+                self.respawn_worker(op_idx, w, mb, snap);
+            }
+        }
+
+        // (f) Re-inject the per-worker control-replay log (§2.6.2).
+        // Replayed messages are not re-logged, so the log stays valid
+        // for a further recovery; checkpoint completion clears it.
+        let ids: Vec<WorkerId> = self.handles.keys().copied().collect();
+        for id in ids {
+            let recs = self.replay_log.for_worker(id);
+            if !recs.is_empty() {
+                self.send_control(id, ControlMessage::ReplayLog(recs));
+            }
+        }
+
+        // (g) Resume. A manual checkpoint interrupted by the failure
+        // restarts its quiesce cycle against the new generation.
+        if self.checkpoint_reply.is_some() {
+            self.begin_pause(None);
+        } else if !self.user_paused {
+            self.broadcast_all(ControlMessage::Resume);
+        }
+        if self.config.checkpoint_interval_ms > 0 {
+            self.next_checkpoint = Some(
+                Instant::now() + Duration::from_millis(self.config.checkpoint_interval_ms),
+            );
+        }
+    }
+
+    /// Respawn one worker during `redeploy`. Mirrors the deploy-time
+    /// spawn in `start_inner` — upstream EOF accounting comes from the
+    /// *plan* (the whole DAG is being rebuilt, so every upstream worker
+    /// is live again; restored-finished workers re-announce completion
+    /// from their snapshot without re-sending Ends, and downstream
+    /// snapshots already counted those Ends) — but keeps the current
+    /// fence epoch and started/dormant source status.
+    fn respawn_worker(&mut self, op_idx: usize, w: usize, mb: Mailbox, snap: WorkerSnapshot) {
+        let spec = &self.workflow.ops[op_idx];
+        let n = spec.workers;
+        let id = WorkerId::new(op_idx, w);
+        let mut upstream_counts = vec![0usize; spec.input_partitioning.len()];
+        for e in self.workflow.in_edges(op_idx) {
+            upstream_counts[e.to_port] += self.workflow.ops[e.from].workers;
+        }
+        let mut outputs = Vec::new();
+        for e in self.workflow.out_edges(op_idx) {
+            let dst = &self.workflow.ops[e.to];
+            let scheme = dst.input_partitioning[e.to_port].clone();
+            let dst_senders: Vec<DataSender> = (0..dst.workers)
+                .map(|d| self.senders[&WorkerId::new(e.to, d)].clone())
+                .collect();
+            outputs.push(
+                OutputEdge::new(
+                    e.to,
+                    e.to_port,
+                    Partitioner::new(scheme, dst.workers, w),
+                    dst_senders,
+                )
+                .with_columnar(self.config.columnar),
+            );
+        }
+        let peers: Vec<DataSender> = (0..n)
+            .filter_map(|i| self.senders.get(&WorkerId::new(op_idx, i)).cloned())
+            .collect();
+        let port_key_fields: Vec<Option<usize>> = spec
+            .input_partitioning
+            .iter()
+            .map(|s| match s {
+                PartitionScheme::Hash { key } => Some(*key),
+                PartitionScheme::Range { key, .. } => Some(*key),
+                _ => None,
+            })
+            .collect();
+        let control = mb.control.clone();
+        let gauges = mb.gauges.clone();
+        let source_autostart = (self.sources_autostart
+            || self.started_sources.contains(&op_idx))
+            && !self.dormant_ops.contains(&op_idx);
+        let ctx = WorkerContext {
+            id,
+            mailbox: mb,
+            event_tx: self.ev_tx.clone(),
+            outputs,
+            upstream_counts,
+            peers,
+            port_key_fields,
+            source: if spec.is_source {
+                Some((spec.source_builder.as_ref().expect("source op without source"))(w, n))
+            } else {
+                None
+            },
+            source_autostart,
+            batch_size: self.config.batch_size,
+            ctrl_check_interval: self.config.ctrl_check_interval,
+            ft_log: self.config.ft_log,
+            snapshot: Some(snap),
+            scatter_merge: spec.scatter_merge,
+            scale_epoch: self.fence_epoch,
+            initial_eofs: None,
+            start_paused: true,
+            columnar: self.config.columnar,
+            fault_plan: self.config.fault_plan.clone(),
+        };
+        let builder = spec.builder.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("{}", id))
+            .spawn(move || run_worker(ctx, builder(w, n)))
+            .expect("respawn worker");
+        self.handles
+            .insert(id, WorkerHandle { control, gauges, thread: Some(thread) });
+        if let Some(pred) = self.local_bps.get(&op_idx).cloned() {
+            if pred.is_some() {
+                self.send_control(id, ControlMessage::SetLocalBreakpoint(pred));
+            }
+        }
+    }
+
+    /// Abort the run with a structured error: tear every worker down
+    /// and release every waiter. The promise is a clean, observable
+    /// abort — `join()` returns a summary carrying the error; nothing
+    /// hangs.
+    fn abort_with(&mut self, err: ExecError) {
+        self.exec_error = Some(err);
+        self.pending_failures.clear();
+        self.next_checkpoint = None;
+        self.broadcast_all(ControlMessage::Die);
+        for (_, mut h) in self.handles.drain() {
+            if let Some(t) = h.thread.take() {
+                let _ = t.join();
+            }
+        }
+        self.senders.clear();
+        self.done_at = Some(Instant::now());
+        if let Some((reply, t0)) = self.pause_reply.take() {
+            let _ = reply.send(t0.elapsed());
+        }
+        if let Some(reply) = self.checkpoint_reply.take() {
+            let _ = reply.send(Checkpoint::default());
+        }
+        let summary = self.summary();
+        for w in self.done_waiters.drain(..) {
+            let _ = w.send(summary.clone());
+        }
+        let ow: Vec<_> = self.ops_waiters.drain(..).collect();
+        for (_, reply) in ow {
+            let _ = reply.send(());
+        }
+        let pw: Vec<_> = self.port_waiters.drain(..).collect();
+        for (_, _, reply) in pw {
+            let _ = reply.send(());
+        }
+    }
+
     fn next_deadline(&self) -> Instant {
         let mut d = self.next_tick;
         for bp in self.breakpoints.values() {
             if let Some(dl) = bp.deadline {
                 d = d.min(dl);
             }
+        }
+        if let Some(cp) = self.next_checkpoint {
+            d = d.min(cp);
         }
         d
     }
@@ -2664,6 +3155,27 @@ impl Coordinator {
                 st.deadline = None;
                 let act = st.machine.on_timeout();
                 self.on_bp_action(id, act);
+            }
+        }
+        // Automatic checkpointer: arm a quiesced checkpoint cycle when
+        // due, but only when no other pause/snapshot handshake is in
+        // flight and no failure is waiting on recovery. When a slot is
+        // skipped the deadline stays armed, so the cycle starts as soon
+        // as the engine is quiet again.
+        if let Some(due) = self.next_checkpoint {
+            if self.done_at.is_some() {
+                self.next_checkpoint = None;
+            } else if now >= due
+                && !self.auto_checkpoint
+                && !self.user_paused
+                && self.checkpoint_reply.is_none()
+                && self.pause_reply.is_none()
+                && self.pause_outstanding.is_empty()
+                && self.snapshot_outstanding.is_empty()
+                && self.pending_failures.is_empty()
+            {
+                self.auto_checkpoint = true;
+                self.begin_pause(None);
             }
         }
     }
@@ -2691,6 +3203,7 @@ impl Coordinator {
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
             }
             self.fire_timers();
+            self.check_supervision();
             // Autoscale: execute plugin-requested parallelism changes
             // (one fenced epoch each), then replay commands deferred
             // while the fence was open. Requests for operators the

@@ -17,6 +17,8 @@
 
 use crate::engine::message::{ControlMessage, DataEvent, WorkerId};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
 
 /// Position in a worker's deterministic data stream: (number of data
 /// messages dequeued so far, tuple index within the current batch).
@@ -69,6 +71,40 @@ pub struct WorkerSnapshot {
     /// Stats counters to restore (processed/produced).
     pub processed: u64,
     pub produced: u64,
+    /// Per-port closed flags at snapshot time. A port that was already
+    /// closed had its `finish_port` outputs emitted (and counted
+    /// downstream) before the checkpoint; the restored worker must not
+    /// close it — and emit — again. Empty means "all open" (fresh or
+    /// pre-supervision snapshots).
+    pub ports_done: Vec<bool>,
+    /// Whether the worker had fully finished at snapshot time. A
+    /// restored finished worker re-announces completion to the
+    /// coordinator but re-runs neither `finish` nor its EOF broadcast
+    /// (downstream snapshots already account for both).
+    pub finished: bool,
+}
+
+impl WorkerSnapshot {
+    /// Deep copy for repeated recovery attempts: plain state clones,
+    /// and the embedded live source (if any) duplicates via
+    /// [`crate::workloads::TupleSource::fork`] — sources that cannot
+    /// fork fall back to `source_pos` + the plan-time builder, exactly
+    /// as restore itself does.
+    pub fn duplicate(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            op_state: self.op_state.clone(),
+            pending: self.pending.clone(),
+            source_pos: self.source_pos,
+            source: self.source.as_ref().and_then(|s| s.fork()),
+            eofs_seen: self.eofs_seen.clone(),
+            msg_count: self.msg_count,
+            resume_offset: self.resume_offset,
+            processed: self.processed,
+            produced: self.produced,
+            ports_done: self.ports_done.clone(),
+            finished: self.finished,
+        }
+    }
 }
 
 // Manual: the embedded `Box<dyn TupleSource>` has no `Debug`.
@@ -84,6 +120,8 @@ impl std::fmt::Debug for WorkerSnapshot {
             .field("resume_offset", &self.resume_offset)
             .field("processed", &self.processed)
             .field("produced", &self.produced)
+            .field("ports_done", &self.ports_done)
+            .field("finished", &self.finished)
             .finish()
     }
 }
@@ -100,6 +138,19 @@ impl Checkpoint {
             .values()
             .map(|s| s.op_state.size_tuples())
             .sum()
+    }
+
+    /// Deep copy (see [`WorkerSnapshot::duplicate`]) so the coordinator
+    /// can retain one restore point across several recovery attempts —
+    /// each attempt consumes per-worker snapshots by value.
+    pub fn duplicate(&self) -> Checkpoint {
+        Checkpoint {
+            workers: self
+                .workers
+                .iter()
+                .map(|(id, s)| (*id, s.duplicate()))
+                .collect(),
+        }
     }
 }
 
@@ -135,6 +186,199 @@ impl ReplayLog {
     }
 }
 
+/// One kind of injectable fault. All faults are *positional* — they
+/// name a worker (or outgoing edge) and a deterministic stream
+/// position — so the same plan reproduces the same failure bit-for-bit
+/// regardless of thread scheduling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker `worker` panics once its processed-tuple count reaches
+    /// `after_processed` (an arbitrary replay position: the check runs
+    /// between chunks of the DP loop, exactly where control messages
+    /// are applied).
+    PanicAt { worker: WorkerId, after_processed: u64 },
+    /// Worker `worker` stalls — sleeps *without* stamping its
+    /// heartbeat — for `for_ms` once its processed count reaches
+    /// `after_processed`. Lets tests exercise the coordinator's
+    /// stall-vs-crash distinction.
+    StallAt {
+        worker: WorkerId,
+        after_processed: u64,
+        for_ms: u64,
+    },
+    /// Drop the `nth` (1-based) data batch `worker` sends toward
+    /// operator `to_op`. Lossy by construction: downstream results
+    /// will be short unless a checkpoint/recovery cycle re-produces
+    /// the dropped rows.
+    DropNth { worker: WorkerId, to_op: usize, nth: u64 },
+    /// Delay the `nth` (1-based) data batch `worker` sends toward
+    /// operator `to_op` by `for_ms`. Per-edge FIFO is preserved (the
+    /// sender blocks), so results stay byte-exact.
+    DelayNth {
+        worker: WorkerId,
+        to_op: usize,
+        nth: u64,
+        for_ms: u64,
+    },
+}
+
+/// One injected fault with a bounded fire count.
+///
+/// The fire counter is shared across [`Clone`]s (an [`Arc`]), so a
+/// one-shot fault stays one-shot across the worker respawns of
+/// automatic recovery — and a fault constructed with
+/// [`Fault::times`]`(n)` for `n > recovery_max_retries` forces the
+/// retry-exhaustion path deterministically.
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub kind: FaultKind,
+    max_fires: u32,
+    fired: Arc<AtomicU32>,
+}
+
+impl Fault {
+    fn new(kind: FaultKind) -> Fault {
+        Fault { kind, max_fires: 1, fired: Arc::new(AtomicU32::new(0)) }
+    }
+
+    /// One-shot panic of `worker` at processed-count `after_processed`.
+    pub fn panic_at(worker: WorkerId, after_processed: u64) -> Fault {
+        Fault::new(FaultKind::PanicAt { worker, after_processed })
+    }
+
+    /// One-shot heartbeat-silent stall of `worker` for `for_ms`.
+    pub fn stall_at(worker: WorkerId, after_processed: u64, for_ms: u64) -> Fault {
+        Fault::new(FaultKind::StallAt { worker, after_processed, for_ms })
+    }
+
+    /// Drop the `nth` data batch `worker` sends toward `to_op`.
+    pub fn drop_nth(worker: WorkerId, to_op: usize, nth: u64) -> Fault {
+        Fault::new(FaultKind::DropNth { worker, to_op, nth })
+    }
+
+    /// Delay the `nth` data batch `worker` sends toward `to_op`.
+    pub fn delay_nth(worker: WorkerId, to_op: usize, nth: u64, for_ms: u64) -> Fault {
+        Fault::new(FaultKind::DelayNth { worker, to_op, nth, for_ms })
+    }
+
+    /// Allow this fault to fire up to `n` times (default 1). A panic
+    /// fault re-fires after recovery replays past its position again.
+    pub fn times(mut self, n: u32) -> Fault {
+        self.max_fires = n;
+        self
+    }
+
+    /// Atomically claim one firing; `false` once `max_fires` is spent.
+    pub fn try_fire(&self) -> bool {
+        let mut cur = self.fired.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_fires {
+                return false;
+            }
+            match self.fired.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// How many times this fault has fired (shared across clones).
+    pub fn fires(&self) -> u32 {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+/// A deterministic fault-injection plan, threaded through
+/// [`crate::config::Config::fault_plan`] into the worker DP loop and
+/// the exchange send path. Chaos fuzzers build one from their seed and
+/// assert byte-exact results vs the same seed without faults.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn push(&mut self, f: Fault) {
+        self.faults.push(f);
+    }
+
+    /// Worker-scoped faults (panic/stall) targeting `w`.
+    pub fn worker_faults(&self, w: WorkerId) -> Vec<Fault> {
+        self.faults
+            .iter()
+            .filter(|f| {
+                matches!(
+                    f.kind,
+                    FaultKind::PanicAt { worker, .. } | FaultKind::StallAt { worker, .. }
+                        if worker == w
+                )
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Edge-scoped faults (drop/delay) whose sending side is `w`.
+    pub fn edge_faults(&self, w: WorkerId) -> Vec<Fault> {
+        self.faults
+            .iter()
+            .filter(|f| {
+                matches!(
+                    f.kind,
+                    FaultKind::DropNth { worker, .. } | FaultKind::DelayNth { worker, .. }
+                        if worker == w
+                )
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Total firings across all faults so far.
+    pub fn total_fires(&self) -> u64 {
+        self.faults.iter().map(|f| f.fires() as u64).sum()
+    }
+}
+
+/// Structured failure surfaced by supervised execution (via
+/// `ExecSummary::error`): the run terminated abnormally but *cleanly*
+/// — workers joined, waiters released — instead of hanging.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// A worker failed and automatic recovery is unavailable
+    /// (`Config::ft_log` off, so there is no replay log to make
+    /// recovery exact). The run aborted.
+    Unsupervised { worker: WorkerId, cause: String },
+    /// Automatic recovery was attempted `attempts` times and the
+    /// workflow kept failing; the run aborted.
+    RecoveryExhausted { attempts: u32, last_failure: String },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Unsupervised { worker, cause } => {
+                write!(f, "worker {worker:?} failed without supervision: {cause}")
+            }
+            ExecError::RecoveryExhausted { attempts, last_failure } => {
+                write!(
+                    f,
+                    "recovery exhausted after {attempts} attempt(s); last failure: {last_failure}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,5 +408,40 @@ mod tests {
         let b = ReplayPos { msg_count: 6, tuple_idx: 35 };
         let c = ReplayPos { msg_count: 7, tuple_idx: 0 };
         assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn fault_fire_count_shared_across_clones() {
+        let f = Fault::panic_at(WorkerId::new(1, 0), 100);
+        let g = f.clone(); // a recovery respawn re-threads the same plan
+        assert!(f.try_fire());
+        assert!(!g.try_fire(), "one-shot fault fired twice across clones");
+        assert_eq!(g.fires(), 1);
+        let multi = Fault::stall_at(WorkerId::new(0, 0), 0, 5).times(3);
+        assert!(multi.try_fire() && multi.try_fire() && multi.try_fire());
+        assert!(!multi.try_fire());
+    }
+
+    #[test]
+    fn fault_plan_filters_by_worker_and_scope() {
+        let w = WorkerId::new(2, 1);
+        let mut plan = FaultPlan::default();
+        plan.push(Fault::panic_at(w, 64));
+        plan.push(Fault::stall_at(WorkerId::new(2, 0), 10, 50));
+        plan.push(Fault::delay_nth(w, 3, 2, 20));
+        plan.push(Fault::drop_nth(WorkerId::new(0, 0), 1, 1));
+        assert_eq!(plan.worker_faults(w).len(), 1);
+        assert_eq!(plan.edge_faults(w).len(), 1);
+        assert_eq!(plan.worker_faults(WorkerId::new(9, 9)).len(), 0);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.total_fires(), 0);
+    }
+
+    #[test]
+    fn exec_error_displays() {
+        let e = ExecError::RecoveryExhausted { attempts: 3, last_failure: "panic: boom".into() };
+        assert!(e.to_string().contains("3 attempt"));
+        let u = ExecError::Unsupervised { worker: WorkerId::new(0, 0), cause: "x".into() };
+        assert!(u.to_string().contains("without supervision"));
     }
 }

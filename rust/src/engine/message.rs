@@ -374,6 +374,19 @@ pub enum WorkerEvent {
     /// The worker produced its first output tuple (first-response-time
     /// instrumentation for Maestro experiments, §4.5.3).
     FirstOutput { worker: WorkerId, at: Instant },
+    /// The worker's DP loop panicked. Sent by the `catch_unwind`
+    /// containment wrapper around the worker thread (never by the DP
+    /// loop itself), carrying the downcast panic payload and the panic
+    /// instant so the coordinator can measure detection latency before
+    /// starting supervised recovery.
+    WorkerFailed { worker: WorkerId, cause: String, at: Instant },
+    /// Coordinator-injected drain marker, never sent by workers. During
+    /// supervised recovery the coordinator joins the old worker
+    /// generation, then pushes one of these through the (FIFO) event
+    /// channel and discards every event ahead of it — anything the dead
+    /// generation sent before dying — so stale `Completed`/`Log` events
+    /// cannot pollute the rebuilt generation's bookkeeping.
+    EpochMark { token: u64 },
     /// Reply to [`ControlMessage::ExtractScaleState`]: the worker's
     /// operator state and unprocessed input events — surrendered
     /// (`replicate: false`, plus the live `TupleSource` on scan
@@ -406,6 +419,8 @@ impl std::fmt::Debug for WorkerEvent {
             WorkerEvent::Completed { .. } => "Completed",
             WorkerEvent::Log(_) => "Log",
             WorkerEvent::FirstOutput { .. } => "FirstOutput",
+            WorkerEvent::WorkerFailed { .. } => "WorkerFailed",
+            WorkerEvent::EpochMark { .. } => "EpochMark",
             WorkerEvent::ScaleState { .. } => "ScaleState",
         };
         write!(f, "{name}")

@@ -34,6 +34,19 @@
 //! materialization in or out, or applying a multi-operator worker
 //! re-plan — each as an ordered sequence of fenced steps with
 //! abort-and-restore ([`Execution::migrate`]).
+//!
+//! Execution is **supervised** (§2.6 closed into a loop): worker
+//! threads run under panic containment (`catch_unwind` →
+//! [`message::WorkerEvent::WorkerFailed`]), stamp a heartbeat the
+//! coordinator sweeps on its timer
+//! ([`crate::config::Config::heartbeat_timeout_ms`]), and on a
+//! declared failure — crash or stall — the coordinator restores the
+//! latest automatic checkpoint
+//! ([`crate::config::Config::checkpoint_interval_ms`]), re-injects the
+//! control-replay log (§2.6.2) and resumes, with bounded exponential
+//! retries escalating to a structured [`fault::ExecError`].
+//! Deterministic failures are injected through a seeded
+//! [`fault::FaultPlan`].
 
 pub mod message;
 pub mod channel;
@@ -48,6 +61,7 @@ pub mod migrate;
 pub mod scale;
 
 pub use controller::{Execution, ExecSummary};
+pub use fault::{ExecError, Fault, FaultKind, FaultPlan};
 pub use migrate::{MigrationOutcome, PlanDelta};
 pub use scale::AutoscalePlugin;
 pub use dag::{Edge, OpSpec, Workflow};

@@ -44,7 +44,7 @@
 
 use crate::column::{ColumnAppender, ColumnSet};
 use crate::engine::channel::{DataSender, Mailbox, RingRecvError};
-use crate::engine::fault::{LogRecord, ReplayPos, WorkerSnapshot};
+use crate::engine::fault::{Fault, FaultKind, FaultPlan, LogRecord, ReplayPos, WorkerSnapshot};
 use crate::engine::message::{
     BreakpointTarget, ControlMessage, DataEvent, DataMessage, HashColumn, LocalPredicate,
     WorkerEvent, WorkerId, WorkerStats,
@@ -189,6 +189,12 @@ pub struct WorkerContext {
     /// Build columnar batches on the source/produce path and in rebuilt
     /// scatter buffers ([`Config::columnar`](crate::config::Config)).
     pub columnar: bool,
+    /// Deterministic fault-injection plan
+    /// ([`Config::fault_plan`](crate::config::Config)). The worker
+    /// filters out its own panic/stall faults and the drop/delay
+    /// faults of its outgoing edges; fire counters are shared across
+    /// recovery respawns, so one-shot faults stay one-shot.
+    pub fault_plan: FaultPlan,
 }
 
 /// Why the worker is paused (it can be paused for several reasons at
@@ -248,23 +254,67 @@ struct OutBox {
     event_tx: Sender<WorkerEvent>,
     dead: bool,
     scratch: ExchangeScratch,
+    /// Edge-scoped injected faults (drop/delay) whose sending side is
+    /// this worker (empty outside fault-injection runs).
+    faults: Vec<Fault>,
+    /// Data batches sent toward each destination operator so far —
+    /// the 1-based `nth` coordinate of [`FaultKind::DropNth`] /
+    /// [`FaultKind::DelayNth`]. Only maintained while `faults` is
+    /// non-empty.
+    sent_toward: HashMap<usize, u64>,
 }
 
 impl OutBox {
+    /// Injected edge-fault gate for one outgoing data batch toward
+    /// `target_op`: counts the batch (1-based), fires any matching
+    /// drop/delay fault, and returns `true` when the batch must be
+    /// dropped on the wire.
+    fn edge_fault_gate(&mut self, target_op: usize) -> bool {
+        if self.faults.is_empty() {
+            return false;
+        }
+        let n = self.sent_toward.entry(target_op).or_insert(0);
+        *n += 1;
+        let nth_now = *n;
+        let mut drop = false;
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::DropNth { to_op, nth, .. }
+                    if to_op == target_op && nth == nth_now && f.try_fire() =>
+                {
+                    drop = true;
+                }
+                FaultKind::DelayNth { to_op, nth, for_ms, .. }
+                    if to_op == target_op && nth == nth_now && f.try_fire() =>
+                {
+                    // Per-edge FIFO is preserved — the sender simply
+                    // blocks — so a delay never reorders batches.
+                    std::thread::sleep(Duration::from_millis(for_ms));
+                }
+                _ => {}
+            }
+        }
+        drop
+    }
+
     /// Send one message carrying `batch` (and, when the whole batch was
     /// hashed on the scatter path, its partitioning [`HashColumn`]) to
     /// destination `d` of edge `e`.
     fn send_msg(&mut self, e: usize, d: usize, batch: TupleBatch, hashes: Option<HashColumn>) {
-        let edge = &mut self.edges[e];
+        let target_op = self.edges[e].target_op;
         let msg = DataMessage {
             from: self.id,
-            port: edge.port,
-            seq: edge.seqs[d],
+            port: self.edges[e].port,
+            seq: self.edges[e].seqs[d],
             batch,
             hashes,
         };
-        edge.seqs[d] += 1;
-        if edge.senders[d].send(DataEvent::Batch(msg)).is_err() {
+        self.edges[e].seqs[d] += 1;
+        if self.edge_fault_gate(target_op) {
+            // Injected DropNth: the batch is lost on the wire.
+            return;
+        }
+        if self.edges[e].senders[d].send(DataEvent::Batch(msg)).is_err() {
             // Receiver crashed; the whole execution is being torn down.
             self.dead = true;
         }
@@ -620,9 +670,33 @@ impl Emitter for OutBox {
     }
 }
 
-/// The worker thread entry point.
+/// The worker thread entry point. The whole DP loop runs under panic
+/// containment: an unwinding panic — an operator bug or an injected
+/// [`FaultKind::PanicAt`] — is caught here, converted into a
+/// [`WorkerEvent::WorkerFailed`] for the coordinator's supervision
+/// layer, and never escapes the thread. Shared-lock poisoning from the
+/// unwind is tolerated by every lock site (see
+/// [`crate::engine::channel`]), so a contained panic cannot cascade.
 pub fn run_worker(ctx: WorkerContext, op: Box<dyn Operator>) {
-    Worker::new(ctx, op).run();
+    let id = ctx.id;
+    let event_tx = ctx.event_tx.clone();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        Worker::new(ctx, op).run();
+    }));
+    if let Err(payload) = result {
+        let cause = if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "panic with non-string payload".to_string()
+        };
+        let _ = event_tx.send(WorkerEvent::WorkerFailed {
+            worker: id,
+            cause,
+            at: Instant::now(),
+        });
+    }
 }
 
 struct Worker {
@@ -693,11 +767,16 @@ struct Worker {
     columnar: bool,
     busy_ns: u64,
     dead: bool,
+    /// Worker-scoped injected faults (panic/stall) targeting this
+    /// worker (empty outside fault-injection runs).
+    faults: Vec<Fault>,
 }
 
 impl Worker {
     fn new(ctx: WorkerContext, op: Box<dyn Operator>) -> Worker {
         let ports = ctx.upstream_counts.len();
+        let worker_faults = ctx.fault_plan.worker_faults(ctx.id);
+        let edge_faults = ctx.fault_plan.edge_faults(ctx.id);
         let mut w = Worker {
             id: ctx.id,
             out: OutBox {
@@ -713,6 +792,8 @@ impl Worker {
                 event_tx: ctx.event_tx.clone(),
                 dead: false,
                 scratch: ExchangeScratch::default(),
+                faults: edge_faults,
+                sent_toward: HashMap::new(),
             },
             mailbox: ctx.mailbox,
             event_tx: ctx.event_tx,
@@ -748,6 +829,7 @@ impl Worker {
             columnar: ctx.columnar,
             busy_ns: 0,
             dead: false,
+            faults: worker_faults,
         };
         if ctx.start_paused {
             w.pause.by_user = true;
@@ -790,6 +872,29 @@ impl Worker {
             .gauges
             .processed
             .store(snap.processed as i64, Ordering::Relaxed);
+        // Completion state. A port that was already closed at snapshot
+        // time had its `finish_port` outputs emitted — and checkpointed
+        // downstream — so the restored worker must neither close it nor
+        // emit again; it only re-announces the closure (and, if it had
+        // fully finished, completion) so the rebuilt coordinator
+        // generation's region/done accounting stays consistent.
+        if !snap.ports_done.is_empty() {
+            self.ports_done = snap.ports_done;
+        }
+        for (port, done) in self.ports_done.clone().into_iter().enumerate() {
+            if done {
+                let _ = self
+                    .event_tx
+                    .send(WorkerEvent::PortCompleted { worker: self.id, port });
+            }
+        }
+        if snap.finished {
+            self.finished = true;
+            let _ = self.event_tx.send(WorkerEvent::Completed {
+                worker: self.id,
+                stats: self.stats(),
+            });
+        }
     }
 
     fn stats(&self) -> WorkerStats {
@@ -799,6 +904,47 @@ impl Worker {
             queued: self.mailbox.gauges.queued.load(Ordering::Relaxed),
             state_tuples: self.op.state_size() as u64,
             busy_ns: self.busy_ns,
+        }
+    }
+
+    /// Stamp the supervision heartbeat: a relaxed epoch-counter bump
+    /// the coordinator's sweep reads lock-free. Called at the top of
+    /// the run loop and inside the chunk/produce loops, so any live
+    /// worker — processing, paused, parked or finished — keeps
+    /// beating; only a genuine stall (or an injected
+    /// [`FaultKind::StallAt`]) goes silent.
+    fn beat(&self) {
+        self.mailbox
+            .gauges
+            .heartbeat
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fire any worker-scoped injected fault due at the current
+    /// processed count. Runs between chunks — the same boundary at
+    /// which control messages apply — so the panic/stall position is
+    /// deterministic regardless of batching or thread scheduling.
+    fn check_worker_faults(&self) {
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::PanicAt { after_processed, .. }
+                    if self.processed >= after_processed && f.try_fire() =>
+                {
+                    panic!(
+                        "injected fault: worker {:?} panicked at processed={}",
+                        self.id, self.processed
+                    );
+                }
+                FaultKind::StallAt { after_processed, for_ms, .. }
+                    if self.processed >= after_processed && f.try_fire() =>
+                {
+                    // Stall: sleep without stamping the heartbeat so
+                    // the coordinator's sweep declares this worker
+                    // dead by silence, not by panic.
+                    std::thread::sleep(Duration::from_millis(for_ms));
+                }
+                _ => {}
+            }
         }
     }
 
@@ -1059,7 +1205,10 @@ impl Worker {
                 self.op.install_replica(s);
             }
             ControlMessage::InstallSource(slot) => {
-                if let Some(src) = slot.lock().unwrap().take() {
+                // Poison-tolerant: the slot is written once by the
+                // coordinator, so a poisoned lock still holds a
+                // coherent value.
+                if let Some(src) = slot.lock().unwrap_or_else(|e| e.into_inner()).take() {
                     self.source = Some(src);
                 }
             }
@@ -1296,6 +1445,8 @@ impl Worker {
             resume_offset,
             processed: self.processed,
             produced: self.out.produced,
+            ports_done: self.ports_done.clone(),
+            finished: self.finished,
         }
     }
 
@@ -1408,6 +1559,7 @@ impl Worker {
         let total = msg.batch.len();
         let t0 = Instant::now();
         while idx < total {
+            self.beat();
             // The between-chunk control check (§2.4.3): a single atomic
             // load unless something is pending.
             if self.mailbox.control.maybe_pending() {
@@ -1471,6 +1623,9 @@ impl Worker {
             let n = (end - idx) as u64;
             idx = end;
             self.processed += n;
+            if !self.faults.is_empty() {
+                self.check_worker_faults();
+            }
             // queued is the Reshape workload metric — chunk-level
             // freshness suffices; the other gauges update per batch.
             self.mailbox.gauges.queued.fetch_sub(n as i64, Ordering::Relaxed);
@@ -1515,7 +1670,14 @@ impl Worker {
         if self.local_key_counts.is_empty() {
             return;
         }
-        let mut shared = self.mailbox.gauges.key_counts.lock().unwrap();
+        // Poison-tolerant: a sibling that panicked mid-flush leaves
+        // per-key counts (approximate metrics) — never a cascade.
+        let mut shared = self
+            .mailbox
+            .gauges
+            .key_counts
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         for (k, v) in self.local_key_counts.drain() {
             *shared.entry(k).or_insert(0) += v;
         }
@@ -1689,6 +1851,7 @@ impl Worker {
         let t0 = Instant::now();
         let mut emitted = 0usize;
         while emitted < self.batch_size {
+            self.beat();
             if self.mailbox.control.maybe_pending() {
                 break;
             }
@@ -1730,6 +1893,9 @@ impl Worker {
                 };
                 self.op.process_batch(&chunk, 0, &mut self.out);
                 self.processed += n as u64;
+                if !self.faults.is_empty() {
+                    self.check_worker_faults();
+                }
                 self.mailbox
                     .gauges
                     .processed
@@ -1761,8 +1927,12 @@ impl Worker {
             .alive_since_ns
             .store(0, Ordering::Relaxed);
         loop {
+            self.beat();
             if self.dead {
                 return;
+            }
+            if !self.faults.is_empty() {
+                self.check_worker_faults();
             }
             if !self.drain_control() {
                 return; // Die
@@ -1953,6 +2123,7 @@ mod tests {
             initial_eofs: None,
             start_paused: false,
             columnar: true,
+            fault_plan: FaultPlan::default(),
         };
         let h = std::thread::spawn(move || run_worker(ctx, Box::new(Identity)));
         (ctrl, in_tx, ev_rx, down_rx.data, h)
@@ -2227,6 +2398,7 @@ mod tests {
             initial_eofs: None,
             start_paused: false,
             columnar: true,
+            fault_plan: FaultPlan::default(),
         };
         let h = std::thread::spawn(move || {
             run_worker(ctx, Box::new(crate::engine::dag::PassThrough))
@@ -2299,6 +2471,7 @@ mod tests {
             initial_eofs: None,
             start_paused: false,
             columnar: true,
+            fault_plan: FaultPlan::default(),
         };
         let h = std::thread::spawn(move || {
             run_worker(ctx, Box::new(crate::engine::dag::PassThrough))
@@ -2331,6 +2504,60 @@ mod tests {
         }
         assert_eq!(seen, 32);
         ctrl.send(ControlMessage::Die, Duration::ZERO);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn injected_panic_is_contained_as_worker_failed() {
+        let (in_tx, in_mb) = mailbox(64);
+        let (down_tx, _down_rx) = mailbox(1024);
+        let (ev_tx, ev_rx) = channel();
+        let edge = OutputEdge::new(
+            1,
+            0,
+            Partitioner::new(PartitionScheme::OneToOne, 1, 0),
+            vec![down_tx],
+        );
+        let mut plan = FaultPlan::default();
+        plan.push(Fault::panic_at(WorkerId::new(0, 0), 5));
+        let ctx = WorkerContext {
+            id: WorkerId::new(0, 0),
+            mailbox: in_mb,
+            event_tx: ev_tx,
+            outputs: vec![edge],
+            upstream_counts: vec![1],
+            peers: vec![],
+            port_key_fields: vec![None],
+            source: None,
+            source_autostart: true,
+            batch_size: 4,
+            ctrl_check_interval: 1,
+            ft_log: false,
+            snapshot: None,
+            scatter_merge: false,
+            scale_epoch: 0,
+            initial_eofs: None,
+            start_paused: false,
+            columnar: true,
+            fault_plan: plan,
+        };
+        let h = std::thread::spawn(move || run_worker(ctx, Box::new(Identity)));
+        send_batch(&in_tx, 0, (0..20).map(tuple).collect());
+        // The thread must exit via a contained WorkerFailed event — the
+        // join succeeds (the panic never escapes) and the event names
+        // the injected cause.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut failed = false;
+        while Instant::now() < deadline && !failed {
+            if let Ok(WorkerEvent::WorkerFailed { worker, cause, .. }) =
+                ev_rx.recv_timeout(Duration::from_millis(100))
+            {
+                assert_eq!(worker, WorkerId::new(0, 0));
+                assert!(cause.contains("injected fault"), "cause: {cause}");
+                failed = true;
+            }
+        }
+        assert!(failed, "no WorkerFailed event");
         h.join().unwrap();
     }
 }

@@ -125,6 +125,66 @@ impl Timeline {
     }
 }
 
+/// Counters for the supervision layer (panic containment + heartbeat
+/// failure detection + automatic replay-based recovery): how failures
+/// were detected, how fast, how long recovery took, and the automatic
+/// checkpoint cadence/sizes. Accumulated by the coordinator and
+/// surfaced through `ExecSummary::supervision`; the `faults` bench
+/// section reads these.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SupervisionStats {
+    /// Failures declared because a worker thread panicked
+    /// (`WorkerFailed` containment events).
+    pub crashes_detected: u64,
+    /// Failures declared because a worker's heartbeat went silent for
+    /// `heartbeat_timeout_ms` (stall, not crash).
+    pub stalls_detected: u64,
+    /// Worst observed failure→declaration latency in ms (panic instant
+    /// to coordinator declaration; stalls count from the last
+    /// heartbeat observation).
+    pub detection_ms_max: f64,
+    /// Completed automatic recovery cycles (teardown → restore →
+    /// replay → resume).
+    pub recoveries: u64,
+    /// Total / worst wall-clock spent inside recovery cycles, ms
+    /// (including backoff sleeps).
+    pub recovery_ms_total: f64,
+    pub recovery_ms_max: f64,
+    /// Whether the run aborted with retries exhausted.
+    pub retries_exhausted: bool,
+    /// Automatic (timer-driven) checkpoints completed.
+    pub auto_checkpoints: u64,
+    /// State size (tuples) of the latest completed checkpoint —
+    /// automatic or manual.
+    pub last_checkpoint_tuples: u64,
+    /// Mean observed interval between completed automatic checkpoints,
+    /// ms (NaN until two have completed).
+    pub checkpoint_interval_ms_observed: f64,
+}
+
+impl SupervisionStats {
+    /// Total declared failures, regardless of detection path.
+    pub fn failures_detected(&self) -> u64 {
+        self.crashes_detected + self.stalls_detected
+    }
+
+    /// Fold one detection latency observation into the max.
+    pub fn observe_detection_ms(&mut self, ms: f64) {
+        if ms.is_finite() && ms > self.detection_ms_max {
+            self.detection_ms_max = ms;
+        }
+    }
+
+    /// Fold one completed recovery cycle's duration into the counters.
+    pub fn observe_recovery_ms(&mut self, ms: f64) {
+        self.recoveries += 1;
+        self.recovery_ms_total += ms;
+        if ms > self.recovery_ms_max {
+            self.recovery_ms_max = ms;
+        }
+    }
+}
+
 /// The paper's load-balancing ratio (§3.7.4): min(load_S, load_H) /
 /// max(load_S, load_H), averaged over periodic observations.
 #[derive(Clone, Debug, Default)]
@@ -200,6 +260,23 @@ mod tests {
         tl.record_at(3.0, 5.2);
         tl.record_at(4.0, 4.9);
         assert_eq!(tl.time_to_converge(5.0, 0.5), Some(3.0));
+    }
+
+    #[test]
+    fn supervision_stats_fold() {
+        let mut s = SupervisionStats::default();
+        s.crashes_detected += 1;
+        s.stalls_detected += 1;
+        s.observe_detection_ms(3.5);
+        s.observe_detection_ms(1.0); // must not lower the max
+        s.observe_recovery_ms(10.0);
+        s.observe_recovery_ms(30.0);
+        assert_eq!(s.failures_detected(), 2);
+        assert_eq!(s.detection_ms_max, 3.5);
+        assert_eq!(s.recoveries, 2);
+        assert_eq!(s.recovery_ms_total, 40.0);
+        assert_eq!(s.recovery_ms_max, 30.0);
+        assert!(!s.retries_exhausted);
     }
 
     #[test]

@@ -6,10 +6,10 @@
 //! CA:AZ ratio over time (Figs. 3.16–3.19) with negligible overhead
 //! (atomic adds).
 
-use crate::engine::operator::{Emitter, Operator};
+use crate::engine::operator::{Emitter, OpState, Operator};
 use crate::tuple::{Tuple, TupleBatch};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Shared handle the driver keeps to read sink contents during/after a
 /// run.
@@ -66,7 +66,15 @@ impl SinkHandle {
 
     /// Captured tuples (clone).
     pub fn tuples(&self) -> Vec<Tuple> {
-        self.captured.lock().unwrap().clone()
+        self.captured_lock().clone()
+    }
+
+    /// The captured-tuples lock, recovering from poisoning: a sink
+    /// worker that panicked mid-push must not cascade-panic the driver
+    /// or its recovered replacement (the contents stay well-formed —
+    /// pushes append whole tuples).
+    fn captured_lock(&self) -> MutexGuard<'_, Vec<Tuple>> {
+        self.captured.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -92,7 +100,7 @@ impl Operator for CollectSink {
         self.handle
             .bytes
             .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
-        self.handle.captured.lock().unwrap().push(t.clone());
+        self.handle.captured_lock().push(t.clone());
         // Report the delivered result as this worker's output: sinks
         // have no out-edges, so nothing is routed, but the `produced`
         // gauge and the first-output timestamp (Maestro's measured
@@ -114,13 +122,44 @@ impl Operator for CollectSink {
             .bytes
             .fetch_add(batch.byte_size() as u64, Ordering::Relaxed);
         self.handle
-            .captured
-            .lock()
-            .unwrap()
+            .captured_lock()
             .extend_from_slice(batch.as_slice());
         // Delivered-results accounting (see `process`): an Arc clone of
         // the shared batch, dropped by the edge-less emitter.
         out.emit_batch(batch.clone());
+    }
+
+    /// Checkpoint the *externally visible* sink contents. A quiesced
+    /// checkpoint captures the shared [`SinkHandle`] exactly as the
+    /// driver could observe it; [`Operator::restore`] puts it back, so
+    /// in-place supervised recovery rolls back post-checkpoint
+    /// deliveries instead of duplicating them. (With a fresh handle —
+    /// the external [`crate::engine::Execution::recover`] path — the
+    /// restore re-populates the pre-checkpoint deliveries.)
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        s.keyed_tuples.insert(0, self.handle.tuples());
+        s.counters
+            .insert("total".into(), self.handle.total() as i64);
+        s.counters
+            .insert("bytes".into(), self.handle.bytes() as i64);
+        s
+    }
+
+    fn state_size(&self) -> usize {
+        self.handle.total() as usize
+    }
+
+    /// Reset the shared handle to the checkpointed contents. With
+    /// several sink workers sharing one handle each snapshot holds the
+    /// same quiesced contents, so repeated restores are idempotent.
+    fn restore(&mut self, mut s: OpState) {
+        let rows = s.keyed_tuples.remove(&0).unwrap_or_default();
+        *self.handle.captured_lock() = rows;
+        let total = s.counters.get("total").copied().unwrap_or(0).max(0) as u64;
+        let bytes = s.counters.get("bytes").copied().unwrap_or(0).max(0) as u64;
+        self.handle.total.store(total, Ordering::Relaxed);
+        self.handle.bytes.store(bytes, Ordering::Relaxed);
     }
 }
 
@@ -213,6 +252,36 @@ impl Operator for CountByKeySink {
             }
         }
         out.emit_batch(batch.clone());
+    }
+
+    /// Checkpoint the externally visible bar-chart counters (see
+    /// [`CollectSink::snapshot`] for the rollback rationale).
+    fn snapshot(&self) -> OpState {
+        let mut s = OpState::default();
+        for (k, c) in self.handle.counts.iter().enumerate() {
+            s.keyed_aggs
+                .insert(k as u64, vec![c.load(Ordering::Relaxed) as f64]);
+        }
+        s.counters
+            .insert("total".into(), self.handle.total() as i64);
+        s.counters
+            .insert("bytes".into(), self.handle.bytes() as i64);
+        s
+    }
+
+    fn restore(&mut self, s: OpState) {
+        for (k, c) in self.handle.counts.iter().enumerate() {
+            let v = s
+                .keyed_aggs
+                .get(&(k as u64))
+                .and_then(|a| a.first().copied())
+                .unwrap_or(0.0);
+            c.store(v.max(0.0) as u64, Ordering::Relaxed);
+        }
+        let total = s.counters.get("total").copied().unwrap_or(0).max(0) as u64;
+        let bytes = s.counters.get("bytes").copied().unwrap_or(0).max(0) as u64;
+        self.handle.total.store(total, Ordering::Relaxed);
+        self.handle.bytes.store(bytes, Ordering::Relaxed);
     }
 }
 

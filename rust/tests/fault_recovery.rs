@@ -1,0 +1,295 @@
+//! Supervised execution (robustness): panic containment, heartbeat
+//! stall detection, automatic replay-based recovery, and deterministic
+//! fault injection — injected failures at arbitrary replay positions
+//! must be detected, recovered, and leave sink results byte-exact
+//! versus an un-faulted run of the same workflow; retry exhaustion must
+//! terminate with a structured error, never a hang.
+
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{
+    ExecError, ExecSummary, Execution, Fault, FaultPlan, OpSpec, PartitionScheme, WorkerId,
+    Workflow,
+};
+use texera_amber::operators::basic::{Cmp, Filter};
+use texera_amber::operators::{AggKind, CollectSink, GroupByFinal, GroupByPartial, SinkHandle};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::VecSource;
+
+/// scan → filter → group-by(count per key) → sink; deterministic input.
+/// Operator indices: scan=0, filter=1, gb_partial=2, gb_final=3, sink=4.
+fn wf(total: usize, handle: SinkHandle) -> Workflow {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64), Value::Int((i % 10) as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary("filter", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Lt, Value::Int(8))) // keep 80%
+    }));
+    let partial = w.add(OpSpec::unary("gb_partial", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(GroupByPartial::new(1, 0, AggKind::Count))
+    }));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Count))
+        })
+        .with_blocking(vec![0]),
+    );
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    w
+}
+
+/// scan → filter → sink (no aggregation): the sink sees tens of
+/// thousands of tuples, so positional faults deep into its stream are
+/// reachable. Operator indices: scan=0, filter=1, sink=2.
+fn wf_passthrough(total: usize, handle: SinkHandle) -> Workflow {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64), Value::Int((i % 10) as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let filter = w.add(OpSpec::unary("filter", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(Filter::new(1, Cmp::Lt, Value::Int(8)))
+    }));
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, filter, 0);
+    w.connect(filter, sink, 0);
+    w
+}
+
+fn expected_counts(total: usize) -> Vec<(i64, f64)> {
+    // keys 0..7 kept; each appears total/10 times.
+    (0..8).map(|k| (k, (total / 10) as f64)).collect()
+}
+
+fn result_counts(handle: &SinkHandle) -> Vec<(i64, f64)> {
+    let mut rows: Vec<(i64, f64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    rows.sort_by_key(|(k, _)| *k);
+    rows
+}
+
+/// Sorted multiset of (id, key) rows captured by a pass-through sink.
+fn result_rows(handle: &SinkHandle) -> Vec<(i64, i64)> {
+    let mut rows: Vec<(i64, i64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_int().unwrap()))
+        .collect();
+    rows.sort_unstable();
+    rows
+}
+
+fn expected_rows(total: usize) -> Vec<(i64, i64)> {
+    (0..total as i64).filter(|i| i % 10 < 8).map(|i| (i, i % 10)).collect()
+}
+
+/// Supervised config: recovery on, fast heartbeat + checkpoint cadence,
+/// short backoff so tests run quickly.
+fn supervised(plan: FaultPlan) -> Config {
+    Config {
+        ft_log: true,
+        heartbeat_timeout_ms: 150,
+        checkpoint_interval_ms: 20,
+        recovery_backoff_ms: 5,
+        fault_plan: plan,
+        ..Config::default()
+    }
+}
+
+/// Join with a hard wall-clock bound — the structured-abort promise is
+/// "never a hang", so every supervised test terminates through here.
+fn join_within(exec: Execution, timeout: Duration) -> ExecSummary {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let summary = exec.join();
+        drop(exec);
+        let _ = tx.send(summary);
+    });
+    rx.recv_timeout(timeout)
+        .expect("supervised execution did not terminate within the deadline")
+}
+
+fn plan(faults: Vec<Fault>) -> FaultPlan {
+    let mut p = FaultPlan::default();
+    for f in faults {
+        p.push(f);
+    }
+    p
+}
+
+#[test]
+fn panic_in_source_worker_recovers_exact() {
+    let total = 100_000;
+    let handle = SinkHandle::new(0);
+    let cfg = supervised(plan(vec![Fault::panic_at(WorkerId::new(0, 1), 1024)]));
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    assert_eq!(summary.error, None, "supervised run ended in error");
+    assert!(summary.supervision.crashes_detected >= 1, "panic was not detected");
+    assert!(summary.supervision.recoveries >= 1, "no recovery cycle ran");
+    assert_eq!(result_counts(&handle), expected_counts(total));
+}
+
+#[test]
+fn panic_in_stateful_groupby_recovers_exact() {
+    let total = 100_000;
+    let handle = SinkHandle::new(0);
+    let cfg = supervised(plan(vec![Fault::panic_at(WorkerId::new(2, 0), 256)]));
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    assert_eq!(summary.error, None, "supervised run ended in error");
+    assert!(summary.supervision.crashes_detected >= 1);
+    assert!(summary.supervision.recoveries >= 1);
+    assert_eq!(result_counts(&handle), expected_counts(total));
+}
+
+#[test]
+fn panic_in_sink_worker_recovers_exact() {
+    let total = 50_000;
+    let handle = SinkHandle::new(0);
+    let cfg = supervised(plan(vec![Fault::panic_at(WorkerId::new(2, 0), 1024)]));
+    let exec = Execution::start(wf_passthrough(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    assert_eq!(summary.error, None, "supervised run ended in error");
+    assert!(summary.supervision.crashes_detected >= 1);
+    assert!(summary.supervision.recoveries >= 1);
+    // Byte-exact multiset: recovery must not lose rows *or* leave the
+    // pre-crash sink captures double-counted.
+    assert_eq!(result_rows(&handle), expected_rows(total));
+}
+
+#[test]
+fn stall_is_detected_by_heartbeat_and_recovered() {
+    let total = 100_000;
+    let handle = SinkHandle::new(0);
+    // The filter worker goes heartbeat-silent for 600 ms — well past
+    // the 150 ms timeout — without panicking.
+    let cfg = supervised(plan(vec![Fault::stall_at(WorkerId::new(1, 0), 512, 600)]));
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    assert_eq!(summary.error, None, "supervised run ended in error");
+    assert!(
+        summary.supervision.stalls_detected >= 1,
+        "stall was not detected via heartbeat silence: {:?}",
+        summary.supervision
+    );
+    assert!(summary.supervision.recoveries >= 1);
+    assert_eq!(result_counts(&handle), expected_counts(total));
+}
+
+#[test]
+fn retry_exhaustion_aborts_with_structured_error() {
+    let total = 100_000;
+    let handle = SinkHandle::new(0);
+    // The fault re-fires on every respawn (shared counter, 10 allowed
+    // firings > 2 allowed retries), so recovery can never make
+    // progress past it and must escalate to a clean abort.
+    let p = plan(vec![Fault::panic_at(WorkerId::new(0, 0), 32).times(10)]);
+    let cfg = Config { recovery_max_retries: 2, ..supervised(p) };
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    match summary.error {
+        Some(ExecError::RecoveryExhausted { attempts, .. }) => assert_eq!(attempts, 2),
+        other => panic!("expected RecoveryExhausted, got {other:?}"),
+    }
+    assert!(summary.supervision.retries_exhausted);
+    assert_eq!(summary.supervision.recoveries, 2);
+}
+
+#[test]
+fn unsupervised_failure_aborts_cleanly() {
+    let total = 100_000;
+    let handle = SinkHandle::new(0);
+    // ft_log off: no replay log, so recovery is unavailable — the run
+    // must still terminate with a structured error, not hang.
+    let cfg = Config {
+        ft_log: false,
+        fault_plan: plan(vec![Fault::panic_at(WorkerId::new(1, 1), 256)]),
+        ..Config::default()
+    };
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    match summary.error {
+        Some(ExecError::Unsupervised { worker, .. }) => {
+            assert_eq!(worker, WorkerId::new(1, 1));
+        }
+        other => panic!("expected Unsupervised abort, got {other:?}"),
+    }
+}
+
+#[test]
+fn crash_during_scale_fence_rolls_back_then_recovers() {
+    let total = 400_000;
+    let handle = SinkHandle::new(0);
+    let cfg = supervised(plan(vec![Fault::panic_at(WorkerId::new(2, 0), 2048)]));
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    // Race a scale fence against the injected crash. Whichever wins,
+    // the fence either completes before the failure or aborts and
+    // rolls back when the failure lands mid-fence; recovery then
+    // redeploys at whatever plan survived. Results must stay exact.
+    std::thread::sleep(Duration::from_millis(5));
+    let _ = exec.scale_operator(1, 3);
+    let summary = join_within(exec, Duration::from_secs(60));
+    assert_eq!(summary.error, None, "supervised run ended in error");
+    assert!(summary.supervision.crashes_detected >= 1);
+    assert_eq!(result_counts(&handle), expected_counts(total));
+}
+
+#[test]
+fn delay_fault_preserves_exactness_without_recovery() {
+    let total = 100_000;
+    let handle = SinkHandle::new(0);
+    // A delayed batch perturbs timing but not order (the sender
+    // blocks, per-edge FIFO holds): no failure is declared and the
+    // results are identical to an un-faulted run.
+    let cfg = supervised(plan(vec![Fault::delay_nth(WorkerId::new(0, 0), 1, 3, 50)]));
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    assert_eq!(summary.error, None);
+    assert_eq!(summary.supervision.failures_detected(), 0);
+    assert_eq!(result_counts(&handle), expected_counts(total));
+}
+
+#[test]
+fn automatic_checkpoints_run_on_the_configured_cadence() {
+    let total = 600_000;
+    let handle = SinkHandle::new(0);
+    let cfg = Config {
+        ft_log: true,
+        checkpoint_interval_ms: 10,
+        ..Config::default()
+    };
+    let exec = Execution::start(wf(total, handle.clone()), cfg);
+    let summary = join_within(exec, Duration::from_secs(60));
+    assert_eq!(summary.error, None);
+    assert!(
+        summary.supervision.auto_checkpoints >= 1,
+        "no automatic checkpoint completed: {:?}",
+        summary.supervision
+    );
+    assert_eq!(result_counts(&handle), expected_counts(total));
+}

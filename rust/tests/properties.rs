@@ -15,6 +15,15 @@ use texera_amber::tuple::{Tuple, Value};
 use texera_amber::util::check::{check_n, Gen, U64Range, VecGen};
 use texera_amber::util::Rng;
 
+/// Fault-injection axis for the chaos fuzzers (`CHAOS_FAULTS=1`, CI
+/// matrix): each round seeds a deterministic `FaultPlan` alongside its
+/// command stream, so injected failures interleave with
+/// pause/checkpoint/scale/migration traffic. The exactness assertions
+/// are unchanged — supervised recovery must keep results byte-equal.
+fn chaos_faults_enabled() -> bool {
+    std::env::var("CHAOS_FAULTS").map(|v| v == "1").unwrap_or(false)
+}
+
 // ---------- routing ----------
 
 /// Any partitioner maps every tuple to a valid destination, and the
@@ -710,7 +719,35 @@ fn chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     w.connect(partial, fin, 0);
     w.connect(fin, sink, 0);
 
-    let exec = Execution::start(w, Config { batch_size, columnar, ..Config::default() });
+    let mut cfg = Config { batch_size, columnar, ..Config::default() };
+    if chaos_faults_enabled() {
+        // Panic + stall faults at seed-derived replay positions on the
+        // high-volume operators; the supervisor must detect each,
+        // recover (checkpoint restore or scratch re-run + control
+        // replay), and still land the exact sink result below.
+        use texera_amber::engine::{Fault, FaultPlan, WorkerId as Wid};
+        let mut frng = Rng::new(seed ^ 0xfa);
+        let victims = [scan, filter, partial];
+        let mut plan = FaultPlan::default();
+        plan.push(Fault::panic_at(
+            Wid::new(victims[frng.below(3) as usize], frng.below(2) as usize),
+            64 + frng.below(50_000),
+        ));
+        plan.push(Fault::stall_at(
+            Wid::new(victims[frng.below(3) as usize], frng.below(2) as usize),
+            64 + frng.below(50_000),
+            350,
+        ));
+        cfg = Config {
+            ft_log: true,
+            heartbeat_timeout_ms: 200,
+            checkpoint_interval_ms: 25,
+            recovery_backoff_ms: 5,
+            fault_plan: plan,
+            ..cfg
+        };
+    }
+    let exec = Execution::start(w, cfg);
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Worker counts as far as the driver knows (a refused scale —
@@ -941,7 +978,20 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     w.connect(scan, enrich, EVENT);
     w.connect(enrich, sink2, 0);
 
-    let exec = Execution::start(w, Config { batch_size, columnar, ..Config::default() });
+    let mut cfg = Config { batch_size, columnar, ..Config::default() };
+    if chaos_faults_enabled() {
+        // Timing-only faults on this fuzzer: delayed batches perturb
+        // exchange interleaving under scale fences without triggering
+        // recovery (recovery composing with live-mat/scale epochs is
+        // exercised by the control-interleaving fuzzer).
+        use texera_amber::engine::{Fault, FaultPlan, WorkerId as Wid};
+        let mut frng = Rng::new(seed ^ 0xfa);
+        let mut plan = FaultPlan::default();
+        plan.push(Fault::delay_nth(Wid::new(scan, 0), join, 1 + frng.below(40), 30));
+        plan.push(Fault::delay_nth(Wid::new(scan, 1), enrich, 1 + frng.below(40), 30));
+        cfg = Config { fault_plan: plan, ..cfg };
+    }
+    let exec = Execution::start(w, cfg);
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Tracked worker counts (a refused scale leaves them unchanged).
@@ -1171,7 +1221,19 @@ fn migration_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     w.connect(enrich, filter, 0);
     w.connect(filter, sink, 0);
 
-    let exec = Execution::start(w, Config { batch_size, columnar, ..Config::default() });
+    let mut cfg = Config { batch_size, columnar, ..Config::default() };
+    if chaos_faults_enabled() {
+        // Timing-only faults on the migrated pipeline: delays land
+        // around repartition/materialization fences; per-edge FIFO
+        // holds, so the multiset stays byte-identical.
+        use texera_amber::engine::{Fault, FaultPlan, WorkerId as Wid};
+        let mut frng = Rng::new(seed ^ 0xfa);
+        let mut plan = FaultPlan::default();
+        plan.push(Fault::delay_nth(Wid::new(scan, 0), enrich, 1 + frng.below(40), 30));
+        plan.push(Fault::delay_nth(Wid::new(enrich, 0), filter, 1 + frng.below(40), 30));
+        cfg = Config { fault_plan: plan, ..cfg };
+    }
+    let exec = Execution::start(w, cfg);
     let mut rng = Rng::new(seed);
     let mut paused = false;
     // Driver's view of whether the enrich→filter edge is currently
