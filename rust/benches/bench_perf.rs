@@ -58,6 +58,7 @@ fn main() {
     let migration = migration_section(smoke);
     let maestro = maestro_section(smoke);
     let faults = faults_section(smoke);
+    let service = service_section(smoke);
     if smoke {
         // Smoke totals are not trajectory-quality numbers: exercise
         // the sections but leave the recorded BENCH_perf.json alone.
@@ -75,6 +76,7 @@ fn main() {
             &lanes,
             &maestro,
             &faults,
+            &service,
         );
         routing_cost();
         pause_latency();
@@ -999,6 +1001,153 @@ fn faults_section(smoke: bool) -> FaultsBench {
     out
 }
 
+/// One cell of the service concurrency sweep.
+struct ServiceConcRow {
+    concurrency: usize,
+    mix: &'static str,
+    p50_s: f64,
+    p99_s: f64,
+    agg_tuples_per_sec: f64,
+}
+
+struct ServiceBench {
+    rows_per_job: usize,
+    budget: usize,
+    conc: Vec<ServiceConcRow>,
+    /// Interactive job's measured first-response time (submit → first
+    /// sink output, queue wait included) when it arrives mid-batch-scan
+    /// under FIFO admission vs the priority/preemption policy.
+    fifo_frt_s: f64,
+    priority_frt_s: f64,
+}
+
+/// Multi-tenant serving layer: p50/p99 workflow latency and aggregate
+/// throughput at increasing concurrency (uniform and heavy-tailed job
+/// sizes) on one shared 12-worker budget, plus the FIFO-vs-priority
+/// interactive first-response comparison the admission policy exists
+/// for.
+fn service_section(smoke: bool) -> ServiceBench {
+    use texera_amber::service::{EngineService, ServiceConfig, Submission, TenantId, TenantQuota};
+
+    println!("--- service: multi-tenant concurrency sweep ---");
+    const BUDGET: usize = 12;
+    let rows_per_job = if smoke { 5_000 } else { 20_000 };
+    let levels: &[usize] = if smoke { &[1, 4, 16] } else { &[1, 16, 256] };
+
+    // scan → gb_partial → gb_final → sink over `n` tuples.
+    let flow = |n: usize| {
+        let mut w = Workflow::new();
+        let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+            let rows: Vec<Tuple> = (0..n)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| Tuple::new(vec![Value::Int(i as i64 % 53), Value::Int(i as i64)]))
+                .collect();
+            Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+        }));
+        let partial = w.add(OpSpec::unary("gb_partial", 2, PS::RoundRobin, |_, _| {
+            Box::new(GroupByPartial::new(0, 1, AggKind::Sum))
+        }));
+        let fin = w.add(
+            OpSpec::unary("gb_final", 2, PS::Hash { key: 0 }, |_, _| {
+                Box::new(GroupByFinal::new(AggKind::Sum))
+            })
+            .with_blocking(vec![0]),
+        );
+        let handle = SinkHandle::new(0);
+        let h2 = handle.clone();
+        let sink = w.add(OpSpec::unary("sink", 1, PS::RoundRobin, move |_, _| {
+            Box::new(CollectSink::new(h2.clone()))
+        }));
+        w.connect(scan, partial, 0);
+        w.connect(partial, fin, 0);
+        w.connect(fin, sink, 0);
+        w
+    };
+
+    let mut conc = Vec::new();
+    for &n_jobs in levels {
+        for mix in ["uniform", "heavy_tailed"] {
+            let cfg = ServiceConfig {
+                engine: Config { max_workers: BUDGET, ..Config::default() },
+                queue_cap: n_jobs.max(16),
+                default_quota: TenantQuota {
+                    max_queued: n_jobs.max(16),
+                    ..TenantQuota::default()
+                },
+                ..ServiceConfig::default()
+            };
+            let svc = EngineService::start(cfg);
+            let t0 = Instant::now();
+            let mut ids = Vec::new();
+            let mut total_rows = 0usize;
+            for i in 0..n_jobs {
+                // Heavy-tailed mix: every tenth job is 10× the size.
+                let n = if mix == "heavy_tailed" && i % 10 == 9 {
+                    rows_per_job * 10
+                } else {
+                    rows_per_job
+                };
+                total_rows += n;
+                let id = svc
+                    .submit(Submission::new(TenantId((i % 8) as u64), flow(n)))
+                    .expect("admission");
+                ids.push(id);
+            }
+            let mut lat = texera_amber::metrics::Summary::new();
+            for id in ids {
+                let r = svc.wait(id).expect("job finishes");
+                assert!(r.error.is_none(), "{:?}", r.error);
+                lat.record(r.total_s);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let row = ServiceConcRow {
+                concurrency: n_jobs,
+                mix,
+                p50_s: lat.percentile(50.0),
+                p99_s: lat.percentile(99.0),
+                agg_tuples_per_sec: total_rows as f64 / wall,
+            };
+            println!(
+                "conc {:>3} {:>12}: p50 {:.3}s p99 {:.3}s, {:.0} tuples/s aggregate",
+                row.concurrency, row.mix, row.p50_s, row.p99_s, row.agg_tuples_per_sec
+            );
+            conc.push(row);
+        }
+    }
+
+    // Interactive-under-batch: a long batch scan holds the budget; an
+    // interactive job arrives mid-scan. FIFO admission makes it wait
+    // the scan out; the priority policy preempts and serves it first.
+    let frt_under = |fifo: bool| -> f64 {
+        let cfg = ServiceConfig {
+            engine: Config { max_workers: 4, ..Config::default() },
+            fifo,
+            ..ServiceConfig::default()
+        };
+        let svc = EngineService::start(cfg);
+        let batch_rows = if smoke { 200_000 } else { 2_000_000 };
+        let _batch = svc
+            .submit(Submission::new(TenantId(0), flow(batch_rows)))
+            .expect("admission");
+        std::thread::sleep(Duration::from_millis(30));
+        let inter = svc
+            .submit(Submission::new(TenantId(1), flow(rows_per_job)).interactive())
+            .expect("admission");
+        let r = svc.wait(inter).expect("interactive finishes");
+        assert!(r.error.is_none());
+        assert!(r.workers_granted > 0);
+        r.measured_frt.unwrap_or(r.total_s)
+    };
+    let fifo_frt_s = frt_under(true);
+    let priority_frt_s = frt_under(false);
+    println!(
+        "interactive mid-batch frt: fifo {fifo_frt_s:.3}s vs priority {priority_frt_s:.3}s ({:.1}x)\n",
+        fifo_frt_s / priority_frt_s
+    );
+    ServiceBench { rows_per_job, budget: BUDGET, conc, fifo_frt_s, priority_frt_s }
+}
+
 /// Write BENCH_perf.json (machine-readable perf trajectory) at the
 /// repository root, so the bench trajectory accumulates across PRs.
 /// The file's schema is documented in `docs/BENCH.md`.
@@ -1015,6 +1164,7 @@ fn write_bench_json(
     lanes: &LanesBench,
     maestro: &MaestroBench,
     faults: &FaultsBench,
+    service: &ServiceBench,
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"throughput_vs_batch_size\",\n");
@@ -1180,10 +1330,38 @@ fn write_bench_json(
         faults.recovery_ms_checkpoint, faults.recovery_ms_scratch
     ));
     s.push_str(&format!(
-        "    \"heartbeat\": {{\"sweep_off_tuples_per_sec\": {:.0}, \"sweep_100ms_tuples_per_sec\": {:.0}, \"overhead_pct\": {:.1}}}\n  }}\n",
+        "    \"heartbeat\": {{\"sweep_off_tuples_per_sec\": {:.0}, \"sweep_100ms_tuples_per_sec\": {:.0}, \"overhead_pct\": {:.1}}}\n  }},\n",
         faults.hb_off_tps,
         faults.hb_on_tps,
         (1.0 - faults.hb_on_tps / faults.hb_off_tps) * 100.0
+    ));
+    s.push_str("  \"service\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan(2)->gb_partial(2)->gb_final(2)->sink per job, shared EngineService; heavy_tailed = every 10th job 10x rows\",\n",
+    );
+    s.push_str(&format!(
+        "    \"rows_per_job\": {}, \"worker_budget\": {},\n",
+        service.rows_per_job, service.budget
+    ));
+    s.push_str("    \"concurrency\": [\n");
+    for (i, r) in service.conc.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"concurrency\": {}, \"mix\": \"{}\", \"workflow_latency_p50_s\": {:.4}, \
+             \"workflow_latency_p99_s\": {:.4}, \"aggregate_tuples_per_sec\": {:.0}}}{}\n",
+            r.concurrency,
+            r.mix,
+            r.p50_s,
+            r.p99_s,
+            r.agg_tuples_per_sec,
+            if i + 1 == service.conc.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("    ],\n");
+    s.push_str(&format!(
+        "    \"interactive_mid_batch\": {{\"fifo_frt_s\": {:.4}, \"priority_frt_s\": {:.4}, \"frt_speedup\": {:.2}}}\n  }}\n",
+        service.fifo_frt_s,
+        service.priority_frt_s,
+        service.fifo_frt_s / service.priority_frt_s
     ));
     s.push_str("}\n");
     // `cargo bench` runs with the crate dir as CWD; the trajectory

@@ -136,6 +136,13 @@ pub struct Config {
     /// up to this many busy workers at once. `0` disables elasticity —
     /// every operator deploys at its authored `OpSpec.workers`, exactly
     /// the pre-elastic behavior.
+    ///
+    /// The multi-tenant serving layer (`crate::service`) reuses this
+    /// same knob as its **global** budget: `EngineService` reads the
+    /// service config's `max_workers` into its worker ledger and
+    /// arbitrates it across *all* tenants' workflows at once (zeroing
+    /// the per-job engine config's copy so a job never re-applies the
+    /// cap region-locally on top of its arbitrated grant).
     pub max_workers: usize,
 
     // ---- misc ----

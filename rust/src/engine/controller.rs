@@ -784,6 +784,19 @@ impl Execution {
         rx.recv().expect("coordinator gone")
     }
 
+    /// Register a completion waiter **without blocking**: the returned
+    /// channel receives the run's [`ExecSummary`] exactly once —
+    /// immediately if the run has already finished. If the execution is
+    /// torn down before completing (the `Execution` is dropped), the
+    /// channel disconnects instead. The serving layer
+    /// (`crate::service`) uses this to turn each job's completion into
+    /// a queue message rather than parking its loop inside `join`.
+    pub fn on_done(&self) -> Receiver<ExecSummary> {
+        let (tx, rx) = channel();
+        self.cmd(Command::AwaitDone { reply: tx });
+        rx
+    }
+
     /// Elapsed time since deployment.
     pub fn elapsed(&self) -> Duration {
         self.started.elapsed()

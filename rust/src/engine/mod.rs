@@ -47,6 +47,15 @@
 //! retries escalating to a structured [`fault::ExecError`].
 //! Deterministic failures are injected through a seeded
 //! [`fault::FaultPlan`].
+//!
+//! One `Execution` runs one workflow. Serving **many** workflows on a
+//! shared worker budget is layered above, in [`crate::service`]: the
+//! `EngineService` runs each admitted job as its own `Execution` (own
+//! coordinator, workers and channels — the isolation boundary),
+//! observes completion through [`Execution::on_done`], and drives
+//! preemption with the same fenced primitives exposed here
+//! (`scale_operator` to shrink a batch job, `pause`/`resume` to park
+//! it while releasing its budget grant).
 
 pub mod message;
 pub mod channel;

@@ -4,7 +4,11 @@
 //! The engine fixes each operator's worker count at plan time
 //! (`OpSpec.workers`); Reshape (Ch. 3) re-routes tuples *around* a
 //! skewed worker but cannot add capacity. This module decouples work
-//! allocation from the static plan (the Whiz/F² argument): a
+//! allocation from the static plan (the Whiz/F² argument) — the same
+//! fenced epoch is also the serving layer's preemption primitive:
+//! `crate::service` scales a batch job's operators down to one worker
+//! each to hand the freed budget to an interactive tenant, without
+//! cancelling the batch job. A
 //! [`Command::Scale`](crate::engine::controller::Command) request —
 //! from the driver via
 //! [`Execution::scale_operator`](crate::engine::Execution::scale_operator)

@@ -35,6 +35,15 @@
 //!   remaining regions' worker counts between region activations
 //!   (applied through the engine's fenced scaling).
 //!
+//! * [`service`] — the **multi-tenant serving layer** (Ch. 1's service
+//!   setting): an [`service::EngineService`] admits many concurrent
+//!   workflow submissions onto one shared engine — bounded admission
+//!   queue with per-tenant quotas, priority bands with round-robin
+//!   fairness, a *global* worker budget arbitrated across workflows by
+//!   the same greedy marginal-gain allocator Maestro uses per region,
+//!   pause-fence preemption of batch jobs under interactive load, and
+//!   cross-workflow result reuse keyed on structural plan fingerprints.
+//!
 //! Supporting substrates: [`operators`] (relational + ML operator
 //! library), [`workloads`] (synthetic TPC-H/DSB/tweet generators),
 //! [`batch`] (a stage-by-stage comparator engine standing in for Spark),
@@ -61,3 +70,4 @@ pub mod batch;
 pub mod runtime;
 pub mod metrics;
 pub mod flows;
+pub mod service;

@@ -305,13 +305,119 @@ pub fn one_to_one_groups(w: &Workflow) -> Vec<Vec<usize>> {
     by_root.into_values().collect()
 }
 
+/// One unit of the greedy marginal-gain allocation: a set of operators
+/// forced to share a single worker count (a one-to-one group), with its
+/// summed modeled work, a cardinality-derived cap, and an optional pin.
+/// Built per region by [`assign_workers`] and per whole workflow by
+/// [`workflow_alloc_groups`] (the serving layer's cross-workflow
+/// arbiter unit — see `crate::service::arbiter`).
+#[derive(Clone, Debug)]
+pub struct AllocGroup {
+    /// Members sharing the count — one increment costs this many
+    /// workers.
+    pub members: usize,
+    /// Summed modeled work (`rows_in · cost`) across members, possibly
+    /// pre-scaled by a priority weight.
+    pub work: f64,
+    /// Current shared count; the greedy loop grows it in place.
+    pub count: usize,
+    /// Upper bound on the count (max estimated rows over members — a
+    /// 5-row operator gets no 8-way fan-out).
+    pub cap: usize,
+    /// Whether the loop may grow this group (`false` = pinned).
+    pub free: bool,
+}
+
+/// Build one [`AllocGroup`] from its member operator list.
+fn alloc_group_of(
+    w: &Workflow,
+    rows_out: &[f64],
+    p: &CostParams,
+    weight: f64,
+    fixed: &HashMap<usize, usize>,
+    g: &[usize],
+) -> AllocGroup {
+    let work: f64 = g
+        .iter()
+        .map(|&op| rows_in_of(w, p, rows_out, op) * p.cost(op))
+        .sum::<f64>()
+        * weight;
+    let cap = g
+        .iter()
+        .map(|&op| rows_in_of(w, p, rows_out, op).ceil().max(1.0) as usize)
+        .max()
+        .unwrap_or(1);
+    let pinned = g.iter().find_map(|op| fixed.get(op).copied());
+    AllocGroup {
+        members: g.len(),
+        work,
+        count: pinned.unwrap_or(1),
+        cap,
+        free: pinned.is_none(),
+    }
+}
+
+/// The greedy marginal-gain loop shared by the per-region
+/// [`assign_workers`] and the cross-workflow service arbiter
+/// (`crate::service::arbiter::arbitrate`): hand `slots` extra workers
+/// out one group at a time, always to the group with the largest
+/// marginal drop in modeled time — `work·(1/n − 1/(n+1))/members` —
+/// skipping pinned groups, groups at their cap, and groups whose
+/// member count exceeds the remaining slots. Deterministic: groups are
+/// scanned in index order and only a *strictly* larger gain displaces
+/// the incumbent, so equal-gain ties resolve to the earlier group.
+/// Counts grow in place; returns the unspent slots.
+pub fn greedy_distribute(groups: &mut [AllocGroup], mut slots: usize) -> usize {
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, g) in groups.iter().enumerate() {
+            if !g.free || g.count >= g.cap || g.members > slots {
+                continue;
+            }
+            let gain = g.work * (1.0 / g.count as f64 - 1.0 / (g.count + 1) as f64)
+                / g.members as f64;
+            if best.map(|(_, b)| gain > b).unwrap_or(gain > 0.0) {
+                best = Some((i, gain));
+            }
+        }
+        let Some((i, _)) = best else { break };
+        slots -= groups[i].members;
+        groups[i].count += 1;
+    }
+    slots
+}
+
+/// Allocation groups for one workflow treated as a **single allocation
+/// domain** — the serving layer's arbitration unit. Unlike
+/// [`assign_workers`], which budgets each region independently
+/// (Maestro's schedule is region-sequential), a whole workflow handed
+/// to `Execution::start` deploys every worker at once, so the service
+/// arbiter charges all its one-to-one groups against one global pool.
+/// `weight` uniformly scales each group's modeled work (the priority
+/// knob: a uniform scale preserves the greedy's relative gain order,
+/// so a single-workflow arbitration at any weight allocates exactly
+/// like `assign_workers` on a single-region workflow). Returns
+/// `(group, member ops)` pairs in [`one_to_one_groups`] order.
+pub fn workflow_alloc_groups(
+    w: &Workflow,
+    rows_out: &[f64],
+    p: &CostParams,
+    weight: f64,
+    fixed: &HashMap<usize, usize>,
+) -> Vec<(AllocGroup, Vec<usize>)> {
+    one_to_one_groups(w)
+        .into_iter()
+        .map(|g| (alloc_group_of(w, rows_out, p, weight, fixed, &g), g))
+        .collect()
+}
+
 /// Distribute a per-region worker budget over a workflow's operators.
 ///
 /// For each region independently: every one-to-one group starts at one
 /// worker per member (or its pinned count from `fixed` — operators
 /// whose scale request the engine refused, e.g. their region drained
-/// early and workers completed), then spare budget is handed out
-/// greedily, one group at a time, to the group
+/// early and workers completed), then spare budget is handed out by
+/// [`greedy_distribute`], one group at a time, to the group
 /// with the largest marginal drop in modeled region time
 /// (`W_g(1/n − 1/(n+1))` per worker slot). A group never grows beyond
 /// the rows it is estimated to process — a 5-row operator gets no 8-way
@@ -340,55 +446,14 @@ pub fn assign_workers(
             .iter()
             .filter(|g| g.iter().all(|op| r.contains(*op)))
             .collect();
-        struct G<'a> {
-            ops: &'a [usize],
-            work: f64,
-            count: usize,
-            cap: usize,
-            free: bool,
-        }
-        let mut gs: Vec<G> = region_groups
+        let mut gs: Vec<AllocGroup> = region_groups
             .iter()
-            .map(|g| {
-                let work: f64 = g
-                    .iter()
-                    .map(|&op| rows_in_of(w, p, rows_out, op) * p.cost(op))
-                    .sum();
-                let cap = g
-                    .iter()
-                    .map(|&op| rows_in_of(w, p, rows_out, op).ceil().max(1.0) as usize)
-                    .max()
-                    .unwrap_or(1);
-                let pinned = g.iter().find_map(|op| fixed.get(op).copied());
-                G {
-                    ops: g.as_slice(),
-                    work,
-                    count: pinned.unwrap_or(1),
-                    cap,
-                    free: pinned.is_none(),
-                }
-            })
+            .map(|g| alloc_group_of(w, rows_out, p, 1.0, fixed, g))
             .collect();
-        let spent: usize = gs.iter().map(|g| g.count * g.ops.len()).sum();
-        let mut slots = budget.saturating_sub(spent);
-        loop {
-            let mut best: Option<(usize, f64)> = None;
-            for (i, g) in gs.iter().enumerate() {
-                if !g.free || g.count >= g.cap || g.ops.len() > slots {
-                    continue;
-                }
-                let gain = g.work * (1.0 / g.count as f64 - 1.0 / (g.count + 1) as f64)
-                    / g.ops.len() as f64;
-                if best.map(|(_, b)| gain > b).unwrap_or(gain > 0.0) {
-                    best = Some((i, gain));
-                }
-            }
-            let Some((i, _)) = best else { break };
-            slots -= gs[i].ops.len();
-            gs[i].count += 1;
-        }
-        for g in &gs {
-            for &op in g.ops {
+        let spent: usize = gs.iter().map(|g| g.count * g.members).sum();
+        greedy_distribute(&mut gs, budget.saturating_sub(spent));
+        for (g, ops) in gs.iter().zip(&region_groups) {
+            for &op in ops.iter() {
                 out[op] = g.count;
             }
         }

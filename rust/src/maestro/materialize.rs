@@ -50,6 +50,21 @@ impl MatStore {
         std::mem::take(&mut *self.data.lock().unwrap())
     }
 
+    /// Bulk-load rows, updating the byte counter. The serving layer's
+    /// fingerprint cache (`crate::service::fingerprint`) stores a
+    /// completed job's sink rows this way for cross-workflow reuse.
+    pub fn append_rows(&self, rows: Vec<Tuple>) {
+        let sz: u64 = rows.iter().map(|t| t.byte_size() as u64).sum();
+        self.bytes.fetch_add(sz, Ordering::Relaxed);
+        self.data.lock().unwrap().extend(rows);
+    }
+
+    /// Copy of the store contents without draining — cache reads must
+    /// leave the entry in place for the next tenant.
+    pub fn snapshot(&self) -> Vec<Tuple> {
+        self.data.lock().unwrap().clone()
+    }
+
     /// Observed average tuple width in bytes (`None` until the store
     /// holds rows) — re-planning feeds this back into
     /// [`CostParams::bytes_per_tuple`](crate::maestro::cost::CostParams).

@@ -38,7 +38,7 @@ pub mod scheduler;
 pub mod corpus;
 
 pub use cost::{
-    best_choice_elastic, first_response_time, CostParams, ElasticPlan,
+    best_choice_elastic, first_response_time, AllocGroup, CostParams, ElasticPlan,
 };
 pub use enumerate::enumerate_choices;
 pub use region::{regions_of, Region};

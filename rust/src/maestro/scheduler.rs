@@ -168,17 +168,35 @@ pub struct MaestroScheduler {
     /// its live probe-stream observations, the deltas applied as one
     /// fenced migration — at most once per region.
     pub mid_replan_after_ms: u64,
+    /// Budget override: when set, elastic planning uses this many
+    /// workers instead of `config.max_workers`. The serving layer sets
+    /// it to a job's arbitrated *share* of the global budget, so a
+    /// scheduler running inside the multi-tenant service plans against
+    /// its grant, not the whole cluster.
+    pub budget_override: Option<usize>,
 }
 
 impl MaestroScheduler {
     pub fn new(config: Config, cost: CostParams) -> MaestroScheduler {
-        MaestroScheduler { config, cost, max_mat_edges: 3, mid_replan_after_ms: 0 }
+        MaestroScheduler {
+            config,
+            cost,
+            max_mat_edges: 3,
+            mid_replan_after_ms: 0,
+            budget_override: None,
+        }
+    }
+
+    /// Plan under `workers` instead of `config.max_workers`.
+    pub fn with_budget(mut self, workers: usize) -> MaestroScheduler {
+        self.budget_override = Some(workers);
+        self
     }
 
     /// The per-region worker budget (0 = elasticity off, deploy at
     /// authored counts).
     fn budget(&self) -> usize {
-        self.config.max_workers
+        self.budget_override.unwrap_or(self.config.max_workers)
     }
 
     /// Plan only, at authored worker counts: (chosen edge set,

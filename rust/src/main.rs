@@ -4,6 +4,7 @@
 //! amber run <q1|q13|sort|tweets> [--workers N] [--sf X] [--reshape]
 //! amber corpus                    # Table 4.1 workflow analysis
 //! amber inspect <q1|q13|sort>     # region analysis of a workflow
+//! amber serve [--jobs M] [--tenants N] [--budget W] [--sf X] [--fifo]
 //! ```
 //!
 //! The experiment harnesses that regenerate the paper's tables and
@@ -16,6 +17,7 @@ use texera_amber::flows;
 use texera_amber::maestro::corpus;
 use texera_amber::maestro::region_graph::region_graph;
 use texera_amber::reshape::{Approach, ReshapePlugin};
+use texera_amber::service::{EngineService, ServiceConfig, Submission, TenantId};
 use texera_amber::util::cli::Args;
 use texera_amber::workloads::tweets;
 
@@ -25,14 +27,16 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("corpus") => cmd_corpus(),
         Some("inspect") => cmd_inspect(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
-            eprintln!("usage: amber <run|corpus|inspect> [...]");
+            eprintln!("usage: amber <run|corpus|inspect|serve> [...]");
             eprintln!("  amber run q1 --sf 1.0 --workers 8           # TPC-H Q1-style");
             eprintln!("  amber run q13 --sf 1.0 --workers 8          # Q13-style join");
             eprintln!("  amber run sort --sf 1.0 --workers 4         # range sort");
             eprintln!("  amber run tweets --tweets 300000 --reshape  # skewed join");
             eprintln!("  amber corpus                                # Table 4.1");
             eprintln!("  amber inspect q13                           # region analysis");
+            eprintln!("  amber serve --jobs 8 --tenants 3 --budget 8 # multi-tenant demo");
             std::process::exit(2);
         }
     }
@@ -82,6 +86,64 @@ fn cmd_run(args: &Args) {
         s.elapsed,
         f.sink.total(),
         s.first_output.get(&f.focus)
+    );
+}
+
+/// Multi-tenant serving demo: M workflows from N tenants race through
+/// one `EngineService` under a global worker budget. Every third job is
+/// submitted as Interactive so preemption/priority shows up in the
+/// printed latencies.
+fn cmd_serve(args: &Args) {
+    let jobs: usize = args.get("jobs", 8);
+    let tenants: usize = args.get("tenants", 3);
+    let budget: usize = args.get("budget", 8);
+    let sf: f64 = args.get("sf", 0.1);
+    let cfg = ServiceConfig {
+        engine: Config { max_workers: budget, ..Config::default() },
+        fifo: args.has("fifo"),
+        ..ServiceConfig::default()
+    };
+    let svc = EngineService::start(cfg);
+    println!(
+        "serving {jobs} jobs from {} tenants, budget {budget} workers, {} admission",
+        tenants.max(1),
+        if args.has("fifo") { "fifo" } else { "priority" }
+    );
+    let mut ids = Vec::new();
+    for i in 0..jobs {
+        let f = if i % 2 == 0 {
+            flows::tpch_q1(sf, 2)
+        } else {
+            flows::orders_sort(sf, 2)
+        };
+        let tenant = TenantId((i % tenants.max(1)) as u64);
+        let mut sub = Submission::new(tenant, f.workflow).with_sink(f.sink.clone());
+        if i % 3 == 0 {
+            sub = sub.interactive();
+        }
+        match svc.submit(sub) {
+            Ok(id) => ids.push((id, tenant, i % 3 == 0, f.sink)),
+            Err(e) => println!("  job {i} rejected: {e}"),
+        }
+    }
+    for (id, tenant, interactive, sink) in ids {
+        let r = svc.wait(id).expect("submitted job finishes");
+        println!(
+            "  job {:>3} {tenant} {}: {} rows, queued {:.0}ms, total {:.0}ms, frt {}, {} workers{}",
+            id.0,
+            if interactive { "inter" } else { "batch" },
+            sink.total(),
+            r.queued_s * 1e3,
+            r.total_s * 1e3,
+            r.measured_frt.map_or_else(|| "n/a".into(), |s: f64| format!("{:.0}ms", s * 1e3)),
+            r.workers_granted,
+            if r.preemptions > 0 { format!(", preempted ×{}", r.preemptions) } else { String::new() },
+        );
+    }
+    let s = svc.stats();
+    println!(
+        "stats: {} submitted, {} completed, {} failed, peak {}/{} workers, {} preemptions, {} cache hits",
+        s.submitted, s.completed, s.failed, s.peak_workers, s.capacity, s.preemptions, s.cache_hits
     );
 }
 

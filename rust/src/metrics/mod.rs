@@ -185,6 +185,47 @@ impl SupervisionStats {
     }
 }
 
+/// Counters for the multi-tenant serving layer: admission outcomes,
+/// completions, cache effectiveness, preemption activity, and a
+/// point-in-time view of the worker budget. Snapshotted by
+/// `EngineService::stats`; the `service` bench section reads these.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceStats {
+    /// Submissions received (admitted + rejected + cache hits).
+    pub submitted: u64,
+    /// Submissions that entered the queue.
+    pub admitted: u64,
+    /// Rejections: global queue at capacity.
+    pub rejected_queue_full: u64,
+    /// Rejections: tenant over `max_queued`.
+    pub rejected_quota: u64,
+    /// Rejections: minimum footprint exceeds the whole budget.
+    pub rejected_too_large: u64,
+    /// Jobs finished cleanly (including cache hits).
+    pub completed: u64,
+    /// Jobs that terminated with a structured engine error.
+    pub failed: u64,
+    /// Jobs cancelled by the caller or by shutdown.
+    pub cancelled: u64,
+    /// Result-cache hits / misses among cache-opted submissions.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Batch jobs pause-fenced to make room for interactive ones.
+    pub preemptions: u64,
+    /// Preempted jobs resumed after budget freed.
+    pub resumes: u64,
+    /// Global worker budget (0 = unbounded).
+    pub capacity: usize,
+    /// Runnable workers currently charged to the ledger.
+    pub workers_in_use: usize,
+    /// High-water mark of `workers_in_use` — never exceeds `capacity`.
+    pub peak_workers: usize,
+    /// Submissions waiting in the admission queue right now.
+    pub queued_now: usize,
+    /// Jobs running (or preempted-but-live) right now.
+    pub running_now: usize,
+}
+
 /// The paper's load-balancing ratio (§3.7.4): min(load_S, load_H) /
 /// max(load_S, load_H), averaged over periodic observations.
 #[derive(Clone, Debug, Default)]

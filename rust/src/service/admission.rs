@@ -1,0 +1,244 @@
+//! Admission control: the bounded submission queue with per-tenant
+//! quotas, priority bands, and round-robin fairness.
+//!
+//! A submission is **rejected** (structured [`AdmissionError`]) when
+//! the global queue is full, the tenant's `max_queued` quota is spent,
+//! or the workflow's minimum footprint (one worker per operator) can
+//! never fit the global budget. An *accepted* submission is only ever
+//! deferred — the serving layer keeps draining the queue as capacity
+//! frees, so every admitted workflow eventually runs.
+//!
+//! Dispatch order: the Interactive band drains before the Batch band;
+//! inside a band, tenants rotate round-robin (by `TenantId` order) and
+//! each tenant's own jobs stay FIFO — so a chatty tenant cannot starve
+//! a quiet one, and short interactive jobs overtake long batch scans
+//! without cancelling them. `fifo: true` switches to priority-blind
+//! arrival order (the bench baseline the priority policy is measured
+//! against).
+
+use crate::service::tenant::TenantId;
+use crate::service::{JobId, Priority};
+use std::collections::{HashMap, VecDeque};
+
+/// Why a submission was turned away at the door.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The global submission queue is at `queue_cap`.
+    QueueFull { cap: usize },
+    /// The tenant already has `max_queued` submissions waiting.
+    QuotaExceeded { tenant: TenantId, max_queued: usize },
+    /// The workflow needs more workers than the whole budget even at
+    /// one worker per operator — it could never start.
+    TooLarge { min_workers: usize, capacity: usize },
+    /// The service is shutting down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull { cap } => {
+                write!(f, "submission queue full (cap {cap})")
+            }
+            AdmissionError::QuotaExceeded { tenant, max_queued } => {
+                write!(f, "{tenant} already has {max_queued} queued submissions")
+            }
+            AdmissionError::TooLarge { min_workers, capacity } => write!(
+                f,
+                "workflow needs at least {min_workers} workers but the budget is {capacity}"
+            ),
+            AdmissionError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// A queued (admitted, not yet started) job.
+#[derive(Clone, Debug)]
+pub(crate) struct QueuedJob {
+    pub id: JobId,
+    pub tenant: TenantId,
+    pub priority: Priority,
+    /// One worker per operator — the smallest grant that can deploy it.
+    pub min_workers: usize,
+}
+
+/// The bounded submission queue. Arrival order is preserved in one
+/// deque; selection scans it per (band, tenant), so fairness never
+/// reorders storage.
+pub(crate) struct AdmissionQueue {
+    cap: usize,
+    fifo: bool,
+    q: VecDeque<QueuedJob>,
+    queued_by_tenant: HashMap<TenantId, usize>,
+    /// Last tenant served per band, for round-robin rotation.
+    last_served: [Option<TenantId>; 2],
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize, fifo: bool) -> AdmissionQueue {
+        AdmissionQueue {
+            cap,
+            fifo,
+            q: VecDeque::new(),
+            queued_by_tenant: HashMap::new(),
+            last_served: [None, None],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Admit or reject one submission.
+    pub fn push(&mut self, job: QueuedJob, max_queued: usize) -> Result<(), AdmissionError> {
+        if self.q.len() >= self.cap {
+            return Err(AdmissionError::QueueFull { cap: self.cap });
+        }
+        let n = self.queued_by_tenant.entry(job.tenant).or_insert(0);
+        if *n >= max_queued {
+            return Err(AdmissionError::QuotaExceeded { tenant: job.tenant, max_queued });
+        }
+        *n += 1;
+        self.q.push_back(job);
+        Ok(())
+    }
+
+    /// Re-insert a job at the *front* after a failed start attempt
+    /// (budget didn't fit) — it keeps its precedence within its band
+    /// and tenant.
+    pub fn push_front(&mut self, job: QueuedJob) {
+        *self.queued_by_tenant.entry(job.tenant).or_insert(0) += 1;
+        self.q.push_front(job);
+    }
+
+    /// Remove a specific queued job (cancellation).
+    pub fn remove(&mut self, id: JobId) -> Option<QueuedJob> {
+        let pos = self.q.iter().position(|j| j.id == id)?;
+        let job = self.q.remove(pos).unwrap();
+        self.dec(job.tenant);
+        Some(job)
+    }
+
+    /// Pop the next job to try starting, among those `eligible` (the
+    /// caller checks tenant run caps there). Priority mode: Interactive
+    /// band first, round-robin across tenants within the band, FIFO
+    /// within a tenant. FIFO mode: plain arrival order, priority-blind
+    /// (ineligible jobs are skipped rather than wedging the queue —
+    /// the baseline differs in *ordering*, not in quota semantics).
+    pub fn take_next(
+        &mut self,
+        mut eligible: impl FnMut(&QueuedJob) -> bool,
+    ) -> Option<QueuedJob> {
+        if self.fifo {
+            let pos = self.q.iter().position(|j| eligible(j))?;
+            let job = self.q.remove(pos).unwrap();
+            self.dec(job.tenant);
+            return Some(job);
+        }
+        for band in [Priority::Interactive, Priority::Batch] {
+            let mut tenants: Vec<TenantId> = self
+                .q
+                .iter()
+                .filter(|j| j.priority == band && eligible(j))
+                .map(|j| j.tenant)
+                .collect();
+            tenants.sort();
+            tenants.dedup();
+            if tenants.is_empty() {
+                continue;
+            }
+            let pick = match self.last_served[band.band()] {
+                Some(c) => tenants.iter().copied().find(|&t| t > c).unwrap_or(tenants[0]),
+                None => tenants[0],
+            };
+            self.last_served[band.band()] = Some(pick);
+            let pos = self
+                .q
+                .iter()
+                .position(|j| j.priority == band && j.tenant == pick && eligible(j))
+                .expect("tenant selected from live scan");
+            let job = self.q.remove(pos).unwrap();
+            self.dec(job.tenant);
+            return Some(job);
+        }
+        None
+    }
+
+    /// Drain everything (service shutdown) — callers notify waiters.
+    pub fn drain_all(&mut self) -> Vec<QueuedJob> {
+        self.queued_by_tenant.clear();
+        self.q.drain(..).collect()
+    }
+
+    fn dec(&mut self, tenant: TenantId) {
+        if let Some(n) = self.queued_by_tenant.get_mut(&tenant) {
+            *n = n.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, tenant: u64, pri: Priority) -> QueuedJob {
+        QueuedJob {
+            id: JobId(id),
+            tenant: TenantId(tenant),
+            priority: pri,
+            min_workers: 1,
+        }
+    }
+
+    #[test]
+    fn rejects_when_full_or_over_quota() {
+        let mut q = AdmissionQueue::new(2, false);
+        assert!(q.push(job(1, 0, Priority::Batch), 1).is_ok());
+        assert_eq!(
+            q.push(job(2, 0, Priority::Batch), 1),
+            Err(AdmissionError::QuotaExceeded { tenant: TenantId(0), max_queued: 1 })
+        );
+        assert!(q.push(job(3, 1, Priority::Batch), 1).is_ok());
+        assert_eq!(
+            q.push(job(4, 2, Priority::Batch), 1),
+            Err(AdmissionError::QueueFull { cap: 2 })
+        );
+    }
+
+    #[test]
+    fn interactive_band_drains_first_with_tenant_rotation() {
+        let mut q = AdmissionQueue::new(16, false);
+        q.push(job(1, 0, Priority::Batch), 8).unwrap();
+        q.push(job(2, 1, Priority::Interactive), 8).unwrap();
+        q.push(job(3, 1, Priority::Interactive), 8).unwrap();
+        q.push(job(4, 2, Priority::Interactive), 8).unwrap();
+        // Interactive first; tenants rotate 1 → 2 → 1; batch last.
+        assert_eq!(q.take_next(|_| true).unwrap().id, JobId(2));
+        assert_eq!(q.take_next(|_| true).unwrap().id, JobId(4));
+        assert_eq!(q.take_next(|_| true).unwrap().id, JobId(3));
+        assert_eq!(q.take_next(|_| true).unwrap().id, JobId(1));
+        assert!(q.take_next(|_| true).is_none());
+    }
+
+    #[test]
+    fn fifo_mode_is_priority_blind() {
+        let mut q = AdmissionQueue::new(16, true);
+        q.push(job(1, 0, Priority::Batch), 8).unwrap();
+        q.push(job(2, 1, Priority::Interactive), 8).unwrap();
+        assert_eq!(q.take_next(|_| true).unwrap().id, JobId(1));
+        assert_eq!(q.take_next(|_| true).unwrap().id, JobId(2));
+    }
+
+    #[test]
+    fn push_front_restores_precedence() {
+        let mut q = AdmissionQueue::new(16, false);
+        q.push(job(1, 0, Priority::Batch), 8).unwrap();
+        q.push(job(2, 0, Priority::Batch), 8).unwrap();
+        let j = q.take_next(|_| true).unwrap();
+        assert_eq!(j.id, JobId(1));
+        q.push_front(j);
+        assert_eq!(q.take_next(|_| true).unwrap().id, JobId(1));
+    }
+}

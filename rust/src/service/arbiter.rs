@@ -1,0 +1,199 @@
+//! Cross-workflow worker arbitration and the global budget ledger.
+//!
+//! [`arbitrate`] generalizes Maestro's per-region greedy allocator
+//! ([`assign_workers`](crate::maestro::cost::assign_workers)) from
+//! regions to **workflows**: every submitted workflow contributes its
+//! one-to-one allocation groups to one pool, and the shared
+//! marginal-gain loop ([`greedy_distribute`]) hands the global budget
+//! out one group at a time, wherever the modeled time drop is largest.
+//! A workflow is a *single allocation domain* — unlike Maestro's
+//! region-sequential schedule, `Execution::start` deploys every worker
+//! at once, so all of a workflow's groups are charged simultaneously.
+//! For a single single-region workflow the arbitration is exactly
+//! `assign_workers` (same groups, same gains, same strict-`>`
+//! tie-breaking) — pinned by a property test in `tests/properties.rs`.
+//!
+//! [`WorkerLedger`] is the accounting side: an atomic running/peak
+//! count of **runnable** workers charged against the capacity. Grants
+//! gate deployment and scale-ups; preempting a job (pause-fence
+//! quiesce) releases its grant even though its threads stay parked —
+//! the Whiz-style decoupling of work allocation from compute. The
+//! fuzzer invariant is `peak() <= capacity()` at every instant.
+
+use crate::engine::dag::Workflow;
+use crate::maestro::cost::{
+    cardinalities, greedy_distribute, workflow_alloc_groups, AllocGroup, CostParams,
+};
+use crate::service::tenant::TenantId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// One workflow competing in an arbitration round.
+pub struct ArbiterJob<'a> {
+    pub workflow: &'a Workflow,
+    pub cost: &'a CostParams,
+    /// Priority weight multiplying the workflow's modeled work —
+    /// interactive jobs bid more per modeled unit, so spare budget
+    /// flows to them first. Relative gains *within* a workflow are
+    /// unchanged by a uniform weight.
+    pub weight: f64,
+    /// Per-op pinned counts (a running job re-arbitrated alongside new
+    /// ones keeps its current allocation).
+    pub fixed: HashMap<usize, usize>,
+}
+
+/// Distribute `budget` workers across all jobs' operators at once.
+/// Every one-to-one group starts at one worker per member (or its
+/// `fixed` pin); spare budget beyond those minimums goes to the group
+/// — in any workflow — with the largest weighted marginal gain.
+/// Returns one count vector per job, indexed like its `workflow.ops`.
+/// `budget == 0` means unbounded: every operator keeps its authored
+/// count.
+pub fn arbitrate(jobs: &[ArbiterJob<'_>], budget: usize) -> Vec<Vec<usize>> {
+    if budget == 0 {
+        return jobs
+            .iter()
+            .map(|j| j.workflow.ops.iter().map(|o| o.workers).collect())
+            .collect();
+    }
+    // Flatten: (job index, member ops) per group, groups in per-job
+    // one_to_one_groups order, jobs in argument order — deterministic.
+    let mut groups: Vec<AllocGroup> = Vec::new();
+    let mut owners: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (ji, job) in jobs.iter().enumerate() {
+        let rows_out = cardinalities(job.workflow, job.cost);
+        for (g, ops) in
+            workflow_alloc_groups(job.workflow, &rows_out, job.cost, job.weight, &job.fixed)
+        {
+            groups.push(g);
+            owners.push((ji, ops));
+        }
+    }
+    let spent: usize = groups.iter().map(|g| g.count * g.members).sum();
+    greedy_distribute(&mut groups, budget.saturating_sub(spent));
+    let mut out: Vec<Vec<usize>> = jobs
+        .iter()
+        .map(|j| j.workflow.ops.iter().map(|o| o.workers).collect())
+        .collect();
+    for (g, (ji, ops)) in groups.iter().zip(&owners) {
+        for &op in ops {
+            out[*ji][op] = g.count;
+        }
+    }
+    out
+}
+
+/// The global worker-budget ledger: how many runnable workers each
+/// tenant currently holds, against a fixed capacity. All mutation goes
+/// through [`try_acquire`](Self::try_acquire) /
+/// [`release`](Self::release), so `peak()` is an exact high-water mark
+/// — the fuzzer's never-exceeded invariant reads it directly.
+/// `capacity == 0` disables the bound (grants always succeed; usage is
+/// still tracked).
+pub struct WorkerLedger {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    capacity: usize,
+    used: usize,
+    peak: usize,
+    by_tenant: HashMap<TenantId, usize>,
+}
+
+impl WorkerLedger {
+    pub fn new(capacity: usize) -> WorkerLedger {
+        WorkerLedger {
+            inner: Mutex::new(Inner {
+                capacity,
+                used: 0,
+                peak: 0,
+                by_tenant: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Charge `n` workers to `tenant` if they fit; false leaves the
+    /// ledger untouched.
+    pub fn try_acquire(&self, tenant: TenantId, n: usize) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.capacity > 0 && g.used + n > g.capacity {
+            return false;
+        }
+        g.used += n;
+        g.peak = g.peak.max(g.used);
+        *g.by_tenant.entry(tenant).or_insert(0) += n;
+        true
+    }
+
+    /// Return `n` workers from `tenant`'s grant.
+    pub fn release(&self, tenant: TenantId, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.used >= n, "ledger release {n} exceeds used {}", g.used);
+        g.used = g.used.saturating_sub(n);
+        if let Some(t) = g.by_tenant.get_mut(&tenant) {
+            *t = t.saturating_sub(n);
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.inner.lock().unwrap().used
+    }
+
+    /// High-water mark of `used` since creation.
+    pub fn peak(&self) -> usize {
+        self.inner.lock().unwrap().peak
+    }
+
+    /// Unused slots (`usize::MAX` when unbounded).
+    pub fn available(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        if g.capacity == 0 {
+            usize::MAX
+        } else {
+            g.capacity.saturating_sub(g.used)
+        }
+    }
+
+    pub fn tenant_used(&self, tenant: TenantId) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .by_tenant
+            .get(&tenant)
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_bounds_and_peak() {
+        let l = WorkerLedger::new(8);
+        let t = TenantId(1);
+        assert!(l.try_acquire(t, 5));
+        assert!(!l.try_acquire(t, 4), "5+4 > 8 must refuse");
+        assert!(l.try_acquire(t, 3));
+        assert_eq!(l.used(), 8);
+        assert_eq!(l.available(), 0);
+        l.release(t, 6);
+        assert_eq!(l.used(), 2);
+        assert_eq!(l.tenant_used(t), 2);
+        assert_eq!(l.peak(), 8, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn ledger_unbounded_when_capacity_zero() {
+        let l = WorkerLedger::new(0);
+        assert!(l.try_acquire(TenantId(7), 10_000));
+        assert_eq!(l.available(), usize::MAX);
+        assert_eq!(l.peak(), 10_000);
+    }
+}

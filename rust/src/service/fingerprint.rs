@@ -1,0 +1,196 @@
+//! Structural plan fingerprints and the cross-workflow result cache.
+//!
+//! Two tenants running the *same* workflow shouldn't both pay for it —
+//! the Texera service setting has heavy plan reuse (shared dashboards,
+//! re-executed notebooks). [`plan_fingerprint`] hashes a workflow's
+//! **structure**: operator names, port wiring, partitioning schemes
+//! (including `Range` bounds), blocking ports and source/scatter-merge
+//! flags — everything in the plan except worker counts (parallelism
+//! does not change the result multiset) and the operator *closures*,
+//! which cannot be hashed. Because closures are invisible, two plans
+//! with identical structure but different captured constants would
+//! collide; caching is therefore strictly **opt-in** per submission,
+//! and the caller-supplied `salt` must encode whatever the closures
+//! capture (predicate constants, scale factors, dataset version).
+//!
+//! [`ResultCache`] maps fingerprint → a [`MatStore`] holding the
+//! completed job's sink rows — the same store the engine uses for
+//! materialized links, reused across workflows. A hit returns the rows
+//! without deploying a single worker.
+
+use crate::engine::dag::Workflow;
+use crate::engine::partitioner::PartitionScheme;
+use crate::maestro::materialize::MatStore;
+use crate::tuple::{mix64, Tuple};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Deterministic structural hash of a workflow plan, keyed by `salt`.
+/// Stable across processes and runs (no addresses, no RandomState) —
+/// built from `mix64` chaining like
+/// [`Value::stable_hash`](crate::tuple::Value::stable_hash), which also
+/// hashes any `Range` partition bounds.
+pub fn plan_fingerprint(w: &Workflow, salt: u64) -> u64 {
+    let mut h = mix64(salt ^ 0x9E37_79B9_7F4A_7C15);
+    let mut fold = |h: &mut u64, v: u64| *h = mix64(*h ^ v);
+    fold(&mut h, w.ops.len() as u64);
+    for op in &w.ops {
+        fold(&mut h, op.name.len() as u64);
+        for b in op.name.bytes() {
+            fold(&mut h, b as u64);
+        }
+        fold(&mut h, op.is_source as u64);
+        fold(&mut h, op.scatter_merge as u64);
+        fold(&mut h, op.blocking_ports.len() as u64);
+        for &bp in &op.blocking_ports {
+            fold(&mut h, bp as u64);
+        }
+        fold(&mut h, op.input_partitioning.len() as u64);
+        for s in &op.input_partitioning {
+            fold(&mut h, scheme_fingerprint(s));
+        }
+    }
+    fold(&mut h, w.edges.len() as u64);
+    for e in &w.edges {
+        fold(&mut h, e.from as u64);
+        fold(&mut h, e.to as u64);
+        fold(&mut h, e.to_port as u64);
+    }
+    h
+}
+
+fn scheme_fingerprint(s: &PartitionScheme) -> u64 {
+    match s {
+        PartitionScheme::OneToOne => mix64(1),
+        PartitionScheme::RoundRobin => mix64(2),
+        PartitionScheme::Hash { key } => mix64(3 ^ ((*key as u64) << 8)),
+        PartitionScheme::Range { key, bounds } => {
+            let mut h = mix64(4 ^ ((*key as u64) << 8));
+            for b in bounds {
+                h = mix64(h ^ b.stable_hash());
+            }
+            h
+        }
+        PartitionScheme::Broadcast => mix64(5),
+    }
+}
+
+/// Fingerprint-keyed store of completed sink-row sets, shared across
+/// tenants. Entries are whole-result only — a job that failed, was
+/// cancelled, or aborted never lands here.
+#[derive(Default)]
+pub struct ResultCache {
+    entries: Mutex<HashMap<u64, MatStore>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new() -> ResultCache {
+        ResultCache::default()
+    }
+
+    /// Rows for `fp`, if cached. Counts a hit or a miss.
+    pub fn lookup(&self, fp: u64) -> Option<Vec<Tuple>> {
+        let entries = self.entries.lock().unwrap();
+        match entries.get(&fp) {
+            Some(store) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(store.snapshot())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a completed job's sink rows under `fp` (first writer
+    /// wins — concurrent identical runs insert identical rows anyway).
+    pub fn insert(&self, fp: u64, rows: Vec<Tuple>) {
+        let mut entries = self.entries.lock().unwrap();
+        entries.entry(fp).or_default().append_rows(rows);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dag::OpSpec;
+    use crate::engine::operator::{Emitter, Operator};
+    use crate::workloads::VecSource;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    fn flow(name: &str, workers: usize) -> Workflow {
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", workers, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let k = w.add(OpSpec::unary(name, workers, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(Noop)
+        }));
+        w.connect(s, k, 0);
+        w
+    }
+
+    #[test]
+    fn fingerprint_stable_and_structure_sensitive() {
+        assert_eq!(
+            plan_fingerprint(&flow("sink", 1), 7),
+            plan_fingerprint(&flow("sink", 1), 7)
+        );
+        // Worker counts are excluded: a scaled plan reuses the cache.
+        assert_eq!(
+            plan_fingerprint(&flow("sink", 1), 7),
+            plan_fingerprint(&flow("sink", 4), 7)
+        );
+        // Names, salts, and schemes all matter.
+        assert_ne!(
+            plan_fingerprint(&flow("sink", 1), 7),
+            plan_fingerprint(&flow("other", 1), 7)
+        );
+        assert_ne!(
+            plan_fingerprint(&flow("sink", 1), 7),
+            plan_fingerprint(&flow("sink", 1), 8)
+        );
+    }
+
+    #[test]
+    fn cache_round_trip_counts_hits() {
+        let c = ResultCache::new();
+        assert!(c.lookup(42).is_none());
+        c.insert(42, vec![Tuple::new(vec![crate::tuple::Value::Int(9)])]);
+        let rows = c.lookup(42).expect("hit");
+        assert_eq!(rows.len(), 1);
+        // Snapshot, not drain: a second hit sees the same rows.
+        assert_eq!(c.lookup(42).unwrap().len(), 1);
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 1);
+    }
+}

@@ -1,0 +1,1167 @@
+//! The multi-tenant serving layer: many concurrent workflows on one
+//! shared engine.
+//!
+//! The dissertation's setting (Texera) is a *service* — many users run
+//! workflows simultaneously — yet `Execution` runs exactly one
+//! workflow. [`EngineService`] closes that gap: it **admits** workflow
+//! submissions through a bounded queue with per-tenant quotas
+//! ([`admission`]), **arbitrates** [`Config::max_workers`] as a single
+//! *global* worker budget across all tenants by generalizing Maestro's
+//! greedy marginal-gain allocator from regions to workflows
+//! ([`arbiter`]), runs each admitted job as its own [`Execution`], and
+//! **reuses results** across tenants through a plan-fingerprint cache
+//! ([`fingerprint`]).
+//!
+//! Lifecycle of one submission:
+//!
+//! 1. **Submit** — [`EngineService::submit`] hands a [`Submission`] to
+//!    the service loop. A fingerprint-cache hit completes instantly;
+//!    otherwise admission control either rejects (queue full, tenant
+//!    over `max_queued`, plan larger than the whole budget) or
+//!    enqueues.
+//! 2. **Admission → arbitration** — when budget frees, the queue
+//!    dispatches Interactive-band jobs first, rotating round-robin
+//!    across tenants inside a band. The arbiter allocates the job's
+//!    worker counts from the *remaining* global budget (running jobs
+//!    keep their grants — allocation is incremental and
+//!    work-conserving), charges the [`WorkerLedger`], and deploys.
+//! 3. **Preemption** — an Interactive job that cannot fit first
+//!    scale-downs running Batch jobs to one worker per operator
+//!    (through the engine's fenced [`Execution::scale_operator`]),
+//!    then pause-fences whole Batch jobs, **releasing their ledger
+//!    grants while their threads stay parked** — the budget counts
+//!    *runnable* workers (Whiz's decoupling of work allocation from a
+//!    job's compute). Preempted jobs resume, grant re-acquired, as
+//!    capacity frees.
+//! 4. **Completion** — a per-job waiter thread turns
+//!    [`Execution::on_done`] into a service-loop message: the grant is
+//!    released, sink rows are collected (and cached when the
+//!    submission opted in), waiters are fulfilled, and the queue
+//!    drains again.
+//!
+//! Isolation: each job is its own `Execution` (own coordinator, own
+//! workers, own channels), so a panicking or quota-exhausted tenant
+//! cannot stall or corrupt another — composed with the supervision
+//! layer, a crash either recovers in place (`ft_log` on) or aborts
+//! just that job with a structured error. Pinned down by
+//! `tests/service_isolation.rs` and the `CHAOS_SERVICE` fuzzer in
+//! `tests/properties.rs`.
+//!
+//! [`Config::max_workers`]: crate::config::Config::max_workers
+
+pub mod admission;
+pub mod arbiter;
+pub mod fingerprint;
+pub mod tenant;
+
+pub use admission::AdmissionError;
+pub use arbiter::{arbitrate, ArbiterJob, WorkerLedger};
+pub use fingerprint::{plan_fingerprint, ResultCache};
+pub use tenant::{TenantId, TenantQuota};
+
+use crate::config::Config;
+use crate::engine::controller::{ExecSummary, Execution};
+use crate::engine::dag::Workflow;
+use crate::engine::fault::ExecError;
+use crate::engine::migrate::PlanDelta;
+use crate::maestro::cost::CostParams;
+use crate::metrics::ServiceStats;
+use crate::operators::SinkHandle;
+use crate::service::admission::{AdmissionQueue, QueuedJob};
+use crate::service::tenant::TenantState;
+use crate::tuple::Tuple;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Scheduling class of a submission. `Interactive` jobs dispatch ahead
+/// of `Batch` jobs, bid with a higher arbitration weight, and may
+/// preempt running Batch jobs when the budget is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Priority {
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    /// Band index: Interactive drains before Batch.
+    pub(crate) fn band(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+}
+
+/// Service-wide job identity, unique for the service's lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct JobId(pub u64);
+
+/// One workflow submission.
+pub struct Submission {
+    pub tenant: TenantId,
+    pub workflow: Workflow,
+    pub priority: Priority,
+    /// Sink handle whose captured tuples become
+    /// [`WorkflowResult::rows`]. Without one, the job still runs but
+    /// returns no rows (and is never cached).
+    pub result_sink: Option<SinkHandle>,
+    /// Opt-in result caching: the salt must encode everything the
+    /// operator closures capture (predicate constants, dataset
+    /// version) — the structural fingerprint cannot see inside them.
+    pub cache_salt: Option<u64>,
+    /// Per-job engine config override (fault plans, batch size). The
+    /// service's global budget always comes from its own config, never
+    /// from here.
+    pub config: Option<Config>,
+    /// Cost-model override for arbitration; defaults to the service's
+    /// model seeded with each source's `len_hint`.
+    pub cost: Option<CostParams>,
+}
+
+impl Submission {
+    pub fn new(tenant: TenantId, workflow: Workflow) -> Submission {
+        Submission {
+            tenant,
+            workflow,
+            priority: Priority::Batch,
+            result_sink: None,
+            cache_salt: None,
+            config: None,
+            cost: None,
+        }
+    }
+
+    pub fn interactive(mut self) -> Submission {
+        self.priority = Priority::Interactive;
+        self
+    }
+
+    pub fn with_sink(mut self, sink: SinkHandle) -> Submission {
+        self.result_sink = Some(sink);
+        self
+    }
+
+    pub fn cacheable(mut self, salt: u64) -> Submission {
+        self.cache_salt = Some(salt);
+        self
+    }
+
+    pub fn with_config(mut self, config: Config) -> Submission {
+        self.config = Some(config);
+        self
+    }
+
+    pub fn with_cost(mut self, cost: CostParams) -> Submission {
+        self.cost = Some(cost);
+        self
+    }
+}
+
+/// Terminal outcome of one submission.
+#[derive(Clone, Debug)]
+pub struct WorkflowResult {
+    pub id: JobId,
+    pub tenant: TenantId,
+    /// The submission's sink rows (from the result cache on a hit).
+    pub rows: Vec<Tuple>,
+    /// Structured engine error (unsupervised worker failure, recovery
+    /// exhausted). `None` for clean completions and cancellations.
+    pub error: Option<ExecError>,
+    /// Cancelled by the caller or by service shutdown.
+    pub cancelled: bool,
+    /// Served from the plan-fingerprint cache without executing.
+    pub cache_hit: bool,
+    /// Seconds spent queued before deployment.
+    pub queued_s: f64,
+    /// Seconds from submission to this result.
+    pub total_s: f64,
+    /// Seconds from submission to the job's first sink output — the
+    /// serving-layer `measured_frt` (queue wait included, so admission
+    /// policy shows up here). `None` when the sink never reported.
+    pub measured_frt: Option<f64>,
+    /// Workers granted at deployment.
+    pub workers_granted: usize,
+    /// Times the job was pause-preempted for an interactive tenant.
+    pub preemptions: u32,
+}
+
+/// Serving-layer configuration.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    /// Base engine config for every job; `engine.max_workers` is the
+    /// **global** worker budget across all tenants (0 = unbounded).
+    pub engine: Config,
+    /// Bounded submission-queue capacity.
+    pub queue_cap: usize,
+    /// Quota applied to tenants without an explicit override.
+    pub default_quota: TenantQuota,
+    /// Per-tenant quota overrides.
+    pub quotas: HashMap<u64, TenantQuota>,
+    /// Priority-blind arrival-order admission with preemption disabled
+    /// — the baseline the priority policy is benchmarked against.
+    pub fifo: bool,
+    /// Arbitration weight multiplying Interactive jobs' modeled work.
+    pub interactive_weight: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            engine: Config::default(),
+            queue_cap: 256,
+            default_quota: TenantQuota::default(),
+            quotas: HashMap::new(),
+            fifo: false,
+            interactive_weight: 4.0,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Small queues and batches for tests.
+    pub fn for_tests() -> ServiceConfig {
+        ServiceConfig {
+            engine: Config::for_tests(),
+            queue_cap: 64,
+            ..ServiceConfig::default()
+        }
+    }
+
+    fn quota_of(&self, tenant: TenantId) -> TenantQuota {
+        self.quotas.get(&tenant.0).copied().unwrap_or(self.default_quota)
+    }
+}
+
+enum Msg {
+    Submit {
+        sub: Box<Submission>,
+        reply: Sender<Result<JobId, AdmissionError>>,
+    },
+    Await {
+        id: JobId,
+        reply: Sender<Option<WorkflowResult>>,
+    },
+    Cancel {
+        id: JobId,
+        reply: Sender<bool>,
+    },
+    PauseJob {
+        id: JobId,
+        reply: Sender<bool>,
+    },
+    ResumeJob {
+        id: JobId,
+        reply: Sender<bool>,
+    },
+    ScaleJob {
+        id: JobId,
+        op: usize,
+        workers: usize,
+        reply: Sender<bool>,
+    },
+    MigrateJob {
+        id: JobId,
+        delta: PlanDelta,
+        reply: Sender<bool>,
+    },
+    JobFinished {
+        id: JobId,
+        summary: Option<Box<ExecSummary>>,
+    },
+    Stats {
+        reply: Sender<ServiceStats>,
+    },
+    Shutdown,
+}
+
+/// The shared multi-tenant engine frontend. One service loop thread
+/// owns every live [`Execution`]; the public API exchanges messages
+/// with it, so all admission, arbitration and preemption decisions are
+/// serialized (the ledger's never-exceeded invariant has a single
+/// writer for grants).
+pub struct EngineService {
+    tx: Sender<Msg>,
+    loop_thread: Option<JoinHandle<()>>,
+    ledger: Arc<WorkerLedger>,
+    cache: Arc<ResultCache>,
+    live_jobs: Arc<AtomicUsize>,
+}
+
+impl EngineService {
+    /// Spin up the service loop. The global worker budget is
+    /// `cfg.engine.max_workers` (0 = unbounded).
+    pub fn start(cfg: ServiceConfig) -> EngineService {
+        let (tx, rx) = channel();
+        let ledger = Arc::new(WorkerLedger::new(cfg.engine.max_workers));
+        let cache = Arc::new(ResultCache::new());
+        let live_jobs = Arc::new(AtomicUsize::new(0));
+        let loop_tx = tx.clone();
+        let (ledger2, cache2, live2) = (ledger.clone(), cache.clone(), live_jobs.clone());
+        let loop_thread = std::thread::Builder::new()
+            .name("engine-service".into())
+            .spawn(move || ServiceLoop::new(cfg, rx, loop_tx, ledger2, cache2, live2).run())
+            .expect("spawn service loop");
+        EngineService { tx, loop_thread: Some(loop_thread), ledger, cache, live_jobs }
+    }
+
+    /// Admit one workflow. `Ok(id)` means the job will run (or was
+    /// served from cache) — await it with [`wait`](Self::wait).
+    pub fn submit(&self, sub: Submission) -> Result<JobId, AdmissionError> {
+        let (reply, rx) = channel();
+        if self.tx.send(Msg::Submit { sub: Box::new(sub), reply }).is_err() {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        rx.recv().unwrap_or(Err(AdmissionError::ShuttingDown))
+    }
+
+    /// Block until job `id` reaches a terminal state; `None` for an
+    /// unknown id.
+    pub fn wait(&self, id: JobId) -> Option<WorkflowResult> {
+        let (reply, rx) = channel();
+        self.tx.send(Msg::Await { id, reply }).ok()?;
+        rx.recv().ok().flatten()
+    }
+
+    /// Submit + wait.
+    pub fn run(&self, sub: Submission) -> Result<WorkflowResult, AdmissionError> {
+        let id = self.submit(sub)?;
+        Ok(self.wait(id).expect("submitted job must reach a terminal state"))
+    }
+
+    /// Cancel a queued or running job. False once it already finished.
+    pub fn cancel(&self, id: JobId) -> bool {
+        self.ask(|reply| Msg::Cancel { id, reply })
+    }
+
+    /// Pause a running job (the caller's grant is *held* — this is a
+    /// user pause, not a preemption).
+    pub fn pause_job(&self, id: JobId) -> bool {
+        self.ask(|reply| Msg::PauseJob { id, reply })
+    }
+
+    /// Resume a job paused with [`pause_job`](Self::pause_job).
+    /// Preempted jobs are service-managed and refuse a caller resume.
+    pub fn resume_job(&self, id: JobId) -> bool {
+        self.ask(|reply| Msg::ResumeJob { id, reply })
+    }
+
+    /// Scale one operator of a running job; a scale-up must fit the
+    /// global budget, a scale-down returns workers to it.
+    pub fn scale_job(&self, id: JobId, op: usize, workers: usize) -> bool {
+        self.ask(|reply| Msg::ScaleJob { id, op, workers, reply })
+    }
+
+    /// Apply a live plan migration to a running job. Only deltas that
+    /// keep the operator set intact are accepted (`Repartition`,
+    /// `Replan` — a `Replan` settles the ledger exactly);
+    /// materialization splicing changes the op set mid-flight and is
+    /// refused at this layer.
+    pub fn migrate_job(&self, id: JobId, delta: PlanDelta) -> bool {
+        self.ask(|reply| Msg::MigrateJob { id, delta, reply })
+    }
+
+    /// Snapshot of the serving-layer counters.
+    pub fn stats(&self) -> ServiceStats {
+        let (reply, rx) = channel();
+        if self.tx.send(Msg::Stats { reply }).is_err() {
+            return ServiceStats::default();
+        }
+        rx.recv().unwrap_or_default()
+    }
+
+    /// The global budget ledger (tests assert on `peak()`).
+    pub fn ledger(&self) -> &WorkerLedger {
+        &self.ledger
+    }
+
+    /// The cross-workflow result cache.
+    pub fn cache(&self) -> &ResultCache {
+        &self.cache
+    }
+
+    /// Jobs admitted but not yet terminal (queued + running).
+    pub fn live_jobs(&self) -> usize {
+        self.live_jobs.load(Ordering::Relaxed)
+    }
+
+    fn ask(&self, make: impl FnOnce(Sender<bool>) -> Msg) -> bool {
+        let (reply, rx) = channel();
+        if self.tx.send(make(reply)).is_err() {
+            return false;
+        }
+        rx.recv().unwrap_or(false)
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.loop_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A queued job's deployment ingredients, held until start.
+struct PendingJob {
+    workflow: Workflow,
+    config: Config,
+    cost: CostParams,
+    sink: Option<SinkHandle>,
+    sink_ops: Vec<usize>,
+    fingerprint: Option<u64>,
+    submitted_at: Instant,
+}
+
+struct RunningJob {
+    exec: Execution,
+    /// Current per-op worker counts (arbitration grant, updated by
+    /// scale/migrate/preemption).
+    counts: Vec<usize>,
+    /// Workers currently charged to the ledger (0 while preempted).
+    granted: usize,
+    granted_at_start: usize,
+    sink: Option<SinkHandle>,
+    sink_ops: Vec<usize>,
+    fingerprint: Option<u64>,
+    submitted_at: Instant,
+    started_at: Instant,
+    /// Pause-fenced by the service with the grant released.
+    preempted: bool,
+    /// Paused by the caller with the grant held.
+    user_paused: bool,
+    preemptions: u32,
+}
+
+enum JobState {
+    Queued,
+    Running(RunningJob),
+    Finished(WorkflowResult),
+}
+
+struct Job {
+    tenant: TenantId,
+    priority: Priority,
+    state: JobState,
+    waiters: Vec<Sender<Option<WorkflowResult>>>,
+}
+
+struct ServiceLoop {
+    cfg: ServiceConfig,
+    rx: Receiver<Msg>,
+    tx: Sender<Msg>,
+    ledger: Arc<WorkerLedger>,
+    cache: Arc<ResultCache>,
+    live_jobs: Arc<AtomicUsize>,
+    queue: AdmissionQueue,
+    pending: HashMap<JobId, PendingJob>,
+    jobs: HashMap<JobId, Job>,
+    tenants: HashMap<TenantId, TenantState>,
+    /// Preempted job ids, oldest first — resume order.
+    preempted: VecDeque<JobId>,
+    stats: ServiceStats,
+    next_id: u64,
+}
+
+impl ServiceLoop {
+    fn new(
+        cfg: ServiceConfig,
+        rx: Receiver<Msg>,
+        tx: Sender<Msg>,
+        ledger: Arc<WorkerLedger>,
+        cache: Arc<ResultCache>,
+        live_jobs: Arc<AtomicUsize>,
+    ) -> ServiceLoop {
+        let queue = AdmissionQueue::new(cfg.queue_cap, cfg.fifo);
+        ServiceLoop {
+            cfg,
+            rx,
+            tx,
+            ledger,
+            cache,
+            live_jobs,
+            queue,
+            pending: HashMap::new(),
+            jobs: HashMap::new(),
+            tenants: HashMap::new(),
+            preempted: VecDeque::new(),
+            stats: ServiceStats::default(),
+            next_id: 0,
+        }
+    }
+
+    fn run(mut self) {
+        loop {
+            match self.rx.recv() {
+                Ok(Msg::Submit { sub, reply }) => {
+                    let _ = reply.send(self.submit(*sub));
+                    self.drain();
+                }
+                Ok(Msg::Await { id, reply }) => match self.jobs.get_mut(&id) {
+                    Some(job) => match &job.state {
+                        JobState::Finished(res) => {
+                            let _ = reply.send(Some(res.clone()));
+                        }
+                        _ => job.waiters.push(reply),
+                    },
+                    None => {
+                        let _ = reply.send(None);
+                    }
+                },
+                Ok(Msg::Cancel { id, reply }) => {
+                    let _ = reply.send(self.cancel(id));
+                    self.drain();
+                }
+                Ok(Msg::PauseJob { id, reply }) => {
+                    let _ = reply.send(self.pause_job(id));
+                }
+                Ok(Msg::ResumeJob { id, reply }) => {
+                    let _ = reply.send(self.resume_job(id));
+                }
+                Ok(Msg::ScaleJob { id, op, workers, reply }) => {
+                    let _ = reply.send(self.scale_job(id, op, workers));
+                    self.drain();
+                }
+                Ok(Msg::MigrateJob { id, delta, reply }) => {
+                    let _ = reply.send(self.migrate_job(id, delta));
+                    self.drain();
+                }
+                Ok(Msg::JobFinished { id, summary }) => {
+                    self.finish(id, summary.map(|b| *b));
+                    self.drain();
+                }
+                Ok(Msg::Stats { reply }) => {
+                    let _ = reply.send(self.snapshot());
+                }
+                Ok(Msg::Shutdown) | Err(_) => {
+                    self.shutdown();
+                    return;
+                }
+            }
+        }
+    }
+
+    // ---- submission ---------------------------------------------------
+
+    fn submit(&mut self, sub: Submission) -> Result<JobId, AdmissionError> {
+        self.stats.submitted += 1;
+        let capacity = self.cfg.engine.max_workers;
+        let min_workers = sub.workflow.ops.len();
+        if capacity > 0 && min_workers > capacity {
+            self.stats.rejected_too_large += 1;
+            return Err(AdmissionError::TooLarge { min_workers, capacity });
+        }
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+
+        // Cross-workflow result reuse: a fingerprint hit completes the
+        // job without deploying a worker.
+        let fingerprint = sub.cache_salt.map(|s| plan_fingerprint(&sub.workflow, s));
+        if let Some(fp) = fingerprint {
+            if let Some(rows) = self.cache.lookup(fp) {
+                self.stats.cache_hits += 1;
+                self.stats.completed += 1;
+                self.jobs.insert(
+                    id,
+                    Job {
+                        tenant: sub.tenant,
+                        priority: sub.priority,
+                        state: JobState::Finished(WorkflowResult {
+                            id,
+                            tenant: sub.tenant,
+                            rows,
+                            error: None,
+                            cancelled: false,
+                            cache_hit: true,
+                            queued_s: 0.0,
+                            total_s: 0.0,
+                            measured_frt: Some(0.0),
+                            workers_granted: 0,
+                            preemptions: 0,
+                        }),
+                        waiters: Vec::new(),
+                    },
+                );
+                return Ok(id);
+            }
+            self.stats.cache_misses += 1;
+        }
+
+        let quota = self.cfg.quota_of(sub.tenant);
+        self.tenants.entry(sub.tenant).or_insert_with(|| TenantState {
+            quota,
+            running: 0,
+        });
+        let queued = QueuedJob {
+            id,
+            tenant: sub.tenant,
+            priority: sub.priority,
+            min_workers,
+        };
+        if let Err(e) = self.queue.push(queued, quota.max_queued) {
+            match e {
+                AdmissionError::QueueFull { .. } => self.stats.rejected_queue_full += 1,
+                _ => self.stats.rejected_quota += 1,
+            }
+            return Err(e);
+        }
+
+        let mut config = sub.config.unwrap_or_else(|| self.cfg.engine.clone());
+        // The service owns the budget; an Execution never re-applies it.
+        config.max_workers = 0;
+        let cost = sub
+            .cost
+            .unwrap_or_else(|| Self::default_cost(&self.cfg.engine, &sub.workflow));
+        let sink_ops = sub.workflow.sinks();
+        self.pending.insert(
+            id,
+            PendingJob {
+                workflow: sub.workflow,
+                config,
+                cost,
+                sink: sub.result_sink,
+                sink_ops,
+                fingerprint,
+                submitted_at: Instant::now(),
+            },
+        );
+        self.jobs.insert(
+            id,
+            Job {
+                tenant: sub.tenant,
+                priority: sub.priority,
+                state: JobState::Queued,
+                waiters: Vec::new(),
+            },
+        );
+        self.stats.admitted += 1;
+        self.live_jobs.fetch_add(1, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Cost model for arbitration when the submission brings none:
+    /// service defaults plus each source's `len_hint` (instantiating
+    /// one throwaway source per scan — builders are pure factories).
+    fn default_cost(engine: &Config, w: &Workflow) -> CostParams {
+        let mut p = CostParams::from_config(engine);
+        for (i, op) in w.ops.iter().enumerate() {
+            if let Some(b) = op.source_builder.as_ref() {
+                if let Some(n) = b(0, 1).len_hint() {
+                    p.source_rows.insert(i, n as f64);
+                }
+            }
+        }
+        p
+    }
+
+    // ---- dispatch -----------------------------------------------------
+
+    /// Resume preempted jobs, then start queued jobs, until the budget
+    /// or the queue runs dry.
+    fn drain(&mut self) {
+        while let Some(&id) = self.preempted.front() {
+            if !self.try_resume_preempted(id) {
+                break;
+            }
+            self.preempted.pop_front();
+        }
+        loop {
+            // Eligibility covers every *per-tenant* gate (run cap,
+            // worker share) so a capped tenant's job at the queue head
+            // never blocks other tenants; only the *global* budget
+            // check below stops the drain.
+            let tenants = &self.tenants;
+            let ledger = &self.ledger;
+            let cfg = &self.cfg;
+            let capacity = cfg.engine.max_workers;
+            let Some(q) = self.queue.take_next(|j| {
+                let run_ok = tenants
+                    .get(&j.tenant)
+                    .map(|t| t.running < t.quota.max_running)
+                    .unwrap_or(true);
+                if !run_ok {
+                    return false;
+                }
+                let allowance = cfg
+                    .quota_of(j.tenant)
+                    .worker_allowance(capacity)
+                    .saturating_sub(ledger.tenant_used(j.tenant));
+                j.min_workers <= allowance
+            }) else {
+                break;
+            };
+            if !self.try_start(&q) {
+                self.queue.push_front(q);
+                break;
+            }
+        }
+    }
+
+    fn try_resume_preempted(&mut self, id: JobId) -> bool {
+        let Some(job) = self.jobs.get_mut(&id) else { return true };
+        let JobState::Running(run) = &mut job.state else { return true };
+        let footprint: usize = run.counts.iter().sum();
+        let quota = self.cfg.quota_of(job.tenant);
+        let allowance = quota.worker_allowance(self.cfg.engine.max_workers);
+        if self.ledger.tenant_used(job.tenant) + footprint > allowance {
+            return false;
+        }
+        if !self.ledger.try_acquire(job.tenant, footprint) {
+            return false;
+        }
+        run.exec.resume();
+        run.granted = footprint;
+        run.preempted = false;
+        self.stats.resumes += 1;
+        true
+    }
+
+    fn try_start(&mut self, q: &QueuedJob) -> bool {
+        let capacity = self.cfg.engine.max_workers;
+        let quota = self.cfg.quota_of(q.tenant);
+        let allowance = quota
+            .worker_allowance(capacity)
+            .saturating_sub(self.ledger.tenant_used(q.tenant));
+        if q.min_workers > allowance {
+            return false;
+        }
+        if capacity > 0 && q.min_workers > self.ledger.available() {
+            // Interactive jobs carve room out of running Batch jobs;
+            // Batch jobs (and everything in FIFO mode) just wait.
+            if q.priority != Priority::Interactive || self.cfg.fifo {
+                return false;
+            }
+            self.preempt_for(q.min_workers);
+            if q.min_workers > self.ledger.available() {
+                return false;
+            }
+        }
+        let Some(pend) = self.pending.remove(&q.id) else { return true };
+
+        let slots = self.ledger.available().min(allowance);
+        let counts: Vec<usize> = if capacity == 0 {
+            pend.workflow.ops.iter().map(|o| o.workers).collect()
+        } else {
+            let weight = match q.priority {
+                Priority::Interactive => self.cfg.interactive_weight,
+                Priority::Batch => 1.0,
+            };
+            arbitrate(
+                &[ArbiterJob {
+                    workflow: &pend.workflow,
+                    cost: &pend.cost,
+                    weight,
+                    fixed: HashMap::new(),
+                }],
+                slots,
+            )
+            .remove(0)
+        };
+        let total: usize = counts.iter().sum();
+        if !self.ledger.try_acquire(q.tenant, total) {
+            // Single-writer loop: arbitration never over-commits; keep
+            // the defensive path anyway.
+            self.pending.insert(q.id, pend);
+            return false;
+        }
+
+        let mut w = pend.workflow;
+        for (i, &c) in counts.iter().enumerate() {
+            w.ops[i].workers = c;
+        }
+        let exec = Execution::start(w, pend.config);
+        let done_rx = exec.on_done();
+        let tx = self.tx.clone();
+        let id = q.id;
+        std::thread::Builder::new()
+            .name(format!("svc-wait-{}", id.0))
+            .spawn(move || {
+                let summary = done_rx.recv().ok().map(Box::new);
+                let _ = tx.send(Msg::JobFinished { id, summary });
+            })
+            .expect("spawn job waiter");
+
+        if let Some(t) = self.tenants.get_mut(&q.tenant) {
+            t.running += 1;
+        }
+        let job = self.jobs.get_mut(&q.id).expect("queued job known");
+        job.state = JobState::Running(RunningJob {
+            exec,
+            counts,
+            granted: total,
+            granted_at_start: total,
+            sink: pend.sink,
+            sink_ops: pend.sink_ops,
+            fingerprint: pend.fingerprint,
+            submitted_at: pend.submitted_at,
+            started_at: Instant::now(),
+            preempted: false,
+            user_paused: false,
+            preemptions: 0,
+        });
+        true
+    }
+
+    /// Free budget for an Interactive job: first fence running Batch
+    /// jobs down to one worker per operator, then pause-fence whole
+    /// Batch jobs (largest grant first), releasing grants as they
+    /// shrink, until `needed` workers are available.
+    fn preempt_for(&mut self, needed: usize) {
+        let mut victims: Vec<(JobId, usize)> = self
+            .jobs
+            .iter()
+            .filter_map(|(&id, j)| match (&j.state, j.priority) {
+                (JobState::Running(r), Priority::Batch)
+                    if !r.preempted && !r.user_paused =>
+                {
+                    Some((id, r.granted))
+                }
+                _ => None,
+            })
+            .collect();
+        victims.sort_by(|a, b| b.1.cmp(&a.1).then(a.0 .0.cmp(&b.0 .0)));
+
+        // Phase 1: fenced scale-down to 1 worker per op.
+        for &(id, _) in &victims {
+            if self.ledger.available() >= needed {
+                return;
+            }
+            let tenant = self.jobs[&id].tenant;
+            let Some(job) = self.jobs.get_mut(&id) else { continue };
+            let JobState::Running(run) = &mut job.state else { continue };
+            let mut freed = 0usize;
+            for op in 0..run.counts.len() {
+                if run.counts[op] > 1
+                    && run.exec.scale_operator(op, 1) > Duration::ZERO
+                {
+                    freed += run.counts[op] - 1;
+                    run.counts[op] = 1;
+                }
+            }
+            if freed > 0 {
+                run.granted -= freed;
+                self.ledger.release(tenant, freed);
+            }
+        }
+        // Phase 2: pause-fence whole jobs, releasing their full grant
+        // (threads park at the fence; the budget tracks runnable
+        // workers).
+        for &(id, _) in &victims {
+            if self.ledger.available() >= needed {
+                return;
+            }
+            let tenant = self.jobs[&id].tenant;
+            let Some(job) = self.jobs.get_mut(&id) else { continue };
+            let JobState::Running(run) = &mut job.state else { continue };
+            let _ = run.exec.pause();
+            self.ledger.release(tenant, run.granted);
+            run.granted = 0;
+            run.preempted = true;
+            run.preemptions += 1;
+            self.preempted.push_back(id);
+            self.stats.preemptions += 1;
+        }
+    }
+
+    // ---- job control --------------------------------------------------
+
+    fn cancel(&mut self, id: JobId) -> bool {
+        let Some(job) = self.jobs.get_mut(&id) else { return false };
+        match &mut job.state {
+            JobState::Queued => {
+                self.queue.remove(id);
+                self.pending.remove(&id);
+                self.finalize(id, None, true);
+                true
+            }
+            JobState::Running(_) => {
+                self.finalize(id, None, true);
+                true
+            }
+            JobState::Finished(_) => false,
+        }
+    }
+
+    fn pause_job(&mut self, id: JobId) -> bool {
+        let Some(job) = self.jobs.get_mut(&id) else { return false };
+        let JobState::Running(run) = &mut job.state else { return false };
+        if run.preempted || run.user_paused {
+            return false;
+        }
+        let _ = run.exec.pause();
+        run.user_paused = true;
+        true
+    }
+
+    fn resume_job(&mut self, id: JobId) -> bool {
+        let Some(job) = self.jobs.get_mut(&id) else { return false };
+        let JobState::Running(run) = &mut job.state else { return false };
+        if !run.user_paused {
+            return false;
+        }
+        run.exec.resume();
+        run.user_paused = false;
+        true
+    }
+
+    fn scale_job(&mut self, id: JobId, op: usize, workers: usize) -> bool {
+        if workers == 0 {
+            return false;
+        }
+        let tenant = match self.jobs.get(&id) {
+            Some(j) => j.tenant,
+            None => return false,
+        };
+        let Some(job) = self.jobs.get_mut(&id) else { return false };
+        let JobState::Running(run) = &mut job.state else { return false };
+        if run.preempted || run.user_paused || op >= run.counts.len() {
+            return false;
+        }
+        let cur = run.counts[op];
+        if workers > cur {
+            let extra = workers - cur;
+            if !self.ledger.try_acquire(tenant, extra) {
+                return false;
+            }
+            if run.exec.scale_operator(op, workers) > Duration::ZERO {
+                run.counts[op] = workers;
+                run.granted += extra;
+                true
+            } else {
+                self.ledger.release(tenant, extra);
+                false
+            }
+        } else if workers < cur {
+            if run.exec.scale_operator(op, workers) > Duration::ZERO {
+                let freed = cur - workers;
+                run.counts[op] = workers;
+                run.granted -= freed;
+                self.ledger.release(tenant, freed);
+                true
+            } else {
+                false
+            }
+        } else {
+            true
+        }
+    }
+
+    fn migrate_job(&mut self, id: JobId, delta: PlanDelta) -> bool {
+        let tenant = match self.jobs.get(&id) {
+            Some(j) => j.tenant,
+            None => return false,
+        };
+        let Some(job) = self.jobs.get_mut(&id) else { return false };
+        let JobState::Running(run) = &mut job.state else { return false };
+        if run.preempted || run.user_paused {
+            return false;
+        }
+        match delta {
+            PlanDelta::Repartition { .. } => {
+                run.exec.migrate(delta).applied
+            }
+            PlanDelta::Replan { ref workers } => {
+                // Settle the ledger exactly: acquire growth up front,
+                // release the net shrink (or refund) after the fence.
+                let mut extra = 0usize;
+                for &(op, n) in workers {
+                    if op < run.counts.len() && n > run.counts[op] {
+                        extra += n - run.counts[op];
+                    }
+                }
+                if extra > 0 && !self.ledger.try_acquire(tenant, extra) {
+                    return false;
+                }
+                let outcome = run.exec.migrate(delta.clone());
+                if !outcome.applied {
+                    if extra > 0 {
+                        self.ledger.release(tenant, extra);
+                    }
+                    return false;
+                }
+                let mut freed = 0usize;
+                if let PlanDelta::Replan { workers } = delta {
+                    for (op, n) in workers {
+                        if op >= run.counts.len() {
+                            continue;
+                        }
+                        if n > run.counts[op] {
+                            run.granted += n - run.counts[op];
+                        } else {
+                            freed += run.counts[op] - n;
+                            run.granted -= run.counts[op] - n;
+                        }
+                        run.counts[op] = n;
+                    }
+                }
+                if freed > 0 {
+                    self.ledger.release(tenant, freed);
+                }
+                true
+            }
+            // Mat splicing inserts/removes operators mid-flight; the
+            // per-op grant bookkeeping cannot follow — refused here.
+            PlanDelta::InsertMat { .. } | PlanDelta::RemoveMat { .. } => false,
+        }
+    }
+
+    // ---- completion ---------------------------------------------------
+
+    fn finish(&mut self, id: JobId, summary: Option<ExecSummary>) {
+        let running = matches!(
+            self.jobs.get(&id).map(|j| &j.state),
+            Some(JobState::Running(_))
+        );
+        if running {
+            self.finalize(id, summary, false);
+        }
+        // A stale JobFinished after a cancel finalized the job already
+        // is dropped here.
+    }
+
+    /// Move a job to its terminal state: tear down the execution,
+    /// settle the ledger, collect rows, feed the cache, fulfill
+    /// waiters.
+    fn finalize(&mut self, id: JobId, summary: Option<ExecSummary>, cancelled: bool) {
+        let Some(job) = self.jobs.get_mut(&id) else { return };
+        let tenant = job.tenant;
+        let prev = std::mem::replace(&mut job.state, JobState::Queued);
+        let result = match prev {
+            JobState::Running(run) => {
+                let RunningJob {
+                    exec,
+                    granted,
+                    granted_at_start,
+                    sink,
+                    sink_ops,
+                    fingerprint,
+                    submitted_at,
+                    started_at,
+                    preempted,
+                    user_paused,
+                    preemptions,
+                    ..
+                } = run;
+                // Un-park a paused job's workers before teardown, then
+                // Drop tears the engine down (Shutdown + join) whether
+                // the run completed or is being cancelled mid-flight.
+                if preempted || user_paused {
+                    exec.resume();
+                }
+                drop(exec);
+                if granted > 0 {
+                    self.ledger.release(tenant, granted);
+                }
+                self.preempted.retain(|&x| x != id);
+                if let Some(t) = self.tenants.get_mut(&tenant) {
+                    t.running = t.running.saturating_sub(1);
+                }
+                let rows = if cancelled {
+                    Vec::new()
+                } else {
+                    sink.map(|h| h.tuples()).unwrap_or_default()
+                };
+                let error = summary.as_ref().and_then(|s| s.error.clone());
+                let queued_s = (started_at - submitted_at).as_secs_f64();
+                let measured_frt = summary.as_ref().and_then(|s| {
+                    sink_ops
+                        .iter()
+                        .filter_map(|op| s.first_output.get(op).copied())
+                        .fold(None, |m: Option<f64>, v| {
+                            Some(m.map_or(v, |m| m.min(v)))
+                        })
+                        .map(|first| queued_s + first)
+                });
+                if !cancelled && error.is_none() {
+                    if let Some(fp) = fingerprint {
+                        self.cache.insert(fp, rows.clone());
+                    }
+                }
+                WorkflowResult {
+                    id,
+                    tenant,
+                    rows,
+                    error,
+                    cancelled,
+                    cache_hit: false,
+                    queued_s,
+                    total_s: submitted_at.elapsed().as_secs_f64(),
+                    measured_frt,
+                    workers_granted: granted_at_start,
+                    preemptions,
+                }
+            }
+            JobState::Queued => {
+                let queued_s = self
+                    .pending
+                    .get(&id)
+                    .map(|p| p.submitted_at.elapsed().as_secs_f64())
+                    .unwrap_or(0.0);
+                WorkflowResult {
+                    id,
+                    tenant,
+                    rows: Vec::new(),
+                    error: None,
+                    cancelled,
+                    cache_hit: false,
+                    queued_s,
+                    total_s: queued_s,
+                    measured_frt: None,
+                    workers_granted: 0,
+                    preemptions: 0,
+                }
+            }
+            JobState::Finished(r) => r,
+        };
+        if cancelled {
+            self.stats.cancelled += 1;
+        } else if result.error.is_some() {
+            self.stats.failed += 1;
+        } else {
+            self.stats.completed += 1;
+        }
+        self.live_jobs.fetch_sub(1, Ordering::Relaxed);
+        let job = self.jobs.get_mut(&id).expect("job still present");
+        for w in job.waiters.drain(..) {
+            let _ = w.send(Some(result.clone()));
+        }
+        job.state = JobState::Finished(result);
+    }
+
+    fn shutdown(&mut self) {
+        let queued: Vec<JobId> = self.queue.drain_all().iter().map(|q| q.id).collect();
+        for id in queued {
+            self.pending.remove(&id);
+            self.finalize(id, None, true);
+        }
+        let running: Vec<JobId> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| matches!(j.state, JobState::Running(_)))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in running {
+            self.finalize(id, None, true);
+        }
+    }
+
+    fn snapshot(&self) -> ServiceStats {
+        let mut s = self.stats.clone();
+        s.cache_hits = self.cache.hits();
+        s.cache_misses = self.cache.misses();
+        s.capacity = self.cfg.engine.max_workers;
+        s.workers_in_use = self.ledger.used();
+        s.peak_workers = self.ledger.peak();
+        s.queued_now = self.queue.len();
+        s.running_now = self
+            .jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Running(_)))
+            .count();
+        s
+    }
+}

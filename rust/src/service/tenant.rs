@@ -1,0 +1,64 @@
+//! Tenant identity and per-tenant quotas.
+//!
+//! A tenant is one user (or one API key, one notebook — the unit the
+//! Texera service bills and isolates). The serving layer tracks, per
+//! tenant, how many submissions sit in the admission queue, how many
+//! jobs run, and how many workers of the global budget it holds; the
+//! [`TenantQuota`] caps each of those so one tenant can neither flood
+//! the queue nor monopolize the worker pool.
+
+/// Opaque tenant identity. Ordering is used only for deterministic
+/// round-robin rotation inside the admission queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u64);
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant-{}", self.0)
+    }
+}
+
+/// Per-tenant admission limits. Applied by the serving layer at submit
+/// time (`max_queued` — exceeding it *rejects* the submission) and at
+/// start time (`max_running`, `max_worker_share` — exceeding those
+/// merely defers the job in the queue).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantQuota {
+    /// Submissions this tenant may have waiting in the admission queue.
+    pub max_queued: usize,
+    /// Jobs this tenant may have running (or preempted-but-live) at
+    /// once.
+    pub max_running: usize,
+    /// Fraction of the global worker budget this tenant may hold at
+    /// once (1.0 = no per-tenant cap). Ignored when the budget is
+    /// unbounded (`capacity == 0`).
+    pub max_worker_share: f64,
+}
+
+impl Default for TenantQuota {
+    fn default() -> TenantQuota {
+        TenantQuota { max_queued: 64, max_running: 8, max_worker_share: 1.0 }
+    }
+}
+
+impl TenantQuota {
+    /// Workers this quota allows the tenant to hold out of `capacity`
+    /// (0 = unbounded budget → no cap). At least 1 when capped, so a
+    /// tiny share on a tiny cluster cannot starve the tenant outright.
+    pub fn worker_allowance(&self, capacity: usize) -> usize {
+        if capacity == 0 {
+            usize::MAX
+        } else {
+            ((self.max_worker_share * capacity as f64).floor() as usize).max(1)
+        }
+    }
+}
+
+/// Live admission-side bookkeeping for one tenant.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct TenantState {
+    pub quota: TenantQuota,
+    /// Jobs currently running or preempted (counted against
+    /// `max_running` — a preempted job still owns engine state).
+    pub running: usize,
+}

@@ -1475,3 +1475,260 @@ fn prop_estimator_bounds() {
         p >= lo - 1e-9 && p <= hi + 1e-9 && e.standard_error() >= 0.0
     });
 }
+
+// ---------- serving layer ----------
+
+/// Service-fuzzer axis (`CHAOS_SERVICE=1`, CI matrix): more trials of
+/// the multi-tenant action fuzzer below.
+fn chaos_service_enabled() -> bool {
+    std::env::var("CHAOS_SERVICE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// With a single tenant active, the cross-workflow arbiter is exactly
+/// Maestro's per-region `assign_workers` on single-region workflows:
+/// same groups, same marginal gains, same strict-`>` tie-breaking.
+#[test]
+fn prop_arbiter_matches_assign_workers_single_tenant() {
+    use std::collections::HashMap;
+    use texera_amber::engine::{Emitter, OpSpec, Operator, Workflow};
+    use texera_amber::maestro::cost::{assign_workers, cardinalities, CostParams};
+    use texera_amber::maestro::regions_of;
+    use texera_amber::service::{arbitrate, ArbiterJob};
+    use texera_amber::workloads::VecSource;
+
+    struct Noop;
+    impl Operator for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn process(&mut self, t: Tuple, _p: usize, out: &mut dyn Emitter) {
+            out.emit(t);
+        }
+    }
+
+    struct G;
+    impl Gen for G {
+        // (source rows, spare budget, per-op shape codes)
+        type Value = (u64, u64, Vec<u64>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (
+                100 + rng.below(100_000),
+                rng.below(24),
+                (0..2 + rng.below(5)).map(|_| rng.below(1000)).collect(),
+            )
+        }
+    }
+    check_n(23, 96, &G, |(rows, spare, codes)| {
+        // Random chain: authored counts 1–3, schemes cycling through
+        // one-to-one (group merging!), round-robin and hash.
+        let mut w = Workflow::new();
+        let n_rows = *rows as usize;
+        let mut prev = w.add(OpSpec::source(
+            "scan",
+            1 + (codes[0] % 3) as usize,
+            move |idx, parts| {
+                let rows: Vec<Tuple> = (0..n_rows)
+                    .skip(idx)
+                    .step_by(parts)
+                    .map(|i| Tuple::new(vec![Value::Int(i as i64)]))
+                    .collect();
+                Box::new(VecSource::new(rows))
+            },
+        ));
+        for (i, code) in codes.iter().enumerate().skip(1) {
+            let scheme = match code % 3 {
+                0 => PartitionScheme::OneToOne,
+                1 => PartitionScheme::RoundRobin,
+                _ => PartitionScheme::Hash { key: 0 },
+            };
+            let op = w.add(OpSpec::unary(
+                &format!("op{i}"),
+                1 + (code / 3 % 3) as usize,
+                scheme,
+                |_, _| Box::new(Noop),
+            ));
+            w.connect(prev, op, 0);
+            prev = op;
+        }
+        let mut p = CostParams::default();
+        p.source_rows.insert(0, *rows as f64);
+        for (i, code) in codes.iter().enumerate() {
+            p.selectivity.insert(i, 0.25 + (code % 8) as f64 * 0.25);
+        }
+        let regions = regions_of(&w);
+        if regions.len() != 1 {
+            // Chains of pipelined edges are single-region by
+            // construction; anything else is outside the claim.
+            return true;
+        }
+        let rows_out = cardinalities(&w, &p);
+        let budget = w.ops.len() + *spare as usize;
+        let expected = assign_workers(&w, &regions, &rows_out, &p, budget, &HashMap::new());
+        let got = arbitrate(
+            &[ArbiterJob { workflow: &w, cost: &p, weight: 1.0, fixed: HashMap::new() }],
+            budget,
+        );
+        got[0] == expected
+    });
+}
+
+/// Seeded multi-tenant action fuzzer: 2–8 concurrent workflows on one
+/// service while random submit/cancel/pause/resume/scale/migrate
+/// traffic hits them. Invariants: the global budget is **never**
+/// exceeded (ledger peak), every admitted workflow reaches a terminal
+/// state, and every uncancelled, unerrored workflow produces the exact
+/// sequential-run result. `CHAOS_SERVICE=1` (CI matrix) widens the
+/// trial count; `CHAOS_SEED` shifts the whole action stream.
+#[test]
+fn prop_service_fuzzer_budget_never_exceeded_and_all_complete() {
+    let base: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(11);
+    let trials = if chaos_service_enabled() { 12 } else { 3 };
+    for trial in 0..trials {
+        service_fuzz_trial(base.wrapping_mul(10_000).wrapping_add(trial));
+    }
+}
+
+fn service_fuzz_trial(seed: u64) {
+    use texera_amber::config::Config;
+    use texera_amber::engine::{
+        Execution, OpSpec, PlanDelta, Workflow,
+    };
+    use texera_amber::operators::group_by::{AggKind, GroupByFinal, GroupByPartial};
+    use texera_amber::operators::{CollectSink, SinkHandle};
+    use texera_amber::service::{EngineService, ServiceConfig, Submission, TenantId};
+    use texera_amber::workloads::VecSource;
+
+    const ROWS: usize = 3000;
+    const KEYS: i64 = 41;
+
+    // scan → gb_partial → gb_final (blocking) → sink; 4 ops, min 4.
+    fn flow() -> (Workflow, SinkHandle) {
+        let mut w = Workflow::new();
+        let scan = w.add(OpSpec::source("scan", 2, |idx, parts| {
+            let rows: Vec<Tuple> = (0..ROWS)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| Tuple::new(vec![Value::Int(i as i64 % KEYS), Value::Int(i as i64)]))
+                .collect();
+            Box::new(VecSource::new(rows))
+        }));
+        let partial = w.add(OpSpec::unary("gb_partial", 2, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(GroupByPartial::new(0, 1, AggKind::Sum))
+        }));
+        let fin = w.add(
+            OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+                Box::new(GroupByFinal::new(AggKind::Sum))
+            })
+            .with_blocking(vec![0]),
+        );
+        let handle = SinkHandle::new(0);
+        let h2 = handle.clone();
+        let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+            Box::new(CollectSink::new(h2.clone()))
+        }));
+        w.connect(scan, partial, 0);
+        w.connect(partial, fin, 0);
+        w.connect(fin, sink, 0);
+        (w, handle)
+    }
+
+    fn sorted(h: &SinkHandle) -> Vec<String> {
+        let mut rows: Vec<String> = h.tuples().iter().map(|t| format!("{t:?}")).collect();
+        rows.sort_unstable();
+        rows
+    }
+
+    let mut rng = Rng::new(seed);
+
+    // Sequential reference.
+    let (rw, rh) = flow();
+    Execution::start(rw, Config::for_tests()).join();
+    let reference = sorted(&rh);
+    assert!(!reference.is_empty());
+
+    let capacity = 5 + rng.below(8) as usize; // 5..=12 vs min footprint 4
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = capacity;
+    let svc = EngineService::start(cfg);
+
+    let n_jobs = 2 + rng.below(7) as usize; // 2..=8
+    let mut jobs = Vec::new();
+    for _ in 0..n_jobs {
+        let (w, h) = flow();
+        let mut sub = Submission::new(TenantId(rng.below(3)), w)
+            .with_sink(h.clone())
+            .with_config(Config::for_tests());
+        if rng.below(3) == 0 {
+            sub = sub.interactive();
+        }
+        let id = svc.submit(sub).expect("capacity >= min footprint, queue empty");
+        jobs.push((id, h));
+    }
+
+    // Random control-plane traffic against random jobs.
+    for _ in 0..n_jobs * 4 {
+        let (id, _) = jobs[rng.below(jobs.len() as u64) as usize];
+        match rng.below(6) {
+            0 => {
+                // Cancel at most one job per trial so the result check
+                // still covers most of the fleet.
+                if rng.below(4) == 0 {
+                    svc.cancel(id);
+                }
+            }
+            1 => {
+                svc.pause_job(id);
+            }
+            2 => {
+                svc.resume_job(id);
+            }
+            3 => {
+                svc.scale_job(id, rng.below(4) as usize, 1 + rng.below(3) as usize);
+            }
+            4 => {
+                svc.migrate_job(
+                    id,
+                    PlanDelta::Replan {
+                        workers: vec![
+                            (1, 1 + rng.below(2) as usize),
+                            (2, 1 + rng.below(2) as usize),
+                        ],
+                    },
+                );
+            }
+            _ => std::thread::sleep(std::time::Duration::from_millis(1)),
+        }
+    }
+
+    // Sweep: release any user pauses so every job can finish.
+    for (id, _) in &jobs {
+        svc.resume_job(*id);
+    }
+
+    for (id, h) in jobs {
+        let r = svc.wait(id).expect("every admitted job reaches a terminal state");
+        assert!(
+            r.cancelled || r.error.is_none(),
+            "seed {seed}: job {id:?} failed: {:?}",
+            r.error
+        );
+        if !r.cancelled {
+            assert_eq!(
+                sorted(&h),
+                reference,
+                "seed {seed}: job {id:?} diverged under service chaos"
+            );
+        }
+    }
+    assert!(
+        svc.ledger().peak() <= capacity,
+        "seed {seed}: budget exceeded: peak {} > {capacity}",
+        svc.ledger().peak()
+    );
+    let s = svc.stats();
+    assert_eq!(s.submitted, n_jobs as u64);
+    assert_eq!(s.completed + s.failed + s.cancelled, n_jobs as u64);
+}

@@ -1,0 +1,441 @@
+//! Tenant-isolation suite for the multi-tenant serving layer.
+//!
+//! The contract under test: N workflows racing through one
+//! [`EngineService`] produce results **byte-identical** to running each
+//! alone; the global worker budget is never exceeded; and one tenant's
+//! misbehavior — a panicking workflow, an exhausted quota — cannot
+//! stall or corrupt anyone else's results.
+
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::{
+    Emitter, Execution, Fault, FaultPlan, OpSpec, Operator, PartitionScheme, WorkerId,
+    Workflow,
+};
+use texera_amber::operators::{
+    AggKind, CollectSink, GroupByFinal, GroupByPartial, SinkHandle,
+};
+use texera_amber::service::{
+    AdmissionError, EngineService, JobId, ServiceConfig, Submission, TenantId, TenantQuota,
+};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::VecSource;
+
+/// scan → group-by partial → group-by final (blocking) → collect sink.
+/// `hot` sends 90% of rows to one key (the skewed-shuffle shape);
+/// otherwise keys are uniform over 0..50.
+fn counting_flow(n: usize, hot: bool, workers: usize) -> (Workflow, SinkHandle) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", workers, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..n)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                let key = if hot && i % 10 != 0 { 7 } else { (i % 50) as i64 };
+                Tuple::new(vec![Value::Int(key), Value::Int(i as i64)])
+            })
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let partial = w.add(OpSpec::unary(
+        "gb_partial",
+        workers,
+        PartitionScheme::RoundRobin,
+        |_, _| Box::new(GroupByPartial::new(0, 1, AggKind::Sum)),
+    ));
+    let fin = w.add(
+        OpSpec::unary("gb_final", workers, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    (w, handle)
+}
+
+fn sorted_rows(handle: &SinkHandle) -> Vec<(i64, f64)> {
+    let mut rows: Vec<(i64, f64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    rows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rows
+}
+
+fn result_rows(rows: &[Tuple]) -> Vec<(i64, f64)> {
+    let mut out: Vec<(i64, f64)> = rows
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+/// A filter-shaped operator that sleeps per tuple — makes a job run
+/// long enough to be observably *concurrent* without any timing
+/// assumption beyond "milliseconds add up".
+struct SlowPass {
+    per_tuple: Duration,
+}
+
+impl Operator for SlowPass {
+    fn name(&self) -> &str {
+        "slow_pass"
+    }
+
+    fn process(&mut self, t: Tuple, _port: usize, out: &mut dyn Emitter) {
+        std::thread::sleep(self.per_tuple);
+        out.emit(t);
+    }
+}
+
+/// scan → slow pass → collect sink, `n` tuples × `per_tuple_us` each.
+fn slow_flow(n: usize, per_tuple_us: u64) -> (Workflow, SinkHandle) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 1, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..n)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int(i as i64)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let slow = w.add(OpSpec::unary("slow", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(SlowPass { per_tuple: Duration::from_micros(per_tuple_us) })
+    }));
+    let handle = SinkHandle::new(0);
+    let h2 = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h2.clone()))
+    }));
+    w.connect(scan, slow, 0);
+    w.connect(slow, sink, 0);
+    (w, handle)
+}
+
+/// 16 concurrent workflows — uniform and 90%-hot-key, at batch 32 and
+/// 1024 — must each match a sequential single-workflow run byte for
+/// byte, while four tenants share a 9-worker budget (worker-share
+/// quotas force genuine interleaving) and the ledger never overdraws.
+#[test]
+fn concurrent_workflows_match_sequential_runs() {
+    const JOBS: usize = 16;
+    const BUDGET: usize = 9;
+    for (batch, hot) in [(32usize, false), (32, true), (1024, false), (1024, true)] {
+        let job_cfg = Config { batch_size: batch, ..Config::default() };
+
+        // Sequential reference: one engine, one workflow, same config.
+        let (w, h) = counting_flow(4000, hot, 2);
+        Execution::start(w, job_cfg.clone()).join();
+        let expected = sorted_rows(&h);
+        assert!(!expected.is_empty(), "reference run produced nothing");
+
+        let mut cfg = ServiceConfig::for_tests();
+        cfg.engine.max_workers = BUDGET;
+        cfg.default_quota = TenantQuota { max_worker_share: 0.5, ..TenantQuota::default() };
+        let svc = EngineService::start(cfg);
+        let mut handles: Vec<(JobId, SinkHandle)> = Vec::new();
+        for i in 0..JOBS {
+            let (w, h) = counting_flow(4000, hot, 2);
+            let sub = Submission::new(TenantId((i % 4) as u64), w)
+                .with_sink(h.clone())
+                .with_config(job_cfg.clone());
+            let id = svc.submit(sub).expect("admission");
+            handles.push((id, h));
+        }
+        for (id, h) in handles {
+            let r = svc.wait(id).expect("job known");
+            assert!(r.error.is_none(), "batch={batch} hot={hot}: {:?}", r.error);
+            assert!(!r.cancelled);
+            assert_eq!(
+                sorted_rows(&h),
+                expected,
+                "batch={batch} hot={hot} job {id:?} diverged from sequential run"
+            );
+            assert_eq!(result_rows(&r.rows), expected, "result rows diverge from sink");
+            assert!(r.measured_frt.is_some(), "sink emitted, frt must be measured");
+        }
+        assert!(
+            svc.ledger().peak() <= BUDGET,
+            "budget exceeded: peak {} > {BUDGET}",
+            svc.ledger().peak()
+        );
+        let s = svc.stats();
+        assert_eq!(s.completed, JOBS as u64);
+        assert_eq!(s.failed, 0);
+    }
+}
+
+/// A tenant whose workflow panics (supervision off → clean structured
+/// abort, per the PR-8 contract) cannot stall or corrupt the other
+/// tenants' jobs, and the service stays serviceable afterwards.
+#[test]
+fn panicking_tenant_cannot_stall_or_corrupt_others() {
+    let (w, h) = counting_flow(4000, false, 2);
+    Execution::start(w, Config::for_tests()).join();
+    let expected = sorted_rows(&h);
+
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = 12;
+    let svc = EngineService::start(cfg);
+
+    // Victim tenant: inject a deterministic panic in gb_partial worker
+    // 0; ft_log is off, so the job must abort cleanly with
+    // ExecError::Unsupervised instead of recovering (or hanging).
+    let mut faulty_cfg = Config::for_tests();
+    faulty_cfg.fault_plan = {
+        let mut p = FaultPlan::default();
+        p.push(Fault::panic_at(WorkerId::new(1, 0), 5));
+        p
+    };
+    let (fw, fh) = counting_flow(4000, false, 2);
+    let faulty = svc
+        .submit(
+            Submission::new(TenantId(0), fw)
+                .with_sink(fh)
+                .with_config(faulty_cfg),
+        )
+        .expect("admission");
+
+    let mut healthy = Vec::new();
+    for i in 0..4 {
+        let (w, h) = counting_flow(4000, false, 2);
+        let id = svc
+            .submit(
+                Submission::new(TenantId(1 + i as u64), w)
+                    .with_sink(h.clone())
+                    .with_config(Config::for_tests()),
+            )
+            .expect("admission");
+        healthy.push((id, h));
+    }
+
+    let fr = svc.wait(faulty).expect("faulty job known");
+    assert!(fr.error.is_some(), "panic must surface as a structured error");
+    for (id, h) in healthy {
+        let r = svc.wait(id).expect("healthy job known");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(sorted_rows(&h), expected, "neighbor corrupted by tenant-0 panic");
+    }
+    let s = svc.stats();
+    assert_eq!(s.failed, 1);
+    assert_eq!(s.completed, 4);
+
+    // Still serviceable after the failure.
+    let (w, h) = counting_flow(4000, false, 2);
+    let r = svc
+        .run(Submission::new(TenantId(9), w).with_sink(h.clone()).with_config(Config::for_tests()))
+        .expect("admission");
+    assert!(r.error.is_none());
+    assert_eq!(sorted_rows(&h), expected);
+}
+
+/// A tenant that floods the queue gets `QuotaExceeded` at *its* quota;
+/// other tenants keep running. A deferred (admitted) job from the
+/// flooding tenant still completes once its earlier job finishes.
+#[test]
+fn quota_exhausted_tenant_cannot_block_others() {
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = 3; // exactly one 3-op job at a time
+    cfg.default_quota =
+        TenantQuota { max_queued: 1, max_running: 1, ..TenantQuota::default() };
+    let svc = EngineService::start(cfg);
+
+    // Tenant 0 occupies the whole budget with a slow job…
+    let (w0, h0) = slow_flow(300, 1000);
+    let long = svc
+        .submit(Submission::new(TenantId(0), w0).with_sink(h0))
+        .expect("admission");
+    // …queues one more (max_running=1 defers it)…
+    let (w1, h1) = slow_flow(10, 10);
+    let queued = svc
+        .submit(Submission::new(TenantId(0), w1).with_sink(h1))
+        .expect("second submission queues");
+    // …and the third hits the per-tenant queue quota.
+    let (w2, _h2) = slow_flow(10, 10);
+    match svc.submit(Submission::new(TenantId(0), w2)) {
+        Err(AdmissionError::QuotaExceeded { tenant, max_queued }) => {
+            assert_eq!(tenant, TenantId(0));
+            assert_eq!(max_queued, 1);
+        }
+        other => panic!("expected QuotaExceeded, got {other:?}"),
+    }
+
+    // Tenant 1 is unaffected by tenant 0's quota exhaustion: admitted,
+    // and runs to completion even while tenant 0's long job holds the
+    // budget.
+    let (w3, h3) = slow_flow(10, 10);
+    let neighbor = svc
+        .submit(Submission::new(TenantId(1), w3).with_sink(h3.clone()))
+        .expect("other tenant admitted");
+    let nr = svc.wait(neighbor).expect("neighbor known");
+    assert!(nr.error.is_none() && !nr.cancelled);
+    assert_eq!(h3.total(), 10);
+
+    let lr = svc.wait(long).expect("long job known");
+    assert!(lr.error.is_none());
+    let qr = svc.wait(queued).expect("deferred job known");
+    assert!(qr.error.is_none() && !qr.cancelled, "admitted job must eventually run");
+    assert!(svc.ledger().peak() <= 3, "peak {} > 3", svc.ledger().peak());
+}
+
+/// Submitting the same plan twice with the same cache salt serves the
+/// second run from the fingerprint cache — same rows, zero workers.
+#[test]
+fn fingerprint_cache_hit_returns_identical_rows() {
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = 8;
+    let svc = EngineService::start(cfg);
+
+    let (w, h) = counting_flow(4000, false, 2);
+    let cold = svc
+        .run(
+            Submission::new(TenantId(0), w)
+                .with_sink(h.clone())
+                .with_config(Config::for_tests())
+                .cacheable(0xCAFE),
+        )
+        .expect("admission");
+    assert!(!cold.cache_hit);
+    assert!(cold.error.is_none());
+    let expected = result_rows(&cold.rows);
+    assert_eq!(expected, sorted_rows(&h));
+
+    // Different tenant, same structure + salt → served from cache.
+    let (w2, _h2) = counting_flow(4000, false, 2);
+    let warm = svc
+        .run(Submission::new(TenantId(7), w2).with_config(Config::for_tests()).cacheable(0xCAFE))
+        .expect("admission");
+    assert!(warm.cache_hit, "second identical plan must hit the cache");
+    assert_eq!(warm.workers_granted, 0, "a cache hit deploys no workers");
+    assert_eq!(result_rows(&warm.rows), expected, "cached rows diverge from cold run");
+
+    // A different salt (different captured constants) misses.
+    let (w3, _h3) = counting_flow(4000, false, 2);
+    let other = svc
+        .run(
+            Submission::new(TenantId(8), w3)
+                .with_config(Config::for_tests())
+                .cacheable(0xBEEF),
+        )
+        .expect("admission");
+    assert!(!other.cache_hit, "different salt must not collide");
+    let s = svc.stats();
+    assert_eq!(s.cache_hits, 1);
+    assert!(s.cache_misses >= 2);
+}
+
+/// An interactive submission arriving while a batch scan holds the
+/// whole budget preempts it (pause-fence, grant released), runs, and
+/// the batch job then resumes and still produces correct results.
+#[test]
+fn interactive_preempts_batch_and_batch_recovers() {
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = 4;
+    let svc = EngineService::start(cfg);
+
+    // Batch scan long enough (~300ms of per-tuple sleeps) to still be
+    // running when the interactive job arrives.
+    let (bw, bh) = slow_flow(300, 1000);
+    let batch = svc
+        .submit(Submission::new(TenantId(0), bw).with_sink(bh.clone()))
+        .expect("admission");
+
+    let (iw, ih) = counting_flow(2000, false, 2);
+    let interactive = svc
+        .submit(
+            Submission::new(TenantId(1), iw)
+                .with_sink(ih.clone())
+                .with_config(Config::for_tests())
+                .interactive(),
+        )
+        .expect("admission");
+
+    let ir = svc.wait(interactive).expect("interactive job known");
+    assert!(ir.error.is_none() && !ir.cancelled);
+    assert!(!sorted_rows(&ih).is_empty());
+
+    let br = svc.wait(batch).expect("batch job known");
+    assert!(br.error.is_none() && !br.cancelled);
+    assert_eq!(bh.total(), 300, "preempted+resumed batch lost tuples");
+    assert!(
+        br.preemptions >= 1,
+        "batch job should have been pause-preempted for the interactive tenant"
+    );
+    assert!(svc.ledger().peak() <= 4, "peak {} > 4", svc.ledger().peak());
+    assert!(svc.stats().preemptions >= 1);
+    assert!(svc.stats().resumes >= 1);
+}
+
+/// With an unbounded budget (max_workers = 0) everything runs at
+/// authored counts and the ledger just tracks usage.
+#[test]
+fn unbounded_budget_runs_all_at_authored_counts() {
+    let svc = EngineService::start(ServiceConfig::for_tests());
+    let mut ids = Vec::new();
+    for i in 0..6 {
+        let (w, h) = counting_flow(2000, i % 2 == 0, 2);
+        let id = svc
+            .submit(
+                Submission::new(TenantId(i as u64), w)
+                    .with_sink(h.clone())
+                    .with_config(Config::for_tests()),
+            )
+            .expect("admission");
+        ids.push((id, h));
+    }
+    for (id, h) in ids {
+        let r = svc.wait(id).expect("job known");
+        assert!(r.error.is_none() && !r.cancelled);
+        assert!(!sorted_rows(&h).is_empty());
+        // Authored counts: 2 + 2 + 2 + 1 workers.
+        assert_eq!(r.workers_granted, 7);
+    }
+    assert_eq!(svc.stats().capacity, 0);
+    assert!(svc.live_jobs() == 0);
+}
+
+/// Cancelling a queued job frees its quota slot; cancelling a running
+/// job tears it down and releases its grant for the next job.
+#[test]
+fn cancellation_releases_budget_and_quota() {
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = 3;
+    let svc = EngineService::start(cfg);
+
+    let (w0, h0) = slow_flow(300, 1000);
+    let running = svc
+        .submit(Submission::new(TenantId(0), w0).with_sink(h0))
+        .expect("admission");
+    let (w1, _h1) = slow_flow(10, 10);
+    let queued = svc
+        .submit(Submission::new(TenantId(1), w1))
+        .expect("admission");
+
+    assert!(svc.cancel(queued), "queued job cancellable");
+    let qr = svc.wait(queued).expect("known");
+    assert!(qr.cancelled);
+
+    assert!(svc.cancel(running), "running job cancellable");
+    let rr = svc.wait(running).expect("known");
+    assert!(rr.cancelled);
+    assert!(!svc.cancel(running), "double-cancel refused");
+    assert_eq!(svc.ledger().used(), 0, "cancelled grants must be released");
+
+    // Budget is genuinely free again.
+    let (w2, h2) = slow_flow(10, 10);
+    let r = svc
+        .run(Submission::new(TenantId(2), w2).with_sink(h2.clone()))
+        .expect("admission");
+    assert!(r.error.is_none() && !r.cancelled);
+    assert_eq!(h2.total(), 10);
+}
