@@ -16,12 +16,15 @@
 //! [`ResultCache`] maps fingerprint → a [`MatStore`] holding the
 //! completed job's sink rows — the same store the engine uses for
 //! materialized links, reused across workflows. A hit returns the rows
-//! without deploying a single worker.
+//! without deploying a single worker. The cache is bounded (entry and
+//! byte caps, least-recently-used eviction) so a long-running service
+//! does not grow without bound per distinct plan.
 
 use crate::engine::dag::Workflow;
 use crate::engine::partitioner::PartitionScheme;
 use crate::maestro::materialize::MatStore;
 use crate::tuple::{mix64, Tuple};
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -76,14 +79,42 @@ fn scheme_fingerprint(s: &PartitionScheme) -> u64 {
     }
 }
 
+/// Default [`ResultCache`] entry cap.
+pub const DEFAULT_CACHE_ENTRIES: usize = 1024;
+/// Default [`ResultCache`] byte cap (64 MiB of cached sink rows).
+pub const DEFAULT_CACHE_BYTES: u64 = 64 << 20;
+
+struct CacheEntry {
+    store: MatStore,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<u64, CacheEntry>,
+    bytes: u64,
+    tick: u64,
+}
+
 /// Fingerprint-keyed store of completed sink-row sets, shared across
 /// tenants. Entries are whole-result only — a job that failed, was
-/// cancelled, or aborted never lands here.
-#[derive(Default)]
+/// cancelled, or aborted never lands here — and immutable once
+/// written: [`insert`](Self::insert) is strictly first-writer-wins.
+/// Bounded by an entry cap and a byte cap (0 = unbounded); when either
+/// overflows, the least-recently-used entries are evicted.
 pub struct ResultCache {
-    entries: Mutex<HashMap<u64, MatStore>>,
+    inner: Mutex<CacheInner>,
+    max_entries: usize,
+    max_bytes: u64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for ResultCache {
+    fn default() -> ResultCache {
+        ResultCache::with_limits(DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES)
+    }
 }
 
 impl ResultCache {
@@ -91,13 +122,30 @@ impl ResultCache {
         ResultCache::default()
     }
 
-    /// Rows for `fp`, if cached. Counts a hit or a miss.
+    /// A cache bounded to `max_entries` entries and `max_bytes` bytes
+    /// of sink rows (0 = unbounded for either).
+    pub fn with_limits(max_entries: usize, max_bytes: u64) -> ResultCache {
+        ResultCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), bytes: 0, tick: 0 }),
+            max_entries,
+            max_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Rows for `fp`, if cached. Counts a hit or a miss; a hit
+    /// refreshes the entry's eviction age.
     pub fn lookup(&self, fp: u64) -> Option<Vec<Tuple>> {
-        let entries = self.entries.lock().unwrap();
-        match entries.get(&fp) {
-            Some(store) => {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&fp) {
+            Some(entry) => {
+                entry.last_used = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(store.snapshot())
+                Some(entry.store.snapshot())
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -106,11 +154,41 @@ impl ResultCache {
         }
     }
 
-    /// Store a completed job's sink rows under `fp` (first writer
-    /// wins — concurrent identical runs insert identical rows anyway).
+    /// Store a completed job's sink rows under `fp`. Strictly first
+    /// writer wins: an occupied entry is left untouched (two identical
+    /// cold runs completing concurrently must not double the rows).
+    /// Rows larger than the whole byte cap are not cached at all.
     pub fn insert(&self, fp: u64, rows: Vec<Tuple>) {
-        let mut entries = self.entries.lock().unwrap();
-        entries.entry(fp).or_default().append_rows(rows);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let Entry::Vacant(slot) = inner.map.entry(fp) else { return };
+        let store = MatStore::new();
+        store.append_rows(rows);
+        let bytes = store.bytes();
+        if self.max_bytes > 0 && bytes > self.max_bytes {
+            return;
+        }
+        slot.insert(CacheEntry { store, bytes, last_used: tick });
+        inner.bytes += bytes;
+        // Evict least-recently-used entries until within bounds; the
+        // just-inserted entry carries the freshest tick and survives.
+        while (self.max_entries > 0 && inner.map.len() > self.max_entries)
+            || (self.max_bytes > 0 && inner.bytes > self.max_bytes)
+        {
+            let Some(&oldest) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(fp, _)| fp)
+            else {
+                break;
+            };
+            if let Some(evicted) = inner.map.remove(&oldest) {
+                inner.bytes -= evicted.bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     pub fn hits(&self) -> u64 {
@@ -121,8 +199,18 @@ impl ResultCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries dropped to keep the cache within its bounds.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Bytes of sink rows currently held.
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -192,5 +280,56 @@ mod tests {
         assert_eq!(c.lookup(42).unwrap().len(), 1);
         assert_eq!(c.hits(), 2);
         assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn cache_insert_is_first_writer_wins() {
+        let c = ResultCache::new();
+        let row = || Tuple::new(vec![crate::tuple::Value::Int(9)]);
+        c.insert(42, vec![row()]);
+        // A second identical cold run completing concurrently must not
+        // double the entry's rows.
+        c.insert(42, vec![row()]);
+        assert_eq!(c.lookup(42).expect("hit").len(), 1, "occupied entry must stay untouched");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_past_entry_cap() {
+        let c = ResultCache::with_limits(2, 0);
+        let row = || Tuple::new(vec![crate::tuple::Value::Int(1)]);
+        c.insert(1, vec![row()]);
+        c.insert(2, vec![row()]);
+        // Touch 1 so 2 is the LRU when 3 overflows the cap.
+        assert!(c.lookup(1).is_some());
+        c.insert(3, vec![row()]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.lookup(2).is_none(), "LRU entry must be evicted");
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(3).is_some());
+    }
+
+    #[test]
+    fn cache_byte_cap_bounds_and_rejects_oversize() {
+        let row = || Tuple::new(vec![crate::tuple::Value::Int(1)]);
+        let probe = ResultCache::with_limits(0, 0);
+        probe.insert(0, vec![row()]);
+        let per_entry = probe.bytes();
+        assert!(per_entry > 0);
+
+        // Cap fits exactly two entries: a third insert evicts the LRU.
+        let c = ResultCache::with_limits(0, 2 * per_entry);
+        c.insert(1, vec![row()]);
+        c.insert(2, vec![row()]);
+        c.insert(3, vec![row()]);
+        assert_eq!(c.len(), 2);
+        assert!(c.bytes() <= 2 * per_entry);
+        assert!(c.lookup(1).is_none(), "oldest entry evicted by byte cap");
+
+        // A result bigger than the whole cap is not cached at all.
+        let tiny = ResultCache::with_limits(0, 1);
+        tiny.insert(9, vec![row()]);
+        assert!(tiny.is_empty());
     }
 }

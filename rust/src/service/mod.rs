@@ -36,8 +36,11 @@
 //! 4. **Completion** — a per-job waiter thread turns
 //!    [`Execution::on_done`] into a service-loop message: the grant is
 //!    released, sink rows are collected (and cached when the
-//!    submission opted in), waiters are fulfilled, and the queue
-//!    drains again.
+//!    submission opted in *and* carried a result sink), waiters are
+//!    fulfilled, and the queue drains again. Results are
+//!    deliver-once: collecting one evicts the job's entry, so neither
+//!    the jobs map nor the (entry/byte-bounded) result cache grows
+//!    without bound over a service's lifetime.
 //!
 //! Isolation: each job is its own `Execution` (own coordinator, own
 //! workers, own channels), so a panicking or quota-exhausted tenant
@@ -112,6 +115,9 @@ pub struct Submission {
     /// Opt-in result caching: the salt must encode everything the
     /// operator closures capture (predicate constants, dataset
     /// version) — the structural fingerprint cannot see inside them.
+    /// Only a submission with a [`result_sink`](Self::result_sink)
+    /// *populates* the cache (sink rows are what gets stored); a
+    /// sink-less cacheable submission can still be served from it.
     pub cache_salt: Option<u64>,
     /// Per-job engine config override (fault plans, batch size). The
     /// service's global budget always comes from its own config, never
@@ -319,7 +325,9 @@ impl EngineService {
     }
 
     /// Block until job `id` reaches a terminal state; `None` for an
-    /// unknown id.
+    /// unknown id. Results are delivered **once**: collecting a
+    /// terminal result evicts the job (rows included) from the
+    /// service, so a second wait on the same id returns `None`.
     pub fn wait(&self, id: JobId) -> Option<WorkflowResult> {
         let (reply, rx) = channel();
         self.tx.send(Msg::Await { id, reply }).ok()?;
@@ -443,6 +451,17 @@ enum JobState {
     Finished(WorkflowResult),
 }
 
+/// Outcome of one preempted-job resume attempt — the drain sweep
+/// rotates past a tenant-capped job but stops on a full budget.
+enum Resume {
+    /// Resumed (or the job is gone): drop it from the preempted queue.
+    Done,
+    /// Blocked only by its own tenant's worker allowance.
+    TenantCapped,
+    /// Blocked by the global budget.
+    BudgetFull,
+}
+
 struct Job {
     tenant: TenantId,
     priority: Priority,
@@ -501,17 +520,30 @@ impl ServiceLoop {
                     let _ = reply.send(self.submit(*sub));
                     self.drain();
                 }
-                Ok(Msg::Await { id, reply }) => match self.jobs.get_mut(&id) {
-                    Some(job) => match &job.state {
-                        JobState::Finished(res) => {
-                            let _ = reply.send(Some(res.clone()));
+                Ok(Msg::Await { id, reply }) => {
+                    // Deliver-once: handing out a terminal result also
+                    // evicts the job (and its row vector) from the
+                    // map, so a long-running service does not retain
+                    // every result ever produced.
+                    let finished = matches!(
+                        self.jobs.get(&id).map(|j| &j.state),
+                        Some(JobState::Finished(_))
+                    );
+                    if finished {
+                        if let Some(job) = self.jobs.remove(&id) {
+                            if let JobState::Finished(res) = job.state {
+                                let _ = reply.send(Some(res));
+                            }
                         }
-                        _ => job.waiters.push(reply),
-                    },
-                    None => {
-                        let _ = reply.send(None);
+                    } else {
+                        match self.jobs.get_mut(&id) {
+                            Some(job) => job.waiters.push(reply),
+                            None => {
+                                let _ = reply.send(None);
+                            }
+                        }
                     }
-                },
+                }
                 Ok(Msg::Cancel { id, reply }) => {
                     let _ = reply.send(self.cancel(id));
                     self.drain();
@@ -590,6 +622,11 @@ impl ServiceLoop {
             }
             self.stats.cache_misses += 1;
         }
+        // Cache *writes* need the job's rows, which only a result sink
+        // captures — a sink-less submission may still hit the cache
+        // above but must never populate it (it would store an empty
+        // row set and poison every later hit).
+        let fingerprint = fingerprint.filter(|_| sub.result_sink.is_some());
 
         let quota = self.cfg.quota_of(sub.tenant);
         self.tenants.entry(sub.tenant).or_insert_with(|| TenantState {
@@ -663,11 +700,22 @@ impl ServiceLoop {
     /// Resume preempted jobs, then start queued jobs, until the budget
     /// or the queue runs dry.
     fn drain(&mut self) {
-        while let Some(&id) = self.preempted.front() {
-            if !self.try_resume_preempted(id) {
-                break;
+        // Oldest-first resume sweep. A job blocked only by its *own*
+        // tenant's worker allowance rotates to the back — other
+        // tenants' parked jobs behind it must not starve; only the
+        // *global* budget running dry stops the sweep.
+        let mut left = self.preempted.len();
+        while left > 0 {
+            left -= 1;
+            let Some(id) = self.preempted.pop_front() else { break };
+            match self.try_resume_preempted(id) {
+                Resume::Done => {}
+                Resume::TenantCapped => self.preempted.push_back(id),
+                Resume::BudgetFull => {
+                    self.preempted.push_front(id);
+                    break;
+                }
             }
-            self.preempted.pop_front();
         }
         loop {
             // Eligibility covers every *per-tenant* gate (run cap,
@@ -701,23 +749,23 @@ impl ServiceLoop {
         }
     }
 
-    fn try_resume_preempted(&mut self, id: JobId) -> bool {
-        let Some(job) = self.jobs.get_mut(&id) else { return true };
-        let JobState::Running(run) = &mut job.state else { return true };
+    fn try_resume_preempted(&mut self, id: JobId) -> Resume {
+        let Some(job) = self.jobs.get_mut(&id) else { return Resume::Done };
+        let JobState::Running(run) = &mut job.state else { return Resume::Done };
         let footprint: usize = run.counts.iter().sum();
         let quota = self.cfg.quota_of(job.tenant);
         let allowance = quota.worker_allowance(self.cfg.engine.max_workers);
         if self.ledger.tenant_used(job.tenant) + footprint > allowance {
-            return false;
+            return Resume::TenantCapped;
         }
         if !self.ledger.try_acquire(job.tenant, footprint) {
-            return false;
+            return Resume::BudgetFull;
         }
         run.exec.resume();
         run.granted = footprint;
         run.preempted = false;
         self.stats.resumes += 1;
-        true
+        Resume::Done
     }
 
     fn try_start(&mut self, q: &QueuedJob) -> bool {
@@ -924,6 +972,17 @@ impl ServiceLoop {
         let cur = run.counts[op];
         if workers > cur {
             let extra = workers - cur;
+            // A scale-up is bounded by the tenant's worker share just
+            // like admission and resume — a tenant admitted at its
+            // share must not grow past it through scale_job.
+            let allowance = self
+                .cfg
+                .quota_of(tenant)
+                .worker_allowance(self.cfg.engine.max_workers)
+                .saturating_sub(self.ledger.tenant_used(tenant));
+            if extra > allowance {
+                return false;
+            }
             if !self.ledger.try_acquire(tenant, extra) {
                 return false;
             }
@@ -973,8 +1032,17 @@ impl ServiceLoop {
                         extra += n - run.counts[op];
                     }
                 }
-                if extra > 0 && !self.ledger.try_acquire(tenant, extra) {
-                    return false;
+                if extra > 0 {
+                    // Same tenant-share bound as scale_job: Replan
+                    // growth must not carry a tenant past its share.
+                    let allowance = self
+                        .cfg
+                        .quota_of(tenant)
+                        .worker_allowance(self.cfg.engine.max_workers)
+                        .saturating_sub(self.ledger.tenant_used(tenant));
+                    if extra > allowance || !self.ledger.try_acquire(tenant, extra) {
+                        return false;
+                    }
                 }
                 let outcome = run.exec.migrate(delta.clone());
                 if !outcome.applied {
@@ -1126,10 +1194,17 @@ impl ServiceLoop {
         }
         self.live_jobs.fetch_sub(1, Ordering::Relaxed);
         let job = self.jobs.get_mut(&id).expect("job still present");
-        for w in job.waiters.drain(..) {
-            let _ = w.send(Some(result.clone()));
+        if job.waiters.is_empty() {
+            // Parked until the first wait collects (and evicts) it.
+            job.state = JobState::Finished(result);
+        } else {
+            // Deliver-once: waiters already queued get the result now
+            // and the job's entry (with its rows) is dropped outright.
+            for w in job.waiters.drain(..) {
+                let _ = w.send(Some(result.clone()));
+            }
+            self.jobs.remove(&id);
         }
-        job.state = JobState::Finished(result);
     }
 
     fn shutdown(&mut self) {

@@ -439,3 +439,95 @@ fn cancellation_releases_budget_and_quota() {
     assert!(r.error.is_none() && !r.cancelled);
     assert_eq!(h2.total(), 10);
 }
+
+/// A cacheable submission *without* a result sink runs but must never
+/// populate the fingerprint cache — its row set is empty, and storing
+/// it would silently serve zero rows to every later identical
+/// submission that does carry a sink.
+#[test]
+fn sinkless_cacheable_submission_does_not_poison_cache() {
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = 8;
+    let svc = EngineService::start(cfg);
+
+    // Cold, cacheable, no sink: completes with no rows, caches nothing.
+    let (w0, _h0) = counting_flow(2000, false, 2);
+    let bare = svc
+        .run(Submission::new(TenantId(0), w0).with_config(Config::for_tests()).cacheable(0xD1CE))
+        .expect("admission");
+    assert!(!bare.cache_hit);
+    assert!(bare.rows.is_empty(), "no sink, no rows");
+    assert!(svc.cache().is_empty(), "a sink-less job must not populate the cache");
+
+    // Same plan + salt, now with a sink: must be a cold run with real
+    // rows, not a hit serving the sink-less job's empty set.
+    let (w1, h1) = counting_flow(2000, false, 2);
+    let cold = svc
+        .run(
+            Submission::new(TenantId(1), w1)
+                .with_sink(h1.clone())
+                .with_config(Config::for_tests())
+                .cacheable(0xD1CE),
+        )
+        .expect("admission");
+    assert!(!cold.cache_hit, "empty cache entry must not exist");
+    let expected = result_rows(&cold.rows);
+    assert!(!expected.is_empty());
+
+    // Now the cache is populated; a third identical submission hits
+    // and gets the full row set.
+    let (w2, _h2) = counting_flow(2000, false, 2);
+    let warm = svc
+        .run(Submission::new(TenantId(2), w2).with_config(Config::for_tests()).cacheable(0xD1CE))
+        .expect("admission");
+    assert!(warm.cache_hit);
+    assert_eq!(result_rows(&warm.rows), expected, "hit must serve the cold run's rows");
+}
+
+/// Growing a running job past its tenant's worker share — via
+/// `scale_job` or a `Replan` migration — is refused: the share bounds
+/// a tenant's footprint for its whole lifetime, not just at admission.
+#[test]
+fn scale_up_cannot_exceed_tenant_worker_share() {
+    use texera_amber::engine::PlanDelta;
+
+    let mut cfg = ServiceConfig::for_tests();
+    cfg.engine.max_workers = 8;
+    // floor(0.375 * 8) = 3 = the 3-op job's minimum footprint, so the
+    // job admits exactly at its allowance with zero headroom.
+    cfg.default_quota = TenantQuota { max_worker_share: 0.375, ..TenantQuota::default() };
+    let svc = EngineService::start(cfg);
+
+    let (w, h) = slow_flow(500, 2000);
+    let id = svc
+        .submit(Submission::new(TenantId(0), w).with_sink(h))
+        .expect("admission");
+    assert!(
+        !svc.scale_job(id, 1, 2),
+        "scale-up past the tenant worker share must be refused"
+    );
+    assert!(
+        !svc.migrate_job(id, PlanDelta::Replan { workers: vec![(1, 2)] }),
+        "Replan growth past the tenant worker share must be refused"
+    );
+    assert_eq!(svc.ledger().tenant_used(TenantId(0)), 3, "footprint unchanged");
+    svc.cancel(id);
+    let r = svc.wait(id).expect("known");
+    assert!(r.cancelled);
+}
+
+/// Results are deliver-once: the first `wait` hands out the rows and
+/// evicts the job's entry, so the service does not retain every result
+/// forever; a second `wait` on the same id reports unknown.
+#[test]
+fn wait_delivers_once_and_evicts_the_job() {
+    let svc = EngineService::start(ServiceConfig::for_tests());
+    let (w, h) = counting_flow(500, false, 1);
+    let id = svc
+        .submit(Submission::new(TenantId(0), w).with_sink(h))
+        .expect("admission");
+    let r = svc.wait(id).expect("first wait delivers");
+    assert!(r.error.is_none() && !r.rows.is_empty());
+    assert!(svc.wait(id).is_none(), "second wait must find the job evicted");
+    assert!(!svc.cancel(id), "evicted job is unknown to cancel");
+}
