@@ -23,7 +23,11 @@
 //! on a source-heavy skewed workflow; the `migration` section measures
 //! throughput before/during/after each live plan-migration delta kind
 //! (repartition swap, mat insert, mat insert+remove, worker re-plan)
-//! plus each delta's fence duration.
+//! plus each delta's fence duration; the `spill` section measures
+//! group-by throughput as resident state grows past the memory budget
+//! (state at 0.5x/2x/8x of the budget, budgets derived from the
+//! unbounded run's high-water) plus recovery time from an automatic
+//! checkpoint whose manifest includes spilled partitions.
 
 use std::time::{Duration, Instant};
 
@@ -58,6 +62,7 @@ fn main() {
     let migration = migration_section(smoke);
     let maestro = maestro_section(smoke);
     let faults = faults_section(smoke);
+    let spill = spill_section(smoke);
     let service = service_section(smoke);
     if smoke {
         // Smoke totals are not trajectory-quality numbers: exercise
@@ -76,6 +81,7 @@ fn main() {
             &lanes,
             &maestro,
             &faults,
+            &spill,
             &service,
         );
         routing_cost();
@@ -1001,6 +1007,144 @@ fn faults_section(smoke: bool) -> FaultsBench {
     out
 }
 
+/// One cell of the spill state-vs-budget sweep.
+struct SpillRow {
+    /// Resident state expressed as a multiple of the memory budget
+    /// ("0.5x" = state fits in half the budget, no spilling).
+    ratio: &'static str,
+    budget_bytes: u64,
+    tps: f64,
+    bytes_spilled: u64,
+    bytes_read_back: u64,
+}
+
+struct SpillBench {
+    rows: usize,
+    /// Budget high-water of the unbounded run — the resident state the
+    /// sweep's budgets are derived from.
+    resident_bytes: u64,
+    unbounded_tps: f64,
+    sweep: Vec<SpillRow>,
+    /// Supervised crash mid-run under the tightest budget: recovery
+    /// time from the latest automatic checkpoint, whose manifest
+    /// replays the spilled partitions byte-exactly.
+    recovery_ms: f64,
+    recovery_bytes_spilled: u64,
+}
+
+/// One scan(2)→gb_partial(2)→gb_final(2)→sink run over `total` rows
+/// with `keys` distinct groups (resident state scales with `keys`)
+/// under `memory_budget_bytes` (0 = unbounded). `ft_log` turns on
+/// supervision so an injected fault recovers instead of aborting.
+fn spill_run(
+    total: usize,
+    keys: usize,
+    memory_budget_bytes: u64,
+    ft_log: bool,
+    plan: FaultPlan,
+    checkpoint_interval_ms: u64,
+    heartbeat_timeout_ms: u64,
+) -> (f64, texera_amber::engine::ExecSummary) {
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..total)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| Tuple::new(vec![Value::Int((i % keys) as i64), Value::Int(i as i64 % 7)]))
+            .collect();
+        Box::new(VecSource::new(rows)) as Box<dyn TupleSource>
+    }));
+    let partial = w.add(OpSpec::unary("gb_partial", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(GroupByPartial::new(0, 1, AggKind::Sum))
+    }));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    let cfg = Config {
+        memory_budget_bytes,
+        ft_log,
+        heartbeat_timeout_ms,
+        checkpoint_interval_ms,
+        recovery_backoff_ms: 5,
+        fault_plan: plan,
+        ..Config::default()
+    };
+    let t0 = Instant::now();
+    let summary = Execution::start(w, cfg).join();
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    (total as f64 / secs, summary)
+}
+
+/// Out-of-core cost numbers: group-by throughput as resident state
+/// grows past the memory budget (state at 0.5x / 2x / 8x of budget —
+/// budgets derived from the unbounded run's measured high-water), and
+/// recovery time from an automatic checkpoint whose manifest includes
+/// spilled partitions.
+fn spill_section(smoke: bool) -> SpillBench {
+    println!("--- spill: throughput vs memory budget, recovery with spilled state ---");
+    let rows = if smoke { 60_000 } else { 400_000 };
+    let keys = rows / 4;
+    // Unbounded run: measures resident state (budget high-water) and
+    // the no-spill baseline throughput.
+    let (unbounded_tps, base) = spill_run(rows, keys, 0, false, FaultPlan::default(), 0, 0);
+    let resident = base.spill.budget_high_water.max(1);
+    let mut sweep = Vec::new();
+    for (ratio, budget) in [
+        ("0.5x", resident * 2), // state is half the budget: stays resident
+        ("2x", resident / 2),
+        ("8x", resident / 8),
+    ] {
+        let budget = budget.max(1);
+        let (tps, s) = spill_run(rows, keys, budget, false, FaultPlan::default(), 0, 0);
+        println!(
+            "  state {ratio:>4} of budget ({budget:>9} B): {tps:>9.0} t/s, \
+             spilled {} B, read back {} B",
+            s.spill.bytes_spilled, s.spill.bytes_read_back
+        );
+        sweep.push(SpillRow {
+            ratio,
+            budget_bytes: budget,
+            tps,
+            bytes_spilled: s.spill.bytes_spilled,
+            bytes_read_back: s.spill.bytes_read_back,
+        });
+    }
+    // Crash at rows/8 under the tightest budget with automatic
+    // checkpoints on: recovery replays the checkpoint's spill-file
+    // manifest on top of the in-memory snapshot.
+    let mut plan = FaultPlan::default();
+    plan.push(Fault::panic_at(WorkerId::new(1, 0), (rows / 8) as u64));
+    let (_, rec) = spill_run(rows, keys, (resident / 8).max(1), true, plan, 25, 150);
+    let out = SpillBench {
+        rows,
+        resident_bytes: resident,
+        unbounded_tps,
+        sweep,
+        recovery_ms: rec.supervision.recovery_ms_max,
+        recovery_bytes_spilled: rec.spill.bytes_spilled,
+    };
+    println!(
+        "  unbounded: {:.0} t/s, resident state {} B",
+        out.unbounded_tps, out.resident_bytes
+    );
+    println!(
+        "  recovery (8x state, checkpoint 25 ms): {:.1} ms, {} B spilled\n",
+        out.recovery_ms, out.recovery_bytes_spilled
+    );
+    out
+}
+
 /// One cell of the service concurrency sweep.
 struct ServiceConcRow {
     concurrency: usize,
@@ -1164,6 +1308,7 @@ fn write_bench_json(
     lanes: &LanesBench,
     maestro: &MaestroBench,
     faults: &FaultsBench,
+    spill: &SpillBench,
     service: &ServiceBench,
 ) {
     let mut s = String::new();
@@ -1334,6 +1479,32 @@ fn write_bench_json(
         faults.hb_off_tps,
         faults.hb_on_tps,
         (1.0 - faults.hb_on_tps / faults.hb_off_tps) * 100.0
+    ));
+    s.push_str("  \"spill\": {\n");
+    s.push_str(
+        "    \"pipeline\": \"scan(2)->gb_partial(2)->gb_final(2)->sink, rows/4 distinct keys; budgets derived from the unbounded run's high-water\",\n",
+    );
+    s.push_str(&format!(
+        "    \"rows\": {}, \"resident_state_bytes\": {}, \"unbounded_tuples_per_sec\": {:.0},\n",
+        spill.rows, spill.resident_bytes, spill.unbounded_tps
+    ));
+    s.push_str("    \"state_vs_budget\": [\n");
+    for (i, r) in spill.sweep.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"state_over_budget\": \"{}\", \"budget_bytes\": {}, \"tuples_per_sec\": {:.0}, \
+             \"bytes_spilled\": {}, \"bytes_read_back\": {}}}{}\n",
+            r.ratio,
+            r.budget_bytes,
+            r.tps,
+            r.bytes_spilled,
+            r.bytes_read_back,
+            if i + 1 == spill.sweep.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("    ],\n");
+    s.push_str(&format!(
+        "    \"recovery_with_spilled_state\": {{\"recovery_ms\": {:.1}, \"bytes_spilled\": {}}}\n  }},\n",
+        spill.recovery_ms, spill.recovery_bytes_spilled
     ));
     s.push_str("  \"service\": {\n");
     s.push_str(

@@ -76,6 +76,20 @@ pub struct Config {
     /// equivalence property tests compare against; results are
     /// identical either way.
     pub columnar: bool,
+    /// Out-of-core memory budget in bytes, shared by every operator of
+    /// one execution (`0` = unbounded, the default — nothing ever
+    /// spills). Past the budget the stateful operators (hash join,
+    /// group-by, sort) and [`crate::maestro::materialize::MatStore`]
+    /// spill partitions/runs/chunks to the execution's temp directory
+    /// in the columnar frame format of [`crate::engine::spill`];
+    /// results are byte-identical either way (the out-of-core
+    /// equivalence suite pins this).
+    pub memory_budget_bytes: u64,
+    /// Base directory for spill files (empty = the system temp dir).
+    /// Each execution creates one subdirectory lazily on first spill
+    /// and removes it recursively at teardown — including cancel,
+    /// abort and panic paths.
+    pub spill_dir: String,
 
     // ---- Reshape (Ch. 3) ----
     /// Absolute-load threshold η of skew test inequality (3.1).
@@ -126,6 +140,13 @@ pub struct Config {
     pub maestro_tuple_cost: f64,
     /// Cost-model constant: per-byte materialization write+read cost.
     pub maestro_mat_byte_cost: f64,
+    /// Cost-model constant: per-byte spill write + read-back cost
+    /// applied to state and materialization volume past
+    /// [`Config::memory_budget_bytes`]. Starts as a rough
+    /// disk-vs-memory multiple of `maestro_mat_byte_cost`; the
+    /// scheduler re-calibrates it from observed [`crate::metrics::SpillStats`]
+    /// bandwidth between region activations.
+    pub maestro_spill_byte_cost: f64,
     /// Per-region worker budget for **elastic region scheduling**: the
     /// scheduler assigns each region's operators worker counts summing
     /// to at most this many workers, and re-plans the counts from
@@ -167,6 +188,8 @@ impl Default for Config {
             recovery_backoff_ms: 20,
             fault_plan: crate::engine::FaultPlan::default(),
             columnar: true,
+            memory_budget_bytes: 0,
+            spill_dir: String::new(),
             reshape_eta: 100.0,
             reshape_tau: 100.0,
             reshape_dynamic_tau: false,
@@ -184,6 +207,7 @@ impl Default for Config {
             autoscale_sustain_ticks: 5,
             maestro_tuple_cost: 1.0,
             maestro_mat_byte_cost: 0.01,
+            maestro_spill_byte_cost: 0.05,
             max_workers: 0,
             seed: 0xA3BE12,
             artifacts_dir: "artifacts".to_string(),
@@ -236,5 +260,9 @@ mod tests {
         assert_eq!(c.checkpoint_interval_ms, 0);
         assert!(c.fault_plan.is_empty());
         assert!(c.recovery_max_retries > 0);
+        // Out-of-core is opt-in too: unbounded budget by default, so
+        // no operator ever spills and no temp directory is created.
+        assert_eq!(c.memory_budget_bytes, 0);
+        assert!(c.spill_dir.is_empty());
     }
 }

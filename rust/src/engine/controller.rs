@@ -95,6 +95,10 @@ pub struct ExecSummary {
     /// Supervision counters: failures detected (and how), recovery
     /// cycles and their cost, automatic checkpoint cadence/sizes.
     pub supervision: SupervisionStats,
+    /// Out-of-core counters: bytes spilled/read back, partitions,
+    /// recursion depth, budget high-water
+    /// ([`crate::engine::spill`]).
+    pub spill: crate::metrics::SpillStats,
     /// Structured abnormal-termination cause. `None` for a clean run;
     /// `Some` when supervision aborted the execution (recovery
     /// unavailable or exhausted) — the run still terminated cleanly
@@ -183,6 +187,13 @@ pub struct Execution {
     cmd_tx: Sender<CoordMsg>,
     coord: Option<JoinHandle<()>>,
     started: Instant,
+    /// The execution's shared out-of-core context. Held here (as well
+    /// as by the coordinator and every worker) so live spill stats are
+    /// readable without a coordinator round-trip; the spill directory
+    /// is removed when the last clone drops — i.e. after `Drop` has
+    /// shut down and joined the coordinator (which joins the workers),
+    /// on *every* teardown path.
+    spill: crate::engine::spill::SpillCtx,
 }
 
 struct WorkerHandle {
@@ -343,6 +354,11 @@ struct Coordinator {
     supervision: SupervisionStats,
     exec_error: Option<ExecError>,
 
+    // Out-of-core (engine::spill): the execution-shared budget,
+    // counters and spill directory, cloned into every spawned worker's
+    // context (including scale spawns and recovery respawns).
+    spill: crate::engine::spill::SpillCtx,
+
     // Plugin (Reshape).
     plugin: Option<Box<dyn CoordPlugin>>,
     next_tick: Instant,
@@ -425,6 +441,15 @@ impl Execution {
         let (mut checkpoint, log) = recovery
             .map(|(c, l)| (Some(c), l))
             .unwrap_or((None, Vec::new()));
+
+        // One out-of-core context per execution: shared budget, spill
+        // counters and (lazily created) spill directory. NOTE: a
+        // checkpoint's spill manifests reference files in the spill
+        // directory of the execution that *wrote* them — valid for
+        // in-process recovery (the coordinator's redeploy shares this
+        // context) but not across a driver-level `recover` once the
+        // original execution has been dropped.
+        let spill = crate::engine::spill::SpillCtx::new(&config);
 
         // --- Deploy the actor DAG (§2.3.2). ---
         // 1. Mailboxes for every worker.
@@ -516,6 +541,7 @@ impl Execution {
                     start_paused: false,
                     columnar: config.columnar,
                     fault_plan: config.fault_plan.clone(),
+                    spill: spill.clone(),
                 };
                 let builder = op.builder.clone();
                 let workers = op.workers;
@@ -611,6 +637,7 @@ impl Execution {
             recovery_epoch: 0,
             supervision: SupervisionStats::default(),
             exec_error: None,
+            spill: spill.clone(),
             plugin,
             next_tick: started + period,
             shutdown: false,
@@ -619,7 +646,7 @@ impl Execution {
             .name("coordinator".into())
             .spawn(move || coord.run())
             .expect("spawn coordinator");
-        Execution { cmd_tx, coord: Some(coord_handle), started }
+        Execution { cmd_tx, coord: Some(coord_handle), started, spill }
     }
 
     fn cmd(&self, c: Command) {
@@ -801,6 +828,20 @@ impl Execution {
     pub fn elapsed(&self) -> Duration {
         self.started.elapsed()
     }
+
+    /// Live out-of-core counters (bytes spilled/read back, partitions,
+    /// budget high-water). Readable at any time without a coordinator
+    /// round-trip — Maestro's scheduler calibrates its spill-bandwidth
+    /// cost constant from these between region activations.
+    pub fn spill_stats(&self) -> crate::metrics::SpillStats {
+        self.spill.counters.snapshot(&self.spill.budget)
+    }
+
+    /// The execution's spill directory, if anything was spilled (the
+    /// cleanup regression tests assert it disappears at teardown).
+    pub fn spill_dir(&self) -> Option<std::path::PathBuf> {
+        self.spill.dir_path()
+    }
 }
 
 impl Drop for Execution {
@@ -931,6 +972,7 @@ impl Coordinator {
             first_output: self.first_output.clone(),
             produced_by_op,
             supervision: self.supervision.clone(),
+            spill: self.spill.counters.snapshot(&self.spill.budget),
             error: self.exec_error.clone(),
         }
     }
@@ -2789,6 +2831,7 @@ impl Coordinator {
             start_paused: true,
             columnar: self.config.columnar,
             fault_plan: self.config.fault_plan.clone(),
+            spill: self.spill.clone(),
         };
         let builder = spec.builder.clone();
         let thread = std::thread::Builder::new()
@@ -3086,6 +3129,7 @@ impl Coordinator {
             start_paused: true,
             columnar: self.config.columnar,
             fault_plan: self.config.fault_plan.clone(),
+            spill: self.spill.clone(),
         };
         let builder = spec.builder.clone();
         let thread = std::thread::Builder::new()

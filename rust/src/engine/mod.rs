@@ -68,6 +68,7 @@ pub mod controller;
 pub mod fault;
 pub mod migrate;
 pub mod scale;
+pub mod spill;
 
 pub use controller::{Execution, ExecSummary};
 pub use fault::{ExecError, Fault, FaultKind, FaultPlan};
@@ -77,3 +78,4 @@ pub use dag::{Edge, OpSpec, Workflow};
 pub use message::{ControlMessage, DataEvent, WorkerEvent, WorkerId};
 pub use operator::{Emitter, OpState, Operator};
 pub use partitioner::{MitigationRoute, PartitionScheme, ShareMode};
+pub use spill::{MemLease, MemoryBudget, SpillCtx, SpillFile, SpillReader, SpillSlot};

@@ -20,6 +20,7 @@
 //! state migration — extraction of a key subset for SBK, or full
 //! replication for SBR on immutable-state phases.
 
+use crate::engine::spill::{SpillCtx, SpillSlot};
 use crate::tuple::{Tuple, TupleBatch};
 use std::collections::HashMap;
 
@@ -35,11 +36,21 @@ pub struct OpState {
     pub keyed_aggs: HashMap<u64, Vec<f64>>,
     /// Opaque counters (operator-specific).
     pub counters: HashMap<String, i64>,
+    /// Spill-file manifest for out-of-core state
+    /// ([`crate::engine::spill`]): checkpoints carry the slots instead
+    /// of the spilled bytes, and recovery reopens the files byte-exactly.
+    /// Migration/scale extraction paths surrender *unspilled* state
+    /// (operators read partitions back before extracting), so this is
+    /// populated only by [`Operator::snapshot`].
+    pub spill: Vec<SpillSlot>,
 }
 
 impl OpState {
     pub fn is_empty(&self) -> bool {
-        self.keyed_tuples.is_empty() && self.keyed_aggs.is_empty() && self.counters.is_empty()
+        self.keyed_tuples.is_empty()
+            && self.keyed_aggs.is_empty()
+            && self.counters.is_empty()
+            && self.spill.is_empty()
     }
 
     /// Approximate size in tuples (for state-migration-time modeling).
@@ -65,6 +76,10 @@ impl OpState {
         for (k, v) in self.counters {
             shards[0].counters.insert(k, v);
         }
+        // Spill manifests are not key-addressable from the outside;
+        // extraction paths unspill before extracting, so slots here can
+        // only come from a snapshot — keep them with the counters.
+        shards[0].spill = self.spill;
         shards
     }
 
@@ -84,6 +99,7 @@ impl OpState {
         for (k, v) in other.counters {
             *self.counters.entry(k).or_insert(0) += v;
         }
+        self.spill.extend(other.spill);
     }
 }
 
@@ -287,6 +303,14 @@ pub trait Operator: Send {
     fn scattered_parts(&mut self) -> Vec<(u64, OpState)> {
         Vec::new()
     }
+
+    /// Attach the execution's out-of-core context
+    /// ([`crate::engine::spill::SpillCtx`]: shared memory budget,
+    /// counters and spill directory). Called by the worker once at
+    /// construction, *before* any snapshot restore, so restored spill
+    /// manifests can reopen their files. The default ignores it —
+    /// stateless operators never spill.
+    fn attach_spill(&mut self, _ctx: &SpillCtx) {}
 
     /// Apply a runtime parameter patch; `Err` if unknown.
     fn modify(&mut self, patch: &OpPatch) -> Result<(), String> {

@@ -1,0 +1,855 @@
+//! Out-of-core execution: the memory-budget accountant and the spill
+//! file plane shared by the stateful operators and [`MatStore`].
+//!
+//! Everything upstream of this module used to assume infinite memory:
+//! hash join, group-by and sort kept full state resident and
+//! `MatStore` was an in-memory `Vec`. This module supplies the three
+//! pieces that let them degrade gracefully past a budget
+//! (`Config::memory_budget_bytes`, 0 = unbounded):
+//!
+//! * **[`MemoryBudget`]** — one shared accountant per execution.
+//!   Operators charge their resident state through a [`MemLease`]
+//!   (RAII: dropping the lease releases the charge, so a panicking
+//!   worker can never leak budget). `used`/`high_water` are tracked
+//!   even when the limit is 0 so `SpillStats::budget_high_water` is
+//!   always meaningful; [`MemoryBudget::over`] is what operators poll
+//!   to decide whether to spill.
+//! * **[`SpillFile`] / [`SpillReader`]** — the on-disk format: a
+//!   sequence of length-prefixed frames, each holding a run of tuples
+//!   in the engine's columnar [`ColumnSet`] layout (typed vectors +
+//!   validity masks, byte-preserving for floats) with a row-major
+//!   fallback for ragged/zero-arity runs. Read-back re-enters the
+//!   fast plane as a columnar [`TupleBatch`] without transposition.
+//!   Files are **append-only and never deleted mid-run**: checkpoint
+//!   manifests ([`SpillSlot`]) reference them by path + byte length,
+//!   and recovery reopens them with `set_len(bytes)` — byte-exact
+//!   even when the failure struck after further appends.
+//! * **[`SpillDir`]** — the per-execution temp directory, created
+//!   lazily on first spill and removed recursively when the
+//!   execution's last [`SpillCtx`] clone drops (teardown, cancel,
+//!   abort — all paths converge on the RAII drop).
+//!
+//! Partitioned spilling uses hash bits *above* the exchange's routing
+//! bits: [`partition_of`] takes 4 bits per recursion depth starting at
+//! bit 8, so re-hash scale fences (which consume the low bits) never
+//! correlate with spill partitions. See `docs/ARCHITECTURE.md`
+//! ("Out-of-core execution") for the full design.
+//!
+//! [`MatStore`]: crate::maestro::materialize::MatStore
+//! [`ColumnSet`]: crate::column::ColumnSet
+
+use crate::column::{Column, ColumnSet};
+use crate::config::Config;
+use crate::metrics::SpillStats;
+use crate::tuple::{Tuple, TupleBatch, Value};
+use std::fs::{File, OpenOptions};
+use std::io::{BufReader, Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Partition fan-out per recursion level (4 hash bits).
+pub const SPILL_FANOUT: usize = 16;
+
+/// Maximum recursion depth for partition spilling; a partition still
+/// over budget at this depth is processed in memory regardless (the
+/// budget becomes advisory — correctness over strictness).
+pub const SPILL_MAX_DEPTH: u32 = 5;
+
+/// The spill partition of hash `h` at recursion `depth`: 4 bits per
+/// level starting at bit 8, disjoint from the exchange's low routing
+/// bits so rescales don't skew partition sizes.
+#[inline]
+pub fn partition_of(h: u64, depth: u32) -> usize {
+    ((h >> (8 + 4 * depth)) & (SPILL_FANOUT as u64 - 1)) as usize
+}
+
+#[derive(Debug, Default)]
+struct BudgetInner {
+    limit: u64,
+    used: AtomicU64,
+    high_water: AtomicU64,
+}
+
+/// The shared memory accountant for one execution. Cloning shares the
+/// counters; `limit == 0` means unbounded (nothing ever reports
+/// [`MemoryBudget::over`], but usage is still tracked).
+#[derive(Clone, Debug, Default)]
+pub struct MemoryBudget {
+    inner: Arc<BudgetInner>,
+}
+
+impl MemoryBudget {
+    pub fn new(limit: u64) -> MemoryBudget {
+        MemoryBudget {
+            inner: Arc::new(BudgetInner { limit, ..Default::default() }),
+        }
+    }
+
+    /// The configured limit in bytes (0 = unbounded).
+    pub fn limit(&self) -> u64 {
+        self.inner.limit
+    }
+
+    /// Bytes currently charged across all leases.
+    pub fn used(&self) -> u64 {
+        self.inner.used.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`MemoryBudget::used`] over the execution.
+    pub fn high_water(&self) -> u64 {
+        self.inner.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Whether charged usage currently exceeds a non-zero limit — the
+    /// operators' "should I spill now?" poll.
+    pub fn over(&self) -> bool {
+        self.inner.limit > 0 && self.used() > self.inner.limit
+    }
+
+    fn charge(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let now = self.inner.used.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.inner.high_water.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn release(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        // Saturating: a release can never underflow the global gauge
+        // (leases only release what they charged, but stay defensive).
+        let mut cur = self.inner.used.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.inner.used.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(v) => cur = v,
+            }
+        }
+    }
+}
+
+/// One operator's charge against the shared [`MemoryBudget`]. Call
+/// [`MemLease::set`] with the operator's current resident-state bytes
+/// after every mutation; dropping the lease (worker teardown, panic
+/// unwind) releases the whole charge.
+#[derive(Debug, Default)]
+pub struct MemLease {
+    budget: MemoryBudget,
+    charged: u64,
+}
+
+impl MemLease {
+    pub fn new(budget: MemoryBudget) -> MemLease {
+        MemLease { budget, charged: 0 }
+    }
+
+    /// Bytes currently charged by this lease.
+    pub fn charged(&self) -> u64 {
+        self.charged
+    }
+
+    /// Adjust the charge to `bytes` (delta against the shared gauge).
+    pub fn set(&mut self, bytes: u64) {
+        if bytes > self.charged {
+            self.budget.charge(bytes - self.charged);
+        } else {
+            self.budget.release(self.charged - bytes);
+        }
+        self.charged = bytes;
+    }
+}
+
+impl Drop for MemLease {
+    fn drop(&mut self) {
+        self.budget.release(self.charged);
+    }
+}
+
+/// Shared spill counters (one set per execution; clones share).
+#[derive(Clone, Debug, Default)]
+pub struct SpillCounters {
+    bytes_spilled: Arc<AtomicU64>,
+    bytes_read_back: Arc<AtomicU64>,
+    partitions_spilled: Arc<AtomicU64>,
+    files_created: Arc<AtomicU64>,
+    max_recursion_depth: Arc<AtomicU64>,
+    write_ns: Arc<AtomicU64>,
+    read_ns: Arc<AtomicU64>,
+}
+
+impl SpillCounters {
+    pub fn add_spilled(&self, bytes: u64) {
+        self.bytes_spilled.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_read_back(&self, bytes: u64) {
+        self.bytes_read_back.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_partition(&self) {
+        self.partitions_spilled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_depth(&self, depth: u32) {
+        self.max_recursion_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Snapshot into the plain [`SpillStats`] carried by
+    /// `ExecSummary`.
+    pub fn snapshot(&self, budget: &MemoryBudget) -> SpillStats {
+        SpillStats {
+            bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
+            bytes_read_back: self.bytes_read_back.load(Ordering::Relaxed),
+            partitions_spilled: self.partitions_spilled.load(Ordering::Relaxed),
+            spill_files_created: self.files_created.load(Ordering::Relaxed),
+            max_recursion_depth: self.max_recursion_depth.load(Ordering::Relaxed),
+            budget_limit: budget.limit(),
+            budget_high_water: budget.high_water(),
+            spill_write_ns: self.write_ns.load(Ordering::Relaxed),
+            spill_read_ns: self.read_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// Process-wide uniquifier for spill directory names (several
+// executions can be live at once in one process — the service, the
+// test harness).
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The per-execution spill directory: created lazily under the
+/// configured base (or the system temp dir) on the first file
+/// creation, removed recursively on drop. Everything an execution
+/// spills — operator partitions, sort runs, `MatStore` chunks — lives
+/// here, so cleanup is one `remove_dir_all` no matter which teardown
+/// path (finish, cancel, abort, panic) ran.
+#[derive(Debug)]
+pub struct SpillDir {
+    base: PathBuf,
+    created: Mutex<Option<PathBuf>>,
+    file_seq: AtomicU64,
+}
+
+impl SpillDir {
+    fn new(base: PathBuf) -> SpillDir {
+        SpillDir { base, created: Mutex::new(None), file_seq: AtomicU64::new(0) }
+    }
+
+    /// The directory path, creating it on first use.
+    pub fn ensure(&self) -> PathBuf {
+        let mut guard = self.created.lock().unwrap();
+        if let Some(p) = guard.as_ref() {
+            return p.clone();
+        }
+        let name = format!(
+            "ooc-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = self.base.join(name);
+        std::fs::create_dir_all(&path).expect("create spill directory");
+        *guard = Some(path.clone());
+        path
+    }
+
+    /// The directory path if any file was ever spilled.
+    pub fn path(&self) -> Option<PathBuf> {
+        self.created.lock().unwrap().clone()
+    }
+
+    fn next_file(&self) -> u64 {
+        self.file_seq.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+impl Drop for SpillDir {
+    fn drop(&mut self) {
+        if let Some(p) = self.created.lock().unwrap().take() {
+            let _ = std::fs::remove_dir_all(&p);
+        }
+    }
+}
+
+/// Everything an operator needs to participate in out-of-core
+/// execution: the shared budget, the shared counters and the
+/// execution's spill directory. One per execution, cloned into every
+/// worker's context; the last clone's drop removes the directory.
+#[derive(Clone, Debug, Default)]
+pub struct SpillCtx {
+    pub budget: MemoryBudget,
+    pub counters: SpillCounters,
+    dir: Arc<SpillDir>,
+}
+
+impl Default for SpillDir {
+    fn default() -> SpillDir {
+        SpillDir::new(std::env::temp_dir())
+    }
+}
+
+impl SpillCtx {
+    pub fn new(config: &Config) -> SpillCtx {
+        let base = if config.spill_dir.is_empty() {
+            std::env::temp_dir()
+        } else {
+            PathBuf::from(&config.spill_dir)
+        };
+        SpillCtx {
+            budget: MemoryBudget::new(config.memory_budget_bytes),
+            counters: SpillCounters::default(),
+            dir: Arc::new(SpillDir::new(base)),
+        }
+    }
+
+    /// The execution's spill directory path, if anything was spilled.
+    pub fn dir_path(&self) -> Option<PathBuf> {
+        self.dir.path()
+    }
+}
+
+/// One spill file's manifest entry: enough to reopen it byte-exactly.
+/// Travels inside `OpState::spill`, so checkpoints embed the manifest
+/// and recovery replays it (`set_len(bytes)` truncates any appends
+/// that post-date the checkpoint).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpillSlot {
+    /// Operator-defined stream kind (e.g. join build vs probe).
+    pub tag: u32,
+    /// Operator-defined scope (partition id, sort scope, …).
+    pub scope: u64,
+    /// Operator-defined sequence within (tag, scope) — sort run order.
+    pub seq: u64,
+    /// Absolute file path inside the execution's [`SpillDir`].
+    pub path: String,
+    /// Valid byte length (appends past a checkpoint are truncated on
+    /// restore).
+    pub bytes: u64,
+    /// Row count at `bytes`.
+    pub rows: u64,
+}
+
+/// An open, append-only spill file. Frames are flushed at the end of
+/// every [`SpillFile::append`] so an immutable snapshot
+/// ([`SpillFile::slot`]) is always byte-accurate. Files are never
+/// deleted mid-run — see the module docs.
+#[derive(Debug)]
+pub struct SpillFile {
+    file: File,
+    slot: SpillSlot,
+    counters: SpillCounters,
+}
+
+impl SpillFile {
+    /// Create a fresh file in the execution's spill directory.
+    pub fn create(ctx: &SpillCtx, tag: u32, scope: u64, seq: u64) -> SpillFile {
+        let dir = ctx.dir.ensure();
+        let path = dir.join(format!("f{}.spill", ctx.dir.next_file()));
+        let file = File::create(&path).expect("create spill file");
+        ctx.counters.files_created.fetch_add(1, Ordering::Relaxed);
+        SpillFile {
+            file,
+            slot: SpillSlot {
+                tag,
+                scope,
+                seq,
+                path: path.to_string_lossy().into_owned(),
+                bytes: 0,
+                rows: 0,
+            },
+            counters: ctx.counters.clone(),
+        }
+    }
+
+    /// Reopen a checkpointed file for further appends, truncating any
+    /// bytes past the manifest's recorded length (appends that
+    /// post-dated the checkpoint).
+    pub fn reopen(ctx: &SpillCtx, slot: &SpillSlot) -> SpillFile {
+        let file = OpenOptions::new()
+            .write(true)
+            .open(&slot.path)
+            .expect("reopen spill file");
+        file.set_len(slot.bytes).expect("truncate spill file");
+        let mut f = SpillFile { file, slot: slot.clone(), counters: ctx.counters.clone() };
+        f.file
+            .seek(SeekFrom::Start(slot.bytes))
+            .expect("seek spill file");
+        f
+    }
+
+    /// The manifest entry describing the file's current contents.
+    pub fn slot(&self) -> SpillSlot {
+        self.slot.clone()
+    }
+
+    /// Rows written so far.
+    pub fn rows(&self) -> u64 {
+        self.slot.rows
+    }
+
+    /// Bytes written so far.
+    pub fn bytes(&self) -> u64 {
+        self.slot.bytes
+    }
+
+    /// Append one frame of tuples (no-op on an empty slice) and flush,
+    /// so the slot returned by [`SpillFile::slot`] is immediately
+    /// durable for checkpoint manifests.
+    pub fn append(&mut self, rows: &[Tuple]) {
+        if rows.is_empty() {
+            return;
+        }
+        let started = std::time::Instant::now();
+        let payload = encode_frame(rows);
+        let mut buf = Vec::with_capacity(8 + payload.len());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        self.file.write_all(&buf).expect("write spill frame");
+        self.file.flush().expect("flush spill file");
+        self.slot.bytes += buf.len() as u64;
+        self.slot.rows += rows.len() as u64;
+        self.counters.add_spilled(buf.len() as u64);
+        // Encode+write time feeds the cost model's calibrated spill
+        // bandwidth (`CostParams::calibrate_spill`).
+        self.counters
+            .write_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Streaming frame reader over a spill file's valid prefix
+/// (`[0, limit)` bytes). Yields columnar [`TupleBatch`]es — one per
+/// written frame — without transposition when the frame was stored
+/// columnar.
+#[derive(Debug)]
+pub struct SpillReader {
+    reader: BufReader<File>,
+    remaining: u64,
+    counters: SpillCounters,
+}
+
+impl SpillReader {
+    /// Open `slot.path` for reading its first `slot.bytes` bytes.
+    pub fn open(ctx: &SpillCtx, slot: &SpillSlot) -> SpillReader {
+        let file = File::open(&slot.path).expect("open spill file");
+        SpillReader {
+            reader: BufReader::new(file),
+            remaining: slot.bytes,
+            counters: ctx.counters.clone(),
+        }
+    }
+
+    /// The next frame as a batch, or `None` at the valid-prefix end.
+    pub fn next_batch(&mut self) -> Option<TupleBatch> {
+        if self.remaining < 8 {
+            return None;
+        }
+        let started = std::time::Instant::now();
+        let mut len8 = [0u8; 8];
+        self.reader.read_exact(&mut len8).expect("read spill frame length");
+        let len = u64::from_le_bytes(len8);
+        assert!(
+            self.remaining >= 8 + len,
+            "spill frame extends past valid prefix"
+        );
+        let mut payload = vec![0u8; len as usize];
+        self.reader.read_exact(&mut payload).expect("read spill frame");
+        self.remaining -= 8 + len;
+        self.counters.add_read_back(8 + len);
+        let batch = decode_frame(&payload);
+        self.counters
+            .read_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Some(batch)
+    }
+
+    /// The next frame as rows (materializing columnar frames).
+    pub fn next_rows(&mut self) -> Option<Vec<Tuple>> {
+        self.next_batch().map(|b| b.as_slice().to_vec())
+    }
+}
+
+/// Read a whole slot back as rows (state restore / unspill paths).
+pub fn read_slot_rows(ctx: &SpillCtx, slot: &SpillSlot) -> Vec<Tuple> {
+    let mut reader = SpillReader::open(ctx, slot);
+    let mut out = Vec::with_capacity(slot.rows as usize);
+    while let Some(rows) = reader.next_rows() {
+        out.extend(rows);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Frame encoding. A frame is self-describing:
+//
+//   payload := [u8 kind]
+//              kind 0 (columnar): [u64 nrows][u32 arity] column*
+//                column := [u8 coltag][u8 has_validity] values
+//                                     [validity: nrows bytes]?
+//                  coltag 0 Int:   nrows × i64 LE
+//                  coltag 1 Float: nrows × f64 bits LE (bit-preserving)
+//                  coltag 2 Str:   nrows × ([u32 len] bytes)
+//                  coltag 3 Mixed: nrows × value
+//              kind 1 (rows, ragged/zero-arity fallback):
+//                [u64 nrows] nrows × ([u32 arity] arity × value)
+//   value   := [u8 vtag] (0 Null | 1 Int i64 | 2 Float bits | 3 Str)
+//
+// Floats round-trip by bit pattern (NaN payloads, signed zeros), so
+// recovery replay is byte-exact.
+// ---------------------------------------------------------------------------
+
+fn put_value(buf: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::Null => buf.push(0),
+        Value::Int(i) => {
+            buf.push(1);
+            buf.extend_from_slice(&i.to_le_bytes());
+        }
+        Value::Float(f) => {
+            buf.push(2);
+            buf.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+        Value::Str(s) => {
+            buf.push(3);
+            buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            buf.extend_from_slice(s.as_bytes());
+        }
+    }
+}
+
+fn encode_frame(rows: &[Tuple]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let columnar = ColumnSet::from_rows(rows).filter(|s| s.arity() > 0);
+    match columnar {
+        Some(set) => {
+            buf.push(0u8);
+            buf.extend_from_slice(&(set.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&(set.arity() as u32).to_le_bytes());
+            for col in &set.cols {
+                encode_column(&mut buf, col, set.len());
+            }
+        }
+        None => {
+            buf.push(1u8);
+            buf.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+            for t in rows {
+                buf.extend_from_slice(&(t.arity() as u32).to_le_bytes());
+                for v in &t.values {
+                    put_value(&mut buf, v);
+                }
+            }
+        }
+    }
+    buf
+}
+
+fn encode_validity(buf: &mut Vec<u8>, validity: &Option<Vec<bool>>) {
+    if let Some(m) = validity {
+        buf.push(1);
+        buf.extend(m.iter().map(|&b| b as u8));
+    } else {
+        buf.push(0);
+    }
+}
+
+fn encode_column(buf: &mut Vec<u8>, col: &Column, _nrows: usize) {
+    match col {
+        Column::Int { vals, validity } => {
+            buf.push(0);
+            encode_validity(buf, validity);
+            for v in vals {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Column::Float { vals, validity } => {
+            buf.push(1);
+            encode_validity(buf, validity);
+            for v in vals {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        Column::Str { vals, validity } => {
+            buf.push(2);
+            encode_validity(buf, validity);
+            for s in vals {
+                buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                buf.extend_from_slice(s.as_bytes());
+            }
+        }
+        Column::Mixed { vals } => {
+            buf.push(3);
+            buf.push(0);
+            for v in vals {
+                put_value(buf, v);
+            }
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    fn u8(&mut self) -> u8 {
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        b
+    }
+
+    fn u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    fn u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+
+    fn i64(&mut self) -> i64 {
+        i64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+
+    fn str_arc(&mut self) -> Arc<str> {
+        let len = self.u32() as usize;
+        let bytes = self.take(len);
+        Arc::from(std::str::from_utf8(bytes).expect("utf8 spill string"))
+    }
+
+    fn value(&mut self) -> Value {
+        match self.u8() {
+            0 => Value::Null,
+            1 => Value::Int(self.i64()),
+            2 => Value::Float(f64::from_bits(self.u64())),
+            3 => Value::Str(self.str_arc()),
+            t => panic!("corrupt spill frame: value tag {t}"),
+        }
+    }
+
+    fn validity(&mut self, nrows: usize) -> Option<Vec<bool>> {
+        if self.u8() == 1 {
+            Some(self.take(nrows).iter().map(|&b| b != 0).collect())
+        } else {
+            None
+        }
+    }
+}
+
+fn decode_frame(payload: &[u8]) -> TupleBatch {
+    let mut d = Dec { buf: payload, pos: 0 };
+    match d.u8() {
+        0 => {
+            let nrows = d.u64() as usize;
+            let arity = d.u32() as usize;
+            let mut cols = Vec::with_capacity(arity);
+            for _ in 0..arity {
+                let coltag = d.u8();
+                match coltag {
+                    0 => {
+                        let validity = d.validity(nrows);
+                        let vals = (0..nrows).map(|_| d.i64()).collect();
+                        cols.push(Column::Int { vals, validity });
+                    }
+                    1 => {
+                        let validity = d.validity(nrows);
+                        let vals =
+                            (0..nrows).map(|_| f64::from_bits(d.u64())).collect();
+                        cols.push(Column::Float { vals, validity });
+                    }
+                    2 => {
+                        let validity = d.validity(nrows);
+                        let vals = (0..nrows).map(|_| d.str_arc()).collect();
+                        cols.push(Column::Str { vals, validity });
+                    }
+                    3 => {
+                        d.u8(); // validity flag, always 0 for Mixed
+                        let vals = (0..nrows).map(|_| d.value()).collect();
+                        cols.push(Column::Mixed { vals });
+                    }
+                    t => panic!("corrupt spill frame: column tag {t}"),
+                }
+            }
+            TupleBatch::from_columns(ColumnSet::new(cols, nrows))
+        }
+        1 => {
+            let nrows = d.u64() as usize;
+            let rows = (0..nrows)
+                .map(|_| {
+                    let arity = d.u32() as usize;
+                    Tuple::new((0..arity).map(|_| d.value()).collect())
+                })
+                .collect();
+            TupleBatch::new(rows)
+        }
+        k => panic!("corrupt spill frame: kind {k}"),
+    }
+}
+
+/// Sum of [`Tuple::byte_size`] over a row slice — the resident-state
+/// accounting unit shared by every spilling operator.
+pub fn rows_byte_size(rows: &[Tuple]) -> u64 {
+    rows.iter().map(|t| t.byte_size() as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn test_ctx(limit: u64) -> SpillCtx {
+        let mut cfg = Config::for_tests();
+        cfg.memory_budget_bytes = limit;
+        SpillCtx::new(&cfg)
+    }
+
+    fn sample_rows() -> Vec<Tuple> {
+        vec![
+            Tuple::new(vec![Value::Int(7), Value::Float(2.5), Value::str("abc")]),
+            Tuple::new(vec![Value::Null, Value::Float(-0.0), Value::str("")]),
+            Tuple::new(vec![Value::Int(-3), Value::Null, Value::str("abcdefgh")]),
+            Tuple::new(vec![
+                Value::Int(0),
+                Value::Float(f64::from_bits(0x7ff8_0000_0000_1234)), // NaN payload
+                Value::Null,
+            ]),
+        ]
+    }
+
+    #[test]
+    fn frame_roundtrip_columnar_bit_exact() {
+        let rows = sample_rows();
+        let batch = decode_frame(&encode_frame(&rows));
+        assert!(batch.has_columns(), "uniform-arity frame stays columnar");
+        assert_eq!(batch.len(), rows.len());
+        for (i, want) in rows.iter().enumerate() {
+            let got = batch.get(i);
+            assert_eq!(got.arity(), want.arity());
+            for c in 0..want.arity() {
+                match (got.get(c), want.get(c)) {
+                    (Value::Float(a), Value::Float(b)) => {
+                        assert_eq!(a.to_bits(), b.to_bits(), "row {i} col {c}");
+                    }
+                    (a, b) => assert_eq!(a, b, "row {i} col {c}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_ragged_rows() {
+        let rows = vec![
+            Tuple::new(vec![Value::Int(1)]),
+            Tuple::new(vec![Value::Int(2), Value::str("xy")]),
+            Tuple::new(vec![]),
+        ];
+        let batch = decode_frame(&encode_frame(&rows));
+        assert!(!batch.has_columns());
+        assert_eq!(batch.as_slice(), &rows[..]);
+    }
+
+    #[test]
+    fn file_roundtrip_and_dir_cleanup() {
+        let ctx = test_ctx(0);
+        let rows = sample_rows();
+        let mut f = SpillFile::create(&ctx, 3, 42, 0);
+        f.append(&rows[..2]);
+        f.append(&rows[2..]);
+        f.append(&[]); // no-op
+        let slot = f.slot();
+        assert_eq!(slot.tag, 3);
+        assert_eq!(slot.scope, 42);
+        assert_eq!(slot.rows, 4);
+        let dir = ctx.dir_path().expect("dir created");
+        assert!(dir.is_dir());
+        assert!(Path::new(&slot.path).is_file());
+
+        let got = read_slot_rows(&ctx, &slot);
+        assert_eq!(got.len(), rows.len());
+        assert_eq!(format!("{got:?}"), format!("{rows:?}"));
+
+        let stats = ctx.counters.snapshot(&ctx.budget);
+        assert!(stats.bytes_spilled > 0);
+        assert_eq!(stats.bytes_read_back, stats.bytes_spilled);
+        assert_eq!(stats.spill_files_created, 1);
+
+        drop(f);
+        drop(ctx);
+        assert!(!dir.exists(), "spill dir removed on ctx drop");
+    }
+
+    #[test]
+    fn reopen_truncates_past_manifest() {
+        let ctx = test_ctx(0);
+        let rows = sample_rows();
+        let mut f = SpillFile::create(&ctx, 0, 0, 0);
+        f.append(&rows[..2]);
+        let checkpointed = f.slot();
+        f.append(&rows[2..]); // post-checkpoint appends...
+        drop(f);
+        // ...must vanish on restore.
+        let mut re = SpillFile::reopen(&ctx, &checkpointed);
+        assert_eq!(re.bytes(), checkpointed.bytes);
+        let got = read_slot_rows(&ctx, &re.slot());
+        assert_eq!(format!("{got:?}"), format!("{:?}", &rows[..2]));
+        // And appends continue from the truncation point.
+        re.append(&rows[2..3]);
+        let got = read_slot_rows(&ctx, &re.slot());
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn budget_lease_accounting() {
+        let budget = MemoryBudget::new(100);
+        let mut a = MemLease::new(budget.clone());
+        let mut b = MemLease::new(budget.clone());
+        a.set(60);
+        assert!(!budget.over());
+        b.set(50);
+        assert!(budget.over());
+        assert_eq!(budget.used(), 110);
+        assert_eq!(budget.high_water(), 110);
+        a.set(10);
+        assert!(!budget.over());
+        assert_eq!(budget.used(), 60);
+        drop(b);
+        assert_eq!(budget.used(), 10);
+        drop(a);
+        assert_eq!(budget.used(), 0);
+        assert_eq!(budget.high_water(), 110, "high water survives releases");
+    }
+
+    #[test]
+    fn unbounded_budget_never_over_but_tracks() {
+        let budget = MemoryBudget::new(0);
+        let mut l = MemLease::new(budget.clone());
+        l.set(1 << 40);
+        assert!(!budget.over());
+        assert_eq!(budget.high_water(), 1 << 40);
+    }
+
+    #[test]
+    fn partition_bits_above_routing_bits() {
+        let h = 0xABCD_EF01_2345_6789u64;
+        assert_eq!(partition_of(h, 0), ((h >> 8) & 15) as usize);
+        assert_eq!(partition_of(h, 1), ((h >> 12) & 15) as usize);
+        // Depths use disjoint nibbles: flipping routing bits (low 8)
+        // never changes any partition.
+        let h2 = h ^ 0xFF;
+        for d in 0..SPILL_MAX_DEPTH {
+            assert_eq!(partition_of(h, d), partition_of(h2, d));
+        }
+    }
+}

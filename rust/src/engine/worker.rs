@@ -195,6 +195,11 @@ pub struct WorkerContext {
     /// faults of its outgoing edges; fire counters are shared across
     /// recovery respawns, so one-shot faults stay one-shot.
     pub fault_plan: FaultPlan,
+    /// The execution's shared out-of-core context
+    /// ([`crate::engine::spill`]): memory budget, spill counters and
+    /// spill directory. Attached to the operator at construction,
+    /// before any snapshot restore.
+    pub spill: crate::engine::spill::SpillCtx,
 }
 
 /// Why the worker is paused (it can be paused for several reasons at
@@ -777,6 +782,7 @@ impl Worker {
         let ports = ctx.upstream_counts.len();
         let worker_faults = ctx.fault_plan.worker_faults(ctx.id);
         let edge_faults = ctx.fault_plan.edge_faults(ctx.id);
+        let spill = ctx.spill.clone();
         let mut w = Worker {
             id: ctx.id,
             out: OutBox {
@@ -838,6 +844,9 @@ impl Worker {
             w.eofs_seen = init;
             w.recheck_ports = true;
         }
+        // Attach before any restore so a restored spill manifest can
+        // reopen its files through the execution's SpillCtx.
+        w.op.attach_spill(&spill);
         if let Some(snap) = ctx.snapshot {
             w.restore(snap);
         }
@@ -2124,6 +2133,7 @@ mod tests {
             start_paused: false,
             columnar: true,
             fault_plan: FaultPlan::default(),
+            spill: crate::engine::spill::SpillCtx::default(),
         };
         let h = std::thread::spawn(move || run_worker(ctx, Box::new(Identity)));
         (ctrl, in_tx, ev_rx, down_rx.data, h)
@@ -2399,6 +2409,7 @@ mod tests {
             start_paused: false,
             columnar: true,
             fault_plan: FaultPlan::default(),
+            spill: crate::engine::spill::SpillCtx::default(),
         };
         let h = std::thread::spawn(move || {
             run_worker(ctx, Box::new(crate::engine::dag::PassThrough))
@@ -2472,6 +2483,7 @@ mod tests {
             start_paused: false,
             columnar: true,
             fault_plan: FaultPlan::default(),
+            spill: crate::engine::spill::SpillCtx::default(),
         };
         let h = std::thread::spawn(move || {
             run_worker(ctx, Box::new(crate::engine::dag::PassThrough))
@@ -2540,6 +2552,7 @@ mod tests {
             start_paused: false,
             columnar: true,
             fault_plan: plan,
+            spill: crate::engine::spill::SpillCtx::default(),
         };
         let h = std::thread::spawn(move || run_worker(ctx, Box::new(Identity)));
         send_batch(&in_tx, 0, (0..20).map(tuple).collect());

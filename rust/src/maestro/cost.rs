@@ -70,6 +70,18 @@ pub struct CostParams {
     /// activations from completed operators' `produced` counters and
     /// finished `MatStore`s.
     pub pinned_rows: HashMap<usize, f64>,
+    /// Memory budget in bytes (0 = unbounded; mirrors
+    /// [`Config::memory_budget_bytes`](crate::config::Config)).
+    /// Resident state a region holds beyond this — blocking-input
+    /// volume (join builds, group tables, sort runs) plus `MatStore`
+    /// volume — is priced as spill traffic in the region time.
+    pub memory_budget_bytes: f64,
+    /// Cost per byte of state past the budget: one write to the spill
+    /// plane plus one read back, combined
+    /// ([`Config::maestro_spill_byte_cost`](crate::config::Config)
+    /// until [`CostParams::calibrate_spill`] replaces it with the
+    /// observed bandwidth).
+    pub spill_byte_cost: f64,
 }
 
 impl Default for CostParams {
@@ -82,6 +94,8 @@ impl Default for CostParams {
             bytes_per_tuple: 64.0,
             mat_byte_cost: 0.01,
             pinned_rows: HashMap::new(),
+            memory_budget_bytes: 0.0,
+            spill_byte_cost: 0.05,
         }
     }
 }
@@ -98,8 +112,26 @@ impl CostParams {
         CostParams {
             default_tuple_cost: config.maestro_tuple_cost,
             mat_byte_cost: config.maestro_mat_byte_cost,
+            memory_budget_bytes: config.memory_budget_bytes as f64,
+            spill_byte_cost: config.maestro_spill_byte_cost,
             ..Default::default()
         }
+    }
+
+    /// Replace the configured spill cost with the bandwidth actually
+    /// observed on the spill plane: µs per byte across the write
+    /// (encode + flush) and read-back (read + decode) paths combined —
+    /// the same µs unit the tuple-cost calibration uses, so spill
+    /// pricing and compute pricing stay commensurable after the
+    /// scheduler's first re-plan. No-op until any traffic (and time)
+    /// has been observed.
+    pub fn calibrate_spill(&mut self, stats: &crate::metrics::SpillStats) {
+        let bytes = stats.bytes_spilled + stats.bytes_read_back;
+        let ns = stats.spill_write_ns + stats.spill_read_ns;
+        if bytes == 0 || ns == 0 {
+            return;
+        }
+        self.spill_byte_cost = ns as f64 / bytes as f64 / 1000.0;
     }
 
     fn sel(&self, op: usize) -> f64 {
@@ -173,7 +205,44 @@ fn region_time(
             t += rows_out[rd] * p.bytes_per_tuple * p.mat_byte_cost;
         }
     }
+    // Out-of-core pricing: resident state past the memory budget is
+    // spilled and read back, volume-bound like mat IO (not divided by
+    // workers). Choices that pile more state or materialized volume
+    // into one region pay for it when memory is tight, which is what
+    // steers `best_choice_elastic` away from memory-hungry plans.
+    if p.memory_budget_bytes > 0.0 {
+        let excess = region_state_bytes(w, p, rows_out, r, writers) - p.memory_budget_bytes;
+        if excess > 0.0 {
+            t += excess * p.spill_byte_cost;
+        }
+    }
     t
+}
+
+/// Resident-state bytes a region holds at its peak: every blocking
+/// input inside the region buffers its full upstream volume (the join
+/// build side, group-by tables, sort runs — blocking is exactly the
+/// "holds everything before emitting" property), and a mat writer's
+/// store holds everything written until its readers drain it.
+fn region_state_bytes(
+    w: &Workflow,
+    p: &CostParams,
+    rows_out: &[f64],
+    r: &Region,
+    writers: &[usize],
+) -> f64 {
+    let mut bytes: f64 = w
+        .edges
+        .iter()
+        .filter(|e| w.is_blocking_edge(e) && r.contains(e.to))
+        .map(|e| rows_out[e.from] * p.bytes_per_tuple)
+        .sum();
+    for &wr in writers {
+        if r.contains(wr) {
+            bytes += rows_in_of(w, p, rows_out, wr) * p.bytes_per_tuple;
+        }
+    }
+    bytes
 }
 
 /// First response time of the workflow after materializing `choice`,
@@ -739,6 +808,97 @@ mod tests {
         fixed.insert(m.readers[0], 2usize);
         let assigned = assign_workers(&m.workflow, &g.regions, &rows, &p, 10, &fixed);
         assert_eq!(assigned[m.readers[0]], 2);
+    }
+
+    /// scan → h1..h4 (heavy) → blocking sink: a pipeline long enough
+    /// that splitting it with a materialization lets the per-region
+    /// worker budget apply twice.
+    fn heavy_chain() -> (Workflow, usize) {
+        let mut w = Workflow::new();
+        let s = w.add(OpSpec::source("scan", 1, |_, _| {
+            Box::new(VecSource::new(Vec::new()))
+        }));
+        let mut prev = s;
+        for name in ["h1", "h2", "h3", "h4"] {
+            let h = w.add(OpSpec::unary(name, 1, PartitionScheme::RoundRobin, |_, _| {
+                Box::new(Noop)
+            }));
+            w.connect(prev, h, 0);
+            prev = h;
+        }
+        let k = w.add(
+            OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, |_, _| Box::new(Noop))
+                .with_blocking(vec![0]),
+        );
+        w.connect(prev, k, 0);
+        (w, k)
+    }
+
+    #[test]
+    fn tight_memory_budget_flips_elastic_choice() {
+        let (w, sink) = heavy_chain();
+        let mut p = CostParams::new();
+        p.source_rows.insert(0, 100_000.0);
+        for op in 1..=4 {
+            p.tuple_cost.insert(op, 10.0);
+        }
+        p.mat_byte_cost = 0.001; // cheap disk, plenty of memory…
+        // Choice 1 materializes the h2→h3 edge (edge index 2),
+        // splitting the heavy chain into two regions that each get the
+        // full worker budget.
+        let choices = vec![vec![], vec![2usize]];
+        let (unbounded, plan) = best_choice_elastic(&w, &choices, &p, &[sink], 8);
+        assert_eq!(
+            unbounded, 1,
+            "with memory to spare the split wins (frt {})",
+            plan.estimated_frt
+        );
+        // …now memory is tight: the store's volume has to spill, and
+        // the spill traffic out-costs the parallelism the split buys.
+        p.memory_budget_bytes = 1.0;
+        p.spill_byte_cost = 1.0;
+        let (tight, tight_plan) = best_choice_elastic(&w, &choices, &p, &[sink], 8);
+        assert_eq!(
+            tight, 0,
+            "tight budget prices the mat volume as spill traffic (frt {})",
+            tight_plan.estimated_frt
+        );
+        // The same choice is strictly more expensive under pressure.
+        let rich = plan_for_choice(&w, &choices[1], &p, &[sink], 8, &HashMap::new());
+        assert!(rich.estimated_frt > plan.estimated_frt);
+    }
+
+    #[test]
+    fn ample_budget_prices_no_spill() {
+        let (w, sink) = heavy_chain();
+        let mut p = CostParams::new();
+        p.source_rows.insert(0, 100_000.0);
+        let base = plan_for_choice(&w, &[2], &p, &[sink], 8, &HashMap::new());
+        // A budget bigger than all state in any region changes nothing.
+        p.memory_budget_bytes = 1e12;
+        let ample = plan_for_choice(&w, &[2], &p, &[sink], 8, &HashMap::new());
+        assert_eq!(ample.estimated_frt, base.estimated_frt);
+        assert_eq!(ample.workers, base.workers);
+    }
+
+    #[test]
+    fn calibrate_spill_uses_observed_bandwidth() {
+        let mut p = CostParams::new();
+        let configured = p.spill_byte_cost;
+        // No traffic observed → the configured constant stands.
+        p.calibrate_spill(&crate::metrics::SpillStats::default());
+        assert_eq!(p.spill_byte_cost, configured);
+        // 2000 bytes moved in 4 ms → 2 µs/byte, same unit as the
+        // tuple-cost calibration.
+        let stats = crate::metrics::SpillStats {
+            bytes_spilled: 1000,
+            bytes_read_back: 1000,
+            spill_write_ns: 2_000_000,
+            spill_read_ns: 2_000_000,
+            ..Default::default()
+        };
+        p.calibrate_spill(&stats);
+        assert!((p.spill_byte_cost - 2.0).abs() < 1e-12, "{}", p.spill_byte_cost);
     }
 
     #[test]

@@ -13,19 +13,115 @@
 //! tuple width, both fed back into
 //! [`CostParams`](crate::maestro::cost::CostParams) when the remaining
 //! regions are re-planned.
+//!
+//! **Out-of-core** (see `docs/ARCHITECTURE.md` "Out-of-core
+//! execution"): past the execution's memory budget the store flushes
+//! its resident tail to sequential append-only **chunk files** in the
+//! execution's spill directory; logical row ids are stable across the
+//! chunk list + resident tail, so [`MatSource`]'s strided id-space
+//! mapping (and its `fork`/`split` re-cuts) is unaffected. Each reader
+//! scans chunks through a windowed cursor that buffers one spill frame
+//! at a time. `bytes`/`rows` keep counting *logical* content wherever
+//! it lives, so the scheduler's observation feedback is unchanged.
 
 use crate::engine::dag::{OpSpec, Workflow};
 use crate::engine::operator::{Emitter, Operator};
 use crate::engine::partitioner::PartitionScheme;
+use crate::engine::spill::{MemLease, SpillCtx, SpillFile, SpillReader, SpillSlot};
 use crate::tuple::Tuple;
 use crate::workloads::TupleSource;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// Spill-slot tag: a store has one stream kind — appended chunks.
+const TAG_CHUNK: u32 = 0;
+
+/// Rows per spill frame when flushing a chunk: bounds the window a
+/// reader cursor holds in memory.
+const CHUNK_FRAME_ROWS: usize = 512;
+
+struct MatInner {
+    /// Resident tail: logical rows `[resident_base, resident_base + len)`.
+    resident: Vec<Tuple>,
+    resident_bytes: u64,
+    /// Logical row index of `resident[0]`.
+    resident_base: usize,
+    /// Flushed chunks in write order; `chunk_starts[i]` is the logical
+    /// row index of `chunks[i]`'s first row.
+    chunks: Vec<SpillSlot>,
+    chunk_starts: Vec<usize>,
+    ctx: Option<SpillCtx>,
+    lease: MemLease,
+}
+
+impl Default for MatInner {
+    fn default() -> MatInner {
+        MatInner {
+            resident: Vec::new(),
+            resident_bytes: 0,
+            resident_base: 0,
+            chunks: Vec::new(),
+            chunk_starts: Vec::new(),
+            ctx: None,
+            lease: MemLease::default(),
+        }
+    }
+}
+
+impl MatInner {
+    fn rows(&self) -> usize {
+        self.resident_base + self.resident.len()
+    }
+
+    /// Flush the resident tail to one new chunk file when over budget.
+    fn maybe_spill(&mut self) {
+        let Some(ctx) = self.ctx.clone() else { return };
+        self.lease.set(self.resident_bytes);
+        if !ctx.budget.over() || self.resident.is_empty() {
+            return;
+        }
+        let seq = self.chunks.len() as u64;
+        let mut f = SpillFile::create(&ctx, TAG_CHUNK, 0, seq);
+        for frame in self.resident.chunks(CHUNK_FRAME_ROWS) {
+            f.append(frame);
+        }
+        ctx.counters.add_partition();
+        self.chunk_starts.push(self.resident_base);
+        self.resident_base += self.resident.len();
+        self.resident.clear();
+        self.resident_bytes = 0;
+        self.chunks.push(f.slot());
+        self.lease.set(0);
+    }
+
+    /// Read every chunk back in write order (sequential scan).
+    fn read_chunks(&self) -> Vec<Tuple> {
+        let Some(ctx) = &self.ctx else { return Vec::new() };
+        let mut out = Vec::new();
+        for slot in &self.chunks {
+            out.extend(crate::engine::spill::read_slot_rows(ctx, slot));
+        }
+        out
+    }
+}
+
+/// Windowed cursor over one reader's sequential walk of the chunk
+/// list: holds one decoded spill frame; advancing to a later row in
+/// the same chunk streams forward, anything else re-opens.
+struct ChunkCursor {
+    chunk: usize,
+    reader: SpillReader,
+    /// Logical row index of `window[0]`.
+    start: usize,
+    window: Vec<Tuple>,
+}
+
 /// Shared store backing one materialized link.
 #[derive(Clone, Default)]
 pub struct MatStore {
-    data: Arc<Mutex<Vec<Tuple>>>,
+    inner: Arc<Mutex<MatInner>>,
+    /// Total *logical* bytes appended (resident + spilled): the cost
+    /// model's observation point, independent of where rows live.
     bytes: Arc<AtomicU64>,
 }
 
@@ -34,20 +130,48 @@ impl MatStore {
         MatStore::default()
     }
 
+    /// Enable disk backing. First caller wins — every writer worker of
+    /// one execution shares the same [`SpillCtx`], so this is
+    /// idempotent in practice.
+    pub fn attach_spill(&self, ctx: &SpillCtx) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.ctx.is_none() {
+            inner.lease = MemLease::new(ctx.budget.clone());
+            inner.ctx = Some(ctx.clone());
+        }
+    }
+
     pub fn bytes(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
     }
 
     pub fn rows(&self) -> usize {
-        self.data.lock().unwrap().len()
+        self.inner.lock().unwrap().rows()
+    }
+
+    /// Bytes currently flushed to chunk files (0 while fully resident).
+    pub fn spilled_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.chunks.iter().map(|c| c.bytes).sum()
     }
 
     /// Drain the full store contents, resetting the byte counter. Used
     /// by live mat *removal* ([`crate::engine::migrate`]): the rows
     /// captured so far are re-injected into the restored direct edge.
+    /// Spilled chunks are read back in write order; their files stay
+    /// on disk, orphaned, until the execution's spill directory is
+    /// reclaimed at teardown.
     pub fn take_all(&self) -> Vec<Tuple> {
         self.bytes.store(0, Ordering::Relaxed);
-        std::mem::take(&mut *self.data.lock().unwrap())
+        let mut inner = self.inner.lock().unwrap();
+        let mut rows = inner.read_chunks();
+        rows.append(&mut inner.resident);
+        inner.chunks.clear();
+        inner.chunk_starts.clear();
+        inner.resident_base = 0;
+        inner.resident_bytes = 0;
+        inner.lease.set(0);
+        rows
     }
 
     /// Bulk-load rows, updating the byte counter. The serving layer's
@@ -56,13 +180,19 @@ impl MatStore {
     pub fn append_rows(&self, rows: Vec<Tuple>) {
         let sz: u64 = rows.iter().map(|t| t.byte_size() as u64).sum();
         self.bytes.fetch_add(sz, Ordering::Relaxed);
-        self.data.lock().unwrap().extend(rows);
+        let mut inner = self.inner.lock().unwrap();
+        inner.resident_bytes += sz;
+        inner.resident.extend(rows);
+        inner.maybe_spill();
     }
 
     /// Copy of the store contents without draining — cache reads must
     /// leave the entry in place for the next tenant.
     pub fn snapshot(&self) -> Vec<Tuple> {
-        self.data.lock().unwrap().clone()
+        let inner = self.inner.lock().unwrap();
+        let mut rows = inner.read_chunks();
+        rows.extend(inner.resident.iter().cloned());
+        rows
     }
 
     /// Observed average tuple width in bytes (`None` until the store
@@ -75,6 +205,42 @@ impl MatStore {
         } else {
             Some(self.bytes() as f64 / rows as f64)
         }
+    }
+
+    /// Logical row `i`, wherever it lives. `cursor` is the calling
+    /// reader's chunk window — forward strides within a chunk stream
+    /// from the open reader; chunk changes and backward seeks re-open.
+    fn row_at(&self, i: usize, cursor: &mut Option<ChunkCursor>) -> Option<Tuple> {
+        let inner = self.inner.lock().unwrap();
+        if i >= inner.resident_base {
+            return inner.resident.get(i - inner.resident_base).cloned();
+        }
+        let ctx = inner.ctx.as_ref().expect("spilled rows imply an attached ctx");
+        // Locate the chunk containing logical row i.
+        let c = match inner.chunk_starts.binary_search(&i) {
+            Ok(c) => c,
+            Err(ins) => ins - 1,
+        };
+        let reusable = cursor
+            .as_ref()
+            .is_some_and(|cur| cur.chunk == c && i >= cur.start);
+        if !reusable {
+            *cursor = Some(ChunkCursor {
+                chunk: c,
+                reader: SpillReader::open(ctx, &inner.chunks[c]),
+                start: inner.chunk_starts[c],
+                window: Vec::new(),
+            });
+        }
+        let cur = cursor.as_mut().unwrap();
+        while i >= cur.start + cur.window.len() {
+            cur.start += cur.window.len();
+            match cur.reader.next_rows() {
+                Some(rows) => cur.window = rows,
+                None => return None,
+            }
+        }
+        Some(cur.window[i - cur.start].clone())
     }
 }
 
@@ -95,18 +261,22 @@ impl Operator for MatWriter {
         "mat_writer"
     }
 
+    fn attach_spill(&mut self, ctx: &SpillCtx) {
+        self.store.attach_spill(ctx);
+    }
+
     fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
         self.store
             .bytes
             .fetch_add(t.byte_size() as u64, Ordering::Relaxed);
         self.buffer.push(t);
         if self.buffer.len() >= 1024 {
-            self.store.data.lock().unwrap().append(&mut self.buffer);
+            self.flush();
         }
     }
 
     fn finish(&mut self, _out: &mut dyn Emitter) {
-        self.store.data.lock().unwrap().append(&mut self.buffer);
+        self.flush();
     }
 
     fn state_size(&self) -> usize {
@@ -128,6 +298,19 @@ impl Operator for MatWriter {
     }
 }
 
+impl MatWriter {
+    fn flush(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let sz: u64 = self.buffer.iter().map(|t| t.byte_size() as u64).sum();
+        let mut inner = self.store.inner.lock().unwrap();
+        inner.resident_bytes += sz;
+        inner.resident.append(&mut self.buffer);
+        inner.maybe_spill();
+    }
+}
+
 /// Source-side of a materialized link: partition `idx` of `parts`
 /// reads rows `i ≡ idx (mod parts)` from the store.
 pub struct MatSource {
@@ -135,20 +318,19 @@ pub struct MatSource {
     parts: usize,
     idx: usize,
     pos: usize,
+    cursor: Option<ChunkCursor>,
 }
 
 impl MatSource {
     pub fn new(store: MatStore, parts: usize, idx: usize) -> MatSource {
-        MatSource { store, parts, idx, pos: 0 }
+        MatSource { store, parts, idx, pos: 0, cursor: None }
     }
 }
 
 impl TupleSource for MatSource {
     fn next_tuple(&mut self) -> Option<Tuple> {
         let i = self.idx + self.pos * self.parts;
-        let guard = self.store.data.lock().unwrap();
-        let t = guard.get(i).cloned();
-        drop(guard);
+        let t = self.store.row_at(i, &mut self.cursor);
         if t.is_some() {
             self.pos += 1;
         }
@@ -157,6 +339,7 @@ impl TupleSource for MatSource {
 
     fn reset(&mut self) {
         self.pos = 0;
+        self.cursor = None;
     }
 
     fn len_hint(&self) -> Option<usize> {
@@ -171,6 +354,7 @@ impl TupleSource for MatSource {
 
     fn seek(&mut self, pos: usize) {
         self.pos = pos;
+        self.cursor = None;
     }
 
     fn fork(&self) -> Option<Box<dyn TupleSource>> {
@@ -179,6 +363,7 @@ impl TupleSource for MatSource {
             parts: self.parts,
             idx: self.idx,
             pos: self.pos,
+            cursor: None,
         }))
     }
 
@@ -187,7 +372,8 @@ impl TupleSource for MatSource {
         // Stride re-cut over the shared store. Valid even while the
         // store is still being written (a dormant reader being scaled
         // before its writer region completed): the id-space mapping is
-        // independent of the store's current length.
+        // independent of the store's current length — and of how much
+        // of it has been flushed to chunk files.
         Some(
             (0..n)
                 .map(|j| {
@@ -196,6 +382,7 @@ impl TupleSource for MatSource {
                         parts: self.parts * n,
                         idx: self.idx + (self.pos + j) * self.parts,
                         pos: 0,
+                        cursor: None,
                     }) as Box<dyn TupleSource>
                 })
                 .collect(),
@@ -258,6 +445,7 @@ pub fn apply_choice(w: &Workflow, choice: &[usize]) -> Materialized {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Config;
     use crate::tuple::Value;
 
     #[test]
@@ -308,5 +496,73 @@ mod tests {
         // pipelined path to f.
         let regions = crate::maestro::region::regions_of(&m.workflow);
         assert_eq!(regions.len(), 2);
+    }
+
+    // ---- out-of-core ----
+
+    fn tiny_ctx(limit: u64) -> SpillCtx {
+        let mut cfg = Config::for_tests();
+        cfg.memory_budget_bytes = limit;
+        SpillCtx::new(&cfg)
+    }
+
+    #[test]
+    fn spilled_store_reads_back_identically() {
+        let plain = MatStore::new();
+        let spilled = MatStore::new();
+        let ctx = tiny_ctx(512);
+        spilled.attach_spill(&ctx);
+        let rows: Vec<Tuple> = (0..500)
+            .map(|i| Tuple::new(vec![Value::Int(i), Value::str(&format!("row{i}"))]))
+            .collect();
+        // Append in small batches so the budget trips repeatedly.
+        for chunk in rows.chunks(32) {
+            plain.append_rows(chunk.to_vec());
+            spilled.append_rows(chunk.to_vec());
+        }
+        assert_eq!(spilled.rows(), plain.rows());
+        assert_eq!(spilled.bytes(), plain.bytes(), "logical bytes unchanged by spilling");
+        assert!(spilled.spilled_bytes() > 0, "tiny budget must flush chunks");
+        assert_eq!(spilled.snapshot(), plain.snapshot());
+        // Strided readers see the same partitions.
+        for idx in 0..3 {
+            let mut a = MatSource::new(plain.clone(), 3, idx);
+            let mut b = MatSource::new(spilled.clone(), 3, idx);
+            let va: Vec<Tuple> = std::iter::from_fn(|| a.next_tuple()).collect();
+            let vb: Vec<Tuple> = std::iter::from_fn(|| b.next_tuple()).collect();
+            assert_eq!(va, vb, "reader {idx} of 3");
+        }
+        // take_all drains chunks + resident in order.
+        assert_eq!(spilled.take_all(), rows);
+        assert_eq!(spilled.rows(), 0);
+        assert_eq!(spilled.bytes(), 0);
+    }
+
+    #[test]
+    fn spilled_reader_seek_and_split() {
+        let store = MatStore::new();
+        let ctx = tiny_ctx(256);
+        store.attach_spill(&ctx);
+        for i in 0..300 {
+            store.append_rows(vec![Tuple::new(vec![Value::Int(i)])]);
+        }
+        let mut r = MatSource::new(store.clone(), 1, 0);
+        for _ in 0..100 {
+            r.next_tuple();
+        }
+        // Backward seek re-opens the window.
+        r.seek(10);
+        assert_eq!(r.next_tuple().unwrap().get(0).as_int(), Some(10));
+        // Split re-cuts the id space across chunks + resident alike.
+        let mut parts = r.split(2).unwrap();
+        let a: Vec<i64> = std::iter::from_fn(|| parts[0].next_tuple())
+            .map(|t| t.get(0).as_int().unwrap())
+            .collect();
+        let b: Vec<i64> = std::iter::from_fn(|| parts[1].next_tuple())
+            .map(|t| t.get(0).as_int().unwrap())
+            .collect();
+        let mut all: Vec<i64> = a.into_iter().chain(b).collect();
+        all.sort_unstable();
+        assert_eq!(all, (11..300).collect::<Vec<i64>>());
     }
 }

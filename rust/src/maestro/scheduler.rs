@@ -177,7 +177,13 @@ pub struct MaestroScheduler {
 }
 
 impl MaestroScheduler {
-    pub fn new(config: Config, cost: CostParams) -> MaestroScheduler {
+    pub fn new(config: Config, mut cost: CostParams) -> MaestroScheduler {
+        // The engine budget is authoritative: caller-built CostParams
+        // that didn't set one inherit `config.memory_budget_bytes`, so
+        // spill pricing is active exactly when spilling is possible.
+        if cost.memory_budget_bytes == 0.0 {
+            cost.memory_budget_bytes = config.memory_budget_bytes as f64;
+        }
         MaestroScheduler {
             config,
             cost,
@@ -511,6 +517,11 @@ impl MaestroScheduler {
         if !widths.is_empty() {
             cost.bytes_per_tuple = widths.iter().sum::<f64>() / widths.len() as f64;
         }
+        // Calibrate the spill-plane bandwidth from what the completed
+        // regions actually spilled and read back (µs/byte, same unit
+        // as the tuple-cost calibration above). Executions that never
+        // went over budget leave the configured constant in place.
+        cost.calibrate_spill(&exec.spill_stats());
         // Readers of *unfinished* writers: estimate their cardinality
         // from the rows entering the paired writer so a link whose
         // writer region is still pending doesn't fall back to the

@@ -185,6 +185,42 @@ impl SupervisionStats {
     }
 }
 
+/// Counters for the out-of-core layer (memory-budget accounting +
+/// operator/`MatStore` spilling — see `engine::spill` and the
+/// "Out-of-core execution" section of `docs/ARCHITECTURE.md`).
+/// Accumulated by the shared per-execution `SpillCtx` and surfaced
+/// through `ExecSummary::spill`; the `spill` bench section and the
+/// out-of-core equivalence suite read these.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpillStats {
+    /// Bytes written to spill files (operator partitions, sort runs,
+    /// `MatStore` chunks), including frame headers.
+    pub bytes_spilled: u64,
+    /// Bytes read back from spill files.
+    pub bytes_read_back: u64,
+    /// Hash partitions evicted to disk (join build / group-by),
+    /// counting each recursion-level eviction separately.
+    pub partitions_spilled: u64,
+    /// Spill files created over the execution (never deleted mid-run;
+    /// the whole directory is reclaimed at teardown).
+    pub spill_files_created: u64,
+    /// Deepest recursive re-partitioning reached (0 = no recursion).
+    pub max_recursion_depth: u64,
+    /// The configured `Config::memory_budget_bytes` (0 = unbounded).
+    pub budget_limit: u64,
+    /// High-water mark of bytes charged against the budget (tracked
+    /// even when unbounded — the equivalence suite derives its
+    /// constrained budgets from an unbounded run's high water).
+    pub budget_high_water: u64,
+    /// Wall time spent encoding + writing spill frames. Together with
+    /// `bytes_spilled` this is the observed spill-write bandwidth the
+    /// cost model calibrates from (`CostParams::calibrate_spill`).
+    pub spill_write_ns: u64,
+    /// Wall time spent reading + decoding spill frames (read-back
+    /// bandwidth counterpart).
+    pub spill_read_ns: u64,
+}
+
 /// Counters for the multi-tenant serving layer: admission outcomes,
 /// completions, cache effectiveness, preemption activity, and a
 /// point-in-time view of the worker budget. Snapshotted by

@@ -5,10 +5,25 @@
 //! produces scattered states merged at EOF (§3.5.4's blocking-operator
 //! conditions hold: group-by can combine scattered parts and blocks
 //! until EOF).
+//!
+//! **Out-of-core** (see `docs/ARCHITECTURE.md` "Out-of-core
+//! execution"): past the execution's memory budget either layer evicts
+//! its owned resident groups to per-partition spill files as `(key,
+//! partial...)` rows — aggregates combine associatively, so a group
+//! may be flushed many times and re-combined at read-back. At EOF a
+//! spilled layer emits partition by partition (recursively
+//! re-partitioned by the next hash nibble while a partition still
+//! exceeds the budget); foreign groups held under SBR mitigation never
+//! spill, because [`Operator::scattered_parts`] must ship them to
+//! their hash owners from resident memory.
 
 use crate::engine::operator::{Emitter, OpState, Operator};
+use crate::engine::spill::{
+    partition_of, read_slot_rows, rows_byte_size, MemLease, SpillCtx, SpillFile, SpillReader,
+    SpillSlot, SPILL_FANOUT, SPILL_MAX_DEPTH,
+};
 use crate::tuple::{Tuple, TupleBatch, Value};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Aggregate kinds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,6 +44,13 @@ fn init_acc(kind: AggKind) -> Vec<f64> {
         AggKind::Min => vec![f64::INFINITY],
         AggKind::Max => vec![f64::NEG_INFINITY],
         AggKind::Avg => vec![0.0, 0.0],
+    }
+}
+
+fn acc_width(kind: AggKind) -> usize {
+    match kind {
+        AggKind::Avg => 2,
+        _ => 1,
     }
 }
 
@@ -70,6 +92,271 @@ fn finalize(kind: AggKind, acc: &[f64]) -> f64 {
     }
 }
 
+// ---- shared out-of-core machinery ----
+
+/// Spill-slot tag: a group-by layer has one stream kind — partial rows.
+const TAG_GROUPS: u32 = 0;
+
+/// Approximate resident footprint of one group entry: the key value,
+/// the f64 accumulator slots, and map/entry overhead.
+fn group_bytes(key: &Value, width: usize) -> u64 {
+    key.byte_size() as u64 + 8 * width as u64 + 24
+}
+
+/// A group as a self-describing spill row: `(key, partial...)` — the
+/// group hash is recomputed from the key at read-back.
+fn group_row(key: &Value, acc: &[f64]) -> Tuple {
+    let mut vals = Vec::with_capacity(1 + acc.len());
+    vals.push(key.clone());
+    vals.extend(acc.iter().map(|a| Value::Float(*a)));
+    Tuple::new(vals)
+}
+
+/// Combine one spilled `(key, partial...)` row back into a group map.
+fn absorb_partial_row(groups: &mut HashMap<u64, (Value, Vec<f64>)>, kind: AggKind, t: &Tuple) {
+    let h = t.get(0).stable_hash();
+    let partial: Vec<f64> = (1..t.arity())
+        .map(|i| t.get(i).as_float().unwrap_or(0.0))
+        .collect();
+    match groups.entry(h) {
+        std::collections::hash_map::Entry::Occupied(mut e) => {
+            combine(kind, &mut e.get_mut().1, &partial);
+        }
+        std::collections::hash_map::Entry::Vacant(e) => {
+            e.insert((t.get(0).clone(), partial));
+        }
+    }
+}
+
+fn emit_row(key: &Value, acc: &[f64], kind: AggKind, emit_final: bool) -> Tuple {
+    if emit_final {
+        Tuple::new(vec![key.clone(), Value::Float(finalize(kind, acc))])
+    } else {
+        group_row(key, acc)
+    }
+}
+
+/// Per-layer out-of-core state, shared by both group-by layers.
+/// Without an attached [`SpillCtx`] every method is a no-op and the
+/// resident path is byte-identical to the pre-spill implementation.
+#[derive(Default)]
+struct GroupSpill {
+    ctx: Option<SpillCtx>,
+    lease: MemLease,
+    resident_bytes: u64,
+    files: BTreeMap<u64, SpillFile>,
+}
+
+impl GroupSpill {
+    fn attach(&mut self, ctx: &SpillCtx) {
+        self.lease = MemLease::new(ctx.budget.clone());
+        self.ctx = Some(ctx.clone());
+    }
+
+    /// Whether per-group byte accounting is worth doing at all.
+    fn tracking(&self) -> bool {
+        self.ctx.is_some()
+    }
+
+    fn note_new_group(&mut self, key: &Value, width: usize) {
+        self.resident_bytes += group_bytes(key, width);
+    }
+
+    fn has_files(&self) -> bool {
+        !self.files.is_empty()
+    }
+
+    /// Re-sync the budget charge after a bulk mutation of the map.
+    fn reset_resident(&mut self, groups: &HashMap<u64, (Value, Vec<f64>)>) {
+        if !self.tracking() {
+            return;
+        }
+        self.resident_bytes = groups
+            .values()
+            .map(|(k, a)| group_bytes(k, a.len()))
+            .sum();
+        self.lease.set(self.resident_bytes);
+    }
+
+    /// Evict owned resident groups to per-partition files when over
+    /// budget. Foreign groups (scattered state held for other hash
+    /// owners under SBR) stay resident — `scattered_parts` ships them
+    /// at EOF from memory.
+    fn maybe_spill(
+        &mut self,
+        groups: &mut HashMap<u64, (Value, Vec<f64>)>,
+        ownership: Option<(usize, usize)>,
+    ) {
+        let Some(ctx) = self.ctx.clone() else { return };
+        self.lease.set(self.resident_bytes);
+        if !ctx.budget.over() || groups.is_empty() {
+            return;
+        }
+        self.flush(&ctx, groups, ownership);
+    }
+
+    fn flush(
+        &mut self,
+        ctx: &SpillCtx,
+        groups: &mut HashMap<u64, (Value, Vec<f64>)>,
+        ownership: Option<(usize, usize)>,
+    ) {
+        let mut by_part: BTreeMap<u64, Vec<(u64, Value, Vec<f64>)>> = BTreeMap::new();
+        let mut keep = HashMap::new();
+        let mut kept_bytes = 0u64;
+        for (h, (key, acc)) in groups.drain() {
+            let foreign =
+                matches!(ownership, Some((idx, n)) if (h % n as u64) as usize != idx);
+            if foreign {
+                kept_bytes += group_bytes(&key, acc.len());
+                keep.insert(h, (key, acc));
+            } else {
+                by_part
+                    .entry(partition_of(h, 0) as u64)
+                    .or_default()
+                    .push((h, key, acc));
+            }
+        }
+        *groups = keep;
+        for (p, mut rows) in by_part {
+            rows.sort_by_key(|(h, _, _)| *h); // deterministic file content
+            let tuples: Vec<Tuple> = rows.iter().map(|(_, k, a)| group_row(k, a)).collect();
+            let file = self.files.entry(p).or_insert_with(|| {
+                ctx.counters.add_partition();
+                SpillFile::create(ctx, TAG_GROUPS, p, 0)
+            });
+            file.append(&tuples);
+        }
+        self.resident_bytes = kept_bytes;
+        self.lease.set(self.resident_bytes);
+    }
+
+    /// Read every spilled partition back into the resident map —
+    /// state-extraction paths (migration/scale) work on resident state.
+    /// The files stay on disk, orphaned, until the execution's spill
+    /// directory is reclaimed at teardown.
+    fn unspill(&mut self, groups: &mut HashMap<u64, (Value, Vec<f64>)>, kind: AggKind) {
+        let Some(ctx) = self.ctx.clone() else { return };
+        let files = std::mem::take(&mut self.files);
+        for (_, f) in files {
+            for t in read_slot_rows(&ctx, &f.slot()) {
+                absorb_partial_row(groups, kind, &t);
+            }
+        }
+        self.reset_resident(groups);
+    }
+
+    fn snapshot_slots(&self) -> Vec<SpillSlot> {
+        self.files.values().map(|f| f.slot()).collect()
+    }
+
+    fn restore_slots(&mut self, slots: Vec<SpillSlot>) {
+        self.files.clear();
+        if slots.is_empty() {
+            return;
+        }
+        let ctx = self.ctx.clone().expect("spill ctx attached before restore");
+        for slot in slots {
+            self.files.insert(slot.scope, SpillFile::reopen(&ctx, &slot));
+        }
+    }
+
+    /// EOF emission once anything spilled: flush the owned remainder,
+    /// then combine and emit partition by partition. Output order is
+    /// (partition, hash) rather than global hash order — group-by
+    /// output is consumed as a multiset (an exchange or a sink
+    /// comparison), so only the set of rows must match the resident
+    /// path, and it does: combining is associative.
+    fn finish_emit(
+        &mut self,
+        groups: &mut HashMap<u64, (Value, Vec<f64>)>,
+        ownership: Option<(usize, usize)>,
+        kind: AggKind,
+        emit_final: bool,
+        out: &mut dyn Emitter,
+    ) {
+        let ctx = self.ctx.clone().expect("spill ctx attached");
+        self.flush(&ctx, groups, ownership);
+        let files = std::mem::take(&mut self.files);
+        for (_, f) in files {
+            self.emit_partition(&ctx, f.slot(), 0, kind, emit_final, out);
+        }
+        // Foreign remainder (held for other owners but never shipped —
+        // no scatter-merge pairing): emit hash-sorted like the
+        // resident path.
+        let mut keys: Vec<u64> = groups.keys().copied().collect();
+        keys.sort_unstable();
+        for h in keys {
+            let (key, acc) = &groups[&h];
+            out.emit(emit_row(key, acc, kind, emit_final));
+        }
+        groups.clear();
+        self.reset_resident(groups);
+    }
+
+    /// Combine-and-emit one spilled partition, recursively
+    /// re-partitioning by the next hash nibble while its file still
+    /// exceeds the budget (bounded by [`SPILL_MAX_DEPTH`], past which
+    /// it is combined in memory regardless — correctness over
+    /// strictness).
+    fn emit_partition(
+        &mut self,
+        ctx: &SpillCtx,
+        slot: SpillSlot,
+        depth: u32,
+        kind: AggKind,
+        emit_final: bool,
+        out: &mut dyn Emitter,
+    ) {
+        ctx.counters.observe_depth(depth);
+        let limit = ctx.budget.limit();
+        if limit > 0 && slot.bytes > limit && depth < SPILL_MAX_DEPTH {
+            let next = depth + 1;
+            let mut subs: Vec<Option<SpillFile>> = (0..SPILL_FANOUT).map(|_| None).collect();
+            let mut reader = SpillReader::open(ctx, &slot);
+            while let Some(rows) = reader.next_rows() {
+                let mut buckets: Vec<Vec<Tuple>> =
+                    (0..SPILL_FANOUT).map(|_| Vec::new()).collect();
+                for t in rows {
+                    buckets[partition_of(t.get(0).stable_hash(), next)].push(t);
+                }
+                for (i, b) in buckets.into_iter().enumerate() {
+                    if b.is_empty() {
+                        continue;
+                    }
+                    let scope = (slot.scope << 4) | i as u64;
+                    let f = subs[i].get_or_insert_with(|| {
+                        ctx.counters.add_partition();
+                        SpillFile::create(ctx, TAG_GROUPS, scope, 0)
+                    });
+                    f.append(&b);
+                }
+            }
+            for s in subs.iter_mut() {
+                if let Some(f) = s.take() {
+                    self.emit_partition(ctx, f.slot(), next, kind, emit_final, out);
+                }
+            }
+            return;
+        }
+        // Terminal: combine the partition in memory (charged against
+        // the budget for the duration) and emit hash-sorted.
+        let rows = read_slot_rows(ctx, &slot);
+        let mut lease = MemLease::new(ctx.budget.clone());
+        lease.set(rows_byte_size(&rows));
+        let mut map: HashMap<u64, (Value, Vec<f64>)> = HashMap::new();
+        for t in &rows {
+            absorb_partial_row(&mut map, kind, t);
+        }
+        let mut keys: Vec<u64> = map.keys().copied().collect();
+        keys.sort_unstable();
+        for h in keys {
+            let (key, acc) = &map[&h];
+            out.emit(emit_row(key, acc, kind, emit_final));
+        }
+    }
+}
+
 /// First layer: local partial aggregation; emits (group_key,
 /// partial...) at EOF. Keeps the *group value* alongside the hash so
 /// output tuples carry the real key.
@@ -84,11 +371,19 @@ pub struct GroupByPartial {
     /// even on a single core — the elastic-scaling benchmark workload.
     pub cost_ns: u64,
     groups: HashMap<u64, (Value, Vec<f64>)>,
+    spill: GroupSpill,
 }
 
 impl GroupByPartial {
     pub fn new(key_field: usize, value_field: usize, kind: AggKind) -> GroupByPartial {
-        GroupByPartial { key_field, value_field, kind, cost_ns: 0, groups: HashMap::new() }
+        GroupByPartial {
+            key_field,
+            value_field,
+            kind,
+            cost_ns: 0,
+            groups: HashMap::new(),
+            spill: GroupSpill::default(),
+        }
     }
 
     /// Builder: artificial latency-bound per-tuple cost.
@@ -99,14 +394,8 @@ impl GroupByPartial {
 
     #[inline]
     fn absorb(&mut self, t: &Tuple) {
-        let key = t.get(self.key_field);
-        let h = key.stable_hash();
-        let v = t.get(self.value_field).as_float().unwrap_or(0.0);
-        let entry = self
-            .groups
-            .entry(h)
-            .or_insert_with(|| (key.clone(), init_acc(self.kind)));
-        accumulate(self.kind, &mut entry.1, v);
+        let h = t.get(self.key_field).stable_hash();
+        self.absorb_hashed(t, h);
     }
 
     /// Row absorb with a pre-computed group hash (shipped by the
@@ -116,6 +405,9 @@ impl GroupByPartial {
         let v = t.get(self.value_field).as_float().unwrap_or(0.0);
         let kind = self.kind;
         let kf = self.key_field;
+        if self.spill.tracking() && !self.groups.contains_key(&h) {
+            self.spill.note_new_group(t.get(kf), acc_width(kind));
+        }
         let entry = self
             .groups
             .entry(h)
@@ -145,7 +437,12 @@ impl GroupByPartial {
         let mut vbuf = Vec::new();
         val_col.float_or_zero_range(cv.start, cv.end, &mut vbuf);
         let kind = self.kind;
+        let track = self.spill.tracking();
         for (i, (&h, &v)) in hs.iter().zip(vbuf.iter()).enumerate() {
+            if track && !self.groups.contains_key(&h) {
+                self.spill
+                    .note_new_group(&key_col.value_at(cv.start + i), acc_width(kind));
+            }
             let entry = self
                 .groups
                 .entry(h)
@@ -161,11 +458,16 @@ impl Operator for GroupByPartial {
         "group_by_partial"
     }
 
+    fn attach_spill(&mut self, ctx: &SpillCtx) {
+        self.spill.attach(ctx);
+    }
+
     fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
         if self.cost_ns > 0 {
             std::thread::sleep(std::time::Duration::from_nanos(self.cost_ns));
         }
         self.absorb(&t);
+        self.spill.maybe_spill(&mut self.groups, None);
     }
 
     /// Pre-aggregation reads tuples straight out of the shared batch —
@@ -180,12 +482,12 @@ impl Operator for GroupByPartial {
                 self.cost_ns * batch.len() as u64,
             ));
         }
-        if self.absorb_columnar(batch, None) {
-            return;
+        if !self.absorb_columnar(batch, None) {
+            for t in batch.iter() {
+                self.absorb(t);
+            }
         }
-        for t in batch.iter() {
-            self.absorb(t);
-        }
+        self.spill.maybe_spill(&mut self.groups, None);
     }
 
     /// Shipped-hash fast path: when the exchange partitioned on this
@@ -208,15 +510,20 @@ impl Operator for GroupByPartial {
                 self.cost_ns * batch.len() as u64,
             ));
         }
-        if self.absorb_columnar(batch, Some(hashes)) {
-            return;
+        if !self.absorb_columnar(batch, Some(hashes)) {
+            for (t, &h) in batch.iter().zip(hashes.iter()) {
+                self.absorb_hashed(t, h);
+            }
         }
-        for (t, &h) in batch.iter().zip(hashes.iter()) {
-            self.absorb_hashed(t, h);
-        }
+        self.spill.maybe_spill(&mut self.groups, None);
     }
 
     fn finish(&mut self, out: &mut dyn Emitter) {
+        if self.spill.has_files() {
+            self.spill
+                .finish_emit(&mut self.groups, None, self.kind, false, out);
+            return;
+        }
         // Emit (key, partial0[, partial1]) for the final layer.
         let mut keys: Vec<u64> = self.groups.keys().copied().collect();
         keys.sort_unstable(); // deterministic output order (A3)
@@ -235,10 +542,12 @@ impl Operator for GroupByPartial {
             s.keyed_tuples
                 .insert(*h, vec![Tuple::new(vec![key.clone()])]);
         }
+        s.spill = self.spill.snapshot_slots();
         s
     }
 
-    fn restore(&mut self, s: OpState) {
+    fn restore(&mut self, mut s: OpState) {
+        self.spill.restore_slots(std::mem::take(&mut s.spill));
         self.groups.clear();
         for (h, acc) in s.keyed_aggs {
             let key = s.keyed_tuples
@@ -248,6 +557,7 @@ impl Operator for GroupByPartial {
                 .unwrap_or(Value::Null);
             self.groups.insert(h, (key, acc));
         }
+        self.spill.reset_resident(&self.groups);
     }
 
     fn state_size(&self) -> usize {
@@ -255,6 +565,7 @@ impl Operator for GroupByPartial {
     }
 
     fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        self.spill.unspill(&mut self.groups, self.kind);
         let mut out = OpState::default();
         let targets: Vec<u64> = match keys {
             None => self.groups.keys().copied().collect(),
@@ -271,6 +582,7 @@ impl Operator for GroupByPartial {
                 out.keyed_tuples.insert(h, vec![Tuple::new(vec![key])]);
             }
         }
+        self.spill.reset_resident(&self.groups);
         out
     }
 
@@ -290,6 +602,8 @@ impl Operator for GroupByPartial {
                 }
             }
         }
+        self.spill.reset_resident(&self.groups);
+        self.spill.maybe_spill(&mut self.groups, None);
     }
 
     fn state_mutable(&self) -> bool {
@@ -306,18 +620,29 @@ pub struct GroupByFinal {
     /// the operator runs under SBR mitigation so foreign groups
     /// (scattered state, §3.5.4) can be shipped to their owners at EOF.
     ownership: Option<(usize, usize)>,
+    spill: GroupSpill,
 }
 
 impl GroupByFinal {
     pub fn new(kind: AggKind) -> GroupByFinal {
-        GroupByFinal { kind, groups: HashMap::new(), ownership: None }
+        GroupByFinal {
+            kind,
+            groups: HashMap::new(),
+            ownership: None,
+            spill: GroupSpill::default(),
+        }
     }
 
     /// Group-by worker `idx` of `n` under hash partitioning; enables
     /// scattered-state resolution (pair with
     /// [`OpSpec::with_scatter_merge`](crate::engine::dag::OpSpec::with_scatter_merge)).
     pub fn new_partitioned(kind: AggKind, idx: usize, n: usize) -> GroupByFinal {
-        GroupByFinal { kind, groups: HashMap::new(), ownership: Some((idx, n)) }
+        GroupByFinal {
+            kind,
+            groups: HashMap::new(),
+            ownership: Some((idx, n)),
+            spill: GroupSpill::default(),
+        }
     }
 
     #[inline]
@@ -333,6 +658,9 @@ impl GroupByFinal {
         let partial: Vec<f64> = (1..t.arity())
             .map(|i| t.get(i).as_float().unwrap_or(0.0))
             .collect();
+        if self.spill.tracking() && !self.groups.contains_key(&h) {
+            self.spill.note_new_group(t.get(0), partial.len());
+        }
         match self.groups.entry(h) {
             std::collections::hash_map::Entry::Occupied(mut e) => {
                 combine(self.kind, &mut e.get_mut().1, &partial);
@@ -368,8 +696,13 @@ impl GroupByFinal {
             part_cols.push(v);
         }
         let kind = self.kind;
+        let track = self.spill.tracking();
         for (i, &h) in hs.iter().enumerate() {
             let partial: Vec<f64> = part_cols.iter().map(|c| c[i]).collect();
+            if track && !self.groups.contains_key(&h) {
+                self.spill
+                    .note_new_group(&key_col.value_at(cv.start + i), partial.len());
+            }
             match self.groups.entry(h) {
                 std::collections::hash_map::Entry::Occupied(mut e) => {
                     combine(kind, &mut e.get_mut().1, &partial);
@@ -392,17 +725,24 @@ impl Operator for GroupByFinal {
         vec![0]
     }
 
+    fn attach_spill(&mut self, ctx: &SpillCtx) {
+        self.spill.attach(ctx);
+    }
+
     fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
         self.absorb(&t);
+        let own = self.ownership;
+        self.spill.maybe_spill(&mut self.groups, own);
     }
 
     fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
-        if self.absorb_columnar(batch, None) {
-            return;
+        if !self.absorb_columnar(batch, None) {
+            for t in batch.iter() {
+                self.absorb(t);
+            }
         }
-        for t in batch.iter() {
-            self.absorb(t);
-        }
+        let own = self.ownership;
+        self.spill.maybe_spill(&mut self.groups, own);
     }
 
     /// Shipped-hash fast path: the final layer is hash-partitioned on
@@ -420,15 +760,22 @@ impl Operator for GroupByFinal {
             self.process_batch(batch, port, out);
             return;
         }
-        if self.absorb_columnar(batch, Some(hashes)) {
-            return;
+        if !self.absorb_columnar(batch, Some(hashes)) {
+            for (t, &h) in batch.iter().zip(hashes.iter()) {
+                self.absorb_hashed(t, h);
+            }
         }
-        for (t, &h) in batch.iter().zip(hashes.iter()) {
-            self.absorb_hashed(t, h);
-        }
+        let own = self.ownership;
+        self.spill.maybe_spill(&mut self.groups, own);
     }
 
     fn finish(&mut self, out: &mut dyn Emitter) {
+        if self.spill.has_files() {
+            let own = self.ownership;
+            self.spill
+                .finish_emit(&mut self.groups, own, self.kind, true, out);
+            return;
+        }
         let mut keys: Vec<u64> = self.groups.keys().copied().collect();
         keys.sort_unstable();
         for h in keys {
@@ -447,10 +794,12 @@ impl Operator for GroupByFinal {
             s.keyed_tuples
                 .insert(*h, vec![Tuple::new(vec![key.clone()])]);
         }
+        s.spill = self.spill.snapshot_slots();
         s
     }
 
-    fn restore(&mut self, s: OpState) {
+    fn restore(&mut self, mut s: OpState) {
+        self.spill.restore_slots(std::mem::take(&mut s.spill));
         self.groups.clear();
         for (h, acc) in s.keyed_aggs {
             let key = s.keyed_tuples
@@ -460,6 +809,7 @@ impl Operator for GroupByFinal {
                 .unwrap_or(Value::Null);
             self.groups.insert(h, (key, acc));
         }
+        self.spill.reset_resident(&self.groups);
     }
 
     fn state_size(&self) -> usize {
@@ -467,6 +817,7 @@ impl Operator for GroupByFinal {
     }
 
     fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        self.spill.unspill(&mut self.groups, self.kind);
         let mut out = OpState::default();
         let targets: Vec<u64> = match keys {
             None => self.groups.keys().copied().collect(),
@@ -483,6 +834,7 @@ impl Operator for GroupByFinal {
                 out.keyed_tuples.insert(h, vec![Tuple::new(vec![key])]);
             }
         }
+        self.spill.reset_resident(&self.groups);
         out
     }
 
@@ -504,6 +856,9 @@ impl Operator for GroupByFinal {
                 }
             }
         }
+        self.spill.reset_resident(&self.groups);
+        let own = self.ownership;
+        self.spill.maybe_spill(&mut self.groups, own);
     }
 
     fn state_mutable(&self) -> bool {
@@ -522,6 +877,8 @@ impl Operator for GroupByFinal {
         // Ship foreign groups (received through mitigation routes) back
         // to their hash owners at EOF (§3.5.4): aggregates combine
         // associatively, so the owner's merge_state yields exact totals.
+        // Foreign groups never spill (GroupSpill keeps them resident),
+        // so this works off the in-memory map alone.
         let Some((idx, n)) = self.ownership else { return Vec::new() };
         let foreign: Vec<u64> = self
             .groups
@@ -537,6 +894,7 @@ impl Operator for GroupByFinal {
             st.keyed_aggs.insert(h, acc);
             st.keyed_tuples.insert(h, vec![Tuple::new(vec![key])]);
         }
+        self.spill.reset_resident(&self.groups);
         by_owner.into_iter().collect()
     }
 }
@@ -544,6 +902,7 @@ impl Operator for GroupByFinal {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Config;
     use crate::engine::operator::VecEmitter;
 
     fn t2(k: i64, v: f64) -> Tuple {
@@ -551,13 +910,25 @@ mod tests {
     }
 
     fn run_two_layer(kind: AggKind, input: Vec<Tuple>) -> HashMap<i64, f64> {
+        run_two_layer_ctx(kind, input, None)
+    }
+
+    fn run_two_layer_ctx(
+        kind: AggKind,
+        input: Vec<Tuple>,
+        ctx: Option<&SpillCtx>,
+    ) -> HashMap<i64, f64> {
         let mut partial = GroupByPartial::new(0, 1, kind);
+        let mut fin = GroupByFinal::new(kind);
+        if let Some(c) = ctx {
+            partial.attach_spill(c);
+            fin.attach_spill(c);
+        }
         let mut out1 = VecEmitter::default();
         for t in input {
             partial.process(t, 0, &mut out1);
         }
         partial.finish(&mut out1);
-        let mut fin = GroupByFinal::new(kind);
         let mut out2 = VecEmitter::default();
         for t in out1.0 {
             fin.process(t, 0, &mut out2);
@@ -735,5 +1106,95 @@ mod tests {
     fn groupby_is_mutable_state() {
         assert!(GroupByPartial::new(0, 1, AggKind::Sum).state_mutable());
         assert!(GroupByFinal::new(AggKind::Sum).state_mutable());
+    }
+
+    // ---- out-of-core ----
+
+    fn tiny_ctx(limit: u64) -> SpillCtx {
+        let mut cfg = Config::for_tests();
+        cfg.memory_budget_bytes = limit;
+        SpillCtx::new(&cfg)
+    }
+
+    #[test]
+    fn spilled_two_layer_matches_unbounded() {
+        for kind in [AggKind::Count, AggKind::Sum, AggKind::Min, AggKind::Max, AggKind::Avg] {
+            let rows: Vec<Tuple> = (0..500).map(|i| t2(i % 43, i as f64 * 0.25)).collect();
+            let unbounded = run_two_layer(kind, rows.clone());
+            let ctx = tiny_ctx(256); // far below resident group state
+            let spilled = run_two_layer_ctx(kind, rows, Some(&ctx));
+            assert_eq!(spilled, unbounded, "kind {kind:?}");
+            let stats = ctx.counters.snapshot(&ctx.budget);
+            assert!(stats.bytes_spilled > 0, "tiny budget must spill");
+        }
+    }
+
+    #[test]
+    fn spilled_snapshot_restores_byte_exact() {
+        let rows: Vec<Tuple> = (0..400).map(|i| t2(i % 31, i as f64)).collect();
+        let unbounded = run_two_layer(AggKind::Sum, rows.clone());
+        let ctx = tiny_ctx(256);
+        let mut p = GroupByPartial::new(0, 1, AggKind::Sum);
+        p.attach_spill(&ctx);
+        let mut o = VecEmitter::default();
+        for t in rows {
+            p.process(t, 0, &mut o);
+        }
+        let snap = p.snapshot();
+        assert!(!snap.spill.is_empty(), "manifest carries spilled partitions");
+        // Post-snapshot absorbs must be truncated away by restore.
+        p.process(t2(999, 1e9), 0, &mut o);
+        let mut q = GroupByPartial::new(0, 1, AggKind::Sum);
+        q.attach_spill(&ctx);
+        q.restore(snap);
+        let mut o1 = VecEmitter::default();
+        q.finish(&mut o1);
+        let mut f = GroupByFinal::new(AggKind::Sum);
+        let mut o2 = VecEmitter::default();
+        for t in o1.0 {
+            f.process(t, 0, &mut o2);
+        }
+        f.finish(&mut o2);
+        let got: HashMap<i64, f64> = o2
+            .0
+            .iter()
+            .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+            .collect();
+        assert_eq!(got, unbounded);
+    }
+
+    #[test]
+    fn spilled_extract_sees_all_groups() {
+        let ctx = tiny_ctx(128);
+        let mut p = GroupByPartial::new(0, 1, AggKind::Count);
+        p.attach_spill(&ctx);
+        let mut o = VecEmitter::default();
+        for i in 0..200 {
+            p.process(t2(i % 50, 1.0), 0, &mut o);
+        }
+        assert!(p.spill.has_files(), "must have spilled");
+        let st = p.extract_state(None, false);
+        assert_eq!(st.keyed_aggs.len(), 50, "extraction sees spilled + resident groups");
+        assert_eq!(p.state_size(), 0);
+    }
+
+    #[test]
+    fn foreign_groups_never_spill() {
+        let ctx = tiny_ctx(64);
+        // Worker 0 of 4: ~3/4 of groups are foreign (held for other
+        // owners) and must stay resident for scattered_parts.
+        let mut f = GroupByFinal::new_partitioned(AggKind::Sum, 0, 4);
+        f.attach_spill(&ctx);
+        let mut o = VecEmitter::default();
+        for i in 0..200 {
+            f.process(t2(i % 40, 1.0), 0, &mut o);
+        }
+        let shipped = f.scattered_parts();
+        let shipped_groups: usize = shipped.iter().map(|(_, s)| s.keyed_aggs.len()).sum();
+        assert!(shipped_groups > 0, "foreign groups ship from memory");
+        assert!(
+            shipped.iter().all(|(owner, _)| *owner != 0),
+            "only foreign owners receive scattered parts"
+        );
     }
 }

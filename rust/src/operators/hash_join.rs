@@ -14,10 +14,28 @@
 //! probe tuple arriving before build EOF is an error; in buffering mode
 //! (default) such tuples are buffered and replayed at build EOF — the
 //! memory cost Maestro's materialization planning avoids.
+//!
+//! **Out-of-core** (Grace-style, see `docs/ARCHITECTURE.md`
+//! "Out-of-core execution"): past the execution's memory budget the
+//! join evicts whole depth-0 hash partitions
+//! ([`crate::engine::spill::partition_of`]) of the build table to
+//! spill files; probe tuples whose partition is spilled stream to
+//! matching probe files, and at EOF each spilled partition pair is
+//! joined from disk — recursively re-partitioned by the next hash
+//! nibble while the build side still exceeds the budget. Results are
+//! byte-identical to the in-memory path (the out-of-core equivalence
+//! suite pins this); spilled build state re-enters memory before any
+//! state extraction (migration/scale), and spilled *probe input*
+//! returns through [`Operator::drain_buffered_input`] like the
+//! early-probe buffer.
 
 use crate::engine::operator::{Emitter, OpState, Operator};
+use crate::engine::spill::{
+    partition_of, read_slot_rows, rows_byte_size, MemLease, SpillCtx, SpillFile, SpillReader,
+    SPILL_FANOUT, SPILL_MAX_DEPTH,
+};
 use crate::tuple::{Tuple, TupleBatch};
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 fn busy_spin(ns: u64) {
     let t0 = std::time::Instant::now();
@@ -31,12 +49,17 @@ pub const BUILD: usize = 0;
 /// Probe port index.
 pub const PROBE: usize = 1;
 
+// Spill-slot tags (the join's stream kinds inside its manifest).
+const TAG_BUILD: u32 = 0;
+const TAG_PROBE: u32 = 1;
+const TAG_EARLY: u32 = 2;
+
 pub struct HashJoin {
     /// Key field in build tuples.
     pub build_key: usize,
     /// Key field in probe tuples.
     pub probe_key: usize,
-    /// Hash table: key hash → build tuples.
+    /// Hash table: key hash → build tuples (resident partitions only).
     table: HashMap<u64, Vec<Tuple>>,
     build_done: bool,
     /// Probe tuples that arrived before build EOF (buffering mode).
@@ -50,6 +73,19 @@ pub struct HashJoin {
     /// (§3.3.1); this models the paper's expensive join workers.
     pub probe_cost_ns: u64,
     tuples_in_state: usize,
+
+    // Out-of-core state (None / empty without an attached SpillCtx or
+    // under an unbounded budget — the resident path is unchanged).
+    spill: Option<SpillCtx>,
+    lease: MemLease,
+    /// Resident bytes currently charged: table rows + early-probe rows.
+    resident_bytes: u64,
+    /// Depth-0 partitions evicted to disk; build inserts and probe
+    /// lookups for these route to files.
+    spilled: BTreeSet<u64>,
+    build_files: HashMap<u64, SpillFile>,
+    probe_files: HashMap<u64, SpillFile>,
+    early_file: Option<SpillFile>,
 }
 
 impl HashJoin {
@@ -64,6 +100,13 @@ impl HashJoin {
             violated: false,
             probe_cost_ns: 0,
             tuples_in_state: 0,
+            spill: None,
+            lease: MemLease::default(),
+            resident_bytes: 0,
+            spilled: BTreeSet::new(),
+            build_files: HashMap::new(),
+            probe_files: HashMap::new(),
+            early_file: None,
         }
     }
 
@@ -90,24 +133,71 @@ impl HashJoin {
     /// Probe a whole batch off a precomputed hash column (shipped by
     /// the sender or hashed here with the typed column kernel). Rows
     /// materialize lazily: a miss never touches the row view, so a
-    /// selective probe of a columnar batch stays column-only.
-    fn probe_hashed(&self, batch: &TupleBatch, hashes: &[u64], out: &mut dyn Emitter) {
+    /// selective probe of a columnar batch stays column-only. Probe
+    /// rows belonging to spilled partitions stream to their partition
+    /// file instead.
+    fn probe_hashed(&mut self, batch: &TupleBatch, hashes: &[u64], out: &mut dyn Emitter) {
+        if self.spilled.is_empty() {
+            for (i, &h) in hashes.iter().enumerate() {
+                if let Some(matches) = self.table.get(&h) {
+                    let t = batch.get(i);
+                    for b in matches {
+                        out.emit(b.concat(t));
+                    }
+                }
+            }
+            return;
+        }
+        let mut to_file: HashMap<u64, Vec<Tuple>> = HashMap::new();
         for (i, &h) in hashes.iter().enumerate() {
-            if let Some(matches) = self.table.get(&h) {
+            let p = partition_of(h, 0) as u64;
+            if self.spilled.contains(&p) {
+                to_file.entry(p).or_default().push(batch.get(i).clone());
+            } else if let Some(matches) = self.table.get(&h) {
                 let t = batch.get(i);
                 for b in matches {
                     out.emit(b.concat(t));
                 }
             }
         }
+        let mut parts: Vec<u64> = to_file.keys().copied().collect();
+        parts.sort_unstable();
+        for p in parts {
+            let rows = to_file.remove(&p).unwrap();
+            self.probe_file(p).append(&rows);
+        }
     }
 
     /// Bulk build insert off a precomputed hash column.
     fn build_hashed(&mut self, batch: &TupleBatch, hashes: &[u64]) {
-        for (i, &h) in hashes.iter().enumerate() {
-            self.table.entry(h).or_default().push(batch.get(i).clone());
+        if self.spilled.is_empty() {
+            for (i, &h) in hashes.iter().enumerate() {
+                let t = batch.get(i).clone();
+                self.resident_bytes += t.byte_size() as u64;
+                self.table.entry(h).or_default().push(t);
+            }
+        } else {
+            let mut to_file: HashMap<u64, Vec<Tuple>> = HashMap::new();
+            for (i, &h) in hashes.iter().enumerate() {
+                let t = batch.get(i).clone();
+                let p = partition_of(h, 0) as u64;
+                if self.spilled.contains(&p) {
+                    to_file.entry(p).or_default().push(t);
+                } else {
+                    self.resident_bytes += t.byte_size() as u64;
+                    self.table.entry(h).or_default().push(t);
+                }
+            }
+            let mut parts: Vec<u64> = to_file.keys().copied().collect();
+            parts.sort_unstable();
+            for p in parts {
+                let rows = to_file.remove(&p).unwrap();
+                self.build_file(p).append(&rows);
+            }
         }
         self.tuples_in_state += batch.len();
+        self.lease.set(self.resident_bytes);
+        self.maybe_spill();
     }
 
     /// Hash the key column of a columnar batch with the typed
@@ -119,6 +209,209 @@ impl HashJoin {
         let mut hashes = Vec::new();
         col.hash_range(cv.start, cv.end, &mut hashes);
         Some(hashes)
+    }
+
+    // ---- out-of-core plumbing ----
+
+    fn build_file(&mut self, p: u64) -> &mut SpillFile {
+        let ctx = self.spill.as_ref().expect("spill ctx attached");
+        self.build_files
+            .entry(p)
+            .or_insert_with(|| SpillFile::create(ctx, TAG_BUILD, p, 0))
+    }
+
+    fn probe_file(&mut self, p: u64) -> &mut SpillFile {
+        let ctx = self.spill.as_ref().expect("spill ctx attached");
+        self.probe_files
+            .entry(p)
+            .or_insert_with(|| SpillFile::create(ctx, TAG_PROBE, p, 0))
+    }
+
+    /// One build-tuple insert, routed past the budget: spilled
+    /// partitions append straight to their file (per-key insertion
+    /// order is preserved — evicted rows were written in key order at
+    /// eviction time, later arrivals append after).
+    fn insert_build(&mut self, h: u64, t: Tuple) {
+        self.tuples_in_state += 1;
+        let p = partition_of(h, 0) as u64;
+        if self.spilled.contains(&p) {
+            let rows = [t];
+            self.build_file(p).append(&rows);
+        } else {
+            self.resident_bytes += t.byte_size() as u64;
+            self.table.entry(h).or_default().push(t);
+            self.lease.set(self.resident_bytes);
+            self.maybe_spill();
+        }
+    }
+
+    /// While over budget, evict the largest resident build partition
+    /// (then the early-probe buffer) to disk.
+    fn maybe_spill(&mut self) {
+        let Some(ctx) = self.spill.clone() else { return };
+        if !ctx.budget.over() {
+            return;
+        }
+        while ctx.budget.over() && self.evict_largest_partition(&ctx) {}
+        if ctx.budget.over() && !self.early_probe.is_empty() {
+            let rows = std::mem::take(&mut self.early_probe);
+            self.resident_bytes -= rows_byte_size(&rows);
+            let f = self
+                .early_file
+                .get_or_insert_with(|| SpillFile::create(&ctx, TAG_EARLY, 0, 0));
+            f.append(&rows);
+            self.lease.set(self.resident_bytes);
+        }
+    }
+
+    fn evict_largest_partition(&mut self, ctx: &SpillCtx) -> bool {
+        let mut sizes: HashMap<u64, u64> = HashMap::new();
+        for (k, v) in &self.table {
+            *sizes.entry(partition_of(*k, 0) as u64).or_insert(0) += rows_byte_size(v);
+        }
+        let Some((&p, _)) = sizes
+            .iter()
+            .max_by_key(|&(&p, &b)| (b, std::cmp::Reverse(p)))
+        else {
+            return false;
+        };
+        let mut keys: Vec<u64> = self
+            .table
+            .keys()
+            .copied()
+            .filter(|k| partition_of(*k, 0) as u64 == p)
+            .collect();
+        keys.sort_unstable();
+        for k in keys {
+            let rows = self.table.remove(&k).unwrap();
+            self.resident_bytes -= rows_byte_size(&rows);
+            self.build_file(p).append(&rows);
+        }
+        self.spilled.insert(p);
+        ctx.counters.add_partition();
+        self.lease.set(self.resident_bytes);
+        true
+    }
+
+    /// Read every spilled build partition back into the resident table
+    /// (state extraction paths: migration/scale work on resident
+    /// state). Files stay on disk, orphaned, until the execution's
+    /// spill directory is reclaimed at teardown.
+    fn unspill_build(&mut self) {
+        let Some(ctx) = self.spill.clone() else { return };
+        let mut parts: Vec<u64> = self.build_files.keys().copied().collect();
+        parts.sort_unstable();
+        for p in parts {
+            let f = self.build_files.remove(&p).unwrap();
+            for t in read_slot_rows(&ctx, &f.slot()) {
+                let h = t.get(self.build_key).stable_hash();
+                self.resident_bytes += t.byte_size() as u64;
+                self.table.entry(h).or_default().push(t);
+            }
+        }
+        self.spilled.clear();
+        self.lease.set(self.resident_bytes);
+    }
+
+    /// Dispatch one post-build-EOF probe tuple: spilled partition →
+    /// probe file; resident → immediate probe.
+    fn dispatch_probe(&mut self, t: &Tuple, out: &mut dyn Emitter) {
+        let h = t.get(self.probe_key).stable_hash();
+        let p = partition_of(h, 0) as u64;
+        if self.spilled.contains(&p) {
+            let rows = [t.clone()];
+            self.probe_file(p).append(&rows);
+        } else if let Some(matches) = self.table.get(&h) {
+            for b in matches {
+                out.emit(b.concat(t));
+            }
+        }
+    }
+
+    /// Join one spilled partition pair from disk, recursively
+    /// re-partitioning by the next hash nibble while the build side
+    /// still exceeds the budget (classic Grace recursion; bounded by
+    /// [`SPILL_MAX_DEPTH`], past which the partition is processed in
+    /// memory regardless — correctness over strictness).
+    fn join_partition(
+        &mut self,
+        ctx: &SpillCtx,
+        build: crate::engine::spill::SpillSlot,
+        probe: Option<crate::engine::spill::SpillSlot>,
+        depth: u32,
+        out: &mut dyn Emitter,
+    ) {
+        ctx.counters.observe_depth(depth);
+        let limit = ctx.budget.limit();
+        if limit > 0 && build.bytes > limit && depth < SPILL_MAX_DEPTH {
+            let next = depth + 1;
+            let mut sub_build: Vec<Option<SpillFile>> =
+                (0..SPILL_FANOUT).map(|_| None).collect();
+            let mut sub_probe: Vec<Option<SpillFile>> =
+                (0..SPILL_FANOUT).map(|_| None).collect();
+            let mut repartition =
+                |slot: &crate::engine::spill::SpillSlot,
+                 key: usize,
+                 tag: u32,
+                 subs: &mut Vec<Option<SpillFile>>| {
+                    let mut reader = SpillReader::open(ctx, slot);
+                    while let Some(rows) = reader.next_rows() {
+                        let mut buckets: Vec<Vec<Tuple>> =
+                            (0..SPILL_FANOUT).map(|_| Vec::new()).collect();
+                        for t in rows {
+                            let h = t.get(key).stable_hash();
+                            buckets[partition_of(h, next)].push(t);
+                        }
+                        for (i, b) in buckets.into_iter().enumerate() {
+                            if b.is_empty() {
+                                continue;
+                            }
+                            let scope = (slot.scope << 4) | i as u64;
+                            let f = subs[i].get_or_insert_with(|| {
+                                SpillFile::create(ctx, tag, scope, 0)
+                            });
+                            f.append(&b);
+                        }
+                    }
+                };
+            repartition(&build, self.build_key, TAG_BUILD, &mut sub_build);
+            if let Some(p) = &probe {
+                repartition(p, self.probe_key, TAG_PROBE, &mut sub_probe);
+            }
+            for i in 0..SPILL_FANOUT {
+                let Some(bf) = sub_build[i].take() else { continue };
+                ctx.counters.add_partition();
+                let pf = sub_probe[i].take().map(|f| f.slot());
+                self.join_partition(ctx, bf.slot(), pf, next, out);
+            }
+            // Probe rows with no build rows in their sub-partition can
+            // match nothing — dropped with their files.
+            return;
+        }
+        // Terminal: load the build side into a map, stream the probe
+        // side frame by frame. The load is charged against the budget
+        // for the duration (RAII lease).
+        let rows = read_slot_rows(ctx, &build);
+        let mut lease = MemLease::new(ctx.budget.clone());
+        lease.set(rows_byte_size(&rows));
+        let mut map: HashMap<u64, Vec<Tuple>> = HashMap::new();
+        for t in rows {
+            map.entry(t.get(self.build_key).stable_hash()).or_default().push(t);
+        }
+        if let Some(p) = probe {
+            let mut reader = SpillReader::open(ctx, &p);
+            while let Some(rows) = reader.next_rows() {
+                for t in rows {
+                    // probe_cost_ns was already paid when the tuple
+                    // arrived and was routed to the file — no re-spin.
+                    if let Some(matches) = map.get(&t.get(self.probe_key).stable_hash()) {
+                        for b in matches {
+                            out.emit(b.concat(&t));
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -135,24 +428,35 @@ impl Operator for HashJoin {
         vec![BUILD]
     }
 
+    fn attach_spill(&mut self, ctx: &SpillCtx) {
+        self.spill = Some(ctx.clone());
+        self.lease = MemLease::new(ctx.budget.clone());
+    }
+
     fn process(&mut self, t: Tuple, port: usize, out: &mut dyn Emitter) {
         match port {
             BUILD => {
                 let h = t.get(self.build_key).stable_hash();
-                self.table.entry(h).or_default().push(t);
-                self.tuples_in_state += 1;
+                self.insert_build(h, t);
             }
             PROBE => {
                 if self.probe_cost_ns > 0 {
                     busy_spin(self.probe_cost_ns);
                 }
                 if self.build_done {
-                    self.probe_one(&t, out);
+                    if self.spilled.is_empty() {
+                        self.probe_one(&t, out);
+                    } else {
+                        self.dispatch_probe(&t, out);
+                    }
                 } else if self.strict {
                     // The Fig. 4.1 exception: probe before build EOF.
                     self.violated = true;
                 } else {
+                    self.resident_bytes += t.byte_size() as u64;
                     self.early_probe.push(t);
+                    self.lease.set(self.resident_bytes);
+                    self.maybe_spill();
                 }
             }
             _ => unreachable!("hash join has 2 ports"),
@@ -175,7 +479,11 @@ impl Operator for HashJoin {
                 return;
             }
             for t in batch.iter() {
-                self.probe_one(t, out);
+                if self.spilled.is_empty() {
+                    self.probe_one(t, out);
+                } else {
+                    self.dispatch_probe(t, out);
+                }
             }
             return;
         }
@@ -219,12 +527,41 @@ impl Operator for HashJoin {
     fn finish_port(&mut self, port: usize, out: &mut dyn Emitter) {
         if port == BUILD {
             self.build_done = true;
-            // Replay buffered probe input.
+            // Replay buffered probe input: the spilled early buffer
+            // first (older rows), then the resident one. Replayed
+            // tuples route like live probes — spilled partitions go to
+            // their probe file for the at-EOF disk join.
+            if let Some(f) = self.early_file.take() {
+                let ctx = self.spill.clone().expect("spill ctx attached");
+                for t in read_slot_rows(&ctx, &f.slot()) {
+                    self.dispatch_probe(&t, out);
+                }
+            }
             let buffered = std::mem::take(&mut self.early_probe);
+            self.resident_bytes -= rows_byte_size(&buffered);
+            self.lease.set(self.resident_bytes);
             for t in &buffered {
-                self.probe_one(t, out);
+                if self.spilled.is_empty() {
+                    self.probe_one(t, out);
+                } else {
+                    self.dispatch_probe(t, out);
+                }
             }
         }
+    }
+
+    fn finish(&mut self, out: &mut dyn Emitter) {
+        if self.spilled.is_empty() {
+            return;
+        }
+        let ctx = self.spill.clone().expect("spill ctx attached");
+        let parts: Vec<u64> = self.spilled.iter().copied().collect();
+        for p in parts {
+            let Some(bf) = self.build_files.remove(&p) else { continue };
+            let pf = self.probe_files.remove(&p).map(|f| f.slot());
+            self.join_partition(&ctx, bf.slot(), pf, 0, out);
+        }
+        self.spilled.clear();
     }
 
     fn snapshot(&self) -> OpState {
@@ -237,6 +574,22 @@ impl Operator for HashJoin {
                 .or_default()
                 .extend(self.early_probe.iter().cloned());
         }
+        // Spill manifest: build/probe partition files + the early file.
+        // Frames are flushed at append time, so the slots' byte lengths
+        // are durable the instant this snapshot is taken.
+        let mut parts: Vec<u64> = self.build_files.keys().copied().collect();
+        parts.sort_unstable();
+        for p in parts {
+            s.spill.push(self.build_files[&p].slot());
+        }
+        let mut parts: Vec<u64> = self.probe_files.keys().copied().collect();
+        parts.sort_unstable();
+        for p in parts {
+            s.spill.push(self.probe_files[&p].slot());
+        }
+        if let Some(f) = &self.early_file {
+            s.spill.push(f.slot());
+        }
         s
     }
 
@@ -245,6 +598,34 @@ impl Operator for HashJoin {
         self.build_done = s.counters.get("build_done").copied().unwrap_or(0) != 0;
         self.tuples_in_state = s.keyed_tuples.values().map(Vec::len).sum();
         self.table = s.keyed_tuples;
+        self.spilled.clear();
+        self.build_files.clear();
+        self.probe_files.clear();
+        self.early_file = None;
+        if !s.spill.is_empty() {
+            let ctx = self.spill.clone().expect("spill ctx attached before restore");
+            for slot in s.spill.drain(..) {
+                match slot.tag {
+                    TAG_BUILD => {
+                        self.tuples_in_state += slot.rows as usize;
+                        self.spilled.insert(slot.scope);
+                        self.build_files
+                            .insert(slot.scope, SpillFile::reopen(&ctx, &slot));
+                    }
+                    TAG_PROBE => {
+                        self.probe_files
+                            .insert(slot.scope, SpillFile::reopen(&ctx, &slot));
+                    }
+                    TAG_EARLY => {
+                        self.early_file = Some(SpillFile::reopen(&ctx, &slot));
+                    }
+                    _ => unreachable!("unknown hash-join spill tag"),
+                }
+            }
+        }
+        self.resident_bytes = self.table.values().map(|v| rows_byte_size(v)).sum::<u64>()
+            + rows_byte_size(&self.early_probe);
+        self.lease.set(self.resident_bytes);
     }
 
     fn state_size(&self) -> usize {
@@ -252,6 +633,10 @@ impl Operator for HashJoin {
     }
 
     fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        // Migration/scale extraction works on resident state: read any
+        // spilled build partitions back first (the files stay on disk,
+        // orphaned, until the execution-level directory cleanup).
+        self.unspill_build();
         let mut out = OpState::default();
         match keys {
             None => {
@@ -260,6 +645,8 @@ impl Operator for HashJoin {
                 if !replicate {
                     self.table.clear();
                     self.tuples_in_state = 0;
+                    self.resident_bytes = rows_byte_size(&self.early_probe);
+                    self.lease.set(self.resident_bytes);
                 }
             }
             Some(ks) => {
@@ -270,21 +657,24 @@ impl Operator for HashJoin {
                         }
                     } else if let Some(v) = self.table.remove(k) {
                         self.tuples_in_state -= v.len();
+                        self.resident_bytes -= rows_byte_size(&v);
                         out.keyed_tuples.insert(*k, v);
                     }
                 }
+                self.lease.set(self.resident_bytes);
             }
         }
         out
     }
 
     fn merge_state(&mut self, s: OpState) {
-        for (k, mut v) in s.keyed_tuples {
+        for (k, v) in s.keyed_tuples {
             if k == u64::MAX {
                 continue;
             }
-            self.tuples_in_state += v.len();
-            self.table.entry(k).or_default().append(&mut v);
+            for t in v {
+                self.insert_build(k, t);
+            }
         }
         // A helper receiving probe-phase state is by definition past
         // build (the skewed worker only migrates state when its own
@@ -304,12 +694,13 @@ impl Operator for HashJoin {
     /// probing an incomplete table. (A scale-spawned worker reaches
     /// `build_done` through its own seeded EOF accounting.)
     fn install_state(&mut self, s: OpState) {
-        for (k, mut v) in s.keyed_tuples {
+        for (k, v) in s.keyed_tuples {
             if k == u64::MAX {
                 continue;
             }
-            self.tuples_in_state += v.len();
-            self.table.entry(k).or_default().append(&mut v);
+            for t in v {
+                self.insert_build(k, t);
+            }
         }
     }
 
@@ -317,9 +708,21 @@ impl Operator for HashJoin {
     /// the build-EOF flag, **without** the early-probe buffer — probe
     /// tuples are partitioned per worker, so replicating a donor's
     /// buffer would duplicate their join output on the new worker.
+    /// Spilled build partitions are read (not moved) off disk so the
+    /// replica is complete.
     fn replicate_broadcast_state(&self) -> OpState {
         let mut s = OpState::default();
         s.keyed_tuples = self.table.clone();
+        if let Some(ctx) = &self.spill {
+            let mut parts: Vec<u64> = self.build_files.keys().copied().collect();
+            parts.sort_unstable();
+            for p in parts {
+                for t in read_slot_rows(ctx, &self.build_files[&p].slot()) {
+                    let h = t.get(self.build_key).stable_hash();
+                    s.keyed_tuples.entry(h).or_default().push(t);
+                }
+            }
+        }
         s.counters.insert("build_done".into(), self.build_done as i64);
         s
     }
@@ -334,17 +737,37 @@ impl Operator for HashJoin {
         s.keyed_tuples.remove(&u64::MAX);
         self.tuples_in_state = s.keyed_tuples.values().map(Vec::len).sum();
         self.table = s.keyed_tuples;
+        self.resident_bytes = self.table.values().map(|v| rows_byte_size(v)).sum::<u64>()
+            + rows_byte_size(&self.early_probe);
+        self.lease.set(self.resident_bytes);
     }
 
-    /// The early-probe buffer is re-routable input, not keyed state:
-    /// a retiring worker's buffered probes must reach the new probe
-    /// owners, and a surviving worker's buffer must be re-hashed when
-    /// the probe partitioning changes arity.
+    /// The early-probe buffer — resident *and* spilled, plus any probe
+    /// tuples parked in spilled-partition files — is re-routable input,
+    /// not keyed state: a retiring worker's buffered probes must reach
+    /// the new probe owners, and a surviving worker's buffer must be
+    /// re-hashed when the probe partitioning changes arity.
     fn drain_buffered_input(&mut self) -> Vec<(usize, Vec<Tuple>)> {
-        if self.early_probe.is_empty() {
+        let mut rows = Vec::new();
+        if let Some(ctx) = self.spill.clone() {
+            if let Some(f) = self.early_file.take() {
+                rows.extend(read_slot_rows(&ctx, &f.slot()));
+            }
+            let mut parts: Vec<u64> = self.probe_files.keys().copied().collect();
+            parts.sort_unstable();
+            for p in parts {
+                let f = self.probe_files.remove(&p).unwrap();
+                rows.extend(read_slot_rows(&ctx, &f.slot()));
+            }
+        }
+        let resident = std::mem::take(&mut self.early_probe);
+        self.resident_bytes -= rows_byte_size(&resident);
+        self.lease.set(self.resident_bytes);
+        rows.extend(resident);
+        if rows.is_empty() {
             Vec::new()
         } else {
-            vec![(PROBE, std::mem::take(&mut self.early_probe))]
+            vec![(PROBE, rows)]
         }
     }
 }
@@ -352,6 +775,7 @@ impl Operator for HashJoin {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Config;
     use crate::engine::operator::VecEmitter;
     use crate::tuple::Value;
 
@@ -550,5 +974,120 @@ mod tests {
         j2.process(kv(2, "b2"), BUILD, &mut out);
         j2.finish_port(BUILD, &mut out);
         assert_eq!(out.0.len(), 1, "early probe matched post-restore build");
+    }
+
+    // ---- out-of-core ----
+
+    fn tiny_ctx(limit: u64) -> SpillCtx {
+        let mut cfg = Config::for_tests();
+        cfg.memory_budget_bytes = limit;
+        SpillCtx::new(&cfg)
+    }
+
+    fn run_join(ctx: Option<&SpillCtx>) -> Vec<String> {
+        let mut j = HashJoin::new(0, 0);
+        if let Some(c) = ctx {
+            j.attach_spill(c);
+        }
+        let mut out = VecEmitter::default();
+        for i in 0..200i64 {
+            j.process(kv(i % 37, &format!("b{i}")), BUILD, &mut out);
+        }
+        // A few early probes before build EOF.
+        for i in 0..20i64 {
+            j.process(kv(i % 37, &format!("e{i}")), PROBE, &mut out);
+        }
+        j.finish_port(BUILD, &mut out);
+        for i in 0..300i64 {
+            j.process(kv(i % 41, &format!("p{i}")), PROBE, &mut out);
+        }
+        j.finish_port(PROBE, &mut out);
+        j.finish(&mut out);
+        let mut v: Vec<String> = out.0.iter().map(|t| format!("{t:?}")).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn spilled_join_matches_unbounded() {
+        let unbounded = run_join(None);
+        let ctx = tiny_ctx(512); // far below resident state size
+        let spilled = run_join(Some(&ctx));
+        assert_eq!(spilled, unbounded);
+        let stats = ctx.counters.snapshot(&ctx.budget);
+        assert!(stats.bytes_spilled > 0, "tiny budget must spill");
+        assert!(stats.partitions_spilled > 0);
+    }
+
+    #[test]
+    fn spilled_snapshot_restores_byte_exact() {
+        let unbounded = run_join(None);
+        let ctx = tiny_ctx(512);
+        // Run the build phase spilled, snapshot mid-stream, restore
+        // into a fresh operator on the same ctx, then finish there.
+        let mut j = HashJoin::new(0, 0);
+        j.attach_spill(&ctx);
+        let mut out = VecEmitter::default();
+        for i in 0..200i64 {
+            j.process(kv(i % 37, &format!("b{i}")), BUILD, &mut out);
+        }
+        for i in 0..20i64 {
+            j.process(kv(i % 37, &format!("e{i}")), PROBE, &mut out);
+        }
+        let snap = j.snapshot();
+        assert!(!snap.spill.is_empty(), "manifest carries spilled partitions");
+        // Post-snapshot appends must be truncated away by restore.
+        j.process(kv(999, "junk"), BUILD, &mut out);
+        let mut j2 = HashJoin::new(0, 0);
+        j2.attach_spill(&ctx);
+        j2.restore(snap);
+        let mut out2 = VecEmitter::default();
+        j2.finish_port(BUILD, &mut out2);
+        for i in 0..300i64 {
+            j2.process(kv(i % 41, &format!("p{i}")), PROBE, &mut out2);
+        }
+        j2.finish_port(PROBE, &mut out2);
+        j2.finish(&mut out2);
+        let mut got: Vec<String> = out2.0.iter().map(|t| format!("{t:?}")).collect();
+        got.sort_unstable();
+        assert_eq!(got, unbounded);
+    }
+
+    #[test]
+    fn spilled_extract_returns_full_table() {
+        let ctx = tiny_ctx(256);
+        let mut j = HashJoin::new(0, 0);
+        j.attach_spill(&ctx);
+        let mut out = VecEmitter::default();
+        for i in 0..100i64 {
+            j.process(kv(i, &format!("b{i}")), BUILD, &mut out);
+        }
+        assert!(!j.spilled.is_empty(), "must have spilled");
+        let st = j.extract_state(None, false);
+        let total: usize = st.keyed_tuples.values().map(Vec::len).sum();
+        assert_eq!(total, 100, "extraction sees spilled + resident state");
+        assert_eq!(j.state_size(), 0);
+    }
+
+    #[test]
+    fn spilled_probe_input_drains_for_reroute() {
+        let ctx = tiny_ctx(256);
+        let mut j = HashJoin::new(0, 0);
+        j.attach_spill(&ctx);
+        let mut out = VecEmitter::default();
+        for i in 0..100i64 {
+            j.process(kv(i, &format!("b{i}")), BUILD, &mut out);
+        }
+        for i in 0..30i64 {
+            j.process(kv(i, &format!("e{i}")), PROBE, &mut out);
+        }
+        j.finish_port(BUILD, &mut out);
+        for i in 0..30i64 {
+            j.process(kv(i, &format!("p{i}")), PROBE, &mut out);
+        }
+        let drained = j.drain_buffered_input();
+        let total: usize = drained.iter().map(|(_, v)| v.len()).sum();
+        assert!(total > 0, "spilled probe input must drain");
+        assert!(drained.iter().all(|(port, _)| *port == PROBE));
     }
 }

@@ -8,10 +8,207 @@
 //! owner when the input ends (the END-marker merge of Fig. 3.11). Both
 //! conditions for scattered-state resolution hold: runs merge by
 //! merging sorted lists, and sort blocks until EOF anyway.
+//!
+//! **Out-of-core** (see `docs/ARCHITECTURE.md` "Out-of-core
+//! execution"): past the execution's memory budget either sort layer
+//! stable-sorts its resident buffer and writes it out as one sorted
+//! **run file**, repeatedly; EOF performs a streaming k-way merge over
+//! all run files plus the sorted resident remainder. Ties prefer the
+//! lower (scope, run-sequence) cursor, which reproduces the resident
+//! path's stable concatenate-then-sort order exactly.
 
 use crate::engine::operator::{Emitter, OpState, Operator};
+use crate::engine::spill::{
+    read_slot_rows, rows_byte_size, MemLease, SpillCtx, SpillFile, SpillReader, SpillSlot,
+};
 use crate::tuple::{value_cmp, Tuple, TupleBatch};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+
+/// Spill-slot tag: a sort layer has one stream kind — sorted runs.
+const TAG_RUN: u32 = 0;
+
+/// Rows per spill frame when writing a run: bounds the memory a merge
+/// cursor buffers per run (one frame) independently of run length.
+const RUN_FRAME_ROWS: usize = 512;
+
+/// Streaming cursor over one sorted run file.
+struct RunCursor {
+    reader: SpillReader,
+    rows: std::vec::IntoIter<Tuple>,
+    head: Option<Tuple>,
+}
+
+impl RunCursor {
+    fn open(ctx: &SpillCtx, slot: &SpillSlot) -> RunCursor {
+        let mut c = RunCursor {
+            reader: SpillReader::open(ctx, slot),
+            rows: Vec::new().into_iter(),
+            head: None,
+        };
+        c.refill();
+        c
+    }
+
+    fn refill(&mut self) {
+        loop {
+            if let Some(t) = self.rows.next() {
+                self.head = Some(t);
+                return;
+            }
+            match self.reader.next_rows() {
+                Some(rows) => self.rows = rows.into_iter(),
+                None => {
+                    self.head = None;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<Tuple> {
+        let t = self.head.take();
+        if t.is_some() {
+            self.refill();
+        }
+        t
+    }
+}
+
+/// Per-layer external-sort state, shared by both sort layers. Without
+/// an attached [`SpillCtx`] every method is a no-op and the resident
+/// path is byte-identical to the pre-spill implementation.
+#[derive(Default)]
+struct SortSpill {
+    ctx: Option<SpillCtx>,
+    lease: MemLease,
+    resident_bytes: u64,
+    /// scope → run files in write (sequence) order.
+    runs: BTreeMap<u64, Vec<SpillFile>>,
+}
+
+impl SortSpill {
+    fn attach(&mut self, ctx: &SpillCtx) {
+        self.lease = MemLease::new(ctx.budget.clone());
+        self.ctx = Some(ctx.clone());
+    }
+
+    fn tracking(&self) -> bool {
+        self.ctx.is_some()
+    }
+
+    fn note_rows(&mut self, bytes: u64) {
+        self.resident_bytes += bytes;
+    }
+
+    fn has_runs(&self) -> bool {
+        !self.runs.is_empty()
+    }
+
+    fn over(&mut self) -> bool {
+        let Some(ctx) = &self.ctx else { return false };
+        self.lease.set(self.resident_bytes);
+        ctx.budget.over()
+    }
+
+    /// Stable-sort `rows` by the key field and write them as one run
+    /// file for `scope`, in [`RUN_FRAME_ROWS`]-row frames.
+    fn write_run(&mut self, scope: u64, mut rows: Vec<Tuple>, key_field: usize) {
+        if rows.is_empty() {
+            return;
+        }
+        let ctx = self.ctx.clone().expect("spill ctx attached");
+        rows.sort_by(|a, b| value_cmp(a.get(key_field), b.get(key_field)));
+        let files = self.runs.entry(scope).or_default();
+        let seq = files.len() as u64;
+        if seq == 0 {
+            ctx.counters.add_partition();
+        }
+        let mut f = SpillFile::create(&ctx, TAG_RUN, scope, seq);
+        for chunk in rows.chunks(RUN_FRAME_ROWS) {
+            f.append(chunk);
+        }
+        files.push(f);
+    }
+
+    fn reset_resident(&mut self, bytes: u64) {
+        if !self.tracking() {
+            return;
+        }
+        self.resident_bytes = bytes;
+        self.lease.set(self.resident_bytes);
+    }
+
+    /// Read every run back into memory, per scope in sequence order —
+    /// state-extraction paths (migration/scale) work on resident
+    /// state. Files stay on disk, orphaned, until directory teardown.
+    fn unspill(&mut self) -> Vec<(u64, Vec<Tuple>)> {
+        let Some(ctx) = self.ctx.clone() else { return Vec::new() };
+        let mut out = Vec::new();
+        for (scope, files) in std::mem::take(&mut self.runs) {
+            let mut rows = Vec::new();
+            for f in files {
+                rows.extend(read_slot_rows(&ctx, &f.slot()));
+            }
+            out.push((scope, rows));
+        }
+        out
+    }
+
+    fn snapshot_slots(&self) -> Vec<SpillSlot> {
+        self.runs
+            .values()
+            .flat_map(|files| files.iter().map(|f| f.slot()))
+            .collect()
+    }
+
+    fn restore_slots(&mut self, mut slots: Vec<SpillSlot>) {
+        self.runs.clear();
+        if slots.is_empty() {
+            return;
+        }
+        let ctx = self.ctx.clone().expect("spill ctx attached before restore");
+        slots.sort_by_key(|s| (s.scope, s.seq));
+        for slot in slots {
+            self.runs
+                .entry(slot.scope)
+                .or_default()
+                .push(SpillFile::reopen(&ctx, &slot));
+        }
+    }
+
+    /// Streaming k-way merge over every run file, emitting in key
+    /// order. Ties prefer the earliest cursor — cursors are ordered by
+    /// (scope, sequence), reproducing the resident path's stable
+    /// concatenate-then-sort order.
+    fn merge_emit(&mut self, key_field: usize, out: &mut dyn Emitter) {
+        let ctx = self.ctx.clone().expect("spill ctx attached");
+        let mut cursors: Vec<RunCursor> = Vec::new();
+        for files in std::mem::take(&mut self.runs).into_values() {
+            for f in files {
+                cursors.push(RunCursor::open(&ctx, &f.slot()));
+            }
+        }
+        loop {
+            let mut best: Option<usize> = None;
+            for (i, c) in cursors.iter().enumerate() {
+                let Some(h) = &c.head else { continue };
+                match best {
+                    None => best = Some(i),
+                    Some(b) => {
+                        let bh = cursors[b].head.as_ref().unwrap();
+                        if value_cmp(h.get(key_field), bh.get(key_field))
+                            == std::cmp::Ordering::Less
+                        {
+                            best = Some(i);
+                        }
+                    }
+                }
+            }
+            let Some(i) = best else { break };
+            out.emit(cursors[i].pop().unwrap());
+        }
+    }
+}
 
 /// First-layer sorter: accumulates tuples, sorts at EOF, emits the run.
 ///
@@ -30,11 +227,19 @@ pub struct SortWorker {
     /// heavier sort workers; 0 = none).
     pub cost_ns: u64,
     runs: HashMap<u64, Vec<Tuple>>,
+    spill: SortSpill,
 }
 
 impl SortWorker {
     pub fn new(key_field: usize, own_scope: u64, bounds: Vec<crate::tuple::Value>) -> SortWorker {
-        SortWorker { key_field, own_scope, bounds, cost_ns: 0, runs: HashMap::new() }
+        SortWorker {
+            key_field,
+            own_scope,
+            bounds,
+            cost_ns: 0,
+            runs: HashMap::new(),
+            spill: SortSpill::default(),
+        }
     }
 
     /// Builder: artificial per-tuple cost.
@@ -61,6 +266,34 @@ impl SortWorker {
             .map(|(_, v)| v.len())
             .sum()
     }
+
+    /// Evict every resident scope buffer as one sorted run each when
+    /// over budget.
+    fn maybe_spill(&mut self) {
+        if !self.spill.over() {
+            return;
+        }
+        let mut scopes: Vec<u64> = self.runs.keys().copied().collect();
+        scopes.sort_unstable();
+        for s in scopes {
+            let rows = std::mem::take(self.runs.get_mut(&s).unwrap());
+            self.spill.write_run(s, rows, self.key_field);
+        }
+        self.runs.retain(|_, v| !v.is_empty());
+        self.spill.reset_resident(0);
+    }
+
+    /// Read spilled runs back into the resident per-scope buffers
+    /// before state extraction. Equal keys keep their arrival-relative
+    /// order (runs are stable-sorted arrival segments, re-appended in
+    /// sequence order), so the EOF stable sort still ties identically.
+    fn unspill(&mut self) {
+        for (scope, rows) in self.spill.unspill() {
+            self.runs.entry(scope).or_default().extend(rows);
+        }
+        let bytes = self.runs.values().map(|v| rows_byte_size(v)).sum();
+        self.spill.reset_resident(bytes);
+    }
 }
 
 impl Operator for SortWorker {
@@ -72,6 +305,10 @@ impl Operator for SortWorker {
         vec![0]
     }
 
+    fn attach_spill(&mut self, ctx: &SpillCtx) {
+        self.spill.attach(ctx);
+    }
+
     fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
         if self.cost_ns > 0 {
             let t0 = std::time::Instant::now();
@@ -80,7 +317,11 @@ impl Operator for SortWorker {
             }
         }
         let scope = self.scope_of(&t);
+        if self.spill.tracking() {
+            self.spill.note_rows(t.byte_size() as u64);
+        }
         self.runs.entry(scope).or_default().push(t);
+        self.maybe_spill();
     }
 
     /// Batch absorb: one combined spin (chunk length × per-tuple cost)
@@ -96,10 +337,15 @@ impl Operator for SortWorker {
                 std::hint::spin_loop();
             }
         }
+        let track = self.spill.tracking();
         for t in batch.iter() {
             let scope = self.scope_of(t);
+            if track {
+                self.spill.note_rows(t.byte_size() as u64);
+            }
             self.runs.entry(scope).or_default().push(t.clone());
         }
+        self.maybe_spill();
     }
 
     fn finish(&mut self, out: &mut dyn Emitter) {
@@ -107,6 +353,20 @@ impl Operator for SortWorker {
         // Reshape layer migrates foreign runs back to their owners
         // before EOF cascades); any still-foreign tuples are emitted
         // too so no data is lost even without mitigation.
+        if self.spill.has_runs() {
+            // Flush the resident remainder as final runs, then k-way
+            // merge everything off disk.
+            let mut scopes: Vec<u64> = self.runs.keys().copied().collect();
+            scopes.sort_unstable();
+            for s in scopes {
+                let rows = std::mem::take(self.runs.get_mut(&s).unwrap());
+                self.spill.write_run(s, rows, self.key_field);
+            }
+            self.runs.clear();
+            self.spill.reset_resident(0);
+            self.spill.merge_emit(self.key_field, out);
+            return;
+        }
         let mut scopes: Vec<u64> = self.runs.keys().copied().collect();
         scopes.sort_unstable();
         let mut all: Vec<Tuple> = Vec::new();
@@ -122,11 +382,15 @@ impl Operator for SortWorker {
     fn snapshot(&self) -> OpState {
         let mut s = OpState::default();
         s.keyed_tuples = self.runs.clone();
+        s.spill = self.spill.snapshot_slots();
         s
     }
 
-    fn restore(&mut self, s: OpState) {
+    fn restore(&mut self, mut s: OpState) {
+        self.spill.restore_slots(std::mem::take(&mut s.spill));
         self.runs = s.keyed_tuples;
+        let bytes = self.runs.values().map(|v| rows_byte_size(v)).sum();
+        self.spill.reset_resident(bytes);
     }
 
     fn state_size(&self) -> usize {
@@ -134,6 +398,7 @@ impl Operator for SortWorker {
     }
 
     fn extract_state(&mut self, keys: Option<&[u64]>, replicate: bool) -> OpState {
+        self.unspill();
         // keys here are *scope ids* (range indexes), not value hashes.
         let mut out = OpState::default();
         let targets: Vec<u64> = match keys {
@@ -150,13 +415,19 @@ impl Operator for SortWorker {
                 out.keyed_tuples.insert(k, v);
             }
         }
+        let bytes = self.runs.values().map(|v| rows_byte_size(v)).sum();
+        self.spill.reset_resident(bytes);
         out
     }
 
     fn merge_state(&mut self, s: OpState) {
         for (k, mut v) in s.keyed_tuples {
+            if self.spill.tracking() {
+                self.spill.note_rows(rows_byte_size(&v));
+            }
             self.runs.entry(k).or_default().append(&mut v);
         }
+        self.maybe_spill();
     }
 
     fn state_mutable(&self) -> bool {
@@ -183,7 +454,11 @@ impl Operator for SortWorker {
     fn scattered_parts(&mut self) -> Vec<(u64, OpState)> {
         // Foreign runs (scopes ≠ own) are shipped back to their owners
         // at EOF (Fig. 3.11(e,f)); scope id == owner worker index
-        // under range partitioning.
+        // under range partitioning. Spilled runs may hold foreign
+        // tuples too, so read them back first.
+        if self.spill.has_runs() {
+            self.unspill();
+        }
         let foreign: Vec<u64> = self
             .runs
             .keys()
@@ -206,15 +481,26 @@ impl Operator for SortWorker {
 /// first-layer workers and merges them at EOF. Input arrives
 /// interleaved, so it re-sorts (equivalent to a k-way merge; runs are
 /// concatenated then sorted with a stable O(n log n) sort — adequate at
-/// our scale and deterministic).
+/// our scale and deterministic). Past the memory budget the buffer is
+/// evicted as sorted run files merged streamingly at EOF.
 pub struct SortMerge {
     pub key_field: usize,
     buffer: Vec<Tuple>,
+    spill: SortSpill,
 }
 
 impl SortMerge {
     pub fn new(key_field: usize) -> SortMerge {
-        SortMerge { key_field, buffer: Vec::new() }
+        SortMerge { key_field, buffer: Vec::new(), spill: SortSpill::default() }
+    }
+
+    fn maybe_spill(&mut self) {
+        if !self.spill.over() || self.buffer.is_empty() {
+            return;
+        }
+        let rows = std::mem::take(&mut self.buffer);
+        self.spill.write_run(0, rows, self.key_field);
+        self.spill.reset_resident(0);
     }
 }
 
@@ -227,17 +513,36 @@ impl Operator for SortMerge {
         vec![0]
     }
 
+    fn attach_spill(&mut self, ctx: &SpillCtx) {
+        self.spill.attach(ctx);
+    }
+
     fn process(&mut self, t: Tuple, _port: usize, _out: &mut dyn Emitter) {
+        if self.spill.tracking() {
+            self.spill.note_rows(t.byte_size() as u64);
+        }
         self.buffer.push(t);
+        self.maybe_spill();
     }
 
     /// Bulk absorb: extend the merge buffer in one call instead of one
     /// virtual dispatch per tuple.
     fn process_batch(&mut self, batch: &TupleBatch, _port: usize, _out: &mut dyn Emitter) {
+        if self.spill.tracking() {
+            self.spill.note_rows(batch.iter().map(|t| t.byte_size() as u64).sum());
+        }
         self.buffer.extend(batch.iter().cloned());
+        self.maybe_spill();
     }
 
     fn finish(&mut self, out: &mut dyn Emitter) {
+        if self.spill.has_runs() {
+            let rows = std::mem::take(&mut self.buffer);
+            self.spill.write_run(0, rows, self.key_field);
+            self.spill.reset_resident(0);
+            self.spill.merge_emit(self.key_field, out);
+            return;
+        }
         self.buffer
             .sort_by(|a, b| value_cmp(a.get(self.key_field), b.get(self.key_field)));
         for t in self.buffer.drain(..) {
@@ -248,11 +553,14 @@ impl Operator for SortMerge {
     fn snapshot(&self) -> OpState {
         let mut s = OpState::default();
         s.keyed_tuples.insert(0, self.buffer.clone());
+        s.spill = self.spill.snapshot_slots();
         s
     }
 
     fn restore(&mut self, mut s: OpState) {
+        self.spill.restore_slots(std::mem::take(&mut s.spill));
         self.buffer = s.keyed_tuples.remove(&0).unwrap_or_default();
+        self.spill.reset_resident(rows_byte_size(&self.buffer));
     }
 
     fn state_size(&self) -> usize {
@@ -263,12 +571,16 @@ impl Operator for SortMerge {
     /// merge layer re-sorts everything at EOF, so which worker holds
     /// which run never affects the output order.
     fn extract_state(&mut self, _keys: Option<&[u64]>, replicate: bool) -> OpState {
+        for (_, rows) in self.spill.unspill() {
+            self.buffer.extend(rows);
+        }
         let mut s = OpState::default();
         let buf = if replicate {
             self.buffer.clone()
         } else {
             std::mem::take(&mut self.buffer)
         };
+        self.spill.reset_resident(rows_byte_size(&self.buffer));
         if !buf.is_empty() {
             s.keyed_tuples.insert(0, buf);
         }
@@ -277,8 +589,12 @@ impl Operator for SortMerge {
 
     fn merge_state(&mut self, mut s: OpState) {
         for (_, mut v) in s.keyed_tuples.drain() {
+            if self.spill.tracking() {
+                self.spill.note_rows(rows_byte_size(&v));
+            }
             self.buffer.append(&mut v);
         }
+        self.maybe_spill();
     }
 
     fn state_mutable(&self) -> bool {
@@ -289,6 +605,7 @@ impl Operator for SortMerge {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Config;
     use crate::engine::operator::VecEmitter;
     use crate::tuple::Value;
 
@@ -392,5 +709,114 @@ mod tests {
         let mut s2 = SortWorker::new(0, 0, bounds());
         s2.restore(snap);
         assert_eq!(s2.state_size(), 1);
+    }
+
+    // ---- out-of-core ----
+
+    fn tiny_ctx(limit: u64) -> SpillCtx {
+        let mut cfg = Config::for_tests();
+        cfg.memory_budget_bytes = limit;
+        SpillCtx::new(&cfg)
+    }
+
+    fn wide_bounds() -> Vec<Value> {
+        vec![Value::Float(1e9)]
+    }
+
+    #[test]
+    fn spilled_sort_matches_unbounded_exactly() {
+        // Duplicate keys included: the run-merge tie-break must
+        // reproduce the stable resident sort byte for byte.
+        let rows: Vec<Tuple> = (0..600)
+            .map(|i| Tuple::new(vec![Value::Float((i % 53) as f64), Value::Int(i)]))
+            .collect();
+        let mut plain = SortWorker::new(0, 0, wide_bounds());
+        let mut o1 = VecEmitter::default();
+        for t in &rows {
+            plain.process(t.clone(), 0, &mut o1);
+        }
+        plain.finish(&mut o1);
+
+        let ctx = tiny_ctx(512);
+        let mut spilled = SortWorker::new(0, 0, wide_bounds());
+        spilled.attach_spill(&ctx);
+        let mut o2 = VecEmitter::default();
+        for t in &rows {
+            spilled.process(t.clone(), 0, &mut o2);
+        }
+        spilled.finish(&mut o2);
+        assert_eq!(o1.0, o2.0, "spilled sort must be byte-identical");
+        let stats = ctx.counters.snapshot(&ctx.budget);
+        assert!(stats.bytes_spilled > 0, "tiny budget must spill");
+    }
+
+    #[test]
+    fn spilled_merge_layer_matches_unbounded_exactly() {
+        let rows: Vec<Tuple> = (0..600)
+            .map(|i| Tuple::new(vec![Value::Float(((i * 7) % 91) as f64), Value::Int(i)]))
+            .collect();
+        let mut plain = SortMerge::new(0);
+        let mut o1 = VecEmitter::default();
+        for t in &rows {
+            plain.process(t.clone(), 0, &mut o1);
+        }
+        plain.finish(&mut o1);
+
+        let ctx = tiny_ctx(512);
+        let mut spilled = SortMerge::new(0);
+        spilled.attach_spill(&ctx);
+        let mut o2 = VecEmitter::default();
+        for t in &rows {
+            spilled.process(t.clone(), 0, &mut o2);
+        }
+        spilled.finish(&mut o2);
+        assert_eq!(o1.0, o2.0);
+    }
+
+    #[test]
+    fn spilled_snapshot_restores_byte_exact() {
+        let rows: Vec<Tuple> = (0..400)
+            .map(|i| Tuple::new(vec![Value::Float((i % 37) as f64), Value::Int(i)]))
+            .collect();
+        let mut plain = SortWorker::new(0, 0, wide_bounds());
+        let mut o1 = VecEmitter::default();
+        for t in &rows {
+            plain.process(t.clone(), 0, &mut o1);
+        }
+        plain.finish(&mut o1);
+
+        let ctx = tiny_ctx(512);
+        let mut s = SortWorker::new(0, 0, wide_bounds());
+        s.attach_spill(&ctx);
+        let mut sink = VecEmitter::default();
+        for t in &rows {
+            s.process(t.clone(), 0, &mut sink);
+        }
+        let snap = s.snapshot();
+        assert!(!snap.spill.is_empty(), "manifest carries run files");
+        // Post-snapshot rows must be truncated away by restore.
+        s.process(t1(-1.0), 0, &mut sink);
+        let mut s2 = SortWorker::new(0, 0, wide_bounds());
+        s2.attach_spill(&ctx);
+        s2.restore(snap);
+        let mut o2 = VecEmitter::default();
+        s2.finish(&mut o2);
+        assert_eq!(o1.0, o2.0);
+    }
+
+    #[test]
+    fn spilled_extract_sees_all_rows() {
+        let ctx = tiny_ctx(256);
+        let mut s = SortWorker::new(0, 0, wide_bounds());
+        s.attach_spill(&ctx);
+        let mut sink = VecEmitter::default();
+        for i in 0..300 {
+            s.process(t1(i as f64), 0, &mut sink);
+        }
+        assert!(s.spill.has_runs(), "must have spilled");
+        let st = s.extract_state(None, false);
+        let total: usize = st.keyed_tuples.values().map(Vec::len).sum();
+        assert_eq!(total, 300, "extraction sees spilled + resident rows");
+        assert_eq!(s.state_size(), 0);
     }
 }

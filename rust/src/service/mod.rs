@@ -650,6 +650,20 @@ impl ServiceLoop {
         let mut config = sub.config.unwrap_or_else(|| self.cfg.engine.clone());
         // The service owns the budget; an Execution never re-applies it.
         config.max_workers = 0;
+        // Per-job memory budget: the tenant's share of the service-wide
+        // budget (`TenantQuota::max_memory_share`). The share is a cap,
+        // not a grant — a per-job config override can tighten its own
+        // budget further but never loosen it past the share, and an
+        // unbounded service stays unbounded regardless of shares.
+        let service_budget = self.cfg.engine.memory_budget_bytes;
+        if service_budget > 0 {
+            let share = quota.memory_allowance(service_budget);
+            config.memory_budget_bytes = if config.memory_budget_bytes == 0 {
+                share
+            } else {
+                config.memory_budget_bytes.min(share)
+            };
+        }
         let cost = sub
             .cost
             .unwrap_or_else(|| Self::default_cost(&self.cfg.engine, &sub.workflow));

@@ -33,11 +33,23 @@ pub struct TenantQuota {
     /// once (1.0 = no per-tenant cap). Ignored when the budget is
     /// unbounded (`capacity == 0`).
     pub max_worker_share: f64,
+    /// Fraction of the service's memory budget
+    /// (`Config::memory_budget_bytes`) each of this tenant's jobs may
+    /// keep resident before its operators spill (1.0 = the full
+    /// budget). Ignored when the service budget is unbounded — a
+    /// service that never spills doesn't start just because a tenant
+    /// is throttled.
+    pub max_memory_share: f64,
 }
 
 impl Default for TenantQuota {
     fn default() -> TenantQuota {
-        TenantQuota { max_queued: 64, max_running: 8, max_worker_share: 1.0 }
+        TenantQuota {
+            max_queued: 64,
+            max_running: 8,
+            max_worker_share: 1.0,
+            max_memory_share: 1.0,
+        }
     }
 }
 
@@ -50,6 +62,18 @@ impl TenantQuota {
             usize::MAX
         } else {
             ((self.max_worker_share * capacity as f64).floor() as usize).max(1)
+        }
+    }
+
+    /// Memory budget one of this tenant's jobs gets out of the
+    /// service-wide `budget_bytes` (0 = unbounded → stays unbounded).
+    /// At least 1 byte when capped so the share can throttle but never
+    /// silently turn a bounded service back into an unbounded one.
+    pub fn memory_allowance(&self, budget_bytes: u64) -> u64 {
+        if budget_bytes == 0 {
+            0
+        } else {
+            ((self.max_memory_share * budget_bytes as f64).floor() as u64).max(1)
         }
     }
 }

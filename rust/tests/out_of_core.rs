@@ -1,0 +1,700 @@
+//! Out-of-core execution: the memory-pressure equivalence suite.
+//!
+//! Every stateful operator (hash join build/probe, both group-by
+//! layers, sort runs) and the disk-backed `MatStore` must produce
+//! **byte-identical** results under any memory budget: runs at 0.5x /
+//! 0.25x / 0.1x of the workload's resident state size are compared
+//! against the unbounded run's sink multiset, at batch 32 and 1024,
+//! under uniform and 90%-hot-key distributions. At 0.1x the suite
+//! additionally asserts the operators actually went to disk
+//! (`SpillStats::bytes_spilled > 0`) — equivalence proved on the spill
+//! path, not vacuously on the resident one.
+//!
+//! Spilled state must also compose with the interactivity machinery:
+//! checkpoint → kill → recover with spill manifests on disk, and scale
+//! fences (2→4, 4→2) that re-hash spilled partitions mid-spill. And it
+//! must never leak: the cleanup regression tests pin that mid-run
+//! drop, service cancel and supervised abort all reclaim the
+//! execution's spill temp directory.
+
+use std::time::Duration;
+
+use texera_amber::config::Config;
+use texera_amber::engine::spill::SpillCtx;
+use texera_amber::engine::{
+    Execution, Fault, FaultPlan, OpSpec, PartitionScheme, WorkerId, Workflow,
+};
+use texera_amber::maestro::materialize::{MatSource, MatStore};
+use texera_amber::metrics::SpillStats;
+use texera_amber::operators::basic::MapUdf;
+use texera_amber::operators::{
+    AggKind, CollectSink, GroupByFinal, GroupByPartial, HashJoin, SinkHandle, SortMerge,
+    SortWorker,
+};
+use texera_amber::service::{EngineService, ServiceConfig, Submission, TenantId, TenantQuota};
+use texera_amber::tuple::{Tuple, Value};
+use texera_amber::workloads::{TupleSource, VecSource};
+
+/// Key distribution shared by every workload: uniform, or 90% of rows
+/// on key 0 with the rest striding the key space (hot-key skew — one
+/// spill partition takes most of the traffic).
+fn key_of(i: usize, keys: i64, hot: bool) -> i64 {
+    if hot && i % 10 != 0 {
+        0
+    } else {
+        i as i64 % keys
+    }
+}
+
+/// Canonical sink multiset (tuples have no `Ord`; debug formatting is
+/// injective on `Value` and byte-preserving for floats).
+fn sorted_rows(handle: &SinkHandle) -> Vec<String> {
+    let mut rows: Vec<String> = handle.tuples().iter().map(|t| format!("{t:?}")).collect();
+    rows.sort_unstable();
+    rows
+}
+
+/// Run one workflow to completion under `budget` bytes and return its
+/// canonical sink multiset plus the execution's spill counters. Every
+/// run also re-checks the teardown invariant: once the `Execution` is
+/// dropped, its spill directory is gone.
+fn run(mk: &dyn Fn() -> (Workflow, SinkHandle), budget: u64, batch: usize) -> (Vec<String>, SpillStats) {
+    let (w, handle) = mk();
+    let cfg = Config {
+        batch_size: batch,
+        ctrl_check_interval: batch,
+        memory_budget_bytes: budget,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    let summary = exec.join();
+    assert_eq!(summary.error, None, "budget {budget} batch {batch}: run errored");
+    let dir = exec.spill_dir();
+    drop(exec);
+    if let Some(dir) = dir {
+        assert!(!dir.exists(), "budget {budget} batch {batch}: leaked spill dir");
+    }
+    (sorted_rows(&handle), summary.spill)
+}
+
+/// The equivalence matrix for one workload: for each batch size, an
+/// unbounded reference run measures the resident-state high water, and
+/// runs at 0.5x / 0.25x / 0.1x of it must reproduce the reference
+/// multiset exactly — with real spilling asserted at 0.1x.
+fn equivalence_suite(name: &str, mk: &dyn Fn() -> (Workflow, SinkHandle)) {
+    for batch in [32usize, 1024] {
+        let (reference, unbounded) = run(mk, 0, batch);
+        assert!(!reference.is_empty(), "{name} batch {batch}: empty reference");
+        assert_eq!(
+            unbounded.bytes_spilled, 0,
+            "{name} batch {batch}: unbounded run must not spill"
+        );
+        let hw = unbounded.budget_high_water;
+        assert!(
+            hw > 4096,
+            "{name} batch {batch}: resident state too small to exercise budgets ({hw} B)"
+        );
+        for (frac, budget) in [("0.5x", hw / 2), ("0.25x", hw / 4), ("0.1x", hw / 10)] {
+            let (rows, stats) = run(mk, budget, batch);
+            assert_eq!(
+                rows, reference,
+                "{name} batch {batch} budget {frac}: sink multiset diverged"
+            );
+            assert_eq!(stats.budget_limit, budget);
+            if frac == "0.1x" {
+                assert!(
+                    stats.bytes_spilled > 0,
+                    "{name} batch {batch} budget {frac}: never spilled: {stats:?}"
+                );
+                assert!(
+                    stats.bytes_read_back > 0,
+                    "{name} batch {batch} budget {frac}: spilled but never read back: {stats:?}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workloads. Operator indices are fixed by construction and documented
+// per builder; `scan_cost_ns` adds a per-tuple parse cost so control
+// traffic (scale fences, faults, cancels) lands mid-stream.
+// ---------------------------------------------------------------------------
+
+/// dim(0) ⨝ scan(1) → join(2) → sink(3); output rows (k, 3k, k, v).
+/// Build side: 4 000 dim rows (~160 KB resident hash table).
+fn join_flow(hot: bool, scan_cost_ns: u64) -> (Workflow, SinkHandle) {
+    const ROWS: usize = 40_000;
+    const KEYS: i64 = 4_000;
+    let mut w = Workflow::new();
+    let dim = w.add(OpSpec::source("dim", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..KEYS)
+            .filter(|k| (*k as usize) % parts == idx)
+            .map(|k| Tuple::new(vec![Value::Int(k), Value::Int(3 * k)]))
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let scan = w.add(OpSpec::source_with_op(
+        "scan",
+        2,
+        move |idx, parts| {
+            let rows: Vec<Tuple> = (0..ROWS)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| {
+                    Tuple::new(vec![
+                        Value::Int(key_of(i, KEYS, hot)),
+                        Value::Int(i as i64 % 9),
+                    ])
+                })
+                .collect();
+            Box::new(VecSource::new(rows))
+        },
+        move |_, _| Box::new(MapUdf::identity(scan_cost_ns)),
+    ));
+    let join = w.add(OpSpec::binary(
+        "join",
+        2,
+        [PartitionScheme::Hash { key: 0 }, PartitionScheme::Hash { key: 0 }],
+        vec![0],
+        |_, _| Box::new(HashJoin::new(0, 0)),
+    ));
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(dim, join, 0);
+    w.connect(scan, join, 1);
+    w.connect(join, sink, 0);
+    (w, handle)
+}
+
+/// Ground truth for [`join_flow`]: every probe row joins its key's dim
+/// row, so the sink holds (k, 3k, k, v) per probe row.
+fn join_expected(hot: bool) -> Vec<String> {
+    let mut rows: Vec<String> = (0..40_000)
+        .map(|i| {
+            let k = key_of(i, 4_000, hot);
+            format!(
+                "{:?}",
+                Tuple::new(vec![
+                    Value::Int(k),
+                    Value::Int(3 * k),
+                    Value::Int(k),
+                    Value::Int(i as i64 % 9),
+                ])
+            )
+        })
+        .collect();
+    rows.sort_unstable();
+    rows
+}
+
+/// scan(0) → gb_partial(1) → gb_final(2, blocking) → sink(3); sums of
+/// v = i mod 7 per key. 6 000 keys, so both layers hold large tables
+/// (sums of small integers are exact in f64 — order-independent).
+fn group_by_flow(rows: usize, hot: bool, scan_cost_ns: u64) -> (Workflow, SinkHandle) {
+    const KEYS: i64 = 6_000;
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source_with_op(
+        "scan",
+        2,
+        move |idx, parts| {
+            let data: Vec<Tuple> = (0..rows)
+                .skip(idx)
+                .step_by(parts)
+                .map(|i| {
+                    Tuple::new(vec![
+                        Value::Int(key_of(i, KEYS, hot)),
+                        Value::Int(i as i64 % 7),
+                    ])
+                })
+                .collect();
+            Box::new(VecSource::new(data))
+        },
+        move |_, _| Box::new(MapUdf::identity(scan_cost_ns)),
+    ));
+    let partial = w.add(OpSpec::unary("gb_partial", 2, PartitionScheme::RoundRobin, |_, _| {
+        Box::new(GroupByPartial::new(0, 1, AggKind::Sum))
+    }));
+    let fin = w.add(
+        OpSpec::unary("gb_final", 2, PartitionScheme::Hash { key: 0 }, |_, _| {
+            Box::new(GroupByFinal::new(AggKind::Sum))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, partial, 0);
+    w.connect(partial, fin, 0);
+    w.connect(fin, sink, 0);
+    (w, handle)
+}
+
+/// Ground truth for [`group_by_flow`]: (key, Σ v) per distinct key.
+fn group_by_expected(rows: usize, hot: bool) -> Vec<(i64, f64)> {
+    let mut sums: std::collections::HashMap<i64, f64> = std::collections::HashMap::new();
+    for i in 0..rows {
+        *sums.entry(key_of(i, 6_000, hot)).or_insert(0.0) += (i % 7) as f64;
+    }
+    let mut out: Vec<(i64, f64)> = sums.into_iter().collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+fn group_by_result(handle: &SinkHandle) -> Vec<(i64, f64)> {
+    let mut out: Vec<(i64, f64)> = handle
+        .tuples()
+        .iter()
+        .map(|t| (t.get(0).as_int().unwrap(), t.get(1).as_float().unwrap()))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+/// scan(0) → sort(1, range-partitioned, blocking) → merge(2, blocking)
+/// → sink(3); rows (k, i). Both sort layers buffer the full stream, so
+/// resident state ≈ the whole input.
+fn sort_flow(hot: bool) -> (Workflow, SinkHandle) {
+    const ROWS: usize = 24_000;
+    const KEYS: i64 = 4_000;
+    let bounds = vec![Value::Int(KEYS / 2)];
+    let b2 = bounds.clone();
+    let mut w = Workflow::new();
+    let scan = w.add(OpSpec::source("scan", 2, move |idx, parts| {
+        let rows: Vec<Tuple> = (0..ROWS)
+            .skip(idx)
+            .step_by(parts)
+            .map(|i| {
+                Tuple::new(vec![Value::Int(key_of(i, KEYS, hot)), Value::Int(i as i64)])
+            })
+            .collect();
+        Box::new(VecSource::new(rows))
+    }));
+    let sort = w.add(
+        OpSpec::unary(
+            "sort",
+            2,
+            PartitionScheme::Range { key: 0, bounds },
+            move |idx, _| Box::new(SortWorker::new(0, idx as u64, b2.clone())),
+        )
+        .with_blocking(vec![0]),
+    );
+    let merge = w.add(
+        OpSpec::unary("merge", 1, PartitionScheme::RoundRobin, |_, _| {
+            Box::new(SortMerge::new(0))
+        })
+        .with_blocking(vec![0]),
+    );
+    let handle = SinkHandle::new(0);
+    let h = handle.clone();
+    let sink = w.add(OpSpec::unary("sink", 1, PartitionScheme::RoundRobin, move |_, _| {
+        Box::new(CollectSink::new(h.clone()))
+    }));
+    w.connect(scan, sort, 0);
+    w.connect(sort, merge, 0);
+    w.connect(merge, sink, 0);
+    (w, handle)
+}
+
+// ---------------------------------------------------------------------------
+// The equivalence matrix: 3 operators × {uniform, 90%-hot-key}.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ooc_join_uniform_keys() {
+    equivalence_suite("join/uniform", &|| join_flow(false, 0));
+}
+
+#[test]
+fn ooc_join_hot_keys() {
+    equivalence_suite("join/hot", &|| join_flow(true, 0));
+}
+
+#[test]
+fn ooc_group_by_uniform_keys() {
+    equivalence_suite("group_by/uniform", &|| group_by_flow(40_000, false, 0));
+}
+
+#[test]
+fn ooc_group_by_hot_keys() {
+    equivalence_suite("group_by/hot", &|| group_by_flow(40_000, true, 0));
+}
+
+#[test]
+fn ooc_sort_uniform_keys() {
+    equivalence_suite("sort/uniform", &|| sort_flow(false));
+}
+
+#[test]
+fn ooc_sort_hot_keys() {
+    equivalence_suite("sort/hot", &|| sort_flow(true));
+}
+
+// ---------------------------------------------------------------------------
+// Disk-backed MatStore: sequential append writer, windowed scan
+// readers, logical size invariance, cleanup.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ooc_matstore_disk_backed_roundtrip() {
+    let input: Vec<Tuple> = (0..20_000)
+        .map(|i| Tuple::new(vec![Value::Int(i as i64 % 101), Value::Int(i as i64)]))
+        .collect();
+    let mut want: Vec<String> = input.iter().map(|t| format!("{t:?}")).collect();
+    want.sort_unstable();
+
+    let ctx_with = |budget: u64| {
+        SpillCtx::new(&Config { memory_budget_bytes: budget, ..Config::default() })
+    };
+
+    // Unbounded run measures the resident footprint.
+    let resident = {
+        let ctx = ctx_with(0);
+        let store = MatStore::new();
+        store.attach_spill(&ctx);
+        store.append_rows(input.clone());
+        assert_eq!(store.spilled_bytes(), 0, "unbounded store must stay resident");
+        store.bytes()
+    };
+    assert!(resident > 4096, "mat footprint too small: {resident} B");
+
+    for batch in [32usize, 1024] {
+        for (frac, budget) in
+            [("0.5x", resident / 2), ("0.25x", resident / 4), ("0.1x", resident / 10)]
+        {
+            let ctx = ctx_with(budget);
+            let store = MatStore::new();
+            store.attach_spill(&ctx);
+            for chunk in input.chunks(batch) {
+                store.append_rows(chunk.to_vec());
+            }
+            assert_eq!(store.rows(), input.len());
+            assert_eq!(
+                store.bytes(),
+                resident,
+                "batch {batch} {frac}: logical bytes must be budget-independent"
+            );
+            if frac == "0.1x" {
+                assert!(
+                    store.spilled_bytes() > 0,
+                    "batch {batch} {frac}: store never went to disk"
+                );
+            }
+            // Windowed scan readers, partitioned like MatSource workers:
+            // the 2-way union must equal the appended rows exactly.
+            let mut got: Vec<String> = Vec::new();
+            for idx in 0..2 {
+                let mut src = MatSource::new(store.clone(), 2, idx);
+                while let Some(t) = src.next_tuple() {
+                    got.push(format!("{t:?}"));
+                }
+            }
+            got.sort_unstable();
+            assert_eq!(got, want, "batch {batch} {frac}: read-back diverged");
+
+            let dir = ctx.dir_path();
+            drop(store);
+            drop(ctx);
+            if let Some(dir) = dir {
+                assert!(!dir.exists(), "batch {batch} {frac}: leaked mat chunks");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spilled state × interactivity: recovery and scale fences.
+// ---------------------------------------------------------------------------
+
+/// Checkpoint → kill → recover with spilled state on disk: a
+/// supervised run under a tight budget takes automatic (and one
+/// explicit) checkpoints whose manifests reference live spill files,
+/// then a worker panic forces recovery to replay them byte-exactly.
+#[test]
+fn ooc_checkpoint_kill_recover_with_spilled_state() {
+    const ROWS: usize = 60_000;
+    let (w, handle) = group_by_flow(ROWS, false, 2_000);
+    let mut plan = FaultPlan::default();
+    // gb_partial worker 0 dies ~30 ms in — well past the first
+    // checkpoints, well before EOF.
+    plan.push(Fault::panic_at(WorkerId::new(1, 0), 15_000));
+    let cfg = Config {
+        memory_budget_bytes: 48 * 1024,
+        ft_log: true,
+        heartbeat_timeout_ms: 150,
+        checkpoint_interval_ms: 10,
+        recovery_backoff_ms: 5,
+        fault_plan: plan,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    std::thread::sleep(Duration::from_millis(8));
+    let _ = exec.checkpoint(); // at least one quiesced checkpoint pre-kill
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let summary = exec.join();
+        let dir = exec.spill_dir();
+        drop(exec);
+        let _ = tx.send((summary, dir));
+    });
+    let (summary, dir) = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("supervised run did not terminate");
+    assert_eq!(summary.error, None, "recovery failed: {:?}", summary.error);
+    assert!(summary.supervision.crashes_detected >= 1, "panic was not detected");
+    assert!(summary.supervision.recoveries >= 1, "no recovery cycle ran");
+    assert!(
+        summary.spill.bytes_spilled > 0,
+        "state never spilled — recovery did not cover the manifest path: {:?}",
+        summary.spill
+    );
+    assert_eq!(
+        group_by_result(&handle),
+        group_by_expected(ROWS, false),
+        "recovered run diverged from ground truth"
+    );
+    if let Some(dir) = dir {
+        assert!(!dir.exists(), "recovered run leaked its spill dir");
+    }
+}
+
+/// Scale fences mid-spill on the join: 2→4 then 4→2 while the build
+/// table is partially on disk. `ExtractScaleState` must re-hash the
+/// spilled partitions across the new worker set without losing or
+/// duplicating a row.
+#[test]
+fn ooc_scale_fence_mid_spill_join() {
+    let (w, handle) = join_flow(false, 3_000);
+    let cfg = Config {
+        memory_budget_bytes: 16 * 1024,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    std::thread::sleep(Duration::from_millis(5));
+    assert!(
+        exec.scale_operator(2, 4) > Duration::ZERO,
+        "2→4 join scale fence refused"
+    );
+    std::thread::sleep(Duration::from_millis(10));
+    assert!(
+        exec.scale_operator(2, 2) > Duration::ZERO,
+        "4→2 join scale fence refused"
+    );
+    let summary = exec.join();
+    assert_eq!(summary.error, None);
+    assert!(
+        summary.spill.bytes_spilled > 0,
+        "scale fences never crossed spilled state: {:?}",
+        summary.spill
+    );
+    assert_eq!(sorted_rows(&handle), join_expected(false));
+    let dir = exec.spill_dir();
+    drop(exec);
+    if let Some(dir) = dir {
+        assert!(!dir.exists(), "scaled run leaked its spill dir");
+    }
+}
+
+/// Scale fences mid-spill on the blocking group-by final: 2→4 then 4→2
+/// while both aggregation layers hold spilled partitions.
+#[test]
+fn ooc_scale_fence_mid_spill_group_by() {
+    const ROWS: usize = 60_000;
+    let (w, handle) = group_by_flow(ROWS, false, 2_000);
+    let cfg = Config {
+        memory_budget_bytes: 32 * 1024,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    std::thread::sleep(Duration::from_millis(5));
+    assert!(
+        exec.scale_operator(2, 4) > Duration::ZERO,
+        "2→4 gb_final scale fence refused"
+    );
+    std::thread::sleep(Duration::from_millis(10));
+    assert!(
+        exec.scale_operator(2, 2) > Duration::ZERO,
+        "4→2 gb_final scale fence refused"
+    );
+    let summary = exec.join();
+    assert_eq!(summary.error, None);
+    assert!(summary.spill.bytes_spilled > 0, "{:?}", summary.spill);
+    assert_eq!(group_by_result(&handle), group_by_expected(ROWS, false));
+    let dir = exec.spill_dir();
+    drop(exec);
+    if let Some(dir) = dir {
+        assert!(!dir.exists(), "scaled run leaked its spill dir");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cleanup regressions: every early-exit path reclaims the spill dir.
+// ---------------------------------------------------------------------------
+
+/// Mid-run drop (the `EngineService::cancel` teardown primitive): the
+/// spill directory exists while the job spills and is gone the moment
+/// the `Execution` is dropped.
+#[test]
+fn ooc_spill_dir_reclaimed_on_mid_run_drop() {
+    let (w, _handle) = join_flow(false, 3_000);
+    let cfg = Config {
+        memory_budget_bytes: 16 * 1024,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while exec.spill_stats().bytes_spilled == 0 {
+        assert!(std::time::Instant::now() < deadline, "join build never spilled");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let dir = exec.spill_dir().expect("spilled bytes imply a spill dir");
+    assert!(dir.is_dir());
+    drop(exec);
+    assert!(!dir.exists(), "mid-run drop leaked the spill dir");
+}
+
+/// Cancelling a spilling job through the serving layer deletes its
+/// spill/mat temp directory (regression: audited over every
+/// early-return path in `Execution` teardown and service `cancel`).
+#[test]
+fn ooc_spill_dir_reclaimed_on_service_cancel() {
+    let base = std::env::temp_dir().join(format!("ooc-cancel-{}", std::process::id()));
+    let mut svc_cfg = ServiceConfig::for_tests();
+    svc_cfg.engine.max_workers = 0;
+    let svc = EngineService::start(svc_cfg);
+
+    let (w, handle) = join_flow(false, 3_000);
+    let job_cfg = Config {
+        memory_budget_bytes: 16 * 1024,
+        spill_dir: base.to_string_lossy().into_owned(),
+        ..Config::default()
+    };
+    let id = svc
+        .submit(Submission::new(TenantId(1), w).with_sink(handle).with_config(job_cfg))
+        .expect("admission");
+    std::thread::sleep(Duration::from_millis(20)); // let the build spill
+    svc.cancel(id);
+    let r = svc.wait(id).expect("cancelled job reaches a terminal state");
+    assert!(r.cancelled || r.error.is_none());
+    drop(svc);
+
+    let leaked: Vec<std::path::PathBuf> = std::fs::read_dir(&base)
+        .map(|rd| rd.filter_map(|e| e.ok()).map(|e| e.path()).collect())
+        .unwrap_or_default();
+    assert!(leaked.is_empty(), "cancelled job leaked spill files: {leaked:?}");
+    let _ = std::fs::remove_dir(&base);
+}
+
+/// A worker panic without supervision aborts the execution with a
+/// structured error — and the abort path still reclaims the spill dir.
+#[test]
+fn ooc_spill_dir_reclaimed_on_abort() {
+    const ROWS: usize = 60_000;
+    let (w, _handle) = group_by_flow(ROWS, false, 1_000);
+    let mut plan = FaultPlan::default();
+    plan.push(Fault::panic_at(WorkerId::new(1, 0), 10_000));
+    let cfg = Config {
+        memory_budget_bytes: 16 * 1024,
+        fault_plan: plan,
+        ..Config::default()
+    };
+    let exec = Execution::start(w, cfg);
+    let summary = exec.join();
+    assert!(
+        summary.error.is_some(),
+        "unsupervised panic must abort with a structured error"
+    );
+    assert!(
+        summary.spill.bytes_spilled > 0,
+        "panic landed before any spill: {:?}",
+        summary.spill
+    );
+    let dir = exec.spill_dir();
+    drop(exec);
+    if let Some(dir) = dir {
+        assert!(!dir.exists(), "aborted run leaked its spill dir");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tenant memory shares.
+// ---------------------------------------------------------------------------
+
+/// `TenantQuota::max_memory_share` arithmetic: a share of an unbounded
+/// budget stays unbounded; a share of a bounded one floors but never
+/// silently re-unbounds.
+#[test]
+fn ooc_tenant_memory_share_allowance() {
+    let q = TenantQuota { max_memory_share: 0.25, ..TenantQuota::default() };
+    assert_eq!(q.memory_allowance(0), 0);
+    assert_eq!(q.memory_allowance(100_000), 25_000);
+    let tiny = TenantQuota { max_memory_share: 0.000_001, ..TenantQuota::default() };
+    assert_eq!(tiny.memory_allowance(100), 1);
+    let full = TenantQuota::default();
+    assert_eq!(full.memory_allowance(100_000), 100_000);
+}
+
+/// End-to-end share enforcement: the job's own config is *unbounded*,
+/// so the only way spill files can appear is the service capping the
+/// job at its tenant's share of the service-wide budget. The job must
+/// still produce the exact result and reclaim its temp files.
+#[test]
+fn ooc_tenant_memory_share_caps_job_budget() {
+    let base = std::env::temp_dir().join(format!("ooc-share-{}", std::process::id()));
+    let mut svc_cfg = ServiceConfig::for_tests();
+    svc_cfg.engine.max_workers = 0;
+    svc_cfg.engine.memory_budget_bytes = 64 * 1024;
+    svc_cfg.quotas.insert(
+        1,
+        TenantQuota { max_memory_share: 0.25, ..TenantQuota::default() },
+    );
+    let svc = EngineService::start(svc_cfg);
+
+    let (w, handle) = join_flow(false, 3_000);
+    let job_cfg = Config {
+        spill_dir: base.to_string_lossy().into_owned(),
+        ..Config::default()
+    };
+    let id = svc
+        .submit(
+            Submission::new(TenantId(1), w)
+                .with_sink(handle.clone())
+                .with_config(job_cfg),
+        )
+        .expect("admission");
+
+    // 0.25 × 64 KiB = 16 KiB against a ~160 KB build table: spill
+    // files must appear under the job's temp base while it runs.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let spilling = std::fs::read_dir(&base)
+            .map(|rd| rd.count() > 0)
+            .unwrap_or(false);
+        if spilling {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "tenant share never forced the job to spill"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let r = svc.wait(id).expect("job reaches a terminal state");
+    assert!(!r.cancelled);
+    assert_eq!(r.error, None);
+    assert_eq!(sorted_rows(&handle), join_expected(false));
+    drop(svc);
+
+    let leaked: Vec<std::path::PathBuf> = std::fs::read_dir(&base)
+        .map(|rd| rd.filter_map(|e| e.ok()).map(|e| e.path()).collect())
+        .unwrap_or_default();
+    assert!(leaked.is_empty(), "share-capped job leaked spill files: {leaked:?}");
+    let _ = std::fs::remove_dir(&base);
+}

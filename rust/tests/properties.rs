@@ -24,6 +24,45 @@ fn chaos_faults_enabled() -> bool {
     std::env::var("CHAOS_FAULTS").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Out-of-core axis for the chaos fuzzers (`CHAOS_SPILL=1`, CI
+/// matrix): each round runs under a seed-derived small memory budget,
+/// so the stateful operators (join build, group-by tables, sort runs,
+/// live-mat chunks) spill to disk *while* the command stream hits them
+/// with pause/checkpoint/scale/migrate traffic. The exactness
+/// assertions are unchanged, and every round additionally asserts the
+/// execution's spill temp directory is gone after teardown — spill
+/// files must be reclaimed on every exit path.
+fn chaos_spill_enabled() -> bool {
+    std::env::var("CHAOS_SPILL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Apply the spill axis to one round's config: a seed-derived budget
+/// between 1 KiB and 16 KiB — far below every fuzzer's resident state,
+/// and small enough to drive recursive repartitioning. Returns whether
+/// the axis is on so rounds can gate their spill-plane assertions.
+fn apply_chaos_spill(cfg: &mut texera_amber::config::Config, seed: u64) -> bool {
+    if !chaos_spill_enabled() {
+        return false;
+    }
+    let mut rng = Rng::new(seed ^ 0x5b111);
+    cfg.memory_budget_bytes = 1u64 << (10 + rng.below(5));
+    true
+}
+
+/// Post-teardown leak check shared by the chaos rounds: the per-
+/// execution spill directory (if any spill happened) must be removed
+/// by the time the `Execution` is dropped — on finish, cancel, abort
+/// and panic-recovery paths alike.
+fn assert_spill_reclaimed(seed: u64, dir: Option<std::path::PathBuf>) {
+    if let Some(dir) = dir {
+        assert!(
+            !dir.exists(),
+            "seed {seed}: leaked spill temp directory {}",
+            dir.display()
+        );
+    }
+}
+
 // ---------- routing ----------
 
 /// Any partitioner maps every tuple to a valid destination, and the
@@ -747,6 +786,7 @@ fn chaos_round(seed: u64, batch_size: usize, columnar: bool) {
             ..cfg
         };
     }
+    apply_chaos_spill(&mut cfg, seed);
     let exec = Execution::start(w, cfg);
     let mut rng = Rng::new(seed);
     let mut paused = false;
@@ -835,6 +875,10 @@ fn chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     for (k, s) in &got {
         assert_eq!(expect[k], *s, "seed {seed}: wrong sum for key {k}");
     }
+
+    let spill_dir = exec.spill_dir();
+    drop(exec);
+    assert_spill_reclaimed(seed, spill_dir);
 }
 
 // ---------- chaos: universal elasticity ----------
@@ -991,6 +1035,7 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
         plan.push(Fault::delay_nth(Wid::new(scan, 1), enrich, 1 + frng.below(40), 30));
         cfg = Config { fault_plan: plan, ..cfg };
     }
+    let spill_on = apply_chaos_spill(&mut cfg, seed);
     let exec = Execution::start(w, cfg);
     let mut rng = Rng::new(seed);
     let mut paused = false;
@@ -1060,7 +1105,7 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
     if paused {
         exec.resume();
     }
-    exec.join();
+    let summary = exec.join();
 
     // Ground truth, computed directly: every scan row joins exactly
     // its key's dim row → (k, 2k, k, v).
@@ -1120,6 +1165,20 @@ fn universal_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
         got2, expect2,
         "seed {seed} batch {batch_size}: enrich multiset differs"
     );
+
+    if spill_on {
+        // The sort's blocking state alone is megabytes against a
+        // ≤ 16 KiB budget: this round must actually have gone to disk
+        // (the exactness checks above then pin spilled ≡ resident).
+        assert!(
+            summary.spill.bytes_spilled > 0,
+            "seed {seed}: spill axis on but nothing spilled: {:?}",
+            summary.spill
+        );
+    }
+    let spill_dir = exec.spill_dir();
+    drop(exec);
+    assert_spill_reclaimed(seed, spill_dir);
 }
 
 // ---------- chaos: live plan migration ----------
@@ -1233,6 +1292,9 @@ fn migration_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
         plan.push(Fault::delay_nth(Wid::new(enrich, 0), filter, 1 + frng.below(40), 30));
         cfg = Config { fault_plan: plan, ..cfg };
     }
+    // Under the spill axis the InsertMat/RemoveMat arms below run the
+    // live materialization store disk-backed (chunked past the budget).
+    apply_chaos_spill(&mut cfg, seed);
     let exec = Execution::start(w, cfg);
     let mut rng = Rng::new(seed);
     let mut paused = false;
@@ -1342,6 +1404,10 @@ fn migration_chaos_round(seed: u64, batch_size: usize, columnar: bool) {
         "seed {seed} batch {batch_size}: wrong row count"
     );
     assert_eq!(got, expect, "seed {seed} batch {batch_size}: multiset differs");
+
+    let spill_dir = exec.spill_dir();
+    drop(exec);
+    assert_spill_reclaimed(seed, spill_dir);
 }
 
 // ---------- splittable scan ranges ----------
@@ -1652,15 +1718,32 @@ fn service_fuzz_trial(seed: u64) {
     let capacity = 5 + rng.below(8) as usize; // 5..=12 vs min footprint 4
     let mut cfg = ServiceConfig::for_tests();
     cfg.engine.max_workers = capacity;
+    // Spill axis: a small service-wide memory budget reaches every job
+    // through its tenant's memory share, and a trial-unique spill base
+    // lets the post-run sweep assert *this* trial reclaimed all its
+    // temp files — including jobs torn down by `cancel`.
+    let spill_base = if chaos_spill_enabled() {
+        apply_chaos_spill(&mut cfg.engine, seed);
+        Some(
+            std::env::temp_dir()
+                .join(format!("amber-chaos-spill-{}-{seed}", std::process::id())),
+        )
+    } else {
+        None
+    };
     let svc = EngineService::start(cfg);
 
     let n_jobs = 2 + rng.below(7) as usize; // 2..=8
     let mut jobs = Vec::new();
     for _ in 0..n_jobs {
         let (w, h) = flow();
+        let mut job_cfg = Config::for_tests();
+        if let Some(base) = &spill_base {
+            job_cfg.spill_dir = base.to_string_lossy().into_owned();
+        }
         let mut sub = Submission::new(TenantId(rng.below(3)), w)
             .with_sink(h.clone())
-            .with_config(Config::for_tests());
+            .with_config(job_cfg);
         if rng.below(3) == 0 {
             sub = sub.interactive();
         }
@@ -1731,4 +1814,18 @@ fn service_fuzz_trial(seed: u64) {
     let s = svc.stats();
     assert_eq!(s.submitted, n_jobs as u64);
     assert_eq!(s.completed + s.failed + s.cancelled, n_jobs as u64);
+
+    if let Some(base) = spill_base {
+        // Every job is terminal, so every execution (cancelled ones
+        // included) has been dropped and its spill directory removed.
+        drop(svc);
+        let leaked: Vec<std::path::PathBuf> = std::fs::read_dir(&base)
+            .map(|rd| rd.filter_map(|e| e.ok()).map(|e| e.path()).collect())
+            .unwrap_or_default();
+        assert!(
+            leaked.is_empty(),
+            "seed {seed}: leaked spill temp files: {leaked:?}"
+        );
+        let _ = std::fs::remove_dir(&base);
+    }
 }
